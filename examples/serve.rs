@@ -1,0 +1,86 @@
+//! Serving demo: dynamic batching under concurrent load.
+//!
+//! Starts the inference server on the sMNIST classifier artifact and fires
+//! concurrent clients at it, reporting throughput, latency percentiles and
+//! batch-fill — then repeats with batching disabled to show the win.
+//!
+//! ```bash
+//! cargo run --release --example serve -- --requests 96 --clients 16
+//! ```
+
+use s5::coordinator::server::{InferenceServer, ServerConfig};
+use s5::data::make_task;
+use s5::rng::Rng;
+use s5::util::{Args, Stats};
+use std::path::Path;
+use std::time::Duration;
+
+fn drive(server: &InferenceServer, n_requests: usize, clients: usize) -> (f64, Stats) {
+    let handle = server.handle();
+    let task = make_task("smnist").unwrap();
+    let t0 = std::time::Instant::now();
+    let lat: Vec<f64> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let h = handle.clone();
+                let task = &task;
+                let per_client = n_requests / clients;
+                s.spawn(move || {
+                    let mut rng = Rng::new(c as u64);
+                    let mut lats = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let ex = task.sample(&mut rng);
+                        let resp = h.infer(ex.x).expect("infer");
+                        lats.push(resp.total_secs);
+                    }
+                    lats
+                })
+            })
+            .collect();
+        joins.into_iter().flat_map(|j| j.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    (lat.len() as f64 / wall, Stats::from(&lat))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.get_usize("requests", 96);
+    let clients = args.get_usize("clients", 16);
+    let dir = Path::new(s5::ARTIFACTS_DIR);
+
+    println!("=== dynamic batching ON (max_wait = 10ms) ===");
+    let batched = InferenceServer::start(
+        dir,
+        "smnist",
+        None,
+        ServerConfig { max_wait: Duration::from_millis(10) },
+    )?;
+    let (tput_b, lat_b) = drive(&batched, n_requests, clients);
+    println!(
+        "  {tput_b:.1} req/s | p50 {:.1}ms p95 {:.1}ms | mean batch fill {:.2}",
+        lat_b.p50 * 1e3,
+        lat_b.p95 * 1e3,
+        batched.stats.mean_batch_fill()
+    );
+    drop(batched);
+
+    println!("=== dynamic batching OFF (max_wait = 0) ===");
+    let unbatched = InferenceServer::start(
+        dir,
+        "smnist",
+        None,
+        ServerConfig { max_wait: Duration::from_millis(0) },
+    )?;
+    let (tput_u, lat_u) = drive(&unbatched, n_requests, clients);
+    println!(
+        "  {tput_u:.1} req/s | p50 {:.1}ms p95 {:.1}ms | mean batch fill {:.2}",
+        lat_u.p50 * 1e3,
+        lat_u.p95 * 1e3,
+        unbatched.stats.mean_batch_fill()
+    );
+
+    println!("\nbatching speedup: {:.2}x throughput", tput_b / tput_u);
+    println!("serve example OK ✓");
+    Ok(())
+}

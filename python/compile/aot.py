@@ -1,0 +1,266 @@
+"""AOT export: lower every model graph to HLO text + initial params (.npz).
+
+This is the single build-time entry point (``make artifacts``). For each
+preset it emits into ``artifacts/``:
+
+  * ``<preset>_fwd.hlo.txt``      — inference graph
+  * ``<preset>_train.hlo.txt``    — fused loss+grad+AdamW train step
+  * ``<preset>_init.npz``         — initial parameter tensors (named)
+  * ``<preset>_fwd.manifest.txt`` / ``<preset>_train.manifest.txt``
+      — argument order, names, dtypes, shapes, and model hyperparameters,
+        parsed by ``rust/src/runtime/artifact.rs``.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax ≥ 0.5
+emits 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Python never runs after this step — the Rust coordinator owns all runtime.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Presets: every experiment in the paper maps to one or more of these.
+# Sequence lengths are scaled from the paper's (L up to 16,384) to CPU-budget
+# equivalents while preserving the ratios that matter (pathx : pathfinder =
+# 4x here vs 16x in the paper; documented in DESIGN.md substitutions).
+# ---------------------------------------------------------------------------
+
+PRESETS: dict[str, dict] = {
+    # name: kind, d_input, classes, depth, H, P, J, L, B, extras
+    "quickstart": dict(kind="layer", h=8, p=8, j=1, length=128),
+    # Pixel-level image classification (Table 10) + E2E training driver.
+    "smnist": dict(kind="classifier", d_input=1, classes=10, depth=4, h=48,
+                   p=32, j=4, length=784, batch=16),
+    # LRA suite (Tables 1/5/6/7).
+    "listops": dict(kind="classifier", d_input=18, classes=10, depth=4, h=32,
+                    p=32, j=4, length=512, batch=8, bidir=True),
+    "text": dict(kind="classifier", d_input=32, classes=2, depth=4, h=32,
+                 p=32, j=4, length=1024, batch=8, bidir=True),
+    "retrieval": dict(kind="retrieval", d_input=32, classes=2, depth=3, h=32,
+                      p=32, j=4, length=512, batch=4, bidir=True),
+    "image": dict(kind="classifier", d_input=1, classes=10, depth=4, h=48,
+                  p=32, j=4, length=1024, batch=8, bidir=True),
+    "pathfinder": dict(kind="classifier", d_input=1, classes=2, depth=4, h=32,
+                       p=32, j=4, length=1024, batch=8, bidir=True),
+    "pathx": dict(kind="classifier", d_input=1, classes=2, depth=4, h=24,
+                  p=32, j=4, length=4096, batch=4, bidir=True,
+                  dt_min=1e-4, dt_max=1e-1),  # longer timescales, §B.1.3
+    # Speech commands (Tables 2/8): 35-way, zero-shot resample via timescale.
+    "speech": dict(kind="classifier", d_input=1, classes=35, depth=4, h=32,
+                   p=32, j=4, length=2048, batch=8, bidir=True),
+    # 8 kHz variant: same architecture at half length. fwd graph only — the
+    # zero-shot experiment feeds it the *16 kHz-trained* parameters with
+    # timescale=2 (parameters are L-independent).
+    "speech8k": dict(kind="classifier", d_input=1, classes=35, depth=4, h=32,
+                     p=32, j=4, length=1024, batch=8, bidir=True,
+                     fwd_only=True),
+    # Pendulum regression (Tables 3/9, Figure 3): irregular Δt.
+    "pendulum": dict(kind="pendulum", depth=4, h=30, p=16, j=2, length=50,
+                     batch=16),
+    # Table 5 ablations (on the smnist task for budget reasons).
+    "abl5_pn_scalar": dict(kind="classifier", d_input=1, classes=10, depth=4,
+                           h=48, p=32, j=1, length=784, batch=16,
+                           scalar_dt=True),
+    "abl5_pn_vector": dict(kind="classifier", d_input=1, classes=10, depth=4,
+                           h=48, p=32, j=1, length=784, batch=16),
+    # Table 6 ablations: continuous/discrete × gaussian/antisymmetric/hippo.
+    **{
+        f"abl6_{par}_{ini}": dict(
+            kind="classifier", d_input=18, classes=10, depth=2, h=16, p=16,
+            j=1, length=256, batch=16, parameterization=par, init=ini,
+        )
+        for par in ("continuous", "discrete")
+        for ini in ("gaussian", "antisymmetric", "hippo")
+    },
+}
+
+LAYER_KW_KEYS = ("init", "parameterization", "scalar_dt", "dt_min", "dt_max")
+APPLY_KW_KEYS = ("parameterization", "bidir")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_name(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return ".".join(parts)
+
+
+def _flat_named(tree, prefix: str):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(f"{prefix}.{_path_name(p)}" if _path_name(p) else prefix, l)
+            for p, l in leaves]
+
+
+def _dtype_tag(x) -> str:
+    return {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32"}[np.dtype(x.dtype)]
+
+
+def write_manifest(path, name, kind, named_in, named_out, meta: dict):
+    with open(path, "w") as f:
+        f.write(f"artifact {name}\n")
+        f.write(f"kind {kind}\n")
+        for k, v in meta.items():
+            f.write(f"meta {k} {v}\n")
+        for i, (nm, leaf) in enumerate(named_in):
+            dims = "x".join(str(d) for d in leaf.shape) or "-"
+            f.write(f"input {i} {nm} {_dtype_tag(leaf)} {dims}\n")
+        for i, (nm, leaf) in enumerate(named_out):
+            dims = "x".join(str(d) for d in leaf.shape) or "-"
+            f.write(f"output {i} {nm} {_dtype_tag(leaf)} {dims}\n")
+
+
+def save_params_npz(path, params):
+    named = _flat_named(params, "params")
+    np.savez(path, **{nm: np.asarray(leaf) for nm, leaf in named})
+
+
+def export_graph(outdir, name, kind, fn, args_tree, arg_prefixes, meta):
+    """Lower fn(*args) and write hlo text + manifest. args given as pytrees."""
+    lowered = jax.jit(fn).lower(*args_tree)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    named_in = []
+    for prefix, tree in zip(arg_prefixes, args_tree):
+        named_in.extend(_flat_named(tree, prefix))
+    out_shape = jax.eval_shape(fn, *args_tree)
+    named_out = _flat_named(out_shape, "out")
+    write_manifest(os.path.join(outdir, f"{name}.manifest.txt"),
+                   name, kind, named_in, named_out, meta)
+    print(f"  wrote {name}: {len(text)} chars, {len(named_in)} inputs, "
+          f"{len(named_out)} outputs")
+
+
+def build_preset(outdir: str, name: str, cfg: dict, fwd_only: bool = False):
+    print(f"[aot] preset {name}: {cfg}")
+    fwd_only = fwd_only or cfg.get("fwd_only", False)
+    key = jax.random.PRNGKey(abs(hash(name)) % (2**31))
+    kind = cfg["kind"]
+    layer_kw = {k: cfg[k] for k in LAYER_KW_KEYS if k in cfg}
+    apply_kw = {k: cfg[k] for k in APPLY_KW_KEYS if k in cfg}
+    meta = {k: v for k, v in cfg.items()}
+
+    if kind == "layer":
+        lp = model.init_s5_layer(key, cfg["h"], cfg["p"], cfg["j"], **layer_kw)
+        u = jnp.zeros((cfg["length"], cfg["h"]), jnp.float32)
+        fn = lambda p, x: (model.s5_layer_apply(p, x),)
+        export_graph(outdir, f"{name}_fwd", kind, fn, (lp, u),
+                     ("params", "u"), meta)
+        save_params_npz(os.path.join(outdir, f"{name}_init.npz"), lp)
+        return
+
+    if kind in ("classifier", "retrieval"):
+        params = model.init_classifier(
+            key, cfg["d_input"], cfg["classes"], cfg["depth"], cfg["h"],
+            cfg["p"], cfg["j"], bidir=cfg.get("bidir", False), **layer_kw)
+        if kind == "retrieval":
+            # two-tower head consumes [x1, x2, x1*x2, x1-x2] (§G.3.3, eq. 32)
+            params["decoder"] = model.init_linear(
+                jax.random.fold_in(key, 99), 4 * cfg["h"], cfg["classes"])
+        b, length, d_in = cfg["batch"], cfg["length"], cfg["d_input"]
+        ts = jnp.float32(1.0)
+        y = jnp.zeros((b,), jnp.int32)
+        lr, wd, step = jnp.float32(1e-3), jnp.float32(0.01), jnp.float32(1.0)
+        m = model.zeros_like_tree(params)
+        v = model.zeros_like_tree(params)
+        if kind == "classifier":
+            x = jnp.zeros((b, length, d_in), jnp.float32)
+            fwd = lambda p, t, xx: (model.batched_classifier_apply(p, xx, t, **apply_kw),)
+            export_graph(outdir, f"{name}_fwd", kind, fwd, (params, ts, x),
+                         ("params", "timescale", "x"), meta)
+            if not fwd_only:
+                tstep = model.make_classifier_train_step(**apply_kw)
+                export_graph(outdir, f"{name}_train", kind, tstep,
+                             (params, m, v, lr, wd, step, x, y),
+                             ("params", "m", "v", "lr", "wd", "step", "x", "y"),
+                             meta)
+        else:
+            x1 = jnp.zeros((b, length, d_in), jnp.float32)
+            x2 = jnp.zeros((b, length, d_in), jnp.float32)
+            fwd = lambda p, t, a, c: (model.batched_retrieval_apply(p, a, c, t, **apply_kw),)
+            export_graph(outdir, f"{name}_fwd", kind, fwd, (params, ts, x1, x2),
+                         ("params", "timescale", "x1", "x2"), meta)
+            if not fwd_only:
+                tstep = model.make_retrieval_train_step(**apply_kw)
+                export_graph(outdir, f"{name}_train", kind, tstep,
+                             (params, m, v, lr, wd, step, x1, x2, y),
+                             ("params", "m", "v", "lr", "wd", "step",
+                              "x1", "x2", "y"), meta)
+        save_params_npz(os.path.join(outdir, f"{name}_init.npz"), params)
+        return
+
+    if kind == "pendulum":
+        params = model.init_pendulum_model(
+            key, cfg["depth"], cfg["h"], cfg["p"], cfg["j"], **layer_kw)
+        b, length = cfg["batch"], cfg["length"]
+        imgs = jnp.zeros((b, length, 24, 24), jnp.float32)
+        dts = jnp.ones((b, length), jnp.float32)
+        tgt = jnp.zeros((b, length, 2), jnp.float32)
+        lr, wd, step = jnp.float32(1e-3), jnp.float32(0.0), jnp.float32(1.0)
+        m = model.zeros_like_tree(params)
+        v = model.zeros_like_tree(params)
+        fwd = lambda p, i, d: (model.batched_pendulum_apply(p, i, d),)
+        export_graph(outdir, f"{name}_fwd", kind, fwd, (params, imgs, dts),
+                     ("params", "imgs", "dts"), meta)
+        if not fwd_only:
+            tstep = model.make_pendulum_train_step()
+            export_graph(outdir, f"{name}_train", kind, tstep,
+                         (params, m, v, lr, wd, step, imgs, dts, tgt),
+                         ("params", "m", "v", "lr", "wd", "step",
+                          "imgs", "dts", "targets"), meta)
+        save_params_npz(os.path.join(outdir, f"{name}_init.npz"), params)
+        return
+
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="all",
+                    help="comma-separated preset names, or 'all' / 'core'")
+    ap.add_argument("--fwd-only", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.preset == "all":
+        names = list(PRESETS)
+    elif args.preset == "core":
+        names = ["quickstart", "smnist", "pendulum", "speech"]
+    else:
+        names = args.preset.split(",")
+    for nm in names:
+        if nm not in PRESETS:
+            sys.exit(f"unknown preset {nm!r}; have {sorted(PRESETS)}")
+        build_preset(args.out, nm, PRESETS[nm], fwd_only=args.fwd_only)
+    print(f"[aot] done: {len(names)} presets → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""HiPPO initialization for S5 (paper §3.2, §4.2, Appendix B.1).
+
+Constructs the HiPPO-LegS matrix, its normal component HiPPO-N
+(``A_LegS^Normal``), the low-rank correction, and the block-diagonal
+eigen-initialization used by the S5 layer (J HiPPO-N blocks on the
+diagonal, Appendix B.1.1 / D.4).
+
+All eigendecompositions exploit the structure HiPPO-N = -1/2·I + S with S
+real skew-symmetric: i·S is Hermitian, so we can use the numerically stable
+``eigh`` instead of a general non-symmetric eigensolver. This is exactly the
+"stably diagonalizable" property the paper relies on (§2.3): the full
+HiPPO-LegS matrix does *not* admit such a decomposition.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "hippo_legs",
+    "hippo_normal",
+    "hippo_low_rank",
+    "legs_input_column",
+    "eig_hippo_normal",
+    "block_diag_hippo_init",
+]
+
+
+def hippo_legs(n: int) -> np.ndarray:
+    """The (negated) HiPPO-LegS state matrix, Appendix B.1.1 eq. (7).
+
+    A[n,k] = -(2n+1)^1/2 (2k+1)^1/2 if n > k;  -(n+1) if n == k;  0 if n < k.
+    """
+    q = np.sqrt(2 * np.arange(n) + 1.0)
+    a = -np.tril(np.outer(q, q), -1)
+    a -= np.diag(np.arange(n) + 1.0)
+    return a
+
+
+def legs_input_column(n: int) -> np.ndarray:
+    """b_LegS with (b)_n = (2n+1)^{1/2}, eq. (8)."""
+    return np.sqrt(2 * np.arange(n) + 1.0)
+
+
+def hippo_normal(n: int) -> np.ndarray:
+    """HiPPO-N: the normal component of HiPPO-LegS, eq. (11).
+
+    A^Normal = -1/2·I + S with S skew-symmetric,
+    S[n,k] = -(n+1/2)^{1/2}(k+1/2)^{1/2} for n>k and +... for n<k.
+    """
+    q = np.sqrt(np.arange(n) + 0.5)
+    s = np.outer(q, q)
+    skew = np.triu(s, 1) - np.tril(s, -1)
+    return -0.5 * np.eye(n) + skew
+
+
+def hippo_low_rank(n: int) -> np.ndarray:
+    """P_LegS with (P)_n = (n+1/2)^{1/2}, eq. (12): A_LegS = A^Normal - P P^T."""
+    return np.sqrt(np.arange(n) + 0.5)
+
+
+def eig_hippo_normal(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Stable eigendecomposition of HiPPO-N.
+
+    Returns (lam, V) with ``hippo_normal(n) = V @ diag(lam) @ V^H`` and V
+    unitary. Uses eigh on the Hermitian matrix i·S (S = skew part), so the
+    decomposition is stable for any n — unlike np.linalg.eig on HiPPO-LegS.
+    Eigenvalues are sorted by descending imaginary part so conjugate partners
+    occupy mirrored positions (index p and n-1-p).
+    """
+    a = hippo_normal(n)
+    skew = a + 0.5 * np.eye(n)
+    # i·S is Hermitian; its (real) eigenvalues w give S = V diag(-i w) V^H.
+    w, v = np.linalg.eigh(1j * skew)
+    lam = -0.5 - 1j * w
+    order = np.argsort(-lam.imag)
+    return lam[order], v[:, order]
+
+
+def block_diag_hippo_init(
+    p: int, j: int, conj_sym: bool = True
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Block-diagonal HiPPO-N initialization (Appendix B.1.1, D.4).
+
+    Builds J HiPPO-N blocks of size R = P/J on the diagonal and
+    eigendecomposes each block. With ``conj_sym`` (paper §3.2 "Conjugate
+    Symmetry") only the R/2 eigenvalues with positive imaginary part are kept
+    per block, halving state/parameter count; outputs then use y = 2·Re(C̃x̃).
+
+    Returns ``(lam, V, Vinv)`` where
+      * lam: (P2,) complex eigenvalues, P2 = P/2 if conj_sym else P,
+      * V:   (P, P2) block-diagonal eigenvector matrix (B̃ = Vinv @ B),
+      * Vinv:(P2, P) = V^H restricted to the kept eigenvectors (C̃ = C @ V).
+    """
+    if p % j != 0:
+        raise ValueError(f"latent size P={p} must be divisible by J={j}")
+    r = p // j
+    if conj_sym and r % 2 != 0:
+        raise ValueError(f"block size R={r} must be even under conjugate symmetry")
+    lam_r, v_r = eig_hippo_normal(r)
+    keep = r // 2 if conj_sym else r
+    lam_r, v_r = lam_r[:keep], v_r[:, :keep]  # descending imag ⇒ first half Im>0
+    lam = np.concatenate([lam_r] * j)
+    p2 = keep * j
+    v = np.zeros((p, p2), dtype=np.complex128)
+    for b in range(j):
+        v[b * r : (b + 1) * r, b * keep : (b + 1) * keep] = v_r
+    vinv = v.conj().T
+    return lam, v, vinv

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the S5 scan kernel.
+
+These are the correctness references for the Pallas kernel in
+:mod:`compile.kernels.scan`. Two independent implementations are provided:
+
+* :func:`scan_ref_sequential` — the literal recurrence via ``lax.scan``
+  (ground truth by construction, O(L) sequential steps);
+* :func:`scan_ref_associative` — ``jax.lax.associative_scan`` over the same
+  binary operator the paper defines in Appendix H (work-efficient Blelloch
+  form, what the official S5 release uses).
+
+The pytest/hypothesis suite asserts three-way agreement: pallas ≡ both refs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "scan_ref_sequential",
+    "scan_ref_associative",
+    "binary_operator",
+    "apply_ssm_ref",
+]
+
+
+def binary_operator(element_i, element_j):
+    """The paper's binary associative operator (Appendix H, eq. 34)."""
+    a_i, bu_i = element_i
+    a_j, bu_j = element_j
+    return a_j * a_i, a_j * bu_i + bu_j
+
+
+def scan_ref_sequential(a: jax.Array, b: jax.Array) -> jax.Array:
+    """x_k = a_k ∘ x_{k-1} + b_k via a literal sequential loop."""
+
+    def step(x, ab):
+        a_k, b_k = ab
+        x = a_k * x + b_k
+        return x, x
+
+    x0 = jnp.zeros_like(b[0])
+    _, xs = jax.lax.scan(step, x0, (a, b))
+    return xs
+
+
+def scan_ref_associative(a: jax.Array, b: jax.Array) -> jax.Array:
+    """x_{1:L} via jax.lax.associative_scan (paper Appendix A, Listing 1)."""
+    _, xs = jax.lax.associative_scan(binary_operator, (a, b))
+    return xs
+
+
+def apply_ssm_ref(lambda_bar, b_bar, c_tilde, d, u, conj_sym: bool = True):
+    """Reference S5 SSM application (Listing 1's ``apply_ssm``).
+
+    lambda_bar: (P,) complex discretized diagonal state matrix.
+    b_bar: (P, H) complex discretized input matrix.
+    c_tilde: (H, P) complex output matrix.
+    d: (H,) real feedthrough.
+    u: (L, H) real input sequence.
+    """
+    length = u.shape[0]
+    lambda_elements = jnp.repeat(lambda_bar[None, ...], length, axis=0)
+    bu = u.astype(b_bar.dtype) @ b_bar.T
+    xs = scan_ref_associative(lambda_elements, bu)
+    scale = 2.0 if conj_sym else 1.0
+    ys = scale * (xs @ c_tilde.T).real + d * u
+    return ys

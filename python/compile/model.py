@@ -1,0 +1,426 @@
+"""L2: JAX definition of the S5 layer and the paper's deep sequence models.
+
+This module is *build-time only*: :mod:`compile.aot` lowers the jitted
+functions defined here to HLO text once, and the Rust coordinator executes
+the compiled artifacts. Nothing here runs on the request path.
+
+Contents (paper cross-references):
+  * ``init_s5_layer`` / ``s5_layer_apply`` — the S5 layer of §3: conjugate-
+    symmetric diagonal parameterization (§3.2), ZOH discretization (eq. 6),
+    vector timescales Δ∈ℝ^P (§4.3/D.5), block-diagonal HiPPO-N init (B.1.1),
+    parallel scan via the L1 Pallas kernel, GELU + weighted-sigmoid gate
+    activation (§G.1), pre-norm residual architecture (§G.2).
+  * Ablation switches for Table 6 (Gaussian / antisymmetric / HiPPO-N init ×
+    discrete / continuous parameterization) and Table 5 (scalar vs vector Δ).
+  * ``classifier_apply`` — encoder → stacked S5 → mean-pool → softmax head
+    (§G.1), with bidirectional option (§G.2.2) and a `timescale` input for
+    zero-shot sampling-rate transfer (§6.2).
+  * ``retrieval_apply`` — the two-tower variant of §G.3.3, eq. (32).
+  * ``pendulum_apply`` — CNN image encoder (§G.3.8) → S5 stack consuming
+    per-step Δt for irregularly-sampled sequences (§6.3).
+  * ``make_*_train_step`` — cross-entropy / MSE losses, gradients through the
+    Pallas custom_vjp, AdamW (§G.2.1) with a separate no-weight-decay,
+    reduced-LR parameter group for the SSM tensors. The learning rate is a
+    runtime input so the Rust trainer owns the cosine schedule.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hippo
+from .kernels.scan import scan_ssm_planar
+
+Params = Dict[str, Any]
+
+# SSM parameter group: no weight decay, scaled learning rate (paper §G.2.1).
+SSM_KEYS = ("lambda_re", "lambda_im", "b_re", "b_im", "log_dt")
+NO_DECAY_KEYS = SSM_KEYS + ("d", "norm_scale", "norm_bias", "bias", "c_re", "c_im")
+
+
+# --------------------------------------------------------------------------
+# Small building blocks
+# --------------------------------------------------------------------------
+
+def _lecun_normal(key, shape):
+    fan_in = shape[-1]
+    return jax.random.normal(key, shape, dtype=jnp.float32) / math.sqrt(fan_in)
+
+
+def init_linear(key, d_in: int, d_out: int) -> Params:
+    kw, _ = jax.random.split(key)
+    return {
+        "w": _lecun_normal(kw, (d_out, d_in)),
+        "bias": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["w"].T + p["bias"]
+
+
+def layer_norm(scale, bias, x, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+# --------------------------------------------------------------------------
+# S5 layer
+# --------------------------------------------------------------------------
+
+def init_s5_layer(
+    key,
+    h: int,
+    p: int,
+    j: int = 1,
+    conj_sym: bool = True,
+    dt_min: float = 1e-3,
+    dt_max: float = 1e-1,
+    init: str = "hippo",            # hippo | gaussian | antisymmetric (Table 6)
+    parameterization: str = "continuous",  # continuous | discrete (Table 6)
+    scalar_dt: bool = False,        # Table 5 ablation: Δ ∈ ℝ instead of ℝ^P
+    bidir: bool = False,
+) -> Params:
+    """Initialize one S5 layer (state size P, features H)."""
+    keys = jax.random.split(key, 8)
+    p2 = p // 2 if conj_sym else p
+
+    if init == "hippo":
+        lam, v, vinv = hippo.block_diag_hippo_init(p, j, conj_sym)
+    elif init == "gaussian":
+        rng = np.random.default_rng(int(jax.random.randint(keys[6], (), 0, 2**31 - 1)))
+        a = rng.normal(size=(p, p)) / math.sqrt(p)
+        lam, v = np.linalg.eig(a)
+        order = np.argsort(-lam.imag)
+        lam, v = lam[order][:p2], v[:, order][:, :p2]
+        vinv = np.linalg.pinv(v)
+    elif init == "antisymmetric":
+        rng = np.random.default_rng(int(jax.random.randint(keys[6], (), 0, 2**31 - 1)))
+        m = rng.normal(size=(p, p)) / math.sqrt(p)
+        s = (m - m.T) / 2.0
+        w, vv = np.linalg.eigh(1j * s)
+        lam = -0.5 - 1j * w
+        order = np.argsort(-lam.imag)
+        lam, v = lam[order][:p2], vv[:, order][:, :p2]
+        vinv = v.conj().T
+    else:
+        raise ValueError(f"unknown init {init!r}")
+
+    # B sampled real then rotated into the eigenbasis: B̃ = V^{-1} B (§B.1.2).
+    b = _lecun_normal(keys[0], (p, h))
+    b_tilde = jnp.asarray(vinv, jnp.complex64) @ b.astype(jnp.complex64)
+    # C sampled complex-normal then rotated: C̃ = C V. Bidirectional models
+    # carry a second output matrix applied to the reversed-time scan (§G.2.2).
+    n_c = 2 if bidir else 1
+    c = (
+        jax.random.normal(keys[1], (n_c, h, p), dtype=jnp.float32)
+        + 1j * jax.random.normal(keys[2], (n_c, h, p), dtype=jnp.float32)
+    ) * math.sqrt(0.5 / p)
+    c_tilde = c.astype(jnp.complex64) @ jnp.asarray(v, jnp.complex64)
+
+    n_dt = 1 if scalar_dt else p2
+    log_dt = jax.random.uniform(
+        keys[3], (n_dt,), jnp.float32,
+        minval=math.log(dt_min), maxval=math.log(dt_max),
+    )
+
+    lp = {
+        "b_re": jnp.real(b_tilde).astype(jnp.float32),
+        "b_im": jnp.imag(b_tilde).astype(jnp.float32),
+        "c_re": jnp.real(c_tilde).astype(jnp.float32),
+        "c_im": jnp.imag(c_tilde).astype(jnp.float32),
+        "d": jax.random.normal(keys[4], (h,), dtype=jnp.float32),
+        "gate_w": _lecun_normal(keys[5], (h, h)),
+        "norm_scale": jnp.ones((h,), jnp.float32),
+        "norm_bias": jnp.zeros((h,), jnp.float32),
+    }
+    if parameterization == "continuous":
+        lp["lambda_re"] = jnp.real(jnp.asarray(lam, jnp.complex64)).astype(jnp.float32)
+        lp["lambda_im"] = jnp.imag(jnp.asarray(lam, jnp.complex64)).astype(jnp.float32)
+        lp["log_dt"] = log_dt
+    else:
+        # Table 6 "Discrete": learn Λ̄ directly; no Δ, no re-discretization.
+        lam_bar = np.exp(np.asarray(lam) * np.exp(np.asarray(log_dt, np.float64).mean()))
+        lp["lambda_re"] = jnp.asarray(lam_bar.real, jnp.float32)
+        lp["lambda_im"] = jnp.asarray(lam_bar.imag, jnp.float32)
+    return lp
+
+
+def _ssm_scan(lam_bar_c: jax.Array, bu_c: jax.Array) -> jax.Array:
+    """Run the Pallas scan on complex (L,P) multipliers/drives."""
+    xr, xi = scan_ssm_planar(
+        jnp.real(lam_bar_c).astype(jnp.float32),
+        jnp.imag(lam_bar_c).astype(jnp.float32),
+        jnp.real(bu_c).astype(jnp.float32),
+        jnp.imag(bu_c).astype(jnp.float32),
+    )
+    return xr + 1j * xi
+
+
+def s5_ssm_apply(
+    lp: Params,
+    u: jax.Array,                 # (L, H) float32
+    timescale: jax.Array | float = 1.0,
+    dts: jax.Array | None = None,  # (L,) per-step intervals (irregular mode)
+    conj_sym: bool = True,
+    parameterization: str = "continuous",
+    bidir: bool = False,
+) -> jax.Array:
+    """Apply the (discretized) S5 SSM to one sequence; returns (L, H)."""
+    length = u.shape[0]
+    b_tilde = lp["b_re"] + 1j * lp["b_im"]          # (P2, H)
+    c_tilde = lp["c_re"] + 1j * lp["c_im"]          # (nc, H, P2)
+    bu = u.astype(jnp.complex64) @ b_tilde.T        # (L, P2)
+
+    if parameterization == "continuous":
+        lam = lp["lambda_re"] + 1j * lp["lambda_im"]    # (P2,)
+        dt = jnp.exp(lp["log_dt"]) * timescale          # (P2,) or (1,)
+        if dts is None:
+            lam_bar = jnp.exp(lam * dt)                 # ZOH, eq. (6)
+            f = (lam_bar - 1.0) / lam
+            lam_el = jnp.broadcast_to(lam_bar, (length, lam_bar.shape[-1]))
+            drive = f * bu
+        else:
+            dt_k = dts[:, None] * dt[None, :]           # (L, P2)
+            lam_bar = jnp.exp(lam[None, :] * dt_k)
+            f = (lam_bar - 1.0) / lam[None, :]
+            lam_el = lam_bar
+            drive = f * bu
+    else:
+        # Discrete parameterization: Λ̄ is the learned parameter itself.
+        lam_bar = lp["lambda_re"] + 1j * lp["lambda_im"]
+        lam_el = jnp.broadcast_to(lam_bar, (length, lam_bar.shape[-1]))
+        drive = bu
+
+    xs = _ssm_scan(lam_el, drive)                       # (L, P2)
+    scale = 2.0 if conj_sym else 1.0
+    y = scale * jnp.real(xs @ c_tilde[0].T)
+    if bidir:
+        xs_b = _ssm_scan(lam_el, drive[::-1])[::-1]
+        y = y + scale * jnp.real(xs_b @ c_tilde[1].T)
+    return y + lp["d"] * u
+
+
+def s5_layer_apply(
+    lp: Params,
+    u: jax.Array,
+    timescale=1.0,
+    dts=None,
+    conj_sym: bool = True,
+    parameterization: str = "continuous",
+    bidir: bool = False,
+) -> jax.Array:
+    """Full S5 layer: pre-norm → SSM → GELU → weighted-sigmoid gate → residual."""
+    v = layer_norm(lp["norm_scale"], lp["norm_bias"], u)
+    y = s5_ssm_apply(lp, v, timescale, dts, conj_sym, parameterization, bidir)
+    g = jax.nn.gelu(y)
+    out = g * jax.nn.sigmoid(g @ lp["gate_w"].T)
+    return u + out
+
+
+# --------------------------------------------------------------------------
+# Deep models
+# --------------------------------------------------------------------------
+
+def init_classifier(
+    key,
+    d_input: int,
+    n_classes: int,
+    depth: int,
+    h: int,
+    p: int,
+    j: int = 1,
+    bidir: bool = False,
+    **layer_kw,
+) -> Params:
+    keys = jax.random.split(key, depth + 2)
+    return {
+        "encoder": init_linear(keys[0], d_input, h),
+        "layers": [
+            init_s5_layer(keys[i + 1], h, p, j, bidir=bidir, **layer_kw)
+            for i in range(depth)
+        ],
+        "decoder": init_linear(keys[depth + 1], h, n_classes),
+    }
+
+
+def classifier_backbone(params, u, timescale=1.0, dts=None, **kw):
+    x = linear(params["encoder"], u)
+    for lp in params["layers"]:
+        x = s5_layer_apply(lp, x, timescale, dts, **kw)
+    return x
+
+
+def classifier_apply(params, u, timescale=1.0, **kw):
+    """Single-sequence logits: u (L, d_input) → (n_classes,). Mean-pool head."""
+    x = classifier_backbone(params, u, timescale, **kw)
+    return linear(params["decoder"], jnp.mean(x, axis=0))
+
+
+def batched_classifier_apply(params, u, timescale=1.0, **kw):
+    """u: (B, L, d_input) → (B, n_classes)."""
+    return jax.vmap(lambda s: classifier_apply(params, s, timescale, **kw))(u)
+
+
+def retrieval_apply(params, u1, u2, timescale=1.0, **kw):
+    """Two-tower document matching (§G.3.3): shared encoder, eq. (32) features."""
+    x1 = jnp.mean(classifier_backbone(params, u1, timescale, **kw), axis=0)
+    x2 = jnp.mean(classifier_backbone(params, u2, timescale, **kw), axis=0)
+    feats = jnp.concatenate([x1, x2, x1 * x2, x1 - x2], axis=-1)
+    return linear(params["decoder"], feats)
+
+
+def batched_retrieval_apply(params, u1, u2, timescale=1.0, **kw):
+    return jax.vmap(lambda a, b: retrieval_apply(params, a, b, timescale, **kw))(u1, u2)
+
+
+# ---- Pendulum regressor (§6.3, §G.3.8) -----------------------------------
+
+def init_pendulum_model(key, depth: int, h: int, p: int, j: int = 1, **layer_kw) -> Params:
+    keys = jax.random.split(key, depth + 6)
+    return {
+        "conv1": {  # 1→12 channels, 5x5, pad 2
+            "w": _lecun_normal(keys[0], (12, 1, 5, 5)) / 5.0,
+            "bias": jnp.zeros((12,), jnp.float32),
+        },
+        "conv2": {  # 12→12 channels, 3x3, stride 2, pad 1
+            "w": _lecun_normal(keys[1], (12, 12, 3, 3)) / 3.0,
+            "bias": jnp.zeros((12,), jnp.float32),
+        },
+        "enc_dense1": init_linear(keys[2], 12 * 3 * 3, h),
+        "enc_dense2": init_linear(keys[3], h, h),
+        "layers": [
+            init_s5_layer(keys[i + 4], h, p, j, **layer_kw) for i in range(depth)
+        ],
+        "head": init_linear(keys[depth + 4], h, 2),
+    }
+
+
+def _pendulum_encode(params, imgs):
+    """imgs (L, 24, 24) → (L, H) via the CRU paper's CNN encoder."""
+    x = imgs[:, None, :, :]  # (L, 1, 24, 24)
+    x = jax.lax.conv_general_dilated(
+        x, params["conv1"]["w"], (1, 1), "SAME") + params["conv1"]["bias"][None, :, None, None]
+    x = jax.nn.relu(x)
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")  # (L,12,12,12)
+    x = jax.lax.conv_general_dilated(
+        x, params["conv2"]["w"], (2, 2), "SAME") + params["conv2"]["bias"][None, :, None, None]
+    x = jax.nn.relu(x)
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")  # (L,12,3,3)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(linear(params["enc_dense1"], x))
+    return linear(params["enc_dense2"], x)
+
+
+def pendulum_apply(params, imgs, dts, **kw):
+    """imgs (L,24,24), dts (L,) → per-step (L, 2) regression of (sin θ, cos θ)."""
+    x = _pendulum_encode(params, imgs)
+    for lp in params["layers"]:
+        x = s5_layer_apply(lp, x, 1.0, dts, **kw)
+    return linear(params["head"], x)
+
+
+def batched_pendulum_apply(params, imgs, dts, **kw):
+    return jax.vmap(lambda i, d: pendulum_apply(params, i, d, **kw))(imgs, dts)
+
+
+# --------------------------------------------------------------------------
+# Losses and the AdamW train step
+# --------------------------------------------------------------------------
+
+def cross_entropy_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).squeeze(-1)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), acc
+
+
+def _is_ssm_key(path) -> bool:
+    last = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    return last in SSM_KEYS
+
+
+def _is_no_decay(path) -> bool:
+    last = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    return last in NO_DECAY_KEYS
+
+
+def adamw_update(params, grads, m, v, lr, wd, step, ssm_lr_ratio=0.25,
+                 b1=0.9, b2=0.999, eps=1e-8):
+    """AdamW with the paper's two parameter groups (§G.2.1).
+
+    SSM tensors (Λ, B̃, Δ) use lr·ssm_lr_ratio and no weight decay; decay is
+    decoupled and masked off norm/bias/SSM leaves. ``step`` is 1-based.
+    """
+    bc1 = 1.0 - jnp.power(b1, step)
+    bc2 = 1.0 - jnp.power(b2, step)
+
+    def upd(path, p_, g_, m_, v_):
+        m_n = b1 * m_ + (1.0 - b1) * g_
+        v_n = b2 * v_ + (1.0 - b2) * g_ * g_
+        lr_leaf = lr * (ssm_lr_ratio if _is_ssm_key(path) else 1.0)
+        wd_leaf = 0.0 if _is_no_decay(path) else wd
+        p_n = p_ - lr_leaf * ((m_n / bc1) / (jnp.sqrt(v_n / bc2) + eps)) \
+                 - lr * wd_leaf * p_
+        return p_n, m_n, v_n
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p_, g_, m_, v_: upd(path, p_, g_, m_, v_), params, grads, m, v
+    )
+    new_p = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, new_m, new_v
+
+
+def make_classifier_train_step(ssm_lr_ratio=0.25, **apply_kw):
+    """Returns train_step(params, m, v, lr, wd, step, x, y) → (p', m', v', loss, acc)."""
+
+    def loss_fn(params, x, y):
+        logits = batched_classifier_apply(params, x, 1.0, **apply_kw)
+        return cross_entropy_loss(logits, y)
+
+    def train_step(params, m, v, lr, wd, step, x, y):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, x, y)
+        p2, m2, v2 = adamw_update(params, grads, m, v, lr, wd, step, ssm_lr_ratio)
+        return p2, m2, v2, loss, acc
+
+    return train_step
+
+
+def make_retrieval_train_step(ssm_lr_ratio=0.25, **apply_kw):
+    def loss_fn(params, x1, x2, y):
+        logits = batched_retrieval_apply(params, x1, x2, 1.0, **apply_kw)
+        return cross_entropy_loss(logits, y)
+
+    def train_step(params, m, v, lr, wd, step, x1, x2, y):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, x1, x2, y)
+        p2, m2, v2 = adamw_update(params, grads, m, v, lr, wd, step, ssm_lr_ratio)
+        return p2, m2, v2, loss, acc
+
+    return train_step
+
+
+def make_pendulum_train_step(ssm_lr_ratio=0.25, **apply_kw):
+    def loss_fn(params, imgs, dts, targets):
+        pred = batched_pendulum_apply(params, imgs, dts, **apply_kw)
+        mse = jnp.mean((pred - targets) ** 2)
+        return mse, mse
+
+    def train_step(params, m, v, lr, wd, step, imgs, dts, targets):
+        (loss, mse), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, imgs, dts, targets)
+        p2, m2, v2 = adamw_update(params, grads, m, v, lr, wd, step, ssm_lr_ratio)
+        return p2, m2, v2, loss, mse
+
+    return train_step
+
+
+def zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)

@@ -1,0 +1,96 @@
+"""AOT export integrity: HLO text, manifests, and npz stay mutually consistent."""
+import os
+import zipfile
+
+import numpy as np
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build_preset(out, "quickstart", aot.PRESETS["quickstart"])
+    cfg = dict(kind="classifier", d_input=2, classes=3, depth=1, h=8, p=8,
+               j=1, length=32, batch=2)
+    aot.build_preset(out, "tiny", cfg)
+    return out
+
+
+def _parse_manifest(path):
+    inputs, outputs, meta = [], [], {}
+    with open(path) as f:
+        for line in f:
+            parts = line.split()
+            if parts[0] == "input":
+                inputs.append((int(parts[1]), parts[2], parts[3], parts[4]))
+            elif parts[0] == "output":
+                outputs.append((int(parts[1]), parts[2], parts[3], parts[4]))
+            elif parts[0] == "meta":
+                meta[parts[1]] = parts[2]
+    return inputs, outputs, meta
+
+
+def test_hlo_text_is_parseable_entry(exported):
+    for name in ("quickstart_fwd", "tiny_fwd", "tiny_train"):
+        text = open(os.path.join(exported, f"{name}.hlo.txt")).read()
+        assert "ENTRY" in text and "HloModule" in text
+        # interchange must be text, not proto bytes
+        assert text.isprintable() or "\n" in text
+
+
+def test_manifest_input_count_matches_hlo_params(exported):
+    for name in ("quickstart_fwd", "tiny_fwd", "tiny_train"):
+        inputs, outputs, _ = _parse_manifest(
+            os.path.join(exported, f"{name}.manifest.txt"))
+        text = open(os.path.join(exported, f"{name}.hlo.txt")).read()
+        # count parameters of the ENTRY computation only (nested fusions and
+        # called computations redeclare their own parameters)
+        entry = text[text.index("\nENTRY"):]
+        entry = entry[: entry.index("\n}")]
+        n_params = entry.count("parameter(")
+        assert len(inputs) == n_params, name
+        assert len(outputs) >= 1
+        assert [i[0] for i in inputs] == list(range(len(inputs)))
+
+
+def test_npz_names_cover_manifest_params(exported):
+    inputs, _, _ = _parse_manifest(
+        os.path.join(exported, "tiny_train.manifest.txt"))
+    npz = np.load(os.path.join(exported, "tiny_init.npz"))
+    param_inputs = [nm for _, nm, _, _ in inputs if nm.startswith("params.")]
+    assert set(param_inputs) == set(npz.files)
+    # shapes in the manifest match the stored tensors
+    shapes = {nm: dims for _, nm, _, dims in inputs}
+    for nm in npz.files:
+        want = "x".join(str(d) for d in npz[nm].shape) or "-"
+        assert shapes[nm] == want, nm
+
+
+def test_train_manifest_has_adam_state_and_batch(exported):
+    inputs, outputs, meta = _parse_manifest(
+        os.path.join(exported, "tiny_train.manifest.txt"))
+    names = [nm for _, nm, _, _ in inputs]
+    assert any(nm.startswith("m.") for nm in names)
+    assert any(nm.startswith("v.") for nm in names)
+    for scalar in ("lr", "wd", "step"):
+        assert scalar in names
+    assert "x" in names and "y" in names
+    out_names = [nm for _, nm, _, _ in outputs]
+    assert "out.3" in out_names and "out.4" in out_names  # loss, acc
+    assert meta["classes"] == "3"
+
+
+def test_npz_is_zipfile_with_npy_entries(exported):
+    path = os.path.join(exported, "tiny_init.npz")
+    with zipfile.ZipFile(path) as z:
+        assert all(n.endswith(".npy") for n in z.namelist())
+
+
+def test_dtype_tags(exported):
+    inputs, _, _ = _parse_manifest(
+        os.path.join(exported, "tiny_train.manifest.txt"))
+    by_name = {nm: dt for _, nm, dt, _ in inputs}
+    assert by_name["y"] == "i32"
+    assert by_name["x"] == "f32"

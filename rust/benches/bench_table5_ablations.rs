@@ -1,0 +1,69 @@
+//! Paper Table 5: S5 architecture ablations on a pixel-level task —
+//! (a) constrained P=N, J=1, scalar Δ (the Proposition-2 regime),
+//! (b) same but vector Δ ∈ ℝ^P (§D.5),
+//! (c) the unconstrained default (P free, block-diagonal J>1 init).
+//!
+//! The paper's finding: (a) < (b) < (c). Each variant is a separate AOT
+//! artifact trained through PJRT on the same data stream/seed.
+//!
+//! Run: `cargo bench --bench bench_table5_ablations`
+
+use s5::coordinator::{TrainConfig, Trainer};
+use s5::runtime::Client;
+use s5::util::Table;
+use std::path::Path;
+
+fn main() {
+    let steps: usize = std::env::var("S5_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if s5::bench::quick_mode() { 8 } else { 60 });
+
+    let variants = [
+        ("S5 (P=N, J=1, Δ∈ℝ)", "abl5_pn_scalar", "57.20 (ListOps col)"),
+        ("S5 (P=N, J=1, Δ∈ℝ^N)", "abl5_pn_vector", "58.65"),
+        ("S5 (P free, J=4, Δ∈ℝ^P)", "smnist", "62.15"),
+    ];
+
+    println!("# Table 5 reproduction — S5 ablations ({steps} steps each, sMNIST task)\n");
+    let client = Client::cpu().expect("client");
+    let mut table = Table::new(&["variant", "paper trend", "ours: loss", "ours: acc %"]);
+    let mut results = Vec::new();
+    for (name, preset, paper) in variants {
+        if !Path::new("artifacts")
+            .join(format!("{preset}_train.hlo.txt"))
+            .exists()
+        {
+            eprintln!("skipping {preset} (artifact missing)");
+            continue;
+        }
+        let mut cfg = TrainConfig::for_preset(preset);
+        cfg.steps = steps;
+        cfg.train_pool = 192;
+        cfg.eval_pool = 64;
+        cfg.eval_every = 0;
+        cfg.seed = 7;
+        let mut trainer = Trainer::new(&client, cfg).expect("trainer");
+        for _ in 0..steps {
+            trainer.train_step().expect("step");
+        }
+        let (loss, acc) = trainer.evaluate().expect("eval");
+        eprintln!("  {name}: loss={loss:.4} acc={:.1}%", acc * 100.0);
+        results.push((name, loss, acc));
+        table.row(&[
+            name.to_string(),
+            paper.to_string(),
+            format!("{loss:.4}"),
+            format!("{:.1}", acc * 100.0),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("paper shape: scalar-Δ constrained < vector-Δ constrained < unconstrained");
+    if results.len() == 3 {
+        let trend_ok = results[2].2 >= results[0].2 - 0.05;
+        println!(
+            "unconstrained ≥ scalar-Δ constrained (within noise): {}",
+            if trend_ok { "✓" } else { "✗ (budget too small)" }
+        );
+    }
+}

@@ -1,0 +1,125 @@
+//! Shared harness for the paper-table benchmark binaries (`rust/benches/`).
+//!
+//! The offline build has no criterion, so this provides the measurement
+//! loop (warmup + timed iterations + summary stats), relative-to-baseline
+//! reporting in the same "× of S4D" style the paper's Table 4 uses, and
+//! helpers to append results to `bench_output` sections.
+
+use crate::util::{time_fn, Stats, Table};
+
+/// One measured subject.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub stats: Stats,
+    /// optional auxiliary metric (bytes, accuracy, MSE…)
+    pub aux: Option<f64>,
+}
+
+/// A group of measurements sharing a baseline (paper style: "1.0×" row).
+pub struct RelativeReport {
+    pub title: String,
+    pub baseline: String,
+    pub rows: Vec<Measurement>,
+}
+
+impl RelativeReport {
+    pub fn new(title: &str, baseline: &str) -> Self {
+        RelativeReport { title: title.to_string(), baseline: baseline.to_string(), rows: vec![] }
+    }
+
+    pub fn add(&mut self, name: &str, stats: Stats) {
+        self.rows.push(Measurement { name: name.to_string(), stats, aux: None });
+    }
+
+    pub fn add_with_aux(&mut self, name: &str, stats: Stats, aux: f64) {
+        self.rows.push(Measurement { name: name.to_string(), stats, aux: Some(aux) });
+    }
+
+    /// Render with speed multipliers relative to the baseline row
+    /// (>1× = faster than baseline, as in paper Table 4).
+    pub fn render(&self) -> String {
+        let base = self
+            .rows
+            .iter()
+            .find(|m| m.name == self.baseline)
+            .map(|m| m.stats.mean)
+            .unwrap_or(f64::NAN);
+        let mut t = Table::new(&["subject", "mean", "p50", "p95", "speed vs baseline"]);
+        for m in &self.rows {
+            t.row(&[
+                m.name.clone(),
+                fmt_secs(m.stats.mean),
+                fmt_secs(m.stats.p50),
+                fmt_secs(m.stats.p95),
+                format!("{:.2}x", base / m.stats.mean),
+            ]);
+        }
+        format!("## {}\n{}", self.title, t.render())
+    }
+}
+
+/// Human-scale seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Standard measurement loop for bench binaries. Iteration counts adapt to
+/// `quick` mode (`S5_BENCH_QUICK=1`, used by `cargo test`-adjacent smoke).
+pub fn measure<F: FnMut()>(name: &str, f: F) -> Stats {
+    let quick = quick_mode();
+    let (warmup, iters) = if quick { (1, 3) } else { (3, 12) };
+    let stats = time_fn(warmup, iters, f);
+    eprintln!("  measured {name}: mean={} p95={}", fmt_secs(stats.mean), fmt_secs(stats.p95));
+    stats
+}
+
+/// True when benches should run tiny workloads.
+pub fn quick_mode() -> bool {
+    std::env::var("S5_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Paper-vs-measured comparison row for EXPERIMENTS.md-style output.
+pub fn paper_row(exp: &str, paper: &str, measured: &str, holds: bool) -> String {
+    format!(
+        "| {exp} | {paper} | {measured} | {} |",
+        if holds { "✓" } else { "✗" }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+        assert!(fmt_secs(2.5e-5).ends_with("us"));
+        assert!(fmt_secs(2.5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn relative_report_math() {
+        let mut r = RelativeReport::new("t", "base");
+        r.add("base", Stats { n: 1, mean: 2.0, ..Default::default() });
+        r.add("fast", Stats { n: 1, mean: 1.0, ..Default::default() });
+        let s = r.render();
+        assert!(s.contains("2.00x"), "{s}");
+        assert!(s.contains("1.00x"), "{s}");
+    }
+
+    #[test]
+    fn paper_row_renders() {
+        let row = paper_row("Table 4 / Path-X", "4.7x", "3.9x", true);
+        assert!(row.contains('✓'));
+    }
+}

@@ -1,0 +1,216 @@
+//! Run configuration: defaults per preset, overridable from key=value
+//! config files (a TOML-subset parser — the offline build has no `serde`/
+//! `toml`) and from CLI flags.
+
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::Args;
+
+/// Everything the trainer needs for one run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// AOT preset name (picks the artifact pair + init npz).
+    pub preset: String,
+    pub steps: usize,
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    pub weight_decay: f64,
+    /// training pool size (synthetic examples materialized per run)
+    pub train_pool: usize,
+    /// held-out pool size
+    pub eval_pool: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    /// directory holding the AOT artifacts
+    pub artifacts_dir: String,
+    /// optional checkpoint output path (npz)
+    pub checkpoint: Option<String>,
+    /// optional metrics CSV output path
+    pub metrics_csv: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "smnist".to_string(),
+            steps: 200,
+            base_lr: 4e-3,
+            warmup_steps: 20,
+            weight_decay: 0.01,
+            train_pool: 512,
+            eval_pool: 128,
+            eval_every: 50,
+            seed: 0,
+            artifacts_dir: crate::ARTIFACTS_DIR.to_string(),
+            checkpoint: None,
+            metrics_csv: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Paper-informed defaults per preset (Table 11 scaled to CPU budget).
+    pub fn for_preset(preset: &str) -> TrainConfig {
+        let mut c = TrainConfig { preset: preset.to_string(), ..Default::default() };
+        match preset {
+            "listops" | "abl6_continuous_hippo" | "abl6_continuous_gaussian"
+            | "abl6_continuous_antisymmetric" | "abl6_discrete_hippo"
+            | "abl6_discrete_gaussian" | "abl6_discrete_antisymmetric" => {
+                c.base_lr = 3e-3;
+                c.weight_decay = 0.04;
+            }
+            "text" => {
+                c.base_lr = 4e-3;
+                c.weight_decay = 0.05;
+            }
+            "pathfinder" | "pathx" => {
+                c.base_lr = 4e-3;
+                c.weight_decay = 0.03;
+            }
+            "speech" => {
+                c.base_lr = 6e-3;
+                c.weight_decay = 0.04;
+            }
+            "pendulum" => {
+                c.base_lr = 8e-3;
+                c.weight_decay = 0.0;
+                c.train_pool = 256;
+                c.eval_pool = 64;
+            }
+            _ => {}
+        }
+        c
+    }
+
+    /// Apply `--key value` CLI overrides.
+    pub fn apply_args(&mut self, args: &Args) {
+        if let Some(p) = args.get("preset") {
+            *self = TrainConfig::for_preset(p);
+        }
+        self.steps = args.get_usize("steps", self.steps);
+        self.base_lr = args.get_f64("lr", self.base_lr);
+        self.warmup_steps = args.get_usize("warmup", self.warmup_steps);
+        self.weight_decay = args.get_f64("wd", self.weight_decay);
+        self.train_pool = args.get_usize("train-pool", self.train_pool);
+        self.eval_pool = args.get_usize("eval-pool", self.eval_pool);
+        self.eval_every = args.get_usize("eval-every", self.eval_every);
+        self.seed = args.get_usize("seed", self.seed as usize) as u64;
+        if let Some(d) = args.get("artifacts") {
+            self.artifacts_dir = d.to_string();
+        }
+        self.checkpoint = args.get("checkpoint").map(|s| s.to_string()).or(self.checkpoint.take());
+        self.metrics_csv = args.get("metrics").map(|s| s.to_string()).or(self.metrics_csv.take());
+    }
+
+    /// Load overrides from a `key = value` config file (TOML subset:
+    /// comments with '#', no sections-nesting, bare scalars and strings).
+    pub fn apply_file(&mut self, path: &Path) -> anyhow::Result<()> {
+        let kv = parse_kv_file(path)?;
+        for (k, v) in kv {
+            match k.as_str() {
+                "preset" => self.preset = v,
+                "steps" => self.steps = v.parse().context("steps")?,
+                "lr" => self.base_lr = v.parse().context("lr")?,
+                "warmup" => self.warmup_steps = v.parse().context("warmup")?,
+                "wd" => self.weight_decay = v.parse().context("wd")?,
+                "train_pool" => self.train_pool = v.parse().context("train_pool")?,
+                "eval_pool" => self.eval_pool = v.parse().context("eval_pool")?,
+                "eval_every" => self.eval_every = v.parse().context("eval_every")?,
+                "seed" => self.seed = v.parse().context("seed")?,
+                "artifacts_dir" => self.artifacts_dir = v,
+                "checkpoint" => self.checkpoint = Some(v),
+                "metrics_csv" => self.metrics_csv = Some(v),
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a flat `key = value` file: '#' comments, optional quotes.
+pub fn parse_kv_file(path: &Path) -> anyhow::Result<BTreeMap<String, String>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading config {path:?}"))?;
+    parse_kv(&text)
+}
+
+pub fn parse_kv(text: &str) -> anyhow::Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("config line {}: expected key = value, got {raw:?}", ln + 1);
+        };
+        let v = v.trim().trim_matches('"').trim_matches('\'');
+        out.insert(k.trim().to_string(), v.to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_defaults_differ() {
+        let a = TrainConfig::for_preset("smnist");
+        let b = TrainConfig::for_preset("pendulum");
+        assert_ne!(a.base_lr, b.base_lr);
+        assert_eq!(b.weight_decay, 0.0);
+    }
+
+    #[test]
+    fn args_override() {
+        let mut c = TrainConfig::default();
+        let args = Args::parse(
+            ["--steps", "42", "--lr", "0.001", "--seed", "9"].iter().map(|s| s.to_string()),
+        );
+        c.apply_args(&args);
+        assert_eq!(c.steps, 42);
+        assert_eq!(c.base_lr, 0.001);
+        assert_eq!(c.seed, 9);
+    }
+
+    #[test]
+    fn kv_parser() {
+        let kv = parse_kv("steps = 10 # comment\nlr = \"0.01\"\n\n# full comment\n").unwrap();
+        assert_eq!(kv["steps"], "10");
+        assert_eq!(kv["lr"], "0.01");
+        assert_eq!(kv.len(), 2);
+    }
+
+    #[test]
+    fn kv_parser_rejects_garbage() {
+        assert!(parse_kv("not a kv line").is_err());
+    }
+
+    #[test]
+    fn file_overrides() {
+        let dir = std::env::temp_dir().join(format!("s5_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.conf");
+        std::fs::write(&p, "steps = 7\nwd = 0.5\ncheckpoint = out.npz\n").unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_file(&p).unwrap();
+        assert_eq!(c.steps, 7);
+        assert_eq!(c.weight_decay, 0.5);
+        assert_eq!(c.checkpoint.as_deref(), Some("out.npz"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn file_rejects_unknown_key() {
+        let dir = std::env::temp_dir().join(format!("s5_cfg2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.conf");
+        std::fs::write(&p, "bogus = 1\n").unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_file(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,168 @@
+//! Training/serving metrics: step records, moving averages, CSV export,
+//! throughput accounting.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One training step record.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub metric: f64, // accuracy for classifiers, MSE for regressors
+    pub lr: f64,
+    pub wall_secs: f64,
+}
+
+/// Accumulating metrics log.
+#[derive(Default)]
+pub struct MetricsLog {
+    pub records: Vec<StepRecord>,
+    pub eval_records: Vec<(usize, f64, f64)>, // (step, loss, metric)
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn push_eval(&mut self, step: usize, loss: f64, metric: f64) {
+        self.eval_records.push((step, loss, metric));
+    }
+
+    /// Exponential moving average of the loss (smoothing for loss curves).
+    pub fn ema_loss(&self, alpha: f64) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.records.len());
+        let mut ema = None;
+        for r in &self.records {
+            let e = match ema {
+                None => r.loss,
+                Some(prev) => alpha * r.loss + (1.0 - alpha) * prev,
+            };
+            ema = Some(e);
+            out.push(e);
+        }
+        out
+    }
+
+    /// Mean steps/sec over the last `window` records.
+    pub fn throughput(&self, window: usize) -> f64 {
+        let tail: Vec<&StepRecord> =
+            self.records.iter().rev().take(window.max(1)).collect();
+        if tail.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = tail.iter().map(|r| r.wall_secs).sum();
+        tail.len() as f64 / total.max(1e-9)
+    }
+
+    /// Last eval metric, if any.
+    pub fn last_eval(&self) -> Option<(usize, f64, f64)> {
+        self.eval_records.last().copied()
+    }
+
+    /// Render a CSV of the step records.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,metric,lr,wall_secs\n");
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "{},{:.6},{:.6},{:.6e},{:.6}",
+                r.step, r.loss, r.metric, r.lr, r.wall_secs
+            );
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    /// Loss-curve sparkline for terminal logging.
+    pub fn sparkline(&self, buckets: usize) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        if self.records.is_empty() {
+            return String::new();
+        }
+        let ema = self.ema_loss(0.2);
+        let chunk = (ema.len() as f64 / buckets as f64).max(1.0);
+        let vals: Vec<f64> = (0..buckets.min(ema.len()))
+            .map(|i| {
+                let lo = (i as f64 * chunk) as usize;
+                let hi = (((i + 1) as f64 * chunk) as usize).min(ema.len());
+                ema[lo..hi.max(lo + 1)].iter().sum::<f64>() / (hi.max(lo + 1) - lo) as f64
+            })
+            .collect();
+        let (mn, mx) = vals
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &v| (a.min(v), b.max(v)));
+        vals.iter()
+            .map(|&v| {
+                let t = if mx > mn { (v - mn) / (mx - mn) } else { 0.0 };
+                BARS[((t * 7.0).round() as usize).min(7)]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f64) -> StepRecord {
+        StepRecord { step, loss, metric: 0.5, lr: 1e-3, wall_secs: 0.1 }
+    }
+
+    #[test]
+    fn ema_smooths() {
+        let mut m = MetricsLog::new();
+        for i in 0..10 {
+            m.push(rec(i, if i % 2 == 0 { 1.0 } else { 0.0 }));
+        }
+        let ema = m.ema_loss(0.3);
+        let var_raw: f64 = m.records.windows(2).map(|w| (w[1].loss - w[0].loss).abs()).sum();
+        let var_ema: f64 = ema.windows(2).map(|w| (w[1] - w[0]).abs()).sum();
+        assert!(var_ema < var_raw);
+    }
+
+    #[test]
+    fn throughput_counts_steps_per_sec() {
+        let mut m = MetricsLog::new();
+        for i in 0..5 {
+            m.push(rec(i, 1.0));
+        }
+        assert!((m.throughput(5) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut m = MetricsLog::new();
+        m.push(rec(1, 0.5));
+        let csv = m.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn sparkline_renders() {
+        let mut m = MetricsLog::new();
+        for i in 0..50 {
+            m.push(rec(i, 1.0 / (1.0 + i as f64)));
+        }
+        let s = m.sparkline(10);
+        assert_eq!(s.chars().count(), 10);
+    }
+
+    #[test]
+    fn eval_records_tracked() {
+        let mut m = MetricsLog::new();
+        m.push_eval(10, 0.7, 0.8);
+        m.push_eval(20, 0.5, 0.9);
+        assert_eq!(m.last_eval().unwrap(), (20, 0.5, 0.9));
+    }
+}

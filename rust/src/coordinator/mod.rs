@@ -1,0 +1,14 @@
+//! The Layer-3 coordinator: configuration, training orchestration, and the
+//! inference server. Everything after `make artifacts` runs through here —
+//! Python is never on this path.
+
+pub mod config;
+pub mod metrics;
+pub mod schedule;
+pub mod server;
+pub mod sweep;
+pub mod tasks;
+pub mod trainer;
+
+pub use config::TrainConfig;
+pub use trainer::Trainer;

@@ -1,0 +1,83 @@
+//! Learning-rate schedules (paper §G.2.1: AdamW + cosine annealing, with
+//! the warmup used by the S4 training recipes). The schedule lives in Rust
+//! — the AOT train step takes `lr` as a runtime scalar — so artifacts are
+//! schedule-agnostic.
+
+/// Cosine decay with linear warmup.
+#[derive(Clone, Copy, Debug)]
+pub struct CosineSchedule {
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_lr: f64,
+}
+
+impl CosineSchedule {
+    pub fn new(base_lr: f64, warmup_steps: usize, total_steps: usize) -> Self {
+        CosineSchedule { base_lr, warmup_steps, total_steps, min_lr: 1e-7 }
+    }
+
+    /// LR at 1-based step `step`.
+    pub fn lr(&self, step: usize) -> f64 {
+        if self.warmup_steps > 0 && step <= self.warmup_steps {
+            return self.base_lr * step as f64 / self.warmup_steps as f64;
+        }
+        let done = (step - self.warmup_steps) as f64;
+        let span = (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let frac = (done / span).clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * frac).cos());
+        self.min_lr + (self.base_lr - self.min_lr) * cos
+    }
+}
+
+/// Constant schedule (ablation/debug).
+#[derive(Clone, Copy, Debug)]
+pub struct ConstantSchedule(pub f64);
+
+impl ConstantSchedule {
+    pub fn lr(&self, _step: usize) -> f64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = CosineSchedule::new(1.0, 10, 100);
+        assert!((s.lr(1) - 0.1).abs() < 1e-12);
+        assert!((s.lr(5) - 0.5).abs() < 1e-12);
+        assert!((s.lr(10) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = CosineSchedule::new(1.0, 0, 100);
+        assert!(s.lr(1) > 0.99);
+        assert!(s.lr(50) < 0.6);
+        assert!(s.lr(100) < 1e-3);
+        assert!(s.lr(100) >= s.min_lr);
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = CosineSchedule::new(3e-3, 20, 200);
+        let mut prev = f64::INFINITY;
+        for step in 21..=200 {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-12, "step {step}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn never_negative_or_nan() {
+        let s = CosineSchedule::new(1e-2, 5, 50);
+        for step in 1..=80 {
+            let lr = s.lr(step);
+            assert!(lr.is_finite() && lr >= 0.0);
+        }
+    }
+}

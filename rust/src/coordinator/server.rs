@@ -1,0 +1,298 @@
+//! Inference server: request queue → dynamic batcher → PJRT worker.
+//!
+//! The serving half of the coordinator (vLLM-router-shaped, scaled to this
+//! system): callers submit single sequences; a worker thread owns the
+//! compiled fwd executable and the parameters, coalesces outstanding
+//! requests into padded batches of the artifact's fixed batch size (waiting
+//! at most `max_wait` for stragglers), executes once per batch, and fans
+//! the logit rows back out. The offline build has no tokio, so the event
+//! loop is built on std::sync::mpsc — which also keeps the hot path free
+//! of async-runtime overhead.
+
+use anyhow::Context;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use xla::Literal;
+
+use crate::runtime::params::{literal_f32, to_vec_f32, ParamStore};
+use crate::runtime::{Artifact, Client};
+
+/// One inference request: a single (L × d_input) sequence.
+struct Request {
+    x: Vec<f32>,
+    timescale: f32,
+    submitted: Instant,
+    resp: Sender<anyhow::Result<Response>>,
+}
+
+/// The reply: logits plus telemetry.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    /// how many real requests shared the executed batch
+    pub batched_with: usize,
+    pub queue_secs: f64,
+    pub total_secs: f64,
+}
+
+/// Server tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// max time the batcher waits to fill a batch
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+}
+
+impl ServerStats {
+    /// Mean requests per executed batch.
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+/// Handle for submitting requests; clone freely across client threads.
+#[derive(Clone)]
+pub struct ServeHandle {
+    tx: Sender<Request>,
+    pub row: usize,
+    pub classes: usize,
+}
+
+impl ServeHandle {
+    /// Blocking single inference (row-major L×d sequence → logits).
+    pub fn infer(&self, x: Vec<f32>) -> anyhow::Result<Response> {
+        self.infer_with_timescale(x, 1.0)
+    }
+
+    /// Inference with a Δ-rescale factor (zero-shot resampling path).
+    pub fn infer_with_timescale(&self, x: Vec<f32>, timescale: f32) -> anyhow::Result<Response> {
+        anyhow::ensure!(x.len() == self.row, "bad request width {}", x.len());
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request { x, timescale, submitted: Instant::now(), resp: rtx })
+            .ok()
+            .context("server stopped")?;
+        rrx.recv().context("server dropped request")?
+    }
+}
+
+/// A running inference server. Dropping it stops the worker.
+pub struct InferenceServer {
+    handle: ServeHandle,
+    pub stats: Arc<ServerStats>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl InferenceServer {
+    /// Load `<preset>_fwd` + params (npz checkpoint or `<preset>_init.npz`)
+    /// and start the worker.
+    ///
+    /// PJRT handles are not `Send` (the xla crate wraps raw pointers and an
+    /// `Rc` refcount), so the worker thread creates its *own* client and
+    /// compiles the artifact locally; only plain data crosses the channel.
+    pub fn start(
+        artifacts_dir: &Path,
+        preset: &str,
+        checkpoint: Option<&Path>,
+        cfg: ServerConfig,
+    ) -> anyhow::Result<InferenceServer> {
+        // manifest is plain data: parse on the caller thread for the handle
+        let manifest = crate::runtime::Manifest::load(
+            &artifacts_dir.join(format!("{preset}_fwd.manifest.txt")),
+        )?;
+        let x_spec = &manifest.inputs[manifest.input_index("x")?];
+        let batch = x_spec.dims[0];
+        let row: usize = x_spec.dims[1..].iter().product();
+        let classes = manifest.meta_usize("classes")?;
+        let x_dims = x_spec.dims.clone();
+
+        let params_path = checkpoint
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| Artifact::init_npz_path(artifacts_dir, preset));
+        let dir = artifacts_dir.to_path_buf();
+        let fwd_name = format!("{preset}_fwd");
+
+        let (tx, rx) = channel::<Request>();
+        let stats = Arc::new(ServerStats::default());
+        let wstats = stats.clone();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let worker = std::thread::spawn(move || {
+            let setup = (|| -> anyhow::Result<(Artifact, Vec<Literal>)> {
+                let client = Client::cpu()?;
+                let art = Artifact::load(&dir, &fwd_name, &client)?;
+                let store = ParamStore::load_npz(&params_path)?;
+                let idx = art.manifest.input_group("params");
+                let specs: Vec<_> = idx.iter().map(|&i| &art.manifest.inputs[i]).collect();
+                let params = store.gather(&specs)?;
+                Ok((art, params))
+            })();
+            match setup {
+                Ok((art, params)) => {
+                    let _ = ready_tx.send(Ok(()));
+                    worker_loop(art, params, rx, cfg, batch, row, classes, x_dims, wstats);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .context("server worker died during startup")??;
+
+        Ok(InferenceServer {
+            handle: ServeHandle { tx, row, classes },
+            stats,
+            worker: Some(worker),
+        })
+    }
+
+    pub fn handle(&self) -> ServeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        // closing the channel stops the worker
+        let (tx, _) = channel();
+        self.handle.tx = tx;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    art: Artifact,
+    params: Vec<Literal>,
+    rx: Receiver<Request>,
+    cfg: ServerConfig,
+    batch: usize,
+    row: usize,
+    classes: usize,
+    x_dims: Vec<usize>,
+    stats: Arc<ServerStats>,
+) {
+    loop {
+        // block for the first request of the next batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        // coalesce: same-timescale requests batch together
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) if r.timescale == pending[0].timescale => pending.push(r),
+                Ok(r) => {
+                    // different timescale: run it in the next batch
+                    execute_batch(&art, &params, vec![r], batch, row, classes, &x_dims, &stats);
+                    continue;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        execute_batch(&art, &params, pending, batch, row, classes, &x_dims, &stats);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_batch(
+    art: &Artifact,
+    params: &[Literal],
+    pending: Vec<Request>,
+    batch: usize,
+    row: usize,
+    classes: usize,
+    x_dims: &[usize],
+    stats: &Arc<ServerStats>,
+) {
+    let n_real = pending.len();
+    stats.requests.fetch_add(n_real as u64, Ordering::Relaxed);
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+
+    // pad to the artifact's fixed batch dimension
+    let mut x = vec![0.0f32; batch * row];
+    for (i, r) in pending.iter().enumerate() {
+        x[i * row..(i + 1) * row].copy_from_slice(&r.x);
+    }
+    let result = (|| -> anyhow::Result<Vec<f32>> {
+        let ts = literal_f32(&[pending[0].timescale], &[])?;
+        let xl = literal_f32(&x, x_dims)?;
+        let mut refs: Vec<&Literal> = params.iter().collect();
+        refs.push(&ts);
+        refs.push(&xl);
+        let outs = art.run(&refs)?;
+        to_vec_f32(&outs[0])
+    })();
+
+    match result {
+        Ok(logits) => {
+            for (i, r) in pending.into_iter().enumerate() {
+                let resp = Response {
+                    logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                    batched_with: n_real,
+                    queue_secs: (t0 - r.submitted).as_secs_f64(),
+                    total_secs: r.submitted.elapsed().as_secs_f64(),
+                };
+                let _ = r.resp.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for r in pending {
+                let _ = r.resp.send(Err(anyhow::anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_config_default_sane() {
+        let c = ServerConfig::default();
+        assert!(c.max_wait >= Duration::from_micros(100));
+    }
+
+    #[test]
+    fn stats_fill_math() {
+        let s = ServerStats::default();
+        s.requests.store(10, Ordering::Relaxed);
+        s.batches.store(4, Ordering::Relaxed);
+        assert!((s.mean_batch_fill() - 2.5).abs() < 1e-12);
+        let empty = ServerStats::default();
+        assert_eq!(empty.mean_batch_fill(), 0.0);
+    }
+}

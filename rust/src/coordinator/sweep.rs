@@ -1,0 +1,173 @@
+//! Hyperparameter sweeps: grid expansion + best-by-metric selection.
+//!
+//! The paper's Table 11 configurations came from sweeps over LR, weight
+//! decay and SSM-LR ratio (§G.2). This module provides the L3 machinery:
+//! declare a [`Grid`] over [`TrainConfig`] fields, expand it to runs, and
+//! fold results with [`SweepResults`]. The execution itself goes through
+//! the normal [`crate::coordinator::Trainer`]; see `s5 sweep`.
+
+use crate::coordinator::config::TrainConfig;
+
+/// One axis of a grid sweep.
+#[derive(Clone, Debug)]
+pub enum Axis {
+    Lr(Vec<f64>),
+    WeightDecay(Vec<f64>),
+    Seed(Vec<u64>),
+    WarmupSteps(Vec<usize>),
+}
+
+impl Axis {
+    fn len(&self) -> usize {
+        match self {
+            Axis::Lr(v) => v.len(),
+            Axis::WeightDecay(v) => v.len(),
+            Axis::Seed(v) => v.len(),
+            Axis::WarmupSteps(v) => v.len(),
+        }
+    }
+
+    fn apply(&self, idx: usize, cfg: &mut TrainConfig) {
+        match self {
+            Axis::Lr(v) => cfg.base_lr = v[idx],
+            Axis::WeightDecay(v) => cfg.weight_decay = v[idx],
+            Axis::Seed(v) => cfg.seed = v[idx],
+            Axis::WarmupSteps(v) => cfg.warmup_steps = v[idx],
+        }
+    }
+
+    fn label(&self, idx: usize) -> String {
+        match self {
+            Axis::Lr(v) => format!("lr={}", v[idx]),
+            Axis::WeightDecay(v) => format!("wd={}", v[idx]),
+            Axis::Seed(v) => format!("seed={}", v[idx]),
+            Axis::WarmupSteps(v) => format!("warmup={}", v[idx]),
+        }
+    }
+}
+
+/// A full factorial grid over a base configuration.
+pub struct Grid {
+    pub base: TrainConfig,
+    pub axes: Vec<Axis>,
+}
+
+impl Grid {
+    pub fn new(base: TrainConfig) -> Grid {
+        Grid { base, axes: Vec::new() }
+    }
+
+    pub fn axis(mut self, axis: Axis) -> Grid {
+        assert!(axis.len() > 0, "empty sweep axis");
+        self.axes.push(axis);
+        self
+    }
+
+    /// Total number of runs.
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(Axis::len).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand to (label, config) pairs in row-major axis order.
+    pub fn expand(&self) -> Vec<(String, TrainConfig)> {
+        let n = self.len();
+        let mut out = Vec::with_capacity(n);
+        for flat in 0..n {
+            let mut cfg = self.base.clone();
+            let mut rem = flat;
+            let mut labels = Vec::with_capacity(self.axes.len());
+            for axis in self.axes.iter().rev() {
+                let idx = rem % axis.len();
+                rem /= axis.len();
+                axis.apply(idx, &mut cfg);
+                labels.push(axis.label(idx));
+            }
+            labels.reverse();
+            out.push((labels.join(" "), cfg));
+        }
+        out
+    }
+}
+
+/// Collected sweep outcomes.
+#[derive(Default)]
+pub struct SweepResults {
+    pub rows: Vec<(String, f64, f64)>, // (label, loss, metric)
+}
+
+impl SweepResults {
+    pub fn push(&mut self, label: String, loss: f64, metric: f64) {
+        self.rows.push((label, loss, metric));
+    }
+
+    /// Best run by highest metric (accuracy) — ties broken by lower loss.
+    pub fn best_by_metric(&self) -> Option<&(String, f64, f64)> {
+        self.rows.iter().max_by(|a, b| {
+            a.2.partial_cmp(&b.2)
+                .unwrap()
+                .then(b.1.partial_cmp(&a.1).unwrap())
+        })
+    }
+
+    /// Best run by lowest loss (regression tasks).
+    pub fn best_by_loss(&self) -> Option<&(String, f64, f64)> {
+        self.rows
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = crate::util::Table::new(&["run", "loss", "metric"]);
+        for (label, loss, metric) in &self.rows {
+            t.row(&[label.clone(), format!("{loss:.4}"), format!("{metric:.4}")]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_expands_factorially() {
+        let g = Grid::new(TrainConfig::default())
+            .axis(Axis::Lr(vec![1e-3, 3e-3]))
+            .axis(Axis::Seed(vec![0, 1, 2]));
+        assert_eq!(g.len(), 6);
+        let runs = g.expand();
+        assert_eq!(runs.len(), 6);
+        // every combination appears exactly once
+        let mut seen = std::collections::BTreeSet::new();
+        for (label, cfg) in &runs {
+            assert!(seen.insert((format!("{:.0e}", cfg.base_lr), cfg.seed)), "{label}");
+        }
+    }
+
+    #[test]
+    fn labels_carry_values() {
+        let g = Grid::new(TrainConfig::default()).axis(Axis::WeightDecay(vec![0.05]));
+        let runs = g.expand();
+        assert!(runs[0].0.contains("wd=0.05"), "{}", runs[0].0);
+    }
+
+    #[test]
+    fn best_selection() {
+        let mut r = SweepResults::default();
+        r.push("a".into(), 0.9, 0.5);
+        r.push("b".into(), 0.7, 0.8);
+        r.push("c".into(), 0.6, 0.8);
+        assert_eq!(r.best_by_metric().unwrap().0, "c"); // tie on metric → lower loss
+        assert_eq!(r.best_by_loss().unwrap().0, "c");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sweep axis")]
+    fn rejects_empty_axis() {
+        let _ = Grid::new(TrainConfig::default()).axis(Axis::Lr(vec![]));
+    }
+}

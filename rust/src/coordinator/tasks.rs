@@ -1,0 +1,116 @@
+//! Preset → data-generator routing.
+//!
+//! Every AOT preset (see `python/compile/aot.py::PRESETS`) maps to one of
+//! the synthetic generators at the dimensions recorded in its manifest
+//! meta. Ablation presets reuse the base task of the experiment they
+//! ablate (Table 5 → sMNIST, Table 6 → ListOps).
+
+use anyhow::bail;
+
+use crate::data::{self, TaskGen};
+use crate::runtime::Manifest;
+
+/// Build the generator for a classifier preset from its manifest.
+pub fn task_for_preset(preset: &str, manifest: &Manifest) -> anyhow::Result<Box<dyn TaskGen>> {
+    let length = manifest.meta_usize("length")?;
+    let task: Box<dyn TaskGen> = if preset.starts_with("abl5") || preset == "smnist" {
+        if length != 784 {
+            bail!("smnist-family preset with L={length}");
+        }
+        Box::new(data::mnist::SeqMnist::new(false))
+    } else if preset.starts_with("abl6") || preset == "listops" {
+        Box::new(data::listops::ListOps::new(length))
+    } else if preset == "text" {
+        Box::new(data::text::Sentiment::new(length))
+    } else if preset == "image" {
+        Box::new(data::image::TextureImage::new(int_sqrt(length)?))
+    } else if preset == "pathfinder" {
+        Box::new(data::pathfinder::Pathfinder::new(int_sqrt(length)?))
+    } else if preset == "pathx" {
+        Box::new(data::pathfinder::Pathfinder::new_pathx(int_sqrt(length)?))
+    } else if preset == "speech" {
+        Box::new(data::speech::SpeechCommands::new(length))
+    } else {
+        bail!("no task generator for preset {preset:?}");
+    };
+    // cross-check the generator agrees with the artifact's shape contract
+    let d_input = manifest.meta_usize("d_input").unwrap_or(task.d_input());
+    let classes = manifest.meta_usize("classes").unwrap_or(task.classes());
+    if task.seq_len() != length || task.d_input() != d_input || task.classes() != classes {
+        bail!(
+            "task/manifest mismatch for {preset}: task (L={}, d={}, c={}) vs manifest (L={length}, d={d_input}, c={classes})",
+            task.seq_len(),
+            task.d_input(),
+            task.classes()
+        );
+    }
+    Ok(task)
+}
+
+fn int_sqrt(n: usize) -> anyhow::Result<usize> {
+    let s = (n as f64).sqrt().round() as usize;
+    if s * s != n {
+        bail!("sequence length {n} is not a perfect square");
+    }
+    Ok(s)
+}
+
+/// Retrieval generator for the two-tower preset.
+pub fn retrieval_for_preset(manifest: &Manifest) -> anyhow::Result<data::retrieval::Retrieval> {
+    let length = manifest.meta_usize("length")?;
+    let gen = data::retrieval::Retrieval::new(length);
+    if gen.d_input() != manifest.meta_usize("d_input")? {
+        bail!("retrieval vocab mismatch");
+    }
+    Ok(gen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest(preset: &str, length: usize, d: usize, c: usize) -> Manifest {
+        Manifest::parse(&format!(
+            "artifact {preset}_train\nkind classifier\nmeta length {length}\nmeta d_input {d}\nmeta classes {c}\ninput 0 x f32 1\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_core_presets() {
+        let cases = [
+            ("smnist", 784, 1, 10),
+            ("listops", 512, 18, 10),
+            ("text", 1024, 32, 2),
+            ("image", 1024, 1, 10),
+            ("pathfinder", 1024, 1, 2),
+            ("pathx", 4096, 1, 2),
+            ("speech", 2048, 1, 35),
+            ("abl5_pn_scalar", 784, 1, 10),
+            ("abl6_continuous_hippo", 256, 18, 10),
+        ];
+        for (preset, l, d, c) in cases {
+            let m = manifest(preset, l, d, c);
+            let t = task_for_preset(preset, &m).unwrap_or_else(|e| panic!("{preset}: {e}"));
+            assert_eq!(t.seq_len(), l, "{preset}");
+        }
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let m = manifest("listops", 512, 5, 10); // wrong vocab
+        assert!(task_for_preset("listops", &m).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_preset() {
+        let m = manifest("nope", 16, 1, 2);
+        assert!(task_for_preset("nope", &m).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square_image() {
+        let m = manifest("image", 1000, 1, 10);
+        assert!(task_for_preset("image", &m).is_err());
+    }
+}

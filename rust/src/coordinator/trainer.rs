@@ -1,0 +1,407 @@
+//! The training orchestrator.
+//!
+//! Owns the loop the L2 graphs cannot see: data generation/shuffling, the
+//! cosine LR schedule, step counting, periodic held-out evaluation,
+//! metrics, and checkpointing. Each step executes the fused
+//! loss+grad+AdamW artifact (`<preset>_train`) through PJRT; evaluation
+//! executes `<preset>_fwd`.
+//!
+//! Supports the three graph kinds the AOT pipeline emits:
+//! `classifier` (LRA suite, speech, sMNIST, ablations), `retrieval`
+//! (two-tower) and `pendulum` (irregular-Δt regression).
+
+use anyhow::{bail, Context};
+use std::path::Path;
+use xla::Literal;
+
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::metrics::{MetricsLog, StepRecord};
+use crate::coordinator::schedule::CosineSchedule;
+use crate::coordinator::tasks;
+use crate::data::batcher::BatchStream;
+use crate::data::pendulum::PendulumSim;
+use crate::data::retrieval::Retrieval;
+use crate::info;
+use crate::rng::Rng;
+use crate::runtime::params::{literal_f32, literal_i32, literal_zeros, to_vec_f32, ParamStore};
+use crate::runtime::{Artifact, Client};
+use crate::util::Timer;
+
+/// Kind-specific data plumbing.
+enum TaskData {
+    Classifier { train: BatchStream, eval: BatchStream },
+    Retrieval { gen: Retrieval, eval_seed: u64 },
+    Pendulum { sim: PendulumSim },
+}
+
+/// A live training session.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    train_art: Artifact,
+    fwd_art: Artifact,
+    /// parameter literals, in the train manifest's params.* order
+    params: Vec<Literal>,
+    m: Vec<Literal>,
+    v: Vec<Literal>,
+    n_params: usize,
+    schedule: CosineSchedule,
+    data: TaskData,
+    pub log: MetricsLog,
+    rng: Rng,
+    pub step: usize,
+}
+
+impl Trainer {
+    /// Load artifacts + init params and wire the data stream.
+    pub fn new(client: &Client, cfg: TrainConfig) -> anyhow::Result<Trainer> {
+        let dir = Path::new(&cfg.artifacts_dir);
+        let train_art = Artifact::load(dir, &format!("{}_train", cfg.preset), client)?;
+        let fwd_art = Artifact::load(dir, &format!("{}_fwd", cfg.preset), client)?;
+        let store = ParamStore::load_npz(&Artifact::init_npz_path(dir, &cfg.preset))?;
+
+        // params in manifest order
+        let param_idx = train_art.manifest.input_group("params");
+        let specs: Vec<_> = param_idx
+            .iter()
+            .map(|&i| &train_art.manifest.inputs[i])
+            .collect();
+        let params = store.gather(&specs)?;
+        let m: Vec<Literal> = specs.iter().map(|s| literal_zeros(s).unwrap()).collect();
+        let v: Vec<Literal> = specs.iter().map(|s| literal_zeros(s).unwrap()).collect();
+        let n_params = params.len();
+
+        let kind = train_art.manifest.kind.clone();
+        let data = match kind.as_str() {
+            "classifier" => {
+                let task = tasks::task_for_preset(&cfg.preset, &train_art.manifest)?;
+                let batch = train_art.manifest.meta_usize("batch")?;
+                TaskData::Classifier {
+                    train: BatchStream::new(task.as_ref(), cfg.train_pool, batch, cfg.seed),
+                    eval: BatchStream::new(
+                        task.as_ref(),
+                        cfg.eval_pool,
+                        batch,
+                        cfg.seed ^ 0xE7A1,
+                    ),
+                }
+            }
+            "retrieval" => TaskData::Retrieval {
+                gen: tasks::retrieval_for_preset(&train_art.manifest)?,
+                eval_seed: cfg.seed ^ 0xE7A1,
+            },
+            "pendulum" => TaskData::Pendulum { sim: PendulumSim::new() },
+            other => bail!("unsupported artifact kind {other:?}"),
+        };
+
+        let schedule = CosineSchedule::new(cfg.base_lr, cfg.warmup_steps, cfg.steps);
+        info!(
+            "trainer ready: preset={} kind={} params={} tensors",
+            cfg.preset, kind, n_params
+        );
+        Ok(Trainer {
+            cfg,
+            train_art,
+            fwd_art,
+            params,
+            m,
+            v,
+            n_params,
+            schedule,
+            data,
+            log: MetricsLog::new(),
+            rng: Rng::new(0xD1CE),
+            step: 0,
+        })
+    }
+
+    fn scalars(&self, lr: f64, wd: f64, step: usize) -> anyhow::Result<[Literal; 3]> {
+        Ok([
+            literal_f32(&[lr as f32], &[])?,
+            literal_f32(&[wd as f32], &[])?,
+            literal_f32(&[step as f32], &[])?,
+        ])
+    }
+
+    /// One optimizer step on a prepared batch (kind-specific tail inputs).
+    fn step_with_batch(&mut self, batch_inputs: Vec<Literal>) -> anyhow::Result<(f64, f64)> {
+        self.step += 1;
+        let lr = self.schedule.lr(self.step);
+        let scalars = self.scalars(lr, self.cfg.weight_decay, self.step)?;
+        let n = self.n_params;
+
+        let mut refs: Vec<&Literal> = Vec::with_capacity(3 * n + 3 + batch_inputs.len());
+        refs.extend(self.params.iter());
+        refs.extend(self.m.iter());
+        refs.extend(self.v.iter());
+        refs.extend(scalars.iter());
+        refs.extend(batch_inputs.iter());
+        if refs.len() != self.train_art.manifest.inputs.len() {
+            bail!(
+                "input arity mismatch: built {}, manifest wants {}",
+                refs.len(),
+                self.train_art.manifest.inputs.len()
+            );
+        }
+
+        let timer = Timer::start();
+        let mut outs = self.train_art.run(&refs)?;
+        // outputs: params' (n), m' (n), v' (n), loss, metric
+        let metric = outs.pop().context("missing metric output")?;
+        let loss = outs.pop().context("missing loss output")?;
+        let mut outs = outs.into_iter();
+        self.params = outs.by_ref().take(n).collect();
+        self.m = outs.by_ref().take(n).collect();
+        self.v = outs.by_ref().take(n).collect();
+        let loss = to_vec_f32(&loss)?[0] as f64;
+        let metric = to_vec_f32(&metric)?[0] as f64;
+        self.log.push(StepRecord {
+            step: self.step,
+            loss,
+            metric,
+            lr,
+            wall_secs: timer.secs(),
+        });
+        Ok((loss, metric))
+    }
+
+    /// Build the batch-input literals for the next training batch.
+    fn next_batch_inputs(&mut self) -> anyhow::Result<Vec<Literal>> {
+        let man = &self.train_art.manifest;
+        match &mut self.data {
+            TaskData::Classifier { train, .. } => {
+                let b = train.next_batch();
+                let x_spec = &man.inputs[man.input_index("x")?];
+                Ok(vec![
+                    literal_f32(&b.x, &x_spec.dims)?,
+                    literal_i32(&b.labels, &[b.batch_size])?,
+                ])
+            }
+            TaskData::Retrieval { gen, .. } => {
+                let batch = man.meta_usize("batch")?;
+                let x_spec = &man.inputs[man.input_index("x1")?];
+                let mut x1 = Vec::new();
+                let mut x2 = Vec::new();
+                let mut y = Vec::new();
+                for _ in 0..batch {
+                    let p = gen.sample_pair(&mut self.rng);
+                    x1.extend_from_slice(&p.x1);
+                    x2.extend_from_slice(&p.x2);
+                    y.push(p.label);
+                }
+                Ok(vec![
+                    literal_f32(&x1, &x_spec.dims)?,
+                    literal_f32(&x2, &x_spec.dims)?,
+                    literal_i32(&y, &[batch])?,
+                ])
+            }
+            TaskData::Pendulum { sim } => {
+                let batch = man.meta_usize("batch")?;
+                let img_spec = &man.inputs[man.input_index("imgs")?];
+                let mut imgs = Vec::new();
+                let mut dts = Vec::new();
+                let mut tgt = Vec::new();
+                for _ in 0..batch {
+                    let ex = sim.sample(&mut self.rng);
+                    imgs.extend_from_slice(&ex.images);
+                    dts.extend_from_slice(&ex.dts);
+                    tgt.extend_from_slice(&ex.targets);
+                }
+                Ok(vec![
+                    literal_f32(&imgs, &img_spec.dims)?,
+                    literal_f32(&dts, &[batch, sim.obs_len])?,
+                    literal_f32(&tgt, &[batch, sim.obs_len, 2])?,
+                ])
+            }
+        }
+    }
+
+    /// One training step (generates its own batch).
+    pub fn train_step(&mut self) -> anyhow::Result<(f64, f64)> {
+        let batch = self.next_batch_inputs()?;
+        self.step_with_batch(batch)
+    }
+
+    /// Run the configured number of steps with periodic eval + logging.
+    pub fn run(&mut self) -> anyhow::Result<()> {
+        let steps = self.cfg.steps;
+        for _ in 0..steps {
+            let (loss, metric) = self.train_step()?;
+            if self.step % 10 == 0 || self.step == 1 {
+                info!(
+                    "step {:>5}/{steps} loss={loss:.4} metric={metric:.4} lr={:.2e} [{}]",
+                    self.step,
+                    self.schedule.lr(self.step),
+                    self.log.sparkline(24),
+                );
+            }
+            if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0 {
+                if let Ok((eloss, emetric)) = self.evaluate() {
+                    self.log.push_eval(self.step, eloss, emetric);
+                    info!("eval @ {}: loss={eloss:.4} metric={emetric:.4}", self.step);
+                }
+            }
+        }
+        if let Some(path) = self.cfg.checkpoint.clone() {
+            self.save_checkpoint(Path::new(&path))?;
+            info!("checkpoint saved to {path}");
+        }
+        if let Some(path) = self.cfg.metrics_csv.clone() {
+            self.log.save_csv(Path::new(&path))?;
+        }
+        Ok(())
+    }
+
+    /// Held-out evaluation through the fwd artifact.
+    pub fn evaluate(&mut self) -> anyhow::Result<(f64, f64)> {
+        self.evaluate_with_timescale(1.0)
+    }
+
+    /// Evaluation with a Δ-rescaling factor (zero-shot resampling, §6.2).
+    pub fn evaluate_with_timescale(&mut self, timescale: f32) -> anyhow::Result<(f64, f64)> {
+        match &mut self.data {
+            TaskData::Classifier { eval, .. } => {
+                let batches = eval.eval_batches();
+                let man = &self.fwd_art.manifest;
+                let x_spec = &man.inputs[man.input_index("x")?];
+                let classes = man.meta_usize("classes")?;
+                let (mut correct, mut total, mut loss_sum) = (0usize, 0usize, 0.0f64);
+                for b in &batches {
+                    let x = literal_f32(&b.x, &x_spec.dims)?;
+                    let ts = literal_f32(&[timescale], &[])?;
+                    let mut refs: Vec<&Literal> = self.params.iter().collect();
+                    refs.push(&ts);
+                    refs.push(&x);
+                    let outs = self.fwd_art.run(&refs)?;
+                    let logits = to_vec_f32(&outs[0])?;
+                    for (i, &label) in b.labels.iter().enumerate() {
+                        let row = &logits[i * classes..(i + 1) * classes];
+                        let (pred, _) = argmax(row);
+                        if pred == label as usize {
+                            correct += 1;
+                        }
+                        loss_sum += xent(row, label as usize);
+                        total += 1;
+                    }
+                }
+                Ok((loss_sum / total as f64, correct as f64 / total as f64))
+            }
+            TaskData::Retrieval { gen, eval_seed } => {
+                let man = &self.fwd_art.manifest;
+                let batch = man.meta_usize("batch")?;
+                let x_spec = &man.inputs[man.input_index("x1")?];
+                let classes = man.meta_usize("classes")?;
+                let mut rng = Rng::new(*eval_seed);
+                let (mut correct, mut total, mut loss_sum) = (0usize, 0usize, 0.0f64);
+                for _ in 0..(self.cfg.eval_pool / batch).max(1) {
+                    let mut x1 = Vec::new();
+                    let mut x2 = Vec::new();
+                    let mut y = Vec::new();
+                    for _ in 0..batch {
+                        let p = gen.sample_pair(&mut rng);
+                        x1.extend_from_slice(&p.x1);
+                        x2.extend_from_slice(&p.x2);
+                        y.push(p.label);
+                    }
+                    let ts = literal_f32(&[timescale], &[])?;
+                    let x1l = literal_f32(&x1, &x_spec.dims)?;
+                    let x2l = literal_f32(&x2, &x_spec.dims)?;
+                    let mut refs: Vec<&Literal> = self.params.iter().collect();
+                    refs.push(&ts);
+                    refs.push(&x1l);
+                    refs.push(&x2l);
+                    let outs = self.fwd_art.run(&refs)?;
+                    let logits = to_vec_f32(&outs[0])?;
+                    for (i, &label) in y.iter().enumerate() {
+                        let row = &logits[i * classes..(i + 1) * classes];
+                        if argmax(row).0 == label as usize {
+                            correct += 1;
+                        }
+                        loss_sum += xent(row, label as usize);
+                        total += 1;
+                    }
+                }
+                Ok((loss_sum / total as f64, correct as f64 / total as f64))
+            }
+            TaskData::Pendulum { sim } => {
+                let man = &self.fwd_art.manifest;
+                let batch = man.meta_usize("batch")?;
+                let img_spec = &man.inputs[man.input_index("imgs")?];
+                let mut rng = Rng::new(0xEE11);
+                let (mut mse_sum, mut total) = (0.0f64, 0usize);
+                for _ in 0..(self.cfg.eval_pool / batch).max(1) {
+                    let mut imgs = Vec::new();
+                    let mut dts = Vec::new();
+                    let mut tgt = Vec::new();
+                    for _ in 0..batch {
+                        let ex = sim.sample(&mut rng);
+                        imgs.extend_from_slice(&ex.images);
+                        dts.extend_from_slice(&ex.dts);
+                        tgt.extend_from_slice(&ex.targets);
+                    }
+                    let il = literal_f32(&imgs, &img_spec.dims)?;
+                    let dl = literal_f32(&dts, &[batch, sim.obs_len])?;
+                    let mut refs: Vec<&Literal> = self.params.iter().collect();
+                    refs.push(&il);
+                    refs.push(&dl);
+                    let outs = self.fwd_art.run(&refs)?;
+                    let pred = to_vec_f32(&outs[0])?;
+                    for (p, t) in pred.iter().zip(tgt.iter()) {
+                        mse_sum += ((p - t) * (p - t)) as f64;
+                        total += 1;
+                    }
+                }
+                let mse = mse_sum / total as f64;
+                Ok((mse, mse))
+            }
+        }
+    }
+
+    /// Export current parameters as an npz checkpoint.
+    pub fn save_checkpoint(&self, path: &Path) -> anyhow::Result<()> {
+        let mut store = ParamStore::new();
+        let idx = self.train_art.manifest.input_group("params");
+        for (lit, &i) in self.params.iter().zip(idx.iter()) {
+            store.insert(
+                &self.train_art.manifest.inputs[i].name,
+                crate::runtime::params::clone_literal(lit)?,
+            );
+        }
+        store.save_npz(path)
+    }
+
+    /// Borrow the current parameter literals (manifest order).
+    pub fn params(&self) -> &[Literal] {
+        &self.params
+    }
+}
+
+fn argmax(row: &[f32]) -> (usize, f32) {
+    let mut best = (0usize, f32::NEG_INFINITY);
+    for (i, &v) in row.iter().enumerate() {
+        if v > best.1 {
+            best = (i, v);
+        }
+    }
+    best
+}
+
+fn xent(row: &[f32], label: usize) -> f64 {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = (row.iter().map(|&v| ((v - mx) as f64).exp()).sum::<f64>()).ln() + mx as f64;
+    lse - row[label] as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_xent() {
+        let row = [0.1f32, 2.0, -1.0];
+        assert_eq!(argmax(&row).0, 1);
+        let l = xent(&row, 1);
+        assert!(l > 0.0 && l < 1.0, "{l}");
+        // xent of the true argmax is smaller than of other labels
+        assert!(xent(&row, 1) < xent(&row, 0));
+    }
+}

@@ -1,0 +1,132 @@
+//! Batching: packs [`SeqExample`]s into the flat row-major buffers the PJRT
+//! executables expect, with epoch shuffling and deterministic streams.
+
+use crate::data::{SeqExample, TaskGen};
+use crate::rng::Rng;
+
+/// A packed batch: `x` is (B × L × d_input) row-major, `labels` is (B).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub batch_size: usize,
+}
+
+/// Pack `examples` (must all share L×d) into one flat batch, padding the
+/// tail by repeating earlier examples if fewer than `batch_size` remain.
+pub fn pack(examples: &[SeqExample], batch_size: usize, row: usize) -> Batch {
+    assert!(!examples.is_empty());
+    let mut x = Vec::with_capacity(batch_size * row);
+    let mut labels = Vec::with_capacity(batch_size);
+    for i in 0..batch_size {
+        let ex = &examples[i % examples.len()];
+        assert_eq!(ex.x.len(), row, "inconsistent example width");
+        x.extend_from_slice(&ex.x);
+        labels.push(ex.label);
+    }
+    Batch { x, labels, batch_size }
+}
+
+/// Streaming batch source over a generator task: materializes a finite
+/// epoch pool (so train/eval splits are meaningful), shuffles each epoch.
+pub struct BatchStream {
+    pool: Vec<SeqExample>,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub batch_size: usize,
+    row: usize,
+    pub epoch: usize,
+}
+
+impl BatchStream {
+    /// Generate `pool_size` examples up front from `task` with `seed`.
+    pub fn new(task: &dyn TaskGen, pool_size: usize, batch_size: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let pool: Vec<SeqExample> = (0..pool_size).map(|_| task.sample(&mut rng)).collect();
+        let mut order: Vec<usize> = (0..pool_size).collect();
+        rng.shuffle(&mut order);
+        BatchStream {
+            pool,
+            order,
+            cursor: 0,
+            rng,
+            batch_size,
+            row: task.seq_len() * task.d_input(),
+            epoch: 0,
+        }
+    }
+
+    /// Next shuffled batch; reshuffles at epoch boundaries.
+    pub fn next_batch(&mut self) -> Batch {
+        if self.cursor + self.batch_size > self.pool.len() {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let idx = &self.order[self.cursor..self.cursor + self.batch_size];
+        self.cursor += self.batch_size;
+        let examples: Vec<SeqExample> = idx.iter().map(|&i| self.pool[i].clone()).collect();
+        pack(&examples, self.batch_size, self.row)
+    }
+
+    /// Iterate the whole pool once in fixed order (evaluation).
+    pub fn eval_batches(&self) -> Vec<Batch> {
+        self.pool
+            .chunks(self.batch_size)
+            .map(|chunk| pack(chunk, self.batch_size, self.row))
+            .collect()
+    }
+
+    pub fn pool_len(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_task;
+
+    #[test]
+    fn pack_shapes_and_padding() {
+        let ex = SeqExample { x: vec![1.0, 2.0], label: 3 };
+        let b = pack(&[ex], 4, 2);
+        assert_eq!(b.x.len(), 8);
+        assert_eq!(b.labels, vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn stream_covers_pool_each_epoch() {
+        let task = make_task("smnist").unwrap();
+        let mut s = BatchStream::new(task.as_ref(), 16, 4, 9);
+        let mut n = 0;
+        let e0 = s.epoch;
+        while s.epoch == e0 {
+            let b = s.next_batch();
+            assert_eq!(b.x.len(), 4 * 784);
+            n += 1;
+            if n > 10 {
+                break;
+            }
+        }
+        assert_eq!(n, 5, "4 batches per epoch then reshuffle on the 5th");
+    }
+
+    #[test]
+    fn eval_batches_cover_pool() {
+        let task = make_task("smnist").unwrap();
+        let s = BatchStream::new(task.as_ref(), 10, 4, 10);
+        let evs = s.eval_batches();
+        assert_eq!(evs.len(), 3); // 4 + 4 + 2(padded)
+        assert!(evs.iter().all(|b| b.labels.len() == 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "inconsistent")]
+    fn pack_rejects_ragged() {
+        let a = SeqExample { x: vec![1.0, 2.0], label: 0 };
+        let b = SeqExample { x: vec![1.0], label: 0 };
+        pack(&[a, b], 2, 2);
+    }
+}

@@ -1,0 +1,216 @@
+//! ListOps: nested prefix-notation expressions (Nangia & Bowman 2018; LRA
+//! task 1). This is a *real* generator+evaluator, not a canned corpus: it
+//! samples bracketed expressions over MIN/MAX/MED/SUM-MOD with integer
+//! operands, evaluates them for the label, and one-hot tokenizes.
+//!
+//! The long-range structure is intrinsic: the value of the outermost
+//! operator depends on operands separated by the whole expression.
+
+use crate::data::{one_hot, SeqExample, TaskGen};
+use crate::rng::Rng;
+
+/// Token vocabulary: 0..=9 digits, 10..=13 operators, 14 '[', 15 ']',
+/// 16 PAD, 17 EOS — 18 tokens, matching the `listops` AOT preset d_input.
+pub const VOCAB: usize = 18;
+const OP_MIN: usize = 10;
+const OP_MAX: usize = 11;
+const OP_MED: usize = 12;
+const OP_SM: usize = 13;
+const LBRACK: usize = 14;
+const RBRACK: usize = 15;
+const PAD: usize = 16;
+const EOS: usize = 17;
+
+/// Expression tree.
+enum Expr {
+    Leaf(u8),
+    Node(usize, Vec<Expr>), // (operator token, children)
+}
+
+impl Expr {
+    fn eval(&self) -> u8 {
+        match self {
+            Expr::Leaf(v) => *v,
+            Expr::Node(op, kids) => {
+                let mut vals: Vec<u8> = kids.iter().map(|k| k.eval()).collect();
+                match *op {
+                    OP_MIN => *vals.iter().min().unwrap(),
+                    OP_MAX => *vals.iter().max().unwrap(),
+                    OP_MED => {
+                        vals.sort_unstable();
+                        vals[vals.len() / 2]
+                    }
+                    OP_SM => (vals.iter().map(|&v| v as u32).sum::<u32>() % 10) as u8,
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+
+    fn tokens(&self, out: &mut Vec<usize>) {
+        match self {
+            Expr::Leaf(v) => out.push(*v as usize),
+            Expr::Node(op, kids) => {
+                out.push(LBRACK);
+                out.push(*op);
+                for k in kids {
+                    k.tokens(out);
+                }
+                out.push(RBRACK);
+            }
+        }
+    }
+}
+
+/// The ListOps task generator.
+pub struct ListOps {
+    seq_len: usize,
+    max_depth: usize,
+    max_args: usize,
+}
+
+impl ListOps {
+    pub fn new(seq_len: usize) -> Self {
+        ListOps { seq_len, max_depth: 6, max_args: 4 }
+    }
+
+    fn gen_expr(&self, rng: &mut Rng, depth: usize, budget: &mut usize) -> Expr {
+        // every node consumes tokens; stop when the budget or depth runs out
+        if depth >= self.max_depth || *budget < 6 || rng.coin(0.35) {
+            *budget = budget.saturating_sub(1);
+            return Expr::Leaf(rng.below(10) as u8);
+        }
+        let op = OP_MIN + rng.below(4);
+        let n_args = 2 + rng.below(self.max_args - 1);
+        *budget = budget.saturating_sub(3); // [ op ]
+        let kids = (0..n_args)
+            .map(|_| self.gen_expr(rng, depth + 1, budget))
+            .collect();
+        Expr::Node(op, kids)
+    }
+}
+
+impl TaskGen for ListOps {
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn d_input(&self) -> usize {
+        VOCAB
+    }
+
+    fn classes(&self) -> usize {
+        10
+    }
+
+    fn name(&self) -> &'static str {
+        "listops"
+    }
+
+    fn sample(&self, rng: &mut Rng) -> SeqExample {
+        // sample until the tokenized expression fits (leaving room for EOS)
+        loop {
+            let mut budget = self.seq_len - 1;
+            let expr = self.gen_expr(rng, 0, &mut budget);
+            let mut toks = Vec::new();
+            expr.tokens(&mut toks);
+            if toks.len() + 1 > self.seq_len {
+                continue;
+            }
+            let label = expr.eval() as i32;
+            toks.push(EOS);
+            while toks.len() < self.seq_len {
+                toks.push(PAD);
+            }
+            let mut x = vec![0.0f32; self.seq_len * VOCAB];
+            for (k, &t) in toks.iter().enumerate() {
+                one_hot(t, VOCAB, &mut x[k * VOCAB..(k + 1) * VOCAB]);
+            }
+            return SeqExample { x, label };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn eval_known_expression() {
+        // [MAX 2 9 [MIN 4 7] 0] = 9
+        let e = Expr::Node(
+            OP_MAX,
+            vec![
+                Expr::Leaf(2),
+                Expr::Leaf(9),
+                Expr::Node(OP_MIN, vec![Expr::Leaf(4), Expr::Leaf(7)]),
+                Expr::Leaf(0),
+            ],
+        );
+        assert_eq!(e.eval(), 9);
+    }
+
+    #[test]
+    fn eval_sum_mod() {
+        let e = Expr::Node(OP_SM, vec![Expr::Leaf(7), Expr::Leaf(8)]);
+        assert_eq!(e.eval(), 5);
+    }
+
+    #[test]
+    fn eval_median() {
+        let e = Expr::Node(
+            OP_MED,
+            vec![Expr::Leaf(9), Expr::Leaf(1), Expr::Leaf(5)],
+        );
+        assert_eq!(e.eval(), 5);
+    }
+
+    #[test]
+    fn prop_samples_wellformed() {
+        let task = ListOps::new(256);
+        prop::check("listops wellformed", 50, |g| {
+            let ex = task.sample(g);
+            prop::ensure(ex.x.len() == 256 * VOCAB)?;
+            prop::ensure((0..10).contains(&ex.label))?;
+            // each row is exactly one-hot
+            for k in 0..256 {
+                let row = &ex.x[k * VOCAB..(k + 1) * VOCAB];
+                let s: f32 = row.iter().sum();
+                prop::ensure_msg((s - 1.0).abs() < 1e-6, format!("row {k} sum {s}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_brackets_balanced() {
+        let task = ListOps::new(256);
+        prop::check("listops brackets", 50, |g| {
+            let ex = task.sample(g);
+            let mut depth: i64 = 0;
+            for k in 0..256 {
+                let row = &ex.x[k * VOCAB..(k + 1) * VOCAB];
+                let tok = row.iter().position(|&v| v == 1.0).unwrap();
+                match tok {
+                    LBRACK => depth += 1,
+                    RBRACK => depth -= 1,
+                    _ => {}
+                }
+                prop::ensure(depth >= 0)?;
+            }
+            prop::ensure_msg(depth == 0, format!("unbalanced: {depth}"))
+        });
+    }
+
+    #[test]
+    fn labels_cover_many_classes() {
+        let task = ListOps::new(512);
+        let mut rng = Rng::new(42);
+        let mut seen = [false; 10];
+        for _ in 0..200 {
+            seen[task.sample(&mut rng).label as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 6, "{seen:?}");
+    }
+}

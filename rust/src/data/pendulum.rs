@@ -1,0 +1,197 @@
+//! Pendulum image regression (Becker et al. 2019 / Schirmer et al. 2022;
+//! paper §6.3, Tables 3/9, Figure 3) — simulated from scratch.
+//!
+//! A damped pendulum driven by a random torque process is integrated with
+//! RK4 on a fine grid of `total_steps`; `obs_len` frames are sampled
+//! *irregularly without replacement*; each frame is a 24×24 rendering of
+//! the bob corrupted by a temporally-correlated noise process. Targets are
+//! (sin θ, cos θ) per observation; the inter-observation intervals Δt feed
+//! the S5 layer's time-varying discretization.
+
+use crate::rng::Rng;
+
+pub const IMG_SIDE: usize = 24;
+
+/// One irregularly-sampled pendulum trajectory.
+#[derive(Clone, Debug)]
+pub struct PendulumExample {
+    /// (L × 24 × 24) noisy frames.
+    pub images: Vec<f32>,
+    /// (L) inter-observation intervals (Δt between consecutive samples).
+    pub dts: Vec<f32>,
+    /// (L × 2) regression targets (sin θ, cos θ).
+    pub targets: Vec<f32>,
+    /// (L) absolute observation times (for plotting / Figure 3).
+    pub times: Vec<f32>,
+}
+
+pub struct PendulumSim {
+    pub obs_len: usize,
+    pub total_steps: usize,
+    pub duration: f64,
+    /// correlated-noise mixing coefficient
+    noise_rho: f32,
+    noise_amp: f32,
+}
+
+impl PendulumSim {
+    /// Paper setting: T=100 fine steps' duration, L=50 observations.
+    pub fn new() -> Self {
+        PendulumSim {
+            obs_len: 50,
+            total_steps: 100,
+            duration: 10.0,
+            noise_rho: 0.8,
+            noise_amp: 0.35,
+        }
+    }
+
+    /// Integrate θ'' = −(g/ℓ)·sin θ − γθ' + τ(t) with RK4.
+    fn simulate(&self, rng: &mut Rng) -> Vec<(f64, f64)> {
+        let g_over_l = 9.81 / 1.0;
+        let gamma = 0.25;
+        let dt = self.duration / self.total_steps as f64;
+        let mut theta = rng.uniform_in(-std::f64::consts::PI, std::f64::consts::PI);
+        let mut omega = rng.uniform_in(-1.0, 1.0);
+        // Ornstein–Uhlenbeck-ish torque process
+        let mut tau = 0.0f64;
+        let mut states = Vec::with_capacity(self.total_steps);
+        for _ in 0..self.total_steps {
+            tau = 0.9 * tau + 0.6 * rng.normal();
+            let f = |th: f64, om: f64| -> (f64, f64) {
+                (om, -g_over_l * th.sin() - gamma * om + tau)
+            };
+            let (k1t, k1o) = f(theta, omega);
+            let (k2t, k2o) = f(theta + 0.5 * dt * k1t, omega + 0.5 * dt * k1o);
+            let (k3t, k3o) = f(theta + 0.5 * dt * k2t, omega + 0.5 * dt * k2o);
+            let (k4t, k4o) = f(theta + dt * k3t, omega + dt * k3o);
+            theta += dt / 6.0 * (k1t + 2.0 * k2t + 2.0 * k3t + k4t);
+            omega += dt / 6.0 * (k1o + 2.0 * k2o + 2.0 * k3o + k4o);
+            states.push((theta, omega));
+        }
+        states
+    }
+
+    /// Render the bob at angle θ into a 24×24 frame.
+    pub fn render(theta: f64) -> Vec<f32> {
+        let n = IMG_SIDE as f64;
+        let cx = n / 2.0;
+        let cy = n / 2.0;
+        let r = n * 0.36;
+        let bx = cx + r * theta.sin();
+        let by = cy + r * theta.cos();
+        let mut img = vec![0.0f32; IMG_SIDE * IMG_SIDE];
+        for row in 0..IMG_SIDE {
+            for col in 0..IMG_SIDE {
+                let dx = col as f64 - bx;
+                let dy = row as f64 - by;
+                img[row * IMG_SIDE + col] = (-(dx * dx + dy * dy) / 4.5).exp() as f32;
+            }
+        }
+        img
+    }
+
+    /// Draw one irregularly-sampled example.
+    pub fn sample(&self, rng: &mut Rng) -> PendulumExample {
+        let states = self.simulate(rng);
+        let idx = rng.choose_sorted(self.total_steps, self.obs_len);
+        let fine_dt = self.duration / self.total_steps as f64;
+
+        let mut images = Vec::with_capacity(self.obs_len * IMG_SIDE * IMG_SIDE);
+        let mut dts = Vec::with_capacity(self.obs_len);
+        let mut targets = Vec::with_capacity(self.obs_len * 2);
+        let mut times = Vec::with_capacity(self.obs_len);
+        // correlated noise field evolving across observations
+        let mut noise = vec![0.0f32; IMG_SIDE * IMG_SIDE];
+        let mut prev_t = 0usize;
+        for (i, &t) in idx.iter().enumerate() {
+            let gap = if i == 0 { t + 1 } else { t - prev_t };
+            prev_t = t;
+            dts.push(gap as f32 * fine_dt as f32);
+            times.push((t as f64 * fine_dt) as f32);
+            let (theta, _) = states[t];
+            targets.push(theta.sin() as f32);
+            targets.push(theta.cos() as f32);
+            let mut frame = Self::render(theta);
+            for (p, nz) in frame.iter_mut().zip(noise.iter_mut()) {
+                *nz = self.noise_rho * *nz
+                    + (1.0 - self.noise_rho) * (rng.normal() as f32) * 2.0;
+                *p = (*p + self.noise_amp * *nz).clamp(-1.0, 2.0);
+            }
+            images.extend_from_slice(&frame);
+        }
+        PendulumExample { images, dts, targets, times }
+    }
+}
+
+impl Default for PendulumSim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let sim = PendulumSim::new();
+        let ex = sim.sample(&mut Rng::new(0));
+        assert_eq!(ex.images.len(), 50 * 24 * 24);
+        assert_eq!(ex.dts.len(), 50);
+        assert_eq!(ex.targets.len(), 100);
+        assert_eq!(ex.times.len(), 50);
+    }
+
+    #[test]
+    fn targets_on_unit_circle() {
+        let sim = PendulumSim::new();
+        let ex = sim.sample(&mut Rng::new(1));
+        for k in 0..50 {
+            let s = ex.targets[2 * k];
+            let c = ex.targets[2 * k + 1];
+            assert!((s * s + c * c - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn intervals_positive_and_irregular() {
+        let sim = PendulumSim::new();
+        let ex = sim.sample(&mut Rng::new(2));
+        assert!(ex.dts.iter().all(|&d| d > 0.0));
+        // irregular: not all gaps equal
+        let first = ex.dts[1];
+        assert!(ex.dts[1..].iter().any(|&d| (d - first).abs() > 1e-6));
+        // times strictly increasing
+        for w in ex.times.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn bob_follows_angle() {
+        // bright pixel of the clean render moves with θ
+        let up = PendulumSim::render(0.0);
+        let down = PendulumSim::render(std::f64::consts::PI);
+        let argmax = |img: &[f32]| -> usize {
+            img.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        let up_row = argmax(&up) / IMG_SIDE;
+        let down_row = argmax(&down) / IMG_SIDE;
+        assert!(up_row > down_row, "θ=0 hangs low (row {up_row}), θ=π points up (row {down_row})");
+    }
+
+    #[test]
+    fn dynamics_stay_bounded() {
+        let sim = PendulumSim::new();
+        for seed in 0..5 {
+            let ex = sim.sample(&mut Rng::new(seed));
+            assert!(ex.images.iter().all(|v| v.is_finite()));
+        }
+    }
+}

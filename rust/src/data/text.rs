@@ -1,0 +1,126 @@
+//! Synthetic byte-level sentiment classification (LRA "Text" / IMDB stand-in).
+//!
+//! Documents are streams over a 32-token vocabulary: filler tokens plus a
+//! small set of *positive* and *negative* cue tokens planted sparsely
+//! through the document. The label is the sign of the cue majority. Because
+//! cues are rare (a handful in ~1k tokens) and can appear anywhere, the
+//! classifier must integrate evidence across the whole sequence — the same
+//! difficulty axis as character-level IMDB.
+
+use crate::data::{one_hot, SeqExample, TaskGen};
+use crate::rng::Rng;
+
+pub const VOCAB: usize = 32;
+const POS_CUES: std::ops::Range<usize> = 1..5;
+const NEG_CUES: std::ops::Range<usize> = 5..9;
+const FILLER_START: usize = 9;
+
+pub struct Sentiment {
+    seq_len: usize,
+    /// expected number of cue tokens per document
+    n_cues: usize,
+}
+
+impl Sentiment {
+    pub fn new(seq_len: usize) -> Self {
+        Sentiment { seq_len, n_cues: 9 }
+    }
+}
+
+impl TaskGen for Sentiment {
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn d_input(&self) -> usize {
+        VOCAB
+    }
+
+    fn classes(&self) -> usize {
+        2
+    }
+
+    fn name(&self) -> &'static str {
+        "text"
+    }
+
+    fn sample(&self, rng: &mut Rng) -> SeqExample {
+        let label = rng.below(2) as i32;
+        // majority cue count for the labelled polarity
+        let n_major = self.n_cues / 2 + 1 + rng.below(self.n_cues / 2);
+        let n_minor = rng.below(n_major); // strictly fewer
+        let mut toks: Vec<usize> = (0..self.seq_len)
+            .map(|_| FILLER_START + rng.below(VOCAB - FILLER_START))
+            .collect();
+        let positions = rng.choose_sorted(self.seq_len, n_major + n_minor);
+        for (i, &pos) in positions.iter().enumerate() {
+            let is_major = i < n_major;
+            let positive = (label == 1) == is_major;
+            let cue = if positive {
+                POS_CUES.start + rng.below(POS_CUES.len())
+            } else {
+                NEG_CUES.start + rng.below(NEG_CUES.len())
+            };
+            toks[pos] = cue;
+        }
+        let mut x = vec![0.0f32; self.seq_len * VOCAB];
+        for (k, &t) in toks.iter().enumerate() {
+            one_hot(t, VOCAB, &mut x[k * VOCAB..(k + 1) * VOCAB]);
+        }
+        SeqExample { x, label }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn cue_counts(ex: &SeqExample, seq_len: usize) -> (usize, usize) {
+        let (mut pos, mut neg) = (0, 0);
+        for k in 0..seq_len {
+            let row = &ex.x[k * VOCAB..(k + 1) * VOCAB];
+            let tok = row.iter().position(|&v| v == 1.0).unwrap();
+            if POS_CUES.contains(&tok) {
+                pos += 1;
+            } else if NEG_CUES.contains(&tok) {
+                neg += 1;
+            }
+        }
+        (pos, neg)
+    }
+
+    #[test]
+    fn prop_label_matches_cue_majority() {
+        let task = Sentiment::new(256);
+        prop::check("sentiment majority", 60, |g| {
+            let ex = task.sample(g);
+            let (pos, neg) = cue_counts(&ex, 256);
+            prop::ensure(pos + neg >= 1)?;
+            if ex.label == 1 {
+                prop::ensure_msg(pos > neg, format!("pos={pos} neg={neg}"))
+            } else {
+                prop::ensure_msg(neg > pos, format!("pos={pos} neg={neg}"))
+            }
+        });
+    }
+
+    #[test]
+    fn cues_are_sparse() {
+        let task = Sentiment::new(1024);
+        let mut rng = Rng::new(1);
+        let ex = task.sample(&mut rng);
+        let (pos, neg) = cue_counts(&ex, 1024);
+        assert!(pos + neg < 40, "cues should be rare, got {}", pos + neg);
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let task = Sentiment::new(128);
+        let mut rng = Rng::new(2);
+        let ones: usize = (0..400)
+            .map(|_| task.sample(&mut rng).label as usize)
+            .sum();
+        assert!((120..280).contains(&ones), "{ones}");
+    }
+}

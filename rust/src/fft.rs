@@ -1,0 +1,182 @@
+//! Iterative radix-2 FFT, from scratch.
+//!
+//! Substrate for the S4 **convolution mode** baseline (paper §2.3 and
+//! Figure 4a): the SISO SSM output is `y = k * u`, computed by padding to
+//! 2L, transforming, multiplying pointwise, and inverse-transforming —
+//! exactly the O(L log L) path whose cost Proposition 1 compares against the
+//! S5 scan.
+
+use crate::num::C64;
+
+/// In-place iterative Cooley–Tukey FFT. `xs.len()` must be a power of two.
+/// `inverse` applies the conjugate transform *without* the 1/N scale
+/// (callers that need a true inverse use [`ifft`]).
+pub fn fft_in_place(xs: &mut [C64], inverse: bool) {
+    let n = xs.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two, got {n}");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            xs.swap(i, j);
+        }
+    }
+    // butterflies
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = C64::cis(ang);
+        let mut i = 0;
+        while i < n {
+            let mut w = C64::ONE;
+            for k in 0..len / 2 {
+                let u = xs[i + k];
+                let v = xs[i + k + len / 2] * w;
+                xs[i + k] = u + v;
+                xs[i + k + len / 2] = u - v;
+                w = w * wlen;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Forward FFT (allocating).
+pub fn fft(xs: &[C64]) -> Vec<C64> {
+    let mut out = xs.to_vec();
+    fft_in_place(&mut out, false);
+    out
+}
+
+/// Inverse FFT with 1/N normalization (allocating).
+pub fn ifft(xs: &[C64]) -> Vec<C64> {
+    let mut out = xs.to_vec();
+    fft_in_place(&mut out, true);
+    let scale = 1.0 / out.len() as f64;
+    for z in &mut out {
+        *z = z.scale(scale);
+    }
+    out
+}
+
+/// Next power of two ≥ n.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Linear (causal) convolution of two real sequences truncated to
+/// `out_len`, via zero-padded FFT. This is the S4 conv-mode primitive:
+/// `y[k] = Σ_j kernel[j] · signal[k-j]`.
+pub fn conv_real(kernel: &[f64], signal: &[f64], out_len: usize) -> Vec<f64> {
+    let n = next_pow2(kernel.len() + signal.len());
+    let mut ka = vec![C64::ZERO; n];
+    let mut sa = vec![C64::ZERO; n];
+    for (i, &k) in kernel.iter().enumerate() {
+        ka[i] = C64::from_re(k);
+    }
+    for (i, &s) in signal.iter().enumerate() {
+        sa[i] = C64::from_re(s);
+    }
+    fft_in_place(&mut ka, false);
+    fft_in_place(&mut sa, false);
+    for i in 0..n {
+        ka[i] = ka[i] * sa[i];
+    }
+    fft_in_place(&mut ka, true);
+    let scale = 1.0 / n as f64;
+    (0..out_len).map(|i| ka[i].re * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut xs = vec![C64::ZERO; 8];
+        xs[0] = C64::ONE;
+        fft_in_place(&mut xs, false);
+        for z in xs {
+            assert!((z - C64::ONE).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_known_dft_of_ones() {
+        let xs = vec![C64::ONE; 4];
+        let f = fft(&xs);
+        assert!((f[0] - C64::from_re(4.0)).abs() < 1e-12);
+        for k in 1..4 {
+            assert!(f[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn prop_ifft_inverts_fft() {
+        prop::check("ifft∘fft = id", 40, |g| {
+            let n = 1 << (1 + g.below(9)); // 2..=512
+            let xs: Vec<C64> = (0..n).map(|_| C64::new(g.normal(), g.normal())).collect();
+            let back = ifft(&fft(&xs));
+            for (a, b) in xs.iter().zip(&back) {
+                prop::close_f64(a.re, b.re, 1e-9)?;
+                prop::close_f64(a.im, b.im, 1e-9)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_parseval() {
+        prop::check("parseval", 30, |g| {
+            let n = 1 << (2 + g.below(7));
+            let xs: Vec<C64> = (0..n).map(|_| C64::new(g.normal(), g.normal())).collect();
+            let f = fft(&xs);
+            let e_time: f64 = xs.iter().map(|z| z.norm_sq()).sum();
+            let e_freq: f64 = f.iter().map(|z| z.norm_sq()).sum::<f64>() / n as f64;
+            prop::close_f64(e_time, e_freq, 1e-9)
+        });
+    }
+
+    #[test]
+    fn prop_conv_matches_naive() {
+        prop::check("fft conv ≡ naive conv", 30, |g| {
+            let lk = 1 + g.below(20);
+            let ls = 1 + g.below(40);
+            let kernel: Vec<f64> = (0..lk).map(|_| g.normal()).collect();
+            let signal: Vec<f64> = (0..ls).map(|_| g.normal()).collect();
+            let out_len = ls;
+            let fast = conv_real(&kernel, &signal, out_len);
+            let mut naive = vec![0.0; out_len];
+            for k in 0..out_len {
+                for j in 0..=k.min(lk - 1) {
+                    if k - j < ls {
+                        naive[k] += kernel[j] * signal[k - j];
+                    }
+                }
+            }
+            for (a, b) in fast.iter().zip(&naive) {
+                prop::close_f64(*a, *b, 1e-8)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn fft_rejects_non_pow2() {
+        let mut xs = vec![C64::ZERO; 6];
+        fft_in_place(&mut xs, false);
+    }
+}

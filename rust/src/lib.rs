@@ -1,0 +1,55 @@
+//! # S5: Simplified State Space Layers for Sequence Modeling
+//!
+//! A production-grade reproduction of Smith, Warrington & Linderman
+//! (ICLR 2023). The crate is the **Layer-3 coordinator** of a three-layer
+//! stack (see `DESIGN.md`):
+//!
+//! * **L1** — a Pallas kernel implementing the diagonal-SSM parallel scan
+//!   (built at compile time, `python/compile/kernels/scan.py`);
+//! * **L2** — the JAX model (S5 layers, classifiers, regressors, fused
+//!   AdamW train steps) lowered once to HLO text (`python/compile/aot.py`);
+//! * **L3** — this crate: loads the AOT artifacts through the PJRT C API
+//!   (via the `xla` crate), and owns the data pipeline, training loop,
+//!   inference server, benchmarks and the paper's experiment harness.
+//!
+//! Python never runs on the request path: after `make artifacts` the `s5`
+//! binary is self-contained.
+//!
+//! The crate also carries a **pure-Rust S5/S4/S4D reference stack**
+//! ([`ssm`]) used three ways: as the parity oracle against the compiled HLO,
+//! as the subject of the runtime benchmarks (paper Table 4), and as the
+//! substrate for the parallel-scan scaling studies (paper §2.2, Appendix H).
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | logging, timing, stats, CLI parsing, table formatting |
+//! | [`rng`] | deterministic SplitMix64/PCG RNG + samplers (offline: no `rand`) |
+//! | [`num`] | complex arithmetic |
+//! | [`linalg`] | dense complex matrices, Hermitian Jacobi eigensolver |
+//! | [`fft`] | radix-2 FFT (substrate for the S4 convolution baseline) |
+//! | [`ssm`] | HiPPO init, discretization, scans, S5/S4/S4D reference impls |
+//! | [`data`] | the nine synthetic workload generators + batching |
+//! | [`runtime`] | PJRT artifact loading, manifests, param stores, engine |
+//! | [`coordinator`] | configs, trainer, LR schedules, metrics, server |
+//! | [`testing`] | mini property-testing harness (offline: no `proptest`) |
+//! | [`bench`] | shared harness for the paper-table benchmark binaries |
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod fft;
+pub mod linalg;
+pub mod num;
+pub mod rng;
+pub mod runtime;
+pub mod ssm;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default location of the AOT artifacts relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,355 @@
+//! Dense complex linear algebra from scratch.
+//!
+//! Provides the [`CMat`] dense complex matrix, matrix/vector products, and a
+//! cyclic **Jacobi eigensolver for Hermitian matrices**. The eigensolver is
+//! the substrate that lets the pure-Rust reference stack diagonalize HiPPO-N
+//! exactly the way the Python build path does (via the Hermitian matrix
+//! i·S — see `ssm::hippo`): HiPPO-N itself is *normal*, so its skew part has
+//! an orthonormal eigenbasis and Jacobi converges quadratically.
+
+use crate::num::C64;
+
+/// Dense row-major complex matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<C64>,
+}
+
+impl CMat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        CMat { rows, cols, data: vec![C64::ZERO; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = CMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = C64::ONE;
+        }
+        m
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> C64) -> Self {
+        let mut m = CMat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build a real matrix (imaginary parts zero).
+    pub fn from_real(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        CMat {
+            rows,
+            cols,
+            data: data.iter().map(|&x| C64::from_re(x)).collect(),
+        }
+    }
+
+    /// Conjugate transpose Aᴴ.
+    pub fn hermitian_t(&self) -> CMat {
+        CMat::from_fn(self.cols, self.rows, |i, j| self[(j, i)].conj())
+    }
+
+    /// Matrix product A·B.
+    pub fn matmul(&self, other: &CMat) -> CMat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = CMat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == C64::ZERO {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product A·x.
+    pub fn matvec(&self, x: &[C64]) -> Vec<C64> {
+        assert_eq!(self.cols, x.len());
+        let mut out = vec![C64::ZERO; self.rows];
+        for i in 0..self.rows {
+            let mut acc = C64::ZERO;
+            for j in 0..self.cols {
+                acc += self[(i, j)] * x[j];
+            }
+            out[i] = acc;
+        }
+        out
+    }
+
+    /// Scale all entries.
+    pub fn scale(&self, s: C64) -> CMat {
+        CMat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&z| z * s).collect(),
+        }
+    }
+
+    /// Elementwise sum.
+    pub fn add(&self, other: &CMat) -> CMat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        CMat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| a + b)
+                .collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|z| z.norm_sq()).sum::<f64>().sqrt()
+    }
+
+    /// Largest |A - Aᴴ| entry — hermitian defect.
+    pub fn hermitian_defect(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        let mut d = 0.0f64;
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                d = d.max((self[(i, j)] - self[(j, i)].conj()).abs());
+            }
+        }
+        d
+    }
+
+    /// Extract a column.
+    pub fn col(&self, j: usize) -> Vec<C64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for CMat {
+    type Output = C64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &C64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for CMat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut C64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Eigendecomposition result of a Hermitian matrix: `a = V · diag(w) · Vᴴ`
+/// with real eigenvalues `w` (ascending) and unitary `V` (columns are
+/// eigenvectors).
+#[derive(Clone, Debug)]
+pub struct HermitianEig {
+    pub eigenvalues: Vec<f64>,
+    pub vectors: CMat,
+}
+
+/// Cyclic Jacobi eigensolver for Hermitian matrices.
+///
+/// Repeatedly annihilates the largest-magnitude off-diagonal entry with a
+/// complex Givens rotation until the off-diagonal Frobenius mass is below
+/// `tol · ‖A‖`. Quadratically convergent; O(n³) per sweep, fine for the
+/// state sizes used in SSM initialization (P ≤ a few hundred).
+pub fn eigh(a: &CMat, tol: f64) -> HermitianEig {
+    assert_eq!(a.rows, a.cols, "eigh needs a square matrix");
+    let n = a.rows;
+    assert!(
+        a.hermitian_defect() < 1e-9 * (1.0 + a.fro_norm()),
+        "matrix is not Hermitian"
+    );
+    let mut m = a.clone();
+    let mut v = CMat::eye(n);
+    let norm = a.fro_norm().max(1e-300);
+
+    let off = |m: &CMat| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    s += m[(i, j)].norm_sq();
+                }
+            }
+        }
+        s.sqrt()
+    };
+
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        if off(&m) <= tol * norm {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= tol * norm / (n as f64) {
+                    continue;
+                }
+                // Unitary 2x2 rotation zeroing entry (p,q) of the Hermitian
+                // submatrix [[α, β],[β̄, γ]] with β = |β|e^{iφ}:
+                // phase-factor β out (T = diag(1, e^{-iφ}) makes it real),
+                // then a real Jacobi rotation with tan 2θ = 2|β|/(γ−α).
+                // Combined U = T·R has columns
+                //   U[:,p] = [c, −s·e^{−iφ}]ᵀ,  U[:,q] = [s, c·e^{−iφ}]ᵀ.
+                let alpha = m[(p, p)].re;
+                let gamma = m[(q, q)].re;
+                let abs_b = apq.abs();
+                let phase = apq.scale(1.0 / abs_b); // e^{iφ}
+                let theta = 0.5 * (2.0 * abs_b).atan2(gamma - alpha);
+                let (c, s) = (theta.cos(), theta.sin());
+                let se_m = phase.conj().scale(s); // s·e^{−iφ}
+                let ce_m = phase.conj().scale(c); // c·e^{−iφ}
+                let se_p = phase.scale(s); // s·e^{+iφ}
+                let ce_p = phase.scale(c); // c·e^{+iφ}
+                // rows (U^H M): row_p' = c·row_p − s·e^{iφ}·row_q,
+                //               row_q' = s·row_p + c·e^{iφ}·row_q
+                for j in 0..n {
+                    let mpj = m[(p, j)];
+                    let mqj = m[(q, j)];
+                    m[(p, j)] = mpj.scale(c) - se_p * mqj;
+                    m[(q, j)] = mpj.scale(s) + ce_p * mqj;
+                }
+                // cols (M U): col_p' = c·col_p − s·e^{−iφ}·col_q,
+                //             col_q' = s·col_p + c·e^{−iφ}·col_q
+                for i in 0..n {
+                    let mip = m[(i, p)];
+                    let miq = m[(i, q)];
+                    m[(i, p)] = mip.scale(c) - se_m * miq;
+                    m[(i, q)] = mip.scale(s) + ce_m * miq;
+                }
+                // accumulate eigenvectors: V ← V·U (columns like cols of M)
+                for i in 0..n {
+                    let vip = v[(i, p)];
+                    let viq = v[(i, q)];
+                    v[(i, p)] = vip.scale(c) - se_m * viq;
+                    v[(i, q)] = vip.scale(s) + ce_m * viq;
+                }
+            }
+        }
+    }
+
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)].re, i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let eigenvalues: Vec<f64> = pairs.iter().map(|&(w, _)| w).collect();
+    let vectors = CMat::from_fn(n, n, |i, j| v[(i, pairs[j].1)]);
+    HermitianEig { eigenvalues, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::prop;
+
+    fn rand_hermitian(g: &mut Rng, n: usize) -> CMat {
+        let mut a = CMat::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = C64::from_re(g.normal());
+            for j in (i + 1)..n {
+                let z = C64::new(g.normal(), g.normal());
+                a[(i, j)] = z;
+                a[(j, i)] = z.conj();
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut g = Rng::new(0);
+        let a = CMat::from_fn(4, 4, |_, _| C64::new(g.normal(), g.normal()));
+        let i = CMat::eye(4);
+        let prod = a.matmul(&i);
+        assert!((prod.fro_norm() - a.fro_norm()).abs() < 1e-12);
+        for k in 0..16 {
+            assert!((prod.data[k] - a.data[k]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hermitian_t_involution() {
+        let mut g = Rng::new(1);
+        let a = CMat::from_fn(3, 5, |_, _| C64::new(g.normal(), g.normal()));
+        let b = a.hermitian_t().hermitian_t();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn eigh_diagonal_matrix() {
+        let mut a = CMat::zeros(3, 3);
+        a[(0, 0)] = C64::from_re(3.0);
+        a[(1, 1)] = C64::from_re(-1.0);
+        a[(2, 2)] = C64::from_re(2.0);
+        let e = eigh(&a, 1e-12);
+        assert_eq!(e.eigenvalues.len(), 3);
+        assert!((e.eigenvalues[0] + 1.0).abs() < 1e-10);
+        assert!((e.eigenvalues[2] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn prop_eigh_reconstructs() {
+        prop::check("eigh reconstruction", 25, |g| {
+            let n = 2 + g.below(8);
+            let a = rand_hermitian(g, n);
+            let e = eigh(&a, 1e-12);
+            // V diag(w) V^H == A
+            let mut vd = e.vectors.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    vd[(i, j)] = vd[(i, j)].scale(e.eigenvalues[j]);
+                }
+            }
+            let rec = vd.matmul(&e.vectors.hermitian_t());
+            let err = rec.add(&a.scale(-C64::ONE)).fro_norm() / (1.0 + a.fro_norm());
+            prop::ensure_msg(err < 1e-8, format!("reconstruction err {err}"))
+        });
+    }
+
+    #[test]
+    fn prop_eigh_vectors_unitary() {
+        prop::check("eigh unitarity", 25, |g| {
+            let n = 2 + g.below(8);
+            let a = rand_hermitian(g, n);
+            let e = eigh(&a, 1e-12);
+            let gram = e.vectors.hermitian_t().matmul(&e.vectors);
+            let err = gram.add(&CMat::eye(n).scale(-C64::ONE)).fro_norm();
+            prop::ensure_msg(err < 1e-8, format!("unitarity err {err}"))
+        });
+    }
+
+    #[test]
+    fn prop_eigenvalues_match_trace() {
+        prop::check("eig trace", 25, |g| {
+            let n = 2 + g.below(8);
+            let a = rand_hermitian(g, n);
+            let e = eigh(&a, 1e-12);
+            let tr: f64 = (0..n).map(|i| a[(i, i)].re).sum();
+            let sum: f64 = e.eigenvalues.iter().sum();
+            prop::close_f64(tr, sum, 1e-8)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "not Hermitian")]
+    fn eigh_rejects_non_hermitian() {
+        let mut a = CMat::zeros(2, 2);
+        a[(0, 1)] = C64::ONE;
+        eigh(&a, 1e-10);
+    }
+}

@@ -1,0 +1,248 @@
+//! `s5` — the Layer-3 coordinator CLI.
+//!
+//! ```text
+//! s5 train --preset smnist --steps 300 [--lr 4e-3] [--checkpoint out.npz]
+//! s5 eval  --preset smnist --checkpoint out.npz [--timescale 2.0]
+//! s5 serve --preset smnist [--checkpoint out.npz] [--requests 64]
+//! s5 data  --task listops [--n 3]        # inspect generator output
+//! s5 info  [--artifacts artifacts]       # list compiled artifacts
+//! ```
+
+use anyhow::{bail, Context};
+use s5::coordinator::server::{InferenceServer, ServerConfig};
+use s5::coordinator::{TrainConfig, Trainer};
+use s5::data::make_task;
+use s5::rng::Rng;
+use s5::runtime::{Client, Manifest};
+use s5::util::{Args, Table};
+use s5::{info, ARTIFACTS_DIR};
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    if args.has_flag("verbose") {
+        s5::util::set_verbose(true);
+    }
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "data" => cmd_data(&args),
+        "info" => cmd_info(&args),
+        "sweep" => cmd_sweep(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "s5 — Simplified State Space Layers (S5) coordinator\n\n\
+         USAGE: s5 <train|eval|serve|data|info> [--key value]...\n\n\
+         train  --preset <p> --steps N [--lr F --wd F --seed N --checkpoint F --metrics F]\n\
+         eval   --preset <p> [--checkpoint F --timescale F]\n\
+         serve  --preset <p> [--checkpoint F --requests N --max-wait-ms N]\n\
+         data   --task <t> [--n N] [--dump DIR]\n\
+         sweep  --preset <p> --lrs 1e-3,3e-3 [--wds ...] [--seeds ...] [--steps N]\n\
+         info   [--artifacts DIR]\n\n\
+         Presets: quickstart smnist listops text retrieval image pathfinder\n\
+         pathx speech pendulum abl5_* abl6_*  (see python/compile/aot.py)"
+    );
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::for_preset(&args.get_or("preset", "smnist"));
+    if let Some(f) = args.get("config") {
+        cfg.apply_file(Path::new(f))?;
+    }
+    cfg.apply_args(args);
+    let client = Client::cpu()?;
+    let mut trainer = Trainer::new(&client, cfg)?;
+    trainer.run()?;
+    let (eloss, emetric) = trainer.evaluate()?;
+    info!("final eval: loss={eloss:.4} metric={emetric:.4}");
+    println!("final_eval_loss {eloss:.6}");
+    println!("final_eval_metric {emetric:.6}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::for_preset(&args.get_or("preset", "smnist"));
+    cfg.apply_args(args);
+    cfg.steps = 0;
+    let client = Client::cpu()?;
+    let mut trainer = Trainer::new(&client, cfg)?;
+    let ts = args.get_f64("timescale", 1.0) as f32;
+    let (loss, metric) = trainer.evaluate_with_timescale(ts)?;
+    println!("eval_loss {loss:.6}\neval_metric {metric:.6}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let preset = args.get_or("preset", "smnist");
+    let artifacts = args.get_or("artifacts", ARTIFACTS_DIR);
+    let checkpoint = args.get("checkpoint").map(Path::new);
+    let n_requests = args.get_usize("requests", 64);
+    let max_wait = std::time::Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64);
+
+    let server = InferenceServer::start(
+        Path::new(&artifacts),
+        &preset,
+        checkpoint,
+        ServerConfig { max_wait },
+    )?;
+    let handle = server.handle();
+    let task = make_task(&preset).context("no generator for preset")?;
+    info!("server up; firing {n_requests} concurrent requests");
+
+    let t0 = std::time::Instant::now();
+    let lat: Vec<f64> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for i in 0..n_requests {
+            let h = handle.clone();
+            let task = &task;
+            joins.push(s.spawn(move || {
+                let mut rng = Rng::new(i as u64);
+                let ex = task.sample(&mut rng);
+                let resp = h.infer(ex.x).expect("infer");
+                resp.total_secs
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = s5::util::Stats::from(&lat);
+    println!(
+        "served {n_requests} requests in {wall:.3}s  ({:.1} req/s)\n\
+         latency p50={:.1}ms p95={:.1}ms  mean batch fill={:.2}",
+        n_requests as f64 / wall,
+        stats.p50 * 1e3,
+        stats.p95 * 1e3,
+        server.stats.mean_batch_fill()
+    );
+    Ok(())
+}
+
+fn cmd_data(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("task", "listops");
+    let n = args.get_usize("n", 3);
+    let task = make_task(&name).with_context(|| format!("unknown task {name:?}"))?;
+    let mut rng = Rng::new(args.get_usize("seed", 0) as u64);
+    println!(
+        "task={} L={} d_input={} classes={}",
+        task.name(),
+        task.seq_len(),
+        task.d_input(),
+        task.classes()
+    );
+    let dump = args.get("dump").map(std::path::PathBuf::from);
+    if let Some(d) = &dump {
+        std::fs::create_dir_all(d)?;
+    }
+    for i in 0..n {
+        let ex = task.sample(&mut rng);
+        let mean: f32 = ex.x.iter().sum::<f32>() / ex.x.len() as f32;
+        let nz = ex.x.iter().filter(|&&v| v != 0.0).count();
+        println!(
+            "  sample {i}: label={} mean={mean:.4} nonzero={nz}/{}",
+            ex.label,
+            ex.x.len()
+        );
+        if let Some(d) = &dump {
+            // image-shaped tasks dump as PGM for visual inspection
+            let side = (task.seq_len() as f64).sqrt() as usize;
+            if side * side == task.seq_len() && task.d_input() == 1 {
+                let path = d.join(format!("{}_{i}_label{}.pgm", task.name(), ex.label));
+                s5::util::pgm::write_pgm(&path, &ex.x, side, side)?;
+                println!("    wrote {}", path.display());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    use s5::coordinator::sweep::{Axis, Grid, SweepResults};
+    let mut base = TrainConfig::for_preset(&args.get_or("preset", "smnist"));
+    base.steps = args.get_usize("steps", 30);
+    base.train_pool = args.get_usize("train-pool", 128);
+    base.eval_pool = args.get_usize("eval-pool", 48);
+    base.eval_every = 0;
+    let parse_f64s = |key: &str| -> Option<Vec<f64>> {
+        args.get(key)
+            .map(|v| v.split(',').map(|x| x.parse().expect(key)).collect())
+    };
+    let mut grid = Grid::new(base);
+    if let Some(lrs) = parse_f64s("lrs") {
+        grid = grid.axis(Axis::Lr(lrs));
+    }
+    if let Some(wds) = parse_f64s("wds") {
+        grid = grid.axis(Axis::WeightDecay(wds));
+    }
+    if let Some(seeds) = args.get("seeds") {
+        grid = grid.axis(Axis::Seed(
+            seeds.split(',').map(|x| x.parse().expect("seeds")).collect(),
+        ));
+    }
+    if grid.axes.is_empty() {
+        grid = grid.axis(Axis::Lr(vec![1e-3, 3e-3, 6e-3]));
+    }
+    let runs = grid.expand();
+    info!("sweep: {} runs of {} steps each", runs.len(), grid.base.steps);
+    let client = Client::cpu()?;
+    let mut results = SweepResults::default();
+    for (label, cfg) in runs {
+        let steps = cfg.steps;
+        let mut trainer = Trainer::new(&client, cfg)?;
+        for _ in 0..steps {
+            trainer.train_step()?;
+        }
+        let (loss, metric) = trainer.evaluate()?;
+        info!("  {label}: loss={loss:.4} metric={metric:.4}");
+        results.push(label, loss, metric);
+    }
+    print!("{}", results.render());
+    if let Some((label, loss, metric)) = results.best_by_metric() {
+        println!("best: {label} (loss={loss:.4}, metric={metric:.4})");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", ARTIFACTS_DIR);
+    let dir = Path::new(&dir);
+    if !dir.exists() {
+        bail!("artifacts directory {dir:?} missing — run `make artifacts`");
+    }
+    let mut t = Table::new(&["artifact", "kind", "inputs", "outputs", "hlo bytes"]);
+    let mut names: Vec<String> = std::fs::read_dir(dir)?
+        .filter_map(|e| {
+            let p = e.ok()?.path();
+            let s = p.file_name()?.to_string_lossy().to_string();
+            s.strip_suffix(".manifest.txt").map(|x| x.to_string())
+        })
+        .collect();
+    names.sort();
+    for name in names {
+        let m = Manifest::load(&dir.join(format!("{name}.manifest.txt")))?;
+        let hlo = std::fs::metadata(dir.join(format!("{name}.hlo.txt")))
+            .map(|md| md.len())
+            .unwrap_or(0);
+        t.row(&[
+            name,
+            m.kind.clone(),
+            m.inputs.len().to_string(),
+            m.outputs.len().to_string(),
+            hlo.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,271 @@
+//! Complex arithmetic from scratch (the offline build has no `num-complex`).
+//!
+//! [`C64`] (f64 parts) is used by the initialization/linear-algebra path and
+//! the reference SSM implementations; [`C32`] (f32 parts) mirrors the planar
+//! layout the L1 Pallas kernel uses and is the element type of the
+//! performance-critical scan loops.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub};
+
+/// Complex number with `f64` components.
+#[derive(Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+/// Complex number with `f32` components (planar-kernel element type).
+#[derive(Clone, Copy, PartialEq, Default)]
+pub struct C32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+macro_rules! impl_complex {
+    ($name:ident, $t:ty) => {
+        impl $name {
+            pub const ZERO: $name = $name { re: 0.0, im: 0.0 };
+            pub const ONE: $name = $name { re: 1.0, im: 0.0 };
+            pub const I: $name = $name { re: 0.0, im: 1.0 };
+
+            #[inline]
+            pub fn new(re: $t, im: $t) -> Self {
+                Self { re, im }
+            }
+
+            #[inline]
+            pub fn from_re(re: $t) -> Self {
+                Self { re, im: 0.0 }
+            }
+
+            /// Complex conjugate.
+            #[inline]
+            pub fn conj(self) -> Self {
+                Self { re: self.re, im: -self.im }
+            }
+
+            /// Squared magnitude |z|².
+            #[inline]
+            pub fn norm_sq(self) -> $t {
+                self.re * self.re + self.im * self.im
+            }
+
+            /// Magnitude |z|.
+            #[inline]
+            pub fn abs(self) -> $t {
+                self.norm_sq().sqrt()
+            }
+
+            /// Argument in (-π, π].
+            #[inline]
+            pub fn arg(self) -> $t {
+                self.im.atan2(self.re)
+            }
+
+            /// Complex exponential e^z.
+            #[inline]
+            pub fn exp(self) -> Self {
+                let r = self.re.exp();
+                Self { re: r * self.im.cos(), im: r * self.im.sin() }
+            }
+
+            /// Multiplicative inverse 1/z.
+            #[inline]
+            pub fn inv(self) -> Self {
+                let d = self.norm_sq();
+                Self { re: self.re / d, im: -self.im / d }
+            }
+
+            /// Scale by a real factor.
+            #[inline]
+            pub fn scale(self, s: $t) -> Self {
+                Self { re: self.re * s, im: self.im * s }
+            }
+
+            /// e^{iθ} on the unit circle.
+            #[inline]
+            pub fn cis(theta: $t) -> Self {
+                Self { re: theta.cos(), im: theta.sin() }
+            }
+
+            /// Integer power by repeated squaring.
+            pub fn powi(self, mut n: u32) -> Self {
+                let mut base = self;
+                let mut acc = Self::ONE;
+                while n > 0 {
+                    if n & 1 == 1 {
+                        acc = acc * base;
+                    }
+                    base = base * base;
+                    n >>= 1;
+                }
+                acc
+            }
+
+            /// True if both components are finite.
+            #[inline]
+            pub fn is_finite(self) -> bool {
+                self.re.is_finite() && self.im.is_finite()
+            }
+        }
+
+        impl Add for $name {
+            type Output = $name;
+            #[inline]
+            fn add(self, o: $name) -> $name {
+                $name { re: self.re + o.re, im: self.im + o.im }
+            }
+        }
+
+        impl Sub for $name {
+            type Output = $name;
+            #[inline]
+            fn sub(self, o: $name) -> $name {
+                $name { re: self.re - o.re, im: self.im - o.im }
+            }
+        }
+
+        impl Mul for $name {
+            type Output = $name;
+            #[inline]
+            fn mul(self, o: $name) -> $name {
+                $name {
+                    re: self.re * o.re - self.im * o.im,
+                    im: self.re * o.im + self.im * o.re,
+                }
+            }
+        }
+
+        impl Div for $name {
+            type Output = $name;
+            #[inline]
+            fn div(self, o: $name) -> $name {
+                self * o.inv()
+            }
+        }
+
+        impl Neg for $name {
+            type Output = $name;
+            #[inline]
+            fn neg(self) -> $name {
+                $name { re: -self.re, im: -self.im }
+            }
+        }
+
+        impl AddAssign for $name {
+            #[inline]
+            fn add_assign(&mut self, o: $name) {
+                self.re += o.re;
+                self.im += o.im;
+            }
+        }
+
+        impl MulAssign for $name {
+            #[inline]
+            fn mul_assign(&mut self, o: $name) {
+                *self = *self * o;
+            }
+        }
+
+        impl fmt::Debug for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                if self.im >= 0.0 {
+                    write!(f, "{:.6}+{:.6}i", self.re, self.im)
+                } else {
+                    write!(f, "{:.6}-{:.6}i", self.re, -self.im)
+                }
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                fmt::Debug::fmt(self, f)
+            }
+        }
+    };
+}
+
+impl_complex!(C64, f64);
+impl_complex!(C32, f32);
+
+impl C64 {
+    /// Downcast to f32 components.
+    #[inline]
+    pub fn to_c32(self) -> C32 {
+        C32 { re: self.re as f32, im: self.im as f32 }
+    }
+}
+
+impl C32 {
+    /// Upcast to f64 components.
+    #[inline]
+    pub fn to_c64(self) -> C64 {
+        C64 { re: self.re as f64, im: self.im as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn close(a: C64, b: C64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn basics() {
+        let a = C64::new(3.0, 4.0);
+        assert_eq!(a.abs(), 5.0);
+        assert_eq!(a.conj().im, -4.0);
+        assert!(close(a * a.inv(), C64::ONE, 1e-12));
+        assert!(close(C64::I * C64::I, -C64::ONE, 1e-15));
+    }
+
+    #[test]
+    fn exp_of_zero_and_i_pi() {
+        assert!(close(C64::ZERO.exp(), C64::ONE, 1e-15));
+        let e = C64::new(0.0, std::f64::consts::PI).exp();
+        assert!(close(e, -C64::ONE, 1e-12));
+    }
+
+    #[test]
+    fn prop_mul_commutes_and_associates() {
+        prop::check("c64 mul", 200, |g| {
+            let a = C64::new(g.normal(), g.normal());
+            let b = C64::new(g.normal(), g.normal());
+            let c = C64::new(g.normal(), g.normal());
+            prop::ensure(close(a * b, b * a, 1e-12))?;
+            prop::ensure(close((a * b) * c, a * (b * c), 1e-10))
+        });
+    }
+
+    #[test]
+    fn prop_exp_homomorphism() {
+        prop::check("exp(a+b)=exp(a)exp(b)", 200, |g| {
+            let a = C64::new(g.uniform_in(-2.0, 2.0), g.uniform_in(-3.0, 3.0));
+            let b = C64::new(g.uniform_in(-2.0, 2.0), g.uniform_in(-3.0, 3.0));
+            prop::ensure(close((a + b).exp(), a.exp() * b.exp(), 1e-10))
+        });
+    }
+
+    #[test]
+    fn prop_powi_matches_repeated_mul() {
+        prop::check("powi", 100, |g| {
+            let a = C64::cis(g.uniform_in(0.0, 6.28)).scale(0.9);
+            let n = g.below(12) as u32;
+            let mut want = C64::ONE;
+            for _ in 0..n {
+                want = want * a;
+            }
+            prop::ensure(close(a.powi(n), want, 1e-10))
+        });
+    }
+
+    #[test]
+    fn conversions_roundtrip() {
+        let a = C64::new(1.25, -0.5); // exactly representable in f32
+        assert_eq!(a.to_c32().to_c64(), a);
+    }
+}

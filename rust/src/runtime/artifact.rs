@@ -1,0 +1,147 @@
+//! Compiled artifact: HLO text → PJRT executable, plus execution helpers.
+
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::manifest::Manifest;
+
+/// Shared PJRT client handle.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<PjRtClient>,
+}
+
+impl Client {
+    /// Create the CPU PJRT client (the testbed backend, see DESIGN.md
+    /// §Hardware-Adaptation).
+    pub fn cpu() -> anyhow::Result<Client> {
+        let c = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::debug!(
+            "PJRT client: platform={} devices={}",
+            c.platform_name(),
+            c.device_count()
+        );
+        Ok(Client { inner: Arc::new(c) })
+    }
+
+    pub fn raw(&self) -> &PjRtClient {
+        &self.inner
+    }
+}
+
+/// A loaded, compiled AOT artifact (one lowered jit function).
+pub struct Artifact {
+    pub manifest: Manifest,
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Artifact {
+    /// Load `<dir>/<name>.hlo.txt` + manifest and compile on `client`.
+    ///
+    /// HLO **text** is required (not a serialized proto): jax ≥ 0.5 emits
+    /// 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+    /// parser reassigns ids.
+    pub fn load(dir: &Path, name: &str, client: &Client) -> anyhow::Result<Artifact> {
+        let hlo_path = dir.join(format!("{name}.hlo.txt"));
+        let man_path = dir.join(format!("{name}.manifest.txt"));
+        let manifest = Manifest::load(&man_path)?;
+        let t = crate::util::Timer::start();
+        let proto = HloModuleProto::from_text_file(&hlo_path)
+            .with_context(|| format!("parsing HLO text {hlo_path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client
+            .raw()
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        crate::debug!("compiled {name} in {:.2}s", t.secs());
+        Ok(Artifact { manifest, exe, name: name.to_string() })
+    }
+
+    /// Path of the npz of initial parameters for a preset.
+    pub fn init_npz_path(dir: &Path, preset: &str) -> PathBuf {
+        dir.join(format!("{preset}_init.npz"))
+    }
+
+    /// Execute with ordered inputs; returns the flattened output tuple.
+    /// Accepts owned literals or references (the trainer passes refs to its
+    /// long-lived parameter literals to avoid host copies).
+    pub fn run<L: std::borrow::Borrow<Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> anyhow::Result<Vec<Literal>> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest wants {}",
+                self.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        let bufs = self.exe.execute::<L>(inputs)?;
+        let result = bufs[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest declares {}",
+                self.name,
+                outs.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Number of parameters (by manifest group).
+    pub fn n_param_inputs(&self) -> usize {
+        self.manifest.input_group("params").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::params::{literal_f32, to_vec_f32, ParamStore};
+    use std::collections::BTreeMap;
+
+    fn artifacts_dir() -> Option<&'static Path> {
+        let p = Path::new(crate::ARTIFACTS_DIR);
+        if p.join("quickstart_fwd.hlo.txt").exists() {
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn quickstart_layer_executes() {
+        let Some(dir) = artifacts_dir() else { return };
+        let client = Client::cpu().unwrap();
+        let art = Artifact::load(dir, "quickstart_fwd", &client).unwrap();
+        assert_eq!(art.manifest.kind, "layer");
+        let store = ParamStore::load_npz(&Artifact::init_npz_path(dir, "quickstart")).unwrap();
+        let (l, h) = (128usize, 8usize);
+        let mut extra = BTreeMap::new();
+        extra.insert(
+            "u".to_string(),
+            literal_f32(&vec![0.1; l * h], &[l, h]).unwrap(),
+        );
+        let inputs =
+            crate::runtime::params::assemble_inputs(&art.manifest, &store, &mut extra).unwrap();
+        let outs = art.run(&inputs).unwrap();
+        assert_eq!(outs.len(), 1);
+        let y = to_vec_f32(&outs[0]).unwrap();
+        assert_eq!(y.len(), l * h);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn run_rejects_wrong_arity() {
+        let Some(dir) = artifacts_dir() else { return };
+        let client = Client::cpu().unwrap();
+        let art = Artifact::load(dir, "quickstart_fwd", &client).unwrap();
+        assert!(art.run::<Literal>(&[]).is_err());
+    }
+}

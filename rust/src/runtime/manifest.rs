@@ -1,0 +1,218 @@
+//! Artifact manifests: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! A manifest pins the *flattened argument order* of the lowered jit
+//! function (HLO parameter i ↔ `input i <name> <dtype> <dims>`), the output
+//! tuple layout, and the model hyperparameters (`meta` lines). The runtime
+//! refuses to execute with mismatched shapes, which turns silent
+//! misalignment into loud errors.
+
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Element type of a tensor crossing the boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> anyhow::Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("unknown dtype tag {other:?}"),
+        })
+    }
+}
+
+/// One input or output tensor slot.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub index: usize,
+    pub name: String,
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elem_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// Parsed manifest for one artifact graph.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifact: String,
+    pub kind: String,
+    pub meta: BTreeMap<String, String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn parse_dims(s: &str) -> anyhow::Result<Vec<usize>> {
+    if s == "-" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+impl Manifest {
+    /// Parse `<name>.manifest.txt`.
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let mut artifact = String::new();
+        let mut kind = String::new();
+        let mut meta = BTreeMap::new();
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.is_empty() {
+                continue;
+            }
+            match parts[0] {
+                "artifact" => artifact = parts[1].to_string(),
+                "kind" => kind = parts[1].to_string(),
+                "meta" => {
+                    if parts.len() >= 3 {
+                        meta.insert(parts[1].to_string(), parts[2..].join(" "));
+                    }
+                }
+                "input" | "output" => {
+                    if parts.len() != 5 {
+                        bail!("line {}: malformed tensor line: {line:?}", ln + 1);
+                    }
+                    let spec = TensorSpec {
+                        index: parts[1].parse()?,
+                        name: parts[2].to_string(),
+                        dtype: Dtype::parse(parts[3])?,
+                        dims: parse_dims(parts[4])?,
+                    };
+                    if parts[0] == "input" {
+                        inputs.push(spec);
+                    } else {
+                        outputs.push(spec);
+                    }
+                }
+                other => bail!("line {}: unknown directive {other:?}", ln + 1),
+            }
+        }
+        if artifact.is_empty() {
+            bail!("manifest missing 'artifact' line");
+        }
+        // argument order must be dense and sorted
+        for (i, spec) in inputs.iter().enumerate() {
+            if spec.index != i {
+                bail!("input order corrupt at {i}: got index {}", spec.index);
+            }
+        }
+        Ok(Manifest { artifact, kind, meta, inputs, outputs })
+    }
+
+    /// Integer meta lookup.
+    pub fn meta_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.meta
+            .get(key)
+            .with_context(|| format!("meta key {key:?} missing"))?
+            .parse()
+            .with_context(|| format!("meta key {key:?} not an integer"))
+    }
+
+    /// Input index by exact name.
+    pub fn input_index(&self, name: &str) -> anyhow::Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("no input named {name:?} in {}", self.artifact))
+    }
+
+    /// Indices of inputs whose name starts with `prefix.` (e.g. "params").
+    pub fn input_group(&self, prefix: &str) -> Vec<usize> {
+        let pat = format!("{prefix}.");
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.name.starts_with(&pat))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Output index by exact name.
+    pub fn output_index(&self, name: &str) -> anyhow::Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("no output named {name:?} in {}", self.artifact))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "artifact tiny_train\nkind classifier\nmeta classes 3\nmeta h 8\ninput 0 params.encoder.bias f32 8\ninput 1 lr f32 -\ninput 2 y i32 2\noutput 0 out.0 f32 8\noutput 1 out.3 f32 -\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifact, "tiny_train");
+        assert_eq!(m.kind, "classifier");
+        assert_eq!(m.meta_usize("classes").unwrap(), 3);
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.inputs[1].dims, Vec::<usize>::new());
+        assert_eq!(m.inputs[2].dtype, Dtype::I32);
+        assert_eq!(m.input_index("lr").unwrap(), 1);
+        assert_eq!(m.input_group("params"), vec![0]);
+        assert_eq!(m.output_index("out.3").unwrap(), 1);
+    }
+
+    #[test]
+    fn scalar_dims_elem_count() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.inputs[1].elem_count(), 1);
+        assert_eq!(m.inputs[0].elem_count(), 8);
+    }
+
+    #[test]
+    fn rejects_out_of_order_inputs() {
+        let bad = "artifact a\nkind k\ninput 1 x f32 2\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_directive() {
+        assert!(Manifest::parse("artifact a\nbogus z\n").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifact() {
+        assert!(Manifest::parse("kind k\n").is_err());
+    }
+
+    #[test]
+    fn real_artifact_manifests_parse() {
+        // integration with the actual build output when present
+        let dir = std::path::Path::new(crate::ARTIFACTS_DIR);
+        if !dir.exists() {
+            return;
+        }
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.to_string_lossy().ends_with(".manifest.txt") {
+                let m = Manifest::load(&p).unwrap_or_else(|e| panic!("{p:?}: {e}"));
+                assert!(!m.inputs.is_empty(), "{p:?}");
+            }
+        }
+    }
+}

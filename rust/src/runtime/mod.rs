@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute the AOT artifacts.
+//!
+//! The compile path (`make artifacts`) leaves, per preset:
+//!   `<p>_{fwd,train}.hlo.txt`, `<p>_{fwd,train}.manifest.txt`,
+//!   `<p>_init.npz`.
+//!
+//! [`manifest`] parses the argument-order manifests, [`artifact`] compiles
+//! the HLO text on the PJRT CPU client and runs it, [`params`] manages the
+//! named parameter store (npz in, npz out for checkpoints). HLO **text** is
+//! the interchange format — see DESIGN.md and /opt/xla-example/README.md.
+
+pub mod artifact;
+pub mod manifest;
+pub mod params;
+
+pub use artifact::{Artifact, Client};
+pub use manifest::{Dtype, Manifest, TensorSpec};
+pub use params::ParamStore;

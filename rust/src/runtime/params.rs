@@ -1,0 +1,327 @@
+//! Named parameter store: the host-side view of model state.
+//!
+//! Parameters are named exactly as in the manifests (`params.layers.0.b_re`
+//! …) and serialized as npz: numpy writes the initial store at AOT time,
+//! [`ParamStore::load_npz`] reads it, and checkpoints round-trip through
+//! `Literal::write_npz` so a trained model can be re-served without Python.
+
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+use xla::{FromRawBytes, Literal};
+
+use crate::runtime::manifest::{Dtype, Manifest, TensorSpec};
+
+/// Ordered name → tensor map.
+pub struct ParamStore {
+    entries: BTreeMap<String, Literal>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        ParamStore { entries: BTreeMap::new() }
+    }
+
+    /// Load every tensor from an npz file.
+    pub fn load_npz(path: &Path) -> anyhow::Result<ParamStore> {
+        let pairs = Literal::read_npz(path, &())
+            .with_context(|| format!("reading npz {path:?}"))?;
+        let mut entries = BTreeMap::new();
+        for (name, lit) in pairs {
+            entries.insert(name, lit);
+        }
+        Ok(ParamStore { entries })
+    }
+
+    /// Save every tensor to an npz file (checkpointing).
+    ///
+    /// Hand-rolled npy/npz writer: the xla crate's `Literal::write_npz`
+    /// copies through an untyped `u8` buffer, which its own `copy_raw_to`
+    /// rejects with an element-type mismatch — so we serialize the npy
+    /// format ourselves (v1.0 header + little-endian payload, STORED zip
+    /// entries, matching what `numpy.savez` produces).
+    pub fn save_npz(&self, path: &Path) -> anyhow::Result<()> {
+        use std::io::Write as _;
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating npz {path:?}"))?;
+        let mut zip = zip::ZipWriter::new(file);
+        let opts = zip::write::FileOptions::default()
+            .compression_method(zip::CompressionMethod::Stored);
+        for (name, lit) in &self.entries {
+            zip.start_file(format!("{name}.npy"), opts)?;
+            let bytes = npy_bytes(lit)?;
+            zip.write_all(&bytes)?;
+        }
+        zip.finish()?;
+        Ok(())
+    }
+
+    pub fn insert(&mut self, name: &str, lit: Literal) {
+        self.entries.insert(name.to_string(), lit);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Literal> {
+        self.entries.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Materialize tensors in the order demanded by `specs`, checking
+    /// shapes. `specs` names must all exist in the store.
+    pub fn gather(&self, specs: &[&TensorSpec]) -> anyhow::Result<Vec<Literal>> {
+        let mut out = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let lit = self
+                .entries
+                .get(&spec.name)
+                .with_context(|| format!("param {:?} missing from store", spec.name))?;
+            let got = lit.element_count();
+            if got != spec.elem_count() {
+                bail!(
+                    "param {:?}: store has {got} elements, manifest wants {:?}",
+                    spec.name,
+                    spec.dims
+                );
+            }
+            out.push(clone_literal(lit)?);
+        }
+        Ok(out)
+    }
+
+    /// Total f32-equivalent parameter count.
+    pub fn total_elems(&self) -> usize {
+        self.entries.values().map(|l| l.element_count()).sum()
+    }
+}
+
+impl Default for ParamStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Serialize one literal as npy v1.0 bytes (little-endian, C order).
+fn npy_bytes(lit: &Literal) -> anyhow::Result<Vec<u8>> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let (descr, payload): (&str, Vec<u8>) = match shape.ty() {
+        xla::ElementType::F32 => {
+            let mut host = vec![0f32; lit.element_count()];
+            lit.copy_raw_to(&mut host)?;
+            ("<f4", host.iter().flat_map(|v| v.to_le_bytes()).collect())
+        }
+        xla::ElementType::S32 => {
+            let mut host = vec![0i32; lit.element_count()];
+            lit.copy_raw_to(&mut host)?;
+            ("<i4", host.iter().flat_map(|v| v.to_le_bytes()).collect())
+        }
+        other => anyhow::bail!("npy_bytes: unsupported element type {other:?}"),
+    };
+    let shape_str = match dims.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", dims[0]),
+        _ => format!(
+            "({})",
+            dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header =
+        format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_str}, }}");
+    // total header block (magic 6 + ver 2 + len 2 + header) must be 64-aligned
+    let base = 6 + 2 + 2;
+    let pad = (64 - (base + header.len() + 1) % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut out = Vec::with_capacity(base + header.len() + payload.len());
+    out.extend_from_slice(b"\x93NUMPY");
+    out.push(1);
+    out.push(0);
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Deep-copy a literal (the xla crate exposes no Clone for Literal).
+pub fn clone_literal(lit: &Literal) -> anyhow::Result<Literal> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    // copy_raw_to type-checks the element type, so read through the real
+    // dtype and reinterpret as bytes for the untyped constructor.
+    let bytes: Vec<u8> = match shape.ty() {
+        xla::ElementType::F32 => {
+            let mut host = vec![0f32; lit.element_count()];
+            lit.copy_raw_to(&mut host)?;
+            host.iter().flat_map(|v| v.to_le_bytes()).collect()
+        }
+        xla::ElementType::S32 => {
+            let mut host = vec![0i32; lit.element_count()];
+            lit.copy_raw_to(&mut host)?;
+            host.iter().flat_map(|v| v.to_le_bytes()).collect()
+        }
+        other => anyhow::bail!("clone_literal: unsupported element type {other:?}"),
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        shape.ty(),
+        &dims,
+        &bytes,
+    )?)
+}
+
+/// Build an f32 literal with the given dims (dims=[] ⇒ scalar).
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> anyhow::Result<Literal> {
+    let expected: usize = dims.iter().product::<usize>().max(1);
+    if data.len() != expected {
+        bail!("literal_f32: {} values for dims {dims:?}", data.len());
+    }
+    if dims.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let lit = Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> anyhow::Result<Literal> {
+    let expected: usize = dims.iter().product::<usize>().max(1);
+    if data.len() != expected {
+        bail!("literal_i32: {} values for dims {dims:?}", data.len());
+    }
+    if dims.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let lit = Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims_i64)?)
+}
+
+/// Zero-filled literal matching a spec (Adam state bootstrap).
+pub fn literal_zeros(spec: &TensorSpec) -> anyhow::Result<Literal> {
+    match spec.dtype {
+        Dtype::F32 => literal_f32(&vec![0.0; spec.elem_count()], &spec.dims),
+        Dtype::I32 => literal_i32(&vec![0; spec.elem_count()], &spec.dims),
+    }
+}
+
+/// Read back an f32 literal as a host vector.
+pub fn to_vec_f32(lit: &Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Build the full ordered input vector for a manifest by combining the
+/// param store (for `params.*` slots) with caller-provided tensors for the
+/// rest. `extra` maps input-name → Literal.
+pub fn assemble_inputs(
+    manifest: &Manifest,
+    params: &ParamStore,
+    extra: &mut BTreeMap<String, Literal>,
+) -> anyhow::Result<Vec<Literal>> {
+    let mut out = Vec::with_capacity(manifest.inputs.len());
+    for spec in &manifest.inputs {
+        if let Some(lit) = extra.remove(&spec.name) {
+            if lit.element_count() != spec.elem_count() {
+                bail!(
+                    "input {:?}: got {} elements, want {:?}",
+                    spec.name,
+                    lit.element_count(),
+                    spec.dims
+                );
+            }
+            out.push(lit);
+        } else if let Some(lit) = params.get(&spec.name) {
+            out.push(clone_literal(lit)?);
+        } else {
+            bail!("no source for input {:?}", spec.name);
+        }
+    }
+    if !extra.is_empty() {
+        let stray: Vec<&String> = extra.keys().collect();
+        bail!("extra inputs not consumed: {stray:?}");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let s = literal_f32(&[7.5], &[]).unwrap();
+        assert_eq!(s.element_count(), 1);
+        let i = literal_i32(&[3], &[]).unwrap();
+        assert_eq!(i.element_count(), 1);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn store_save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("s5_params_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.npz");
+        let mut store = ParamStore::new();
+        store.insert("params.a", literal_f32(&[1.5, -2.5], &[2]).unwrap());
+        store.insert("params.b", literal_f32(&[0.0; 6], &[2, 3]).unwrap());
+        store.save_npz(&path).unwrap();
+        let loaded = ParamStore::load_npz(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(
+            to_vec_f32(loaded.get("params.a").unwrap()).unwrap(),
+            vec![1.5, -2.5]
+        );
+        assert_eq!(loaded.total_elems(), 8);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn assemble_respects_manifest_order() {
+        let m = Manifest::parse(
+            "artifact t\nkind k\ninput 0 params.w f32 2\ninput 1 lr f32 -\ninput 2 x f32 2\n",
+        )
+        .unwrap();
+        let mut store = ParamStore::new();
+        store.insert("params.w", literal_f32(&[1.0, 2.0], &[2]).unwrap());
+        let mut extra = BTreeMap::new();
+        extra.insert("lr".to_string(), literal_f32(&[0.1], &[]).unwrap());
+        extra.insert("x".to_string(), literal_f32(&[9.0, 8.0], &[2]).unwrap());
+        let inputs = assemble_inputs(&m, &store, &mut extra).unwrap();
+        assert_eq!(inputs.len(), 3);
+        assert_eq!(to_vec_f32(&inputs[0]).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(to_vec_f32(&inputs[2]).unwrap(), vec![9.0, 8.0]);
+    }
+
+    #[test]
+    fn assemble_rejects_missing_and_stray() {
+        let m = Manifest::parse("artifact t\nkind k\ninput 0 x f32 1\n").unwrap();
+        let store = ParamStore::new();
+        let mut extra = BTreeMap::new();
+        assert!(assemble_inputs(&m, &store, &mut extra).is_err());
+        let mut extra = BTreeMap::new();
+        extra.insert("x".to_string(), literal_f32(&[1.0], &[1]).unwrap());
+        extra.insert("stray".to_string(), literal_f32(&[1.0], &[1]).unwrap());
+        assert!(assemble_inputs(&m, &store, &mut extra).is_err());
+    }
+}

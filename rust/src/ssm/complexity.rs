@@ -1,0 +1,125 @@
+//! Operation-count models for Proposition 1 (paper §3.4, Appendix C.1).
+//!
+//! These closed-form counts are the *analytical* half of the complexity
+//! reproduction; `bench_scan_scaling` and `bench_table4_runtime` provide the
+//! measured half. The claims under test:
+//!
+//! * S4 offline (conv):   O(H²L + H·L·log L) work, O(log H + log L) depth;
+//! * S5 offline (scan):   O(H·P·L + P·L) work,    O(log P + log L) depth;
+//! * online step:         S4 O(H² + H·N) vs S5 O(P·H + P);
+//! * dense-A MIMO scan:   O(P³) per combine — the §2.2 blowup that
+//!   diagonalization removes.
+
+/// Work (flop-ish op count) of one S4 layer applied offline via FFT conv.
+pub fn s4_conv_work(h: usize, _n: usize, l: usize) -> usize {
+    // kernel application: H FFT pairs of length 2L (≈ 5·2L·log2(2L) real ops
+    // each for fwd+inv+pointwise) + H²L mixing.
+    let l2 = (2 * l).max(2);
+    let fft_ops = 5 * l2 * l2.ilog2() as usize;
+    h * fft_ops + h * h * l
+}
+
+/// Work of one S5 layer applied offline via diagonal parallel scan.
+pub fn s5_scan_work(h: usize, p: usize, l: usize) -> usize {
+    // B̄u and C̃x matmuls: 2·P·H·L complex mults (≈ 8 real ops each) +
+    // work-efficient scan: ≈ 2·P·L complex fma.
+    8 * (2 * p * h * l) + 8 * (2 * p * l)
+}
+
+/// Work of the dense-A MIMO parallel scan (the strawman §2.2 rules out):
+/// each of the O(L) combines multiplies P×P matrices.
+pub fn dense_scan_work(p: usize, l: usize) -> usize {
+    2 * l * p * p * p
+}
+
+/// Per-step online work: S4 (DPLR matvec + mixing).
+pub fn s4_online_step(h: usize, n: usize) -> usize {
+    h * n + h * h
+}
+
+/// Per-step online work: S5 (diagonal matvec + in/out projections).
+pub fn s5_online_step(h: usize, p: usize) -> usize {
+    p + 2 * p * h
+}
+
+/// Parallel depth (critical path length in op units) of the offline modes,
+/// assuming unbounded processors.
+pub fn s4_parallel_depth(h: usize, l: usize) -> usize {
+    (h.max(2).ilog2() + (2 * l).max(2).ilog2()) as usize
+}
+
+pub fn s5_parallel_depth(p: usize, l: usize) -> usize {
+    (p.max(2).ilog2() + l.max(2).ilog2()) as usize
+}
+
+/// Memory footprint (f32 words) of the offline modes.
+pub fn s4_conv_space(h: usize, l: usize) -> usize {
+    // H FFT buffers of 2L complex + activations
+    h * 2 * l * 2 + h * l
+}
+
+pub fn s5_scan_space(p: usize, l: usize, h: usize) -> usize {
+    // scan state (L,P) complex + activations
+    2 * p * l + h * l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop1_same_order_when_p_is_order_h() {
+        // With P = H, the work ratio S5/S4 must stay bounded (same order)
+        // across two decades of L.
+        let h = 128;
+        for l in [1024usize, 4096, 16384, 65536] {
+            let r = s5_scan_work(h, h, l) as f64 / s4_conv_work(h, h, l) as f64;
+            assert!(r > 0.05 && r < 20.0, "L={l}: ratio {r}");
+        }
+    }
+
+    #[test]
+    fn s5_wins_asymptotically_in_l() {
+        // S4 carries an extra log L factor: the ratio S4/S5 must grow with L
+        // once H is small relative to log L.
+        let h = 16;
+        let r1 = s4_conv_work(h, 64, 1 << 10) as f64 / s5_scan_work(h, 64, 1 << 10) as f64;
+        let r2 = s4_conv_work(h, 64, 1 << 20) as f64 / s5_scan_work(h, 64, 1 << 20) as f64;
+        assert!(r2 > r1, "log L advantage missing: {r1} vs {r2}");
+    }
+
+    #[test]
+    fn dense_scan_is_cubically_worse() {
+        // compare against the *scan* term alone (16·P·L): the dense combine
+        // pays P³ per element vs P for the diagonal form (§2.2).
+        let (p, l) = (64, 4096);
+        let diag_scan = 8 * 2 * p * l;
+        let ratio = dense_scan_work(p, l) as f64 / diag_scan as f64;
+        assert!(ratio > 250.0, "diagonalization advantage missing: {ratio}");
+        // and the full S5 layer (including projections) still wins big
+        let full = dense_scan_work(p, l) as f64 / s5_scan_work(64, p, l) as f64;
+        assert!(full > 5.0, "{full}");
+    }
+
+    #[test]
+    fn online_steps_match_at_p_equals_h_and_n_equals_h() {
+        let h = 64;
+        let s4 = s4_online_step(h, h);
+        let s5 = s5_online_step(h, h);
+        let ratio = s4 as f64 / s5 as f64;
+        assert!((0.2..5.0).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn parallel_depths_are_logarithmic() {
+        assert_eq!(s5_parallel_depth(64, 16384), 6 + 14);
+        assert!(s4_parallel_depth(64, 16384) >= s5_parallel_depth(64, 16384));
+    }
+
+    #[test]
+    fn space_same_order_at_p_equals_h() {
+        let (h, l) = (128, 16384);
+        let r = s5_scan_space(h, l, h) as f64 / s4_conv_space(h, l) as f64;
+        assert!(r > 0.05 && r < 5.0, "{r}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Discretization of diagonal continuous-time SSMs (paper §2.1, eq. 6).
+//!
+//! For the diagonalized system dx/dt = Λx + B̃u the three classic rules give
+//! per-eigenvalue scalar maps; the S5 layer uses ZOH:
+//!
+//!   ZOH:       Λ̄ = exp(ΛΔ),          B̄ = Λ⁻¹(Λ̄ − I)B̃
+//!   Bilinear:  Λ̄ = (1+ΛΔ/2)/(1−ΛΔ/2), B̄ = (1−ΛΔ/2)⁻¹ Δ B̃
+//!   Euler:     Λ̄ = 1 + ΛΔ,            B̄ = Δ B̃
+//!
+//! Since everything is diagonal we return, for each state p, the pair
+//! `(lam_bar_p, input_scale_p)` where the discretized drive is
+//! `input_scale_p · (B̃u)_p`.
+
+use crate::num::C64;
+
+/// Discretization rule selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Zoh,
+    Bilinear,
+    Euler,
+}
+
+/// Discretize one eigenvalue with timestep `dt`.
+///
+/// Returns `(lam_bar, input_scale)`.
+#[inline]
+pub fn discretize_one(lam: C64, dt: f64, method: Method) -> (C64, C64) {
+    match method {
+        Method::Zoh => {
+            let lam_bar = lam.scale(dt).exp();
+            // Λ⁻¹(Λ̄ − 1); for |ΛΔ| → 0 this limits to Δ, handled by the
+            // series when the eigenvalue is tiny.
+            let scale = if lam.abs() < 1e-12 {
+                C64::from_re(dt)
+            } else {
+                (lam_bar - C64::ONE) * lam.inv()
+            };
+            (lam_bar, scale)
+        }
+        Method::Bilinear => {
+            let half = lam.scale(dt / 2.0);
+            let denom_inv = (C64::ONE - half).inv();
+            let lam_bar = (C64::ONE + half) * denom_inv;
+            (lam_bar, denom_inv.scale(dt))
+        }
+        Method::Euler => (C64::ONE + lam.scale(dt), C64::from_re(dt)),
+    }
+}
+
+/// Discretize a diagonal spectrum with per-state timesteps (vector Δ∈ℝᴾ,
+/// paper §4.3/D.5). `dts.len()` must be 1 (scalar Δ) or `lam.len()`.
+pub fn discretize_diag(
+    lam: &[C64],
+    dts: &[f64],
+    method: Method,
+) -> (Vec<C64>, Vec<C64>) {
+    assert!(dts.len() == 1 || dts.len() == lam.len());
+    let mut lam_bar = Vec::with_capacity(lam.len());
+    let mut scale = Vec::with_capacity(lam.len());
+    for (p, &l) in lam.iter().enumerate() {
+        let dt = dts[if dts.len() == 1 { 0 } else { p }];
+        let (lb, sc) = discretize_one(l, dt, method);
+        lam_bar.push(lb);
+        scale.push(sc);
+    }
+    (lam_bar, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn zoh_of_zero_eigenvalue_is_integrator() {
+        let (lb, sc) = discretize_one(C64::ZERO, 0.25, Method::Zoh);
+        assert!((lb - C64::ONE).abs() < 1e-12);
+        assert!((sc - C64::from_re(0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zoh_is_exact_for_lti_step() {
+        // For constant input u, ZOH reproduces the exact solution of
+        // dx/dt = λx + u at multiples of Δ.
+        let lam = C64::new(-0.7, 1.3);
+        let dt = 0.05;
+        let (lb, sc) = discretize_one(lam, dt, Method::Zoh);
+        let u = C64::from_re(1.0);
+        let mut x = C64::ZERO;
+        let steps = 40;
+        for _ in 0..steps {
+            x = lb * x + sc * u;
+        }
+        // exact: x(t) = (e^{λt} − 1)/λ · u
+        let t = dt * steps as f64;
+        let exact = (lam.scale(t).exp() - C64::ONE) * lam.inv() * u;
+        assert!((x - exact).abs() < 1e-9, "{x:?} vs {exact:?}");
+    }
+
+    #[test]
+    fn prop_methods_agree_to_first_order() {
+        prop::check("discretizations agree as Δ→0", 60, |g| {
+            let lam = C64::new(-g.uniform_in(0.1, 2.0), g.uniform_in(-3.0, 3.0));
+            let dt = 1e-4;
+            let (z, _) = discretize_one(lam, dt, Method::Zoh);
+            let (b, _) = discretize_one(lam, dt, Method::Bilinear);
+            let (e, _) = discretize_one(lam, dt, Method::Euler);
+            prop::close_f64(z.re, b.re, 1e-6)?;
+            prop::close_f64(z.im, b.im, 1e-6)?;
+            prop::close_f64(z.re, e.re, 1e-6)?;
+            prop::close_f64(z.im, e.im, 1e-6)
+        });
+    }
+
+    #[test]
+    fn prop_zoh_stability_preserved() {
+        // Re(λ) < 0 ⇒ |Λ̄| < 1: ZOH maps the stable half-plane into the
+        // unit disk for any Δ > 0.
+        prop::check("zoh stability", 100, |g| {
+            let lam = C64::new(-g.uniform_in(1e-3, 5.0), g.uniform_in(-20.0, 20.0));
+            let dt = g.uniform_in(1e-4, 1.0);
+            let (lb, _) = discretize_one(lam, dt, Method::Zoh);
+            prop::ensure_msg(lb.abs() < 1.0, format!("|lam_bar|={}", lb.abs()))
+        });
+    }
+
+    #[test]
+    fn prop_bilinear_stability_preserved() {
+        prop::check("bilinear stability", 100, |g| {
+            let lam = C64::new(-g.uniform_in(1e-3, 5.0), g.uniform_in(-20.0, 20.0));
+            let dt = g.uniform_in(1e-4, 1.0);
+            let (lb, _) = discretize_one(lam, dt, Method::Bilinear);
+            prop::ensure(lb.abs() < 1.0)
+        });
+    }
+
+    #[test]
+    fn euler_can_be_unstable() {
+        // The counterexample motivating ZOH: oscillatory λ with Euler.
+        let (lb, _) = discretize_one(C64::new(-0.5, 40.0), 0.1, Method::Euler);
+        assert!(lb.abs() > 1.0);
+    }
+
+    #[test]
+    fn vector_dt_applies_per_state() {
+        let lam = vec![C64::new(-1.0, 0.0), C64::new(-1.0, 0.0)];
+        let (lb, _) = discretize_diag(&lam, &[0.1, 0.2], Method::Zoh);
+        assert!((lb[0].re - (-0.1f64).exp()).abs() < 1e-12);
+        assert!((lb[1].re - (-0.2f64).exp()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,237 @@
+//! HiPPO matrices and the S5 eigen-initialization, in Rust.
+//!
+//! Mirrors `python/compile/hippo.py` (paper §2.3, §4.2, Appendix B.1): the
+//! HiPPO-LegS matrix, its normal component HiPPO-N = −½I + S (S skew-
+//! symmetric), the low-rank correction, and the block-diagonal conjugate-
+//! symmetric eigendecomposition used to initialize Λ, V, V⁻¹. The
+//! decomposition goes through the Hermitian matrix i·S so the stable Jacobi
+//! solver in [`crate::linalg`] applies.
+
+use crate::linalg::{eigh, CMat};
+use crate::num::C64;
+
+/// HiPPO-LegS state matrix (paper eq. 7): lower-triangular, stiff, not
+/// stably diagonalizable.
+pub fn hippo_legs(n: usize) -> Vec<f64> {
+    let q: Vec<f64> = (0..n).map(|i| (2.0 * i as f64 + 1.0).sqrt()).collect();
+    let mut a = vec![0.0; n * n];
+    for r in 0..n {
+        for c in 0..n {
+            a[r * n + c] = if r > c {
+                -q[r] * q[c]
+            } else if r == c {
+                -(r as f64 + 1.0)
+            } else {
+                0.0
+            };
+        }
+    }
+    a
+}
+
+/// b_LegS input column (eq. 8).
+pub fn legs_input_column(n: usize) -> Vec<f64> {
+    (0..n).map(|i| (2.0 * i as f64 + 1.0).sqrt()).collect()
+}
+
+/// HiPPO-N, the normal component (eq. 11): −½I + skew-symmetric part.
+pub fn hippo_normal(n: usize) -> Vec<f64> {
+    let q: Vec<f64> = (0..n).map(|i| (i as f64 + 0.5).sqrt()).collect();
+    let mut a = vec![0.0; n * n];
+    for r in 0..n {
+        for c in 0..n {
+            a[r * n + c] = if r == c {
+                -0.5
+            } else if r < c {
+                q[r] * q[c]
+            } else {
+                -q[r] * q[c]
+            };
+        }
+    }
+    a
+}
+
+/// Low-rank term P_LegS (eq. 12): A_LegS = HiPPO-N − P Pᵀ.
+pub fn hippo_low_rank(n: usize) -> Vec<f64> {
+    (0..n).map(|i| (i as f64 + 0.5).sqrt()).collect()
+}
+
+/// Stable eigendecomposition of HiPPO-N via the Hermitian matrix i·S.
+///
+/// Returns `(lam, v)` with HiPPO-N = V diag(λ) Vᴴ, eigenvalues sorted by
+/// **descending imaginary part** (so conjugate partners mirror around the
+/// middle), all with Re(λ) = −½.
+pub fn eig_hippo_normal(n: usize) -> (Vec<C64>, CMat) {
+    let a = hippo_normal(n);
+    // skew part S = A + ½I; Hermitian H = i·S
+    let h = CMat::from_fn(n, n, |r, c| {
+        let s = a[r * n + c] + if r == c { 0.5 } else { 0.0 };
+        C64::new(0.0, s) // i * s  (real s ⇒ purely imaginary entry)
+    });
+    let e = eigh(&h, 1e-13);
+    // H = V diag(w) V^H with real w ⇒ S = V diag(-i w) V^H
+    // ⇒ A = V diag(-1/2 - i w) V^H. eigh sorts w ascending ⇒ imag of λ
+    // (-w) is descending, matching the Python ordering.
+    let lam: Vec<C64> = e
+        .eigenvalues
+        .iter()
+        .map(|&w| C64::new(-0.5, -w))
+        .collect();
+    (lam, e.vectors)
+}
+
+/// Block-diagonal HiPPO-N initialization with conjugate symmetry
+/// (paper §3.2, Appendix B.1.1 / D.4). Mirrors
+/// `hippo.block_diag_hippo_init` on the Python side.
+///
+/// Returns `(lam, v, vinv)`:
+/// * `lam`: P2 = P/2 (or P) kept eigenvalues, Im > 0 half per block;
+/// * `v`: (P × P2) block-diagonal eigenvector matrix;
+/// * `vinv`: (P2 × P) = Vᴴ restricted to the kept columns.
+pub fn block_diag_hippo_init(
+    p: usize,
+    j: usize,
+    conj_sym: bool,
+) -> (Vec<C64>, CMat, CMat) {
+    assert!(p % j == 0, "latent size P={p} must be divisible by J={j}");
+    let r = p / j;
+    if conj_sym {
+        assert!(r % 2 == 0, "block size R={r} must be even under conjugate symmetry");
+    }
+    let (lam_r, v_r) = eig_hippo_normal(r);
+    let keep = if conj_sym { r / 2 } else { r };
+    let p2 = keep * j;
+    let mut lam = Vec::with_capacity(p2);
+    for _ in 0..j {
+        lam.extend_from_slice(&lam_r[..keep]);
+    }
+    let mut v = CMat::zeros(p, p2);
+    for b in 0..j {
+        for row in 0..r {
+            for col in 0..keep {
+                v[(b * r + row, b * keep + col)] = v_r[(row, col)];
+            }
+        }
+    }
+    let vinv = v.hermitian_t();
+    (lam, v, vinv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn normal_matrix_is_normal() {
+        for n in [2usize, 4, 8, 16] {
+            let a = hippo_normal(n);
+            // A Aᵀ == Aᵀ A
+            let mut aat = vec![0.0; n * n];
+            let mut ata = vec![0.0; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    for k in 0..n {
+                        aat[i * n + j] += a[i * n + k] * a[j * n + k];
+                        ata[i * n + j] += a[k * n + i] * a[k * n + j];
+                    }
+                }
+            }
+            for k in 0..n * n {
+                assert!((aat[k] - ata[k]).abs() < 1e-10, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn legs_equals_normal_minus_low_rank() {
+        let n = 8;
+        let legs = hippo_legs(n);
+        let norm = hippo_normal(n);
+        let p = hippo_low_rank(n);
+        for r in 0..n {
+            for c in 0..n {
+                let want = norm[r * n + c] - p[r] * p[c];
+                assert!((legs[r * n + c] - want).abs() < 1e-12, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn eig_reconstructs_hippo_normal() {
+        let n = 16;
+        let (lam, v) = eig_hippo_normal(n);
+        let a = hippo_normal(n);
+        // V diag(λ) Vᴴ == A
+        let mut vd = v.clone();
+        for i in 0..n {
+            for jj in 0..n {
+                vd[(i, jj)] = vd[(i, jj)] * lam[jj];
+            }
+        }
+        let rec = vd.matmul(&v.hermitian_t());
+        for r in 0..n {
+            for c in 0..n {
+                let want = C64::from_re(a[r * n + c]);
+                assert!((rec[(r, c)] - want).abs() < 1e-8, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_have_real_part_minus_half() {
+        let (lam, _) = eig_hippo_normal(32);
+        for z in &lam {
+            assert!((z.re + 0.5).abs() < 1e-10);
+        }
+        // descending imaginary parts
+        for w in lam.windows(2) {
+            assert!(w[0].im >= w[1].im - 1e-12);
+        }
+    }
+
+    #[test]
+    fn block_diag_shapes_and_positive_imag() {
+        let (lam, v, vinv) = block_diag_hippo_init(32, 4, true);
+        assert_eq!(lam.len(), 16);
+        assert_eq!((v.rows, v.cols), (32, 16));
+        assert_eq!((vinv.rows, vinv.cols), (16, 32));
+        for z in &lam {
+            assert!(z.im > 0.0);
+        }
+    }
+
+    #[test]
+    fn prop_block_diag_projection_identity() {
+        // Vᴴ V = I on the kept subspace (V has orthonormal columns).
+        prop::check("V^H V = I", 8, |g| {
+            let j = 1 + g.below(4);
+            let r = 2 * (1 + g.below(4));
+            let p = j * r;
+            let (_, v, vinv) = block_diag_hippo_init(p, j, true);
+            let gram = vinv.matmul(&v);
+            let p2 = v.cols;
+            for i in 0..p2 {
+                for jj in 0..p2 {
+                    let want = if i == jj { 1.0 } else { 0.0 };
+                    prop::close_f64(gram[(i, jj)].re, want, 1e-8)?;
+                    prop::close_f64(gram[(i, jj)].im, 0.0, 1e-8)?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn rejects_bad_block_count() {
+        block_diag_hippo_init(10, 3, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn rejects_odd_block_with_conj_sym() {
+        block_diag_hippo_init(9, 3, true);
+    }
+}

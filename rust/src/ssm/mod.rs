@@ -1,0 +1,24 @@
+//! State-space model core: the pure-Rust reference stack.
+//!
+//! This module reimplements, in Rust, the math that the L1/L2 Python layers
+//! compile into the HLO artifacts — plus the S4/S4D baselines the paper
+//! compares against. It serves three roles:
+//!
+//! 1. **Parity oracle** — `runtime` integration tests check the compiled
+//!    HLO against [`s5`] on identical parameters (three-way agreement with
+//!    the jnp oracle via the shared npz fixtures).
+//! 2. **Benchmark subject** — the Table-4 runtime comparisons and the
+//!    parallel-scan scaling studies (Prop. 1, Appendix C/H) run on these
+//!    implementations, where we control every allocation.
+//! 3. **Native initialization** — the Rust-side HiPPO construction mirrors
+//!    `python/compile/hippo.py`, so experiments can instantiate fresh models
+//!    without touching Python.
+
+pub mod complexity;
+pub mod discretize;
+pub mod hippo;
+pub mod online;
+pub mod rnn;
+pub mod s4;
+pub mod s5;
+pub mod scan;

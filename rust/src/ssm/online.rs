@@ -1,0 +1,283 @@
+//! Online (autoregressive) generation mode for S5 (paper §3.3, and the
+//! "online generation" case of Proposition 1 / Appendix C.1).
+//!
+//! When observations arrive one at a time, the S5 SSM runs as a stateful
+//! recurrence at O(P·H + P) per step — the same asymptotics as S4's
+//! recurrent mode at P = O(H). This module provides that stepping API on
+//! top of [`crate::ssm::s5::S5Layer`], plus an [`OnlineModel`] that keeps
+//! per-layer states for a whole stacked network (what a streaming
+//! deployment of the inference server would hold per session).
+//!
+//! Correctness is pinned by equivalence tests against the offline scan.
+
+use crate::num::{C32, C64};
+use crate::ssm::discretize::{discretize_diag, discretize_one, Method};
+use crate::ssm::s5::{gelu, layer_norm_row, sigmoid, S5Layer, S5Model};
+
+/// Streaming state of one S5 layer: the complex latent x_k plus the
+/// precomputed discretization (recomputed only if Δt changes).
+pub struct LayerState {
+    x: Vec<C32>,
+    lam_bar: Vec<C32>,
+    in_scale: Vec<C32>,
+    /// Δt this discretization was built for (None = time-invariant default)
+    dt_scale: Option<f32>,
+}
+
+impl LayerState {
+    /// Fresh state with the layer's default (time-invariant) discretization.
+    pub fn new(layer: &S5Layer, timescale: f64) -> LayerState {
+        let dt: Vec<f64> = layer
+            .log_dt
+            .iter()
+            .map(|&ld| (ld as f64).exp() * timescale)
+            .collect();
+        let (lam_bar, scale) = discretize_diag(&layer.lambda, &dt, Method::Zoh);
+        LayerState {
+            x: vec![C32::ZERO; layer.p2],
+            lam_bar: lam_bar.iter().map(|z| z.to_c32()).collect(),
+            in_scale: scale.iter().map(|z| z.to_c32()).collect(),
+            dt_scale: None,
+        }
+    }
+
+    /// Re-discretize for an irregular step of length `dt_k` (×base Δ).
+    fn rediscretize(&mut self, layer: &S5Layer, timescale: f64, dt_k: f32) {
+        if self.dt_scale == Some(dt_k) {
+            return;
+        }
+        for (r, &lam) in layer.lambda.iter().enumerate() {
+            let dt = (layer.log_dt[r] as f64).exp() * timescale * dt_k as f64;
+            let (lb, sc) = discretize_one(lam, dt, Method::Zoh);
+            self.lam_bar[r] = lb.to_c32();
+            self.in_scale[r] = sc.to_c32();
+        }
+        self.dt_scale = Some(dt_k);
+    }
+
+    /// Reset the latent to zero (new sequence).
+    pub fn reset(&mut self) {
+        self.x.iter_mut().for_each(|z| *z = C32::ZERO);
+    }
+}
+
+impl S5Layer {
+    /// One online SSM step: consumes u_k (H), returns y_k (H).
+    /// O(P·H) work — the Proposition-1 online bound.
+    ///
+    /// Only unidirectional layers support streaming (a bidirectional layer
+    /// needs the future by construction).
+    pub fn step_ssm(
+        &self,
+        state: &mut LayerState,
+        u: &[f32],
+        timescale: f64,
+        dt_k: Option<f32>,
+    ) -> Vec<f32> {
+        assert_eq!(u.len(), self.h);
+        assert_eq!(self.c_tilde.len(), 1, "bidirectional layers cannot stream");
+        if let Some(dt) = dt_k {
+            state.rediscretize(self, timescale, dt);
+        }
+        // x ← Λ̄∘x + f∘(B̃u)
+        for r in 0..self.p2 {
+            let mut bu = C64::ZERO;
+            for c in 0..self.h {
+                bu += self.b_tilde[r * self.h + c].scale(u[c] as f64);
+            }
+            state.x[r] = state.lam_bar[r] * state.x[r] + state.in_scale[r] * bu.to_c32();
+        }
+        // y = 2·Re(C̃x) + D∘u
+        let ct = &self.c_tilde[0];
+        let mut y = vec![0.0f32; self.h];
+        for r in 0..self.h {
+            let mut acc = 0.0f32;
+            for c in 0..self.p2 {
+                let cv = ct[r * self.p2 + c];
+                acc += cv.re as f32 * state.x[c].re - cv.im as f32 * state.x[c].im;
+            }
+            y[r] = 2.0 * acc + self.d[r] * u[r];
+        }
+        y
+    }
+
+    /// One online *layer* step: pre-norm → SSM step → activation → residual.
+    pub fn step(
+        &self,
+        state: &mut LayerState,
+        u: &[f32],
+        timescale: f64,
+        dt_k: Option<f32>,
+    ) -> Vec<f32> {
+        let mut v = vec![0.0f32; self.h];
+        layer_norm_row(u, &self.norm_scale, &self.norm_bias, &mut v);
+        let y = self.step_ssm(state, &v, timescale, dt_k);
+        let mut out = vec![0.0f32; self.h];
+        let g: Vec<f32> = y.iter().map(|&x| gelu(x)).collect();
+        for r in 0..self.h {
+            let mut lin = 0.0f32;
+            for c in 0..self.h {
+                lin += self.gate_w[r * self.h + c] * g[c];
+            }
+            out[r] = u[r] + g[r] * sigmoid(lin);
+        }
+        out
+    }
+}
+
+/// Streaming state for a whole deep model (one LayerState per layer plus a
+/// running mean-pool accumulator for classification-on-close).
+pub struct OnlineModel<'a> {
+    model: &'a S5Model,
+    states: Vec<LayerState>,
+    pool: Vec<f32>,
+    steps: usize,
+}
+
+impl<'a> OnlineModel<'a> {
+    pub fn new(model: &'a S5Model, timescale: f64) -> OnlineModel<'a> {
+        OnlineModel {
+            model,
+            states: model.layers.iter().map(|l| LayerState::new(l, timescale)).collect(),
+            pool: vec![0.0; model.h],
+            steps: 0,
+        }
+    }
+
+    /// Feed one observation (d_in); updates all layer states.
+    pub fn push(&mut self, u: &[f32], timescale: f64) {
+        let m = self.model;
+        let mut x = vec![0.0f32; m.h];
+        for r in 0..m.h {
+            let mut acc = m.enc_b[r];
+            for c in 0..m.d_in {
+                acc += m.enc_w[r * m.d_in + c] * u[c];
+            }
+            x[r] = acc;
+        }
+        for (layer, state) in m.layers.iter().zip(self.states.iter_mut()) {
+            x = layer.step(state, &x, timescale, None);
+        }
+        for r in 0..m.h {
+            self.pool[r] += x[r];
+        }
+        self.steps += 1;
+    }
+
+    /// Current logits from the running mean-pool.
+    pub fn logits(&self) -> Vec<f32> {
+        let m = self.model;
+        let denom = self.steps.max(1) as f32;
+        let mut out = vec![0.0f32; m.classes];
+        for r in 0..m.classes {
+            let mut acc = m.dec_b[r];
+            for c in 0..m.h {
+                acc += m.dec_w[r * m.h + c] * (self.pool[c] / denom);
+            }
+            out[r] = acc;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::ssm::s5::S5Config;
+    use crate::testing::prop;
+
+    fn layer(h: usize, p: usize) -> S5Layer {
+        S5Layer::init(&S5Config { h, p, j: 1, ..Default::default() }, &mut Rng::new(1))
+    }
+
+    #[test]
+    fn online_ssm_equals_offline_scan() {
+        let lp = layer(6, 8);
+        let l = 40;
+        let mut rng = Rng::new(2);
+        let u = rng.normal_vec_f32(l * 6);
+        let offline = lp.apply_ssm(&u, l, 1.0, None, 1);
+        let mut st = LayerState::new(&lp, 1.0);
+        for k in 0..l {
+            let y = lp.step_ssm(&mut st, &u[k * 6..(k + 1) * 6], 1.0, None);
+            for c in 0..6 {
+                let (a, b) = (offline[k * 6 + c], y[c]);
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                    "k={k} c={c}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn online_layer_equals_offline_layer() {
+        let lp = layer(4, 8);
+        let l = 30;
+        let mut rng = Rng::new(3);
+        let u = rng.normal_vec_f32(l * 4);
+        let offline = lp.apply(&u, l, 1.0, None, 1);
+        let mut st = LayerState::new(&lp, 1.0);
+        for k in 0..l {
+            let y = lp.step(&mut st, &u[k * 4..(k + 1) * 4], 1.0, None);
+            prop::close_slice_f32(&offline[k * 4..(k + 1) * 4], &y, 2e-3)
+                .unwrap_or_else(|e| panic!("k={k}: {e}"));
+        }
+    }
+
+    #[test]
+    fn online_variable_dt_equals_offline_variable_dt() {
+        let lp = layer(4, 8);
+        let l = 25;
+        let mut rng = Rng::new(4);
+        let u = rng.normal_vec_f32(l * 4);
+        let dts: Vec<f32> = rng.uniform_vec_f32(l, 0.3, 2.5);
+        let offline = lp.apply_ssm(&u, l, 1.0, Some(&dts), 1);
+        let mut st = LayerState::new(&lp, 1.0);
+        for k in 0..l {
+            let y = lp.step_ssm(&mut st, &u[k * 4..(k + 1) * 4], 1.0, Some(dts[k]));
+            prop::close_slice_f32(&offline[k * 4..(k + 1) * 4], &y, 2e-3)
+                .unwrap_or_else(|e| panic!("k={k}: {e}"));
+        }
+    }
+
+    #[test]
+    fn state_reset_restarts_sequence() {
+        let lp = layer(4, 8);
+        let mut rng = Rng::new(5);
+        let u = rng.normal_vec_f32(4);
+        let mut st = LayerState::new(&lp, 1.0);
+        let y1 = lp.step_ssm(&mut st, &u, 1.0, None);
+        let _ = lp.step_ssm(&mut st, &u, 1.0, None);
+        st.reset();
+        let y3 = lp.step_ssm(&mut st, &u, 1.0, None);
+        prop::close_slice_f32(&y1, &y3, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn online_model_matches_offline_forward() {
+        let cfg = S5Config { h: 8, p: 8, j: 1, ..Default::default() };
+        let model = crate::ssm::s5::S5Model::init(2, 5, 2, &cfg, &mut Rng::new(6));
+        let l = 20;
+        let mut rng = Rng::new(7);
+        let u = rng.normal_vec_f32(l * 2);
+        let offline = model.forward(&u, l, 1.0, 1);
+        let mut online = OnlineModel::new(&model, 1.0);
+        for k in 0..l {
+            online.push(&u[k * 2..(k + 1) * 2], 1.0);
+        }
+        prop::close_slice_f32(&offline, &online.logits(), 2e-3).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "bidirectional")]
+    fn bidirectional_layer_cannot_stream() {
+        let lp = S5Layer::init(
+            &S5Config { h: 4, p: 8, j: 1, bidir: true, ..Default::default() },
+            &mut Rng::new(8),
+        );
+        let mut st = LayerState::new(&lp, 1.0);
+        lp.step_ssm(&mut st, &[0.0; 4], 1.0, None);
+    }
+}

@@ -1,0 +1,295 @@
+//! S4 / S4D baselines (paper §2.3, Table 4, Appendix C.2).
+//!
+//! An S4 layer is a bank of H independent SISO SSMs with N-dimensional
+//! state, followed by a position-wise mixing layer. We implement the
+//! *diagonal* variant (S4D — the stronger baseline the paper benchmarks
+//! against) in both of its modes:
+//!
+//! * **convolution mode** ([`S4DLayer::apply_conv`]): materialize the length-L
+//!   kernel k_ℓ = Σ_n C̄_n Λ̄_nᶫ B̄_n (a Vandermonde contraction), then apply
+//!   it with the FFT — O(H·L·log L), the offline path of Figure 4a;
+//! * **recurrent mode** ([`S4DLayer::apply_recurrent`]): step the diagonal
+//!   recurrence — O(H·N) per step, the online-generation path.
+//!
+//! The relative cost of these against the S5 scan is exactly what paper
+//! Table 4 measures; `bench_table4_runtime` regenerates it.
+
+use crate::fft;
+use crate::num::{C32, C64};
+use crate::rng::Rng;
+use crate::ssm::discretize::{discretize_one, Method};
+use crate::ssm::hippo;
+use crate::ssm::scan;
+
+/// One SISO diagonal SSM (state size N) of the S4D bank.
+#[derive(Clone, Debug)]
+pub struct SisoSsm {
+    /// Λ (N/2 under conjugate symmetry).
+    pub lambda: Vec<C64>,
+    /// B (N/2), input column.
+    pub b: Vec<C64>,
+    /// C (N/2), output row.
+    pub c: Vec<C64>,
+    /// Feedthrough scalar.
+    pub d: f32,
+    /// log Δ (scalar per SSM, as in S4).
+    pub log_dt: f32,
+}
+
+/// The S4D layer: H independent SISO SSMs + dense mixing layer (H × H).
+#[derive(Clone, Debug)]
+pub struct S4DLayer {
+    pub ssms: Vec<SisoSsm>,
+    /// Position-wise mixing layer applied after the nonlinearity (§2.3).
+    pub mix_w: Vec<f32>,
+    pub h: usize,
+    pub n2: usize,
+}
+
+impl S4DLayer {
+    /// HiPPO-N initialized bank with per-SSM timescales.
+    pub fn init(h: usize, n: usize, rng: &mut Rng) -> S4DLayer {
+        let (lam_full, _, _) = hippo::block_diag_hippo_init(n, 1, true);
+        let n2 = lam_full.len();
+        let ssms = (0..h)
+            .map(|_| {
+                let scale = (0.5 / n as f64).sqrt();
+                SisoSsm {
+                    lambda: lam_full.clone(),
+                    b: (0..n2).map(|_| C64::new(rng.normal(), rng.normal()).scale(scale)).collect(),
+                    c: (0..n2).map(|_| C64::new(rng.normal(), rng.normal()).scale(scale)).collect(),
+                    d: rng.normal() as f32,
+                    log_dt: rng.uniform_in((1e-3f64).ln(), (1e-1f64).ln()) as f32,
+                }
+            })
+            .collect();
+        S4DLayer {
+            ssms,
+            mix_w: (0..h * h).map(|_| (rng.normal() / (h as f64).sqrt()) as f32).collect(),
+            h,
+            n2,
+        }
+    }
+
+    /// Materialize the length-L convolution kernel of one SISO SSM:
+    /// k_ℓ = 2·Re(Σ_n C_n Λ̄_nᶫ B̄_n)  (Vandermonde contraction).
+    pub fn kernel(&self, ssm: &SisoSsm, l: usize) -> Vec<f64> {
+        let dt = (ssm.log_dt as f64).exp();
+        let mut k = vec![0.0f64; l];
+        for n in 0..self.n2 {
+            let (lam_bar, f) = discretize_one(ssm.lambda[n], dt, Method::Zoh);
+            let cb = ssm.c[n] * f * ssm.b[n];
+            let mut pow = C64::ONE;
+            for item in k.iter_mut().take(l) {
+                *item += 2.0 * (cb * pow).re;
+                pow = pow * lam_bar;
+            }
+        }
+        k
+    }
+
+    /// Convolution (offline) mode: SSM outputs before mixing, (L × H).
+    pub fn apply_conv_ssm(&self, u: &[f32], l: usize) -> Vec<f32> {
+        let h = self.h;
+        assert_eq!(u.len(), l * h);
+        let mut y = vec![0.0f32; l * h];
+        for (ch, ssm) in self.ssms.iter().enumerate() {
+            let k = self.kernel(ssm, l);
+            let sig: Vec<f64> = (0..l).map(|t| u[t * h + ch] as f64).collect();
+            let conv = fft::conv_real(&k, &sig, l);
+            for t in 0..l {
+                y[t * h + ch] = conv[t] as f32 + ssm.d * u[t * h + ch];
+            }
+        }
+        y
+    }
+
+    /// Recurrent (online) mode: identical math via per-step stepping.
+    pub fn apply_recurrent_ssm(&self, u: &[f32], l: usize) -> Vec<f32> {
+        let h = self.h;
+        let mut y = vec![0.0f32; l * h];
+        for (ch, ssm) in self.ssms.iter().enumerate() {
+            let dt = (ssm.log_dt as f64).exp();
+            let n2 = self.n2;
+            let mut lam_bar = Vec::with_capacity(n2);
+            let mut b_bar = Vec::with_capacity(n2);
+            for n in 0..n2 {
+                let (lb, f) = discretize_one(ssm.lambda[n], dt, Method::Zoh);
+                lam_bar.push(lb.to_c32());
+                b_bar.push((f * ssm.b[n]).to_c32());
+            }
+            let c32: Vec<C32> = ssm.c.iter().map(|z| z.to_c32()).collect();
+            let mut state = vec![C32::ZERO; n2];
+            for t in 0..l {
+                let ut = u[t * h + ch];
+                let mut acc = 0.0f32;
+                for n in 0..n2 {
+                    state[n] = lam_bar[n] * state[n] + b_bar[n].scale(ut);
+                    let cv = c32[n];
+                    acc += cv.re * state[n].re - cv.im * state[n].im;
+                }
+                y[t * h + ch] = 2.0 * acc + ssm.d * ut;
+            }
+        }
+        y
+    }
+
+    /// Scan (offline) mode for the *bank* of SISO SSMs — what §2.3 notes
+    /// would cost O(H·N·L) work: the block-diagonal system has effective
+    /// state H·N, versus S5's P.
+    pub fn apply_scan_ssm(&self, u: &[f32], l: usize, threads: usize) -> Vec<f32> {
+        let h = self.h;
+        let n2 = self.n2;
+        let p = h * n2; // block-diagonal effective state
+        let mut a = vec![C32::ZERO; p];
+        let mut drive = vec![C32::ZERO; l * p];
+        let mut c_all = vec![C32::ZERO; p];
+        for (ch, ssm) in self.ssms.iter().enumerate() {
+            let dt = (ssm.log_dt as f64).exp();
+            for n in 0..n2 {
+                let (lb, f) = discretize_one(ssm.lambda[n], dt, Method::Zoh);
+                let idx = ch * n2 + n;
+                a[idx] = lb.to_c32();
+                c_all[idx] = ssm.c[n].to_c32();
+                let bb = (f * ssm.b[n]).to_c32();
+                for t in 0..l {
+                    drive[t * p + idx] = bb.scale(u[t * h + ch]);
+                }
+            }
+        }
+        let xs = if threads <= 1 {
+            scan::scan_sequential_ti(&a, &drive, l, p)
+        } else {
+            scan::scan_parallel_ti(&a, &drive, l, p, threads)
+        };
+        let mut y = vec![0.0f32; l * h];
+        for t in 0..l {
+            for ch in 0..h {
+                let mut acc = 0.0f32;
+                for n in 0..n2 {
+                    let idx = ch * n2 + n;
+                    let cv = c_all[idx];
+                    let x = xs[t * p + idx];
+                    acc += cv.re * x.re - cv.im * x.im;
+                }
+                y[t * h + ch] = 2.0 * acc + self.ssms[ch].d * u[t * h + ch];
+            }
+        }
+        y
+    }
+
+    /// GELU + position-wise mixing layer (the part S5 folds into its MIMO C).
+    pub fn mix(&self, y: &[f32], l: usize) -> Vec<f32> {
+        let h = self.h;
+        let mut out = vec![0.0f32; l * h];
+        let mut g = vec![0.0f32; h];
+        for t in 0..l {
+            for c in 0..h {
+                g[c] = super::s5::gelu(y[t * h + c]);
+            }
+            for r in 0..h {
+                let mut acc = 0.0f32;
+                for c in 0..h {
+                    acc += self.mix_w[r * h + c] * g[c];
+                }
+                out[t * h + r] = acc;
+            }
+        }
+        out
+    }
+
+    /// Full layer, convolution mode (the paper's offline S4 path).
+    pub fn apply_conv(&self, u: &[f32], l: usize) -> Vec<f32> {
+        let y = self.apply_conv_ssm(u, l);
+        self.mix(&y, l)
+    }
+
+    /// Full layer, recurrent mode.
+    pub fn apply_recurrent(&self, u: &[f32], l: usize) -> Vec<f32> {
+        let y = self.apply_recurrent_ssm(u, l);
+        self.mix(&y, l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn mk(h: usize, n: usize, seed: u64) -> S4DLayer {
+        S4DLayer::init(h, n, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn conv_matches_recurrent() {
+        // The two S4 modes are two implementations of the same LTI system.
+        let layer = mk(4, 8, 1);
+        let l = 64;
+        let mut rng = Rng::new(2);
+        let u = rng.normal_vec_f32(l * 4);
+        let yc = layer.apply_conv_ssm(&u, l);
+        let yr = layer.apply_recurrent_ssm(&u, l);
+        prop::close_slice_f32(&yc, &yr, 2e-3).unwrap();
+    }
+
+    #[test]
+    fn scan_mode_matches_recurrent() {
+        let layer = mk(3, 8, 3);
+        let l = 50;
+        let mut rng = Rng::new(4);
+        let u = rng.normal_vec_f32(l * 3);
+        let ys = layer.apply_scan_ssm(&u, l, 4);
+        let yr = layer.apply_recurrent_ssm(&u, l);
+        prop::close_slice_f32(&ys, &yr, 2e-3).unwrap();
+    }
+
+    #[test]
+    fn prop_all_three_modes_agree() {
+        prop::check("s4d conv ≡ recurrent ≡ scan", 10, |g| {
+            let h = 1 + g.below(4);
+            let n = 2 * (1 + g.below(4));
+            let l = 8 + g.below(100);
+            let layer = mk(h, n, g.next_u64());
+            let u: Vec<f32> = (0..l * h).map(|_| g.normal() as f32).collect();
+            let yc = layer.apply_conv_ssm(&u, l);
+            let yr = layer.apply_recurrent_ssm(&u, l);
+            let ys = layer.apply_scan_ssm(&u, l, 2);
+            prop::close_slice_f32(&yc, &yr, 5e-3)?;
+            prop::close_slice_f32(&ys, &yr, 5e-3)
+        });
+    }
+
+    #[test]
+    fn kernel_decays_for_stable_spectrum() {
+        let layer = mk(1, 16, 5);
+        let k = layer.kernel(&layer.ssms[0], 4096);
+        let head: f64 = k[..64].iter().map(|v| v.abs()).sum();
+        let tail: f64 = k[4032..].iter().map(|v| v.abs()).sum();
+        assert!(tail < head, "kernel must decay: head={head} tail={tail}");
+    }
+
+    #[test]
+    fn impulse_response_equals_kernel() {
+        let layer = mk(1, 8, 6);
+        let l = 32;
+        let mut u = vec![0.0f32; l];
+        u[0] = 1.0;
+        let y = layer.apply_conv_ssm(&u, l);
+        let k = layer.kernel(&layer.ssms[0], l);
+        for t in 0..l {
+            let want = k[t] as f32 + if t == 0 { layer.ssms[0].d } else { 0.0 };
+            assert!((y[t] - want).abs() < 1e-3, "t={t}: {} vs {want}", y[t]);
+        }
+    }
+
+    #[test]
+    fn mixing_layer_shapes() {
+        let layer = mk(5, 4, 7);
+        let l = 10;
+        let mut rng = Rng::new(8);
+        let u = rng.normal_vec_f32(l * 5);
+        let out = layer.apply_conv(&u, l);
+        assert_eq!(out.len(), l * 5);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

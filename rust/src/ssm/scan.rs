@@ -1,0 +1,445 @@
+//! Scans for first-order linear recurrences (paper §2.2, Appendix H).
+//!
+//! The recurrence x_k = ā_k ∘ x_{k−1} + b_k over ℂ^P is computed three ways:
+//!
+//! * [`scan_sequential`] — the literal O(L·P) loop (ground truth; also the
+//!   online-generation mode of §3.3);
+//! * [`scan_parallel`] — multi-threaded chunked scan (local scan → chunk-
+//!   summary combine → fixup), the CPU analogue of the work-efficient
+//!   Blelloch scan the paper leans on. Wall-clock scales with cores while
+//!   total work stays O(L·P) — this is the subject of
+//!   `bench_scan_scaling`;
+//! * [`scan_dense_sequential`] — the O(L·P²)/O(L·P³) *dense*-A strawman of
+//!   §2.2, kept as a baseline to demonstrate why diagonalization is load-
+//!   bearing for S5.
+//!
+//! Element layout is planar-free here: `C32` pairs in row-major (L, P)
+//! buffers, matching the L1 kernel's numerics (f32).
+
+use crate::num::{C32, C64};
+
+/// Sequential scan, time-varying multipliers.
+///
+/// `a`, `b`: row-major (L, P). Returns states (L, P).
+pub fn scan_sequential(a: &[C32], b: &[C32], l: usize, p: usize) -> Vec<C32> {
+    assert_eq!(a.len(), l * p);
+    assert_eq!(b.len(), l * p);
+    let mut xs = vec![C32::ZERO; l * p];
+    let mut state = vec![C32::ZERO; p];
+    for k in 0..l {
+        let row = k * p;
+        for j in 0..p {
+            let x = a[row + j] * state[j] + b[row + j];
+            state[j] = x;
+            xs[row + j] = x;
+        }
+    }
+    xs
+}
+
+/// Sequential scan with a *time-invariant* diagonal (the common S5 case):
+/// `a` has length P.
+pub fn scan_sequential_ti(a: &[C32], b: &[C32], l: usize, p: usize) -> Vec<C32> {
+    assert_eq!(a.len(), p);
+    assert_eq!(b.len(), l * p);
+    let mut xs = vec![C32::ZERO; l * p];
+    let mut state = vec![C32::ZERO; p];
+    for k in 0..l {
+        let row = k * p;
+        for j in 0..p {
+            let x = a[j] * state[j] + b[row + j];
+            state[j] = x;
+            xs[row + j] = x;
+        }
+    }
+    xs
+}
+
+/// Parallel chunked scan over `threads` workers (time-invariant diagonal).
+///
+/// Three phases (classic two-pass prefix scan, Blelloch §1.4 adapted to a
+/// chunk granularity that fits CPUs):
+///  1. each worker scans its chunk locally from x=0 and records the chunk's
+///     composition (ā^{len}, local final state);
+///  2. the chunk summaries are combined sequentially (T ≪ L elements);
+///  3. each worker adds `ā^{k+1-start} ∘ x_enter` to its local states.
+pub fn scan_parallel_ti(
+    a: &[C32],
+    b: &[C32],
+    l: usize,
+    p: usize,
+    threads: usize,
+) -> Vec<C32> {
+    assert_eq!(a.len(), p);
+    assert_eq!(b.len(), l * p);
+    let threads = threads.max(1).min(l.max(1));
+    if threads == 1 || l < 4 * threads {
+        return scan_sequential_ti(a, b, l, p);
+    }
+    let chunk = l.div_ceil(threads);
+    let n_chunks = l.div_ceil(chunk);
+
+    let mut xs = vec![C32::ZERO; l * p];
+    // chunk summaries: a_pow[c] = ā^{len_c}, last[c] = local final state
+    let mut a_pow = vec![C32::ZERO; n_chunks * p];
+    let mut last = vec![C32::ZERO; n_chunks * p];
+
+    // Phase 1: local scans (parallel).
+    {
+        let xs_chunks: Vec<&mut [C32]> = xs.chunks_mut(chunk * p).collect();
+        let apow_chunks: Vec<&mut [C32]> = a_pow.chunks_mut(p).collect();
+        let last_chunks: Vec<&mut [C32]> = last.chunks_mut(p).collect();
+        std::thread::scope(|s| {
+            for (c, ((xc, ac), lc)) in xs_chunks
+                .into_iter()
+                .zip(apow_chunks)
+                .zip(last_chunks)
+                .enumerate()
+            {
+                s.spawn(move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    let mut state = vec![C32::ZERO; p];
+                    let mut pow = vec![C32::ONE; p];
+                    for k in 0..len {
+                        let g = (start + k) * p;
+                        let row = k * p;
+                        for j in 0..p {
+                            let x = a[j] * state[j] + b[g + j];
+                            state[j] = x;
+                            xc[row + j] = x;
+                            pow[j] = a[j] * pow[j];
+                        }
+                    }
+                    ac.copy_from_slice(&pow);
+                    lc.copy_from_slice(&state);
+                });
+            }
+        });
+    }
+
+    // Phase 2: combine chunk summaries sequentially → state entering chunk c.
+    let mut enter = vec![C32::ZERO; n_chunks * p];
+    {
+        let mut state = vec![C32::ZERO; p];
+        for c in 0..n_chunks {
+            enter[c * p..(c + 1) * p].copy_from_slice(&state);
+            for j in 0..p {
+                state[j] = a_pow[c * p + j] * state[j] + last[c * p + j];
+            }
+        }
+    }
+
+    // Phase 3: fixup (parallel): x_k += ā^{k−start+1} ∘ x_enter.
+    {
+        let xs_chunks: Vec<&mut [C32]> = xs.chunks_mut(chunk * p).collect();
+        std::thread::scope(|s| {
+            for (c, xc) in xs_chunks.into_iter().enumerate() {
+                let enter_c = &enter[c * p..(c + 1) * p];
+                s.spawn(move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    let mut carry: Vec<C32> = enter_c.to_vec();
+                    if carry.iter().all(|z| *z == C32::ZERO) {
+                        return; // first chunk: nothing to add
+                    }
+                    for k in 0..len {
+                        let row = k * p;
+                        for j in 0..p {
+                            carry[j] = carry[j] * a[j];
+                            xc[row + j] += carry[j];
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    xs
+}
+
+/// Parallel chunked scan with time-varying multipliers (irregular sampling).
+pub fn scan_parallel_tv(
+    a: &[C32],
+    b: &[C32],
+    l: usize,
+    p: usize,
+    threads: usize,
+) -> Vec<C32> {
+    assert_eq!(a.len(), l * p);
+    assert_eq!(b.len(), l * p);
+    let threads = threads.max(1).min(l.max(1));
+    if threads == 1 || l < 4 * threads {
+        return scan_sequential(a, b, l, p);
+    }
+    let chunk = l.div_ceil(threads);
+    let n_chunks = l.div_ceil(chunk);
+
+    let mut xs = vec![C32::ZERO; l * p];
+    let mut a_prod = vec![C32::ZERO; n_chunks * p];
+    let mut last = vec![C32::ZERO; n_chunks * p];
+
+    {
+        let xs_chunks: Vec<&mut [C32]> = xs.chunks_mut(chunk * p).collect();
+        let aprod_chunks: Vec<&mut [C32]> = a_prod.chunks_mut(p).collect();
+        let last_chunks: Vec<&mut [C32]> = last.chunks_mut(p).collect();
+        std::thread::scope(|s| {
+            for (c, ((xc, ac), lc)) in xs_chunks
+                .into_iter()
+                .zip(aprod_chunks)
+                .zip(last_chunks)
+                .enumerate()
+            {
+                s.spawn(move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    let mut state = vec![C32::ZERO; p];
+                    let mut prod = vec![C32::ONE; p];
+                    for k in 0..len {
+                        let g = (start + k) * p;
+                        let row = k * p;
+                        for j in 0..p {
+                            let x = a[g + j] * state[j] + b[g + j];
+                            state[j] = x;
+                            xc[row + j] = x;
+                            prod[j] = a[g + j] * prod[j];
+                        }
+                    }
+                    ac.copy_from_slice(&prod);
+                    lc.copy_from_slice(&state);
+                });
+            }
+        });
+    }
+
+    let mut enter = vec![C32::ZERO; n_chunks * p];
+    {
+        let mut state = vec![C32::ZERO; p];
+        for c in 0..n_chunks {
+            enter[c * p..(c + 1) * p].copy_from_slice(&state);
+            for j in 0..p {
+                state[j] = a_prod[c * p + j] * state[j] + last[c * p + j];
+            }
+        }
+    }
+
+    {
+        let xs_chunks: Vec<&mut [C32]> = xs.chunks_mut(chunk * p).collect();
+        std::thread::scope(|s| {
+            for (c, xc) in xs_chunks.into_iter().enumerate() {
+                let enter_c = &enter[c * p..(c + 1) * p];
+                s.spawn(move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    let mut carry: Vec<C32> = enter_c.to_vec();
+                    if carry.iter().all(|z| *z == C32::ZERO) {
+                        return;
+                    }
+                    for k in 0..len {
+                        let g = (start + k) * p;
+                        let row = k * p;
+                        for j in 0..p {
+                            carry[j] = a[g + j] * carry[j];
+                            xc[row + j] += carry[j];
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    xs
+}
+
+/// Planar (struct-of-arrays) sequential scan: separate re/im f32 streams,
+/// matching the L1 kernel's memory layout.
+///
+/// §Perf experiment (EXPERIMENTS.md): the interleaved `C32` loop carries a
+/// real↔imag data dependence per element that blocks autovectorization;
+/// planar streams let LLVM emit SIMD mul/fma over the P lanes. Same math,
+/// same O(L·P) work.
+pub fn scan_sequential_ti_planar(
+    ar: &[f32],
+    ai: &[f32],
+    br: &[f32],
+    bi: &[f32],
+    l: usize,
+    p: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(ar.len(), p);
+    assert_eq!(br.len(), l * p);
+    let mut xr = vec![0.0f32; l * p];
+    let mut xi = vec![0.0f32; l * p];
+    let mut sr = vec![0.0f32; p];
+    let mut si = vec![0.0f32; p];
+    for k in 0..l {
+        let row = k * p;
+        let (brk, bik) = (&br[row..row + p], &bi[row..row + p]);
+        let (xrk, xik) = (&mut xr[row..row + p], &mut xi[row..row + p]);
+        for j in 0..p {
+            let nr = ar[j] * sr[j] - ai[j] * si[j] + brk[j];
+            let ni = ar[j] * si[j] + ai[j] * sr[j] + bik[j];
+            sr[j] = nr;
+            si[j] = ni;
+            xrk[j] = nr;
+            xik[j] = ni;
+        }
+    }
+    (xr, xi)
+}
+
+/// Dense-state-matrix sequential recurrence x_k = Ā x_{k−1} + b_k — the
+/// O(L·P²) strawman of §2.2 (its *parallel* form would need O(P³) matrix
+/// products per combine, which is the cost the diagonalization removes).
+///
+/// `a_dense`: row-major (P, P) in C64 for accuracy; `b`: (L, P).
+pub fn scan_dense_sequential(a_dense: &[C64], b: &[C64], l: usize, p: usize) -> Vec<C64> {
+    assert_eq!(a_dense.len(), p * p);
+    assert_eq!(b.len(), l * p);
+    let mut xs = vec![C64::ZERO; l * p];
+    let mut state = vec![C64::ZERO; p];
+    let mut next = vec![C64::ZERO; p];
+    for k in 0..l {
+        for i in 0..p {
+            let mut acc = b[k * p + i];
+            for j in 0..p {
+                acc += a_dense[i * p + j] * state[j];
+            }
+            next[i] = acc;
+        }
+        std::mem::swap(&mut state, &mut next);
+        xs[k * p..(k + 1) * p].copy_from_slice(&state);
+    }
+    xs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testing::prop;
+
+    fn rand_c32(g: &mut Rng, n: usize, scale: f32) -> Vec<C32> {
+        (0..n)
+            .map(|_| C32::new(g.normal() as f32 * scale, g.normal() as f32 * scale))
+            .collect()
+    }
+
+    fn close(a: &[C32], b: &[C32], tol: f32) -> prop::PropResult {
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            let d = (*x - *y).abs();
+            let s = 1.0 + x.abs().max(y.abs());
+            if d > tol * s {
+                return Err(format!("idx {i}: {x:?} !~ {y:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn sequential_ti_matches_tv() {
+        let mut g = Rng::new(0);
+        let (l, p) = (50, 4);
+        let a = rand_c32(&mut g, p, 0.5);
+        let b = rand_c32(&mut g, l * p, 1.0);
+        let mut a_full = Vec::with_capacity(l * p);
+        for _ in 0..l {
+            a_full.extend_from_slice(&a);
+        }
+        let x1 = scan_sequential_ti(&a, &b, l, p);
+        let x2 = scan_sequential(&a_full, &b, l, p);
+        close(&x1, &x2, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn prop_parallel_ti_matches_sequential() {
+        prop::check("parallel TI scan ≡ sequential", 40, |g| {
+            let l = 1 + g.below(500);
+            let p = 1 + g.below(12);
+            let threads = 1 + g.below(8);
+            let a = rand_c32(g, p, 0.6);
+            let b = rand_c32(g, l * p, 1.0);
+            let seq = scan_sequential_ti(&a, &b, l, p);
+            let par = scan_parallel_ti(&a, &b, l, p, threads);
+            close(&seq, &par, 1e-4)
+        });
+    }
+
+    #[test]
+    fn prop_parallel_tv_matches_sequential() {
+        prop::check("parallel TV scan ≡ sequential", 40, |g| {
+            let l = 1 + g.below(400);
+            let p = 1 + g.below(10);
+            let threads = 1 + g.below(8);
+            let a = rand_c32(g, l * p, 0.6);
+            let b = rand_c32(g, l * p, 1.0);
+            let seq = scan_sequential(&a, &b, l, p);
+            let par = scan_parallel_tv(&a, &b, l, p, threads);
+            close(&seq, &par, 1e-4)
+        });
+    }
+
+    #[test]
+    fn parallel_exact_on_cumsum() {
+        // a = 1: scan is a cumulative sum, easy closed form.
+        let (l, p) = (1000, 2);
+        let a = vec![C32::ONE; p];
+        let b = vec![C32::new(1.0, 0.0); l * p];
+        let xs = scan_parallel_ti(&a, &b, l, p, 4);
+        for k in 0..l {
+            assert!((xs[k * p].re - (k as f32 + 1.0)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn dense_scan_matches_diagonal_when_a_is_diagonal() {
+        let mut g = Rng::new(3);
+        let (l, p) = (40, 5);
+        let diag: Vec<C64> = (0..p).map(|_| C64::new(g.normal() * 0.4, g.normal() * 0.4)).collect();
+        let mut a_dense = vec![C64::ZERO; p * p];
+        for j in 0..p {
+            a_dense[j * p + j] = diag[j];
+        }
+        let b: Vec<C64> = (0..l * p).map(|_| C64::new(g.normal(), g.normal())).collect();
+        let dense = scan_dense_sequential(&a_dense, &b, l, p);
+
+        let a32: Vec<C32> = diag.iter().map(|z| z.to_c32()).collect();
+        let b32: Vec<C32> = b.iter().map(|z| z.to_c32()).collect();
+        let diag_xs = scan_sequential_ti(&a32, &b32, l, p);
+        for (x, y) in dense.iter().zip(diag_xs.iter()) {
+            assert!((x.to_c32() - *y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn prop_planar_matches_interleaved() {
+        prop::check("planar scan ≡ interleaved", 30, |g| {
+            let l = 1 + g.below(300);
+            let p = 1 + g.below(16);
+            let a = rand_c32(g, p, 0.6);
+            let b = rand_c32(g, l * p, 1.0);
+            let ar: Vec<f32> = a.iter().map(|z| z.re).collect();
+            let ai: Vec<f32> = a.iter().map(|z| z.im).collect();
+            let br: Vec<f32> = b.iter().map(|z| z.re).collect();
+            let bi: Vec<f32> = b.iter().map(|z| z.im).collect();
+            let want = scan_sequential_ti(&a, &b, l, p);
+            let (xr, xi) = scan_sequential_ti_planar(&ar, &ai, &br, &bi, l, p);
+            for (i, w) in want.iter().enumerate() {
+                let s = 1.0 + w.abs();
+                if (xr[i] - w.re).abs() > 1e-4 * s || (xi[i] - w.im).abs() > 1e-4 * s {
+                    return Err(format!("idx {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_and_single_element() {
+        let a = vec![C32::new(0.5, 0.0)];
+        assert!(scan_sequential_ti(&a, &[], 0, 1).is_empty());
+        let b = vec![C32::new(2.0, -1.0)];
+        let xs = scan_parallel_ti(&a, &b, 1, 1, 8);
+        assert_eq!(xs[0], b[0]); // x_1 = b_1
+    }
+}

@@ -1,0 +1,94 @@
+//! Mini property-testing harness (the offline build has no `proptest`).
+//!
+//! [`prop::check`] runs a closure against many deterministically-seeded RNG
+//! streams; a failure reports the seed so the case replays exactly. This is
+//! intentionally shrink-free: generators here draw structured inputs whose
+//! failing seeds are already small enough to debug directly.
+
+pub mod prop {
+    use crate::rng::Rng;
+
+    /// Outcome of a single property evaluation.
+    pub type PropResult = Result<(), String>;
+
+    /// Assert a boolean inside a property.
+    pub fn ensure(ok: bool) -> PropResult {
+        if ok {
+            Ok(())
+        } else {
+            Err("property violated".to_string())
+        }
+    }
+
+    /// Assert with a message.
+    pub fn ensure_msg(ok: bool, msg: impl Into<String>) -> PropResult {
+        if ok {
+            Ok(())
+        } else {
+            Err(msg.into())
+        }
+    }
+
+    /// Assert two f64 values are close (absolute + relative tolerance).
+    pub fn close_f64(a: f64, b: f64, tol: f64) -> PropResult {
+        let scale = 1.0 + a.abs().max(b.abs());
+        ensure_msg(
+            (a - b).abs() <= tol * scale,
+            format!("{a} !~ {b} (tol {tol})"),
+        )
+    }
+
+    /// Assert two f32 slices are elementwise close.
+    pub fn close_slice_f32(a: &[f32], b: &[f32], tol: f32) -> PropResult {
+        ensure_msg(a.len() == b.len(), format!("len {} != {}", a.len(), b.len()))?;
+        for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+            let scale = 1.0 + x.abs().max(y.abs());
+            if (x - y).abs() > tol * scale {
+                return Err(format!("idx {i}: {x} !~ {y} (tol {tol})"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Run `cases` evaluations of `f`, each with a fresh deterministic RNG.
+    ///
+    /// Panics (failing the enclosing `#[test]`) on the first violated case,
+    /// printing the replay seed.
+    pub fn check<F>(name: &str, cases: u64, mut f: F)
+    where
+        F: FnMut(&mut Rng) -> PropResult,
+    {
+        for case in 0..cases {
+            let seed = 0x5EED_0000_0000 ^ case.wrapping_mul(0x9E37_79B9);
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop;
+
+    #[test]
+    fn passing_property_passes() {
+        prop::check("tautology", 50, |g| {
+            let x = g.uniform();
+            prop::ensure((0.0..1.0).contains(&x))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_panics_with_seed() {
+        prop::check("must fail", 10, |g| prop::ensure(g.uniform() < -1.0));
+    }
+
+    #[test]
+    fn close_slice_reports_index() {
+        let e = prop::close_slice_f32(&[1.0, 2.0], &[1.0, 3.0], 1e-3).unwrap_err();
+        assert!(e.contains("idx 1"), "{e}");
+    }
+}

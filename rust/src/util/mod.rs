@@ -1,0 +1,319 @@
+//! Shared utilities: logging, wall-clock timing, summary statistics, ASCII
+//! table rendering (for the paper-table benches) and a small CLI argument
+//! parser (the offline build has no `clap`).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Logging
+// ---------------------------------------------------------------------------
+
+/// Log level for [`log`].
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Debug,
+    Info,
+    Warn,
+    Error,
+}
+
+static VERBOSE: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Enable debug-level logging.
+pub fn set_verbose(v: bool) {
+    VERBOSE.store(v, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Timestamped stderr logging.
+pub fn log(level: Level, msg: &str) {
+    if level == Level::Debug && !VERBOSE.load(std::sync::atomic::Ordering::Relaxed) {
+        return;
+    }
+    let tag = match level {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    eprintln!("[{tag} {:>10.3}s] {msg}", uptime());
+}
+
+/// Seconds since first call (process-relative clock).
+pub fn uptime() -> f64 {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log($crate::util::Level::Info, &format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log($crate::util::Level::Debug, &format!($($t)*)) };
+}
+
+// ---------------------------------------------------------------------------
+// Timing + stats
+// ---------------------------------------------------------------------------
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Summary statistics over a sample of measurements.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    /// Compute stats from raw samples.
+    pub fn from(samples: &[f64]) -> Stats {
+        if samples.is_empty() {
+            return Stats::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n.max(2).saturating_sub(1) as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| sorted[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: pct(0.5),
+            p95: pct(0.95),
+        }
+    }
+}
+
+/// Time `f` over `iters` iterations after `warmup` runs; returns per-call
+/// seconds.
+pub fn time_fn<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from(&samples)
+}
+
+// ---------------------------------------------------------------------------
+// ASCII tables (paper-table output)
+// ---------------------------------------------------------------------------
+
+/// Minimal fixed-width table renderer used by the bench harness to print
+/// rows in the same layout as the paper's tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (c, cell) in cells.iter().enumerate() {
+                out.push_str("| ");
+                out.push_str(cell);
+                out.push_str(&" ".repeat(widths[c] - cell.len() + 1));
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out, &self.headers);
+        for (c, w) in widths.iter().enumerate() {
+            out.push_str(if c == 0 { "|" } else { "|" });
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("|\n");
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI argument parsing (no `clap` offline)
+// ---------------------------------------------------------------------------
+
+/// Parsed `--key value` / `--flag` command-line arguments plus positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (after argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Human-readable byte count.
+pub fn human_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.1} {}", UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn stats_empty() {
+        let s = Stats::from(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn args_parsing() {
+        let a = Args::parse(
+            ["train", "--preset", "smnist", "--steps=100", "--verbose", "--lr", "0.003"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("preset"), Some("smnist"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert!((a.get_f64("lr", 0.0) - 0.003).abs() < 1e-12);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn args_trailing_flag() {
+        let a = Args::parse(["--fast"].iter().map(|s| s.to_string()));
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Model", "Acc"]);
+        t.row(&["S5".into(), "98.58".into()]);
+        t.row(&["S4-LegS".into(), "96.35".into()]);
+        let s = t.render();
+        assert!(s.contains("| S5      |"), "{s}");
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512.0 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+}
+pub mod pgm;

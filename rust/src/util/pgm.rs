@@ -1,0 +1,100 @@
+//! PGM image export: dump generator samples (Pathfinder renders, pendulum
+//! frames, digit glyphs) for visual inspection — `s5 data --dump DIR`.
+//!
+//! Plain binary PGM (P5): universally viewable, zero dependencies.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a grayscale image (row-major, any real range — min/max normalized)
+/// as binary PGM.
+pub fn write_pgm(path: &Path, pixels: &[f32], width: usize, height: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(pixels.len() == width * height, "pixel count mismatch");
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &p in pixels {
+        lo = lo.min(p);
+        hi = hi.max(p);
+    }
+    let span = if hi > lo { hi - lo } else { 1.0 };
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{width} {height}\n255\n")?;
+    let bytes: Vec<u8> = pixels
+        .iter()
+        .map(|&p| (((p - lo) / span) * 255.0).round().clamp(0.0, 255.0) as u8)
+        .collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Parse a PGM file back (for round-trip tests).
+pub fn read_pgm(path: &Path) -> anyhow::Result<(Vec<u8>, usize, usize)> {
+    let data = std::fs::read(path)?;
+    let text_end = data
+        .windows(1)
+        .enumerate()
+        .filter(|(_, w)| w[0] == b'\n')
+        .map(|(i, _)| i)
+        .nth(2)
+        .ok_or_else(|| anyhow::anyhow!("bad pgm header"))?;
+    let header = std::str::from_utf8(&data[..text_end])?;
+    let mut it = header.split_whitespace();
+    anyhow::ensure!(it.next() == Some("P5"), "not a P5 pgm");
+    let width: usize = it.next().unwrap_or("0").parse()?;
+    let height: usize = it.next().unwrap_or("0").parse()?;
+    let pixels = data[text_end + 1..].to_vec();
+    anyhow::ensure!(pixels.len() == width * height, "truncated pgm");
+    Ok((pixels, width, height))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("s5_pgm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmp("rt.pgm");
+        let img: Vec<f32> = (0..64).map(|i| i as f32 / 63.0).collect();
+        write_pgm(&path, &img, 8, 8).unwrap();
+        let (px, w, h) = read_pgm(&path).unwrap();
+        assert_eq!((w, h), (8, 8));
+        assert_eq!(px[0], 0);
+        assert_eq!(px[63], 255);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn constant_image_does_not_divide_by_zero() {
+        let path = tmp("flat.pgm");
+        write_pgm(&path, &[0.5; 16], 4, 4).unwrap();
+        let (px, _, _) = read_pgm(&path).unwrap();
+        assert!(px.iter().all(|&p| p == 0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_dims() {
+        let path = tmp("bad.pgm");
+        assert!(write_pgm(&path, &[0.0; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn dump_real_generators() {
+        use crate::data::TaskGen;
+        let dir = std::env::temp_dir().join(format!("s5_dumps_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = crate::rng::Rng::new(0);
+        let pf = crate::data::pathfinder::Pathfinder::new(32);
+        let ex = pf.sample(&mut rng);
+        write_pgm(&dir.join("pathfinder.pgm"), &ex.x, 32, 32).unwrap();
+        let frame = crate::data::pendulum::PendulumSim::render(1.0);
+        write_pgm(&dir.join("pendulum.pgm"), &frame, 24, 24).unwrap();
+        assert!(read_pgm(&dir.join("pathfinder.pgm")).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,139 @@
+//! Three-way parity: compiled HLO (L1 Pallas kernel + L2 JAX model) vs the
+//! pure-Rust S5 oracle, on identical parameters.
+//!
+//! This is the test that pins the whole stack together: the quickstart
+//! artifact's npz parameters are loaded into BOTH the PJRT executable and
+//! the Rust [`s5::ssm::s5::S5Layer`]; outputs must agree to f32 tolerances.
+//! A failure here means the L2 math and the reference implementation have
+//! diverged (or the manifest/param plumbing reordered something).
+
+use s5::num::C64;
+use s5::rng::Rng;
+use s5::runtime::params::{assemble_inputs, literal_f32, to_vec_f32, ParamStore};
+use s5::runtime::{Artifact, Client};
+use s5::ssm::s5::S5Layer;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("quickstart_fwd.hlo.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Build an S5Layer from the quickstart npz (the same tensors the HLO gets).
+fn layer_from_store(store: &ParamStore, h: usize, p2: usize) -> S5Layer {
+    let f = |name: &str| -> Vec<f32> {
+        to_vec_f32(store.get(name).unwrap_or_else(|| panic!("missing {name}"))).unwrap()
+    };
+    let lam_re = f("params.lambda_re");
+    let lam_im = f("params.lambda_im");
+    let b_re = f("params.b_re");
+    let b_im = f("params.b_im");
+    let c_re = f("params.c_re");
+    let c_im = f("params.c_im");
+    let n_dir = c_re.len() / (h * p2);
+    S5Layer {
+        lambda: (0..p2)
+            .map(|i| C64::new(lam_re[i] as f64, lam_im[i] as f64))
+            .collect(),
+        b_tilde: (0..p2 * h)
+            .map(|i| C64::new(b_re[i] as f64, b_im[i] as f64))
+            .collect(),
+        c_tilde: (0..n_dir)
+            .map(|d| {
+                (0..h * p2)
+                    .map(|i| {
+                        C64::new(c_re[d * h * p2 + i] as f64, c_im[d * h * p2 + i] as f64)
+                    })
+                    .collect()
+            })
+            .collect(),
+        d: f("params.d"),
+        log_dt: f("params.log_dt"),
+        gate_w: f("params.gate_w"),
+        norm_scale: f("params.norm_scale"),
+        norm_bias: f("params.norm_bias"),
+        h,
+        p2,
+    }
+}
+
+#[test]
+fn quickstart_layer_hlo_matches_rust_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let client = Client::cpu().unwrap();
+    let art = Artifact::load(dir, "quickstart_fwd", &client).unwrap();
+    let store = ParamStore::load_npz(&Artifact::init_npz_path(dir, "quickstart")).unwrap();
+
+    let (l, h, p2) = (128usize, 8usize, 4usize);
+    let mut rng = Rng::new(0xFEED);
+    let u: Vec<f32> = rng.normal_vec_f32(l * h);
+
+    // HLO path
+    let mut extra = BTreeMap::new();
+    extra.insert("u".to_string(), literal_f32(&u, &[l, h]).unwrap());
+    let inputs = assemble_inputs(&art.manifest, &store, &mut extra).unwrap();
+    let outs = art.run(&inputs).unwrap();
+    let y_hlo = to_vec_f32(&outs[0]).unwrap();
+
+    // Rust oracle path
+    let layer = layer_from_store(&store, h, p2);
+    let y_rust = layer.apply(&u, l, 1.0, None, 1);
+
+    assert_eq!(y_hlo.len(), y_rust.len());
+    let mut max_err = 0.0f32;
+    for (a, b) in y_hlo.iter().zip(y_rust.iter()) {
+        let scale = 1.0 + a.abs().max(b.abs());
+        max_err = max_err.max((a - b).abs() / scale);
+    }
+    assert!(max_err < 2e-3, "HLO vs Rust oracle diverged: max rel err {max_err}");
+}
+
+#[test]
+fn quickstart_parity_across_magnitudes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let client = Client::cpu().unwrap();
+    let art = Artifact::load(dir, "quickstart_fwd", &client).unwrap();
+    let store = ParamStore::load_npz(&Artifact::init_npz_path(dir, "quickstart")).unwrap();
+    let (l, h, p2) = (128usize, 8usize, 4usize);
+    let layer = layer_from_store(&store, h, p2);
+
+    for (seed, scale) in [(1u64, 0.01f32), (2, 1.0), (3, 10.0)] {
+        let mut rng = Rng::new(seed);
+        let u: Vec<f32> = rng.normal_vec_f32(l * h).iter().map(|v| v * scale).collect();
+        let mut extra = BTreeMap::new();
+        extra.insert("u".to_string(), literal_f32(&u, &[l, h]).unwrap());
+        let inputs = assemble_inputs(&art.manifest, &store, &mut extra).unwrap();
+        let y_hlo = to_vec_f32(&art.run(&inputs).unwrap()[0]).unwrap();
+        let y_rust = layer.apply(&u, l, 1.0, None, 1);
+        for (i, (a, b)) in y_hlo.iter().zip(y_rust.iter()).enumerate() {
+            let s = 1.0 + a.abs().max(b.abs());
+            assert!(
+                (a - b).abs() / s < 5e-3,
+                "scale {scale}, idx {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn oracle_parallel_scan_agrees_inside_parity_setup() {
+    // layered sanity: the oracle's threaded path equals its sequential path
+    // on the real quickstart parameters (ties the scan substrate into the
+    // parity chain).
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ParamStore::load_npz(&Artifact::init_npz_path(dir, "quickstart")).unwrap();
+    let layer = layer_from_store(&store, 8, 4);
+    let mut rng = Rng::new(7);
+    let u = rng.normal_vec_f32(128 * 8);
+    let y1 = layer.apply(&u, 128, 1.0, None, 1);
+    let y4 = layer.apply(&u, 128, 1.0, None, 4);
+    for (a, b) in y1.iter().zip(y4.iter()) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}

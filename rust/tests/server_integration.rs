@@ -1,0 +1,140 @@
+//! Integration: the inference server against a real compiled artifact —
+//! batching, concurrency, error propagation.
+
+use s5::coordinator::server::{InferenceServer, ServerConfig};
+use s5::data::make_task;
+use s5::rng::Rng;
+use std::path::Path;
+use std::time::Duration;
+
+fn have(name: &str) -> bool {
+    Path::new("artifacts").join(format!("{name}.hlo.txt")).exists()
+}
+
+fn start(preset: &str, max_wait_ms: u64) -> InferenceServer {
+    InferenceServer::start(
+        Path::new("artifacts"),
+        preset,
+        None,
+        ServerConfig { max_wait: Duration::from_millis(max_wait_ms) },
+    )
+    .unwrap()
+}
+
+#[test]
+fn single_request_roundtrip() {
+    if !have("smnist_fwd") {
+        return;
+    }
+    let server = start("smnist", 1);
+    let task = make_task("smnist").unwrap();
+    let ex = task.sample(&mut Rng::new(0));
+    let resp = server.handle().infer(ex.x).unwrap();
+    assert_eq!(resp.logits.len(), 10);
+    assert!(resp.logits.iter().all(|v| v.is_finite()));
+    assert!(resp.batched_with >= 1);
+}
+
+#[test]
+fn concurrent_requests_are_batched() {
+    if !have("smnist_fwd") {
+        return;
+    }
+    let server = start("smnist", 50);
+    let handle = server.handle();
+    let task = make_task("smnist").unwrap();
+    let fills: Vec<usize> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..16)
+            .map(|i| {
+                let h = handle.clone();
+                let task = &task;
+                s.spawn(move || {
+                    let ex = task.sample(&mut Rng::new(i));
+                    h.infer(ex.x).unwrap().batched_with
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    // with a 50ms window and 16 concurrent clients, at least one executed
+    // batch must have coalesced multiple requests
+    assert!(
+        fills.iter().any(|&f| f > 1),
+        "no batching observed: fills {fills:?}"
+    );
+    assert!(server.stats.mean_batch_fill() > 1.0);
+}
+
+#[test]
+fn wrong_width_rejected_immediately() {
+    if !have("smnist_fwd") {
+        return;
+    }
+    let server = start("smnist", 1);
+    let err = server.handle().infer(vec![0.0; 3]).unwrap_err();
+    assert!(format!("{err}").contains("width"), "{err}");
+}
+
+#[test]
+fn different_timescales_do_not_share_a_batch() {
+    if !have("smnist_fwd") {
+        return;
+    }
+    let server = start("smnist", 30);
+    let handle = server.handle();
+    let task = make_task("smnist").unwrap();
+    std::thread::scope(|s| {
+        let h1 = handle.clone();
+        let h2 = handle.clone();
+        let t1 = &task;
+        let t2 = &task;
+        let a = s.spawn(move || {
+            let ex = t1.sample(&mut Rng::new(1));
+            h1.infer_with_timescale(ex.x, 1.0).unwrap()
+        });
+        let b = s.spawn(move || {
+            let ex = t2.sample(&mut Rng::new(2));
+            h2.infer_with_timescale(ex.x, 2.0).unwrap()
+        });
+        let (ra, rb) = (a.join().unwrap(), b.join().unwrap());
+        // both served; a mixed batch would have corrupted one of them
+        assert_eq!(ra.logits.len(), 10);
+        assert_eq!(rb.logits.len(), 10);
+    });
+}
+
+#[test]
+fn throughput_improves_with_batching_window() {
+    if !have("smnist_fwd") {
+        return;
+    }
+    let task = make_task("smnist").unwrap();
+    let run = |server: &InferenceServer, n: usize| -> f64 {
+        let handle = server.handle();
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            let joins: Vec<_> = (0..n)
+                .map(|i| {
+                    let h = handle.clone();
+                    let task = &task;
+                    s.spawn(move || {
+                        let ex = task.sample(&mut Rng::new(i as u64));
+                        h.infer(ex.x).unwrap();
+                    })
+                })
+                .collect();
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
+        n as f64 / t0.elapsed().as_secs_f64()
+    };
+    let batched = start("smnist", 20);
+    let tput_batched = run(&batched, 32);
+    drop(batched);
+    let unbatched = start("smnist", 0);
+    let tput_unbatched = run(&unbatched, 32);
+    eprintln!("throughput batched={tput_batched:.1}/s unbatched={tput_unbatched:.1}/s");
+    // batching should never be catastrophically worse; usually much better
+    assert!(tput_batched > tput_unbatched * 0.5);
+}

@@ -1,0 +1,125 @@
+//! Integration: the full train → eval → checkpoint → re-serve cycle
+//! against real compiled artifacts (skipped when artifacts/ is absent).
+
+use s5::coordinator::{TrainConfig, Trainer};
+use s5::runtime::{Client, ParamStore};
+use std::path::Path;
+
+fn have(name: &str) -> bool {
+    Path::new("artifacts").join(format!("{name}.hlo.txt")).exists()
+}
+
+fn quick_cfg(preset: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::for_preset(preset);
+    cfg.steps = 6;
+    cfg.train_pool = 24;
+    cfg.eval_pool = 8;
+    cfg.eval_every = 0;
+    cfg.warmup_steps = 2;
+    cfg
+}
+
+#[test]
+fn classifier_train_step_decreases_loss_over_steps() {
+    if !have("smnist_train") {
+        return;
+    }
+    let client = Client::cpu().unwrap();
+    let mut cfg = quick_cfg("smnist");
+    cfg.steps = 20;
+    let mut t = Trainer::new(&client, cfg).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..20 {
+        let (loss, _) = t.train_step().unwrap();
+        assert!(loss.is_finite());
+        losses.push(loss);
+    }
+    let head: f64 = losses[..5].iter().sum::<f64>() / 5.0;
+    let tail: f64 = losses[15..].iter().sum::<f64>() / 5.0;
+    assert!(
+        tail < head,
+        "loss did not trend down: head {head:.4} tail {tail:.4} ({losses:?})"
+    );
+}
+
+#[test]
+fn evaluate_returns_sane_accuracy() {
+    if !have("smnist_fwd") {
+        return;
+    }
+    let client = Client::cpu().unwrap();
+    let mut t = Trainer::new(&client, quick_cfg("smnist")).unwrap();
+    let (loss, acc) = t.evaluate().unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_params() {
+    if !have("smnist_train") {
+        return;
+    }
+    let client = Client::cpu().unwrap();
+    let mut t = Trainer::new(&client, quick_cfg("smnist")).unwrap();
+    t.train_step().unwrap();
+    let dir = std::env::temp_dir().join(format!("s5_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ck.npz");
+    t.save_checkpoint(&path).unwrap();
+    let store = ParamStore::load_npz(&path).unwrap();
+    assert_eq!(store.len(), t.params().len());
+    assert!(store.names().all(|n| n.starts_with("params.")));
+    // a trained parameter differs from the init npz
+    let init =
+        ParamStore::load_npz(Path::new("artifacts/smnist_init.npz")).unwrap();
+    let name = "params.decoder.w";
+    let a = s5::runtime::params::to_vec_f32(store.get(name).unwrap()).unwrap();
+    let b = s5::runtime::params::to_vec_f32(init.get(name).unwrap()).unwrap();
+    assert_ne!(a, b, "training must move the decoder weights");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pendulum_trainer_runs_and_regresses() {
+    if !have("pendulum_train") {
+        return;
+    }
+    let client = Client::cpu().unwrap();
+    let mut cfg = quick_cfg("pendulum");
+    cfg.eval_pool = 16;
+    let mut t = Trainer::new(&client, cfg).unwrap();
+    for _ in 0..4 {
+        let (loss, mse) = t.train_step().unwrap();
+        assert!(loss.is_finite() && mse >= 0.0);
+    }
+    let (mse, _) = t.evaluate().unwrap();
+    // sin/cos targets are in [-1,1]: an untrained-but-sane model sits below
+    // trivial variance bounds
+    assert!(mse < 5.0, "pendulum eval MSE insane: {mse}");
+}
+
+#[test]
+fn retrieval_trainer_runs() {
+    if !have("retrieval_train") {
+        return;
+    }
+    let client = Client::cpu().unwrap();
+    let mut cfg = quick_cfg("retrieval");
+    cfg.eval_pool = 8;
+    let mut t = Trainer::new(&client, cfg).unwrap();
+    let (loss, acc) = t.train_step().unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn timescale_changes_eval_output() {
+    if !have("smnist_fwd") {
+        return;
+    }
+    let client = Client::cpu().unwrap();
+    let mut t = Trainer::new(&client, quick_cfg("smnist")).unwrap();
+    let (l1, _) = t.evaluate_with_timescale(1.0).unwrap();
+    let (l2, _) = t.evaluate_with_timescale(4.0).unwrap();
+    assert!((l1 - l2).abs() > 1e-9, "timescale input had no effect");
+}
