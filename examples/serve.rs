@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         dir,
         "smnist",
         None,
-        ServerConfig { max_wait: Duration::from_millis(10) },
+        ServerConfig { max_wait: Duration::from_millis(10), ..Default::default() },
     )?;
     let (tput_b, lat_b) = drive(&batched, n_requests, clients);
     println!(
@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
         dir,
         "smnist",
         None,
-        ServerConfig { max_wait: Duration::from_millis(0) },
+        ServerConfig { max_wait: Duration::from_millis(0), ..Default::default() },
     )?;
     let (tput_u, lat_u) = drive(&unbatched, n_requests, clients);
     println!(

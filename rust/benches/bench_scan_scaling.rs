@@ -1,18 +1,24 @@
 //! Proposition 1 / §2.2 / Appendix H: parallel-scan scaling measurements.
 //!
-//! Three claims under measurement:
+//! Four claims under measurement:
 //!  1. the multi-threaded Blelloch scan speeds up with cores at long L
 //!     (work-efficient: total ops stay O(P·L));
 //!  2. the dense-A scan is catastrophically more expensive than the
 //!     diagonal scan (why S5 diagonalizes, §2.2);
-//!  3. scan cost grows linearly in L (vs the FFT path's L·log L).
+//!  3. scan cost grows linearly in L (vs the FFT path's L·log L);
+//!  4. the batched engine beats a loop of single-sequence forwards
+//!     (sequences/sec vs batch size × threads) — the dynamic-batching
+//!     payoff the native server builds on.
 //!
 //! Run: `cargo bench --bench bench_scan_scaling`
 
 use s5::bench::{fmt_secs, measure, quick_mode};
 use s5::num::{C32, C64};
 use s5::rng::Rng;
+use s5::ssm::engine::EngineWorkspace;
+use s5::ssm::s5::{S5Config, S5Model};
 use s5::ssm::scan;
+use s5::ssm::scan::backend_for_threads;
 use s5::util::Table;
 
 fn rand_c32(rng: &mut Rng, n: usize, scale: f32) -> Vec<C32> {
@@ -121,4 +127,64 @@ fn main() {
         ]);
     }
     println!("## O(L) scaling (time/L should be ~constant)\n{}", t.render());
+
+    // 4. batched engine throughput: one workspace-reusing batched forward
+    // vs a loop of single-sequence forwards at the same thread budget.
+    {
+        let cfg = S5Config { h: 32, p: 32, j: 1, ..Default::default() };
+        let model = S5Model::init(4, 10, 2, &cfg, &mut Rng::new(5));
+        let lb = if quick { 96 } else { 384 };
+        let mut rng = Rng::new(6);
+        let mut t = Table::new(&[
+            "threads", "B", "batched seq/s", "single-loop seq/s", "batched speedup",
+        ]);
+        let mut thread_counts = vec![2usize];
+        if max_threads > 2 {
+            thread_counts.push(max_threads);
+        }
+        for &threads in &thread_counts {
+            let backend = backend_for_threads(threads);
+            let mut ws = EngineWorkspace::new();
+            for &bsz in &[1usize, 4, 8, 16] {
+                let u = rng.normal_vec_f32(bsz * lb * 4);
+                let mut out = vec![0.0f32; bsz * 10];
+                // warm the workspace so the measured loop is steady-state
+                model.forward_batch_into(&u, bsz, lb, 1.0, backend.as_ref(), &mut ws, &mut out);
+                let st_batched = measure(&format!("batched T{threads} B{bsz}"), || {
+                    model.forward_batch_into(
+                        &u,
+                        bsz,
+                        lb,
+                        1.0,
+                        backend.as_ref(),
+                        &mut ws,
+                        &mut out,
+                    );
+                    std::hint::black_box(&out);
+                });
+                let st_loop = measure(&format!("single-loop T{threads} B{bsz}"), || {
+                    for bi in 0..bsz {
+                        std::hint::black_box(model.forward(
+                            &u[bi * lb * 4..(bi + 1) * lb * 4],
+                            lb,
+                            1.0,
+                            threads,
+                        ));
+                    }
+                });
+                t.row(&[
+                    threads.to_string(),
+                    bsz.to_string(),
+                    format!("{:.1}", bsz as f64 / st_batched.mean),
+                    format!("{:.1}", bsz as f64 / st_loop.mean),
+                    format!("{:.2}x", st_loop.mean / st_batched.mean),
+                ]);
+            }
+        }
+        println!(
+            "## batched engine vs single-sequence loop (L={lb}, H=32, 2 layers)\n{}",
+            t.render()
+        );
+        println!("expected shape: batched speedup > 1x from B=4 up at ≥2 threads");
+    }
 }

@@ -1,28 +1,101 @@
 //! Serving benchmark: throughput/latency of the L3 inference server as a
-//! function of the dynamic-batching window. Not a paper table — this
-//! validates that the coordinator itself is not the bottleneck (the L3
-//! perf target in DESIGN.md §6).
+//! function of the dynamic-batching window and batch cap. Not a paper
+//! table — this validates that the coordinator itself is not the
+//! bottleneck (the L3 perf target in DESIGN.md §6).
+//!
+//! The native batched engine runs unconditionally (no artifacts needed);
+//! the PJRT sweep runs when the crate is built with the `pjrt` feature and
+//! `artifacts/` exists.
 //!
 //! Run: `cargo bench --bench bench_server`
 
 use s5::bench::quick_mode;
-use s5::coordinator::server::{InferenceServer, ServerConfig};
-use s5::data::make_task;
+use s5::coordinator::server::{NativeInferenceServer, RunningServer, ServerConfig};
 use s5::rng::Rng;
+use s5::ssm::s5::{S5Config, S5Model};
 use s5::util::{Stats, Table};
-use std::path::Path;
 use std::time::Duration;
 
+/// Fire `n_requests` across `clients` threads; returns latencies.
+fn drive(server: &RunningServer, l: usize, d_in: usize, n_requests: usize, clients: usize) -> Vec<f64> {
+    let handle = server.handle();
+    std::thread::scope(|s| {
+        let joins: Vec<_> = (0..clients)
+            .map(|c| {
+                let h = handle.clone();
+                let per = n_requests / clients;
+                s.spawn(move || {
+                    let mut rng = Rng::new(c as u64);
+                    (0..per)
+                        .map(|_| {
+                            let x = rng.normal_vec_f32(l * d_in);
+                            h.infer(x).expect("infer").total_secs
+                        })
+                        .collect::<Vec<f64>>()
+                })
+            })
+            .collect();
+        joins.into_iter().flat_map(|j| j.join().unwrap()).collect()
+    })
+}
+
 fn main() {
+    let quick = quick_mode();
+    let n_requests = if quick { 24 } else { 96 };
+    let clients = 12;
+    let (l, d_in, classes) = (if quick { 64 } else { 256 }, 4usize, 10usize);
+
+    println!(
+        "# Native inference server: batching-window sweep ({n_requests} requests, {clients} clients, L={l})\n"
+    );
+    let cfg_model = S5Config { h: 32, p: 32, j: 1, ..Default::default() };
+    let model = S5Model::init(d_in, classes, 2, &cfg_model, &mut Rng::new(3));
+
+    let mut table = Table::new(&[
+        "max_wait", "max_batch", "req/s", "p50 latency", "p95 latency", "mean batch fill",
+    ]);
+    for (wait_ms, max_batch) in [(0u64, 16usize), (1, 16), (5, 16), (20, 16), (5, 1), (5, 4)] {
+        let server = RunningServer::Native(NativeInferenceServer::start(
+            model.clone(),
+            l,
+            ServerConfig {
+                max_wait: Duration::from_millis(wait_ms),
+                max_batch,
+                threads: 0, // auto
+            },
+        ));
+        let t0 = std::time::Instant::now();
+        let lat = drive(&server, l, d_in, n_requests, clients);
+        let wall = t0.elapsed().as_secs_f64();
+        let st = Stats::from(&lat);
+        table.row(&[
+            format!("{wait_ms}ms"),
+            max_batch.to_string(),
+            format!("{:.1}", lat.len() as f64 / wall),
+            format!("{:.1}ms", st.p50 * 1e3),
+            format!("{:.1}ms", st.p95 * 1e3),
+            format!("{:.2}", server.stats().mean_batch_fill()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("expected shape: larger windows → higher fill & throughput, higher p50;\nmax_batch=1 (no coalescing) is the throughput floor");
+
+    #[cfg(feature = "pjrt")]
+    pjrt_sweep(n_requests, clients);
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_sweep(n_requests: usize, clients: usize) {
+    use s5::coordinator::server::InferenceServer;
+    use s5::data::make_task;
+    use std::path::Path;
+
     if !Path::new("artifacts/smnist_fwd.hlo.txt").exists() {
-        eprintln!("artifacts missing — run `make artifacts`");
+        eprintln!("artifacts missing — skipping PJRT sweep (run `make artifacts`)");
         return;
     }
-    let n_requests = if quick_mode() { 24 } else { 96 };
-    let clients = 12;
     let task = make_task("smnist").unwrap();
-
-    println!("# Inference server: batching-window sweep ({n_requests} requests, {clients} clients)\n");
+    println!("\n# PJRT inference server: batching-window sweep\n");
     let mut table = Table::new(&[
         "max_wait", "req/s", "p50 latency", "p95 latency", "mean batch fill",
     ]);
@@ -31,7 +104,7 @@ fn main() {
             Path::new("artifacts"),
             "smnist",
             None,
-            ServerConfig { max_wait: Duration::from_millis(wait_ms) },
+            ServerConfig { max_wait: Duration::from_millis(wait_ms), ..Default::default() },
         )
         .expect("server");
         let handle = server.handle();
@@ -66,5 +139,4 @@ fn main() {
         ]);
     }
     println!("{}", table.render());
-    println!("expected shape: larger windows → higher fill & throughput, higher p50");
 }

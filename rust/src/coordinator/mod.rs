@@ -2,13 +2,20 @@
 //! inference server. Everything after `make artifacts` runs through here —
 //! Python is never on this path.
 
+//!
+//! Training executes compiled artifacts and therefore needs the `pjrt`
+//! feature; serving has both a PJRT mode (`pjrt`) and an always-available
+//! native mode backed by the batched engine in [`crate::ssm::engine`].
+
 pub mod config;
 pub mod metrics;
 pub mod schedule;
 pub mod server;
 pub mod sweep;
 pub mod tasks;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use config::TrainConfig;
+#[cfg(feature = "pjrt")]
 pub use trainer::Trainer;

@@ -1,24 +1,35 @@
-//! Inference server: request queue → dynamic batcher → PJRT worker.
+//! Inference server: request queue → dynamic batcher → worker.
 //!
 //! The serving half of the coordinator (vLLM-router-shaped, scaled to this
 //! system): callers submit single sequences; a worker thread owns the
-//! compiled fwd executable and the parameters, coalesces outstanding
-//! requests into padded batches of the artifact's fixed batch size (waiting
-//! at most `max_wait` for stragglers), executes once per batch, and fans
-//! the logit rows back out. The offline build has no tokio, so the event
-//! loop is built on std::sync::mpsc — which also keeps the hot path free
-//! of async-runtime overhead.
+//! model, coalesces outstanding requests into batches (waiting at most
+//! `max_wait` for stragglers), executes once per batch, and fans the logit
+//! rows back out. The offline build has no tokio, so the event loop is
+//! built on std::sync::mpsc — which also keeps the hot path free of
+//! async-runtime overhead.
+//!
+//! Two execution backends share the queue/batcher/fan-out machinery:
+//!
+//! * **Native** ([`NativeInferenceServer`], always available) — runs the
+//!   pure-Rust batched engine: up to `max_batch` queued sequences are
+//!   packed into one (B, L, d) buffer (via `data/batcher::pack_rows`) and
+//!   pushed through [`S5Model::forward_batch_into`] with a reused
+//!   [`EngineWorkspace`], turning the native path from
+//!   one-request-per-forward into true dynamic batching.
+//! * **PJRT** ([`InferenceServer`], behind the `pjrt` feature) — executes a
+//!   pre-compiled fixed-batch artifact, padding to the artifact's batch
+//!   dimension.
 
 use anyhow::Context;
-use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use xla::Literal;
 
-use crate::runtime::params::{literal_f32, to_vec_f32, ParamStore};
-use crate::runtime::{Artifact, Client};
+use crate::data::batcher::pack_rows_into;
+use crate::ssm::engine::{auto_threads, EngineWorkspace};
+use crate::ssm::s5::S5Model;
+use crate::ssm::scan::backend_for_threads;
 
 /// One inference request: a single (L × d_input) sequence.
 struct Request {
@@ -43,11 +54,17 @@ pub struct Response {
 pub struct ServerConfig {
     /// max time the batcher waits to fill a batch
     pub max_wait: Duration,
+    /// max requests coalesced into one executed batch (native mode; the
+    /// PJRT mode is pinned to the artifact's compiled batch dimension)
+    pub max_batch: usize,
+    /// worker/scan threads for the native engine; 0 = auto-detect via
+    /// `std::thread::available_parallelism`
+    pub threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_wait: Duration::from_millis(2) }
+        ServerConfig { max_wait: Duration::from_millis(2), max_batch: 16, threads: 0 }
     }
 }
 
@@ -96,13 +113,159 @@ impl ServeHandle {
     }
 }
 
-/// A running inference server. Dropping it stops the worker.
+/// Drain the channel into a batch of ≤ `max_batch` same-timescale
+/// requests, waiting at most `max_wait` past the first request.
+/// Mismatched-timescale stragglers are executed alone via `run_one`.
+fn coalesce(
+    rx: &Receiver<Request>,
+    first: Request,
+    max_batch: usize,
+    max_wait: Duration,
+    mut run_one: impl FnMut(Vec<Request>),
+) -> Vec<Request> {
+    let mut pending = vec![first];
+    let deadline = Instant::now() + max_wait;
+    while pending.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) if r.timescale == pending[0].timescale => pending.push(r),
+            Ok(r) => {
+                // different timescale: run it in its own batch
+                run_one(vec![r]);
+                continue;
+            }
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    pending
+}
+
+// ---------------------------------------------------------------------------
+// Native backend
+// ---------------------------------------------------------------------------
+
+/// A running native inference server over the batched pure-Rust engine.
+/// Dropping it stops the worker.
+pub struct NativeInferenceServer {
+    handle: ServeHandle,
+    pub stats: Arc<ServerStats>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NativeInferenceServer {
+    /// Start serving `model` for fixed-length (L × d_in) sequences.
+    ///
+    /// The worker owns the model, one [`EngineWorkspace`] (reused across
+    /// batches: zero steady-state allocation on the big buffers) and a
+    /// scan backend sized to `cfg.threads` (0 = auto-detect).
+    pub fn start(model: S5Model, l: usize, cfg: ServerConfig) -> NativeInferenceServer {
+        let row = l * model.d_in;
+        let classes = model.classes;
+        let (tx, rx) = channel::<Request>();
+        let stats = Arc::new(ServerStats::default());
+        let wstats = stats.clone();
+        let threads = auto_threads(cfg.threads);
+        let worker = std::thread::spawn(move || {
+            native_worker_loop(model, rx, cfg, threads, l, row, classes, wstats);
+        });
+        NativeInferenceServer {
+            handle: ServeHandle { tx, row, classes },
+            stats,
+            worker: Some(worker),
+        }
+    }
+
+    pub fn handle(&self) -> ServeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for NativeInferenceServer {
+    fn drop(&mut self) {
+        // closing the channel stops the worker
+        let (tx, _) = channel();
+        self.handle.tx = tx;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn native_worker_loop(
+    model: S5Model,
+    rx: Receiver<Request>,
+    cfg: ServerConfig,
+    threads: usize,
+    l: usize,
+    row: usize,
+    classes: usize,
+    stats: Arc<ServerStats>,
+) {
+    let backend = backend_for_threads(threads);
+    let mut ws = EngineWorkspace::new();
+    let mut xbuf = Vec::new();
+    let mut logits = Vec::new();
+    let max_batch = cfg.max_batch.max(1);
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped
+        };
+        let execute = |pending: Vec<Request>,
+                       ws: &mut EngineWorkspace,
+                       xbuf: &mut Vec<f32>,
+                       logits: &mut Vec<f32>| {
+            let n = pending.len();
+            stats.requests.fetch_add(n as u64, Ordering::Relaxed);
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            let t0 = Instant::now();
+            let rows: Vec<&[f32]> = pending.iter().map(|r| r.x.as_slice()).collect();
+            pack_rows_into(&rows, n, row, xbuf);
+            logits.resize(n * classes, 0.0);
+            model.forward_batch_into(
+                xbuf.as_slice(),
+                n,
+                l,
+                pending[0].timescale as f64,
+                backend.as_ref(),
+                ws,
+                &mut logits[..n * classes],
+            );
+            for (i, r) in pending.into_iter().enumerate() {
+                let resp = Response {
+                    logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                    batched_with: n,
+                    queue_secs: (t0 - r.submitted).as_secs_f64(),
+                    total_secs: r.submitted.elapsed().as_secs_f64(),
+                };
+                let _ = r.resp.send(Ok(resp));
+            }
+        };
+        let pending = coalesce(&rx, first, max_batch, cfg.max_wait, |one| {
+            execute(one, &mut ws, &mut xbuf, &mut logits)
+        });
+        execute(pending, &mut ws, &mut xbuf, &mut logits);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (feature-gated: needs the xla runtime)
+// ---------------------------------------------------------------------------
+
+/// A running PJRT inference server. Dropping it stops the worker.
+#[cfg(feature = "pjrt")]
 pub struct InferenceServer {
     handle: ServeHandle,
     pub stats: Arc<ServerStats>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl InferenceServer {
     /// Load `<preset>_fwd` + params (npz checkpoint or `<preset>_init.npz`)
     /// and start the worker.
@@ -111,11 +274,15 @@ impl InferenceServer {
     /// `Rc` refcount), so the worker thread creates its *own* client and
     /// compiles the artifact locally; only plain data crosses the channel.
     pub fn start(
-        artifacts_dir: &Path,
+        artifacts_dir: &std::path::Path,
         preset: &str,
-        checkpoint: Option<&Path>,
+        checkpoint: Option<&std::path::Path>,
         cfg: ServerConfig,
     ) -> anyhow::Result<InferenceServer> {
+        use crate::runtime::params::ParamStore;
+        use crate::runtime::{Artifact, Client};
+        use xla::Literal;
+
         // manifest is plain data: parse on the caller thread for the handle
         let manifest = crate::runtime::Manifest::load(
             &artifacts_dir.join(format!("{preset}_fwd.manifest.txt")),
@@ -149,7 +316,7 @@ impl InferenceServer {
             match setup {
                 Ok((art, params)) => {
                     let _ = ready_tx.send(Ok(()));
-                    worker_loop(art, params, rx, cfg, batch, row, classes, x_dims, wstats);
+                    pjrt::worker_loop(art, params, rx, cfg, batch, row, classes, x_dims, wstats);
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
@@ -172,6 +339,7 @@ impl InferenceServer {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Drop for InferenceServer {
     fn drop(&mut self) {
         // closing the channel stops the worker
@@ -183,95 +351,112 @@ impl Drop for InferenceServer {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    art: Artifact,
-    params: Vec<Literal>,
-    rx: Receiver<Request>,
-    cfg: ServerConfig,
-    batch: usize,
-    row: usize,
-    classes: usize,
-    x_dims: Vec<usize>,
-    stats: Arc<ServerStats>,
-) {
-    loop {
-        // block for the first request of the next batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders dropped
-        };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
-        // coalesce: same-timescale requests batch together
-        while pending.len() < batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) if r.timescale == pending[0].timescale => pending.push(r),
-                Ok(r) => {
-                    // different timescale: run it in the next batch
-                    execute_batch(&art, &params, vec![r], batch, row, classes, &x_dims, &stats);
-                    continue;
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use crate::runtime::params::{literal_f32, to_vec_f32};
+    use crate::runtime::Artifact;
+    use xla::Literal;
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn worker_loop(
+        art: Artifact,
+        params: Vec<Literal>,
+        rx: Receiver<Request>,
+        cfg: ServerConfig,
+        batch: usize,
+        row: usize,
+        classes: usize,
+        x_dims: Vec<usize>,
+        stats: Arc<ServerStats>,
+    ) {
+        loop {
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return,
+            };
+            let pending = coalesce(&rx, first, batch, cfg.max_wait, |one| {
+                execute_batch(&art, &params, one, batch, row, classes, &x_dims, &stats)
+            });
+            execute_batch(&art, &params, pending, batch, row, classes, &x_dims, &stats);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn execute_batch(
+        art: &Artifact,
+        params: &[Literal],
+        pending: Vec<Request>,
+        batch: usize,
+        row: usize,
+        classes: usize,
+        x_dims: &[usize],
+        stats: &Arc<ServerStats>,
+    ) {
+        let n_real = pending.len();
+        stats.requests.fetch_add(n_real as u64, Ordering::Relaxed);
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+
+        // pad to the artifact's fixed batch dimension
+        let mut x = vec![0.0f32; batch * row];
+        for (i, r) in pending.iter().enumerate() {
+            x[i * row..(i + 1) * row].copy_from_slice(&r.x);
+        }
+        let result = (|| -> anyhow::Result<Vec<f32>> {
+            let ts = literal_f32(&[pending[0].timescale], &[])?;
+            let xl = literal_f32(&x, x_dims)?;
+            let mut refs: Vec<&Literal> = params.iter().collect();
+            refs.push(&ts);
+            refs.push(&xl);
+            let outs = art.run(&refs)?;
+            to_vec_f32(&outs[0])
+        })();
+
+        match result {
+            Ok(logits) => {
+                for (i, r) in pending.into_iter().enumerate() {
+                    let resp = Response {
+                        logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                        batched_with: n_real,
+                        queue_secs: (t0 - r.submitted).as_secs_f64(),
+                        total_secs: r.submitted.elapsed().as_secs_f64(),
+                    };
+                    let _ = r.resp.send(Ok(resp));
                 }
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in pending {
+                    let _ = r.resp.send(Err(anyhow::anyhow!("{msg}")));
+                }
             }
         }
-        execute_batch(&art, &params, pending, batch, row, classes, &x_dims, &stats);
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn execute_batch(
-    art: &Artifact,
-    params: &[Literal],
-    pending: Vec<Request>,
-    batch: usize,
-    row: usize,
-    classes: usize,
-    x_dims: &[usize],
-    stats: &Arc<ServerStats>,
-) {
-    let n_real = pending.len();
-    stats.requests.fetch_add(n_real as u64, Ordering::Relaxed);
-    stats.batches.fetch_add(1, Ordering::Relaxed);
-    let t0 = Instant::now();
+/// A started server of either backend — lets the CLI and benches hold one
+/// value regardless of execution mode.
+pub enum RunningServer {
+    Native(NativeInferenceServer),
+    #[cfg(feature = "pjrt")]
+    Pjrt(InferenceServer),
+}
 
-    // pad to the artifact's fixed batch dimension
-    let mut x = vec![0.0f32; batch * row];
-    for (i, r) in pending.iter().enumerate() {
-        x[i * row..(i + 1) * row].copy_from_slice(&r.x);
-    }
-    let result = (|| -> anyhow::Result<Vec<f32>> {
-        let ts = literal_f32(&[pending[0].timescale], &[])?;
-        let xl = literal_f32(&x, x_dims)?;
-        let mut refs: Vec<&Literal> = params.iter().collect();
-        refs.push(&ts);
-        refs.push(&xl);
-        let outs = art.run(&refs)?;
-        to_vec_f32(&outs[0])
-    })();
-
-    match result {
-        Ok(logits) => {
-            for (i, r) in pending.into_iter().enumerate() {
-                let resp = Response {
-                    logits: logits[i * classes..(i + 1) * classes].to_vec(),
-                    batched_with: n_real,
-                    queue_secs: (t0 - r.submitted).as_secs_f64(),
-                    total_secs: r.submitted.elapsed().as_secs_f64(),
-                };
-                let _ = r.resp.send(Ok(resp));
-            }
+impl RunningServer {
+    pub fn handle(&self) -> ServeHandle {
+        match self {
+            RunningServer::Native(s) => s.handle(),
+            #[cfg(feature = "pjrt")]
+            RunningServer::Pjrt(s) => s.handle(),
         }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for r in pending {
-                let _ = r.resp.send(Err(anyhow::anyhow!("{msg}")));
-            }
+    }
+
+    pub fn stats(&self) -> &ServerStats {
+        match self {
+            RunningServer::Native(s) => &s.stats,
+            #[cfg(feature = "pjrt")]
+            RunningServer::Pjrt(s) => &s.stats,
         }
     }
 }
@@ -284,6 +469,10 @@ mod tests {
     fn server_config_default_sane() {
         let c = ServerConfig::default();
         assert!(c.max_wait >= Duration::from_micros(100));
+        assert!(c.max_batch >= 1);
+        // threads = 0 means auto-detect, which must resolve to ≥ 1 worker
+        assert_eq!(c.threads, 0);
+        assert!(auto_threads(c.threads) >= 1);
     }
 
     #[test]

@@ -9,6 +9,10 @@
 //! Supports the three graph kinds the AOT pipeline emits:
 //! `classifier` (LRA suite, speech, sMNIST, ablations), `retrieval`
 //! (two-tower) and `pendulum` (irregular-Δt regression).
+//!
+//! Compiled only with the `pjrt` feature (the fused train step is an AOT
+//! artifact); the native batched engine (`ssm::engine`) covers the
+//! inference side in hermetic builds.
 
 use anyhow::{bail, Context};
 use std::path::Path;

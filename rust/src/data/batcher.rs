@@ -15,16 +15,35 @@ pub struct Batch {
 /// Pack `examples` (must all share L×d) into one flat batch, padding the
 /// tail by repeating earlier examples if fewer than `batch_size` remain.
 pub fn pack(examples: &[SeqExample], batch_size: usize, row: usize) -> Batch {
-    assert!(!examples.is_empty());
+    let rows: Vec<&[f32]> = examples.iter().map(|e| e.x.as_slice()).collect();
+    let labels: Vec<i32> = examples.iter().map(|e| e.label).collect();
+    pack_rows(&rows, &labels, batch_size, row)
+}
+
+/// Pack bare float rows (one per sequence) into one flat batch, padding
+/// the tail by cycling earlier rows if fewer than `batch_size` remain.
+/// `labels` cycles in lockstep with `rows`.
+pub fn pack_rows(rows: &[&[f32]], labels: &[i32], batch_size: usize, row: usize) -> Batch {
+    assert_eq!(rows.len(), labels.len());
     let mut x = Vec::with_capacity(batch_size * row);
-    let mut labels = Vec::with_capacity(batch_size);
-    for i in 0..batch_size {
-        let ex = &examples[i % examples.len()];
-        assert_eq!(ex.x.len(), row, "inconsistent example width");
-        x.extend_from_slice(&ex.x);
-        labels.push(ex.label);
-    }
+    pack_rows_into(rows, batch_size, row, &mut x);
+    let labels = (0..batch_size).map(|i| labels[i % labels.len()]).collect();
     Batch { x, labels, batch_size }
+}
+
+/// The packing core shared by the trainer path ([`pack`]/[`pack_rows`])
+/// and the native inference server's dynamic batcher: fill `out` with
+/// `batch_size` rows cycled from `rows`, reusing `out`'s capacity so a
+/// hot loop packs with zero steady-state allocation.
+pub fn pack_rows_into(rows: &[&[f32]], batch_size: usize, row: usize, out: &mut Vec<f32>) {
+    assert!(!rows.is_empty());
+    out.clear();
+    out.reserve(batch_size * row);
+    for i in 0..batch_size {
+        let r = rows[i % rows.len()];
+        assert_eq!(r.len(), row, "inconsistent example width");
+        out.extend_from_slice(r);
+    }
 }
 
 /// Streaming batch source over a generator task: materializes a finite
@@ -120,6 +139,18 @@ mod tests {
         let evs = s.eval_batches();
         assert_eq!(evs.len(), 3); // 4 + 4 + 2(padded)
         assert!(evs.iter().all(|b| b.labels.len() == 4));
+    }
+
+    #[test]
+    fn pack_rows_cycles_and_matches_pack() {
+        let a = SeqExample { x: vec![1.0, 2.0], label: 7 };
+        let b = SeqExample { x: vec![3.0, 4.0], label: 8 };
+        let via_pack = pack(&[a.clone(), b.clone()], 5, 2);
+        let rows: Vec<&[f32]> = vec![&a.x, &b.x];
+        let via_rows = pack_rows(&rows, &[7, 8], 5, 2);
+        assert_eq!(via_pack.x, via_rows.x);
+        assert_eq!(via_pack.labels, via_rows.labels);
+        assert_eq!(via_rows.labels, vec![7, 8, 7, 8, 7]);
     }
 
     #[test]

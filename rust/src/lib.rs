@@ -16,9 +16,13 @@
 //! binary is self-contained.
 //!
 //! The crate also carries a **pure-Rust S5/S4/S4D reference stack**
-//! ([`ssm`]) used three ways: as the parity oracle against the compiled HLO,
-//! as the subject of the runtime benchmarks (paper Table 4), and as the
-//! substrate for the parallel-scan scaling studies (paper §2.2, Appendix H).
+//! ([`ssm`]) used four ways: as the parity oracle against the compiled HLO,
+//! as the subject of the runtime benchmarks (paper Table 4), as the
+//! substrate for the parallel-scan scaling studies (paper §2.2, Appendix H)
+//! — and, via the **batched native inference engine** ([`ssm::engine`] +
+//! [`ssm::scan::ScanBackend`]), as the execution backend of the native
+//! serving mode: packed (B, L, H) forwards with workspace reuse and
+//! pluggable sequential/parallel scan strategies.
 //!
 //! ## Module map
 //!
@@ -29,12 +33,20 @@
 //! | [`num`] | complex arithmetic |
 //! | [`linalg`] | dense complex matrices, Hermitian Jacobi eigensolver |
 //! | [`fft`] | radix-2 FFT (substrate for the S4 convolution baseline) |
-//! | [`ssm`] | HiPPO init, discretization, scans, S5/S4/S4D reference impls |
+//! | [`ssm`] | HiPPO init, discretization, scans, batched engine, S5/S4/S4D |
 //! | [`data`] | the nine synthetic workload generators + batching |
-//! | [`runtime`] | PJRT artifact loading, manifests, param stores, engine |
-//! | [`coordinator`] | configs, trainer, LR schedules, metrics, server |
+//! | [`runtime`] | manifests; PJRT artifact loading + params (`pjrt` feature) |
+//! | [`coordinator`] | configs, trainer (`pjrt`), LR schedules, metrics, server |
 //! | [`testing`] | mini property-testing harness (offline: no `proptest`) |
 //! | [`bench`] | shared harness for the paper-table benchmark binaries |
+//!
+//! ## Features
+//!
+//! `pjrt` (off by default) enables the compiled-HLO execution path: the
+//! `xla` FFI runtime, the npz parameter store, the trainer, and the PJRT
+//! serving backend. The default build is fully hermetic (no crates.io,
+//! no prebuilt xla_extension) and still provides the entire native stack
+//! including the batched inference server.
 
 pub mod bench;
 pub mod coordinator;

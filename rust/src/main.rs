@@ -3,17 +3,25 @@
 //! ```text
 //! s5 train --preset smnist --steps 300 [--lr 4e-3] [--checkpoint out.npz]
 //! s5 eval  --preset smnist --checkpoint out.npz [--timescale 2.0]
-//! s5 serve --preset smnist [--checkpoint out.npz] [--requests 64]
+//! s5 serve --preset smnist [--engine native|pjrt] [--requests 64]
+//!          [--threads N] [--max-batch N] [--max-wait-ms N]
 //! s5 data  --task listops [--n 3]        # inspect generator output
 //! s5 info  [--artifacts artifacts]       # list compiled artifacts
 //! ```
+//!
+//! Thread knobs default to `0` = auto-detect
+//! (`std::thread::available_parallelism`). Builds without the `pjrt`
+//! feature keep the full native path (`serve --engine native`, `data`,
+//! `info`); `train`/`eval`/`sweep` and `serve --engine pjrt` need the
+//! compiled-artifact runtime.
 
-use anyhow::{bail, Context};
-use s5::coordinator::server::{InferenceServer, ServerConfig};
-use s5::coordinator::{TrainConfig, Trainer};
+use anyhow::bail;
+use s5::coordinator::server::{NativeInferenceServer, RunningServer, ServerConfig};
 use s5::data::make_task;
 use s5::rng::Rng;
-use s5::runtime::{Client, Manifest};
+use s5::runtime::Manifest;
+use s5::ssm::engine::auto_threads;
+use s5::ssm::s5::{S5Config, S5Model};
 use s5::util::{Args, Table};
 use s5::{info, ARTIFACTS_DIR};
 use std::path::Path;
@@ -48,7 +56,8 @@ fn print_help() {
          USAGE: s5 <train|eval|serve|data|info> [--key value]...\n\n\
          train  --preset <p> --steps N [--lr F --wd F --seed N --checkpoint F --metrics F]\n\
          eval   --preset <p> [--checkpoint F --timescale F]\n\
-         serve  --preset <p> [--checkpoint F --requests N --max-wait-ms N]\n\
+         serve  --preset <p> [--engine native|pjrt --checkpoint F (pjrt only)\n\
+                --requests N --threads N --max-batch N --max-wait-ms N]  (threads 0 = auto)\n\
          data   --task <t> [--n N] [--dump DIR]\n\
          sweep  --preset <p> --lrs 1e-3,3e-3 [--wds ...] [--seeds ...] [--steps N]\n\
          info   [--artifacts DIR]\n\n\
@@ -57,7 +66,10 @@ fn print_help() {
     );
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    use s5::coordinator::{TrainConfig, Trainer};
+    use s5::runtime::Client;
     let mut cfg = TrainConfig::for_preset(&args.get_or("preset", "smnist"));
     if let Some(f) = args.get("config") {
         cfg.apply_file(Path::new(f))?;
@@ -73,7 +85,16 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> anyhow::Result<()> {
+    bail!("this build has no PJRT runtime (rebuild with --features pjrt); \
+           the native engine is available via `s5 serve --engine native`")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    use s5::coordinator::{TrainConfig, Trainer};
+    use s5::runtime::Client;
     let mut cfg = TrainConfig::for_preset(&args.get_or("preset", "smnist"));
     cfg.apply_args(args);
     cfg.steps = 0;
@@ -85,22 +106,56 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval(_args: &Args) -> anyhow::Result<()> {
+    bail!("eval needs the PJRT runtime (rebuild with --features pjrt)")
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let preset = args.get_or("preset", "smnist");
-    let artifacts = args.get_or("artifacts", ARTIFACTS_DIR);
-    let checkpoint = args.get("checkpoint").map(Path::new);
     let n_requests = args.get_usize("requests", 64);
-    let max_wait = std::time::Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64);
+    let cfg = ServerConfig {
+        max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
+        max_batch: args.get_usize("max-batch", 16),
+        threads: args.get_usize("threads", 0),
+    };
+    let default_engine = if cfg!(feature = "pjrt") { "pjrt" } else { "native" };
+    let engine = args.get_or("engine", default_engine);
 
-    let server = InferenceServer::start(
-        Path::new(&artifacts),
-        &preset,
-        checkpoint,
-        ServerConfig { max_wait },
-    )?;
+    let task = make_task(&preset)
+        .ok_or_else(|| anyhow::anyhow!("no generator for preset {preset:?}"))?;
+    let server = match engine.as_str() {
+        "native" => {
+            // Serve the pure-Rust batched engine. Parameters are a fresh
+            // HiPPO init (native checkpoint import is a ROADMAP item):
+            // the serving-path numbers — batching, latency, throughput —
+            // are what this mode measures.
+            anyhow::ensure!(
+                args.get("checkpoint").is_none(),
+                "--checkpoint is not supported by the native engine yet \
+                 (native checkpoint import is a ROADMAP item); use --engine pjrt"
+            );
+            let cfg_model = S5Config { h: 32, p: 32, j: 1, ..Default::default() };
+            let model = S5Model::init(
+                task.d_input(),
+                task.classes(),
+                4,
+                &cfg_model,
+                &mut Rng::new(args.get_usize("seed", 0) as u64),
+            );
+            info!(
+                "native engine: {} params, {} threads, max_batch {}",
+                model.param_count(),
+                auto_threads(cfg.threads),
+                cfg.max_batch
+            );
+            RunningServer::Native(NativeInferenceServer::start(model, task.seq_len(), cfg))
+        }
+        "pjrt" => start_pjrt_server(args, &preset, cfg)?,
+        other => bail!("unknown engine {other:?} (expected native or pjrt)"),
+    };
     let handle = server.handle();
-    let task = make_task(&preset).context("no generator for preset")?;
-    info!("server up; firing {n_requests} concurrent requests");
+    info!("server up ({engine}); firing {n_requests} concurrent requests");
 
     let t0 = std::time::Instant::now();
     let lat: Vec<f64> = std::thread::scope(|s| {
@@ -125,15 +180,39 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         n_requests as f64 / wall,
         stats.p50 * 1e3,
         stats.p95 * 1e3,
-        server.stats.mean_batch_fill()
+        server.stats().mean_batch_fill()
     );
     Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn start_pjrt_server(args: &Args, preset: &str, cfg: ServerConfig) -> anyhow::Result<RunningServer> {
+    use s5::coordinator::server::InferenceServer;
+    let artifacts = args.get_or("artifacts", ARTIFACTS_DIR);
+    let checkpoint = args.get("checkpoint").map(Path::new);
+    Ok(RunningServer::Pjrt(InferenceServer::start(
+        Path::new(&artifacts),
+        preset,
+        checkpoint,
+        cfg,
+    )?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn start_pjrt_server(
+    _args: &Args,
+    _preset: &str,
+    _cfg: ServerConfig,
+) -> anyhow::Result<RunningServer> {
+    bail!("the pjrt engine needs the PJRT runtime (rebuild with --features pjrt); \
+           use --engine native")
 }
 
 fn cmd_data(args: &Args) -> anyhow::Result<()> {
     let name = args.get_or("task", "listops");
     let n = args.get_usize("n", 3);
-    let task = make_task(&name).with_context(|| format!("unknown task {name:?}"))?;
+    let task = make_task(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown task {name:?}"))?;
     let mut rng = Rng::new(args.get_usize("seed", 0) as u64);
     println!(
         "task={} L={} d_input={} classes={}",
@@ -168,8 +247,11 @@ fn cmd_data(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     use s5::coordinator::sweep::{Axis, Grid, SweepResults};
+    use s5::coordinator::{TrainConfig, Trainer};
+    use s5::runtime::Client;
     let mut base = TrainConfig::for_preset(&args.get_or("preset", "smnist"));
     base.steps = args.get_usize("steps", 30);
     base.train_pool = args.get_usize("train-pool", 128);
@@ -213,6 +295,11 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         println!("best: {label} (loss={loss:.4}, metric={metric:.4})");
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_sweep(_args: &Args) -> anyhow::Result<()> {
+    bail!("sweep needs the PJRT runtime (rebuild with --features pjrt)")
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {

@@ -9,10 +9,19 @@
 //! named parameter store (npz in, npz out for checkpoints). HLO **text** is
 //! the interchange format — see DESIGN.md and /opt/xla-example/README.md.
 
+//!
+//! The PJRT execution half ([`artifact`], [`params`]) needs the `xla` FFI
+//! crate and is fenced behind the `pjrt` feature; the manifest parser is
+//! plain data and always available (the native engine and `s5 info` use it).
+
+#[cfg(feature = "pjrt")]
 pub mod artifact;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod params;
 
+#[cfg(feature = "pjrt")]
 pub use artifact::{Artifact, Client};
 pub use manifest::{Dtype, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use params::ParamStore;

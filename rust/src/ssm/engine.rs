@@ -1,0 +1,315 @@
+//! The batched native inference engine: workspace-reusing (B, L, H)
+//! forwards across the SSM stack.
+//!
+//! The paper gets batching for free from `jax.vmap`; the native Rust path
+//! historically scanned one sequence at a time with fresh `Vec`s per call.
+//! This module supplies the two pieces that thread a batch dimension and a
+//! pluggable scan strategy through every layer of the native stack:
+//!
+//! * [`EngineWorkspace`] — owns every per-forward scratch buffer
+//!   (activations, pre-norm, SSM drive/states, time-varying multipliers).
+//!   Buffers grow to the high-water mark of the shapes seen and are then
+//!   reused, so steady-state inference performs **zero O(B·L··) heap
+//!   allocation**; the only transient allocations left are O(layers·P)
+//!   discretization scalars and O(threads·P) chunk summaries inside the
+//!   parallel scan (see ROADMAP open items for hoisting those too).
+//! * [`BatchForward`] — the object-safe "packed batch in, rows out"
+//!   interface implemented by the S5 stack (logits per sequence) and the
+//!   RNN baselines (final hidden state per sequence), so the server,
+//!   benches and tests drive any sequence model uniformly.
+//!
+//! Parallelism enters at two levels, both steered by the same
+//! [`ScanBackend`](crate::ssm::scan::ScanBackend) object: dense stages
+//! (encoder, norm, B̃u, C̃x, gate) shard *sequences* across workers via
+//! [`par_zip`]; the scan stage goes through `scan_batch_*`, which shards
+//! across B sequences × in-sequence chunks. A batch of 1 degrades to the
+//! classic single-sequence path with in-sequence chunking only.
+
+use crate::num::C32;
+use crate::ssm::s5::S5Model;
+use crate::ssm::scan::ScanBackend;
+
+/// Resolve a thread-count knob: `0` auto-detects the machine's parallelism
+/// (`std::thread::available_parallelism`), any other value is taken as-is.
+pub fn auto_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Shard `n` strided items across up to `threads` workers: calls
+/// `f(item_index, &src[i·ss..], &mut dst[i·ds..])` for every item, with
+/// disjoint mutable destination slices. `src` and `dst` may be longer than
+/// `n` items (workspace buffers keep their high-water capacity); the tail
+/// is ignored. With `threads ≤ 1` or `n == 1` the loop runs inline —
+/// no spawn overhead on the single-sequence path.
+pub(crate) fn par_zip<T, U, F>(
+    threads: usize,
+    src: &[T],
+    ss: usize,
+    dst: &mut [U],
+    ds: usize,
+    n: usize,
+    f: F,
+) where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &[T], &mut [U]) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let src = &src[..n * ss];
+    let dst = &mut dst[..n * ds];
+    let shards = threads.max(1).min(n);
+    if shards <= 1 {
+        for (i, (sc, dc)) in src.chunks(ss).zip(dst.chunks_mut(ds)).enumerate() {
+            f(i, sc, dc);
+        }
+        return;
+    }
+    let per = n.div_ceil(shards);
+    std::thread::scope(|s| {
+        for (ci, (sc, dc)) in src
+            .chunks(per * ss)
+            .zip(dst.chunks_mut(per * ds))
+            .enumerate()
+        {
+            let f = &f;
+            s.spawn(move || {
+                for (j, (ss_, ds_)) in sc.chunks(ss).zip(dc.chunks_mut(ds)).enumerate() {
+                    f(ci * per + j, ss_, ds_);
+                }
+            });
+        }
+    });
+}
+
+/// Like [`par_zip`] but with two destination buffers per item (used by the
+/// time-varying path, which writes both the per-step multipliers and the
+/// scaled drive).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn par_zip2<T, U, V, F>(
+    threads: usize,
+    src: &[T],
+    ss: usize,
+    d1: &mut [U],
+    s1: usize,
+    d2: &mut [V],
+    s2: usize,
+    n: usize,
+    f: F,
+) where
+    T: Sync,
+    U: Send,
+    V: Send,
+    F: Fn(usize, &[T], &mut [U], &mut [V]) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let src = &src[..n * ss];
+    let d1 = &mut d1[..n * s1];
+    let d2 = &mut d2[..n * s2];
+    let shards = threads.max(1).min(n);
+    if shards <= 1 {
+        for (i, ((sc, c1), c2)) in src
+            .chunks(ss)
+            .zip(d1.chunks_mut(s1))
+            .zip(d2.chunks_mut(s2))
+            .enumerate()
+        {
+            f(i, sc, c1, c2);
+        }
+        return;
+    }
+    let per = n.div_ceil(shards);
+    std::thread::scope(|s| {
+        for (ci, ((sc, c1), c2)) in src
+            .chunks(per * ss)
+            .zip(d1.chunks_mut(per * s1))
+            .zip(d2.chunks_mut(per * s2))
+            .enumerate()
+        {
+            let f = &f;
+            s.spawn(move || {
+                for (j, ((ss_, d1_), d2_)) in sc
+                    .chunks(ss)
+                    .zip(c1.chunks_mut(s1))
+                    .zip(c2.chunks_mut(s2))
+                    .enumerate()
+                {
+                    f(ci * per + j, ss_, d1_, d2_);
+                }
+            });
+        }
+    });
+}
+
+/// Grow (never shrink) a buffer to at least `n` elements.
+pub(crate) fn grow<T: Clone + Default>(buf: &mut Vec<T>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, T::default());
+    }
+}
+
+/// All per-forward scratch buffers of the native engine, reused across
+/// calls. One workspace belongs to one driving thread (the server worker,
+/// a bench loop); the parallel *inside* a forward comes from the scan
+/// backend, not from sharing workspaces.
+///
+/// Buffer shapes (row-major, `B` = batch, `L` = sequence length, `H` =
+/// model width, `P2` = conjugate-symmetric state size):
+///
+/// | field    | shape      | role                                   |
+/// |----------|------------|----------------------------------------|
+/// | `x`      | (B, L, H)  | running activations (layer in/out)     |
+/// | `v`      | (B, L, H)  | pre-norm output / gate scratch         |
+/// | `y`      | (B, L, H)  | SSM output before activation           |
+/// | `bu`     | (B, L, P2) | scan drive, overwritten with states    |
+/// | `bu_rev` | (B, L, P2) | reversed drive for bidirectional layers|
+/// | `a_tv`   | (B, L, P2) | time-varying multipliers (§6.3 path)   |
+#[derive(Default)]
+pub struct EngineWorkspace {
+    pub(crate) x: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) y: Vec<f32>,
+    pub(crate) bu: Vec<C32>,
+    pub(crate) bu_rev: Vec<C32>,
+    pub(crate) a_tv: Vec<C32>,
+}
+
+impl EngineWorkspace {
+    pub fn new() -> EngineWorkspace {
+        EngineWorkspace::default()
+    }
+
+    /// Current heap footprint of the owned buffers, in bytes (capacity,
+    /// not length — what the workspace actually holds onto).
+    pub fn capacity_bytes(&self) -> usize {
+        self.x.capacity() * 4
+            + self.v.capacity() * 4
+            + self.y.capacity() * 4
+            + (self.bu.capacity() + self.bu_rev.capacity() + self.a_tv.capacity()) * 8
+    }
+}
+
+/// Object-safe batched forward: consume a packed row-major (B, L, d_input)
+/// buffer, produce one `d_output` row per sequence.
+///
+/// Implementors: [`S5Model`] (logits), the RNN baselines in
+/// [`crate::ssm::rnn`] (final hidden state). The native inference server
+/// and the throughput benches drive models exclusively through this.
+pub trait BatchForward: Send + Sync {
+    /// Input feature width per step.
+    fn d_input(&self) -> usize;
+    /// Output row width per sequence.
+    fn d_output(&self) -> usize;
+    /// Forward a packed batch; `out` must hold `batch · d_output()` floats.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_batch_into(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        backend: &dyn ScanBackend,
+        ws: &mut EngineWorkspace,
+        out: &mut [f32],
+    );
+}
+
+impl BatchForward for S5Model {
+    fn d_input(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_output(&self) -> usize {
+        self.classes
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_batch_into(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        backend: &dyn ScanBackend,
+        ws: &mut EngineWorkspace,
+        out: &mut [f32],
+    ) {
+        S5Model::forward_batch_into(self, u, batch, l, timescale, backend, ws, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_threads_resolves() {
+        assert!(auto_threads(0) >= 1);
+        assert_eq!(auto_threads(3), 3);
+        assert_eq!(auto_threads(1), 1);
+    }
+
+    #[test]
+    fn par_zip_matches_serial() {
+        for &threads in &[1usize, 2, 3, 8] {
+            for &n in &[0usize, 1, 2, 5, 16, 17] {
+                let ss = 3;
+                let ds = 2;
+                let src: Vec<f32> = (0..n * ss).map(|i| i as f32).collect();
+                let mut dst = vec![0.0f32; n * ds];
+                par_zip(threads, &src, ss, &mut dst, ds, n, |i, s, d| {
+                    d[0] = s.iter().sum::<f32>();
+                    d[1] = i as f32;
+                });
+                for i in 0..n {
+                    let want: f32 = (0..ss).map(|j| (i * ss + j) as f32).sum();
+                    assert_eq!(dst[i * ds], want, "threads={threads} n={n} i={i}");
+                    assert_eq!(dst[i * ds + 1], i as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_zip_tolerates_oversized_buffers() {
+        // workspace buffers keep high-water capacity; par_zip must slice
+        let src: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let mut dst = vec![-1.0f32; 50];
+        par_zip(2, &src, 2, &mut dst, 1, 4, |_, s, d| d[0] = s[0] + s[1]);
+        assert_eq!(&dst[..4], &[1.0, 5.0, 9.0, 13.0]);
+        assert_eq!(dst[4], -1.0, "tail untouched");
+    }
+
+    #[test]
+    fn par_zip2_matches_serial() {
+        let n = 7;
+        let src: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut d1 = vec![0.0f32; n];
+        let mut d2 = vec![0.0f32; 2 * n];
+        par_zip2(3, &src, 1, &mut d1, 1, &mut d2, 2, n, |i, s, a, b| {
+            a[0] = s[0] * 2.0;
+            b[0] = i as f32;
+            b[1] = s[0];
+        });
+        for i in 0..n {
+            assert_eq!(d1[i], 2.0 * i as f32);
+            assert_eq!(d2[2 * i], i as f32);
+            assert_eq!(d2[2 * i + 1], i as f32);
+        }
+    }
+
+    #[test]
+    fn workspace_starts_empty_and_reports_bytes() {
+        let mut ws = EngineWorkspace::new();
+        assert_eq!(ws.capacity_bytes(), 0);
+        grow(&mut ws.x, 128);
+        assert!(ws.capacity_bytes() >= 128 * 4);
+    }
+}

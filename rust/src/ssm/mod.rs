@@ -14,8 +14,15 @@
 //!    `python/compile/hippo.py`, so experiments can instantiate fresh models
 //!    without touching Python.
 
+//!
+//! The batched native inference engine ([`engine`]) plus the pluggable
+//! scan strategies ([`scan::ScanBackend`]) thread a (B, L, H) batch
+//! dimension through the whole stack — the CPU-side counterpart of the
+//! `jax.vmap`-batched reference.
+
 pub mod complexity;
 pub mod discretize;
+pub mod engine;
 pub mod hippo;
 pub mod online;
 pub mod rnn;

@@ -8,18 +8,28 @@
 //! per-layer states for a whole stacked network (what a streaming
 //! deployment of the inference server would hold per session).
 //!
-//! Correctness is pinned by equivalence tests against the offline scan.
+//! Correctness is pinned by equivalence tests against the offline scan —
+//! and structurally: the per-step recurrence goes through the same
+//! [`ScanBackend::scan_step`] kernel
+//! ([`crate::ssm::scan::scan_step_inplace`]) that the offline sequential
+//! scans are built on, so streaming generation and batched offline scans
+//! share one code path by construction.
 
 use crate::num::{C32, C64};
 use crate::ssm::discretize::{discretize_diag, discretize_one, Method};
 use crate::ssm::s5::{gelu, layer_norm_row, sigmoid, S5Layer, S5Model};
+use crate::ssm::scan::{ScanBackend, SequentialBackend};
 
 /// Streaming state of one S5 layer: the complex latent x_k plus the
-/// precomputed discretization (recomputed only if Δt changes).
+/// precomputed discretization (recomputed only if Δt changes) and the
+/// step's drive scratch (owned here so steady-state streaming allocates
+/// only the per-step output rows).
 pub struct LayerState {
     x: Vec<C32>,
     lam_bar: Vec<C32>,
     in_scale: Vec<C32>,
+    /// per-step drive b = f ∘ B̃u (P2 scratch)
+    drive: Vec<C32>,
     /// Δt this discretization was built for (None = time-invariant default)
     dt_scale: Option<f32>,
 }
@@ -37,6 +47,7 @@ impl LayerState {
             x: vec![C32::ZERO; layer.p2],
             lam_bar: lam_bar.iter().map(|z| z.to_c32()).collect(),
             in_scale: scale.iter().map(|z| z.to_c32()).collect(),
+            drive: vec![C32::ZERO; layer.p2],
             dt_scale: None,
         }
     }
@@ -79,14 +90,16 @@ impl S5Layer {
         if let Some(dt) = dt_k {
             state.rediscretize(self, timescale, dt);
         }
-        // x ← Λ̄∘x + f∘(B̃u)
+        // x ← Λ̄∘x + f∘(B̃u), through the shared step kernel: build the
+        // drive b = f∘(B̃u) then advance with ScanBackend::scan_step
         for r in 0..self.p2 {
             let mut bu = C64::ZERO;
             for c in 0..self.h {
                 bu += self.b_tilde[r * self.h + c].scale(u[c] as f64);
             }
-            state.x[r] = state.lam_bar[r] * state.x[r] + state.in_scale[r] * bu.to_c32();
+            state.drive[r] = state.in_scale[r] * bu.to_c32();
         }
+        SequentialBackend.scan_step(&state.lam_bar, &mut state.x, &state.drive);
         // y = 2·Re(C̃x) + D∘u
         let ct = &self.c_tilde[0];
         let mut y = vec![0.0f32; self.h];

@@ -8,8 +8,18 @@
 //! matrix "uncertainty" update, mimicking the Kalman-style propagation
 //! that makes CRU slow) as honest baselines for the relative-speed
 //! reproduction.
+//!
+//! Both baselines conform to the batched-engine interface
+//! ([`crate::ssm::engine::BatchForward`]): `run_batch` consumes a packed
+//! (B, L, d) buffer and shards sequences across the scan backend's thread
+//! budget — so the throughput benches can compare S5's batched forward
+//! against the recurrent baselines under the identical harness. The
+//! defining O(L) sequential-step property is untouched: only the batch
+//! dimension parallelizes, never time.
 
 use crate::rng::Rng;
+use crate::ssm::engine::{par_zip, BatchForward, EngineWorkspace};
+use crate::ssm::scan::ScanBackend;
 
 /// A GRU cell: h' = (1−z)∘h + z∘tanh(W_h x + U_h (r∘h)).
 #[derive(Clone, Debug)]
@@ -70,17 +80,65 @@ impl GruCell {
         }
     }
 
-    /// Run the full sequence, returning all hidden states (L × H).
-    pub fn run(&self, xs: &[f32], l: usize) -> Vec<f32> {
+    /// Run one sequence into a caller-provided (L × H) buffer.
+    pub fn run_into(&self, xs: &[f32], l: usize, out: &mut [f32]) {
         let h = self.h;
         let mut state = vec![0.0f32; h];
         let mut scratch = vec![0.0f32; 3 * h];
-        let mut out = vec![0.0f32; l * h];
         for k in 0..l {
             self.step(&mut state, &xs[k * self.d_in..(k + 1) * self.d_in], &mut scratch);
             out[k * h..(k + 1) * h].copy_from_slice(&state);
         }
+    }
+
+    /// Run the full sequence, returning all hidden states (L × H).
+    pub fn run(&self, xs: &[f32], l: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; l * self.h];
+        self.run_into(xs, l, &mut out);
         out
+    }
+
+    /// Packed-batch run: xs (B, L, d_in) → hidden states (B, L, H),
+    /// sequences sharded across `threads` workers (time stays sequential).
+    pub fn run_batch(&self, xs: &[f32], batch: usize, l: usize, threads: usize) -> Vec<f32> {
+        assert_eq!(xs.len(), batch * l * self.d_in);
+        let mut out = vec![0.0f32; batch * l * self.h];
+        par_zip(threads, xs, l * self.d_in, &mut out, l * self.h, batch, |_, xseq, oseq| {
+            self.run_into(xseq, l, oseq);
+        });
+        out
+    }
+}
+
+impl BatchForward for GruCell {
+    fn d_input(&self) -> usize {
+        self.d_in
+    }
+
+    /// Per-sequence output: the final hidden state (the summary a
+    /// classifier head would consume).
+    fn d_output(&self) -> usize {
+        self.h
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_batch_into(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        _timescale: f64,
+        backend: &dyn ScanBackend,
+        _ws: &mut EngineWorkspace,
+        out: &mut [f32],
+    ) {
+        assert_eq!(out.len(), batch * self.h);
+        let h = self.h;
+        par_zip(backend.threads(), u, l * self.d_in, out, h, batch, |_, xseq, oseq| {
+            let mut states = vec![0.0f32; l * h];
+            self.run_into(xseq, l, &mut states);
+            oseq.copy_from_slice(&states[(l - 1) * h..]);
+        });
     }
 }
 
@@ -103,6 +161,27 @@ impl CruLike {
             gru: GruCell::init(d_in, h, rng),
             a: (0..h * h).map(|_| (rng.normal() * sh) as f32).collect(),
         }
+    }
+
+    /// Packed-batch run: xs (B, L, d_in), dts (B, L) → outputs (B, L, H),
+    /// sequences sharded across `threads` workers.
+    pub fn run_batch(
+        &self,
+        xs: &[f32],
+        dts: &[f32],
+        batch: usize,
+        l: usize,
+        threads: usize,
+    ) -> Vec<f32> {
+        let (h, d_in) = (self.gru.h, self.gru.d_in);
+        assert_eq!(xs.len(), batch * l * d_in);
+        assert_eq!(dts.len(), batch * l);
+        let mut out = vec![0.0f32; batch * l * h];
+        par_zip(threads, xs, l * d_in, &mut out, l * h, batch, |i, xseq, oseq| {
+            let got = self.run(xseq, &dts[i * l..(i + 1) * l], l);
+            oseq.copy_from_slice(&got);
+        });
+        out
     }
 
     /// Full-sequence run with per-step Δt modulation of the covariance.
@@ -148,9 +227,73 @@ impl CruLike {
     }
 }
 
+impl BatchForward for CruLike {
+    fn d_input(&self) -> usize {
+        self.gru.d_in
+    }
+
+    fn d_output(&self) -> usize {
+        self.gru.h
+    }
+
+    /// Regular sampling (Δt ≡ 1); the irregular path is [`CruLike::run_batch`].
+    #[allow(clippy::too_many_arguments)]
+    fn forward_batch_into(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        _timescale: f64,
+        backend: &dyn ScanBackend,
+        _ws: &mut EngineWorkspace,
+        out: &mut [f32],
+    ) {
+        let h = self.gru.h;
+        assert_eq!(out.len(), batch * h);
+        let dts = vec![1.0f32; batch * l];
+        par_zip(backend.threads(), u, l * self.gru.d_in, out, h, batch, |i, xseq, oseq| {
+            let got = self.run(xseq, &dts[i * l..(i + 1) * l], l);
+            oseq.copy_from_slice(&got[(l - 1) * h..]);
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn gru_run_batch_matches_per_sequence() {
+        let mut rng = Rng::new(5);
+        let cell = GruCell::init(3, 5, &mut rng);
+        let (batch, l) = (5usize, 20usize);
+        let xs = rng.normal_vec_f32(batch * l * 3);
+        for threads in [1usize, 2, 4] {
+            let got = cell.run_batch(&xs, batch, l, threads);
+            for bi in 0..batch {
+                let want = cell.run(&xs[bi * l * 3..(bi + 1) * l * 3], l);
+                assert_eq!(&got[bi * l * 5..(bi + 1) * l * 5], &want[..], "t={threads} seq {bi}");
+            }
+        }
+    }
+
+    #[test]
+    fn cru_run_batch_matches_per_sequence() {
+        let mut rng = Rng::new(6);
+        let cru = CruLike::init(2, 4, &mut rng);
+        let (batch, l) = (3usize, 15usize);
+        let xs = rng.normal_vec_f32(batch * l * 2);
+        let dts = rng.uniform_vec_f32(batch * l, 0.5, 2.0);
+        let got = cru.run_batch(&xs, &dts, batch, l, 2);
+        for bi in 0..batch {
+            let want = cru.run(
+                &xs[bi * l * 2..(bi + 1) * l * 2],
+                &dts[bi * l..(bi + 1) * l],
+                l,
+            );
+            assert_eq!(&got[bi * l * 4..(bi + 1) * l * 4], &want[..], "seq {bi}");
+        }
+    }
 
     #[test]
     fn gru_state_bounded() {

@@ -1,4 +1,6 @@
-//! Pure-Rust S5 layer and deep model (the L3 parity oracle).
+//! Pure-Rust S5 layer and deep model (the L3 parity oracle — and, since
+//! the batched-engine refactor, the subject the native inference server
+//! actually serves).
 //!
 //! This mirrors `python/compile/model.py` operation-for-operation so the
 //! compiled HLO can be checked bitwise-loosely (f32 tolerances) against an
@@ -8,12 +10,26 @@
 //! The layer (paper §3, §G.1):
 //!   pre-LayerNorm → ZOH-discretized MIMO SSM via scan → y = 2·Re(C̃x̃) + D∘u
 //!   → GELU → weighted-sigmoid gate → residual.
+//!
+//! ## Batched forward path
+//!
+//! The hot entry points take packed row-major (B, L, H) batches, a
+//! [`ScanBackend`] strategy object and an [`EngineWorkspace`] that owns all
+//! large scratch ([`S5Model::forward_batch_into`], [`S5Layer::apply_batch`],
+//! [`S5Layer::apply_ssm_batch`]). Per-sequence math is factored into
+//! `*_seq` helpers shared by every path, so a batch of B is elementwise
+//! identical to B independent forwards (up to the scan strategy's
+//! documented 1e-4 chunk-combine tolerance). The original single-sequence
+//! signatures ([`S5Layer::apply`], [`S5Layer::apply_ssm`],
+//! [`S5Model::forward`]) remain as batch-of-1 conveniences that allocate a
+//! private workspace.
 
 use crate::num::{C32, C64};
 use crate::rng::Rng;
-use crate::ssm::discretize::{discretize_diag, Method};
+use crate::ssm::discretize::{discretize_diag, discretize_one, Method};
+use crate::ssm::engine::{grow, par_zip, par_zip2, EngineWorkspace};
 use crate::ssm::hippo;
-use crate::ssm::scan;
+use crate::ssm::scan::{ParallelBackend, ScanBackend, SequentialBackend};
 
 /// Parameters of one S5 layer (conjugate-symmetric storage: P2 = P/2).
 #[derive(Clone, Debug)]
@@ -52,6 +68,16 @@ pub struct S5Config {
 impl Default for S5Config {
     fn default() -> Self {
         S5Config { h: 32, p: 32, j: 1, conj_sym: true, dt_min: 1e-3, dt_max: 1e-1, bidir: false }
+    }
+}
+
+/// Backend preserving the legacy `threads: usize` knob of the
+/// single-sequence entry points: ≤ 1 → sequential, else parallel.
+fn legacy_backend(threads: usize) -> Box<dyn ScanBackend> {
+    if threads <= 1 {
+        Box::new(SequentialBackend)
+    } else {
+        Box::new(ParallelBackend::new(threads))
     }
 }
 
@@ -111,22 +137,12 @@ impl S5Layer {
         }
     }
 
-    /// Apply the SSM part (no norm/activation): u (L×H) → y (L×H).
-    ///
-    /// `threads` selects the scan backend (1 = sequential). `dts` enables
-    /// the irregular-sampling path (§6.3).
-    pub fn apply_ssm(
-        &self,
-        u: &[f32],
-        l: usize,
-        timescale: f64,
-        dts: Option<&[f32]>,
-        threads: usize,
-    ) -> Vec<f32> {
+    // -- per-sequence kernels (shared by batched and single paths) ---------
+
+    /// Drive of the scan: bu_k = B̃ u_k for one sequence (u: (L,H) →
+    /// bu: (L,P2)); complex accumulation in f64, stored as C32.
+    fn drive_seq(&self, u: &[f32], l: usize, bu: &mut [C32]) {
         let (h, p2) = (self.h, self.p2);
-        assert_eq!(u.len(), l * h);
-        // bu_k = B̃ u_k (complex (L,P2))
-        let mut bu = vec![C32::ZERO; l * p2];
         for k in 0..l {
             for r in 0..p2 {
                 let mut acc = C64::ZERO;
@@ -136,109 +152,47 @@ impl S5Layer {
                 bu[k * p2 + r] = acc.to_c32();
             }
         }
-
-        let xs = match dts {
-            None => {
-                let dt: Vec<f64> = self
-                    .log_dt
-                    .iter()
-                    .map(|&ld| (ld as f64).exp() * timescale)
-                    .collect();
-                let (lam_bar, f) = discretize_diag(&self.lambda, &dt, Method::Zoh);
-                let a32: Vec<C32> = lam_bar.iter().map(|z| z.to_c32()).collect();
-                for k in 0..l {
-                    for r in 0..p2 {
-                        bu[k * p2 + r] = f[r].to_c32() * bu[k * p2 + r];
-                    }
-                }
-                if threads <= 1 {
-                    scan::scan_sequential_ti(&a32, &bu, l, p2)
-                } else {
-                    scan::scan_parallel_ti(&a32, &bu, l, p2, threads)
-                }
-            }
-            Some(dts) => {
-                assert_eq!(dts.len(), l);
-                let base_dt: Vec<f64> = self
-                    .log_dt
-                    .iter()
-                    .map(|&ld| (ld as f64).exp() * timescale)
-                    .collect();
-                let mut a_el = vec![C32::ZERO; l * p2];
-                for k in 0..l {
-                    for r in 0..p2 {
-                        let dt = base_dt[r] * dts[k] as f64;
-                        let (lb, f) =
-                            crate::ssm::discretize::discretize_one(self.lambda[r], dt, Method::Zoh);
-                        a_el[k * p2 + r] = lb.to_c32();
-                        bu[k * p2 + r] = f.to_c32() * bu[k * p2 + r];
-                    }
-                }
-                if threads <= 1 {
-                    scan::scan_sequential(&a_el, &bu, l, p2)
-                } else {
-                    scan::scan_parallel_tv(&a_el, &bu, l, p2, threads)
-                }
-            }
-        };
-
-        // y = 2·Re(C̃ x) (+ backward direction) + D∘u
-        let mut y = vec![0.0f32; l * h];
-        self.project(&xs, l, 0, &mut y);
-        if self.c_tilde.len() == 2 {
-            // backward pass: scan the reversed drive, reverse back.
-            // (time-invariant Λ̄ assumed for bidirectional models, as in L2)
-            let dt: Vec<f64> = self
-                .log_dt
-                .iter()
-                .map(|&ld| (ld as f64).exp() * timescale)
-                .collect();
-            let (lam_bar, f) = discretize_diag(&self.lambda, &dt, Method::Zoh);
-            let a32: Vec<C32> = lam_bar.iter().map(|z| z.to_c32()).collect();
-            // recompute drive reversed (bu was consumed in-place above only
-            // by scaling with f — reuse requires a fresh B̃u)
-            let mut bu_rev = vec![C32::ZERO; l * p2];
-            for k in 0..l {
-                let src = l - 1 - k;
-                for r in 0..p2 {
-                    let mut acc = C64::ZERO;
-                    for c in 0..h {
-                        acc += self.b_tilde[r * h + c].scale(u[src * h + c] as f64);
-                    }
-                    bu_rev[k * p2 + r] = (f[r] * acc).to_c32();
-                }
-            }
-            let xs_b = if threads <= 1 {
-                scan::scan_sequential_ti(&a32, &bu_rev, l, p2)
-            } else {
-                scan::scan_parallel_ti(&a32, &bu_rev, l, p2, threads)
-            };
-            // reverse the scan output back into natural time order
-            let mut xs_rev = vec![C32::ZERO; l * p2];
-            for k in 0..l {
-                xs_rev[(l - 1 - k) * p2..(l - k) * p2]
-                    .copy_from_slice(&xs_b[k * p2..(k + 1) * p2]);
-            }
-            self.project(&xs_rev, l, 1, &mut y);
-        }
-        for k in 0..l {
-            for c in 0..h {
-                y[k * h + c] += self.d[c] * u[k * h + c];
-            }
-        }
-        y
     }
 
-    /// Accumulate 2·Re(C̃_dir · x) into `y`.
-    fn project(&self, xs: &[C32], l: usize, dir: usize, y: &mut [f32]) {
+    /// Reversed-time drive for the backward direction of a bidirectional
+    /// layer, with the input scaling folded in (matches the original
+    /// `(f[r] * acc).to_c32()` op order).
+    fn drive_rev_seq(&self, u: &[f32], l: usize, f: &[C64], bu_rev: &mut [C32]) {
+        let (h, p2) = (self.h, self.p2);
+        for k in 0..l {
+            let src = l - 1 - k;
+            for r in 0..p2 {
+                let mut acc = C64::ZERO;
+                for c in 0..h {
+                    acc += self.b_tilde[r * h + c].scale(u[src * h + c] as f64);
+                }
+                bu_rev[k * p2 + r] = (f[r] * acc).to_c32();
+            }
+        }
+    }
+
+    /// Scale one sequence's drive by the (time-invariant) input scaling f.
+    fn scale_seq(bu: &mut [C32], f32s: &[C32], l: usize, p2: usize) {
+        for k in 0..l {
+            for r in 0..p2 {
+                bu[k * p2 + r] = f32s[r] * bu[k * p2 + r];
+            }
+        }
+    }
+
+    /// Accumulate 2·Re(C̃_dir · x) into `y` for one sequence. `reversed`
+    /// reads the state rows back-to-front (backward direction of a
+    /// bidirectional layer, whose scan ran on reversed time).
+    fn project_seq(&self, xs: &[C32], l: usize, dir: usize, reversed: bool, y: &mut [f32]) {
         let (h, p2) = (self.h, self.p2);
         let ct = &self.c_tilde[dir];
         for k in 0..l {
+            let xrow = if reversed { (l - 1 - k) * p2 } else { k * p2 };
             for r in 0..h {
                 let mut acc = 0.0f64;
                 for c in 0..p2 {
                     let cv = ct[r * p2 + c];
-                    let x = xs[k * p2 + c];
+                    let x = xs[xrow + c];
                     acc += cv.re * x.re as f64 - cv.im * x.im as f64;
                 }
                 y[k * h + r] += 2.0 * acc as f32;
@@ -246,17 +200,19 @@ impl S5Layer {
         }
     }
 
-    /// Full layer: pre-norm → SSM → GELU → gate → residual.
-    pub fn apply(
-        &self,
-        u: &[f32],
-        l: usize,
-        timescale: f64,
-        dts: Option<&[f32]>,
-        threads: usize,
-    ) -> Vec<f32> {
+    /// y += D ∘ u for one sequence.
+    fn feedthrough_seq(&self, u: &[f32], l: usize, y: &mut [f32]) {
         let h = self.h;
-        let mut v = vec![0.0f32; l * h];
+        for k in 0..l {
+            for c in 0..h {
+                y[k * h + c] += self.d[c] * u[k * h + c];
+            }
+        }
+    }
+
+    /// Pre-norm of one sequence: v_k = LayerNorm(u_k).
+    fn norm_seq(&self, u: &[f32], l: usize, v: &mut [f32]) {
+        let h = self.h;
         for k in 0..l {
             layer_norm_row(
                 &u[k * h..(k + 1) * h],
@@ -265,8 +221,12 @@ impl S5Layer {
                 &mut v[k * h..(k + 1) * h],
             );
         }
-        let y = self.apply_ssm(&v, l, timescale, dts, threads);
-        let mut out = vec![0.0f32; l * h];
+    }
+
+    /// GELU → weighted-sigmoid gate → residual, in place over the layer
+    /// input `x` (reads SSM output `y`): x_k ← x_k + g ∘ σ(W g).
+    fn gate_residual_seq(&self, y: &[f32], x: &mut [f32], l: usize) {
+        let h = self.h;
         let mut g = vec![0.0f32; h];
         for k in 0..l {
             for c in 0..h {
@@ -277,10 +237,225 @@ impl S5Layer {
                 for c in 0..h {
                     lin += self.gate_w[r * h + c] * g[c];
                 }
-                out[k * h + r] = u[k * h + r] + g[r] * sigmoid(lin);
+                x[k * h + r] += g[r] * sigmoid(lin);
             }
         }
-        out
+    }
+
+    // -- batched core ------------------------------------------------------
+
+    /// SSM over a packed (B, L, H) batch, writing y (B, L, H). Scratch
+    /// (`bu`, `bu_rev`, `a_tv`) comes from the workspace; `y` must be
+    /// exactly B·L·H long. `dts` is (B, L) per-step Δt multipliers.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn apply_ssm_core(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        dts: Option<&[f32]>,
+        backend: &dyn ScanBackend,
+        bu: &mut Vec<C32>,
+        bu_rev: &mut Vec<C32>,
+        a_tv: &mut Vec<C32>,
+        y: &mut [f32],
+    ) {
+        let (h, p2) = (self.h, self.p2);
+        assert_eq!(u.len(), batch * l * h);
+        assert_eq!(y.len(), batch * l * h);
+        let np = batch * l * p2;
+        let sh = l * h;
+        let sp = l * p2;
+        let t = backend.threads();
+        let bidir = self.c_tilde.len() == 2;
+        grow(bu, np);
+
+        // drive: bu = B̃ u, per sequence in parallel
+        par_zip(t, u, sh, bu, sp, batch, |_, useq, buseq| {
+            self.drive_seq(useq, l, buseq);
+        });
+
+        // TI input scaling shared by the main path (when dts is None) and
+        // the backward direction of bidirectional layers.
+        let ti = || {
+            let dt: Vec<f64> = self
+                .log_dt
+                .iter()
+                .map(|&ld| (ld as f64).exp() * timescale)
+                .collect();
+            discretize_diag(&self.lambda, &dt, Method::Zoh)
+        };
+
+        match dts {
+            None => {
+                let (lam_bar, f) = ti();
+                let a32: Vec<C32> = lam_bar.iter().map(|z| z.to_c32()).collect();
+                let f32s: Vec<C32> = f.iter().map(|z| z.to_c32()).collect();
+                par_zip(t, u, sh, bu, sp, batch, |_, _, buseq| {
+                    Self::scale_seq(buseq, &f32s, l, p2);
+                });
+                backend.scan_batch_ti(&a32, &mut bu[..np], batch, l, p2);
+            }
+            Some(dts) => {
+                assert_eq!(dts.len(), batch * l);
+                let base_dt: Vec<f64> = self
+                    .log_dt
+                    .iter()
+                    .map(|&ld| (ld as f64).exp() * timescale)
+                    .collect();
+                grow(a_tv, np);
+                par_zip2(t, dts, l, a_tv, sp, bu, sp, batch, |_, dseq, aseq, buseq| {
+                    for k in 0..l {
+                        for r in 0..p2 {
+                            let dt = base_dt[r] * dseq[k] as f64;
+                            let (lb, f) = discretize_one(self.lambda[r], dt, Method::Zoh);
+                            aseq[k * p2 + r] = lb.to_c32();
+                            buseq[k * p2 + r] = f.to_c32() * buseq[k * p2 + r];
+                        }
+                    }
+                });
+                backend.scan_batch_tv(&a_tv[..np], &mut bu[..np], batch, l, p2);
+            }
+        }
+
+        // forward projection; for unidirectional layers the feedthrough is
+        // folded in here (matching the original projection → D order)
+        par_zip(t, &bu[..np], sp, y, sh, batch, |i, xs, yseq| {
+            yseq.fill(0.0);
+            self.project_seq(xs, l, 0, false, yseq);
+            if !bidir {
+                self.feedthrough_seq(&u[i * sh..(i + 1) * sh], l, yseq);
+            }
+        });
+
+        if bidir {
+            // backward pass: scan the reversed drive, project back in
+            // natural order. Time-invariant Λ̄ assumed for bidirectional
+            // models (as in L2), also under irregular sampling.
+            let (lam_bar, f) = ti();
+            let a32: Vec<C32> = lam_bar.iter().map(|z| z.to_c32()).collect();
+            grow(bu_rev, np);
+            par_zip(t, u, sh, bu_rev, sp, batch, |_, useq, bseq| {
+                self.drive_rev_seq(useq, l, &f, bseq);
+            });
+            backend.scan_batch_ti(&a32, &mut bu_rev[..np], batch, l, p2);
+            par_zip(t, &bu_rev[..np], sp, y, sh, batch, |i, xs, yseq| {
+                self.project_seq(xs, l, 1, true, yseq);
+                self.feedthrough_seq(&u[i * sh..(i + 1) * sh], l, yseq);
+            });
+        }
+    }
+
+    /// Full layer over a packed batch, in place over `x` (B, L, H):
+    /// pre-norm → SSM → GELU → gate → residual.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn apply_batch_core(
+        &self,
+        x: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        y: &mut Vec<f32>,
+        bu: &mut Vec<C32>,
+        bu_rev: &mut Vec<C32>,
+        a_tv: &mut Vec<C32>,
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        dts: Option<&[f32]>,
+        backend: &dyn ScanBackend,
+    ) {
+        let h = self.h;
+        let n = batch * l * h;
+        let sh = l * h;
+        let t = backend.threads();
+        grow(v, n);
+        grow(y, n);
+        par_zip(t, &x[..n], sh, v, sh, batch, |_, useq, vseq| {
+            self.norm_seq(useq, l, vseq);
+        });
+        self.apply_ssm_core(
+            &v[..n], batch, l, timescale, dts, backend, bu, bu_rev, a_tv, &mut y[..n],
+        );
+        par_zip(t, &y[..n], sh, x, sh, batch, |_, yseq, xseq| {
+            self.gate_residual_seq(yseq, xseq, l);
+        });
+    }
+
+    // -- public entry points -----------------------------------------------
+
+    /// Apply the SSM part (no norm/activation) to a packed (B, L, H)
+    /// batch: returns y (B, L, H). `dts` is (B, L) per-step Δt multipliers
+    /// for the irregular-sampling path (§6.3).
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_ssm_batch(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        dts: Option<&[f32]>,
+        backend: &dyn ScanBackend,
+        ws: &mut EngineWorkspace,
+    ) -> Vec<f32> {
+        let mut y = vec![0.0f32; batch * l * self.h];
+        let EngineWorkspace { bu, bu_rev, a_tv, .. } = ws;
+        self.apply_ssm_core(u, batch, l, timescale, dts, backend, bu, bu_rev, a_tv, &mut y);
+        y
+    }
+
+    /// Full layer over a packed (B, L, H) batch: pre-norm → SSM → GELU →
+    /// gate → residual. Returns the layer output (B, L, H).
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_batch(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        dts: Option<&[f32]>,
+        backend: &dyn ScanBackend,
+        ws: &mut EngineWorkspace,
+    ) -> Vec<f32> {
+        let n = batch * l * self.h;
+        assert_eq!(u.len(), n);
+        let EngineWorkspace { x, v, y, bu, bu_rev, a_tv } = ws;
+        grow(x, n);
+        x[..n].copy_from_slice(u);
+        self.apply_batch_core(x, v, y, bu, bu_rev, a_tv, batch, l, timescale, dts, backend);
+        x[..n].to_vec()
+    }
+
+    /// Single-sequence SSM (batch-of-1 convenience): u (L×H) → y (L×H).
+    ///
+    /// `threads` selects the scan backend (≤ 1 = sequential). `dts`
+    /// enables the irregular-sampling path (§6.3). Allocates a private
+    /// workspace — hot paths should use [`S5Layer::apply_ssm_batch`].
+    pub fn apply_ssm(
+        &self,
+        u: &[f32],
+        l: usize,
+        timescale: f64,
+        dts: Option<&[f32]>,
+        threads: usize,
+    ) -> Vec<f32> {
+        let backend = legacy_backend(threads);
+        let mut ws = EngineWorkspace::new();
+        self.apply_ssm_batch(u, 1, l, timescale, dts, backend.as_ref(), &mut ws)
+    }
+
+    /// Single-sequence full layer (batch-of-1 convenience): pre-norm →
+    /// SSM → GELU → gate → residual.
+    pub fn apply(
+        &self,
+        u: &[f32],
+        l: usize,
+        timescale: f64,
+        dts: Option<&[f32]>,
+        threads: usize,
+    ) -> Vec<f32> {
+        let backend = legacy_backend(threads);
+        let mut ws = EngineWorkspace::new();
+        self.apply_batch(u, 1, l, timescale, dts, backend.as_ref(), &mut ws)
     }
 
     /// Parameter count (matches the npz tensor sizes).
@@ -355,10 +530,9 @@ impl S5Model {
         }
     }
 
-    /// Logits for one sequence u (L × d_in).
-    pub fn forward(&self, u: &[f32], l: usize, timescale: f64, threads: usize) -> Vec<f32> {
+    /// Linear encoder for one sequence: u (L × d_in) → x (L × H).
+    fn encode_seq(&self, u: &[f32], l: usize, x: &mut [f32]) {
         let h = self.h;
-        let mut x = vec![0.0f32; l * h];
         for k in 0..l {
             for r in 0..h {
                 let mut acc = self.enc_b[r];
@@ -368,10 +542,11 @@ impl S5Model {
                 x[k * h + r] = acc;
             }
         }
-        for layer in &self.layers {
-            x = layer.apply(&x, l, timescale, None, threads);
-        }
-        // mean pool
+    }
+
+    /// Mean-pool + linear decoder for one sequence: x (L × H) → logits.
+    fn pool_decode_seq(&self, x: &[f32], l: usize, logits: &mut [f32]) {
+        let h = self.h;
         let mut pooled = vec![0.0f32; h];
         for k in 0..l {
             for r in 0..h {
@@ -381,7 +556,6 @@ impl S5Model {
         for v in pooled.iter_mut() {
             *v /= l as f32;
         }
-        let mut logits = vec![0.0f32; self.classes];
         for r in 0..self.classes {
             let mut acc = self.dec_b[r];
             for c in 0..h {
@@ -389,7 +563,64 @@ impl S5Model {
             }
             logits[r] = acc;
         }
-        logits
+    }
+
+    /// Batched forward: packed u (B, L, d_in) → logits written into `out`
+    /// (B × classes). All large scratch lives in (and is reused from) the
+    /// workspace; the backend parallelizes dense stages across sequences
+    /// and scans across B × chunks.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_batch_into(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        backend: &dyn ScanBackend,
+        ws: &mut EngineWorkspace,
+        out: &mut [f32],
+    ) {
+        assert!(batch > 0 && l > 0, "empty batch/sequence");
+        assert_eq!(u.len(), batch * l * self.d_in);
+        assert_eq!(out.len(), batch * self.classes);
+        let h = self.h;
+        let n = batch * l * h;
+        let t = backend.threads();
+        let EngineWorkspace { x, v, y, bu, bu_rev, a_tv } = ws;
+        grow(x, n);
+        par_zip(t, u, l * self.d_in, x, l * h, batch, |_, useq, xseq| {
+            self.encode_seq(useq, l, xseq);
+        });
+        for layer in &self.layers {
+            layer.apply_batch_core(x, v, y, bu, bu_rev, a_tv, batch, l, timescale, None, backend);
+        }
+        par_zip(t, &x[..n], l * h, out, self.classes, batch, |_, xseq, oseq| {
+            self.pool_decode_seq(xseq, l, oseq);
+        });
+    }
+
+    /// Batched forward returning a fresh (B × classes) logits vector.
+    pub fn forward_batch(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        backend: &dyn ScanBackend,
+        ws: &mut EngineWorkspace,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; batch * self.classes];
+        self.forward_batch_into(u, batch, l, timescale, backend, ws, &mut out);
+        out
+    }
+
+    /// Logits for one sequence u (L × d_in) — batch-of-1 convenience that
+    /// allocates a private workspace; hot paths should hold an
+    /// [`EngineWorkspace`] and call [`S5Model::forward_batch_into`].
+    pub fn forward(&self, u: &[f32], l: usize, timescale: f64, threads: usize) -> Vec<f32> {
+        let backend = legacy_backend(threads);
+        let mut ws = EngineWorkspace::new();
+        self.forward_batch(u, 1, l, timescale, backend.as_ref(), &mut ws)
     }
 
     pub fn param_count(&self) -> usize {
@@ -497,6 +728,110 @@ mod tests {
         assert_eq!(logits.len(), 10);
         assert!(logits.iter().all(|v| v.is_finite()));
         assert!(m.param_count() > 1000);
+    }
+
+    /// The core batched-engine guarantee: a packed batch of B sequences
+    /// produces the same per-sequence outputs as B independent forwards,
+    /// for every backend and for B below/at/above the thread count.
+    #[test]
+    fn prop_batched_layer_matches_per_sequence() {
+        prop::check("layer batch ≡ per-sequence", 8, |g| {
+            let batch = 1 + g.below(5);
+            let l = 4 + g.below(60);
+            let bidir = g.coin(0.5);
+            let lp = layer(4, 8, 1, bidir);
+            let u: Vec<f32> = (0..batch * l * 4).map(|_| g.normal() as f32).collect();
+            for threads in [1usize, 3] {
+                let backend = super::legacy_backend(threads);
+                let mut ws = EngineWorkspace::new();
+                let got = lp.apply_batch(&u, batch, l, 1.0, None, backend.as_ref(), &mut ws);
+                for bi in 0..batch {
+                    let useq = &u[bi * l * 4..(bi + 1) * l * 4];
+                    let want = lp.apply(useq, l, 1.0, None, 1);
+                    prop::close_slice_f32(&want, &got[bi * l * 4..(bi + 1) * l * 4], 1e-4)
+                        .map_err(|e| format!("bidir={bidir} t={threads} seq {bi}: {e}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_batched_ssm_with_dts_matches_per_sequence() {
+        prop::check("ssm batch (B,L) dts ≡ per-sequence", 6, |g| {
+            let batch = 1 + g.below(4);
+            let l = 4 + g.below(40);
+            let lp = layer(4, 8, 1, false);
+            let u: Vec<f32> = (0..batch * l * 4).map(|_| g.normal() as f32).collect();
+            let dts: Vec<f32> = (0..batch * l)
+                .map(|_| g.uniform_in(0.3, 2.5) as f32)
+                .collect();
+            let backend = super::legacy_backend(2);
+            let mut ws = EngineWorkspace::new();
+            let got =
+                lp.apply_ssm_batch(&u, batch, l, 1.0, Some(&dts), backend.as_ref(), &mut ws);
+            for bi in 0..batch {
+                let useq = &u[bi * l * 4..(bi + 1) * l * 4];
+                let dseq = &dts[bi * l..(bi + 1) * l];
+                let want = lp.apply_ssm(useq, l, 1.0, Some(dseq), 1);
+                prop::close_slice_f32(&want, &got[bi * l * 4..(bi + 1) * l * 4], 1e-4)
+                    .map_err(|e| format!("seq {bi}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_batched_model_matches_per_sequence() {
+        prop::check("model batch ≡ per-sequence", 6, |g| {
+            let batch = 1 + g.below(6);
+            let l = 8 + g.below(40);
+            let cfg = S5Config { h: 8, p: 8, j: 1, ..Default::default() };
+            let m = S5Model::init(2, 5, 2, &cfg, &mut Rng::new(42));
+            let u: Vec<f32> = (0..batch * l * 2).map(|_| g.normal() as f32).collect();
+            for threads in [1usize, 2, 4] {
+                let backend = super::legacy_backend(threads);
+                let mut ws = EngineWorkspace::new();
+                let got = m.forward_batch(&u, batch, l, 1.0, backend.as_ref(), &mut ws);
+                for bi in 0..batch {
+                    let useq = &u[bi * l * 2..(bi + 1) * l * 2];
+                    let want = m.forward(useq, l, 1.0, 1);
+                    prop::close_slice_f32(&want, &got[bi * 5..(bi + 1) * 5], 1e-4)
+                        .map_err(|e| format!("t={threads} seq {bi}: {e}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Workspace reuse: after a warm-up call at the largest shape, repeat
+    /// forwards at the same or smaller shapes must not grow the workspace
+    /// (the zero-steady-state-allocation contract), and must agree with a
+    /// fresh-workspace run.
+    #[test]
+    fn workspace_reuse_is_stable_and_allocation_free() {
+        let cfg = S5Config { h: 8, p: 8, j: 1, ..Default::default() };
+        let m = S5Model::init(3, 4, 2, &cfg, &mut Rng::new(9));
+        let backend = super::legacy_backend(2);
+        let mut ws = EngineWorkspace::new();
+        let mut rng = Rng::new(10);
+        let (big_b, big_l) = (6, 48);
+        let u_big = rng.normal_vec_f32(big_b * big_l * 3);
+        let _ = m.forward_batch(&u_big, big_b, big_l, 1.0, backend.as_ref(), &mut ws);
+        let high_water = ws.capacity_bytes();
+        assert!(high_water > 0);
+        for (b, l) in [(1usize, 16usize), (4, 48), (6, 48), (2, 30)] {
+            let u = rng.normal_vec_f32(b * l * 3);
+            let reused = m.forward_batch(&u, b, l, 1.0, backend.as_ref(), &mut ws);
+            let mut fresh_ws = EngineWorkspace::new();
+            let fresh = m.forward_batch(&u, b, l, 1.0, backend.as_ref(), &mut fresh_ws);
+            prop::close_slice_f32(&reused, &fresh, 1e-6).unwrap();
+            assert_eq!(
+                ws.capacity_bytes(),
+                high_water,
+                "workspace reallocated at (B={b}, L={l})"
+            );
+        }
     }
 
     #[test]

@@ -1,92 +1,113 @@
 //! Scans for first-order linear recurrences (paper §2.2, Appendix H).
 //!
-//! The recurrence x_k = ā_k ∘ x_{k−1} + b_k over ℂ^P is computed three ways:
+//! The recurrence x_k = ā_k ∘ x_{k−1} + b_k over ℂ^P is provided at three
+//! altitudes:
 //!
-//! * [`scan_sequential`] — the literal O(L·P) loop (ground truth; also the
-//!   online-generation mode of §3.3);
-//! * [`scan_parallel`] — multi-threaded chunked scan (local scan → chunk-
-//!   summary combine → fixup), the CPU analogue of the work-efficient
-//!   Blelloch scan the paper leans on. Wall-clock scales with cores while
-//!   total work stays O(L·P) — this is the subject of
-//!   `bench_scan_scaling`;
-//! * [`scan_dense_sequential`] — the O(L·P²)/O(L·P³) *dense*-A strawman of
-//!   §2.2, kept as a baseline to demonstrate why diagonalization is load-
-//!   bearing for S5.
+//! 1. **In-place kernels** — [`scan_sequential_ti_inplace`] /
+//!    [`scan_sequential_tv_inplace`] overwrite the drive buffer with the
+//!    states using the previous output row as the carried state (no scratch
+//!    at all); [`scan_parallel_ti_inplace`] / [`scan_parallel_tv_inplace`]
+//!    are the multi-threaded chunked form (local scan → chunk-summary
+//!    combine → fixup, the CPU analogue of the work-efficient Blelloch scan
+//!    the paper leans on). The parallel kernels honor the requested chunking
+//!    exactly — heuristics live in the backends — so tests can pin
+//!    chunk-boundary behavior.
+//! 2. **The [`ScanBackend`] trait** — the object-safe strategy interface the
+//!    batched engine ([`crate::ssm::engine`]) threads through the S5 stack.
+//!    It unifies sequential and parallel, time-invariant (TI) and
+//!    time-varying (TV) scans, adds batched entry points over (B, L, P)
+//!    row-major buffers (parallelized across B × chunks), and exposes the
+//!    single-step recurrence ([`ScanBackend::scan_step`]) that online
+//!    generation (§3.3) shares with the offline path.
+//! 3. **Allocating wrappers** — [`scan_sequential`], [`scan_sequential_ti`],
+//!    [`scan_parallel_ti`], [`scan_parallel_tv`] keep the original
+//!    copy-out signatures for benches and exploratory code.
 //!
-//! Element layout is planar-free here: `C32` pairs in row-major (L, P)
-//! buffers, matching the L1 kernel's numerics (f32).
+//! [`scan_dense_sequential`] is the O(L·P²)/O(L·P³) *dense*-A strawman of
+//! §2.2, kept as a baseline to demonstrate why diagonalization is load-
+//! bearing for S5. [`scan_sequential_ti_planar`] is the struct-of-arrays
+//! layout experiment matching the L1 kernel's planar f32 streams.
 
 use crate::num::{C32, C64};
 
-/// Sequential scan, time-varying multipliers.
+// ---------------------------------------------------------------------------
+// In-place kernels
+// ---------------------------------------------------------------------------
+
+/// One streaming recurrence step: `state ← a ∘ state + b` (elementwise).
 ///
-/// `a`, `b`: row-major (L, P). Returns states (L, P).
-pub fn scan_sequential(a: &[C32], b: &[C32], l: usize, p: usize) -> Vec<C32> {
+/// This is the shared inner step of the sequential kernels and of online
+/// generation ([`crate::ssm::online`]), so the two modes cannot drift.
+#[inline]
+pub fn scan_step_inplace(a: &[C32], state: &mut [C32], b: &[C32]) {
+    debug_assert_eq!(a.len(), state.len());
+    debug_assert_eq!(b.len(), state.len());
+    for j in 0..state.len() {
+        state[j] = a[j] * state[j] + b[j];
+    }
+}
+
+/// Sequential time-invariant scan, in place: on entry `bu` holds the drive
+/// b (row-major (L, P)); on exit it holds the states x. `a` has length P.
+///
+/// Uses the previous output row as the carried state — zero scratch.
+pub fn scan_sequential_ti_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize) {
+    assert_eq!(a.len(), p);
+    assert_eq!(bu.len(), l * p);
+    for k in 1..l {
+        let (prev, cur) = bu.split_at_mut(k * p);
+        let prev = &prev[(k - 1) * p..];
+        for j in 0..p {
+            cur[j] = a[j] * prev[j] + cur[j];
+        }
+    }
+}
+
+/// Sequential time-varying scan, in place: `a` and `bu` are (L, P).
+pub fn scan_sequential_tv_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize) {
     assert_eq!(a.len(), l * p);
-    assert_eq!(b.len(), l * p);
-    let mut xs = vec![C32::ZERO; l * p];
-    let mut state = vec![C32::ZERO; p];
-    for k in 0..l {
+    assert_eq!(bu.len(), l * p);
+    for k in 1..l {
         let row = k * p;
+        let (prev, cur) = bu.split_at_mut(row);
+        let prev = &prev[(k - 1) * p..];
         for j in 0..p {
-            let x = a[row + j] * state[j] + b[row + j];
-            state[j] = x;
-            xs[row + j] = x;
+            cur[j] = a[row + j] * prev[j] + cur[j];
         }
     }
-    xs
 }
 
-/// Sequential scan with a *time-invariant* diagonal (the common S5 case):
-/// `a` has length P.
-pub fn scan_sequential_ti(a: &[C32], b: &[C32], l: usize, p: usize) -> Vec<C32> {
-    assert_eq!(a.len(), p);
-    assert_eq!(b.len(), l * p);
-    let mut xs = vec![C32::ZERO; l * p];
-    let mut state = vec![C32::ZERO; p];
-    for k in 0..l {
-        let row = k * p;
-        for j in 0..p {
-            let x = a[j] * state[j] + b[row + j];
-            state[j] = x;
-            xs[row + j] = x;
-        }
-    }
-    xs
-}
-
-/// Parallel chunked scan over `threads` workers (time-invariant diagonal).
+/// Parallel chunked TI scan, in place, over exactly `threads` chunks
+/// (clamped to L). Three phases (classic two-pass prefix scan, Blelloch
+/// §1.4 at CPU chunk granularity):
 ///
-/// Three phases (classic two-pass prefix scan, Blelloch §1.4 adapted to a
-/// chunk granularity that fits CPUs):
-///  1. each worker scans its chunk locally from x=0 and records the chunk's
-///     composition (ā^{len}, local final state);
-///  2. the chunk summaries are combined sequentially (T ≪ L elements);
-///  3. each worker adds `ā^{k+1-start} ∘ x_enter` to its local states.
-pub fn scan_parallel_ti(
-    a: &[C32],
-    b: &[C32],
-    l: usize,
-    p: usize,
-    threads: usize,
-) -> Vec<C32> {
+///  1. each worker scans its chunk locally from x=0 in place and records
+///     the chunk's composition (ā^len, local final state);
+///  2. chunk summaries combine sequentially (T ≪ L elements);
+///  3. each worker adds `ā^{k−start+1} ∘ x_enter` to its local states.
+///
+/// No small-L fallback: callers get the chunking they ask for (the
+/// [`ParallelBackend`] applies the "sequential is faster below 4·T rows"
+/// heuristic). Transient allocation is O(T·P) for the summaries.
+pub fn scan_parallel_ti_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize, threads: usize) {
     assert_eq!(a.len(), p);
-    assert_eq!(b.len(), l * p);
-    let threads = threads.max(1).min(l.max(1));
-    if threads == 1 || l < 4 * threads {
-        return scan_sequential_ti(a, b, l, p);
+    assert_eq!(bu.len(), l * p);
+    if l == 0 || p == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(l);
+    if threads == 1 {
+        return scan_sequential_ti_inplace(a, bu, l, p);
     }
     let chunk = l.div_ceil(threads);
     let n_chunks = l.div_ceil(chunk);
 
-    let mut xs = vec![C32::ZERO; l * p];
-    // chunk summaries: a_pow[c] = ā^{len_c}, last[c] = local final state
     let mut a_pow = vec![C32::ZERO; n_chunks * p];
     let mut last = vec![C32::ZERO; n_chunks * p];
 
-    // Phase 1: local scans (parallel).
+    // Phase 1: local in-place scans (parallel).
     {
-        let xs_chunks: Vec<&mut [C32]> = xs.chunks_mut(chunk * p).collect();
+        let xs_chunks: Vec<&mut [C32]> = bu.chunks_mut(chunk * p).collect();
         let apow_chunks: Vec<&mut [C32]> = a_pow.chunks_mut(p).collect();
         let last_chunks: Vec<&mut [C32]> = last.chunks_mut(p).collect();
         std::thread::scope(|s| {
@@ -99,20 +120,17 @@ pub fn scan_parallel_ti(
                 s.spawn(move || {
                     let start = c * chunk;
                     let len = chunk.min(l - start);
-                    let mut state = vec![C32::ZERO; p];
-                    let mut pow = vec![C32::ONE; p];
-                    for k in 0..len {
-                        let g = (start + k) * p;
-                        let row = k * p;
+                    for k in 1..len {
+                        let (prev, cur) = xc.split_at_mut(k * p);
+                        let prev = &prev[(k - 1) * p..];
                         for j in 0..p {
-                            let x = a[j] * state[j] + b[g + j];
-                            state[j] = x;
-                            xc[row + j] = x;
-                            pow[j] = a[j] * pow[j];
+                            cur[j] = a[j] * prev[j] + cur[j];
                         }
                     }
-                    ac.copy_from_slice(&pow);
-                    lc.copy_from_slice(&state);
+                    for j in 0..p {
+                        ac[j] = a[j].powi(len as u32);
+                        lc[j] = xc[(len - 1) * p + j];
+                    }
                 });
             }
         });
@@ -130,19 +148,19 @@ pub fn scan_parallel_ti(
         }
     }
 
-    // Phase 3: fixup (parallel): x_k += ā^{k−start+1} ∘ x_enter.
+    // Phase 3: fixup (parallel): x_k += ā^{k−start+1} ∘ x_enter. The enter
+    // rows double as the carry accumulators.
     {
-        let xs_chunks: Vec<&mut [C32]> = xs.chunks_mut(chunk * p).collect();
+        let xs_chunks: Vec<&mut [C32]> = bu.chunks_mut(chunk * p).collect();
+        let enter_chunks: Vec<&mut [C32]> = enter.chunks_mut(p).collect();
         std::thread::scope(|s| {
-            for (c, xc) in xs_chunks.into_iter().enumerate() {
-                let enter_c = &enter[c * p..(c + 1) * p];
+            for (c, (xc, carry)) in xs_chunks.into_iter().zip(enter_chunks).enumerate() {
+                if c == 0 {
+                    continue; // enters at zero: nothing to add
+                }
                 s.spawn(move || {
                     let start = c * chunk;
                     let len = chunk.min(l - start);
-                    let mut carry: Vec<C32> = enter_c.to_vec();
-                    if carry.iter().all(|z| *z == C32::ZERO) {
-                        return; // first chunk: nothing to add
-                    }
                     for k in 0..len {
                         let row = k * p;
                         for j in 0..p {
@@ -154,33 +172,29 @@ pub fn scan_parallel_ti(
             }
         });
     }
-
-    xs
 }
 
-/// Parallel chunked scan with time-varying multipliers (irregular sampling).
-pub fn scan_parallel_tv(
-    a: &[C32],
-    b: &[C32],
-    l: usize,
-    p: usize,
-    threads: usize,
-) -> Vec<C32> {
+/// Parallel chunked TV scan, in place (irregular sampling): `a`, `bu` are
+/// (L, P). Same three phases as [`scan_parallel_ti_inplace`] with per-step
+/// multiplier products as the chunk summaries.
+pub fn scan_parallel_tv_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize, threads: usize) {
     assert_eq!(a.len(), l * p);
-    assert_eq!(b.len(), l * p);
-    let threads = threads.max(1).min(l.max(1));
-    if threads == 1 || l < 4 * threads {
-        return scan_sequential(a, b, l, p);
+    assert_eq!(bu.len(), l * p);
+    if l == 0 || p == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(l);
+    if threads == 1 {
+        return scan_sequential_tv_inplace(a, bu, l, p);
     }
     let chunk = l.div_ceil(threads);
     let n_chunks = l.div_ceil(chunk);
 
-    let mut xs = vec![C32::ZERO; l * p];
     let mut a_prod = vec![C32::ZERO; n_chunks * p];
     let mut last = vec![C32::ZERO; n_chunks * p];
 
     {
-        let xs_chunks: Vec<&mut [C32]> = xs.chunks_mut(chunk * p).collect();
+        let xs_chunks: Vec<&mut [C32]> = bu.chunks_mut(chunk * p).collect();
         let aprod_chunks: Vec<&mut [C32]> = a_prod.chunks_mut(p).collect();
         let last_chunks: Vec<&mut [C32]> = last.chunks_mut(p).collect();
         std::thread::scope(|s| {
@@ -193,20 +207,21 @@ pub fn scan_parallel_tv(
                 s.spawn(move || {
                     let start = c * chunk;
                     let len = chunk.min(l - start);
-                    let mut state = vec![C32::ZERO; p];
-                    let mut prod = vec![C32::ONE; p];
+                    ac.fill(C32::ONE);
                     for k in 0..len {
                         let g = (start + k) * p;
-                        let row = k * p;
+                        if k > 0 {
+                            let (prev, cur) = xc.split_at_mut(k * p);
+                            let prev = &prev[(k - 1) * p..];
+                            for j in 0..p {
+                                cur[j] = a[g + j] * prev[j] + cur[j];
+                            }
+                        }
                         for j in 0..p {
-                            let x = a[g + j] * state[j] + b[g + j];
-                            state[j] = x;
-                            xc[row + j] = x;
-                            prod[j] = a[g + j] * prod[j];
+                            ac[j] = a[g + j] * ac[j];
                         }
                     }
-                    ac.copy_from_slice(&prod);
-                    lc.copy_from_slice(&state);
+                    lc.copy_from_slice(&xc[(len - 1) * p..len * p]);
                 });
             }
         });
@@ -224,17 +239,16 @@ pub fn scan_parallel_tv(
     }
 
     {
-        let xs_chunks: Vec<&mut [C32]> = xs.chunks_mut(chunk * p).collect();
+        let xs_chunks: Vec<&mut [C32]> = bu.chunks_mut(chunk * p).collect();
+        let enter_chunks: Vec<&mut [C32]> = enter.chunks_mut(p).collect();
         std::thread::scope(|s| {
-            for (c, xc) in xs_chunks.into_iter().enumerate() {
-                let enter_c = &enter[c * p..(c + 1) * p];
+            for (c, (xc, carry)) in xs_chunks.into_iter().zip(enter_chunks).enumerate() {
+                if c == 0 {
+                    continue;
+                }
                 s.spawn(move || {
                     let start = c * chunk;
                     let len = chunk.min(l - start);
-                    let mut carry: Vec<C32> = enter_c.to_vec();
-                    if carry.iter().all(|z| *z == C32::ZERO) {
-                        return;
-                    }
                     for k in 0..len {
                         let g = (start + k) * p;
                         let row = k * p;
@@ -247,7 +261,282 @@ pub fn scan_parallel_tv(
             }
         });
     }
+}
 
+// ---------------------------------------------------------------------------
+// ScanBackend: the pluggable strategy the engine threads through the stack
+// ---------------------------------------------------------------------------
+
+/// Object-safe scan strategy.
+///
+/// One backend object serves every scan shape in the native stack:
+///
+/// * `scan_ti` / `scan_tv` — one sequence, in place over the drive buffer;
+/// * `scan_batch_ti` / `scan_batch_tv` — a packed (B, L, P) row-major batch,
+///   each sequence scanned independently (backends parallelize across
+///   B sequences × in-sequence chunks);
+/// * `scan_step` — the single-step recurrence online generation uses, so
+///   streaming and offline scans share one inner kernel.
+///
+/// All entry points overwrite the drive with the states and allocate no
+/// per-element scratch; parallel strategies allocate O(threads·P) chunk
+/// summaries per call.
+pub trait ScanBackend: Send + Sync {
+    /// Short human-readable strategy name (for benches/telemetry).
+    fn name(&self) -> &'static str;
+
+    /// Worker-thread budget this backend schedules onto (1 = sequential).
+    fn threads(&self) -> usize;
+
+    /// Time-invariant scan of one sequence: `a` (P), `bu` (L, P) in/out.
+    fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize);
+
+    /// Time-varying scan of one sequence: `a`, `bu` (L, P) in/out.
+    fn scan_tv(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize);
+
+    /// Batched TI scan: `a` (P) shared, `bu` (B, L, P) in/out.
+    fn scan_batch_ti(&self, a: &[C32], bu: &mut [C32], batch: usize, l: usize, p: usize) {
+        assert_eq!(bu.len(), batch * l * p);
+        if l == 0 || p == 0 {
+            return;
+        }
+        for seq in bu.chunks_mut(l * p) {
+            self.scan_ti(a, seq, l, p);
+        }
+    }
+
+    /// Batched TV scan: `a`, `bu` both (B, L, P), `bu` in/out.
+    fn scan_batch_tv(&self, a: &[C32], bu: &mut [C32], batch: usize, l: usize, p: usize) {
+        assert_eq!(a.len(), batch * l * p);
+        assert_eq!(bu.len(), batch * l * p);
+        if l == 0 || p == 0 {
+            return;
+        }
+        for (aseq, seq) in a.chunks(l * p).zip(bu.chunks_mut(l * p)) {
+            self.scan_tv(aseq, seq, l, p);
+        }
+    }
+
+    /// One streaming step `state ← a ∘ state + b` (online generation §3.3).
+    fn scan_step(&self, a: &[C32], state: &mut [C32], b: &[C32]) {
+        scan_step_inplace(a, state, b);
+    }
+}
+
+/// The literal O(L·P) loop (ground truth; also the online-generation mode
+/// of §3.3 at L = 1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SequentialBackend;
+
+impl ScanBackend for SequentialBackend {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn threads(&self) -> usize {
+        1
+    }
+
+    fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize) {
+        scan_sequential_ti_inplace(a, bu, l, p);
+    }
+
+    fn scan_tv(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize) {
+        scan_sequential_tv_inplace(a, bu, l, p);
+    }
+}
+
+/// Multi-threaded backend: chunked Blelloch scan within a sequence,
+/// sequence-sharding across a batch.
+///
+/// Heuristics: a single sequence falls back to the sequential kernel below
+/// 4·T rows (chunk bookkeeping would dominate); a batch with B ≥ T shards
+/// whole sequences across workers (embarrassingly parallel, no fixup
+/// phase); a batch with B < T gives each sequence ⌊T/B⌋ chunk-workers.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelBackend {
+    threads: usize,
+}
+
+impl ParallelBackend {
+    /// `threads = 0` auto-detects via `std::thread::available_parallelism`.
+    pub fn new(threads: usize) -> ParallelBackend {
+        ParallelBackend { threads: crate::ssm::engine::auto_threads(threads) }
+    }
+}
+
+impl ScanBackend for ParallelBackend {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize) {
+        if self.threads <= 1 || l < 4 * self.threads {
+            scan_sequential_ti_inplace(a, bu, l, p);
+        } else {
+            scan_parallel_ti_inplace(a, bu, l, p, self.threads);
+        }
+    }
+
+    fn scan_tv(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize) {
+        if self.threads <= 1 || l < 4 * self.threads {
+            scan_sequential_tv_inplace(a, bu, l, p);
+        } else {
+            scan_parallel_tv_inplace(a, bu, l, p, self.threads);
+        }
+    }
+
+    fn scan_batch_ti(&self, a: &[C32], bu: &mut [C32], batch: usize, l: usize, p: usize) {
+        assert_eq!(bu.len(), batch * l * p);
+        if batch == 0 || l == 0 || p == 0 {
+            return;
+        }
+        let rows = l * p;
+        let t = self.threads.max(1);
+        if batch == 1 {
+            return self.scan_ti(a, bu, l, p);
+        }
+        if t <= 1 {
+            for seq in bu.chunks_mut(rows) {
+                scan_sequential_ti_inplace(a, seq, l, p);
+            }
+        } else if batch >= t {
+            let per = batch.div_ceil(t);
+            std::thread::scope(|s| {
+                for shard in bu.chunks_mut(per * rows) {
+                    s.spawn(move || {
+                        for seq in shard.chunks_mut(rows) {
+                            scan_sequential_ti_inplace(a, seq, l, p);
+                        }
+                    });
+                }
+            });
+        } else {
+            let per_seq = t / batch;
+            std::thread::scope(|s| {
+                for seq in bu.chunks_mut(rows) {
+                    s.spawn(move || {
+                        if per_seq <= 1 || l < 4 * per_seq {
+                            scan_sequential_ti_inplace(a, seq, l, p);
+                        } else {
+                            scan_parallel_ti_inplace(a, seq, l, p, per_seq);
+                        }
+                    });
+                }
+            });
+        }
+    }
+
+    fn scan_batch_tv(&self, a: &[C32], bu: &mut [C32], batch: usize, l: usize, p: usize) {
+        assert_eq!(a.len(), batch * l * p);
+        assert_eq!(bu.len(), batch * l * p);
+        if batch == 0 || l == 0 || p == 0 {
+            return;
+        }
+        let rows = l * p;
+        let t = self.threads.max(1);
+        if batch == 1 {
+            return self.scan_tv(a, bu, l, p);
+        }
+        if t <= 1 {
+            for (aseq, seq) in a.chunks(rows).zip(bu.chunks_mut(rows)) {
+                scan_sequential_tv_inplace(aseq, seq, l, p);
+            }
+        } else if batch >= t {
+            let per = batch.div_ceil(t);
+            std::thread::scope(|s| {
+                for (ashard, shard) in a.chunks(per * rows).zip(bu.chunks_mut(per * rows)) {
+                    s.spawn(move || {
+                        for (aseq, seq) in ashard.chunks(rows).zip(shard.chunks_mut(rows)) {
+                            scan_sequential_tv_inplace(aseq, seq, l, p);
+                        }
+                    });
+                }
+            });
+        } else {
+            let per_seq = t / batch;
+            std::thread::scope(|s| {
+                for (aseq, seq) in a.chunks(rows).zip(bu.chunks_mut(rows)) {
+                    s.spawn(move || {
+                        if per_seq <= 1 || l < 4 * per_seq {
+                            scan_sequential_tv_inplace(aseq, seq, l, p);
+                        } else {
+                            scan_parallel_tv_inplace(aseq, seq, l, p, per_seq);
+                        }
+                    });
+                }
+            });
+        }
+    }
+}
+
+/// Pick a backend for a thread budget: ≤ 1 worker → [`SequentialBackend`],
+/// otherwise [`ParallelBackend`]; `threads = 0` auto-detects.
+pub fn backend_for_threads(threads: usize) -> Box<dyn ScanBackend> {
+    let t = crate::ssm::engine::auto_threads(threads);
+    if t <= 1 {
+        Box::new(SequentialBackend)
+    } else {
+        Box::new(ParallelBackend::new(t))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Allocating wrappers (original signatures)
+// ---------------------------------------------------------------------------
+
+/// Sequential scan, time-varying multipliers.
+///
+/// `a`, `b`: row-major (L, P). Returns states (L, P).
+pub fn scan_sequential(a: &[C32], b: &[C32], l: usize, p: usize) -> Vec<C32> {
+    assert_eq!(a.len(), l * p);
+    assert_eq!(b.len(), l * p);
+    let mut xs = b.to_vec();
+    scan_sequential_tv_inplace(a, &mut xs, l, p);
+    xs
+}
+
+/// Sequential scan with a *time-invariant* diagonal (the common S5 case):
+/// `a` has length P.
+pub fn scan_sequential_ti(a: &[C32], b: &[C32], l: usize, p: usize) -> Vec<C32> {
+    assert_eq!(a.len(), p);
+    assert_eq!(b.len(), l * p);
+    let mut xs = b.to_vec();
+    scan_sequential_ti_inplace(a, &mut xs, l, p);
+    xs
+}
+
+/// Parallel chunked scan over `threads` workers (time-invariant diagonal).
+/// Falls back to the sequential kernel when the chunk bookkeeping would
+/// dominate (L < 4·threads).
+pub fn scan_parallel_ti(a: &[C32], b: &[C32], l: usize, p: usize, threads: usize) -> Vec<C32> {
+    assert_eq!(a.len(), p);
+    assert_eq!(b.len(), l * p);
+    let threads = threads.max(1).min(l.max(1));
+    let mut xs = b.to_vec();
+    if threads == 1 || l < 4 * threads {
+        scan_sequential_ti_inplace(a, &mut xs, l, p);
+    } else {
+        scan_parallel_ti_inplace(a, &mut xs, l, p, threads);
+    }
+    xs
+}
+
+/// Parallel chunked scan with time-varying multipliers (irregular sampling).
+pub fn scan_parallel_tv(a: &[C32], b: &[C32], l: usize, p: usize, threads: usize) -> Vec<C32> {
+    assert_eq!(a.len(), l * p);
+    assert_eq!(b.len(), l * p);
+    let threads = threads.max(1).min(l.max(1));
+    let mut xs = b.to_vec();
+    if threads == 1 || l < 4 * threads {
+        scan_sequential_tv_inplace(a, &mut xs, l, p);
+    } else {
+        scan_parallel_tv_inplace(a, &mut xs, l, p, threads);
+    }
     xs
 }
 
@@ -377,6 +666,129 @@ mod tests {
             let par = scan_parallel_tv(&a, &b, l, p, threads);
             close(&seq, &par, 1e-4)
         });
+    }
+
+    /// Chunk-boundary sweep: the in-place parallel kernels (no fallback)
+    /// must match the sequential kernels at L = 1, chunk−1, chunk, chunk+1
+    /// and non-divisible L, for several thread counts.
+    #[test]
+    fn parallel_inplace_chunk_boundaries() {
+        let mut g = Rng::new(11);
+        for &t in &[2usize, 3, 5, 8] {
+            // with threads = t, chunk = ceil(l / t): exercise the lengths
+            // around every boundary the sharding can produce
+            for &l in &[1usize, 2, t - 1, t, t + 1, 4 * t - 1, 4 * t, 4 * t + 1, 10 * t + 3] {
+                let l = l.max(1);
+                let p = 3;
+                let a = rand_c32(&mut g, p, 0.6);
+                let b = rand_c32(&mut g, l * p, 1.0);
+                let want = scan_sequential_ti(&a, &b, l, p);
+                let mut got = b.clone();
+                scan_parallel_ti_inplace(&a, &mut got, l, p, t);
+                close(&want, &got, 1e-4)
+                    .unwrap_or_else(|e| panic!("TI t={t} l={l}: {e}"));
+
+                let a_tv = rand_c32(&mut g, l * p, 0.6);
+                let want = scan_sequential(&a_tv, &b, l, p);
+                let mut got = b.clone();
+                scan_parallel_tv_inplace(&a_tv, &mut got, l, p, t);
+                close(&want, &got, 1e-4)
+                    .unwrap_or_else(|e| panic!("TV t={t} l={l}: {e}"));
+            }
+        }
+    }
+
+    /// Every backend agrees with the sequential ground truth on single
+    /// sequences, for TI and TV multipliers.
+    #[test]
+    fn prop_backends_agree_single_sequence() {
+        let backends: Vec<Box<dyn ScanBackend>> = vec![
+            Box::new(SequentialBackend),
+            Box::new(ParallelBackend::new(2)),
+            Box::new(ParallelBackend::new(3)),
+            Box::new(ParallelBackend::new(8)),
+        ];
+        prop::check("ScanBackend single-seq equivalence", 25, |g| {
+            let l = 1 + g.below(300);
+            let p = 1 + g.below(8);
+            let a = rand_c32(g, p, 0.6);
+            let a_tv = rand_c32(g, l * p, 0.6);
+            let b = rand_c32(g, l * p, 1.0);
+            let want_ti = scan_sequential_ti(&a, &b, l, p);
+            let want_tv = scan_sequential(&a_tv, &b, l, p);
+            for be in &backends {
+                let mut got = b.clone();
+                be.scan_ti(&a, &mut got, l, p);
+                close(&want_ti, &got, 1e-4)
+                    .map_err(|e| format!("{} TI: {e}", be.name()))?;
+                let mut got = b.clone();
+                be.scan_tv(&a_tv, &mut got, l, p);
+                close(&want_tv, &got, 1e-4)
+                    .map_err(|e| format!("{} TV: {e}", be.name()))?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Batched scans equal per-sequence scans for every backend, across
+    /// B < threads, B = threads and B > threads regimes.
+    #[test]
+    fn prop_scan_batch_matches_per_sequence() {
+        let backends: Vec<Box<dyn ScanBackend>> = vec![
+            Box::new(SequentialBackend),
+            Box::new(ParallelBackend::new(2)),
+            Box::new(ParallelBackend::new(4)),
+        ];
+        prop::check("scan_batch ≡ per-sequence", 20, |g| {
+            let batch = 1 + g.below(7);
+            let l = 1 + g.below(120);
+            let p = 1 + g.below(6);
+            let a = rand_c32(g, p, 0.6);
+            let a_tv = rand_c32(g, batch * l * p, 0.6);
+            let b = rand_c32(g, batch * l * p, 1.0);
+
+            let mut want_ti = b.clone();
+            let mut want_tv = b.clone();
+            for bi in 0..batch {
+                let s = bi * l * p;
+                scan_sequential_ti_inplace(&a, &mut want_ti[s..s + l * p], l, p);
+                scan_sequential_tv_inplace(
+                    &a_tv[s..s + l * p],
+                    &mut want_tv[s..s + l * p],
+                    l,
+                    p,
+                );
+            }
+            for be in &backends {
+                let mut got = b.clone();
+                be.scan_batch_ti(&a, &mut got, batch, l, p);
+                close(&want_ti, &got, 1e-4)
+                    .map_err(|e| format!("{} batch TI (B={batch}): {e}", be.name()))?;
+                let mut got = b.clone();
+                be.scan_batch_tv(&a_tv, &mut got, batch, l, p);
+                close(&want_tv, &got, 1e-4)
+                    .map_err(|e| format!("{} batch TV (B={batch}): {e}", be.name()))?;
+            }
+            Ok(())
+        });
+    }
+
+    /// The streaming step kernel replayed over a sequence equals the
+    /// offline TI scan — the online/offline shared-code-path guarantee.
+    #[test]
+    fn scan_step_replay_equals_offline() {
+        let mut g = Rng::new(21);
+        let (l, p) = (64, 5);
+        let a = rand_c32(&mut g, p, 0.6);
+        let b = rand_c32(&mut g, l * p, 1.0);
+        let offline = scan_sequential_ti(&a, &b, l, p);
+        let be = SequentialBackend;
+        let mut state = vec![C32::ZERO; p];
+        for k in 0..l {
+            be.scan_step(&a, &mut state, &b[k * p..(k + 1) * p]);
+            close(&offline[k * p..(k + 1) * p], &state, 1e-6)
+                .unwrap_or_else(|e| panic!("k={k}: {e}"));
+        }
     }
 
     #[test]

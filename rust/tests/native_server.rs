@@ -1,0 +1,140 @@
+//! Integration: the native inference server over the batched engine —
+//! no compiled artifacts required. Covers the dynamic batcher (coalescing,
+//! fan-out), correctness of batched serving against direct forwards, and
+//! error propagation.
+
+use s5::coordinator::server::{NativeInferenceServer, ServerConfig};
+use s5::rng::Rng;
+use s5::ssm::s5::{S5Config, S5Model};
+use std::time::Duration;
+
+fn model(d_in: usize, classes: usize) -> S5Model {
+    let cfg = S5Config { h: 16, p: 16, j: 1, ..Default::default() };
+    S5Model::init(d_in, classes, 2, &cfg, &mut Rng::new(77))
+}
+
+fn start(l: usize, max_wait_ms: u64, max_batch: usize) -> (NativeInferenceServer, S5Model) {
+    let m = model(2, 5);
+    let server = NativeInferenceServer::start(
+        m.clone(),
+        l,
+        ServerConfig {
+            max_wait: Duration::from_millis(max_wait_ms),
+            max_batch,
+            threads: 2,
+        },
+    );
+    (server, m)
+}
+
+#[test]
+fn single_request_roundtrip_matches_direct_forward() {
+    let l = 32;
+    let (server, m) = start(l, 1, 8);
+    let mut rng = Rng::new(0);
+    let x = rng.normal_vec_f32(l * 2);
+    let resp = server.handle().infer(x.clone()).unwrap();
+    assert_eq!(resp.logits.len(), 5);
+    assert!(resp.logits.iter().all(|v| v.is_finite()));
+    assert!(resp.batched_with >= 1);
+    // served logits equal a direct single-sequence forward
+    let want = m.forward(&x, l, 1.0, 1);
+    for (a, b) in want.iter().zip(resp.logits.iter()) {
+        assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn concurrent_requests_are_batched_and_correct() {
+    let l = 24;
+    let (server, m) = start(l, 50, 16);
+    let handle = server.handle();
+    let results: Vec<(Vec<f32>, Vec<f32>, usize)> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..12u64)
+            .map(|i| {
+                let h = handle.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(i);
+                    let x = rng.normal_vec_f32(l * 2);
+                    let resp = h.infer(x.clone()).unwrap();
+                    (x, resp.logits, resp.batched_with)
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    // with a 50ms window and 12 concurrent clients, at least one executed
+    // batch must have coalesced multiple requests
+    assert!(
+        results.iter().any(|(_, _, fill)| *fill > 1),
+        "no batching observed"
+    );
+    assert!(server.stats.mean_batch_fill() > 1.0);
+    // every response equals its own direct forward, whatever batch it
+    // landed in — the batched-engine equivalence, end to end
+    for (x, logits, _) in &results {
+        let want = m.forward(x, l, 1.0, 1);
+        for (a, b) in want.iter().zip(logits.iter()) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn wrong_width_rejected_immediately() {
+    let (server, _) = start(16, 1, 8);
+    let err = server.handle().infer(vec![0.0; 3]).unwrap_err();
+    assert!(format!("{err}").contains("width"), "{err}");
+}
+
+#[test]
+fn different_timescales_do_not_share_a_batch() {
+    let l = 16;
+    let (server, m) = start(l, 30, 8);
+    let handle = server.handle();
+    std::thread::scope(|s| {
+        let h1 = handle.clone();
+        let h2 = handle.clone();
+        let a = s.spawn(move || {
+            let mut rng = Rng::new(1);
+            let x = rng.normal_vec_f32(l * 2);
+            (x.clone(), h1.infer_with_timescale(x, 1.0).unwrap())
+        });
+        let b = s.spawn(move || {
+            let mut rng = Rng::new(2);
+            let x = rng.normal_vec_f32(l * 2);
+            (x.clone(), h2.infer_with_timescale(x, 2.0).unwrap())
+        });
+        let (xa, ra) = a.join().unwrap();
+        let (xb, rb) = b.join().unwrap();
+        // each must be served at its own timescale
+        let wa = m.forward(&xa, l, 1.0, 1);
+        let wb = m.forward(&xb, l, 2.0, 1);
+        for (w, g) in wa.iter().zip(ra.logits.iter()) {
+            assert!((w - g).abs() < 1e-4 * (1.0 + w.abs()));
+        }
+        for (w, g) in wb.iter().zip(rb.logits.iter()) {
+            assert!((w - g).abs() < 1e-4 * (1.0 + w.abs()));
+        }
+    });
+}
+
+#[test]
+fn max_batch_caps_fill() {
+    let l = 16;
+    let (server, _) = start(l, 80, 3);
+    let handle = server.handle();
+    let fills: Vec<usize> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..9u64)
+            .map(|i| {
+                let h = handle.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(i);
+                    h.infer(rng.normal_vec_f32(l * 2)).unwrap().batched_with
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    assert!(fills.iter().all(|&f| f <= 3), "max_batch exceeded: {fills:?}");
+}

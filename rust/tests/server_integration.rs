@@ -16,7 +16,7 @@ fn start(preset: &str, max_wait_ms: u64) -> InferenceServer {
         Path::new("artifacts"),
         preset,
         None,
-        ServerConfig { max_wait: Duration::from_millis(max_wait_ms) },
+        ServerConfig { max_wait: Duration::from_millis(max_wait_ms), ..Default::default() },
     )
     .unwrap()
 }

@@ -1,0 +1,195 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this path dependency
+//! provides the subset of `anyhow` the crate actually uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait (on both `Result` and
+//! `Option`), and the `anyhow!` / `bail!` / `ensure!` macros. Error chains
+//! are captured eagerly as strings: `{}` shows the outermost message,
+//! `{:#}` (and `Debug`) the full `outer: ...: root` chain, matching how the
+//! CLI and tests format errors.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chained error: `chain[0]` is the outermost context message,
+/// the last element the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a displayable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Build from a standard error, capturing its `source()` chain.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        let mut chain = vec![error.to_string()];
+        let mut src = error.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root-cause message (innermost of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// The same blanket conversion real anyhow ships: any std error (but not
+// `Error` itself, which deliberately does not implement `StdError`).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = Error::new(io_err()).context("loading config");
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn result_and_option_context() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert!(format!("{e:#}").contains("outer"));
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("slot {}", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "slot 3");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("root {}", 42)
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root 42");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "bad request width {}", x);
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{}", f(12).unwrap_err()).contains("width 12"));
+        assert!(format!("{}", f(7).unwrap_err()).contains("unlucky"));
+        let msg = "boom";
+        let e = anyhow!("{msg}");
+        assert_eq!(format!("{e}"), "boom");
+    }
+}
