@@ -1,85 +1,72 @@
-//! Quickstart: load one AOT-compiled S5 layer, run it from Rust, and
-//! cross-check against the pure-Rust reference implementation.
+//! Quickstart: the unified `SequenceModel` inference API, end to end —
+//! typed batched prefill, bit-for-bit streaming, and native npz
+//! checkpoint round-tripping. Runs hermetically (no PJRT, no artifacts):
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 //!
-//! This demonstrates the full three-layer contract on the smallest
-//! possible artifact: the Pallas scan kernel (L1) and the JAX layer
-//! math (L2) are baked into `artifacts/quickstart_fwd.hlo.txt`; Rust (L3)
-//! loads it through PJRT, feeds a random sequence, and verifies the output
-//! against an independent implementation of the same layer.
+//! (The PJRT parity checks against the compiled HLO live in
+//! `tests/parity.rs` and the pjrt-gated examples.)
 
-use s5::num::C64;
 use s5::rng::Rng;
-use s5::runtime::params::{assemble_inputs, literal_f32, to_vec_f32, ParamStore};
-use s5::runtime::{Artifact, Client};
-use s5::ssm::s5::S5Layer;
-use std::collections::BTreeMap;
-use std::path::Path;
+use s5::runtime::NpzStore;
+use s5::ssm::api::{Batch, ForwardOptions, SequenceModel, Session};
+use s5::ssm::engine::EngineWorkspace;
+use s5::ssm::rnn::GruCell;
+use s5::ssm::s5::{S5Config, S5Model};
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let dir = Path::new(s5::ARTIFACTS_DIR);
-    anyhow::ensure!(
-        dir.join("quickstart_fwd.hlo.txt").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
+    let (d_in, classes, depth, l) = (3usize, 10usize, 2usize, 128usize);
+    let cfg = S5Config { h: 32, p: 32, j: 1, ..Default::default() };
+    let model = S5Model::init(d_in, classes, depth, &cfg, &mut Rng::new(42));
+    println!("S5 model: {} params, spec {:?}", model.param_count(), model.spec());
 
-    // 1. Load + compile the AOT artifact on the PJRT CPU client.
-    let client = Client::cpu()?;
-    let art = Artifact::load(dir, "quickstart_fwd", &client)?;
-    let (l, h, p2) = (128usize, 8usize, 4usize);
-    println!(
-        "loaded {}: kind={} ({} inputs, {} outputs)",
-        art.name,
-        art.manifest.kind,
-        art.manifest.inputs.len(),
-        art.manifest.outputs.len()
-    );
+    // 1. Typed batched prefill: a packed (B, L, d_in) buffer under one
+    //    ForwardOptions, one output row per sequence.
+    let batch = 4usize;
+    let mut rng = Rng::new(7);
+    let u = rng.normal_vec_f32(batch * l * d_in);
+    let opts = ForwardOptions::new().with_threads(0); // 0 = auto-detect
+    let mut ws = EngineWorkspace::new();
+    let logits = model.prefill(Batch::new(&u, batch, l, d_in), &opts, &mut ws);
+    println!("prefill: {batch} sequences → {} logit rows", logits.len() / classes);
 
-    // 2. Load the initial parameters the Python build exported.
-    let store = ParamStore::load_npz(&Artifact::init_npz_path(dir, "quickstart"))?;
-    println!("parameters: {} tensors, {} scalars", store.len(), store.total_elems());
+    // 2. Native checkpoint export before the model moves behind a trait
+    //    object (save → load → identical logits is checked below).
+    let store = model.to_param_store();
 
-    // 3. Run the compiled layer on a random sequence.
-    let mut rng = Rng::new(42);
-    let u = rng.normal_vec_f32(l * h);
-    let mut extra = BTreeMap::new();
-    extra.insert("u".to_string(), literal_f32(&u, &[l, h])?);
-    let inputs = assemble_inputs(&art.manifest, &store, &mut extra)?;
-    let t = s5::util::Timer::start();
-    let y_hlo = to_vec_f32(&art.run(&inputs)?[0])?;
-    println!("PJRT execution: {:.2}ms for (L={l}, H={h})", t.millis());
+    // 3. Streaming: a Session steps one observation at a time and, on the
+    //    sequential scan path, reproduces the batched forward bit-for-bit.
+    let seq_opts = ForwardOptions::new(); // sequential scan (deterministic)
+    let one = &u[..l * d_in];
+    let offline = model.prefill(Batch::single(one, l, d_in), &seq_opts, &mut ws);
+    let shared: Arc<dyn SequenceModel> = Arc::new(model);
+    let mut session = Session::new(shared.clone(), seq_opts.clone());
+    let streamed = session.prefill(one, l);
+    anyhow::ensure!(offline == streamed, "streaming must equal batched exactly");
+    println!("session: {} steps, streaming ≡ batched bit-for-bit ✓", session.steps());
 
-    // 4. Same layer, pure Rust (the parity oracle).
-    let f = |name: &str| to_vec_f32(store.get(name).unwrap()).unwrap();
-    let (lr, li) = (f("params.lambda_re"), f("params.lambda_im"));
-    let (br, bi) = (f("params.b_re"), f("params.b_im"));
-    let (cr, ci) = (f("params.c_re"), f("params.c_im"));
-    let layer = S5Layer {
-        lambda: (0..p2).map(|i| C64::new(lr[i] as f64, li[i] as f64)).collect(),
-        b_tilde: (0..p2 * h).map(|i| C64::new(br[i] as f64, bi[i] as f64)).collect(),
-        c_tilde: vec![(0..h * p2).map(|i| C64::new(cr[i] as f64, ci[i] as f64)).collect()],
-        d: f("params.d"),
-        log_dt: f("params.log_dt"),
-        gate_w: f("params.gate_w"),
-        norm_scale: f("params.norm_scale"),
-        norm_bias: f("params.norm_bias"),
-        h,
-        p2,
-    };
-    let y_rust = layer.apply(&u, l, 1.0, None, 1);
+    // 4. The same API drives a completely different model family.
+    let gru: Arc<dyn SequenceModel> = Arc::new(GruCell::init(d_in, 16, &mut Rng::new(1)));
+    let hidden = gru.prefill(Batch::single(one, l, d_in), &opts, &mut ws);
+    println!("gru prefill through the same trait: {} hidden units", hidden.len());
 
-    // 5. Compare.
-    let max_err = y_hlo
+    // 5. Checkpoint round trip through the pure-Rust npz store.
+    let path = std::env::temp_dir().join(format!("s5_quickstart_{}.npz", std::process::id()));
+    store.save(&path)?;
+    let reloaded = S5Model::from_param_store(&NpzStore::load(&path)?)?;
+    let re_logits = reloaded.prefill(Batch::single(one, l, d_in), &seq_opts, &mut ws);
+    let baseline = shared.prefill(Batch::single(one, l, d_in), &seq_opts, &mut ws);
+    let max_err = re_logits
         .iter()
-        .zip(&y_rust)
-        .map(|(a, b)| (a - b).abs() / (1.0 + a.abs().max(b.abs())))
+        .zip(&baseline)
+        .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
-    println!("max relative error HLO vs Rust oracle: {max_err:.2e}");
-    anyhow::ensure!(max_err < 2e-3, "parity violated");
-    println!("first output row: {:?}", &y_hlo[..h.min(6)]);
-    println!("quickstart OK — all three layers agree ✓");
+    println!("checkpoint round trip: max |Δlogit| = {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-4, "checkpoint round trip drifted");
+    std::fs::remove_file(&path).ok();
+    println!("quickstart OK ✓");
     Ok(())
 }

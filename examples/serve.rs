@@ -1,36 +1,44 @@
-//! Serving demo: dynamic batching under concurrent load.
+//! Serving demo: one model-generic dynamic-batching server.
 //!
-//! Starts the inference server on the sMNIST classifier artifact and fires
-//! concurrent clients at it, reporting throughput, latency percentiles and
-//! batch-fill — then repeats with batching disabled to show the win.
+//! Starts the native inference server twice — once over an S5 stack, once
+//! over the GRU baseline — through the same `Arc<dyn SequenceModel>`
+//! handle API, fires concurrent clients at each, and reports throughput,
+//! latency percentiles and batch fill. Also opens a pooled streaming
+//! session against the S5 server. Runs hermetically (no PJRT):
 //!
 //! ```bash
 //! cargo run --release --example serve -- --requests 96 --clients 16
 //! ```
 
-use s5::coordinator::server::{InferenceServer, ServerConfig};
-use s5::data::make_task;
+use s5::coordinator::server::{NativeInferenceServer, ServerConfig};
 use s5::rng::Rng;
+use s5::ssm::api::SequenceModel;
+use s5::ssm::rnn::GruCell;
+use s5::ssm::s5::{S5Config, S5Model};
 use s5::util::{Args, Stats};
-use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
-fn drive(server: &InferenceServer, n_requests: usize, clients: usize) -> (f64, Stats) {
+fn drive(
+    server: &NativeInferenceServer,
+    l: usize,
+    n_requests: usize,
+    clients: usize,
+) -> (f64, Stats) {
     let handle = server.handle();
-    let task = make_task("smnist").unwrap();
+    let d_in = handle.row / l;
     let t0 = std::time::Instant::now();
     let lat: Vec<f64> = std::thread::scope(|s| {
         let joins: Vec<_> = (0..clients)
             .map(|c| {
                 let h = handle.clone();
-                let task = &task;
                 let per_client = n_requests / clients;
                 s.spawn(move || {
                     let mut rng = Rng::new(c as u64);
                     let mut lats = Vec::with_capacity(per_client);
                     for _ in 0..per_client {
-                        let ex = task.sample(&mut rng);
-                        let resp = h.infer(ex.x).expect("infer");
+                        let x = rng.normal_vec_f32(l * d_in);
+                        let resp = h.infer(x).expect("infer");
                         lats.push(resp.total_secs);
                     }
                     lats
@@ -47,40 +55,48 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let n_requests = args.get_usize("requests", 96);
     let clients = args.get_usize("clients", 16);
-    let dir = Path::new(s5::ARTIFACTS_DIR);
+    let (l, d_in) = (128usize, 4usize);
+    let cfg = ServerConfig { max_wait: Duration::from_millis(10), ..Default::default() };
 
-    println!("=== dynamic batching ON (max_wait = 10ms) ===");
-    let batched = InferenceServer::start(
-        dir,
-        "smnist",
-        None,
-        ServerConfig { max_wait: Duration::from_millis(10), ..Default::default() },
-    )?;
-    let (tput_b, lat_b) = drive(&batched, n_requests, clients);
+    // The two models share nothing but the trait — one server loop each.
+    let s5_model: Arc<dyn SequenceModel> = Arc::new(S5Model::init(
+        d_in,
+        10,
+        4,
+        &S5Config { h: 32, p: 32, j: 1, ..Default::default() },
+        &mut Rng::new(3),
+    ));
+    let gru_model: Arc<dyn SequenceModel> = Arc::new(GruCell::init(d_in, 32, &mut Rng::new(4)));
+
+    for model in [s5_model.clone(), gru_model] {
+        let spec = model.spec();
+        println!("=== serving {} (d_out {}) with dynamic batching ===", spec.name, spec.d_output);
+        let server = NativeInferenceServer::start_model(model, l, cfg);
+        let (tput, lat) = drive(&server, l, n_requests, clients);
+        println!(
+            "  {tput:.1} req/s | p50 {:.1}ms p95 {:.1}ms | mean batch fill {:.2}",
+            lat.p50 * 1e3,
+            lat.p95 * 1e3,
+            server.stats.mean_batch_fill()
+        );
+    }
+
+    // Streaming: check a pooled session out of a running server and feed
+    // it one observation at a time (same shared model, no extra copy).
+    let server = NativeInferenceServer::start_model(s5_model, l, cfg);
+    let mut session = server.open_session();
+    let mut rng = Rng::new(9);
+    let mut logits = Vec::new();
+    for _ in 0..l {
+        logits = session.step(&rng.normal_vec_f32(d_in));
+    }
     println!(
-        "  {tput_b:.1} req/s | p50 {:.1}ms p95 {:.1}ms | mean batch fill {:.2}",
-        lat_b.p50 * 1e3,
-        lat_b.p95 * 1e3,
-        batched.stats.mean_batch_fill()
+        "streamed {} steps through a pooled session → {} logits",
+        session.steps(),
+        logits.len()
     );
-    drop(batched);
+    server.close_session(session);
 
-    println!("=== dynamic batching OFF (max_wait = 0) ===");
-    let unbatched = InferenceServer::start(
-        dir,
-        "smnist",
-        None,
-        ServerConfig { max_wait: Duration::from_millis(0), ..Default::default() },
-    )?;
-    let (tput_u, lat_u) = drive(&unbatched, n_requests, clients);
-    println!(
-        "  {tput_u:.1} req/s | p50 {:.1}ms p95 {:.1}ms | mean batch fill {:.2}",
-        lat_u.p50 * 1e3,
-        lat_u.p95 * 1e3,
-        unbatched.stats.mean_batch_fill()
-    );
-
-    println!("\nbatching speedup: {:.2}x throughput", tput_b / tput_u);
     println!("serve example OK ✓");
     Ok(())
 }

@@ -12,6 +12,8 @@
 //!
 //! Run: `cargo bench --bench bench_scan_scaling`
 
+#![allow(deprecated)] // legacy positional wrappers are the subjects/oracles here
+
 use s5::bench::{fmt_secs, measure, quick_mode};
 use s5::num::{C32, C64};
 use s5::rng::Rng;

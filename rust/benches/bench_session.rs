@@ -1,0 +1,80 @@
+//! Streaming-session throughput: tokens/sec of `Session::step` for the
+//! unified `SequenceModel` API, next to the per-token cost of the batched
+//! offline prefill over the same models (the Prop. 1 online-vs-offline
+//! comparison, measured on the serving surface instead of raw kernels).
+//!
+//! Run: `cargo bench --bench bench_session`  (S5_BENCH_QUICK=1 for CI)
+
+use s5::bench::quick_mode;
+use s5::rng::Rng;
+use s5::ssm::api::{Batch, ForwardOptions, SequenceModel, Session};
+use s5::ssm::engine::EngineWorkspace;
+use s5::ssm::rnn::{CruLike, GruCell};
+use s5::ssm::s5::{S5Config, S5Model};
+use s5::util::Table;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let quick = quick_mode();
+    let (d_in, h, depth) = (4usize, if quick { 16 } else { 32 }, if quick { 2 } else { 4 });
+    let tokens = if quick { 512usize } else { 8192 };
+    let repeats = if quick { 2 } else { 5 };
+
+    let cfg = S5Config { h, p: h, j: 1, ..Default::default() };
+    let models: Vec<(&str, Arc<dyn SequenceModel>)> = vec![
+        ("s5", Arc::new(S5Model::init(d_in, 10, depth, &cfg, &mut Rng::new(1)))),
+        ("gru", Arc::new(GruCell::init(d_in, h, &mut Rng::new(2)))),
+        ("cru-like", Arc::new(CruLike::init(d_in, h, &mut Rng::new(3)))),
+    ];
+
+    println!(
+        "# Session step throughput vs batched prefill ({tokens} tokens, H={h}, depth {depth})\n"
+    );
+    let mut table = Table::new(&[
+        "model", "step tokens/s", "prefill tokens/s (seq)", "prefill tokens/s (par)",
+    ]);
+    let mut rng = Rng::new(9);
+    for (name, model) in models {
+        let u = rng.normal_vec_f32(tokens * d_in);
+
+        // streaming: one Session driven token by token
+        let mut best_step = f64::MAX;
+        for _ in 0..repeats {
+            let mut session = Session::new(model.clone(), ForwardOptions::new());
+            let t0 = Instant::now();
+            for k in 0..tokens {
+                std::hint::black_box(session.step(&u[k * d_in..(k + 1) * d_in]));
+            }
+            best_step = best_step.min(t0.elapsed().as_secs_f64());
+        }
+
+        // offline: the same tokens as one packed prefill
+        let mut ws = EngineWorkspace::new();
+        let mut prefill_rate = |threads: usize| {
+            let opts = ForwardOptions::new().with_threads(threads);
+            let mut best = f64::MAX;
+            for _ in 0..repeats {
+                let t0 = Instant::now();
+                std::hint::black_box(model.prefill(
+                    Batch::single(&u, tokens, d_in),
+                    &opts,
+                    &mut ws,
+                ));
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            tokens as f64 / best
+        };
+        let seq = prefill_rate(1);
+        let par = prefill_rate(0);
+
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}", tokens as f64 / best_step),
+            format!("{seq:.0}"),
+            format!("{par:.0}"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("session bench OK ✓");
+}

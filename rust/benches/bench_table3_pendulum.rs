@@ -10,6 +10,8 @@
 //!
 //! Run: `cargo bench --bench bench_table3_pendulum`
 
+#![allow(deprecated)] // legacy positional wrappers are the subjects/oracles here
+
 use s5::bench::{fmt_secs, measure, quick_mode};
 use s5::coordinator::{TrainConfig, Trainer};
 use s5::rng::Rng;

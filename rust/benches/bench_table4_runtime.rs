@@ -14,6 +14,8 @@
 //! Run: `cargo bench --bench bench_table4_runtime`
 //! (S5_BENCH_QUICK=1 shrinks workloads for smoke runs.)
 
+#![allow(deprecated)] // legacy positional wrappers are the subjects/oracles here
+
 use s5::bench::{measure, quick_mode, RelativeReport};
 use s5::rng::Rng;
 use s5::ssm::s4::S4DLayer;

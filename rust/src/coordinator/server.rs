@@ -10,15 +10,21 @@
 //!
 //! Two execution backends share the queue/batcher/fan-out machinery:
 //!
-//! * **Native** ([`NativeInferenceServer`], always available) — runs the
-//!   pure-Rust batched engine: up to `max_batch` queued sequences are
-//!   packed into one (B, L, d) buffer (via `data/batcher::pack_rows`) and
-//!   pushed through [`S5Model::forward_batch_into`] with a reused
-//!   [`EngineWorkspace`], turning the native path from
-//!   one-request-per-forward into true dynamic batching.
-//! * **PJRT** ([`InferenceServer`], behind the `pjrt` feature) — executes a
+//! * **Native** ([`NativeInferenceServer`], always available) — generic
+//!   over `dyn` [`SequenceModel`]: up to `max_batch` queued sequences are
+//!   packed into one typed [`Batch`] (via `data/batcher::pack_rows`) and
+//!   pushed through [`SequenceModel::prefill_into`] with a reused
+//!   [`EngineWorkspace`] — one dynamic-batching loop serves the S5 stack
+//!   and the RNN baselines alike. The server also owns a
+//!   [`SessionPool`], handing out prefill-then-step streaming
+//!   [`Session`]s per connection over the same shared model.
+//! * **PJRT** (`InferenceServer`, behind the `pjrt` feature) — executes a
 //!   pre-compiled fixed-batch artifact, padding to the artifact's batch
 //!   dimension.
+//!
+//! Timescales are `f64` end to end (request → coalescing key → model), so
+//! server-side timescale grouping can never alias two nearby values
+//! through an f32 round trip.
 
 use anyhow::Context;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -27,14 +33,14 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::data::batcher::pack_rows_into;
+use crate::ssm::api::{Batch, ForwardOptions, SequenceModel, Session, SessionPool};
 use crate::ssm::engine::{auto_threads, EngineWorkspace};
 use crate::ssm::s5::S5Model;
-use crate::ssm::scan::backend_for_threads;
 
 /// One inference request: a single (L × d_input) sequence.
 struct Request {
     x: Vec<f32>,
-    timescale: f32,
+    timescale: f64,
     submitted: Instant,
     resp: Sender<anyhow::Result<Response>>,
 }
@@ -91,8 +97,10 @@ impl ServerStats {
 #[derive(Clone)]
 pub struct ServeHandle {
     tx: Sender<Request>,
+    /// Flat request width: L × d_input.
     pub row: usize,
-    pub classes: usize,
+    /// Output row width per sequence (classifier logits, hidden state, …).
+    pub d_output: usize,
 }
 
 impl ServeHandle {
@@ -102,7 +110,9 @@ impl ServeHandle {
     }
 
     /// Inference with a Δ-rescale factor (zero-shot resampling path).
-    pub fn infer_with_timescale(&self, x: Vec<f32>, timescale: f32) -> anyhow::Result<Response> {
+    /// `timescale` is `f64` all the way into the model, matching the
+    /// forward signatures (no lossy f32 hop).
+    pub fn infer_with_timescale(&self, x: Vec<f32>, timescale: f64) -> anyhow::Result<Response> {
         anyhow::ensure!(x.len() == self.row, "bad request width {}", x.len());
         let (rtx, rrx) = channel();
         self.tx
@@ -116,6 +126,8 @@ impl ServeHandle {
 /// Drain the channel into a batch of ≤ `max_batch` same-timescale
 /// requests, waiting at most `max_wait` past the first request.
 /// Mismatched-timescale stragglers are executed alone via `run_one`.
+/// The coalescing key is the exact `f64` timescale, so two nearby-but-
+/// different values are never batched (and thus never served) as one.
 fn coalesce(
     rx: &Receiver<Request>,
     first: Request,
@@ -148,39 +160,69 @@ fn coalesce(
 // Native backend
 // ---------------------------------------------------------------------------
 
-/// A running native inference server over the batched pure-Rust engine.
-/// Dropping it stops the worker.
+/// A running native inference server over the batched pure-Rust engine,
+/// generic over `dyn` [`SequenceModel`]. Dropping it stops the worker.
 pub struct NativeInferenceServer {
     handle: ServeHandle,
     pub stats: Arc<ServerStats>,
+    sessions: SessionPool,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl NativeInferenceServer {
-    /// Start serving `model` for fixed-length (L × d_in) sequences.
-    ///
-    /// The worker owns the model, one [`EngineWorkspace`] (reused across
-    /// batches: zero steady-state allocation on the big buffers) and a
-    /// scan backend sized to `cfg.threads` (0 = auto-detect).
+    /// Start serving an [`S5Model`] (convenience wrapper around
+    /// [`NativeInferenceServer::start_model`]).
     pub fn start(model: S5Model, l: usize, cfg: ServerConfig) -> NativeInferenceServer {
-        let row = l * model.d_in;
-        let classes = model.classes;
+        NativeInferenceServer::start_model(Arc::new(model), l, cfg)
+    }
+
+    /// Start serving any [`SequenceModel`] for fixed-length (L × d_input)
+    /// sequences — the same dynamic-batching loop serves the S5 stack and
+    /// the RNN baselines.
+    ///
+    /// The worker shares the model `Arc`, owns one [`EngineWorkspace`]
+    /// (reused across batches: zero steady-state allocation on the big
+    /// buffers) and a scan backend sized to `cfg.threads` (0 =
+    /// auto-detect).
+    pub fn start_model(
+        model: Arc<dyn SequenceModel>,
+        l: usize,
+        cfg: ServerConfig,
+    ) -> NativeInferenceServer {
+        let spec = model.spec();
+        let row = l * spec.d_input;
+        let d_output = spec.d_output;
         let (tx, rx) = channel::<Request>();
         let stats = Arc::new(ServerStats::default());
         let wstats = stats.clone();
-        let threads = auto_threads(cfg.threads);
+        let opts = ForwardOptions::new().with_threads(auto_threads(cfg.threads));
+        let sessions = SessionPool::new(model.clone(), opts.clone());
         let worker = std::thread::spawn(move || {
-            native_worker_loop(model, rx, cfg, threads, l, row, classes, wstats);
+            native_worker_loop(model, rx, cfg, opts, l, row, d_output, wstats);
         });
         NativeInferenceServer {
-            handle: ServeHandle { tx, row, classes },
+            handle: ServeHandle { tx, row, d_output },
             stats,
+            sessions,
             worker: Some(worker),
         }
     }
 
     pub fn handle(&self) -> ServeHandle {
         self.handle.clone()
+    }
+
+    /// Check out a streaming [`Session`] over the served model (pooled:
+    /// closed sessions' states are reused across connections). Streaming
+    /// steps run on the caller's thread — they are latency-bound, not
+    /// batch-bound — while sharing the worker's model.
+    pub fn open_session(&self) -> Session {
+        self.sessions.acquire()
+    }
+
+    /// Return a session to the pool for the next connection.
+    pub fn close_session(&self, session: Session) {
+        self.sessions.release(session);
     }
 }
 
@@ -197,16 +239,16 @@ impl Drop for NativeInferenceServer {
 
 #[allow(clippy::too_many_arguments)]
 fn native_worker_loop(
-    model: S5Model,
+    model: Arc<dyn SequenceModel>,
     rx: Receiver<Request>,
     cfg: ServerConfig,
-    threads: usize,
+    opts: ForwardOptions,
     l: usize,
     row: usize,
-    classes: usize,
+    d_output: usize,
     stats: Arc<ServerStats>,
 ) {
-    let backend = backend_for_threads(threads);
+    let d_input = row / l;
     let mut ws = EngineWorkspace::new();
     let mut xbuf = Vec::new();
     let mut logits = Vec::new();
@@ -226,19 +268,17 @@ fn native_worker_loop(
             let t0 = Instant::now();
             let rows: Vec<&[f32]> = pending.iter().map(|r| r.x.as_slice()).collect();
             pack_rows_into(&rows, n, row, xbuf);
-            logits.resize(n * classes, 0.0);
-            model.forward_batch_into(
-                xbuf.as_slice(),
-                n,
-                l,
-                pending[0].timescale as f64,
-                backend.as_ref(),
+            logits.resize(n * d_output, 0.0);
+            let batch_opts = opts.clone().with_timescale(pending[0].timescale);
+            model.prefill_into(
+                Batch::new(&xbuf[..n * row], n, l, d_input),
+                &batch_opts,
                 ws,
-                &mut logits[..n * classes],
+                &mut logits[..n * d_output],
             );
             for (i, r) in pending.into_iter().enumerate() {
                 let resp = Response {
-                    logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                    logits: logits[i * d_output..(i + 1) * d_output].to_vec(),
                     batched_with: n,
                     queue_secs: (t0 - r.submitted).as_secs_f64(),
                     total_secs: r.submitted.elapsed().as_secs_f64(),
@@ -328,7 +368,7 @@ impl InferenceServer {
             .context("server worker died during startup")??;
 
         Ok(InferenceServer {
-            handle: ServeHandle { tx, row, classes },
+            handle: ServeHandle { tx, row, d_output: classes },
             stats,
             worker: Some(worker),
         })
@@ -404,7 +444,9 @@ mod pjrt {
             x[i * row..(i + 1) * row].copy_from_slice(&r.x);
         }
         let result = (|| -> anyhow::Result<Vec<f32>> {
-            let ts = literal_f32(&[pending[0].timescale], &[])?;
+            // the compiled artifact takes an f32 timescale scalar; the f64
+            // request value is only narrowed at this final hop
+            let ts = literal_f32(&[pending[0].timescale as f32], &[])?;
             let xl = literal_f32(&x, x_dims)?;
             let mut refs: Vec<&Literal> = params.iter().collect();
             refs.push(&ts);

@@ -4,7 +4,7 @@
 //! decay and SSM-LR ratio (§G.2). This module provides the L3 machinery:
 //! declare a [`Grid`] over [`TrainConfig`] fields, expand it to runs, and
 //! fold results with [`SweepResults`]. The execution itself goes through
-//! the normal [`crate::coordinator::Trainer`]; see `s5 sweep`.
+//! the normal `crate::coordinator::Trainer` (`pjrt` feature); see `s5 sweep`.
 
 use crate::coordinator::config::TrainConfig;
 

@@ -24,6 +24,43 @@
 //! serving mode: packed (B, L, H) forwards with workspace reuse and
 //! pluggable sequential/parallel scan strategies.
 //!
+//! ## The unified inference API ([`ssm::api`])
+//!
+//! Every sequence model in the crate — the S5 stack and the GRU/CRU
+//! baselines — implements one typed, object-safe trait,
+//! [`ssm::api::SequenceModel`]:
+//!
+//! * **`prefill`** consumes a typed [`ssm::api::Batch`] view of a packed
+//!   (B, L, d) buffer under [`ssm::api::ForwardOptions`] (timescale as
+//!   `f64` everywhere, explicit scan strategy) and emits one output row
+//!   per sequence;
+//! * **`make_state` / `step`** run incremental decoding; the
+//!   [`ssm::api::Session`] wrapper (pooled per connection by the server
+//!   via [`ssm::api::SessionPool`]) gives prefill-then-step streaming
+//!   that reproduces the batched forward **bit-for-bit** on the
+//!   sequential scan path;
+//! * the native server
+//!   ([`coordinator::server::NativeInferenceServer`]) is generic over
+//!   `dyn SequenceModel`, so one dynamic-batching loop serves every
+//!   model, and [`runtime::npz::NpzStore`] +
+//!   [`ssm::s5::S5Model::from_param_store`] load `<preset>_init.npz` /
+//!   trained checkpoints natively (`serve --engine native --checkpoint`).
+//!
+//! The pre-redesign entry points remain as thin deprecated wrappers:
+//!
+//! | old (deprecated) | new |
+//! |---|---|
+//! | `S5Model::forward(u, l, ts, threads)` | `model.prefill(Batch::single(u, l, d_in), &opts, &mut ws)` |
+//! | `S5Layer::apply(u, l, ts, dts, threads)` | `layer.apply_batch(u, 1, l, ts, dts, opts.scan_backend(), &mut ws)` |
+//! | `S5Layer::apply_ssm(u, l, ts, dts, threads)` | `layer.apply_ssm_batch(u, 1, l, ts, dts, opts.scan_backend(), &mut ws)` |
+//! | `GruCell::run_batch(xs, b, l, threads)` | `cell.prefill(Batch::new(xs, b, l, d_in), &opts, &mut ws)` |
+//! | `CruLike::run_batch(xs, dts, b, l, threads)` | `cru.prefill(...)` (regular Δt) / `Session::step_dt` (irregular) |
+//! | `OnlineModel::new(&model, ts)` + `push`/`logits` | `Session::new(model, opts)` + `step`/`prefill` |
+//! | `ServeHandle::infer_with_timescale(x, f32)` | same name, `timescale: f64` |
+//!
+//! where `opts = ForwardOptions::new().with_threads(n).with_timescale(ts)`
+//! replaces every positional `(timescale, threads)` tail.
+//!
 //! ## Module map
 //!
 //! | module | role |
@@ -33,9 +70,9 @@
 //! | [`num`] | complex arithmetic |
 //! | [`linalg`] | dense complex matrices, Hermitian Jacobi eigensolver |
 //! | [`fft`] | radix-2 FFT (substrate for the S4 convolution baseline) |
-//! | [`ssm`] | HiPPO init, discretization, scans, batched engine, S5/S4/S4D |
+//! | [`ssm`] | HiPPO init, discretization, scans, batched engine, unified API, S5/S4/S4D |
 //! | [`data`] | the nine synthetic workload generators + batching |
-//! | [`runtime`] | manifests; PJRT artifact loading + params (`pjrt` feature) |
+//! | [`runtime`] | manifests + native npz store; PJRT artifact loading (`pjrt` feature) |
 //! | [`coordinator`] | configs, trainer (`pjrt`), LR schedules, metrics, server |
 //! | [`testing`] | mini property-testing harness (offline: no `proptest`) |
 //! | [`bench`] | shared harness for the paper-table benchmark binaries |

@@ -3,7 +3,8 @@
 //! ```text
 //! s5 train --preset smnist --steps 300 [--lr 4e-3] [--checkpoint out.npz]
 //! s5 eval  --preset smnist --checkpoint out.npz [--timescale 2.0]
-//! s5 serve --preset smnist [--engine native|pjrt] [--requests 64]
+//! s5 serve --preset smnist [--engine native|pjrt] [--model s5|gru]
+//!          [--checkpoint ckpt.npz] [--requests 64]
 //!          [--threads N] [--max-batch N] [--max-wait-ms N]
 //! s5 data  --task listops [--n 3]        # inspect generator output
 //! s5 info  [--artifacts artifacts]       # list compiled artifacts
@@ -19,12 +20,15 @@ use anyhow::bail;
 use s5::coordinator::server::{NativeInferenceServer, RunningServer, ServerConfig};
 use s5::data::make_task;
 use s5::rng::Rng;
-use s5::runtime::Manifest;
+use s5::runtime::{Manifest, NpzStore};
+use s5::ssm::api::SequenceModel;
 use s5::ssm::engine::auto_threads;
+use s5::ssm::rnn::GruCell;
 use s5::ssm::s5::{S5Config, S5Model};
 use s5::util::{Args, Table};
 use s5::{info, ARTIFACTS_DIR};
 use std::path::Path;
+use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env();
@@ -56,8 +60,9 @@ fn print_help() {
          USAGE: s5 <train|eval|serve|data|info> [--key value]...\n\n\
          train  --preset <p> --steps N [--lr F --wd F --seed N --checkpoint F --metrics F]\n\
          eval   --preset <p> [--checkpoint F --timescale F]\n\
-         serve  --preset <p> [--engine native|pjrt --checkpoint F (pjrt only)\n\
-                --requests N --threads N --max-batch N --max-wait-ms N]  (threads 0 = auto)\n\
+         serve  --preset <p> [--engine native|pjrt --model s5|gru (native)\n\
+                --checkpoint F.npz --requests N --threads N --max-batch N\n\
+                --max-wait-ms N]  (threads 0 = auto)\n\
          data   --task <t> [--n N] [--dump DIR]\n\
          sweep  --preset <p> --lrs 1e-3,3e-3 [--wds ...] [--seeds ...] [--steps N]\n\
          info   [--artifacts DIR]\n\n\
@@ -126,30 +131,56 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("no generator for preset {preset:?}"))?;
     let server = match engine.as_str() {
         "native" => {
-            // Serve the pure-Rust batched engine. Parameters are a fresh
-            // HiPPO init (native checkpoint import is a ROADMAP item):
-            // the serving-path numbers — batching, latency, throughput —
-            // are what this mode measures.
-            anyhow::ensure!(
-                args.get("checkpoint").is_none(),
-                "--checkpoint is not supported by the native engine yet \
-                 (native checkpoint import is a ROADMAP item); use --engine pjrt"
-            );
-            let cfg_model = S5Config { h: 32, p: 32, j: 1, ..Default::default() };
-            let model = S5Model::init(
-                task.d_input(),
-                task.classes(),
-                4,
-                &cfg_model,
-                &mut Rng::new(args.get_usize("seed", 0) as u64),
-            );
+            // Serve the pure-Rust batched engine through the unified
+            // SequenceModel API: one dynamic-batching loop for S5 and the
+            // RNN baselines, with native checkpoint import (npz) so
+            // trained weights are served without PJRT.
+            let mut rng = Rng::new(args.get_usize("seed", 0) as u64);
+            let model: Arc<dyn SequenceModel> = match args.get_or("model", "s5").as_str() {
+                "s5" => {
+                    let model = if let Some(ck) = args.get("checkpoint") {
+                        let store = NpzStore::load(Path::new(ck))?;
+                        let m = S5Model::from_param_store(&store)?;
+                        anyhow::ensure!(
+                            m.d_in == task.d_input() && m.classes == task.classes(),
+                            "checkpoint {ck:?} is (d_in={}, classes={}) but preset \
+                             {preset:?} needs (d_in={}, classes={})",
+                            m.d_in,
+                            m.classes,
+                            task.d_input(),
+                            task.classes()
+                        );
+                        info!("loaded checkpoint {ck} ({} params)", m.param_count());
+                        m
+                    } else {
+                        let cfg_model = S5Config { h: 32, p: 32, j: 1, ..Default::default() };
+                        S5Model::init(task.d_input(), task.classes(), 4, &cfg_model, &mut rng)
+                    };
+                    Arc::new(model)
+                }
+                "gru" => {
+                    anyhow::ensure!(
+                        args.get("checkpoint").is_none(),
+                        "--checkpoint applies to the s5 model only"
+                    );
+                    Arc::new(GruCell::init(task.d_input(), 32, &mut rng))
+                }
+                other => bail!("unknown native model {other:?} (expected s5 or gru)"),
+            };
+            let spec = model.spec();
             info!(
-                "native engine: {} params, {} threads, max_batch {}",
-                model.param_count(),
+                "native engine: model {} (d_in {}, d_out {}), {} threads, max_batch {}",
+                spec.name,
+                spec.d_input,
+                spec.d_output,
                 auto_threads(cfg.threads),
                 cfg.max_batch
             );
-            RunningServer::Native(NativeInferenceServer::start(model, task.seq_len(), cfg))
+            RunningServer::Native(NativeInferenceServer::start_model(
+                model,
+                task.seq_len(),
+                cfg,
+            ))
         }
         "pjrt" => start_pjrt_server(args, &preset, cfg)?,
         other => bail!("unknown engine {other:?} (expected native or pjrt)"),

@@ -4,24 +4,28 @@
 //!   `<p>_{fwd,train}.hlo.txt`, `<p>_{fwd,train}.manifest.txt`,
 //!   `<p>_init.npz`.
 //!
-//! [`manifest`] parses the argument-order manifests, [`artifact`] compiles
-//! the HLO text on the PJRT CPU client and runs it, [`params`] manages the
+//! [`manifest`] parses the argument-order manifests, `artifact` compiles
+//! the HLO text on the PJRT CPU client and runs it, `params` manages the
 //! named parameter store (npz in, npz out for checkpoints). HLO **text** is
 //! the interchange format — see DESIGN.md and /opt/xla-example/README.md.
 
 //!
-//! The PJRT execution half ([`artifact`], [`params`]) needs the `xla` FFI
-//! crate and is fenced behind the `pjrt` feature; the manifest parser is
-//! plain data and always available (the native engine and `s5 info` use it).
+//! The PJRT execution half (`artifact`, `params`) needs the `xla` FFI
+//! crate and is fenced behind the `pjrt` feature; the manifest parser and
+//! the pure-Rust npz store ([`npz`]) are plain data and always available —
+//! the native engine uses them for `s5 info` and for serving
+//! `<preset>_init.npz` / trained checkpoints without PJRT.
 
 #[cfg(feature = "pjrt")]
 pub mod artifact;
 pub mod manifest;
+pub mod npz;
 #[cfg(feature = "pjrt")]
 pub mod params;
 
 #[cfg(feature = "pjrt")]
 pub use artifact::{Artifact, Client};
 pub use manifest::{Dtype, Manifest, TensorSpec};
+pub use npz::NpzStore;
 #[cfg(feature = "pjrt")]
 pub use params::ParamStore;

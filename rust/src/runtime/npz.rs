@@ -1,0 +1,521 @@
+//! Pure-Rust npz (zip-of-npy) reading and writing — no PJRT, no crates.
+//!
+//! The compile path exports `<preset>_init.npz` and the trainer writes
+//! checkpoints in the same format; historically only the `pjrt`-gated
+//! `ParamStore` (backed by the `xla` and `zip` crates) could read them, so
+//! `serve --engine native` had no access to trained weights. This module
+//! lifts npz I/O out of the feature gate:
+//!
+//! * [`NpzStore`] — an ordered name → tensor map with
+//!   [`NpzStore::load`]/[`NpzStore::save`] round-tripping through the
+//!   exact on-disk format `numpy.savez` produces (STORED zip entries, npy
+//!   v1.0 little-endian C-order payloads).
+//! * `npy_header` — the shared npy header serializer (also used by the
+//!   pjrt checkpoint writer, so both writers emit identical files).
+//!
+//! Only STORED (uncompressed) zip members are supported — which is what
+//! `numpy.savez` and both of our writers emit; `savez_compressed` archives
+//! are rejected with a pointed error.
+
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One named tensor: dims + typed payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NpzTensor {
+    /// Shape; empty = scalar.
+    pub dims: Vec<usize>,
+    pub data: NpzData,
+}
+
+/// Typed tensor payload (the two dtypes the manifests use).
+#[derive(Clone, Debug, PartialEq)]
+pub enum NpzData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl NpzTensor {
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> NpzTensor {
+        assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+        NpzTensor { dims: dims.to_vec(), data: NpzData::F32(data) }
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> NpzTensor {
+        assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+        NpzTensor { dims: dims.to_vec(), data: NpzData::I32(data) }
+    }
+
+    /// The f32 payload, if this tensor is f32.
+    pub fn f32s(&self) -> Option<&[f32]> {
+        match &self.data {
+            NpzData::F32(v) => Some(v),
+            NpzData::I32(_) => None,
+        }
+    }
+
+    pub fn elem_count(&self) -> usize {
+        match &self.data {
+            NpzData::F32(v) => v.len(),
+            NpzData::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Ordered name → tensor map backed by npz files; the native-stack
+/// counterpart of the pjrt `ParamStore`.
+#[derive(Default)]
+pub struct NpzStore {
+    entries: BTreeMap<String, NpzTensor>,
+}
+
+impl NpzStore {
+    pub fn new() -> NpzStore {
+        NpzStore::default()
+    }
+
+    /// Load every tensor from an npz file.
+    pub fn load(path: &Path) -> anyhow::Result<NpzStore> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading npz {path:?}"))?;
+        let mut entries = BTreeMap::new();
+        for (name, npy) in zip_entries(&bytes).with_context(|| format!("parsing {path:?}"))? {
+            let tensor =
+                parse_npy(npy).with_context(|| format!("parsing member {name:?} of {path:?}"))?;
+            let name = name.strip_suffix(".npy").unwrap_or(&name).to_string();
+            entries.insert(name, tensor);
+        }
+        Ok(NpzStore { entries })
+    }
+
+    /// Save every tensor to an npz file (STORED zip of npy members,
+    /// matching `numpy.savez`).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        // plain zip32: no zip64 records, so sizes/offsets must fit u32 and
+        // the member count u16 — fail loudly instead of wrapping silently
+        anyhow::ensure!(
+            self.entries.len() <= u16::MAX as usize,
+            "npz member count {} exceeds the zip32 limit",
+            self.entries.len()
+        );
+        let mut zip = Vec::new();
+        let mut central = Vec::new();
+        let mut count = 0u16;
+        for (name, tensor) in &self.entries {
+            let member = format!("{name}.npy");
+            let payload = npy_bytes(tensor);
+            anyhow::ensure!(
+                payload.len() <= u32::MAX as usize && zip.len() <= u32::MAX as usize,
+                "npz member {member:?} exceeds the zip32 4 GiB limit"
+            );
+            let crc = crc32(&payload);
+            let offset = zip.len() as u32;
+            write_local_header(&mut zip, &member, crc, payload.len() as u32);
+            zip.extend_from_slice(&payload);
+            write_central_header(&mut central, &member, crc, payload.len() as u32, offset);
+            count += 1;
+        }
+        anyhow::ensure!(
+            zip.len() + central.len() <= u32::MAX as usize,
+            "npz archive exceeds the zip32 4 GiB limit"
+        );
+        let cd_offset = zip.len() as u32;
+        let cd_size = central.len() as u32;
+        zip.extend_from_slice(&central);
+        // end of central directory
+        zip.extend_from_slice(&0x06054b50u32.to_le_bytes());
+        zip.extend_from_slice(&[0u8; 4]); // disk numbers
+        zip.extend_from_slice(&count.to_le_bytes());
+        zip.extend_from_slice(&count.to_le_bytes());
+        zip.extend_from_slice(&cd_size.to_le_bytes());
+        zip.extend_from_slice(&cd_offset.to_le_bytes());
+        zip.extend_from_slice(&[0u8; 2]); // comment length
+        std::fs::write(path, zip).with_context(|| format!("writing npz {path:?}"))
+    }
+
+    pub fn insert(&mut self, name: &str, tensor: NpzTensor) {
+        self.entries.insert(name.to_string(), tensor);
+    }
+
+    pub fn insert_f32(&mut self, name: &str, dims: &[usize], data: Vec<f32>) {
+        self.insert(name, NpzTensor::f32(dims, data));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&NpzTensor> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total element count across all tensors.
+    pub fn total_elems(&self) -> usize {
+        self.entries.values().map(|t| t.elem_count()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// npy serialization (shared with the pjrt checkpoint writer)
+// ---------------------------------------------------------------------------
+
+/// Serialize the npy v1.0 preamble (magic + version + padded header dict)
+/// for a C-order little-endian array of `descr` (`"<f4"` / `"<i4"`) and
+/// shape `dims`. The payload follows immediately after these bytes.
+pub(crate) fn npy_header(descr: &str, dims: &[usize]) -> Vec<u8> {
+    let shape_str = match dims.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", dims[0]),
+        _ => format!(
+            "({})",
+            dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header =
+        format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_str}, }}");
+    // total preamble (magic 6 + ver 2 + len 2 + header) must be 64-aligned
+    let base = 6 + 2 + 2;
+    let pad = (64 - (base + header.len() + 1) % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut out = Vec::with_capacity(base + header.len());
+    out.extend_from_slice(b"\x93NUMPY");
+    out.push(1);
+    out.push(0);
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out
+}
+
+/// One tensor as complete npy bytes (header + little-endian payload).
+fn npy_bytes(tensor: &NpzTensor) -> Vec<u8> {
+    let (descr, payload): (&str, Vec<u8>) = match &tensor.data {
+        NpzData::F32(v) => ("<f4", v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+        NpzData::I32(v) => ("<i4", v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+    };
+    let mut out = npy_header(descr, &tensor.dims);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Parse one npy member into a tensor.
+fn parse_npy(bytes: &[u8]) -> anyhow::Result<NpzTensor> {
+    if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+        bail!("not an npy file");
+    }
+    let (hlen, start) = match bytes[6] {
+        1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10),
+        2 | 3 => {
+            if bytes.len() < 12 {
+                bail!("truncated npy v2 header");
+            }
+            (
+                u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+                12,
+            )
+        }
+        v => bail!("unsupported npy major version {v}"),
+    };
+    if bytes.len() < start + hlen {
+        bail!("truncated npy header");
+    }
+    let header = std::str::from_utf8(&bytes[start..start + hlen])
+        .context("npy header is not utf-8")?;
+    let descr = dict_str_value(header, "descr").context("npy header missing descr")?;
+    let fortran = dict_raw_value(header, "fortran_order")
+        .context("npy header missing fortran_order")?;
+    if fortran.starts_with("True") {
+        bail!("fortran-order npy arrays are not supported");
+    }
+    let shape_src = dict_raw_value(header, "shape").context("npy header missing shape")?;
+    let dims = parse_shape(&shape_src)?;
+    let n: usize = dims.iter().product::<usize>().max(1);
+    let payload = &bytes[start + hlen..];
+
+    let data = match descr.as_str() {
+        "<f4" | "=f4" => {
+            if payload.len() < n * 4 {
+                bail!("npy payload too short for {n} f32 values");
+            }
+            NpzData::F32(
+                payload[..n * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )
+        }
+        "<f8" => {
+            // f64 checkpoints downcast (the native stack computes in f32)
+            if payload.len() < n * 8 {
+                bail!("npy payload too short for {n} f64 values");
+            }
+            NpzData::F32(
+                payload[..n * 8]
+                    .chunks_exact(8)
+                    .map(|c| {
+                        f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+                    })
+                    .collect(),
+            )
+        }
+        "<i4" | "=i4" => {
+            if payload.len() < n * 4 {
+                bail!("npy payload too short for {n} i32 values");
+            }
+            NpzData::I32(
+                payload[..n * 4]
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )
+        }
+        other => bail!("unsupported npy dtype {other:?} (want <f4/<i4)"),
+    };
+    Ok(NpzTensor { dims, data })
+}
+
+/// Pull the quoted string value of `key` out of an npy header dict.
+fn dict_str_value(header: &str, key: &str) -> Option<String> {
+    let raw = dict_raw_value(header, key)?;
+    let raw = raw.trim_start();
+    let quote = raw.chars().next()?;
+    if quote != '\'' && quote != '"' {
+        return None;
+    }
+    let rest = &raw[1..];
+    rest.find(quote).map(|end| rest[..end].to_string())
+}
+
+/// Pull the raw (up to the next top-level `,` or `}`) value of `key`.
+fn dict_raw_value(header: &str, key: &str) -> Option<String> {
+    let pat = format!("'{key}':");
+    let at = header.find(&pat)?;
+    let rest = header[at + pat.len()..].trim_start();
+    let mut depth = 0usize;
+    let mut out = String::new();
+    for ch in rest.chars() {
+        match ch {
+            '(' | '[' => depth += 1,
+            ')' | ']' => {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+                out.push(ch);
+                continue;
+            }
+            ',' | '}' if depth == 0 => break,
+            _ => {}
+        }
+        out.push(ch);
+    }
+    Some(out.trim().to_string())
+}
+
+/// Parse a python shape tuple like `(3, 4)` / `(5,)` / `()`.
+fn parse_shape(src: &str) -> anyhow::Result<Vec<usize>> {
+    let inner = src
+        .trim()
+        .strip_prefix('(')
+        .and_then(|s| s.strip_suffix(')'))
+        .with_context(|| format!("bad npy shape {src:?}"))?;
+    let mut dims = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        dims.push(part.parse::<usize>().with_context(|| format!("bad npy dim {part:?}"))?);
+    }
+    Ok(dims)
+}
+
+// ---------------------------------------------------------------------------
+// Minimal zip container (STORED members only)
+// ---------------------------------------------------------------------------
+
+/// Iterate `(member_name, member_bytes)` of a zip archive via its central
+/// directory (so data-descriptor local headers are handled too).
+fn zip_entries(bytes: &[u8]) -> anyhow::Result<Vec<(String, &[u8])>> {
+    // find the end-of-central-directory record from the back
+    let eocd_sig = 0x06054b50u32.to_le_bytes();
+    let scan_from = bytes.len().saturating_sub(22 + 65536);
+    let eocd = (scan_from..bytes.len().saturating_sub(21))
+        .rev()
+        .find(|&i| bytes[i..i + 4] == eocd_sig)
+        .context("no zip end-of-central-directory record (not a zip file?)")?;
+    let count = read_u16(bytes, eocd + 10)? as usize;
+    let mut at = read_u32(bytes, eocd + 16)? as usize;
+
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        if read_u32(bytes, at)? != 0x02014b50 {
+            bail!("bad central directory entry at {at}");
+        }
+        let method = read_u16(bytes, at + 10)?;
+        let comp_size = read_u32(bytes, at + 20)? as usize;
+        let name_len = read_u16(bytes, at + 28)? as usize;
+        let extra_len = read_u16(bytes, at + 30)? as usize;
+        let comment_len = read_u16(bytes, at + 32)? as usize;
+        let local_at = read_u32(bytes, at + 42)? as usize;
+        let name = std::str::from_utf8(
+            bytes.get(at + 46..at + 46 + name_len).context("truncated entry name")?,
+        )
+        .context("non-utf8 member name")?
+        .to_string();
+        if method != 0 {
+            bail!(
+                "zip member {name:?} uses compression method {method}; only STORED \
+                 archives are supported (was this written by numpy.savez_compressed?)"
+            );
+        }
+        // the local header carries its own (possibly different) extra field
+        if read_u32(bytes, local_at)? != 0x04034b50 {
+            bail!("bad local header for member {name:?}");
+        }
+        let lname = read_u16(bytes, local_at + 26)? as usize;
+        let lextra = read_u16(bytes, local_at + 28)? as usize;
+        let data_at = local_at + 30 + lname + lextra;
+        let data = bytes
+            .get(data_at..data_at + comp_size)
+            .with_context(|| format!("truncated data for member {name:?}"))?;
+        out.push((name, data));
+        at += 46 + name_len + extra_len + comment_len;
+    }
+    Ok(out)
+}
+
+fn read_u16(bytes: &[u8], at: usize) -> anyhow::Result<u16> {
+    let b = bytes.get(at..at + 2).context("truncated zip record")?;
+    Ok(u16::from_le_bytes([b[0], b[1]]))
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> anyhow::Result<u32> {
+    let b = bytes.get(at..at + 4).context("truncated zip record")?;
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+fn write_local_header(out: &mut Vec<u8>, name: &str, crc: u32, size: u32) {
+    out.extend_from_slice(&0x04034b50u32.to_le_bytes());
+    out.extend_from_slice(&20u16.to_le_bytes()); // version needed
+    out.extend_from_slice(&[0u8; 2]); // flags
+    out.extend_from_slice(&[0u8; 2]); // method: STORED
+    out.extend_from_slice(&[0u8; 4]); // mod time/date
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(&size.to_le_bytes()); // compressed
+    out.extend_from_slice(&size.to_le_bytes()); // uncompressed
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(&[0u8; 2]); // extra length
+    out.extend_from_slice(name.as_bytes());
+}
+
+fn write_central_header(out: &mut Vec<u8>, name: &str, crc: u32, size: u32, offset: u32) {
+    out.extend_from_slice(&0x02014b50u32.to_le_bytes());
+    out.extend_from_slice(&20u16.to_le_bytes()); // version made by
+    out.extend_from_slice(&20u16.to_le_bytes()); // version needed
+    out.extend_from_slice(&[0u8; 2]); // flags
+    out.extend_from_slice(&[0u8; 2]); // method: STORED
+    out.extend_from_slice(&[0u8; 4]); // mod time/date
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(&size.to_le_bytes());
+    out.extend_from_slice(&size.to_le_bytes());
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(&[0u8; 2]); // extra
+    out.extend_from_slice(&[0u8; 2]); // comment
+    out.extend_from_slice(&[0u8; 2]); // disk number
+    out.extend_from_slice(&[0u8; 2]); // internal attrs
+    out.extend_from_slice(&[0u8; 4]); // external attrs
+    out.extend_from_slice(&offset.to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+}
+
+/// CRC-32 (IEEE, reflected) — required by the zip format.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &byte in data {
+        crc ^= byte as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB88320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("s5_npz_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    #[test]
+    fn npy_header_is_64_aligned() {
+        for dims in [vec![], vec![5], vec![2, 3], vec![4, 1, 7]] {
+            let h = npy_header("<f4", &dims);
+            assert_eq!(h.len() % 64, 0, "dims {dims:?}");
+            assert_eq!(&h[..6], b"\x93NUMPY");
+        }
+    }
+
+    #[test]
+    fn store_roundtrip_preserves_tensors() {
+        let mut store = NpzStore::new();
+        store.insert_f32("params.a", &[2, 3], vec![1.0, -2.5, 3.25, 0.0, 5.0, -6.125]);
+        store.insert_f32("params.b", &[4], vec![0.5; 4]);
+        store.insert("steps", NpzTensor::i32(&[], vec![42]));
+        let path = tmp("roundtrip.npz");
+        store.save(&path).unwrap();
+        let loaded = NpzStore::load(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded.get("params.a"), store.get("params.a"));
+        assert_eq!(loaded.get("params.b"), store.get("params.b"));
+        assert_eq!(loaded.get("steps"), store.get("steps"));
+        assert_eq!(loaded.total_elems(), 11);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn parse_npy_rejects_garbage_and_fortran() {
+        assert!(parse_npy(b"not an npy").is_err());
+        // hand-build a fortran-order header
+        let mut h = npy_header("<f4", &[2]);
+        let pos = h.windows(5).position(|w| w == b"False").unwrap();
+        h[pos..pos + 5].copy_from_slice(b"True,");
+        h.extend_from_slice(&[0u8; 8]);
+        assert!(parse_npy(&h).is_err());
+    }
+
+    #[test]
+    fn shape_parser_handles_tuples() {
+        assert_eq!(parse_shape("()").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_shape("(5,)").unwrap(), vec![5]);
+        assert_eq!(parse_shape("(2, 3, 4)").unwrap(), vec![2, 3, 4]);
+        assert!(parse_shape("5").is_err());
+    }
+
+    #[test]
+    fn load_rejects_non_zip() {
+        let path = tmp("not_a.npz");
+        std::fs::write(&path, b"hello world, definitely not a zip").unwrap();
+        assert!(NpzStore::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

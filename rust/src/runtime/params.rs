@@ -111,6 +111,9 @@ impl Default for ParamStore {
 }
 
 /// Serialize one literal as npy v1.0 bytes (little-endian, C order).
+/// The header comes from the shared pure-Rust serializer
+/// ([`crate::runtime::npz::npy_header`]), so the pjrt checkpoint writer
+/// and the native [`crate::runtime::npz::NpzStore`] emit identical files.
 fn npy_bytes(lit: &Literal) -> anyhow::Result<Vec<u8>> {
     let shape = lit.array_shape()?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -127,27 +130,7 @@ fn npy_bytes(lit: &Literal) -> anyhow::Result<Vec<u8>> {
         }
         other => anyhow::bail!("npy_bytes: unsupported element type {other:?}"),
     };
-    let shape_str = match dims.len() {
-        0 => "()".to_string(),
-        1 => format!("({},)", dims[0]),
-        _ => format!(
-            "({})",
-            dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
-        ),
-    };
-    let mut header =
-        format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_str}, }}");
-    // total header block (magic 6 + ver 2 + len 2 + header) must be 64-aligned
-    let base = 6 + 2 + 2;
-    let pad = (64 - (base + header.len() + 1) % 64) % 64;
-    header.push_str(&" ".repeat(pad));
-    header.push('\n');
-    let mut out = Vec::with_capacity(base + header.len() + payload.len());
-    out.extend_from_slice(b"\x93NUMPY");
-    out.push(1);
-    out.push(0);
-    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
-    out.extend_from_slice(header.as_bytes());
+    let mut out = crate::runtime::npz::npy_header(descr, &dims);
     out.extend_from_slice(&payload);
     Ok(out)
 }

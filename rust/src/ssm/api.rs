@@ -1,0 +1,457 @@
+//! The unified sequence-model inference API.
+//!
+//! S5's pitch is that one MIMO SSM plus a parallel scan subsumes a bank of
+//! SISO SSMs; this module makes the *serving surface* match that claim: one
+//! typed API that every sequence model in the crate plugs into, so the
+//! dynamic-batching server, streaming sessions and checkpoint import
+//! compose instead of being re-implemented per model.
+//!
+//! * [`Batch`] — a typed view over a packed row-major (B, L, d) buffer,
+//!   replacing raw `&[f32]` plus positional size arguments.
+//! * [`ForwardOptions`] — the execution knobs (timescale as `f64`
+//!   everywhere, scan strategy / thread budget) as a builder, replacing the
+//!   positional `(timescale, threads)` tail of the legacy signatures.
+//! * [`SequenceModel`] — the object-safe trait: `spec()` describes the
+//!   model, `prefill_into` consumes a packed batch (the offline scan path),
+//!   `make_state`/`step` run incremental decoding (the §3.3 online mode).
+//!   Implemented by [`S5Model`](crate::ssm::s5::S5Model),
+//!   [`GruCell`](crate::ssm::rnn::GruCell) and
+//!   [`CruLike`](crate::ssm::rnn::CruLike).
+//! * [`Session`] — prefill-then-step stateful streaming over any
+//!   `SequenceModel` (absorbing the old S5-only
+//!   `online::OnlineModel`), and [`SessionPool`] — the per-connection
+//!   session reuse the native server hands out.
+//!
+//! Streaming and batched execution share kernels by construction, so for
+//! the sequential scan strategy `Session::step` driven over L tokens
+//! reproduces `prefill` outputs bit-for-bit (see `tests/sequence_api.rs`).
+
+use std::any::Any;
+use std::sync::{Arc, Mutex};
+
+use crate::ssm::engine::EngineWorkspace;
+use crate::ssm::scan::{backend_for_threads, ScanBackend, SequentialBackend};
+
+// ---------------------------------------------------------------------------
+// Typed batch view
+// ---------------------------------------------------------------------------
+
+/// A typed, validated view of a packed row-major (B, L, width) buffer.
+///
+/// Constructing a `Batch` checks the dimension product once, so every
+/// consumer downstream can slice without re-deriving sizes from positional
+/// arguments.
+#[derive(Clone, Copy, Debug)]
+pub struct Batch<'a> {
+    data: &'a [f32],
+    batch: usize,
+    len: usize,
+    width: usize,
+}
+
+impl<'a> Batch<'a> {
+    /// View `data` as (batch, len, width). Panics if the product does not
+    /// match `data.len()` or any dimension is zero.
+    pub fn new(data: &'a [f32], batch: usize, len: usize, width: usize) -> Batch<'a> {
+        assert!(batch > 0 && len > 0 && width > 0, "empty batch/sequence");
+        assert_eq!(
+            data.len(),
+            batch * len * width,
+            "batch data length {} != {batch}x{len}x{width}",
+            data.len()
+        );
+        Batch { data, batch, len, width }
+    }
+
+    /// View one sequence as a batch of 1.
+    pub fn single(data: &'a [f32], len: usize, width: usize) -> Batch<'a> {
+        Batch::new(data, 1, len, width)
+    }
+
+    /// Number of sequences B.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Sequence length L.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the view holds no timesteps (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Feature width per step.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// The underlying packed buffer.
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// One sequence's (L × width) rows.
+    pub fn seq(&self, i: usize) -> &'a [f32] {
+        let stride = self.len * self.width;
+        &self.data[i * stride..(i + 1) * stride]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward options
+// ---------------------------------------------------------------------------
+
+/// Execution knobs for a forward pass, as a builder.
+///
+/// Replaces the positional `(timescale, threads)` argument tails: the
+/// timescale is `f64` everywhere (no more f32/f64 mismatch between server
+/// and model), and the scan strategy is an explicit shared object rather
+/// than a thread count re-resolved at every layer.
+///
+/// ```
+/// use s5::ssm::api::ForwardOptions;
+/// let opts = ForwardOptions::new().with_timescale(2.0).with_threads(4);
+/// assert_eq!(opts.timescale, 2.0);
+/// assert_eq!(opts.scan_backend().threads(), 4);
+/// ```
+#[derive(Clone)]
+pub struct ForwardOptions {
+    /// Zero-shot Δ-rescale factor (§6.2); 1.0 = the trained sampling rate.
+    pub timescale: f64,
+    backend: Arc<dyn ScanBackend>,
+}
+
+impl Default for ForwardOptions {
+    /// Sequential scan, timescale 1.0 — the deterministic reference
+    /// configuration (streaming ≡ batched bit-for-bit).
+    fn default() -> Self {
+        ForwardOptions { timescale: 1.0, backend: Arc::new(SequentialBackend) }
+    }
+}
+
+impl ForwardOptions {
+    pub fn new() -> ForwardOptions {
+        ForwardOptions::default()
+    }
+
+    /// Set the Δ-rescale factor.
+    pub fn with_timescale(mut self, timescale: f64) -> ForwardOptions {
+        self.timescale = timescale;
+        self
+    }
+
+    /// Pick a scan strategy for a thread budget (0 = auto-detect, ≤ 1 =
+    /// sequential, else parallel) — mirrors the legacy `threads` knob.
+    pub fn with_threads(mut self, threads: usize) -> ForwardOptions {
+        self.backend = Arc::from(backend_for_threads(threads));
+        self
+    }
+
+    /// Install an explicit scan strategy object.
+    pub fn with_backend(mut self, backend: Arc<dyn ScanBackend>) -> ForwardOptions {
+        self.backend = backend;
+        self
+    }
+
+    /// The scan strategy this forward will run with.
+    pub fn scan_backend(&self) -> &dyn ScanBackend {
+        self.backend.as_ref()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The SequenceModel trait
+// ---------------------------------------------------------------------------
+
+/// What a model consumes and produces, plus its capabilities.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    /// Short model-family name (telemetry, logs).
+    pub name: &'static str,
+    /// Input feature width per step.
+    pub d_input: usize,
+    /// Output row width per sequence (classifier logits, hidden state, …).
+    pub d_output: usize,
+    /// Whether [`SequenceModel::make_state`]/[`SequenceModel::step`] are
+    /// supported (bidirectional S5 stacks cannot stream by construction).
+    pub streamable: bool,
+}
+
+/// Opaque per-session streaming state of some [`SequenceModel`].
+///
+/// Models downcast to their concrete state type inside `step`; callers
+/// treat it as a token owned by a [`Session`].
+pub struct SessionState(Box<dyn Any + Send>);
+
+impl SessionState {
+    pub fn new<T: Any + Send>(state: T) -> SessionState {
+        SessionState(Box::new(state))
+    }
+
+    pub fn downcast_ref<T: Any>(&self) -> Option<&T> {
+        self.0.downcast_ref::<T>()
+    }
+
+    pub fn downcast_mut<T: Any>(&mut self) -> Option<&mut T> {
+        self.0.downcast_mut::<T>()
+    }
+}
+
+/// The one typed inference interface every sequence model implements.
+///
+/// Object-safe: the native server holds `Arc<dyn SequenceModel>` and one
+/// dynamic-batching loop serves S5 and the RNN baselines alike.
+pub trait SequenceModel: Send + Sync {
+    /// Static shape/capability description.
+    fn spec(&self) -> ModelSpec;
+
+    /// Forward a packed batch, writing one `d_output` row per sequence
+    /// into `out` (must be exactly `batch.batch() * d_output` long).
+    fn prefill_into(
+        &self,
+        batch: Batch<'_>,
+        opts: &ForwardOptions,
+        ws: &mut EngineWorkspace,
+        out: &mut [f32],
+    );
+
+    /// Forward a packed batch into a fresh output vector.
+    fn prefill(
+        &self,
+        batch: Batch<'_>,
+        opts: &ForwardOptions,
+        ws: &mut EngineWorkspace,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; batch.batch() * self.spec().d_output];
+        self.prefill_into(batch, opts, ws, &mut out);
+        out
+    }
+
+    /// Fresh streaming state (one decode stream). Panics if
+    /// `spec().streamable` is false.
+    fn make_state(&self, opts: &ForwardOptions) -> SessionState;
+
+    /// Reset a streaming state to the start-of-sequence point without
+    /// reallocating (session reuse across connections).
+    fn reset_state(&self, state: &mut SessionState);
+
+    /// Consume one input row (`d_input`), advance the state, and return
+    /// the current output row (`d_output`). `dt` is the per-step Δt
+    /// multiplier for irregular sampling (§6.3); models without a Δt
+    /// notion ignore it.
+    fn step(
+        &self,
+        state: &mut SessionState,
+        u: &[f32],
+        dt: Option<f32>,
+        opts: &ForwardOptions,
+    ) -> Vec<f32>;
+
+    /// Advance the state without materializing an output row — the
+    /// prefill fast path (a classifier head projection per swallowed
+    /// token would be pure waste). Default: `step` with the output
+    /// discarded; models override to skip the output entirely.
+    fn advance(&self, state: &mut SessionState, u: &[f32], dt: Option<f32>, opts: &ForwardOptions) {
+        let _ = self.step(state, u, dt, opts);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sessions
+// ---------------------------------------------------------------------------
+
+/// Stateful prefill-then-step streaming over any [`SequenceModel`]
+/// (what a streaming deployment holds per connection).
+///
+/// `prefill` feeds a whole prefix; `step` feeds one observation at a time.
+/// Both drive the same per-step kernels as the offline scans, so a session
+/// replayed over a sequence agrees with the batched forward.
+pub struct Session {
+    model: Arc<dyn SequenceModel>,
+    opts: ForwardOptions,
+    state: SessionState,
+    steps: usize,
+}
+
+impl Session {
+    /// Open a session over `model`. Panics if the model cannot stream.
+    pub fn new(model: Arc<dyn SequenceModel>, opts: ForwardOptions) -> Session {
+        assert!(model.spec().streamable, "model {:?} cannot stream", model.spec().name);
+        let state = model.make_state(&opts);
+        Session { model, opts, state, steps: 0 }
+    }
+
+    /// Feed one observation; returns the current output row.
+    pub fn step(&mut self, u: &[f32]) -> Vec<f32> {
+        self.steps += 1;
+        self.model.step(&mut self.state, u, None, &self.opts)
+    }
+
+    /// Feed one irregularly-sampled observation (Δt multiplier `dt`).
+    pub fn step_dt(&mut self, u: &[f32], dt: f32) -> Vec<f32> {
+        self.steps += 1;
+        self.model.step(&mut self.state, u, Some(dt), &self.opts)
+    }
+
+    /// Feed a whole (L × d_input) prefix through the streaming path;
+    /// returns the output row after the last token. Only the final token
+    /// materializes an output (swallowed tokens go through the
+    /// state-advance-only fast path).
+    pub fn prefill(&mut self, tokens: &[f32], l: usize) -> Vec<f32> {
+        let d = self.model.spec().d_input;
+        let tokens = Batch::single(tokens, l, d);
+        for k in 0..l - 1 {
+            self.steps += 1;
+            self.model
+                .advance(&mut self.state, &tokens.data()[k * d..(k + 1) * d], None, &self.opts);
+        }
+        self.step(&tokens.data()[(l - 1) * d..l * d])
+    }
+
+    /// Restart the stream (new sequence, same connection).
+    pub fn reset(&mut self) {
+        self.model.reset_state(&mut self.state);
+        self.steps = 0;
+    }
+
+    /// Observations consumed since the last reset.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// The model this session streams over.
+    pub fn spec(&self) -> ModelSpec {
+        self.model.spec()
+    }
+
+    fn into_state(self) -> SessionState {
+        self.state
+    }
+}
+
+/// A pool of reusable streaming sessions over one shared model — the
+/// native server checks one out per connection and returns it on close,
+/// so steady-state streaming allocates no per-connection state.
+pub struct SessionPool {
+    model: Arc<dyn SequenceModel>,
+    opts: ForwardOptions,
+    free: Mutex<Vec<SessionState>>,
+}
+
+impl SessionPool {
+    pub fn new(model: Arc<dyn SequenceModel>, opts: ForwardOptions) -> SessionPool {
+        SessionPool { model, opts, free: Mutex::new(Vec::new()) }
+    }
+
+    /// Check out a session (reusing a returned state when available).
+    pub fn acquire(&self) -> Session {
+        let state = self.free.lock().unwrap().pop();
+        match state {
+            Some(state) => {
+                Session { model: self.model.clone(), opts: self.opts.clone(), state, steps: 0 }
+            }
+            None => Session::new(self.model.clone(), self.opts.clone()),
+        }
+    }
+
+    /// Return a session's state to the pool (reset for the next caller).
+    ///
+    /// Panics if `session` was opened over a different model instance —
+    /// pooling a foreign state would hand a wrong-dimensioned state to the
+    /// next `acquire`, deferring the failure to an opaque out-of-bounds
+    /// panic mid-stream. A session opened with different
+    /// [`ForwardOptions`] (e.g. another timescale) is dropped instead of
+    /// pooled: its state may bake those options in (S5 discretization),
+    /// and recycling it would silently stream with the wrong dynamics.
+    pub fn release(&self, mut session: Session) {
+        // compare data addresses only (not vtable parts, which are not
+        // stable across codegen units)
+        let same_model = std::ptr::eq(
+            Arc::as_ptr(&self.model) as *const u8,
+            Arc::as_ptr(&session.model) as *const u8,
+        );
+        assert!(same_model, "session released to a pool over a different model");
+        if session.opts.timescale != self.opts.timescale {
+            return; // foreign-opts state: drop rather than poison the pool
+        }
+        session.reset();
+        self.free.lock().unwrap().push(session.into_state());
+    }
+
+    /// Number of idle pooled states.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::ssm::rnn::GruCell;
+    use crate::ssm::s5::{S5Config, S5Model};
+
+    #[test]
+    fn batch_view_checks_dims() {
+        let data = vec![0.0f32; 2 * 3 * 4];
+        let b = Batch::new(&data, 2, 3, 4);
+        assert_eq!((b.batch(), b.len(), b.width()), (2, 3, 4));
+        assert_eq!(b.seq(1).len(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch data length")]
+    fn batch_view_rejects_bad_dims() {
+        let data = vec![0.0f32; 7];
+        let _ = Batch::new(&data, 2, 3, 4);
+    }
+
+    #[test]
+    fn options_builder_resolves_backend() {
+        let o = ForwardOptions::new();
+        assert_eq!(o.timescale, 1.0);
+        assert_eq!(o.scan_backend().threads(), 1);
+        let o = o.with_threads(3).with_timescale(0.5);
+        assert_eq!(o.scan_backend().threads(), 3);
+        assert_eq!(o.timescale, 0.5);
+        assert!(ForwardOptions::new().with_threads(0).scan_backend().threads() >= 1);
+    }
+
+    #[test]
+    fn session_pool_reuses_states() {
+        let model: Arc<dyn SequenceModel> = Arc::new(GruCell::init(2, 4, &mut Rng::new(1)));
+        let pool = SessionPool::new(model, ForwardOptions::new());
+        let mut s = pool.acquire();
+        let y1 = s.step(&[1.0, -0.5]);
+        pool.release(s);
+        assert_eq!(pool.idle(), 1);
+        // a re-acquired session starts from a reset state
+        let mut s2 = pool.acquire();
+        assert_eq!(pool.idle(), 0);
+        assert_eq!(s2.steps(), 0);
+        let y2 = s2.step(&[1.0, -0.5]);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    #[should_panic(expected = "different model")]
+    fn release_to_foreign_pool_rejected() {
+        let m1: Arc<dyn SequenceModel> = Arc::new(GruCell::init(2, 4, &mut Rng::new(1)));
+        let m2: Arc<dyn SequenceModel> = Arc::new(GruCell::init(2, 8, &mut Rng::new(2)));
+        let pool = SessionPool::new(m1, ForwardOptions::new());
+        let foreign = Session::new(m2, ForwardOptions::new());
+        pool.release(foreign); // would poison the pool with a 8-wide state
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot stream")]
+    fn bidirectional_s5_session_rejected() {
+        let cfg = S5Config { h: 4, p: 8, j: 1, bidir: true, ..Default::default() };
+        let model: Arc<dyn SequenceModel> =
+            Arc::new(S5Model::init(2, 3, 1, &cfg, &mut Rng::new(2)));
+        let _ = Session::new(model, ForwardOptions::new());
+    }
+}

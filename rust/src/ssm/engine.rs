@@ -3,31 +3,35 @@
 //!
 //! The paper gets batching for free from `jax.vmap`; the native Rust path
 //! historically scanned one sequence at a time with fresh `Vec`s per call.
-//! This module supplies the two pieces that thread a batch dimension and a
+//! This module supplies the pieces that thread a batch dimension and a
 //! pluggable scan strategy through every layer of the native stack:
 //!
 //! * [`EngineWorkspace`] — owns every per-forward scratch buffer
 //!   (activations, pre-norm, SSM drive/states, time-varying multipliers).
 //!   Buffers grow to the high-water mark of the shapes seen and are then
 //!   reused, so steady-state inference performs **zero O(B·L··) heap
-//!   allocation**; the only transient allocations left are O(layers·P)
-//!   discretization scalars and O(threads·P) chunk summaries inside the
-//!   parallel scan (see ROADMAP open items for hoisting those too).
-//! * [`BatchForward`] — the object-safe "packed batch in, rows out"
-//!   interface implemented by the S5 stack (logits per sequence) and the
-//!   RNN baselines (final hidden state per sequence), so the server,
-//!   benches and tests drive any sequence model uniformly.
+//!   allocation**; the only transient allocations left are the
+//!   O(threads·P) chunk summaries inside the parallel scan (see ROADMAP
+//!   open items for pooling those too).
+//! * A per-layer **time-invariant discretization cache** (`TiDisc`,
+//!   keyed by layer slot and validated against (Λ, log Δ, timescale)) so
+//!   repeated same-timescale batches skip the exp-heavy re-discretization
+//!   entirely.
+//!
+//! The object-safe "packed batch in, rows out" interface the server and
+//! benches drive models through is
+//! [`SequenceModel`](crate::ssm::api::SequenceModel) (it superseded the
+//! old `BatchForward` trait).
 //!
 //! Parallelism enters at two levels, both steered by the same
 //! [`ScanBackend`](crate::ssm::scan::ScanBackend) object: dense stages
 //! (encoder, norm, B̃u, C̃x, gate) shard *sequences* across workers via
-//! [`par_zip`]; the scan stage goes through `scan_batch_*`, which shards
+//! `par_zip`; the scan stage goes through `scan_batch_*`, which shards
 //! across B sequences × in-sequence chunks. A batch of 1 degrades to the
 //! classic single-sequence path with in-sequence chunking only.
 
-use crate::num::C32;
-use crate::ssm::s5::S5Model;
-use crate::ssm::scan::ScanBackend;
+use crate::num::{C32, C64};
+use crate::ssm::discretize::{discretize_diag, Method};
 
 /// Resolve a thread-count knob: `0` auto-detects the machine's parallelism
 /// (`std::thread::available_parallelism`), any other value is taken as-is.
@@ -171,6 +175,7 @@ pub(crate) fn grow<T: Clone + Default>(buf: &mut Vec<T>, n: usize) {
 /// | `bu`     | (B, L, P2) | scan drive, overwritten with states    |
 /// | `bu_rev` | (B, L, P2) | reversed drive for bidirectional layers|
 /// | `a_tv`   | (B, L, P2) | time-varying multipliers (§6.3 path)   |
+/// | `disc`   | per layer  | cached TI discretization (`TiDisc`)    |
 #[derive(Default)]
 pub struct EngineWorkspace {
     pub(crate) x: Vec<f32>,
@@ -179,6 +184,7 @@ pub struct EngineWorkspace {
     pub(crate) bu: Vec<C32>,
     pub(crate) bu_rev: Vec<C32>,
     pub(crate) a_tv: Vec<C32>,
+    pub(crate) disc: Vec<Vec<TiDisc>>,
 }
 
 impl EngineWorkspace {
@@ -193,56 +199,92 @@ impl EngineWorkspace {
             + self.v.capacity() * 4
             + self.y.capacity() * 4
             + (self.bu.capacity() + self.bu_rev.capacity() + self.a_tv.capacity()) * 8
+            + self
+                .disc
+                .iter()
+                .flat_map(|slot| slot.iter())
+                .map(TiDisc::capacity_bytes)
+                .sum::<usize>()
     }
 }
 
-/// Object-safe batched forward: consume a packed row-major (B, L, d_input)
-/// buffer, produce one `d_output` row per sequence.
+/// One cached time-invariant ZOH discretization: Λ̄ and the input scaling
+/// for a given (Λ, log Δ, timescale) triple, in both the C32 form the hot
+/// loops consume and the C64 form the bidirectional reversed drive needs.
 ///
-/// Implementors: [`S5Model`] (logits), the RNN baselines in
-/// [`crate::ssm::rnn`] (final hidden state). The native inference server
-/// and the throughput benches drive models exclusively through this.
-pub trait BatchForward: Send + Sync {
-    /// Input feature width per step.
-    fn d_input(&self) -> usize;
-    /// Output row width per sequence.
-    fn d_output(&self) -> usize;
-    /// Forward a packed batch; `out` must hold `batch · d_output()` floats.
-    #[allow(clippy::too_many_arguments)]
-    fn forward_batch_into(
-        &self,
-        u: &[f32],
-        batch: usize,
-        l: usize,
-        timescale: f64,
-        backend: &dyn ScanBackend,
-        ws: &mut EngineWorkspace,
-        out: &mut [f32],
-    );
+/// Cache entries live in the [`EngineWorkspace`]: each layer slot holds up
+/// to [`TI_DISC_SLOT_CAP`] entries in most-recently-used order, so
+/// interleaved timescales (the zero-shot-resampling serving mix) all stay
+/// cached instead of thrashing one entry. Entries are validated by *value*
+/// against the layer's Λ and log Δ — a workspace reused across models (or
+/// a layer whose parameters changed) recomputes instead of serving stale
+/// multipliers.
+pub(crate) struct TiDisc {
+    timescale: f64,
+    lambda: Vec<C64>,
+    log_dt: Vec<f32>,
+    /// Λ̄ as C32 (scan multipliers).
+    pub(crate) a32: Vec<C32>,
+    /// Input scaling as C32 (forward drive).
+    pub(crate) f32s: Vec<C32>,
+    /// Input scaling as C64 (reversed drive of bidirectional layers,
+    /// which folds the scaling in before the C32 conversion).
+    pub(crate) f64s: Vec<C64>,
 }
 
-impl BatchForward for S5Model {
-    fn d_input(&self) -> usize {
-        self.d_in
+/// Max cached discretizations per layer slot (distinct timescales in
+/// flight); beyond this the least-recently-used entry is evicted.
+pub(crate) const TI_DISC_SLOT_CAP: usize = 4;
+
+impl TiDisc {
+    fn matches(&self, lambda: &[C64], log_dt: &[f32], timescale: f64) -> bool {
+        self.timescale == timescale
+            && self.lambda.as_slice() == lambda
+            && self.log_dt.as_slice() == log_dt
     }
 
-    fn d_output(&self) -> usize {
-        self.classes
+    fn capacity_bytes(&self) -> usize {
+        self.lambda.capacity() * 16
+            + self.log_dt.capacity() * 4
+            + (self.a32.capacity() + self.f32s.capacity()) * 8
+            + self.f64s.capacity() * 16
     }
+}
 
-    #[allow(clippy::too_many_arguments)]
-    fn forward_batch_into(
-        &self,
-        u: &[f32],
-        batch: usize,
-        l: usize,
-        timescale: f64,
-        backend: &dyn ScanBackend,
-        ws: &mut EngineWorkspace,
-        out: &mut [f32],
-    ) {
-        S5Model::forward_batch_into(self, u, batch, l, timescale, backend, ws, out);
+/// Fetch (or recompute) the cached TI discretization for layer `slot`.
+///
+/// Entries are keyed by value on `(lambda, log_dt, timescale)`: an O(P)
+/// comparison against the cached key replaces the O(P) `exp`/complex-`exp`
+/// work on every hit. The slot keeps its entries in MRU order and caps
+/// them at [`TI_DISC_SLOT_CAP`].
+pub(crate) fn ti_disc<'a>(
+    cache: &'a mut Vec<Vec<TiDisc>>,
+    slot: usize,
+    lambda: &[C64],
+    log_dt: &[f32],
+    timescale: f64,
+) -> &'a TiDisc {
+    while cache.len() <= slot {
+        cache.push(Vec::new());
     }
+    let entries = &mut cache[slot];
+    if let Some(i) = entries.iter().position(|e| e.matches(lambda, log_dt, timescale)) {
+        entries[..=i].rotate_right(1); // move hit to MRU position
+        return &entries[0];
+    }
+    let dt: Vec<f64> = log_dt.iter().map(|&ld| (ld as f64).exp() * timescale).collect();
+    let (lam_bar, scale) = discretize_diag(lambda, &dt, Method::Zoh);
+    let fresh = TiDisc {
+        timescale,
+        lambda: lambda.to_vec(),
+        log_dt: log_dt.to_vec(),
+        a32: lam_bar.iter().map(|z| z.to_c32()).collect(),
+        f32s: scale.iter().map(|z| z.to_c32()).collect(),
+        f64s: scale,
+    };
+    entries.insert(0, fresh);
+    entries.truncate(TI_DISC_SLOT_CAP);
+    &entries[0]
 }
 
 #[cfg(test)]
@@ -311,5 +353,55 @@ mod tests {
         assert_eq!(ws.capacity_bytes(), 0);
         grow(&mut ws.x, 128);
         assert!(ws.capacity_bytes() >= 128 * 4);
+    }
+
+    /// The discretization cache must hit on identical keys and recompute
+    /// on any changed component (timescale, Λ, log Δ) — stale multipliers
+    /// would silently corrupt every scan downstream.
+    #[test]
+    fn ti_disc_cache_hits_and_invalidates() {
+        let lambda = vec![C64::new(-0.5, 1.0), C64::new(-0.1, -2.0)];
+        let log_dt = vec![-3.0f32, -2.0];
+        let mut cache = Vec::new();
+        let a_first = ti_disc(&mut cache, 0, &lambda, &log_dt, 1.0).a32.clone();
+        // hit: same key, same values, same allocation
+        let ptr = cache[0][0].a32.as_ptr();
+        let again = ti_disc(&mut cache, 0, &lambda, &log_dt, 1.0);
+        assert_eq!(again.a32, a_first);
+        assert_eq!(again.a32.as_ptr(), ptr);
+        // a different timescale gets its own (different) entry
+        let rescaled = ti_disc(&mut cache, 0, &lambda, &log_dt, 2.0).a32.clone();
+        assert_ne!(rescaled, a_first);
+        // Λ change misses even at the same slot + timescale
+        let lambda2 = vec![C64::new(-0.9, 0.3), C64::new(-0.2, 0.7)];
+        let other = ti_disc(&mut cache, 0, &lambda2, &log_dt, 2.0).a32.clone();
+        assert_ne!(other, rescaled);
+        // and flipping back reproduces the original values
+        let back = ti_disc(&mut cache, 0, &lambda, &log_dt, 1.0);
+        assert_eq!(back.a32, a_first);
+    }
+
+    /// Interleaved timescales (the zero-shot-resampling serving mix) must
+    /// all stay resident: alternating between two timescales hits cached
+    /// entries (stable allocations), and the slot is bounded.
+    #[test]
+    fn ti_disc_cache_holds_interleaved_timescales() {
+        let lambda = vec![C64::new(-0.4, 0.8)];
+        let log_dt = vec![-2.5f32];
+        let mut cache = Vec::new();
+        let _ = ti_disc(&mut cache, 0, &lambda, &log_dt, 1.0);
+        let _ = ti_disc(&mut cache, 0, &lambda, &log_dt, 2.0);
+        assert_eq!(cache[0].len(), 2);
+        let p1 = ti_disc(&mut cache, 0, &lambda, &log_dt, 1.0).a32.as_ptr();
+        let p2 = ti_disc(&mut cache, 0, &lambda, &log_dt, 2.0).a32.as_ptr();
+        // alternating again reuses the same allocations (cache hits)
+        assert_eq!(ti_disc(&mut cache, 0, &lambda, &log_dt, 1.0).a32.as_ptr(), p1);
+        assert_eq!(ti_disc(&mut cache, 0, &lambda, &log_dt, 2.0).a32.as_ptr(), p2);
+        assert_eq!(cache[0].len(), 2);
+        // the slot never grows past its cap
+        for i in 0..10 {
+            let _ = ti_disc(&mut cache, 0, &lambda, &log_dt, 3.0 + i as f64);
+        }
+        assert!(cache[0].len() <= TI_DISC_SLOT_CAP);
     }
 }

@@ -18,8 +18,12 @@
 //! The batched native inference engine ([`engine`]) plus the pluggable
 //! scan strategies ([`scan::ScanBackend`]) thread a (B, L, H) batch
 //! dimension through the whole stack — the CPU-side counterpart of the
-//! `jax.vmap`-batched reference.
+//! `jax.vmap`-batched reference. The unified inference surface over it is
+//! [`api`]: the [`api::SequenceModel`] trait (typed [`api::Batch`] prefill
+//! + streaming steps) implemented by S5 and the RNN baselines alike, and
+//! the [`api::Session`] streaming API the server pools per connection.
 
+pub mod api;
 pub mod complexity;
 pub mod discretize;
 pub mod engine;

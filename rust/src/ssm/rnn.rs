@@ -9,17 +9,18 @@
 //! that makes CRU slow) as honest baselines for the relative-speed
 //! reproduction.
 //!
-//! Both baselines conform to the batched-engine interface
-//! ([`crate::ssm::engine::BatchForward`]): `run_batch` consumes a packed
-//! (B, L, d) buffer and shards sequences across the scan backend's thread
-//! budget — so the throughput benches can compare S5's batched forward
-//! against the recurrent baselines under the identical harness. The
-//! defining O(L) sequential-step property is untouched: only the batch
-//! dimension parallelizes, never time.
+//! Both baselines implement the unified inference trait
+//! ([`crate::ssm::api::SequenceModel`]): `prefill_into` consumes a packed
+//! (B, L, d) [`Batch`] and shards sequences across the scan backend's
+//! thread budget, and `make_state`/`step` stream one observation at a
+//! time — so the server and the throughput benches drive the recurrent
+//! baselines and S5 through the identical harness. The defining O(L)
+//! sequential-step property is untouched: only the batch dimension
+//! parallelizes, never time.
 
 use crate::rng::Rng;
-use crate::ssm::engine::{par_zip, BatchForward, EngineWorkspace};
-use crate::ssm::scan::ScanBackend;
+use crate::ssm::api::{Batch, ForwardOptions, ModelSpec, SequenceModel, SessionState};
+use crate::ssm::engine::{par_zip, EngineWorkspace};
 
 /// A GRU cell: h' = (1−z)∘h + z∘tanh(W_h x + U_h (r∘h)).
 #[derive(Clone, Debug)]
@@ -100,6 +101,11 @@ impl GruCell {
 
     /// Packed-batch run: xs (B, L, d_in) → hidden states (B, L, H),
     /// sequences sharded across `threads` workers (time stays sequential).
+    #[deprecated(
+        since = "0.3.0",
+        note = "positional legacy signature; use `SequenceModel::prefill` \
+                with a `Batch` view (see `ssm::api`)"
+    )]
     pub fn run_batch(&self, xs: &[f32], batch: usize, l: usize, threads: usize) -> Vec<f32> {
         assert_eq!(xs.len(), batch * l * self.d_in);
         let mut out = vec![0.0f32; batch * l * self.h];
@@ -110,35 +116,81 @@ impl GruCell {
     }
 }
 
-impl BatchForward for GruCell {
-    fn d_input(&self) -> usize {
-        self.d_in
-    }
+/// Streaming state of one GRU decode stream.
+pub struct GruStreamState {
+    state: Vec<f32>,
+    scratch: Vec<f32>,
+}
 
-    /// Per-sequence output: the final hidden state (the summary a
+impl SequenceModel for GruCell {
+    /// Per-sequence prefill output: the final hidden state (the summary a
     /// classifier head would consume).
-    fn d_output(&self) -> usize {
-        self.h
+    fn spec(&self) -> ModelSpec {
+        ModelSpec { name: "gru", d_input: self.d_in, d_output: self.h, streamable: true }
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn forward_batch_into(
+    fn prefill_into(
         &self,
-        u: &[f32],
-        batch: usize,
-        l: usize,
-        _timescale: f64,
-        backend: &dyn ScanBackend,
+        batch: Batch<'_>,
+        opts: &ForwardOptions,
         _ws: &mut EngineWorkspace,
         out: &mut [f32],
     ) {
-        assert_eq!(out.len(), batch * self.h);
-        let h = self.h;
-        par_zip(backend.threads(), u, l * self.d_in, out, h, batch, |_, xseq, oseq| {
-            let mut states = vec![0.0f32; l * h];
-            self.run_into(xseq, l, &mut states);
-            oseq.copy_from_slice(&states[(l - 1) * h..]);
+        assert_eq!(batch.width(), self.d_in, "batch width != model d_input");
+        assert_eq!(out.len(), batch.batch() * self.h);
+        let (h, l, d_in) = (self.h, batch.len(), self.d_in);
+        let threads = opts.scan_backend().threads();
+        // only the final hidden state leaves this function, so step with
+        // O(H) state+scratch instead of materializing all L rows
+        par_zip(threads, batch.data(), l * d_in, out, h, batch.batch(), |_, xseq, oseq| {
+            let mut scratch = vec![0.0f32; 3 * h];
+            oseq.fill(0.0);
+            for k in 0..l {
+                self.step(oseq, &xseq[k * d_in..(k + 1) * d_in], &mut scratch);
+            }
         });
+    }
+
+    fn make_state(&self, _opts: &ForwardOptions) -> SessionState {
+        SessionState::new(GruStreamState {
+            state: vec![0.0; self.h],
+            scratch: vec![0.0; 3 * self.h],
+        })
+    }
+
+    fn reset_state(&self, state: &mut SessionState) {
+        let st = state
+            .downcast_mut::<GruStreamState>()
+            .expect("state is not a GruStreamState");
+        st.state.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    fn step(
+        &self,
+        state: &mut SessionState,
+        u: &[f32],
+        _dt: Option<f32>,
+        _opts: &ForwardOptions,
+    ) -> Vec<f32> {
+        let st = state
+            .downcast_mut::<GruStreamState>()
+            .expect("state is not a GruStreamState");
+        GruCell::step(self, &mut st.state, u, &mut st.scratch);
+        st.state.clone()
+    }
+
+    /// Prefill fast path: no output-row clone per swallowed token.
+    fn advance(
+        &self,
+        state: &mut SessionState,
+        u: &[f32],
+        _dt: Option<f32>,
+        _opts: &ForwardOptions,
+    ) {
+        let st = state
+            .downcast_mut::<GruStreamState>()
+            .expect("state is not a GruStreamState");
+        GruCell::step(self, &mut st.state, u, &mut st.scratch);
     }
 }
 
@@ -165,6 +217,11 @@ impl CruLike {
 
     /// Packed-batch run: xs (B, L, d_in), dts (B, L) → outputs (B, L, H),
     /// sequences sharded across `threads` workers.
+    #[deprecated(
+        since = "0.3.0",
+        note = "positional legacy signature; use `SequenceModel::prefill` \
+                with a `Batch` view (see `ssm::api`)"
+    )]
     pub fn run_batch(
         &self,
         xs: &[f32],
@@ -184,81 +241,165 @@ impl CruLike {
         out
     }
 
+    /// One CRU-like step over an explicit state: GRU step, covariance
+    /// propagation, covariance-gated output row written into `out` (H).
+    /// This is the single kernel the full-sequence run, the batched
+    /// prefill and streaming `step` all share.
+    pub fn step(&self, st: &mut CruStreamState, x: &[f32], dt: f32, out: &mut [f32]) {
+        let h = self.gru.h;
+        self.gru.step(&mut st.state, x, &mut st.scratch);
+        // cov ← A cov Aᵀ · dt + I  (the sequential matrix work)
+        for i in 0..h {
+            for j in 0..h {
+                let mut acc = 0.0f32;
+                for c in 0..h {
+                    acc += self.a[i * h + c] * st.cov[c * h + j];
+                }
+                st.next_cov[i * h + j] = acc;
+            }
+        }
+        for i in 0..h {
+            for j in 0..h {
+                let mut acc = 0.0f32;
+                for c in 0..h {
+                    acc += st.next_cov[i * h + c] * self.a[j * h + c];
+                }
+                st.cov[i * h + j] = acc * dt * 0.01 + if i == j { 1.0 } else { 0.0 };
+            }
+        }
+        // gate the state by the covariance diagonal (keeps it load-bearing)
+        for i in 0..h {
+            out[i] = st.state[i] / (1.0 + st.cov[i * h + i].abs().sqrt() * 0.01);
+        }
+    }
+
     /// Full-sequence run with per-step Δt modulation of the covariance.
     pub fn run(&self, xs: &[f32], dts: &[f32], l: usize) -> Vec<f32> {
         let h = self.gru.h;
-        let mut state = vec![0.0f32; h];
-        let mut scratch = vec![0.0f32; 3 * h];
-        let mut cov = vec![0.0f32; h * h];
-        for i in 0..h {
-            cov[i * h + i] = 1.0;
-        }
-        let mut next_cov = vec![0.0f32; h * h];
+        let mut st = CruStreamState::new(h);
         let mut out = vec![0.0f32; l * h];
         for k in 0..l {
-            self.gru
-                .step(&mut state, &xs[k * self.gru.d_in..(k + 1) * self.gru.d_in], &mut scratch);
-            // cov ← A cov Aᵀ · dt + I  (the sequential matrix work)
-            let dt = dts[k];
-            for i in 0..h {
-                for j in 0..h {
-                    let mut acc = 0.0f32;
-                    for c in 0..h {
-                        acc += self.a[i * h + c] * cov[c * h + j];
-                    }
-                    next_cov[i * h + j] = acc;
-                }
-            }
-            for i in 0..h {
-                for j in 0..h {
-                    let mut acc = 0.0f32;
-                    for c in 0..h {
-                        acc += next_cov[i * h + c] * self.a[j * h + c];
-                    }
-                    cov[i * h + j] = acc * dt * 0.01 + if i == j { 1.0 } else { 0.0 };
-                }
-            }
-            // gate the state by the covariance diagonal (keeps it load-bearing)
-            for i in 0..h {
-                out[k * h + i] = state[i] / (1.0 + cov[i * h + i].abs().sqrt() * 0.01);
-            }
+            let row = &mut out[k * h..(k + 1) * h];
+            self.step(&mut st, &xs[k * self.gru.d_in..(k + 1) * self.gru.d_in], dts[k], row);
         }
         out
     }
 }
 
-impl BatchForward for CruLike {
-    fn d_input(&self) -> usize {
-        self.gru.d_in
+/// Streaming state of one CRU-like decode stream: GRU hidden state plus
+/// the propagated covariance.
+pub struct CruStreamState {
+    state: Vec<f32>,
+    scratch: Vec<f32>,
+    cov: Vec<f32>,
+    next_cov: Vec<f32>,
+    /// discarded-output scratch for the `advance` prefill fast path
+    out: Vec<f32>,
+}
+
+impl CruStreamState {
+    fn new(h: usize) -> CruStreamState {
+        let mut cov = vec![0.0f32; h * h];
+        for i in 0..h {
+            cov[i * h + i] = 1.0;
+        }
+        CruStreamState {
+            state: vec![0.0; h],
+            scratch: vec![0.0; 3 * h],
+            cov,
+            next_cov: vec![0.0; h * h],
+            out: vec![0.0; h],
+        }
     }
 
-    fn d_output(&self) -> usize {
-        self.gru.h
+    fn reset(&mut self) {
+        let h = self.state.len();
+        self.state.iter_mut().for_each(|v| *v = 0.0);
+        self.cov.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..h {
+            self.cov[i * h + i] = 1.0;
+        }
+    }
+}
+
+impl SequenceModel for CruLike {
+    /// Per-sequence prefill output: the last covariance-gated output row.
+    /// Prefill assumes regular sampling (Δt ≡ 1); the irregular path is
+    /// streaming `step` with `dt` or [`CruLike::run`].
+    fn spec(&self) -> ModelSpec {
+        ModelSpec {
+            name: "cru-like",
+            d_input: self.gru.d_in,
+            d_output: self.gru.h,
+            streamable: true,
+        }
     }
 
-    /// Regular sampling (Δt ≡ 1); the irregular path is [`CruLike::run_batch`].
-    #[allow(clippy::too_many_arguments)]
-    fn forward_batch_into(
+    fn prefill_into(
         &self,
-        u: &[f32],
-        batch: usize,
-        l: usize,
-        _timescale: f64,
-        backend: &dyn ScanBackend,
+        batch: Batch<'_>,
+        opts: &ForwardOptions,
         _ws: &mut EngineWorkspace,
         out: &mut [f32],
     ) {
-        let h = self.gru.h;
-        assert_eq!(out.len(), batch * h);
-        let dts = vec![1.0f32; batch * l];
-        par_zip(backend.threads(), u, l * self.gru.d_in, out, h, batch, |i, xseq, oseq| {
-            let got = self.run(xseq, &dts[i * l..(i + 1) * l], l);
+        let (h, l) = (self.gru.h, batch.len());
+        assert_eq!(batch.width(), self.gru.d_in, "batch width != model d_input");
+        assert_eq!(out.len(), batch.batch() * h);
+        let threads = opts.scan_backend().threads();
+        let d_in = self.gru.d_in;
+        let dts = vec![1.0f32; l];
+        par_zip(threads, batch.data(), l * d_in, out, h, batch.batch(), |_, xseq, oseq| {
+            let got = self.run(xseq, &dts, l);
             oseq.copy_from_slice(&got[(l - 1) * h..]);
         });
+    }
+
+    fn make_state(&self, _opts: &ForwardOptions) -> SessionState {
+        SessionState::new(CruStreamState::new(self.gru.h))
+    }
+
+    fn reset_state(&self, state: &mut SessionState) {
+        state
+            .downcast_mut::<CruStreamState>()
+            .expect("state is not a CruStreamState")
+            .reset();
+    }
+
+    fn step(
+        &self,
+        state: &mut SessionState,
+        u: &[f32],
+        dt: Option<f32>,
+        _opts: &ForwardOptions,
+    ) -> Vec<f32> {
+        let st = state
+            .downcast_mut::<CruStreamState>()
+            .expect("state is not a CruStreamState");
+        let mut out = vec![0.0f32; self.gru.h];
+        CruLike::step(self, st, u, dt.unwrap_or(1.0), &mut out);
+        out
+    }
+
+    /// Prefill fast path: reuse the state-owned output scratch instead of
+    /// allocating a discarded row per swallowed token.
+    fn advance(
+        &self,
+        state: &mut SessionState,
+        u: &[f32],
+        dt: Option<f32>,
+        _opts: &ForwardOptions,
+    ) {
+        let st = state
+            .downcast_mut::<CruStreamState>()
+            .expect("state is not a CruStreamState");
+        let mut out = std::mem::take(&mut st.out);
+        CruLike::step(self, st, u, dt.unwrap_or(1.0), &mut out);
+        st.out = out;
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy batch wrappers are exercised as oracles
 mod tests {
     use super::*;
 

@@ -476,6 +476,11 @@ impl ScanBackend for ParallelBackend {
 
 /// Pick a backend for a thread budget: ≤ 1 worker → [`SequentialBackend`],
 /// otherwise [`ParallelBackend`]; `threads = 0` auto-detects.
+///
+/// This is the resolver behind the `threads` knob everywhere — the CLI,
+/// the native server, and
+/// [`ForwardOptions::with_threads`](crate::ssm::api::ForwardOptions::with_threads)
+/// in the unified inference API all funnel through it.
 pub fn backend_for_threads(threads: usize) -> Box<dyn ScanBackend> {
     let t = crate::ssm::engine::auto_threads(threads);
     if t <= 1 {

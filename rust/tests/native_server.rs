@@ -1,7 +1,10 @@
 //! Integration: the native inference server over the batched engine —
 //! no compiled artifacts required. Covers the dynamic batcher (coalescing,
 //! fan-out), correctness of batched serving against direct forwards, and
-//! error propagation.
+//! error propagation. (The model-generic server and streaming-session
+//! coverage lives in `tests/sequence_api.rs`.)
+
+#![allow(deprecated)] // `S5Model::forward` is the per-sequence oracle here
 
 use s5::coordinator::server::{NativeInferenceServer, ServerConfig};
 use s5::rng::Rng;

@@ -7,6 +7,8 @@
 //! A failure here means the L2 math and the reference implementation have
 //! diverged (or the manifest/param plumbing reordered something).
 
+#![allow(deprecated)] // legacy positional wrappers are the subjects/oracles here
+
 use s5::num::C64;
 use s5::rng::Rng;
 use s5::runtime::params::{assemble_inputs, literal_f32, to_vec_f32, ParamStore};

@@ -1,0 +1,334 @@
+//! Integration: the unified `SequenceModel` API — streaming ≡ batched
+//! equivalence, legacy-wrapper ≡ new-API equivalence, the model-generic
+//! native server, and native npz checkpoint round trips. No compiled
+//! artifacts required.
+
+use s5::coordinator::server::{NativeInferenceServer, ServerConfig};
+use s5::rng::Rng;
+use s5::runtime::NpzStore;
+use s5::ssm::api::{Batch, ForwardOptions, SequenceModel, Session};
+use s5::ssm::engine::EngineWorkspace;
+use s5::ssm::rnn::{CruLike, GruCell};
+use s5::ssm::s5::{S5Config, S5Model};
+use s5::testing::prop;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn s5_model(seed: u64, depth: usize) -> S5Model {
+    let cfg = S5Config { h: 8, p: 8, j: 1, ..Default::default() };
+    S5Model::init(2, 5, depth, &cfg, &mut Rng::new(seed))
+}
+
+// ---------------------------------------------------------------------------
+// streaming ≡ batched
+// ---------------------------------------------------------------------------
+
+/// Property: driving `Session::step` for L tokens reproduces the batched
+/// `prefill` output **bit-for-bit** on the sequential scan path, for both
+/// S5 and the GRU baseline (the online/offline shared-kernel guarantee).
+#[test]
+fn prop_session_steps_reproduce_prefill_bit_for_bit() {
+    prop::check("session ≡ prefill (exact)", 8, |g| {
+        let l = 4 + g.below(80);
+        let models: Vec<Arc<dyn SequenceModel>> = vec![
+            Arc::new(s5_model(1 + g.below(1000) as u64, 2)),
+            Arc::new(GruCell::init(2, 6, &mut Rng::new(g.below(1000) as u64))),
+        ];
+        for model in models {
+            let spec = model.spec();
+            let d = spec.d_input;
+            let u: Vec<f32> = (0..l * d).map(|_| g.normal() as f32).collect();
+            let opts = ForwardOptions::new(); // sequential scan
+            let mut ws = EngineWorkspace::new();
+            let offline = model.prefill(Batch::single(&u, l, d), &opts, &mut ws);
+            let mut session = Session::new(model.clone(), opts);
+            let streamed = session.prefill(&u, l);
+            if offline != streamed {
+                return Err(format!(
+                    "{}: streaming diverged from batched at L={l}: {offline:?} vs {streamed:?}",
+                    spec.name
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// With a parallel scan strategy the chunked combine is only close, not
+/// identical — streaming must still agree within the documented tolerance.
+#[test]
+fn session_matches_parallel_prefill_within_tolerance() {
+    let model: Arc<dyn SequenceModel> = Arc::new(s5_model(11, 3));
+    let l = 96;
+    let mut rng = Rng::new(5);
+    let u = rng.normal_vec_f32(l * 2);
+    let mut ws = EngineWorkspace::new();
+    let par = model.prefill(
+        Batch::single(&u, l, 2),
+        &ForwardOptions::new().with_threads(4),
+        &mut ws,
+    );
+    let mut session = Session::new(model, ForwardOptions::new());
+    let streamed = session.prefill(&u, l);
+    prop::close_slice_f32(&par, &streamed, 1e-4).unwrap();
+}
+
+/// Session reset restarts the stream exactly; irregular Δt steps flow
+/// through for the models that honor them.
+#[test]
+fn session_reset_and_dt_paths() {
+    let cru: Arc<dyn SequenceModel> = Arc::new(CruLike::init(2, 4, &mut Rng::new(3)));
+    let mut session = Session::new(cru, ForwardOptions::new());
+    let mut rng = Rng::new(8);
+    let x = rng.normal_vec_f32(2);
+    let y1 = session.step_dt(&x, 1.7);
+    let _ = session.step(&x);
+    session.reset();
+    assert_eq!(session.steps(), 0);
+    let y3 = session.step_dt(&x, 1.7);
+    assert_eq!(y1, y3, "reset must restart the stream exactly");
+    // Δt must be load-bearing for the CRU-like baseline
+    session.reset();
+    let yfast = session.step_dt(&x, 3.0);
+    assert_ne!(y1, yfast, "Δt must influence the CRU-like output");
+}
+
+// ---------------------------------------------------------------------------
+// legacy wrappers ≡ new API
+// ---------------------------------------------------------------------------
+
+/// The deprecated positional signatures are thin wrappers over the same
+/// cores the new API drives: outputs must match exactly.
+#[test]
+#[allow(deprecated)]
+fn prop_legacy_wrappers_equal_new_api() {
+    prop::check("legacy ≡ new API", 8, |g| {
+        let l = 4 + g.below(60);
+        let model = s5_model(21, 2);
+        let u: Vec<f32> = (0..l * 2).map(|_| g.normal() as f32).collect();
+        for threads in [1usize, 3] {
+            let old = model.forward(&u, l, 1.5, threads);
+            let mut ws = EngineWorkspace::new();
+            let new = model.prefill(
+                Batch::single(&u, l, 2),
+                &ForwardOptions::new().with_threads(threads).with_timescale(1.5),
+                &mut ws,
+            );
+            if old != new {
+                return Err(format!("S5 t={threads}: {old:?} vs {new:?}"));
+            }
+        }
+        let gru = GruCell::init(3, 5, &mut Rng::new(2));
+        let batch = 1 + g.below(4);
+        let xs: Vec<f32> = (0..batch * l * 3).map(|_| g.normal() as f32).collect();
+        let old = gru.run_batch(&xs, batch, l, 2);
+        let mut ws = EngineWorkspace::new();
+        let new = gru.prefill(
+            Batch::new(&xs, batch, l, 3),
+            &ForwardOptions::new().with_threads(2),
+            &mut ws,
+        );
+        for bi in 0..batch {
+            let want = &old[(bi * l + l - 1) * 5..(bi * l + l) * 5];
+            let got = &new[bi * 5..(bi + 1) * 5];
+            if want != got {
+                return Err(format!("GRU seq {bi}: {want:?} vs {got:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// the model-generic server (acceptance criterion)
+// ---------------------------------------------------------------------------
+
+/// One server implementation, two model families, the same handle API:
+/// responses must equal direct prefills of the same model.
+#[test]
+fn server_is_generic_over_sequence_models() {
+    let l = 24;
+    let cfg = ServerConfig {
+        max_wait: Duration::from_millis(5),
+        max_batch: 8,
+        threads: 2,
+    };
+    let models: Vec<Arc<dyn SequenceModel>> = vec![
+        Arc::new(s5_model(77, 2)),
+        Arc::new(GruCell::init(2, 7, &mut Rng::new(78))),
+    ];
+    for model in models {
+        let spec = model.spec();
+        let server = NativeInferenceServer::start_model(model.clone(), l, cfg);
+        let handle = server.handle();
+        assert_eq!(handle.row, l * spec.d_input);
+        assert_eq!(handle.d_output, spec.d_output);
+        let results: Vec<(Vec<f32>, Vec<f32>)> = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..6u64)
+                .map(|i| {
+                    let h = handle.clone();
+                    let d = spec.d_input;
+                    s.spawn(move || {
+                        let mut rng = Rng::new(i);
+                        let x = rng.normal_vec_f32(l * d);
+                        let resp = h.infer(x.clone()).unwrap();
+                        (x, resp.logits)
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        let mut ws = EngineWorkspace::new();
+        for (x, logits) in &results {
+            assert_eq!(logits.len(), spec.d_output, "{} row width", spec.name);
+            let want = model.prefill(
+                Batch::single(x, l, spec.d_input),
+                &ForwardOptions::new().with_threads(2),
+                &mut ws,
+            );
+            prop::close_slice_f32(&want, logits, 1e-4)
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        }
+    }
+}
+
+/// Streaming sessions pooled by the server: check out, stream, return,
+/// and the reused session starts clean.
+#[test]
+fn server_pools_streaming_sessions() {
+    let l = 16;
+    let model: Arc<dyn SequenceModel> = Arc::new(s5_model(91, 2));
+    let server = NativeInferenceServer::start_model(
+        model,
+        l,
+        ServerConfig { max_wait: Duration::from_millis(1), max_batch: 4, threads: 1 },
+    );
+    let mut rng = Rng::new(14);
+    let x = rng.normal_vec_f32(2);
+    let mut s1 = server.open_session();
+    let y1 = s1.step(&x);
+    server.close_session(s1);
+    let mut s2 = server.open_session();
+    assert_eq!(s2.steps(), 0);
+    let y2 = s2.step(&x);
+    assert_eq!(y1, y2, "pooled session must restart clean");
+    server.close_session(s2);
+}
+
+/// Nearby-but-distinct f64 timescales must never share a batch (they
+/// would have aliased through the old f32 request field).
+#[test]
+fn f64_timescales_do_not_alias() {
+    let l = 16;
+    let model = s5_model(31, 2);
+    let direct = model.clone();
+    let server = NativeInferenceServer::start(
+        model,
+        l,
+        ServerConfig { max_wait: Duration::from_millis(30), max_batch: 8, threads: 1 },
+    );
+    let handle = server.handle();
+    // 1 + 2^-30 is exactly representable in f64 but rounds to 1.0f32
+    let ts_a = 1.0f64;
+    let ts_b = 1.0f64 + 2f64.powi(-30);
+    assert_ne!(ts_a, ts_b);
+    assert_eq!(ts_a as f32, ts_b as f32);
+    let mut rng = Rng::new(2);
+    let x = rng.normal_vec_f32(l * 2);
+    let (ra, rb) = std::thread::scope(|s| {
+        let (h1, h2) = (handle.clone(), handle.clone());
+        let (xa, xb) = (x.clone(), x.clone());
+        let a = s.spawn(move || h1.infer_with_timescale(xa, ts_a).unwrap());
+        let b = s.spawn(move || h2.infer_with_timescale(xb, ts_b).unwrap());
+        (a.join().unwrap(), b.join().unwrap())
+    });
+    // under f64 coalescing keys the two requests can never share a batch
+    // (under the old f32 key they could have been grouped)
+    assert_eq!(ra.batched_with, 1, "distinct f64 timescales must not batch");
+    assert_eq!(rb.batched_with, 1, "distinct f64 timescales must not batch");
+    let mut ws = EngineWorkspace::new();
+    for (resp, ts) in [(&ra, ts_a), (&rb, ts_b)] {
+        let want = direct.prefill(
+            Batch::single(&x, l, 2),
+            &ForwardOptions::new().with_timescale(ts),
+            &mut ws,
+        );
+        prop::close_slice_f32(&want, &resp.logits, 1e-4).unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// native checkpoint round trip (acceptance criterion)
+// ---------------------------------------------------------------------------
+
+/// save → load → identical logits: the parameters surviving one f32 disk
+/// round trip already, a second save/load must be exact; and the first
+/// import must agree with the source model to f32-rounding tolerance.
+#[test]
+fn checkpoint_roundtrip_identical_logits() {
+    let dir = std::env::temp_dir().join(format!("s5_seq_api_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path_a = dir.join("ckpt_a.npz");
+    let path_b = dir.join("ckpt_b.npz");
+
+    let original = s5_model(123, 2);
+    original.to_param_store().save(&path_a).unwrap();
+    let loaded = S5Model::from_param_store(&NpzStore::load(&path_a).unwrap()).unwrap();
+    loaded.to_param_store().save(&path_b).unwrap();
+    let reloaded = S5Model::from_param_store(&NpzStore::load(&path_b).unwrap()).unwrap();
+
+    let l = 40;
+    let mut rng = Rng::new(7);
+    let u = rng.normal_vec_f32(l * 2);
+    let opts = ForwardOptions::new();
+    let mut ws = EngineWorkspace::new();
+    let y_orig = original.prefill(Batch::single(&u, l, 2), &opts, &mut ws);
+    let y_loaded = loaded.prefill(Batch::single(&u, l, 2), &opts, &mut ws);
+    let y_reloaded = reloaded.prefill(Batch::single(&u, l, 2), &opts, &mut ws);
+
+    // once on disk, logits are pinned exactly
+    assert_eq!(y_loaded, y_reloaded, "save → load must be lossless");
+    // and the first export only rounds f64-initialized params to f32
+    prop::close_slice_f32(&y_orig, &y_loaded, 1e-4).unwrap();
+
+    // the model shape round-trips too
+    assert_eq!(loaded.spec(), original.spec());
+    assert_eq!(loaded.param_count(), original.param_count());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A bidirectional model round-trips its second C matrix.
+#[test]
+fn checkpoint_roundtrip_bidirectional() {
+    let dir = std::env::temp_dir().join(format!("s5_seq_api_bidir_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bidir.npz");
+    let cfg = S5Config { h: 6, p: 8, j: 1, bidir: true, ..Default::default() };
+    let original = S5Model::init(3, 4, 2, &cfg, &mut Rng::new(9));
+    original.to_param_store().save(&path).unwrap();
+    let loaded = S5Model::from_param_store(&NpzStore::load(&path).unwrap()).unwrap();
+    assert!(!loaded.streamable());
+    let l = 20;
+    let mut rng = Rng::new(10);
+    let u = rng.normal_vec_f32(l * 3);
+    let opts = ForwardOptions::new();
+    let mut ws = EngineWorkspace::new();
+    let y0 = original.prefill(Batch::single(&u, l, 3), &opts, &mut ws);
+    let y1 = loaded.prefill(Batch::single(&u, l, 3), &opts, &mut ws);
+    prop::close_slice_f32(&y0, &y1, 1e-4).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The checkpoint loader rejects malformed stores with pointed errors.
+#[test]
+fn checkpoint_import_rejects_bad_stores() {
+    let empty = NpzStore::new();
+    let err = S5Model::from_param_store(&empty).unwrap_err();
+    assert!(format!("{err:#}").contains("encoder"), "{err:#}");
+
+    let mut truncated = s5_model(5, 1).to_param_store();
+    // corrupt one tensor's shape
+    truncated.insert_f32("params.layers.0.d", &[3], vec![0.0; 3]);
+    let err = S5Model::from_param_store(&truncated).unwrap_err();
+    assert!(format!("{err:#}").contains("layers.0"), "{err:#}");
+}
