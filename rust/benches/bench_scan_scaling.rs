@@ -1,6 +1,6 @@
 //! Proposition 1 / §2.2 / Appendix H: parallel-scan scaling measurements.
 //!
-//! Four claims under measurement:
+//! Five claims under measurement:
 //!  1. the multi-threaded Blelloch scan speeds up with cores at long L
 //!     (work-efficient: total ops stay O(P·L));
 //!  2. the dense-A scan is catastrophically more expensive than the
@@ -8,7 +8,13 @@
 //!  3. scan cost grows linearly in L (vs the FFT path's L·log L);
 //!  4. the batched engine beats a loop of single-sequence forwards
 //!     (sequences/sec vs batch size × threads) — the dynamic-batching
-//!     payoff the native server builds on.
+//!     payoff the native server builds on;
+//!  5. the planar (SoA) `ScanBackend` kernels beat the interleaved `C32`
+//!     oracle at the engine's serving shape (L=16384, P=256) — the SIMD
+//!     layout win, sequential and parallel.
+//!
+//! Results are also snapshotted to `BENCH_scan.json` (override the path
+//! with `S5_BENCH_JSON`) so the perf trajectory is recorded run-over-run.
 //!
 //! Run: `cargo bench --bench bench_scan_scaling`
 
@@ -20,7 +26,9 @@ use s5::rng::Rng;
 use s5::ssm::engine::EngineWorkspace;
 use s5::ssm::s5::{S5Config, S5Model};
 use s5::ssm::scan;
-use s5::ssm::scan::backend_for_threads;
+use s5::ssm::scan::{
+    backend_for_threads, ParallelBackend, ScanBackend, ScanScratch, SequentialBackend,
+};
 use s5::util::Table;
 
 fn rand_c32(rng: &mut Rng, n: usize, scale: f32) -> Vec<C32> {
@@ -34,6 +42,8 @@ fn main() {
     let l = if quick { 8192 } else { 65536 };
     let p = 64;
     let max_threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(8);
+    // snapshot rows: (name, mean seconds, million elements/second)
+    let mut snap: Vec<(String, f64, f64)> = Vec::new();
 
     println!("# Parallel scan scaling (L={l}, P={p})\n");
     let mut rng = Rng::new(1);
@@ -46,6 +56,7 @@ fn main() {
         std::hint::black_box(scan::scan_sequential_ti(&a, &b, l, p));
     });
     t.row(&["1 (sequential)".into(), fmt_secs(base.mean), "1.00x".into()]);
+    snap.push(("thread_scaling/seq".into(), base.mean, (l * p) as f64 / base.mean / 1e6));
     let mut threads = 2;
     while threads <= max_threads {
         let st = measure(&format!("par{threads}"), || {
@@ -56,6 +67,11 @@ fn main() {
             fmt_secs(st.mean),
             format!("{:.2}x", base.mean / st.mean),
         ]);
+        snap.push((
+            format!("thread_scaling/par{threads}"),
+            st.mean,
+            (l * p) as f64 / st.mean / 1e6,
+        ));
         threads *= 2;
     }
     println!("## thread scaling (time-invariant diagonal scan)\n{}", t.render());
@@ -113,6 +129,90 @@ fn main() {
             inter.mean / planar.mean,
             t.render()
         );
+        let meps = (l * p) as f64 / 1e6;
+        snap.push(("layout_expt/interleaved".into(), inter.mean, meps / inter.mean));
+        snap.push(("layout_expt/planar".into(), planar.mean, meps / planar.mean));
+    }
+
+    // 5. §Tentpole: the ScanBackend kernels themselves — planar (SoA) vs
+    // the interleaved C32 oracle at the engine's serving shape, sequential
+    // and chunked-parallel. The per-iteration copy_from_slice reset is
+    // identical on both sides, so the reported speedup is a lower bound on
+    // the kernel-only win.
+    {
+        let (lt, pt) = (16384usize, 256usize);
+        let a = rand_c32(&mut rng, pt, 0.5);
+        let b = rand_c32(&mut rng, lt * pt, 1.0);
+        let ar: Vec<f32> = a.iter().map(|z| z.re).collect();
+        let ai: Vec<f32> = a.iter().map(|z| z.im).collect();
+        let br: Vec<f32> = b.iter().map(|z| z.re).collect();
+        let bi: Vec<f32> = b.iter().map(|z| z.im).collect();
+        let tthr = max_threads.clamp(2, 8);
+        let elems = (lt * pt) as f64;
+        let mut scratch = ScanScratch::new();
+
+        let mut buf = b.clone();
+        let seq_inter = measure("backend seq interleaved", || {
+            buf.copy_from_slice(&b);
+            SequentialBackend.scan_ti(&a, &mut buf, lt, pt, &mut scratch);
+            std::hint::black_box(&buf);
+        });
+        let (mut xr, mut xi) = (br.clone(), bi.clone());
+        let seq_planar = measure("backend seq planar", || {
+            xr.copy_from_slice(&br);
+            xi.copy_from_slice(&bi);
+            SequentialBackend.scan_ti_planar(&ar, &ai, &mut xr, &mut xi, lt, pt, &mut scratch);
+            std::hint::black_box((&xr, &xi));
+        });
+        let par = ParallelBackend::new(tthr);
+        let par_inter = measure(&format!("backend par{tthr} interleaved"), || {
+            buf.copy_from_slice(&b);
+            par.scan_ti(&a, &mut buf, lt, pt, &mut scratch);
+            std::hint::black_box(&buf);
+        });
+        let par_planar = measure(&format!("backend par{tthr} planar"), || {
+            xr.copy_from_slice(&br);
+            xi.copy_from_slice(&bi);
+            par.scan_ti_planar(&ar, &ai, &mut xr, &mut xi, lt, pt, &mut scratch);
+            std::hint::black_box((&xr, &xi));
+        });
+
+        let mut t = Table::new(&["backend", "layout", "time", "elements/s"]);
+        for (name, layout, st) in [
+            ("sequential", "interleaved C32", &seq_inter),
+            ("sequential", "planar re/im (SoA)", &seq_planar),
+            ("parallel", "interleaved C32", &par_inter),
+            ("parallel", "planar re/im (SoA)", &par_planar),
+        ] {
+            t.row(&[
+                name.into(),
+                layout.into(),
+                fmt_secs(st.mean),
+                format!("{:.0}M", elems / st.mean / 1e6),
+            ]);
+        }
+        println!(
+            "## ScanBackend planar vs interleaved (TI, L={lt}, P={pt}, T={tthr})\n{}",
+            t.render()
+        );
+        println!(
+            "planar speedup: sequential {:.2}x, parallel {:.2}x (acceptance: parallel > 1x)\n",
+            seq_inter.mean / seq_planar.mean,
+            par_inter.mean / par_planar.mean
+        );
+        let m = elems / 1e6;
+        snap.push(("backend_ti/seq_interleaved".into(), seq_inter.mean, m / seq_inter.mean));
+        snap.push(("backend_ti/seq_planar".into(), seq_planar.mean, m / seq_planar.mean));
+        snap.push((
+            format!("backend_ti/par{tthr}_interleaved"),
+            par_inter.mean,
+            elems / par_inter.mean / 1e6,
+        ));
+        snap.push((
+            format!("backend_ti/par{tthr}_planar"),
+            par_planar.mean,
+            elems / par_planar.mean / 1e6,
+        ));
     }
 
     // 3. linear growth in L
@@ -188,5 +288,29 @@ fn main() {
             t.render()
         );
         println!("expected shape: batched speedup > 1x from B=4 up at ≥2 threads");
+    }
+
+    write_snapshot(&snap, quick, max_threads);
+}
+
+/// Write the scan-bench snapshot as JSON (hand-rolled — the offline build
+/// has no serde) so the perf trajectory is recorded run-over-run. Path:
+/// `BENCH_scan.json` in the working directory, or `S5_BENCH_JSON`.
+fn write_snapshot(rows: &[(String, f64, f64)], quick: bool, max_threads: usize) {
+    let path = std::env::var("S5_BENCH_JSON").unwrap_or_else(|_| "BENCH_scan.json".into());
+    let mut out = String::from("{\n  \"bench\": \"scan_scaling\",\n");
+    out.push_str(&format!(
+        "  \"quick\": {quick},\n  \"max_threads\": {max_threads},\n  \"results\": [\n"
+    ));
+    for (i, (name, mean, meps)) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"mean_s\": {mean:.6e}, \"melem_per_s\": {meps:.3}}}{comma}\n"
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(&path, &out) {
+        Ok(()) => println!("\nwrote scan bench snapshot to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

@@ -61,6 +61,34 @@
 //! where `opts = ForwardOptions::new().with_threads(n).with_timescale(ts)`
 //! replaces every positional `(timescale, threads)` tail.
 //!
+//! ## Scan strategy selection
+//!
+//! The inner scan — the hot loop of every native request — runs in one of
+//! two memory layouts (see [`ssm::scan::ScanLayout`]):
+//!
+//! * **Planar (the default).** The complex drive/state lives as separate
+//!   re/im `f32` planes (struct-of-arrays, matching the L1 Pallas
+//!   kernel). With the real↔imag data dependence split across planes,
+//!   LLVM autovectorizes the P-lane recurrence into SIMD mul/fma — this
+//!   is the layout every resolver hands out
+//!   ([`ssm::scan::backend_for_threads`],
+//!   [`ssm::api::ForwardOptions::with_threads`], the server's `--threads`
+//!   knob).
+//! * **Interleaved (the reference oracle).** The original `[C32]` path,
+//!   selected via [`ssm::scan::backend_for`] /
+//!   [`ssm::api::ForwardOptions::with_scan`] with
+//!   [`ssm::scan::ScanLayout::Interleaved`]. Kept for A/B validation:
+//!   both layouts execute identical floating-point operations in
+//!   identical order, so planar ≡ interleaved **bit-for-bit** (property
+//!   tests pin this for sequential/parallel × TI/TV, batched forwards and
+//!   streaming steps).
+//!
+//! Orthogonally, the *strategy* is sequential (≤ 1 thread; deterministic
+//! reference, streaming ≡ batched exactly) or chunked-parallel (Blelloch
+//! three-phase within a sequence, sequence-sharding across a batch, with
+//! pooled chunk summaries in [`ssm::scan::ScanScratch`] so steady-state
+//! serving allocates nothing).
+//!
 //! ## Module map
 //!
 //! | module | role |

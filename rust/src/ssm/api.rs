@@ -30,7 +30,9 @@ use std::any::Any;
 use std::sync::{Arc, Mutex};
 
 use crate::ssm::engine::EngineWorkspace;
-use crate::ssm::scan::{backend_for_threads, ScanBackend, SequentialBackend};
+use crate::ssm::scan::{
+    backend_for, backend_for_threads, ScanBackend, ScanLayout, SequentialBackend,
+};
 
 // ---------------------------------------------------------------------------
 // Typed batch view
@@ -145,8 +147,18 @@ impl ForwardOptions {
 
     /// Pick a scan strategy for a thread budget (0 = auto-detect, ≤ 1 =
     /// sequential, else parallel) — mirrors the legacy `threads` knob.
+    /// The resolved backend drives the default **planar** (SIMD-friendly)
+    /// layout; use [`ForwardOptions::with_scan`] to pin the interleaved
+    /// reference oracle instead.
     pub fn with_threads(mut self, threads: usize) -> ForwardOptions {
         self.backend = Arc::from(backend_for_threads(threads));
+        self
+    }
+
+    /// Pick a scan strategy with an explicit buffer layout — the A/B knob
+    /// for validating the planar default against the interleaved oracle.
+    pub fn with_scan(mut self, threads: usize, layout: ScanLayout) -> ForwardOptions {
+        self.backend = Arc::from(backend_for(threads, layout));
         self
     }
 
@@ -159,6 +171,12 @@ impl ForwardOptions {
     /// The scan strategy this forward will run with.
     pub fn scan_backend(&self) -> &dyn ScanBackend {
         self.backend.as_ref()
+    }
+
+    /// The buffer layout the forward will drive ([`ScanLayout::Planar`]
+    /// unless an interleaved oracle backend was installed).
+    pub fn scan_layout(&self) -> ScanLayout {
+        self.backend.layout()
     }
 }
 
@@ -414,10 +432,15 @@ mod tests {
         let o = ForwardOptions::new();
         assert_eq!(o.timescale, 1.0);
         assert_eq!(o.scan_backend().threads(), 1);
+        assert_eq!(o.scan_layout(), ScanLayout::Planar);
         let o = o.with_threads(3).with_timescale(0.5);
         assert_eq!(o.scan_backend().threads(), 3);
+        assert_eq!(o.scan_layout(), ScanLayout::Planar, "planar is the default strategy");
         assert_eq!(o.timescale, 0.5);
         assert!(ForwardOptions::new().with_threads(0).scan_backend().threads() >= 1);
+        let o = ForwardOptions::new().with_scan(2, ScanLayout::Interleaved);
+        assert_eq!(o.scan_layout(), ScanLayout::Interleaved);
+        assert_eq!(o.scan_backend().threads(), 2);
     }
 
     #[test]

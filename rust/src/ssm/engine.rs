@@ -7,16 +7,18 @@
 //! pluggable scan strategy through every layer of the native stack:
 //!
 //! * [`EngineWorkspace`] — owns every per-forward scratch buffer
-//!   (activations, pre-norm, SSM drive/states, time-varying multipliers).
-//!   Buffers grow to the high-water mark of the shapes seen and are then
-//!   reused, so steady-state inference performs **zero O(B·L··) heap
-//!   allocation**; the only transient allocations left are the
-//!   O(threads·P) chunk summaries inside the parallel scan (see ROADMAP
-//!   open items for pooling those too).
+//!   (activations, pre-norm, SSM drive/states in both scan layouts,
+//!   time-varying multipliers, and the pooled O(threads·P) chunk
+//!   summaries of the parallel scan via
+//!   [`ScanScratch`](crate::ssm::scan::ScanScratch)). Buffers grow to the
+//!   high-water mark of the shapes seen and are then reused, so
+//!   steady-state inference performs **zero heap allocation** — including
+//!   inside the parallel scan (previously an open ROADMAP item).
 //! * A per-layer **time-invariant discretization cache** (`TiDisc`,
 //!   keyed by layer slot and validated against (Λ, log Δ, timescale)) so
 //!   repeated same-timescale batches skip the exp-heavy re-discretization
-//!   entirely.
+//!   entirely — in both interleaved and planar forms, plus the base-Δt
+//!   vector the irregular-sampling (TV) path previously rebuilt per batch.
 //!
 //! The object-safe "packed batch in, rows out" interface the server and
 //! benches drive models through is
@@ -32,6 +34,7 @@
 
 use crate::num::{C32, C64};
 use crate::ssm::discretize::{discretize_diag, Method};
+use crate::ssm::scan::ScanScratch;
 
 /// Resolve a thread-count knob: `0` auto-detects the machine's parallelism
 /// (`std::thread::available_parallelism`), any other value is taken as-is.
@@ -85,6 +88,81 @@ pub(crate) fn par_zip<T, U, F>(
             s.spawn(move || {
                 for (j, (ss_, ds_)) in sc.chunks(ss).zip(dc.chunks_mut(ds)).enumerate() {
                     f(ci * per + j, ss_, ds_);
+                }
+            });
+        }
+    });
+}
+
+/// Like [`par_zip`] but with four destination buffers per item — the
+/// planar time-varying path writes the multiplier re/im planes and scales
+/// the drive re/im planes in one pass over the Δt rows.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn par_zip4<T, U1, U2, U3, U4, F>(
+    threads: usize,
+    src: &[T],
+    ss: usize,
+    d1: &mut [U1],
+    s1: usize,
+    d2: &mut [U2],
+    s2: usize,
+    d3: &mut [U3],
+    s3: usize,
+    d4: &mut [U4],
+    s4: usize,
+    n: usize,
+    f: F,
+) where
+    T: Sync,
+    U1: Send,
+    U2: Send,
+    U3: Send,
+    U4: Send,
+    F: Fn(usize, &[T], &mut [U1], &mut [U2], &mut [U3], &mut [U4]) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let src = &src[..n * ss];
+    let d1 = &mut d1[..n * s1];
+    let d2 = &mut d2[..n * s2];
+    let d3 = &mut d3[..n * s3];
+    let d4 = &mut d4[..n * s4];
+    let shards = threads.max(1).min(n);
+    if shards <= 1 {
+        for (i, ((((sc, c1), c2), c3), c4)) in src
+            .chunks(ss)
+            .zip(d1.chunks_mut(s1))
+            .zip(d2.chunks_mut(s2))
+            .zip(d3.chunks_mut(s3))
+            .zip(d4.chunks_mut(s4))
+            .enumerate()
+        {
+            f(i, sc, c1, c2, c3, c4);
+        }
+        return;
+    }
+    let per = n.div_ceil(shards);
+    std::thread::scope(|s| {
+        for (ci, ((((sc, c1), c2), c3), c4)) in src
+            .chunks(per * ss)
+            .zip(d1.chunks_mut(per * s1))
+            .zip(d2.chunks_mut(per * s2))
+            .zip(d3.chunks_mut(per * s3))
+            .zip(d4.chunks_mut(per * s4))
+            .enumerate()
+        {
+            let f = &f;
+            s.spawn(move || {
+                for (j, ((((ss_, e1), e2), e3), e4)) in sc
+                    .chunks(ss)
+                    .zip(c1.chunks_mut(s1))
+                    .zip(c2.chunks_mut(s2))
+                    .zip(c3.chunks_mut(s3))
+                    .zip(c4.chunks_mut(s4))
+                    .enumerate()
+                {
+                    f(ci * per + j, ss_, e1, e2, e3, e4);
                 }
             });
         }
@@ -159,31 +237,74 @@ pub(crate) fn grow<T: Clone + Default>(buf: &mut Vec<T>, n: usize) {
     }
 }
 
+/// Scan-facing scratch of the engine: drive/state buffers in both layouts
+/// plus the pooled chunk summaries of the parallel scan. Grouped so the S5
+/// forward path can borrow all of it with one `&mut` while the activation
+/// buffers (`x`/`v`/`y`) of the enclosing [`EngineWorkspace`] stay
+/// independently borrowable.
+///
+/// Shapes (`B` = batch, `L` = sequence length, `P2` = conjugate-symmetric
+/// state size); only the family matching the backend's
+/// [`ScanLayout`](crate::ssm::scan::ScanLayout) is ever grown:
+///
+/// | field                    | shape      | role                          |
+/// |--------------------------|------------|-------------------------------|
+/// | `bu`                     | (B, L, P2) | interleaved drive → states    |
+/// | `bu_rev`                 | (B, L, P2) | interleaved reversed drive    |
+/// | `a_tv`                   | (B, L, P2) | interleaved TV multipliers    |
+/// | `bu_re`/`bu_im`          | (B, L, P2) | planar drive → states         |
+/// | `bu_rev_re`/`bu_rev_im`  | (B, L, P2) | planar reversed drive         |
+/// | `a_tv_re`/`a_tv_im`      | (B, L, P2) | planar TV multipliers         |
+/// | `scan`                   | O(T·P2)    | pooled chunk summaries        |
+#[derive(Default)]
+pub struct SsmBuffers {
+    pub(crate) bu: Vec<C32>,
+    pub(crate) bu_rev: Vec<C32>,
+    pub(crate) a_tv: Vec<C32>,
+    pub(crate) bu_re: Vec<f32>,
+    pub(crate) bu_im: Vec<f32>,
+    pub(crate) bu_rev_re: Vec<f32>,
+    pub(crate) bu_rev_im: Vec<f32>,
+    pub(crate) a_tv_re: Vec<f32>,
+    pub(crate) a_tv_im: Vec<f32>,
+    pub(crate) scan: ScanScratch,
+}
+
+impl SsmBuffers {
+    fn capacity_bytes(&self) -> usize {
+        (self.bu.capacity() + self.bu_rev.capacity() + self.a_tv.capacity()) * 8
+            + (self.bu_re.capacity()
+                + self.bu_im.capacity()
+                + self.bu_rev_re.capacity()
+                + self.bu_rev_im.capacity()
+                + self.a_tv_re.capacity()
+                + self.a_tv_im.capacity())
+                * 4
+            + self.scan.capacity_bytes()
+    }
+}
+
 /// All per-forward scratch buffers of the native engine, reused across
 /// calls. One workspace belongs to one driving thread (the server worker,
 /// a bench loop); the parallel *inside* a forward comes from the scan
 /// backend, not from sharing workspaces.
 ///
 /// Buffer shapes (row-major, `B` = batch, `L` = sequence length, `H` =
-/// model width, `P2` = conjugate-symmetric state size):
+/// model width):
 ///
 /// | field    | shape      | role                                   |
 /// |----------|------------|----------------------------------------|
 /// | `x`      | (B, L, H)  | running activations (layer in/out)     |
 /// | `v`      | (B, L, H)  | pre-norm output / gate scratch         |
 /// | `y`      | (B, L, H)  | SSM output before activation           |
-/// | `bu`     | (B, L, P2) | scan drive, overwritten with states    |
-/// | `bu_rev` | (B, L, P2) | reversed drive for bidirectional layers|
-/// | `a_tv`   | (B, L, P2) | time-varying multipliers (§6.3 path)   |
+/// | `ssm`    | see [`SsmBuffers`] | scan drives + pooled summaries |
 /// | `disc`   | per layer  | cached TI discretization (`TiDisc`)    |
 #[derive(Default)]
 pub struct EngineWorkspace {
     pub(crate) x: Vec<f32>,
     pub(crate) v: Vec<f32>,
     pub(crate) y: Vec<f32>,
-    pub(crate) bu: Vec<C32>,
-    pub(crate) bu_rev: Vec<C32>,
-    pub(crate) a_tv: Vec<C32>,
+    pub(crate) ssm: SsmBuffers,
     pub(crate) disc: Vec<Vec<TiDisc>>,
 }
 
@@ -193,12 +314,14 @@ impl EngineWorkspace {
     }
 
     /// Current heap footprint of the owned buffers, in bytes (capacity,
-    /// not length — what the workspace actually holds onto).
+    /// not length — what the workspace actually holds onto). Includes the
+    /// pooled parallel-scan chunk summaries, so the steady-state
+    /// zero-allocation tests cover them too.
     pub fn capacity_bytes(&self) -> usize {
         self.x.capacity() * 4
             + self.v.capacity() * 4
             + self.y.capacity() * 4
-            + (self.bu.capacity() + self.bu_rev.capacity() + self.a_tv.capacity()) * 8
+            + self.ssm.capacity_bytes()
             + self
                 .disc
                 .iter()
@@ -223,13 +346,25 @@ pub(crate) struct TiDisc {
     timescale: f64,
     lambda: Vec<C64>,
     log_dt: Vec<f32>,
-    /// Λ̄ as C32 (scan multipliers).
+    /// Λ̄ as C32 (interleaved scan multipliers).
     pub(crate) a32: Vec<C32>,
-    /// Input scaling as C32 (forward drive).
+    /// Input scaling as C32 (interleaved forward drive).
     pub(crate) f32s: Vec<C32>,
     /// Input scaling as C64 (reversed drive of bidirectional layers,
     /// which folds the scaling in before the C32 conversion).
     pub(crate) f64s: Vec<C64>,
+    /// Λ̄ as planar re/im planes (planar scan multipliers; identical
+    /// values to `a32`, transposed once at discretization time so the hot
+    /// path never pays an interleave↔planar transpose).
+    pub(crate) a_re: Vec<f32>,
+    pub(crate) a_im: Vec<f32>,
+    /// Input scaling as planar re/im planes.
+    pub(crate) f_re: Vec<f32>,
+    pub(crate) f_im: Vec<f32>,
+    /// Base per-state Δt (exp(log Δ)·timescale), cached so the
+    /// time-varying (irregular-Δt) path stops rebuilding it per batch —
+    /// it shares this entry's (Λ, log Δ, timescale) value validation.
+    pub(crate) base_dt: Vec<f64>,
 }
 
 /// Max cached discretizations per layer slot (distinct timescales in
@@ -248,6 +383,12 @@ impl TiDisc {
             + self.log_dt.capacity() * 4
             + (self.a32.capacity() + self.f32s.capacity()) * 8
             + self.f64s.capacity() * 16
+            + self.base_dt.capacity() * 8
+            + (self.a_re.capacity()
+                + self.a_im.capacity()
+                + self.f_re.capacity()
+                + self.f_im.capacity())
+                * 4
     }
 }
 
@@ -274,13 +415,20 @@ pub(crate) fn ti_disc<'a>(
     }
     let dt: Vec<f64> = log_dt.iter().map(|&ld| (ld as f64).exp() * timescale).collect();
     let (lam_bar, scale) = discretize_diag(lambda, &dt, Method::Zoh);
+    let a32: Vec<C32> = lam_bar.iter().map(|z| z.to_c32()).collect();
+    let f32s: Vec<C32> = scale.iter().map(|z| z.to_c32()).collect();
     let fresh = TiDisc {
         timescale,
         lambda: lambda.to_vec(),
         log_dt: log_dt.to_vec(),
-        a32: lam_bar.iter().map(|z| z.to_c32()).collect(),
-        f32s: scale.iter().map(|z| z.to_c32()).collect(),
+        a_re: a32.iter().map(|z| z.re).collect(),
+        a_im: a32.iter().map(|z| z.im).collect(),
+        f_re: f32s.iter().map(|z| z.re).collect(),
+        f_im: f32s.iter().map(|z| z.im).collect(),
+        a32,
+        f32s,
         f64s: scale,
+        base_dt: dt,
     };
     entries.insert(0, fresh);
     entries.truncate(TI_DISC_SLOT_CAP);
@@ -348,6 +496,37 @@ mod tests {
     }
 
     #[test]
+    fn par_zip4_matches_serial() {
+        for &threads in &[1usize, 3] {
+            let n = 7;
+            let src: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let mut d1 = vec![0.0f32; n];
+            let mut d2 = vec![0.0f32; n];
+            let mut d3 = vec![0.0f32; 2 * n];
+            let mut d4 = vec![0.0f32; 2 * n];
+            par_zip4(
+                threads, &src, 1, &mut d1, 1, &mut d2, 1, &mut d3, 2, &mut d4, 2, n,
+                |i, s, a, b, c, d| {
+                    a[0] = s[0] * 2.0;
+                    b[0] = s[0] + 1.0;
+                    c[0] = i as f32;
+                    c[1] = s[0];
+                    d[0] = -s[0];
+                    d[1] = i as f32 * 10.0;
+                },
+            );
+            for i in 0..n {
+                assert_eq!(d1[i], 2.0 * i as f32, "t={threads}");
+                assert_eq!(d2[i], i as f32 + 1.0);
+                assert_eq!(d3[2 * i], i as f32);
+                assert_eq!(d3[2 * i + 1], i as f32);
+                assert_eq!(d4[2 * i], -(i as f32));
+                assert_eq!(d4[2 * i + 1], i as f32 * 10.0);
+            }
+        }
+    }
+
+    #[test]
     fn workspace_starts_empty_and_reports_bytes() {
         let mut ws = EngineWorkspace::new();
         assert_eq!(ws.capacity_bytes(), 0);
@@ -379,6 +558,32 @@ mod tests {
         // and flipping back reproduces the original values
         let back = ti_disc(&mut cache, 0, &lambda, &log_dt, 1.0);
         assert_eq!(back.a32, a_first);
+    }
+
+    /// The planar planes of a cached discretization are the exact re/im
+    /// transpose of the interleaved form (same `to_c32` rounding), and the
+    /// base-Δt vector the TV path consumes is cached with the entry.
+    #[test]
+    fn ti_disc_planar_planes_match_interleaved_and_cache_base_dt() {
+        let lambda = vec![C64::new(-0.5, 1.0), C64::new(-0.1, -2.0)];
+        let log_dt = vec![-3.0f32, -2.0];
+        let mut cache = Vec::new();
+        let d = ti_disc(&mut cache, 0, &lambda, &log_dt, 1.5);
+        for (j, z) in d.a32.iter().enumerate() {
+            assert_eq!(d.a_re[j], z.re);
+            assert_eq!(d.a_im[j], z.im);
+        }
+        for (j, z) in d.f32s.iter().enumerate() {
+            assert_eq!(d.f_re[j], z.re);
+            assert_eq!(d.f_im[j], z.im);
+        }
+        for (j, &ld) in log_dt.iter().enumerate() {
+            assert_eq!(d.base_dt[j], (ld as f64).exp() * 1.5);
+        }
+        // the TV path's repeated-batch recompute is gone: a hit serves the
+        // same base_dt allocation
+        let ptr = cache[0][0].base_dt.as_ptr();
+        assert_eq!(ti_disc(&mut cache, 0, &lambda, &log_dt, 1.5).base_dt.as_ptr(), ptr);
     }
 
     /// Interleaved timescales (the zero-shot-resampling serving mix) must

@@ -18,7 +18,11 @@
 //! The batched native inference engine ([`engine`]) plus the pluggable
 //! scan strategies ([`scan::ScanBackend`]) thread a (B, L, H) batch
 //! dimension through the whole stack — the CPU-side counterpart of the
-//! `jax.vmap`-batched reference. The unified inference surface over it is
+//! `jax.vmap`-batched reference. The scan hot loop runs in the planar
+//! (SoA) layout by default with the interleaved `C32` kernels retained as
+//! the bit-for-bit reference oracle (see [`scan::ScanLayout`] and the
+//! crate-level "Scan strategy selection" docs). The unified inference
+//! surface over it is
 //! [`api`]: the [`api::SequenceModel`] trait (typed [`api::Batch`] prefill
 //! + streaming steps) implemented by S5 and the RNN baselines alike, and
 //! the [`api::Session`] streaming API the server pools per connection.

@@ -9,19 +9,23 @@
 //! deployment of the inference server would hold per session).
 //!
 //! Correctness is pinned by equivalence tests against the offline scan —
-//! and structurally: the per-step recurrence goes through the same
-//! [`ScanBackend::scan_step`] kernel
-//! ([`crate::ssm::scan::scan_step_inplace`]) that the offline sequential
-//! scans are built on, and the projection accumulates in f64 exactly like
-//! the offline `project_seq`, so streaming generation reproduces the
-//! sequential offline scan **bit-for-bit**.
+//! and structurally: the per-step recurrence goes through the same planar
+//! [`ScanBackend::scan_step_planar`] kernel
+//! ([`crate::ssm::scan::scan_step_planar_inplace`]) that the offline
+//! planar sequential scans are built on (the layer state lives as
+//! struct-of-arrays re/im planes, matching the engine's default
+//! [`ScanLayout::Planar`](crate::ssm::scan::ScanLayout) hot path), and the
+//! projection accumulates in f64 exactly like the offline `project_seq`,
+//! so streaming generation reproduces the sequential offline scan
+//! **bit-for-bit** — in either layout, since the planar and interleaved
+//! kernels execute identical FP ops in identical order.
 //!
 //! The public streaming surface is [`crate::ssm::api::Session`] over the
 //! [`crate::ssm::api::SequenceModel`] trait; this module provides the
 //! S5-specific state it drives ([`LayerState`], [`S5StreamState`]). The
 //! old S5-only [`OnlineModel`] remains as a deprecated wrapper.
 
-use crate::num::{C32, C64};
+use crate::num::C64;
 use crate::ssm::discretize::{discretize_diag, discretize_one, Method};
 use crate::ssm::s5::{gelu, layer_norm_row, sigmoid, S5Layer, S5Model};
 use crate::ssm::scan::{ScanBackend, SequentialBackend};
@@ -30,16 +34,29 @@ use crate::ssm::scan::{ScanBackend, SequentialBackend};
 /// precomputed discretization (recomputed only if Δt changes) and the
 /// step's drive scratch (owned here so steady-state streaming allocates
 /// only the per-step output rows).
+///
+/// Everything complex is stored as **planar re/im `f32` planes** — the
+/// same struct-of-arrays layout the engine's default scan path uses — so
+/// the per-step recurrence runs through
+/// [`ScanBackend::scan_step_planar`] with no layout conversion.
 pub struct LayerState {
-    x: Vec<C32>,
-    lam_bar: Vec<C32>,
-    in_scale: Vec<C32>,
+    /// latent x (planar planes, length P2 each)
+    xr: Vec<f32>,
+    xi: Vec<f32>,
+    /// live discretization Λ̄ and input scaling (planar planes)
+    lam_re: Vec<f32>,
+    lam_im: Vec<f32>,
+    scale_re: Vec<f32>,
+    scale_im: Vec<f32>,
     /// default (regular-step) discretization cache, restored when a
     /// regular step follows irregular ones and on stream reset
-    lam_bar0: Vec<C32>,
-    in_scale0: Vec<C32>,
-    /// per-step drive b = f ∘ B̃u (P2 scratch)
-    drive: Vec<C32>,
+    lam_re0: Vec<f32>,
+    lam_im0: Vec<f32>,
+    scale_re0: Vec<f32>,
+    scale_im0: Vec<f32>,
+    /// per-step drive b = f ∘ B̃u (planar P2 scratch)
+    drive_re: Vec<f32>,
+    drive_im: Vec<f32>,
     /// Δt multiplier the live discretization was built for (None = regular)
     dt_scale: Option<f32>,
     /// timescale the live discretization was built for
@@ -57,15 +74,23 @@ impl LayerState {
             .map(|&ld| (ld as f64).exp() * timescale)
             .collect();
         let (lam_bar, scale) = discretize_diag(&layer.lambda, &dt, Method::Zoh);
-        let lam_bar: Vec<C32> = lam_bar.iter().map(|z| z.to_c32()).collect();
-        let in_scale: Vec<C32> = scale.iter().map(|z| z.to_c32()).collect();
+        let lam_re: Vec<f32> = lam_bar.iter().map(|z| z.to_c32().re).collect();
+        let lam_im: Vec<f32> = lam_bar.iter().map(|z| z.to_c32().im).collect();
+        let scale_re: Vec<f32> = scale.iter().map(|z| z.to_c32().re).collect();
+        let scale_im: Vec<f32> = scale.iter().map(|z| z.to_c32().im).collect();
         LayerState {
-            x: vec![C32::ZERO; layer.p2],
-            lam_bar0: lam_bar.clone(),
-            in_scale0: in_scale.clone(),
-            lam_bar,
-            in_scale,
-            drive: vec![C32::ZERO; layer.p2],
+            xr: vec![0.0; layer.p2],
+            xi: vec![0.0; layer.p2],
+            lam_re0: lam_re.clone(),
+            lam_im0: lam_im.clone(),
+            scale_re0: scale_re.clone(),
+            scale_im0: scale_im.clone(),
+            lam_re,
+            lam_im,
+            scale_re,
+            scale_im,
+            drive_re: vec![0.0; layer.p2],
+            drive_im: vec![0.0; layer.p2],
             dt_scale: None,
             cur_timescale: timescale,
             base_timescale: timescale,
@@ -82,8 +107,11 @@ impl LayerState {
         for (r, &lam) in layer.lambda.iter().enumerate() {
             let dt = (layer.log_dt[r] as f64).exp() * timescale * dt_k as f64;
             let (lb, sc) = discretize_one(lam, dt, Method::Zoh);
-            self.lam_bar[r] = lb.to_c32();
-            self.in_scale[r] = sc.to_c32();
+            let (lb, sc) = (lb.to_c32(), sc.to_c32());
+            self.lam_re[r] = lb.re;
+            self.lam_im[r] = lb.im;
+            self.scale_re[r] = sc.re;
+            self.scale_im[r] = sc.im;
         }
         self.dt_scale = Some(dt_k);
         self.cur_timescale = timescale;
@@ -103,16 +131,22 @@ impl LayerState {
                 .map(|&ld| (ld as f64).exp() * timescale)
                 .collect();
             let (lam_bar, scale) = discretize_diag(&layer.lambda, &dt, Method::Zoh);
-            for (dst, z) in self.lam_bar0.iter_mut().zip(&lam_bar) {
-                *dst = z.to_c32();
+            for (r, z) in lam_bar.iter().enumerate() {
+                let z = z.to_c32();
+                self.lam_re0[r] = z.re;
+                self.lam_im0[r] = z.im;
             }
-            for (dst, z) in self.in_scale0.iter_mut().zip(&scale) {
-                *dst = z.to_c32();
+            for (r, z) in scale.iter().enumerate() {
+                let z = z.to_c32();
+                self.scale_re0[r] = z.re;
+                self.scale_im0[r] = z.im;
             }
             self.base_timescale = timescale;
         }
-        self.lam_bar.copy_from_slice(&self.lam_bar0);
-        self.in_scale.copy_from_slice(&self.in_scale0);
+        self.lam_re.copy_from_slice(&self.lam_re0);
+        self.lam_im.copy_from_slice(&self.lam_im0);
+        self.scale_re.copy_from_slice(&self.scale_re0);
+        self.scale_im.copy_from_slice(&self.scale_im0);
         self.dt_scale = None;
         self.cur_timescale = timescale;
     }
@@ -120,9 +154,12 @@ impl LayerState {
     /// Reset to the start of a new sequence: zero the latent and restore
     /// the cached default discretization.
     pub fn reset(&mut self) {
-        self.x.iter_mut().for_each(|z| *z = C32::ZERO);
-        self.lam_bar.copy_from_slice(&self.lam_bar0);
-        self.in_scale.copy_from_slice(&self.in_scale0);
+        self.xr.iter_mut().for_each(|v| *v = 0.0);
+        self.xi.iter_mut().for_each(|v| *v = 0.0);
+        self.lam_re.copy_from_slice(&self.lam_re0);
+        self.lam_im.copy_from_slice(&self.lam_im0);
+        self.scale_re.copy_from_slice(&self.scale_re0);
+        self.scale_im.copy_from_slice(&self.scale_im0);
         self.dt_scale = None;
         self.cur_timescale = self.base_timescale;
     }
@@ -152,16 +189,27 @@ impl S5Layer {
             Some(dt) => state.rediscretize(self, timescale, dt),
             None => state.restore_default_dt(self, timescale),
         }
-        // x ← Λ̄∘x + f∘(B̃u), through the shared step kernel: build the
-        // drive b = f∘(B̃u) then advance with ScanBackend::scan_step
+        // x ← Λ̄∘x + f∘(B̃u), through the shared planar step kernel: build
+        // the drive b = f∘(B̃u) as planes then advance with
+        // ScanBackend::scan_step_planar (same op order as the interleaved
+        // `in_scale * bu`, so nothing drifts vs. the old layout)
         for r in 0..self.p2 {
             let mut bu = C64::ZERO;
             for c in 0..self.h {
                 bu += self.b_tilde[r * self.h + c].scale(u[c] as f64);
             }
-            state.drive[r] = state.in_scale[r] * bu.to_c32();
+            let b = bu.to_c32();
+            state.drive_re[r] = state.scale_re[r] * b.re - state.scale_im[r] * b.im;
+            state.drive_im[r] = state.scale_re[r] * b.im + state.scale_im[r] * b.re;
         }
-        SequentialBackend.scan_step(&state.lam_bar, &mut state.x, &state.drive);
+        SequentialBackend.scan_step_planar(
+            &state.lam_re,
+            &state.lam_im,
+            &mut state.xr,
+            &mut state.xi,
+            &state.drive_re,
+            &state.drive_im,
+        );
         // y = 2·Re(C̃x) + D∘u — f64 accumulation with the exact op order of
         // the offline `project_seq` + `feedthrough_seq`, so one online step
         // equals one row of the offline sequential scan bit-for-bit.
@@ -171,7 +219,7 @@ impl S5Layer {
             let mut acc = 0.0f64;
             for c in 0..self.p2 {
                 let cv = ct[r * self.p2 + c];
-                acc += cv.re * state.x[c].re as f64 - cv.im * state.x[c].im as f64;
+                acc += cv.re * state.xr[c] as f64 - cv.im * state.xi[c] as f64;
             }
             y[r] = 2.0 * acc as f32 + self.d[r] * u[r];
         }

@@ -347,10 +347,14 @@ impl SequenceModel for CruLike {
         assert_eq!(out.len(), batch.batch() * h);
         let threads = opts.scan_backend().threads();
         let d_in = self.gru.d_in;
-        let dts = vec![1.0f32; l];
+        // only the final gated row leaves this function: step a state
+        // through the shared kernel, writing each row over `oseq`, instead
+        // of materializing all L×H rows (and a Δt vector) per call
         par_zip(threads, batch.data(), l * d_in, out, h, batch.batch(), |_, xseq, oseq| {
-            let got = self.run(xseq, &dts, l);
-            oseq.copy_from_slice(&got[(l - 1) * h..]);
+            let mut st = CruStreamState::new(h);
+            for k in 0..l {
+                self.step(&mut st, &xseq[k * d_in..(k + 1) * d_in], 1.0, oseq);
+            }
         });
     }
 

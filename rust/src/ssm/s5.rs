@@ -16,10 +16,15 @@
 //! The hot entry points take packed row-major (B, L, H) batches, a
 //! [`ScanBackend`] strategy object and an [`EngineWorkspace`] that owns all
 //! large scratch ([`S5Model::forward_batch_into`], [`S5Layer::apply_batch`],
-//! [`S5Layer::apply_ssm_batch`]). Per-sequence math is factored into
-//! `*_seq` helpers shared by every path, so a batch of B is elementwise
-//! identical to B independent forwards (up to the scan strategy's
-//! documented 1e-4 chunk-combine tolerance). The original single-sequence
+//! [`S5Layer::apply_ssm_batch`]). The SSM stage dispatches on the
+//! backend's [`ScanLayout`]: the default **planar** path materializes the
+//! drive as separate re/im `f32` planes end-to-end (drive → scale → scan →
+//! projection, no transpose anywhere), the interleaved `[C32]` path is
+//! kept as the reference oracle; both run identical FP ops in identical
+//! order. Per-sequence math is factored into `*_seq` helpers shared by
+//! every path, so a batch of B is elementwise identical to B independent
+//! forwards (up to the scan strategy's documented 1e-4 chunk-combine
+//! tolerance). The original single-sequence
 //! signatures ([`S5Layer::apply`], [`S5Layer::apply_ssm`],
 //! [`S5Model::forward`]) remain as deprecated batch-of-1 wrappers that
 //! allocate a private workspace; the typed entry point is the
@@ -31,10 +36,12 @@ use crate::num::{C32, C64};
 use crate::rng::Rng;
 use crate::ssm::api::{Batch, ForwardOptions, ModelSpec, SequenceModel, SessionState};
 use crate::ssm::discretize::{discretize_one, Method};
-use crate::ssm::engine::{grow, par_zip, par_zip2, ti_disc, EngineWorkspace, TiDisc};
+use crate::ssm::engine::{
+    grow, par_zip, par_zip2, par_zip4, ti_disc, EngineWorkspace, SsmBuffers, TiDisc,
+};
 use crate::ssm::hippo;
 use crate::ssm::online::S5StreamState;
-use crate::ssm::scan::{ParallelBackend, ScanBackend, SequentialBackend};
+use crate::ssm::scan::{ParallelBackend, ScanBackend, ScanLayout, SequentialBackend};
 
 /// Parameters of one S5 layer (conjugate-symmetric storage: P2 = P/2).
 #[derive(Clone, Debug)]
@@ -185,6 +192,96 @@ impl S5Layer {
         }
     }
 
+    /// Planar drive: bu_k = B̃ u_k for one sequence, written as separate
+    /// re/im planes (same f64 accumulation and `to_c32` rounding as
+    /// [`S5Layer::drive_seq`], so the two layouts agree bit-for-bit).
+    fn drive_seq_planar(&self, u: &[f32], l: usize, bur: &mut [f32], bui: &mut [f32]) {
+        let (h, p2) = (self.h, self.p2);
+        for k in 0..l {
+            for r in 0..p2 {
+                let mut acc = C64::ZERO;
+                for c in 0..h {
+                    acc += self.b_tilde[r * h + c].scale(u[k * h + c] as f64);
+                }
+                let z = acc.to_c32();
+                bur[k * p2 + r] = z.re;
+                bui[k * p2 + r] = z.im;
+            }
+        }
+    }
+
+    /// Planar reversed-time drive with the input scaling folded in
+    /// (mirrors [`S5Layer::drive_rev_seq`]).
+    fn drive_rev_seq_planar(
+        &self,
+        u: &[f32],
+        l: usize,
+        f: &[C64],
+        bur: &mut [f32],
+        bui: &mut [f32],
+    ) {
+        let (h, p2) = (self.h, self.p2);
+        for k in 0..l {
+            let src = l - 1 - k;
+            for r in 0..p2 {
+                let mut acc = C64::ZERO;
+                for c in 0..h {
+                    acc += self.b_tilde[r * h + c].scale(u[src * h + c] as f64);
+                }
+                let z = (f[r] * acc).to_c32();
+                bur[k * p2 + r] = z.re;
+                bui[k * p2 + r] = z.im;
+            }
+        }
+    }
+
+    /// Planar drive scaling: `bu ← f ∘ bu` over separate planes, with the
+    /// complex-multiply op order of [`S5Layer::scale_seq`].
+    fn scale_seq_planar(
+        bur: &mut [f32],
+        bui: &mut [f32],
+        fr: &[f32],
+        fi: &[f32],
+        l: usize,
+        p2: usize,
+    ) {
+        for k in 0..l {
+            let row = k * p2;
+            for r in 0..p2 {
+                let br = bur[row + r];
+                let bi = bui[row + r];
+                bur[row + r] = fr[r] * br - fi[r] * bi;
+                bui[row + r] = fr[r] * bi + fi[r] * br;
+            }
+        }
+    }
+
+    /// Planar projection: accumulate 2·Re(C̃_dir · x) into `y` from
+    /// separate state planes (mirrors [`S5Layer::project_seq`]).
+    fn project_seq_planar(
+        &self,
+        xr: &[f32],
+        xi: &[f32],
+        l: usize,
+        dir: usize,
+        reversed: bool,
+        y: &mut [f32],
+    ) {
+        let (h, p2) = (self.h, self.p2);
+        let ct = &self.c_tilde[dir];
+        for k in 0..l {
+            let xrow = if reversed { (l - 1 - k) * p2 } else { k * p2 };
+            for r in 0..h {
+                let mut acc = 0.0f64;
+                for c in 0..p2 {
+                    let cv = ct[r * p2 + c];
+                    acc += cv.re * xr[xrow + c] as f64 - cv.im * xi[xrow + c] as f64;
+                }
+                y[k * h + r] += 2.0 * acc as f32;
+            }
+        }
+    }
+
     /// Accumulate 2·Re(C̃_dir · x) into `y` for one sequence. `reversed`
     /// reads the state rows back-to-front (backward direction of a
     /// bidirectional layer, whose scan ran on reversed time).
@@ -249,12 +346,19 @@ impl S5Layer {
 
     // -- batched core ------------------------------------------------------
 
-    /// SSM over a packed (B, L, H) batch, writing y (B, L, H). Scratch
-    /// (`bu`, `bu_rev`, `a_tv`) comes from the workspace; `y` must be
+    /// SSM over a packed (B, L, H) batch, writing y (B, L, H). Scan
+    /// scratch comes from the workspace's [`SsmBuffers`]; `y` must be
     /// exactly B·L·H long. `dts` is (B, L) per-step Δt multipliers.
     /// `slot`/`disc` address this layer's cached TI discretization in the
     /// workspace (validated by value, so slot collisions only cost a
     /// recompute).
+    ///
+    /// Dispatches on [`ScanBackend::layout`]: the planar path (default)
+    /// materializes the drive as separate re/im planes so the whole layer
+    /// — drive, scale, scan, projection — runs struct-of-arrays with no
+    /// interleave↔planar transpose anywhere; the interleaved path is the
+    /// retained reference oracle. Both execute identical FP ops in
+    /// identical order.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn apply_ssm_core(
         &self,
@@ -266,19 +370,181 @@ impl S5Layer {
         backend: &dyn ScanBackend,
         slot: usize,
         disc: &mut Vec<Vec<TiDisc>>,
-        bu: &mut Vec<C32>,
-        bu_rev: &mut Vec<C32>,
-        a_tv: &mut Vec<C32>,
+        ssm: &mut SsmBuffers,
+        y: &mut [f32],
+    ) {
+        let h = self.h;
+        assert_eq!(u.len(), batch * l * h);
+        assert_eq!(y.len(), batch * l * h);
+        if batch == 0 || l == 0 {
+            return; // degenerate batch: nothing to write
+        }
+        match backend.layout() {
+            ScanLayout::Planar => {
+                self.apply_ssm_planar(u, batch, l, timescale, dts, backend, slot, disc, ssm, y)
+            }
+            ScanLayout::Interleaved => self.apply_ssm_interleaved(
+                u, batch, l, timescale, dts, backend, slot, disc, ssm, y,
+            ),
+        }
+    }
+
+    /// The planar (struct-of-arrays) SSM path — the engine default.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_ssm_planar(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        dts: Option<&[f32]>,
+        backend: &dyn ScanBackend,
+        slot: usize,
+        disc: &mut Vec<Vec<TiDisc>>,
+        ssm: &mut SsmBuffers,
         y: &mut [f32],
     ) {
         let (h, p2) = (self.h, self.p2);
-        assert_eq!(u.len(), batch * l * h);
-        assert_eq!(y.len(), batch * l * h);
         let np = batch * l * p2;
         let sh = l * h;
         let sp = l * p2;
         let t = backend.threads();
         let bidir = self.c_tilde.len() == 2;
+        let SsmBuffers {
+            bu_re, bu_im, bu_rev_re, bu_rev_im, a_tv_re, a_tv_im, scan, ..
+        } = ssm;
+        grow(bu_re, np);
+        grow(bu_im, np);
+
+        // drive: bu = B̃ u, per sequence in parallel, straight into planes
+        par_zip2(t, u, sh, bu_re, sp, bu_im, sp, batch, |_, useq, br, bi| {
+            self.drive_seq_planar(useq, l, br, bi);
+        });
+
+        // The TI discretization comes from the workspace cache in planar
+        // form — the hot path never transposes interleaved↔planar.
+        match dts {
+            None => {
+                let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
+                par_zip2(t, u, sh, bu_re, sp, bu_im, sp, batch, |_, _, br, bi| {
+                    Self::scale_seq_planar(br, bi, &d.f_re, &d.f_im, l, p2);
+                });
+                backend.scan_batch_ti_planar(
+                    &d.a_re,
+                    &d.a_im,
+                    &mut bu_re[..np],
+                    &mut bu_im[..np],
+                    batch,
+                    l,
+                    p2,
+                    scan,
+                );
+            }
+            Some(dts) => {
+                assert_eq!(dts.len(), batch * l);
+                // base Δt served from the same value-validated cache entry
+                // (it used to be rebuilt per batch — ROADMAP item)
+                let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
+                let base_dt = &d.base_dt;
+                grow(a_tv_re, np);
+                grow(a_tv_im, np);
+                par_zip4(
+                    t, dts, l, a_tv_re, sp, a_tv_im, sp, bu_re, sp, bu_im, sp, batch,
+                    |_, dseq, ar, ai, br, bi| {
+                        for k in 0..l {
+                            for r in 0..p2 {
+                                let dt = base_dt[r] * dseq[k] as f64;
+                                let (lb, f) = discretize_one(self.lambda[r], dt, Method::Zoh);
+                                let lb = lb.to_c32();
+                                let f = f.to_c32();
+                                ar[k * p2 + r] = lb.re;
+                                ai[k * p2 + r] = lb.im;
+                                let (b_re, b_im) = (br[k * p2 + r], bi[k * p2 + r]);
+                                br[k * p2 + r] = f.re * b_re - f.im * b_im;
+                                bi[k * p2 + r] = f.re * b_im + f.im * b_re;
+                            }
+                        }
+                    },
+                );
+                backend.scan_batch_tv_planar(
+                    &a_tv_re[..np],
+                    &a_tv_im[..np],
+                    &mut bu_re[..np],
+                    &mut bu_im[..np],
+                    batch,
+                    l,
+                    p2,
+                    scan,
+                );
+            }
+        }
+
+        // forward projection; for unidirectional layers the feedthrough is
+        // folded in here (matching the original projection → D order)
+        {
+            let xr = &bu_re[..np];
+            let xi = &bu_im[..np];
+            par_zip(t, xr, sp, y, sh, batch, |i, xrseq, yseq| {
+                yseq.fill(0.0);
+                self.project_seq_planar(xrseq, &xi[i * sp..(i + 1) * sp], l, 0, false, yseq);
+                if !bidir {
+                    self.feedthrough_seq(&u[i * sh..(i + 1) * sh], l, yseq);
+                }
+            });
+        }
+
+        if bidir {
+            // backward pass: scan the reversed drive, project back in
+            // natural order. Time-invariant Λ̄ assumed for bidirectional
+            // models (as in L2), also under irregular sampling.
+            let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
+            grow(bu_rev_re, np);
+            grow(bu_rev_im, np);
+            par_zip2(t, u, sh, bu_rev_re, sp, bu_rev_im, sp, batch, |_, useq, br, bi| {
+                self.drive_rev_seq_planar(useq, l, &d.f64s, br, bi);
+            });
+            backend.scan_batch_ti_planar(
+                &d.a_re,
+                &d.a_im,
+                &mut bu_rev_re[..np],
+                &mut bu_rev_im[..np],
+                batch,
+                l,
+                p2,
+                scan,
+            );
+            let xr = &bu_rev_re[..np];
+            let xi = &bu_rev_im[..np];
+            par_zip(t, xr, sp, y, sh, batch, |i, xrseq, yseq| {
+                self.project_seq_planar(xrseq, &xi[i * sp..(i + 1) * sp], l, 1, true, yseq);
+                self.feedthrough_seq(&u[i * sh..(i + 1) * sh], l, yseq);
+            });
+        }
+    }
+
+    /// The interleaved `[C32]` SSM path — the reference oracle the planar
+    /// default is validated against.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_ssm_interleaved(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        dts: Option<&[f32]>,
+        backend: &dyn ScanBackend,
+        slot: usize,
+        disc: &mut Vec<Vec<TiDisc>>,
+        ssm: &mut SsmBuffers,
+        y: &mut [f32],
+    ) {
+        let (h, p2) = (self.h, self.p2);
+        let np = batch * l * p2;
+        let sh = l * h;
+        let sp = l * p2;
+        let t = backend.threads();
+        let bidir = self.c_tilde.len() == 2;
+        let SsmBuffers { bu, bu_rev, a_tv, scan, .. } = ssm;
         grow(bu, np);
 
         // drive: bu = B̃ u, per sequence in parallel
@@ -296,15 +562,13 @@ impl S5Layer {
                 par_zip(t, u, sh, bu, sp, batch, |_, _, buseq| {
                     Self::scale_seq(buseq, &d.f32s, l, p2);
                 });
-                backend.scan_batch_ti(&d.a32, &mut bu[..np], batch, l, p2);
+                backend.scan_batch_ti(&d.a32, &mut bu[..np], batch, l, p2, scan);
             }
             Some(dts) => {
                 assert_eq!(dts.len(), batch * l);
-                let base_dt: Vec<f64> = self
-                    .log_dt
-                    .iter()
-                    .map(|&ld| (ld as f64).exp() * timescale)
-                    .collect();
+                // base Δt served from the same value-validated cache entry
+                let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
+                let base_dt = &d.base_dt;
                 grow(a_tv, np);
                 par_zip2(t, dts, l, a_tv, sp, bu, sp, batch, |_, dseq, aseq, buseq| {
                     for k in 0..l {
@@ -316,7 +580,7 @@ impl S5Layer {
                         }
                     }
                 });
-                backend.scan_batch_tv(&a_tv[..np], &mut bu[..np], batch, l, p2);
+                backend.scan_batch_tv(&a_tv[..np], &mut bu[..np], batch, l, p2, scan);
             }
         }
 
@@ -339,7 +603,7 @@ impl S5Layer {
             par_zip(t, u, sh, bu_rev, sp, batch, |_, useq, bseq| {
                 self.drive_rev_seq(useq, l, &d.f64s, bseq);
             });
-            backend.scan_batch_ti(&d.a32, &mut bu_rev[..np], batch, l, p2);
+            backend.scan_batch_ti(&d.a32, &mut bu_rev[..np], batch, l, p2, scan);
             par_zip(t, &bu_rev[..np], sp, y, sh, batch, |i, xs, yseq| {
                 self.project_seq(xs, l, 1, true, yseq);
                 self.feedthrough_seq(&u[i * sh..(i + 1) * sh], l, yseq);
@@ -355,9 +619,7 @@ impl S5Layer {
         x: &mut Vec<f32>,
         v: &mut Vec<f32>,
         y: &mut Vec<f32>,
-        bu: &mut Vec<C32>,
-        bu_rev: &mut Vec<C32>,
-        a_tv: &mut Vec<C32>,
+        ssm: &mut SsmBuffers,
         slot: usize,
         disc: &mut Vec<Vec<TiDisc>>,
         batch: usize,
@@ -370,14 +632,16 @@ impl S5Layer {
         let n = batch * l * h;
         let sh = l * h;
         let t = backend.threads();
+        if batch == 0 || l == 0 {
+            return;
+        }
         grow(v, n);
         grow(y, n);
         par_zip(t, &x[..n], sh, v, sh, batch, |_, useq, vseq| {
             self.norm_seq(useq, l, vseq);
         });
         self.apply_ssm_core(
-            &v[..n], batch, l, timescale, dts, backend, slot, disc, bu, bu_rev, a_tv,
-            &mut y[..n],
+            &v[..n], batch, l, timescale, dts, backend, slot, disc, ssm, &mut y[..n],
         );
         par_zip(t, &y[..n], sh, x, sh, batch, |_, yseq, xseq| {
             self.gate_residual_seq(yseq, xseq, l);
@@ -401,10 +665,8 @@ impl S5Layer {
         ws: &mut EngineWorkspace,
     ) -> Vec<f32> {
         let mut y = vec![0.0f32; batch * l * self.h];
-        let EngineWorkspace { bu, bu_rev, a_tv, disc, .. } = ws;
-        self.apply_ssm_core(
-            u, batch, l, timescale, dts, backend, 0, disc, bu, bu_rev, a_tv, &mut y,
-        );
+        let EngineWorkspace { ssm, disc, .. } = ws;
+        self.apply_ssm_core(u, batch, l, timescale, dts, backend, 0, disc, ssm, &mut y);
         y
     }
 
@@ -423,12 +685,10 @@ impl S5Layer {
     ) -> Vec<f32> {
         let n = batch * l * self.h;
         assert_eq!(u.len(), n);
-        let EngineWorkspace { x, v, y, bu, bu_rev, a_tv, disc } = ws;
+        let EngineWorkspace { x, v, y, ssm, disc } = ws;
         grow(x, n);
         x[..n].copy_from_slice(u);
-        self.apply_batch_core(
-            x, v, y, bu, bu_rev, a_tv, 0, disc, batch, l, timescale, dts, backend,
-        );
+        self.apply_batch_core(x, v, y, ssm, 0, disc, batch, l, timescale, dts, backend);
         x[..n].to_vec()
     }
 
@@ -603,15 +863,13 @@ impl S5Model {
         let h = self.h;
         let n = batch * l * h;
         let t = backend.threads();
-        let EngineWorkspace { x, v, y, bu, bu_rev, a_tv, disc } = ws;
+        let EngineWorkspace { x, v, y, ssm, disc } = ws;
         grow(x, n);
         par_zip(t, u, l * self.d_in, x, l * h, batch, |_, useq, xseq| {
             self.encode_seq(useq, l, xseq);
         });
         for (li, layer) in self.layers.iter().enumerate() {
-            layer.apply_batch_core(
-                x, v, y, bu, bu_rev, a_tv, li, disc, batch, l, timescale, None, backend,
-            );
+            layer.apply_batch_core(x, v, y, ssm, li, disc, batch, l, timescale, None, backend);
         }
         par_zip(t, &x[..n], l * h, out, self.classes, batch, |_, xseq, oseq| {
             self.pool_decode_seq(xseq, l, oseq);
@@ -1134,6 +1392,76 @@ mod tests {
                 "workspace reallocated at (B={b}, L={l})"
             );
         }
+    }
+
+    /// The planar (default) forward equals the interleaved oracle exactly
+    /// — layer, bidirectional layer, irregular-Δt SSM and full model, at
+    /// sequential and parallel thread budgets. (Identical FP ops in
+    /// identical order ⇒ bit-for-bit, asserted with == via a 0-tolerance
+    /// compare.)
+    #[test]
+    fn prop_planar_forward_matches_interleaved_oracle() {
+        use crate::ssm::scan::backend_for;
+        prop::check("planar ≡ interleaved (layer/model)", 6, |g| {
+            let batch = 1 + g.below(5);
+            let l = 4 + g.below(60);
+            let bidir = g.coin(0.5);
+            let lp = layer(4, 8, 1, bidir);
+            let u: Vec<f32> = (0..batch * l * 4).map(|_| g.normal() as f32).collect();
+            for threads in [1usize, 3] {
+                let planar = backend_for(threads, ScanLayout::Planar);
+                let oracle = backend_for(threads, ScanLayout::Interleaved);
+                let mut ws_p = EngineWorkspace::new();
+                let mut ws_i = EngineWorkspace::new();
+                let got = lp.apply_batch(&u, batch, l, 1.0, planar.as_ref(), &mut ws_p);
+                let want = lp.apply_batch(&u, batch, l, 1.0, oracle.as_ref(), &mut ws_i);
+                prop::close_slice_f32(&want, &got, 0.0)
+                    .map_err(|e| format!("layer bidir={bidir} t={threads}: {e}"))?;
+                if !bidir {
+                    let dts: Vec<f32> =
+                        (0..batch * l).map(|_| g.uniform_in(0.3, 2.5) as f32).collect();
+                    let got = lp.apply_ssm_batch(
+                        &u, batch, l, 1.0, Some(&dts), planar.as_ref(), &mut ws_p,
+                    );
+                    let want = lp.apply_ssm_batch(
+                        &u, batch, l, 1.0, Some(&dts), oracle.as_ref(), &mut ws_i,
+                    );
+                    prop::close_slice_f32(&want, &got, 0.0)
+                        .map_err(|e| format!("ssm dts t={threads}: {e}"))?;
+                }
+            }
+            let cfg = S5Config { h: 8, p: 8, j: 1, ..Default::default() };
+            let m = S5Model::init(2, 5, 2, &cfg, &mut Rng::new(13));
+            let mu: Vec<f32> = (0..batch * l * 2).map(|_| g.normal() as f32).collect();
+            let planar = backend_for(2, ScanLayout::Planar);
+            let oracle = backend_for(2, ScanLayout::Interleaved);
+            let mut ws_p = EngineWorkspace::new();
+            let mut ws_i = EngineWorkspace::new();
+            let got = m.forward_batch(&mu, batch, l, 1.0, planar.as_ref(), &mut ws_p);
+            let want = m.forward_batch(&mu, batch, l, 1.0, oracle.as_ref(), &mut ws_i);
+            prop::close_slice_f32(&want, &got, 0.0).map_err(|e| format!("model: {e}"))
+        });
+    }
+
+    /// The irregular-Δt path serves base Δt from the per-layer cache: a
+    /// repeat TV batch reuses the same cache entry (no per-batch rebuild)
+    /// and reproduces the same output.
+    #[test]
+    fn tv_base_dt_is_cached_across_batches() {
+        let lp = layer(4, 8, 1, false);
+        let l = 20;
+        let mut rng = Rng::new(14);
+        let u = rng.normal_vec_f32(l * 4);
+        let dts = rng.uniform_vec_f32(l, 0.3, 2.5);
+        let backend = super::legacy_backend(1);
+        let mut ws = EngineWorkspace::new();
+        let y1 = lp.apply_ssm_batch(&u, 1, l, 1.0, Some(&dts), backend.as_ref(), &mut ws);
+        assert_eq!(ws.disc[0].len(), 1, "TV path must populate the TI cache slot");
+        let water = ws.capacity_bytes();
+        let y2 = lp.apply_ssm_batch(&u, 1, l, 1.0, Some(&dts), backend.as_ref(), &mut ws);
+        assert_eq!(y1, y2);
+        assert_eq!(ws.disc[0].len(), 1, "repeat TV batch must hit the cache");
+        assert_eq!(ws.capacity_bytes(), water, "repeat TV batch reallocated");
     }
 
     #[test]

@@ -25,8 +25,25 @@
 //!
 //! [`scan_dense_sequential`] is the O(L·P²)/O(L·P³) *dense*-A strawman of
 //! §2.2, kept as a baseline to demonstrate why diagonalization is load-
-//! bearing for S5. [`scan_sequential_ti_planar`] is the struct-of-arrays
-//! layout experiment matching the L1 kernel's planar f32 streams.
+//! bearing for S5.
+//!
+//! ## Memory layout: planar (SoA) vs interleaved
+//!
+//! Every kernel and every [`ScanBackend`] entry point exists in **two
+//! layouts**. The interleaved form works on `[C32]` (re/im adjacent per
+//! element); its inner loop carries a real↔imag data dependence that blocks
+//! autovectorization. The planar form works on separate re/im `f32` planes
+//! (struct-of-arrays, the same layout the L1 Pallas kernel uses), which
+//! lets LLVM emit SIMD mul/fma over the P lanes. Both layouts execute the
+//! *identical* floating-point operations in the identical order, so their
+//! results agree bit-for-bit — the interleaved kernels are kept as the
+//! reference oracle (see [`ScanLayout`] and the `Interleaved` wrapper),
+//! while [`backend_for_threads`] hands out planar-driving backends by
+//! default.
+//!
+//! Parallel kernels need O(chunks·P) chunk summaries; the pooled form
+//! ([`ScanScratch`], owned by the engine workspace) reuses them so
+//! steady-state inference allocates nothing (ROADMAP item).
 
 use crate::num::{C32, C64};
 
@@ -77,6 +94,108 @@ pub fn scan_sequential_tv_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize)
     }
 }
 
+/// One streaming recurrence step in planar layout:
+/// `state ← a ∘ state + b` over separate re/im planes.
+///
+/// Same FP ops in the same order as [`scan_step_inplace`], so the two
+/// layouts agree bit-for-bit; this is the kernel the planar online path
+/// ([`crate::ssm::online`]) shares with the offline planar scans.
+#[inline]
+pub fn scan_step_planar_inplace(
+    ar: &[f32],
+    ai: &[f32],
+    sr: &mut [f32],
+    si: &mut [f32],
+    br: &[f32],
+    bi: &[f32],
+) {
+    let p = sr.len();
+    debug_assert_eq!(ar.len(), p);
+    debug_assert_eq!(ai.len(), p);
+    debug_assert_eq!(si.len(), p);
+    debug_assert_eq!(br.len(), p);
+    debug_assert_eq!(bi.len(), p);
+    for j in 0..p {
+        let nr = ar[j] * sr[j] - ai[j] * si[j] + br[j];
+        let ni = ar[j] * si[j] + ai[j] * sr[j] + bi[j];
+        sr[j] = nr;
+        si[j] = ni;
+    }
+}
+
+/// Sequential time-invariant scan in planar layout, in place: `ar`/`ai`
+/// have length P; `bur`/`bui` are (L, P) planes holding the drive on entry
+/// and the states on exit. Mirrors [`scan_sequential_ti_inplace`]
+/// operation-for-operation.
+pub fn scan_sequential_ti_planar_inplace(
+    ar: &[f32],
+    ai: &[f32],
+    bur: &mut [f32],
+    bui: &mut [f32],
+    l: usize,
+    p: usize,
+) {
+    assert_eq!(ar.len(), p);
+    assert_eq!(ai.len(), p);
+    assert_eq!(bur.len(), l * p);
+    assert_eq!(bui.len(), l * p);
+    for k in 1..l {
+        let row = k * p;
+        let (pr_all, cur_r) = bur.split_at_mut(row);
+        let (pi_all, cur_i) = bui.split_at_mut(row);
+        let pr = &pr_all[row - p..];
+        let pi = &pi_all[row - p..];
+        for j in 0..p {
+            let nr = ar[j] * pr[j] - ai[j] * pi[j] + cur_r[j];
+            let ni = ar[j] * pi[j] + ai[j] * pr[j] + cur_i[j];
+            cur_r[j] = nr;
+            cur_i[j] = ni;
+        }
+    }
+}
+
+/// Sequential time-varying scan in planar layout, in place: all four
+/// planes are (L, P). Mirrors [`scan_sequential_tv_inplace`].
+pub fn scan_sequential_tv_planar_inplace(
+    ar: &[f32],
+    ai: &[f32],
+    bur: &mut [f32],
+    bui: &mut [f32],
+    l: usize,
+    p: usize,
+) {
+    assert_eq!(ar.len(), l * p);
+    assert_eq!(ai.len(), l * p);
+    assert_eq!(bur.len(), l * p);
+    assert_eq!(bui.len(), l * p);
+    for k in 1..l {
+        let row = k * p;
+        let (pr_all, cur_r) = bur.split_at_mut(row);
+        let (pi_all, cur_i) = bui.split_at_mut(row);
+        let pr = &pr_all[row - p..];
+        let pi = &pi_all[row - p..];
+        for j in 0..p {
+            let nr = ar[row + j] * pr[j] - ai[row + j] * pi[j] + cur_r[j];
+            let ni = ar[row + j] * pi[j] + ai[row + j] * pr[j] + cur_i[j];
+            cur_r[j] = nr;
+            cur_i[j] = ni;
+        }
+    }
+}
+
+/// Scratch elements a parallel interleaved scan needs for a given state
+/// size and chunk-worker budget: 3 chunk-summary rows per chunk (ā-power,
+/// local-final, enter) plus the combine state.
+pub fn chunk_scratch_len(p: usize, threads: usize) -> usize {
+    3 * threads.max(1) * p + p
+}
+
+/// Scratch elements a parallel planar scan needs (re+im planes for each of
+/// the three summary rows, plus the two combine-state planes).
+pub fn planar_scratch_len(p: usize, threads: usize) -> usize {
+    6 * threads.max(1) * p + 2 * p
+}
+
 /// Parallel chunked TI scan, in place, over exactly `threads` chunks
 /// (clamped to L). Three phases (classic two-pass prefix scan, Blelloch
 /// §1.4 at CPU chunk granularity):
@@ -88,8 +207,26 @@ pub fn scan_sequential_tv_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize)
 ///
 /// No small-L fallback: callers get the chunking they ask for (the
 /// [`ParallelBackend`] applies the "sequential is faster below 4·T rows"
-/// heuristic). Transient allocation is O(T·P) for the summaries.
+/// heuristic). Transient allocation is O(T·P) for the summaries; the
+/// pooled form ([`scan_parallel_ti_inplace_pooled`]) allocates nothing.
 pub fn scan_parallel_ti_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize, threads: usize) {
+    let mut scratch = vec![C32::ZERO; chunk_scratch_len(p, threads.min(l.max(1)))];
+    scan_parallel_ti_inplace_pooled(a, bu, l, p, threads, &mut scratch);
+}
+
+/// [`scan_parallel_ti_inplace`] with caller-owned chunk summaries:
+/// `scratch` must hold at least [`chunk_scratch_len`]`(p, threads)`
+/// elements (its contents are ignored on entry and clobbered). The engine
+/// routes its pooled [`ScanScratch`] buffers here so steady-state scans
+/// perform zero heap allocation.
+pub fn scan_parallel_ti_inplace_pooled(
+    a: &[C32],
+    bu: &mut [C32],
+    l: usize,
+    p: usize,
+    threads: usize,
+    scratch: &mut [C32],
+) {
     assert_eq!(a.len(), p);
     assert_eq!(bu.len(), l * p);
     if l == 0 || p == 0 {
@@ -101,47 +238,49 @@ pub fn scan_parallel_ti_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize, t
     }
     let chunk = l.div_ceil(threads);
     let n_chunks = l.div_ceil(chunk);
-
-    let mut a_pow = vec![C32::ZERO; n_chunks * p];
-    let mut last = vec![C32::ZERO; n_chunks * p];
+    let n = n_chunks * p;
+    assert!(
+        scratch.len() >= 3 * n + p,
+        "parallel scan scratch too small: {} < {}",
+        scratch.len(),
+        3 * n + p
+    );
+    let (a_pow, rest) = scratch.split_at_mut(n);
+    let (last, rest) = rest.split_at_mut(n);
+    let (enter, rest) = rest.split_at_mut(n);
+    let state = &mut rest[..p];
 
     // Phase 1: local in-place scans (parallel).
-    {
-        let xs_chunks: Vec<&mut [C32]> = bu.chunks_mut(chunk * p).collect();
-        let apow_chunks: Vec<&mut [C32]> = a_pow.chunks_mut(p).collect();
-        let last_chunks: Vec<&mut [C32]> = last.chunks_mut(p).collect();
-        std::thread::scope(|s| {
-            for (c, ((xc, ac), lc)) in xs_chunks
-                .into_iter()
-                .zip(apow_chunks)
-                .zip(last_chunks)
-                .enumerate()
-            {
-                s.spawn(move || {
-                    let start = c * chunk;
-                    let len = chunk.min(l - start);
-                    for k in 1..len {
-                        let (prev, cur) = xc.split_at_mut(k * p);
-                        let prev = &prev[(k - 1) * p..];
-                        for j in 0..p {
-                            cur[j] = a[j] * prev[j] + cur[j];
-                        }
-                    }
+    std::thread::scope(|s| {
+        for (c, ((xc, ac), lc)) in bu
+            .chunks_mut(chunk * p)
+            .zip(a_pow.chunks_mut(p))
+            .zip(last.chunks_mut(p))
+            .enumerate()
+        {
+            s.spawn(move || {
+                let start = c * chunk;
+                let len = chunk.min(l - start);
+                for k in 1..len {
+                    let (prev, cur) = xc.split_at_mut(k * p);
+                    let prev = &prev[(k - 1) * p..];
                     for j in 0..p {
-                        ac[j] = a[j].powi(len as u32);
-                        lc[j] = xc[(len - 1) * p + j];
+                        cur[j] = a[j] * prev[j] + cur[j];
                     }
-                });
-            }
-        });
-    }
+                }
+                for j in 0..p {
+                    ac[j] = a[j].powi(len as u32);
+                    lc[j] = xc[(len - 1) * p + j];
+                }
+            });
+        }
+    });
 
     // Phase 2: combine chunk summaries sequentially → state entering chunk c.
-    let mut enter = vec![C32::ZERO; n_chunks * p];
     {
-        let mut state = vec![C32::ZERO; p];
+        state.fill(C32::ZERO);
         for c in 0..n_chunks {
-            enter[c * p..(c + 1) * p].copy_from_slice(&state);
+            enter[c * p..(c + 1) * p].copy_from_slice(state);
             for j in 0..p {
                 state[j] = a_pow[c * p + j] * state[j] + last[c * p + j];
             }
@@ -150,34 +289,48 @@ pub fn scan_parallel_ti_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize, t
 
     // Phase 3: fixup (parallel): x_k += ā^{k−start+1} ∘ x_enter. The enter
     // rows double as the carry accumulators.
-    {
-        let xs_chunks: Vec<&mut [C32]> = bu.chunks_mut(chunk * p).collect();
-        let enter_chunks: Vec<&mut [C32]> = enter.chunks_mut(p).collect();
-        std::thread::scope(|s| {
-            for (c, (xc, carry)) in xs_chunks.into_iter().zip(enter_chunks).enumerate() {
-                if c == 0 {
-                    continue; // enters at zero: nothing to add
-                }
-                s.spawn(move || {
-                    let start = c * chunk;
-                    let len = chunk.min(l - start);
-                    for k in 0..len {
-                        let row = k * p;
-                        for j in 0..p {
-                            carry[j] = carry[j] * a[j];
-                            xc[row + j] += carry[j];
-                        }
-                    }
-                });
+    std::thread::scope(|s| {
+        for (c, (xc, carry)) in bu
+            .chunks_mut(chunk * p)
+            .zip(enter.chunks_mut(p))
+            .enumerate()
+        {
+            if c == 0 {
+                continue; // enters at zero: nothing to add
             }
-        });
-    }
+            s.spawn(move || {
+                let start = c * chunk;
+                let len = chunk.min(l - start);
+                for k in 0..len {
+                    let row = k * p;
+                    for j in 0..p {
+                        carry[j] = carry[j] * a[j];
+                        xc[row + j] += carry[j];
+                    }
+                }
+            });
+        }
+    });
 }
 
 /// Parallel chunked TV scan, in place (irregular sampling): `a`, `bu` are
 /// (L, P). Same three phases as [`scan_parallel_ti_inplace`] with per-step
 /// multiplier products as the chunk summaries.
 pub fn scan_parallel_tv_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize, threads: usize) {
+    let mut scratch = vec![C32::ZERO; chunk_scratch_len(p, threads.min(l.max(1)))];
+    scan_parallel_tv_inplace_pooled(a, bu, l, p, threads, &mut scratch);
+}
+
+/// [`scan_parallel_tv_inplace`] with caller-owned chunk summaries (see
+/// [`scan_parallel_ti_inplace_pooled`] for the scratch contract).
+pub fn scan_parallel_tv_inplace_pooled(
+    a: &[C32],
+    bu: &mut [C32],
+    l: usize,
+    p: usize,
+    threads: usize,
+    scratch: &mut [C32],
+) {
     assert_eq!(a.len(), l * p);
     assert_eq!(bu.len(), l * p);
     if l == 0 || p == 0 {
@@ -189,78 +342,428 @@ pub fn scan_parallel_tv_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize, t
     }
     let chunk = l.div_ceil(threads);
     let n_chunks = l.div_ceil(chunk);
+    let n = n_chunks * p;
+    assert!(
+        scratch.len() >= 3 * n + p,
+        "parallel scan scratch too small: {} < {}",
+        scratch.len(),
+        3 * n + p
+    );
+    let (a_prod, rest) = scratch.split_at_mut(n);
+    let (last, rest) = rest.split_at_mut(n);
+    let (enter, rest) = rest.split_at_mut(n);
+    let state = &mut rest[..p];
 
-    let mut a_prod = vec![C32::ZERO; n_chunks * p];
-    let mut last = vec![C32::ZERO; n_chunks * p];
-
-    {
-        let xs_chunks: Vec<&mut [C32]> = bu.chunks_mut(chunk * p).collect();
-        let aprod_chunks: Vec<&mut [C32]> = a_prod.chunks_mut(p).collect();
-        let last_chunks: Vec<&mut [C32]> = last.chunks_mut(p).collect();
-        std::thread::scope(|s| {
-            for (c, ((xc, ac), lc)) in xs_chunks
-                .into_iter()
-                .zip(aprod_chunks)
-                .zip(last_chunks)
-                .enumerate()
-            {
-                s.spawn(move || {
-                    let start = c * chunk;
-                    let len = chunk.min(l - start);
-                    ac.fill(C32::ONE);
-                    for k in 0..len {
-                        let g = (start + k) * p;
-                        if k > 0 {
-                            let (prev, cur) = xc.split_at_mut(k * p);
-                            let prev = &prev[(k - 1) * p..];
-                            for j in 0..p {
-                                cur[j] = a[g + j] * prev[j] + cur[j];
-                            }
-                        }
+    std::thread::scope(|s| {
+        for (c, ((xc, ac), lc)) in bu
+            .chunks_mut(chunk * p)
+            .zip(a_prod.chunks_mut(p))
+            .zip(last.chunks_mut(p))
+            .enumerate()
+        {
+            s.spawn(move || {
+                let start = c * chunk;
+                let len = chunk.min(l - start);
+                ac.fill(C32::ONE);
+                for k in 0..len {
+                    let g = (start + k) * p;
+                    if k > 0 {
+                        let (prev, cur) = xc.split_at_mut(k * p);
+                        let prev = &prev[(k - 1) * p..];
                         for j in 0..p {
-                            ac[j] = a[g + j] * ac[j];
+                            cur[j] = a[g + j] * prev[j] + cur[j];
                         }
                     }
-                    lc.copy_from_slice(&xc[(len - 1) * p..len * p]);
-                });
-            }
-        });
-    }
+                    for j in 0..p {
+                        ac[j] = a[g + j] * ac[j];
+                    }
+                }
+                lc.copy_from_slice(&xc[(len - 1) * p..len * p]);
+            });
+        }
+    });
 
-    let mut enter = vec![C32::ZERO; n_chunks * p];
     {
-        let mut state = vec![C32::ZERO; p];
+        state.fill(C32::ZERO);
         for c in 0..n_chunks {
-            enter[c * p..(c + 1) * p].copy_from_slice(&state);
+            enter[c * p..(c + 1) * p].copy_from_slice(state);
             for j in 0..p {
                 state[j] = a_prod[c * p + j] * state[j] + last[c * p + j];
             }
         }
     }
 
-    {
-        let xs_chunks: Vec<&mut [C32]> = bu.chunks_mut(chunk * p).collect();
-        let enter_chunks: Vec<&mut [C32]> = enter.chunks_mut(p).collect();
-        std::thread::scope(|s| {
-            for (c, (xc, carry)) in xs_chunks.into_iter().zip(enter_chunks).enumerate() {
-                if c == 0 {
-                    continue;
+    std::thread::scope(|s| {
+        for (c, (xc, carry)) in bu
+            .chunks_mut(chunk * p)
+            .zip(enter.chunks_mut(p))
+            .enumerate()
+        {
+            if c == 0 {
+                continue;
+            }
+            s.spawn(move || {
+                let start = c * chunk;
+                let len = chunk.min(l - start);
+                for k in 0..len {
+                    let g = (start + k) * p;
+                    let row = k * p;
+                    for j in 0..p {
+                        carry[j] = a[g + j] * carry[j];
+                        xc[row + j] += carry[j];
+                    }
                 }
-                s.spawn(move || {
-                    let start = c * chunk;
-                    let len = chunk.min(l - start);
-                    for k in 0..len {
-                        let g = (start + k) * p;
+            });
+        }
+    });
+}
+
+/// Parallel chunked TI scan in planar layout, in place: `ar`/`ai` length
+/// P, `bur`/`bui` (L, P) planes. Identical phases, chunking and FP op
+/// order to [`scan_parallel_ti_inplace_pooled`], so the two layouts agree
+/// bit-for-bit. `scratch` must hold at least
+/// [`planar_scratch_len`]`(p, threads)` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_parallel_ti_planar_inplace(
+    ar: &[f32],
+    ai: &[f32],
+    bur: &mut [f32],
+    bui: &mut [f32],
+    l: usize,
+    p: usize,
+    threads: usize,
+    scratch: &mut [f32],
+) {
+    assert_eq!(ar.len(), p);
+    assert_eq!(ai.len(), p);
+    assert_eq!(bur.len(), l * p);
+    assert_eq!(bui.len(), l * p);
+    if l == 0 || p == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(l);
+    if threads == 1 {
+        return scan_sequential_ti_planar_inplace(ar, ai, bur, bui, l, p);
+    }
+    let chunk = l.div_ceil(threads);
+    let n_chunks = l.div_ceil(chunk);
+    let n = n_chunks * p;
+    assert!(
+        scratch.len() >= 6 * n + 2 * p,
+        "planar scan scratch too small: {} < {}",
+        scratch.len(),
+        6 * n + 2 * p
+    );
+    let (apw_r, rest) = scratch.split_at_mut(n);
+    let (apw_i, rest) = rest.split_at_mut(n);
+    let (last_r, rest) = rest.split_at_mut(n);
+    let (last_i, rest) = rest.split_at_mut(n);
+    let (ent_r, rest) = rest.split_at_mut(n);
+    let (ent_i, rest) = rest.split_at_mut(n);
+    let (st_r, rest) = rest.split_at_mut(p);
+    let st_i = &mut rest[..p];
+
+    // Phase 1: local in-place scans + chunk summaries (ā^len, local final).
+    std::thread::scope(|s| {
+        for (c, (((((xrc, xic), arc), aic), lrc), lic)) in bur
+            .chunks_mut(chunk * p)
+            .zip(bui.chunks_mut(chunk * p))
+            .zip(apw_r.chunks_mut(p))
+            .zip(apw_i.chunks_mut(p))
+            .zip(last_r.chunks_mut(p))
+            .zip(last_i.chunks_mut(p))
+            .enumerate()
+        {
+            s.spawn(move || {
+                let start = c * chunk;
+                let len = chunk.min(l - start);
+                for k in 1..len {
+                    let row = k * p;
+                    let (pr_all, cur_r) = xrc.split_at_mut(row);
+                    let (pi_all, cur_i) = xic.split_at_mut(row);
+                    let pr = &pr_all[row - p..];
+                    let pi = &pi_all[row - p..];
+                    for j in 0..p {
+                        let nr = ar[j] * pr[j] - ai[j] * pi[j] + cur_r[j];
+                        let ni = ar[j] * pi[j] + ai[j] * pr[j] + cur_i[j];
+                        cur_r[j] = nr;
+                        cur_i[j] = ni;
+                    }
+                }
+                for j in 0..p {
+                    let apw = C32::new(ar[j], ai[j]).powi(len as u32);
+                    arc[j] = apw.re;
+                    aic[j] = apw.im;
+                    lrc[j] = xrc[(len - 1) * p + j];
+                    lic[j] = xic[(len - 1) * p + j];
+                }
+            });
+        }
+    });
+
+    // Phase 2: combine chunk summaries sequentially → state entering chunk c.
+    st_r.fill(0.0);
+    st_i.fill(0.0);
+    for c in 0..n_chunks {
+        let row = c * p;
+        ent_r[row..row + p].copy_from_slice(st_r);
+        ent_i[row..row + p].copy_from_slice(st_i);
+        for j in 0..p {
+            let nr = apw_r[row + j] * st_r[j] - apw_i[row + j] * st_i[j] + last_r[row + j];
+            let ni = apw_r[row + j] * st_i[j] + apw_i[row + j] * st_r[j] + last_i[row + j];
+            st_r[j] = nr;
+            st_i[j] = ni;
+        }
+    }
+
+    // Phase 3: fixup (parallel): x_k += ā^{k−start+1} ∘ x_enter.
+    std::thread::scope(|s| {
+        for (c, (((xrc, xic), crr), cri)) in bur
+            .chunks_mut(chunk * p)
+            .zip(bui.chunks_mut(chunk * p))
+            .zip(ent_r.chunks_mut(p))
+            .zip(ent_i.chunks_mut(p))
+            .enumerate()
+        {
+            if c == 0 {
+                continue; // enters at zero: nothing to add
+            }
+            s.spawn(move || {
+                let start = c * chunk;
+                let len = chunk.min(l - start);
+                for k in 0..len {
+                    let row = k * p;
+                    for j in 0..p {
+                        let nr = crr[j] * ar[j] - cri[j] * ai[j];
+                        let ni = crr[j] * ai[j] + cri[j] * ar[j];
+                        crr[j] = nr;
+                        cri[j] = ni;
+                        xrc[row + j] += nr;
+                        xic[row + j] += ni;
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Parallel chunked TV scan in planar layout, in place: all planes (L, P).
+/// Mirrors [`scan_parallel_tv_inplace_pooled`] operation-for-operation.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_parallel_tv_planar_inplace(
+    ar: &[f32],
+    ai: &[f32],
+    bur: &mut [f32],
+    bui: &mut [f32],
+    l: usize,
+    p: usize,
+    threads: usize,
+    scratch: &mut [f32],
+) {
+    assert_eq!(ar.len(), l * p);
+    assert_eq!(ai.len(), l * p);
+    assert_eq!(bur.len(), l * p);
+    assert_eq!(bui.len(), l * p);
+    if l == 0 || p == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(l);
+    if threads == 1 {
+        return scan_sequential_tv_planar_inplace(ar, ai, bur, bui, l, p);
+    }
+    let chunk = l.div_ceil(threads);
+    let n_chunks = l.div_ceil(chunk);
+    let n = n_chunks * p;
+    assert!(
+        scratch.len() >= 6 * n + 2 * p,
+        "planar scan scratch too small: {} < {}",
+        scratch.len(),
+        6 * n + 2 * p
+    );
+    let (apd_r, rest) = scratch.split_at_mut(n);
+    let (apd_i, rest) = rest.split_at_mut(n);
+    let (last_r, rest) = rest.split_at_mut(n);
+    let (last_i, rest) = rest.split_at_mut(n);
+    let (ent_r, rest) = rest.split_at_mut(n);
+    let (ent_i, rest) = rest.split_at_mut(n);
+    let (st_r, rest) = rest.split_at_mut(p);
+    let st_i = &mut rest[..p];
+
+    // Phase 1: local scans + per-chunk multiplier products.
+    std::thread::scope(|s| {
+        for (c, (((((xrc, xic), arc), aic), lrc), lic)) in bur
+            .chunks_mut(chunk * p)
+            .zip(bui.chunks_mut(chunk * p))
+            .zip(apd_r.chunks_mut(p))
+            .zip(apd_i.chunks_mut(p))
+            .zip(last_r.chunks_mut(p))
+            .zip(last_i.chunks_mut(p))
+            .enumerate()
+        {
+            s.spawn(move || {
+                let start = c * chunk;
+                let len = chunk.min(l - start);
+                arc.fill(1.0);
+                aic.fill(0.0);
+                for k in 0..len {
+                    let g = (start + k) * p;
+                    if k > 0 {
                         let row = k * p;
+                        let (pr_all, cur_r) = xrc.split_at_mut(row);
+                        let (pi_all, cur_i) = xic.split_at_mut(row);
+                        let pr = &pr_all[row - p..];
+                        let pi = &pi_all[row - p..];
                         for j in 0..p {
-                            carry[j] = a[g + j] * carry[j];
-                            xc[row + j] += carry[j];
+                            let nr = ar[g + j] * pr[j] - ai[g + j] * pi[j] + cur_r[j];
+                            let ni = ar[g + j] * pi[j] + ai[g + j] * pr[j] + cur_i[j];
+                            cur_r[j] = nr;
+                            cur_i[j] = ni;
                         }
                     }
-                });
-            }
-        });
+                    for j in 0..p {
+                        let nr = ar[g + j] * arc[j] - ai[g + j] * aic[j];
+                        let ni = ar[g + j] * aic[j] + ai[g + j] * arc[j];
+                        arc[j] = nr;
+                        aic[j] = ni;
+                    }
+                }
+                lrc.copy_from_slice(&xrc[(len - 1) * p..len * p]);
+                lic.copy_from_slice(&xic[(len - 1) * p..len * p]);
+            });
+        }
+    });
+
+    // Phase 2: combine chunk summaries sequentially.
+    st_r.fill(0.0);
+    st_i.fill(0.0);
+    for c in 0..n_chunks {
+        let row = c * p;
+        ent_r[row..row + p].copy_from_slice(st_r);
+        ent_i[row..row + p].copy_from_slice(st_i);
+        for j in 0..p {
+            let nr = apd_r[row + j] * st_r[j] - apd_i[row + j] * st_i[j] + last_r[row + j];
+            let ni = apd_r[row + j] * st_i[j] + apd_i[row + j] * st_r[j] + last_i[row + j];
+            st_r[j] = nr;
+            st_i[j] = ni;
+        }
     }
+
+    // Phase 3: fixup with per-step multipliers.
+    std::thread::scope(|s| {
+        for (c, (((xrc, xic), crr), cri)) in bur
+            .chunks_mut(chunk * p)
+            .zip(bui.chunks_mut(chunk * p))
+            .zip(ent_r.chunks_mut(p))
+            .zip(ent_i.chunks_mut(p))
+            .enumerate()
+        {
+            if c == 0 {
+                continue;
+            }
+            s.spawn(move || {
+                let start = c * chunk;
+                let len = chunk.min(l - start);
+                for k in 0..len {
+                    let g = (start + k) * p;
+                    let row = k * p;
+                    for j in 0..p {
+                        let nr = ar[g + j] * crr[j] - ai[g + j] * cri[j];
+                        let ni = ar[g + j] * cri[j] + ai[g + j] * crr[j];
+                        crr[j] = nr;
+                        cri[j] = ni;
+                        xrc[row + j] += nr;
+                        xic[row + j] += ni;
+                    }
+                }
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Pooled scratch for the parallel kernels' chunk summaries
+// ---------------------------------------------------------------------------
+
+/// Reusable chunk-summary buffers for the parallel scan kernels, pooled so
+/// steady-state inference performs zero heap allocation (ROADMAP item: the
+/// O(threads·P) summaries used to be allocated fresh per call).
+///
+/// One `ScanScratch` belongs to one driving thread (it lives inside
+/// [`crate::ssm::engine::EngineWorkspace`]); the per-worker inner buffers
+/// exist because a batched scan with B < threads runs up to B chunked
+/// scans *concurrently*, each needing its own summaries. The `reserve_*`
+/// methods grow every worker to the worst case any (B, L) sharding of the
+/// backend's thread budget can need — worker `i` only ever runs with a
+/// sub-budget of `threads / (i + 1)` chunk-workers — so capacity is stable
+/// after the first call regardless of which branch later calls take.
+#[derive(Default)]
+pub struct ScanScratch {
+    /// per concurrent chunked scan: interleaved summaries
+    c: Vec<Vec<C32>>,
+    /// per concurrent chunked scan: planar summaries
+    f: Vec<Vec<f32>>,
+}
+
+impl ScanScratch {
+    pub fn new() -> ScanScratch {
+        ScanScratch::default()
+    }
+
+    fn c_workers(&mut self, n: usize) -> &mut [Vec<C32>] {
+        if self.c.len() < n {
+            self.c.resize_with(n, Vec::new);
+        }
+        &mut self.c[..n]
+    }
+
+    fn f_workers(&mut self, n: usize) -> &mut [Vec<f32>] {
+        if self.f.len() < n {
+            self.f.resize_with(n, Vec::new);
+        }
+        &mut self.f[..n]
+    }
+
+    fn reserve_interleaved(&mut self, p: usize, threads: usize) {
+        let t = threads.max(1);
+        for (i, w) in self.c_workers(t).iter_mut().enumerate() {
+            let need = chunk_scratch_len(p, t / (i + 1));
+            if w.len() < need {
+                w.resize(need, C32::ZERO);
+            }
+        }
+    }
+
+    fn reserve_planar(&mut self, p: usize, threads: usize) {
+        let t = threads.max(1);
+        for (i, w) in self.f_workers(t).iter_mut().enumerate() {
+            let need = planar_scratch_len(p, t / (i + 1));
+            if w.len() < need {
+                w.resize(need, 0.0);
+            }
+        }
+    }
+
+    /// Heap bytes currently held (capacity, not length).
+    pub fn capacity_bytes(&self) -> usize {
+        self.c.capacity() * std::mem::size_of::<Vec<C32>>()
+            + self.f.capacity() * std::mem::size_of::<Vec<f32>>()
+            + self.c.iter().map(|w| w.capacity() * 8).sum::<usize>()
+            + self.f.iter().map(|w| w.capacity() * 4).sum::<usize>()
+    }
+}
+
+/// Which buffer layout the engine should drive a backend with.
+///
+/// Both families of entry points exist on every [`ScanBackend`]; this is
+/// the backend's *preference*, consulted by the S5 forward path when it
+/// decides whether to materialize planar or interleaved drive buffers.
+/// [`Planar`](ScanLayout::Planar) is the default everywhere (SIMD-friendly
+/// separate re/im planes); [`Interleaved`](ScanLayout::Interleaved) keeps
+/// the original `[C32]` path alive as the reference oracle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScanLayout {
+    Planar,
+    Interleaved,
 }
 
 // ---------------------------------------------------------------------------
@@ -269,18 +772,25 @@ pub fn scan_parallel_tv_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize, t
 
 /// Object-safe scan strategy.
 ///
-/// One backend object serves every scan shape in the native stack:
+/// One backend object serves every scan shape in the native stack, in both
+/// memory layouts:
 ///
-/// * `scan_ti` / `scan_tv` — one sequence, in place over the drive buffer;
-/// * `scan_batch_ti` / `scan_batch_tv` — a packed (B, L, P) row-major batch,
-///   each sequence scanned independently (backends parallelize across
-///   B sequences × in-sequence chunks);
-/// * `scan_step` — the single-step recurrence online generation uses, so
-///   streaming and offline scans share one inner kernel.
+/// * `scan_ti` / `scan_tv` (+ `_planar`) — one sequence, in place over the
+///   drive buffer;
+/// * `scan_batch_ti` / `scan_batch_tv` (+ `_planar`) — a packed (B, L, P)
+///   row-major batch, each sequence scanned independently (backends
+///   parallelize across B sequences × in-sequence chunks);
+/// * `scan_step` / `scan_step_planar` — the single-step recurrence online
+///   generation uses, so streaming and offline scans share one inner
+///   kernel.
 ///
-/// All entry points overwrite the drive with the states and allocate no
-/// per-element scratch; parallel strategies allocate O(threads·P) chunk
-/// summaries per call.
+/// The `_planar` family takes separate re/im `f32` planes (SIMD-friendly
+/// struct-of-arrays); the engine consults [`ScanBackend::layout`] to decide
+/// which family to drive. All entry points overwrite the drive with the
+/// states; parallel strategies take their O(threads·P) chunk summaries from
+/// the caller's pooled [`ScanScratch`], so steady-state scans allocate
+/// nothing.
+#[allow(clippy::too_many_arguments)]
 pub trait ScanBackend: Send + Sync {
     /// Short human-readable strategy name (for benches/telemetry).
     fn name(&self) -> &'static str;
@@ -288,38 +798,157 @@ pub trait ScanBackend: Send + Sync {
     /// Worker-thread budget this backend schedules onto (1 = sequential).
     fn threads(&self) -> usize;
 
+    /// Buffer layout the engine should drive this backend with.
+    fn layout(&self) -> ScanLayout {
+        ScanLayout::Planar
+    }
+
     /// Time-invariant scan of one sequence: `a` (P), `bu` (L, P) in/out.
-    fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize);
+    fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize, scratch: &mut ScanScratch);
 
     /// Time-varying scan of one sequence: `a`, `bu` (L, P) in/out.
-    fn scan_tv(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize);
+    fn scan_tv(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize, scratch: &mut ScanScratch);
 
     /// Batched TI scan: `a` (P) shared, `bu` (B, L, P) in/out.
-    fn scan_batch_ti(&self, a: &[C32], bu: &mut [C32], batch: usize, l: usize, p: usize) {
+    #[allow(clippy::too_many_arguments)]
+    fn scan_batch_ti(
+        &self,
+        a: &[C32],
+        bu: &mut [C32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
         assert_eq!(bu.len(), batch * l * p);
-        if l == 0 || p == 0 {
+        if batch == 0 || l == 0 || p == 0 {
             return;
         }
         for seq in bu.chunks_mut(l * p) {
-            self.scan_ti(a, seq, l, p);
+            self.scan_ti(a, seq, l, p, scratch);
         }
     }
 
     /// Batched TV scan: `a`, `bu` both (B, L, P), `bu` in/out.
-    fn scan_batch_tv(&self, a: &[C32], bu: &mut [C32], batch: usize, l: usize, p: usize) {
+    #[allow(clippy::too_many_arguments)]
+    fn scan_batch_tv(
+        &self,
+        a: &[C32],
+        bu: &mut [C32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
         assert_eq!(a.len(), batch * l * p);
         assert_eq!(bu.len(), batch * l * p);
-        if l == 0 || p == 0 {
+        if batch == 0 || l == 0 || p == 0 {
             return;
         }
         for (aseq, seq) in a.chunks(l * p).zip(bu.chunks_mut(l * p)) {
-            self.scan_tv(aseq, seq, l, p);
+            self.scan_tv(aseq, seq, l, p, scratch);
         }
     }
 
     /// One streaming step `state ← a ∘ state + b` (online generation §3.3).
     fn scan_step(&self, a: &[C32], state: &mut [C32], b: &[C32]) {
         scan_step_inplace(a, state, b);
+    }
+
+    /// Planar TI scan of one sequence: `ar`/`ai` (P), `bur`/`bui` (L, P)
+    /// planes, in/out.
+    #[allow(clippy::too_many_arguments)]
+    fn scan_ti_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    );
+
+    /// Planar TV scan of one sequence: all planes (L, P), drive in/out.
+    #[allow(clippy::too_many_arguments)]
+    fn scan_tv_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    );
+
+    /// Batched planar TI scan: `ar`/`ai` (P) shared, `bur`/`bui` (B, L, P)
+    /// planes in/out.
+    #[allow(clippy::too_many_arguments)]
+    fn scan_batch_ti_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        assert_eq!(bur.len(), batch * l * p);
+        assert_eq!(bui.len(), batch * l * p);
+        if batch == 0 || l == 0 || p == 0 {
+            return;
+        }
+        for (sr, si) in bur.chunks_mut(l * p).zip(bui.chunks_mut(l * p)) {
+            self.scan_ti_planar(ar, ai, sr, si, l, p, scratch);
+        }
+    }
+
+    /// Batched planar TV scan: `ar`/`ai` and `bur`/`bui` all (B, L, P)
+    /// planes, drive in/out.
+    #[allow(clippy::too_many_arguments)]
+    fn scan_batch_tv_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        assert_eq!(ar.len(), batch * l * p);
+        assert_eq!(ai.len(), batch * l * p);
+        assert_eq!(bur.len(), batch * l * p);
+        assert_eq!(bui.len(), batch * l * p);
+        if batch == 0 || l == 0 || p == 0 {
+            return;
+        }
+        let rows = l * p;
+        for (((arseq, aiseq), sr), si) in ar
+            .chunks(rows)
+            .zip(ai.chunks(rows))
+            .zip(bur.chunks_mut(rows))
+            .zip(bui.chunks_mut(rows))
+        {
+            self.scan_tv_planar(arseq, aiseq, sr, si, l, p, scratch);
+        }
+    }
+
+    /// One planar streaming step over separate re/im planes.
+    fn scan_step_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        sr: &mut [f32],
+        si: &mut [f32],
+        br: &[f32],
+        bi: &[f32],
+    ) {
+        scan_step_planar_inplace(ar, ai, sr, si, br, bi);
     }
 }
 
@@ -328,6 +957,7 @@ pub trait ScanBackend: Send + Sync {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SequentialBackend;
 
+#[allow(clippy::too_many_arguments)]
 impl ScanBackend for SequentialBackend {
     fn name(&self) -> &'static str {
         "sequential"
@@ -337,12 +967,38 @@ impl ScanBackend for SequentialBackend {
         1
     }
 
-    fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize) {
+    fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize, _scratch: &mut ScanScratch) {
         scan_sequential_ti_inplace(a, bu, l, p);
     }
 
-    fn scan_tv(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize) {
+    fn scan_tv(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize, _scratch: &mut ScanScratch) {
         scan_sequential_tv_inplace(a, bu, l, p);
+    }
+
+    fn scan_ti_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        _scratch: &mut ScanScratch,
+    ) {
+        scan_sequential_ti_planar_inplace(ar, ai, bur, bui, l, p);
+    }
+
+    fn scan_tv_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        _scratch: &mut ScanScratch,
+    ) {
+        scan_sequential_tv_planar_inplace(ar, ai, bur, bui, l, p);
     }
 }
 
@@ -365,6 +1021,7 @@ impl ParallelBackend {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 impl ScanBackend for ParallelBackend {
     fn name(&self) -> &'static str {
         "parallel"
@@ -374,31 +1031,42 @@ impl ScanBackend for ParallelBackend {
         self.threads
     }
 
-    fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize) {
+    fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize, scratch: &mut ScanScratch) {
+        scratch.reserve_interleaved(p, self.threads);
         if self.threads <= 1 || l < 4 * self.threads {
             scan_sequential_ti_inplace(a, bu, l, p);
         } else {
-            scan_parallel_ti_inplace(a, bu, l, p, self.threads);
+            scan_parallel_ti_inplace_pooled(a, bu, l, p, self.threads, &mut scratch.c[0]);
         }
     }
 
-    fn scan_tv(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize) {
+    fn scan_tv(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize, scratch: &mut ScanScratch) {
+        scratch.reserve_interleaved(p, self.threads);
         if self.threads <= 1 || l < 4 * self.threads {
             scan_sequential_tv_inplace(a, bu, l, p);
         } else {
-            scan_parallel_tv_inplace(a, bu, l, p, self.threads);
+            scan_parallel_tv_inplace_pooled(a, bu, l, p, self.threads, &mut scratch.c[0]);
         }
     }
 
-    fn scan_batch_ti(&self, a: &[C32], bu: &mut [C32], batch: usize, l: usize, p: usize) {
+    fn scan_batch_ti(
+        &self,
+        a: &[C32],
+        bu: &mut [C32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
         assert_eq!(bu.len(), batch * l * p);
         if batch == 0 || l == 0 || p == 0 {
             return;
         }
+        scratch.reserve_interleaved(p, self.threads);
         let rows = l * p;
         let t = self.threads.max(1);
         if batch == 1 {
-            return self.scan_ti(a, bu, l, p);
+            return self.scan_ti(a, bu, l, p, scratch);
         }
         if t <= 1 {
             for seq in bu.chunks_mut(rows) {
@@ -417,13 +1085,14 @@ impl ScanBackend for ParallelBackend {
             });
         } else {
             let per_seq = t / batch;
+            let workers = scratch.c_workers(batch);
             std::thread::scope(|s| {
-                for seq in bu.chunks_mut(rows) {
+                for (seq, w) in bu.chunks_mut(rows).zip(workers.iter_mut()) {
                     s.spawn(move || {
                         if per_seq <= 1 || l < 4 * per_seq {
                             scan_sequential_ti_inplace(a, seq, l, p);
                         } else {
-                            scan_parallel_ti_inplace(a, seq, l, p, per_seq);
+                            scan_parallel_ti_inplace_pooled(a, seq, l, p, per_seq, w);
                         }
                     });
                 }
@@ -431,16 +1100,25 @@ impl ScanBackend for ParallelBackend {
         }
     }
 
-    fn scan_batch_tv(&self, a: &[C32], bu: &mut [C32], batch: usize, l: usize, p: usize) {
+    fn scan_batch_tv(
+        &self,
+        a: &[C32],
+        bu: &mut [C32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
         assert_eq!(a.len(), batch * l * p);
         assert_eq!(bu.len(), batch * l * p);
         if batch == 0 || l == 0 || p == 0 {
             return;
         }
+        scratch.reserve_interleaved(p, self.threads);
         let rows = l * p;
         let t = self.threads.max(1);
         if batch == 1 {
-            return self.scan_tv(a, bu, l, p);
+            return self.scan_tv(a, bu, l, p, scratch);
         }
         if t <= 1 {
             for (aseq, seq) in a.chunks(rows).zip(bu.chunks_mut(rows)) {
@@ -459,13 +1137,191 @@ impl ScanBackend for ParallelBackend {
             });
         } else {
             let per_seq = t / batch;
+            let workers = scratch.c_workers(batch);
             std::thread::scope(|s| {
-                for (aseq, seq) in a.chunks(rows).zip(bu.chunks_mut(rows)) {
+                for ((aseq, seq), w) in
+                    a.chunks(rows).zip(bu.chunks_mut(rows)).zip(workers.iter_mut())
+                {
                     s.spawn(move || {
                         if per_seq <= 1 || l < 4 * per_seq {
                             scan_sequential_tv_inplace(aseq, seq, l, p);
                         } else {
-                            scan_parallel_tv_inplace(aseq, seq, l, p, per_seq);
+                            scan_parallel_tv_inplace_pooled(aseq, seq, l, p, per_seq, w);
+                        }
+                    });
+                }
+            });
+        }
+    }
+
+    fn scan_ti_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        scratch.reserve_planar(p, self.threads);
+        if self.threads <= 1 || l < 4 * self.threads {
+            scan_sequential_ti_planar_inplace(ar, ai, bur, bui, l, p);
+        } else {
+            let w = &mut scratch.f[0];
+            scan_parallel_ti_planar_inplace(ar, ai, bur, bui, l, p, self.threads, w);
+        }
+    }
+
+    fn scan_tv_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        scratch.reserve_planar(p, self.threads);
+        if self.threads <= 1 || l < 4 * self.threads {
+            scan_sequential_tv_planar_inplace(ar, ai, bur, bui, l, p);
+        } else {
+            let w = &mut scratch.f[0];
+            scan_parallel_tv_planar_inplace(ar, ai, bur, bui, l, p, self.threads, w);
+        }
+    }
+
+    fn scan_batch_ti_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        assert_eq!(ar.len(), p);
+        assert_eq!(ai.len(), p);
+        assert_eq!(bur.len(), batch * l * p);
+        assert_eq!(bui.len(), batch * l * p);
+        if batch == 0 || l == 0 || p == 0 {
+            return;
+        }
+        scratch.reserve_planar(p, self.threads);
+        let rows = l * p;
+        let t = self.threads.max(1);
+        if batch == 1 {
+            return self.scan_ti_planar(ar, ai, bur, bui, l, p, scratch);
+        }
+        if t <= 1 {
+            for (sr, si) in bur.chunks_mut(rows).zip(bui.chunks_mut(rows)) {
+                scan_sequential_ti_planar_inplace(ar, ai, sr, si, l, p);
+            }
+        } else if batch >= t {
+            let per = batch.div_ceil(t);
+            std::thread::scope(|s| {
+                for (shr, shi) in bur.chunks_mut(per * rows).zip(bui.chunks_mut(per * rows)) {
+                    s.spawn(move || {
+                        for (sr, si) in shr.chunks_mut(rows).zip(shi.chunks_mut(rows)) {
+                            scan_sequential_ti_planar_inplace(ar, ai, sr, si, l, p);
+                        }
+                    });
+                }
+            });
+        } else {
+            let per_seq = t / batch;
+            let workers = scratch.f_workers(batch);
+            std::thread::scope(|s| {
+                for ((sr, si), w) in bur
+                    .chunks_mut(rows)
+                    .zip(bui.chunks_mut(rows))
+                    .zip(workers.iter_mut())
+                {
+                    s.spawn(move || {
+                        if per_seq <= 1 || l < 4 * per_seq {
+                            scan_sequential_ti_planar_inplace(ar, ai, sr, si, l, p);
+                        } else {
+                            scan_parallel_ti_planar_inplace(ar, ai, sr, si, l, p, per_seq, w);
+                        }
+                    });
+                }
+            });
+        }
+    }
+
+    fn scan_batch_tv_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        assert_eq!(ar.len(), batch * l * p);
+        assert_eq!(ai.len(), batch * l * p);
+        assert_eq!(bur.len(), batch * l * p);
+        assert_eq!(bui.len(), batch * l * p);
+        if batch == 0 || l == 0 || p == 0 {
+            return;
+        }
+        scratch.reserve_planar(p, self.threads);
+        let rows = l * p;
+        let t = self.threads.max(1);
+        if batch == 1 {
+            return self.scan_tv_planar(ar, ai, bur, bui, l, p, scratch);
+        }
+        if t <= 1 {
+            for (((arseq, aiseq), sr), si) in ar
+                .chunks(rows)
+                .zip(ai.chunks(rows))
+                .zip(bur.chunks_mut(rows))
+                .zip(bui.chunks_mut(rows))
+            {
+                scan_sequential_tv_planar_inplace(arseq, aiseq, sr, si, l, p);
+            }
+        } else if batch >= t {
+            let per = batch.div_ceil(t);
+            std::thread::scope(|s| {
+                for (((arsh, aish), shr), shi) in ar
+                    .chunks(per * rows)
+                    .zip(ai.chunks(per * rows))
+                    .zip(bur.chunks_mut(per * rows))
+                    .zip(bui.chunks_mut(per * rows))
+                {
+                    s.spawn(move || {
+                        for (((arseq, aiseq), sr), si) in arsh
+                            .chunks(rows)
+                            .zip(aish.chunks(rows))
+                            .zip(shr.chunks_mut(rows))
+                            .zip(shi.chunks_mut(rows))
+                        {
+                            scan_sequential_tv_planar_inplace(arseq, aiseq, sr, si, l, p);
+                        }
+                    });
+                }
+            });
+        } else {
+            let per_seq = t / batch;
+            let workers = scratch.f_workers(batch);
+            std::thread::scope(|s| {
+                for ((((arseq, aiseq), sr), si), w) in ar
+                    .chunks(rows)
+                    .zip(ai.chunks(rows))
+                    .zip(bur.chunks_mut(rows))
+                    .zip(bui.chunks_mut(rows))
+                    .zip(workers.iter_mut())
+                {
+                    s.spawn(move || {
+                        if per_seq <= 1 || l < 4 * per_seq {
+                            scan_sequential_tv_planar_inplace(arseq, aiseq, sr, si, l, p);
+                        } else {
+                            scan_parallel_tv_planar_inplace(arseq, aiseq, sr, si, l, p, per_seq, w);
                         }
                     });
                 }
@@ -474,19 +1330,152 @@ impl ScanBackend for ParallelBackend {
     }
 }
 
+/// Layout-override wrapper: delegates every scan to the inner backend but
+/// reports [`ScanLayout::Interleaved`], directing the engine to drive the
+/// original `[C32]` path. This keeps the interleaved kernels alive as the
+/// reference oracle the planar default is validated against (property
+/// tests, `--scan-layout interleaved`-style A/B runs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Interleaved<B: ScanBackend>(pub B);
+
+#[allow(clippy::too_many_arguments)]
+impl<B: ScanBackend> ScanBackend for Interleaved<B> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn threads(&self) -> usize {
+        self.0.threads()
+    }
+
+    fn layout(&self) -> ScanLayout {
+        ScanLayout::Interleaved
+    }
+
+    fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize, scratch: &mut ScanScratch) {
+        self.0.scan_ti(a, bu, l, p, scratch);
+    }
+
+    fn scan_tv(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize, scratch: &mut ScanScratch) {
+        self.0.scan_tv(a, bu, l, p, scratch);
+    }
+
+    fn scan_batch_ti(
+        &self,
+        a: &[C32],
+        bu: &mut [C32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        self.0.scan_batch_ti(a, bu, batch, l, p, scratch);
+    }
+
+    fn scan_batch_tv(
+        &self,
+        a: &[C32],
+        bu: &mut [C32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        self.0.scan_batch_tv(a, bu, batch, l, p, scratch);
+    }
+
+    fn scan_step(&self, a: &[C32], state: &mut [C32], b: &[C32]) {
+        self.0.scan_step(a, state, b);
+    }
+
+    fn scan_ti_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        self.0.scan_ti_planar(ar, ai, bur, bui, l, p, scratch);
+    }
+
+    fn scan_tv_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        self.0.scan_tv_planar(ar, ai, bur, bui, l, p, scratch);
+    }
+
+    fn scan_batch_ti_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        self.0.scan_batch_ti_planar(ar, ai, bur, bui, batch, l, p, scratch);
+    }
+
+    fn scan_batch_tv_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        batch: usize,
+        l: usize,
+        p: usize,
+        scratch: &mut ScanScratch,
+    ) {
+        self.0.scan_batch_tv_planar(ar, ai, bur, bui, batch, l, p, scratch);
+    }
+
+    fn scan_step_planar(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        sr: &mut [f32],
+        si: &mut [f32],
+        br: &[f32],
+        bi: &[f32],
+    ) {
+        self.0.scan_step_planar(ar, ai, sr, si, br, bi);
+    }
+}
+
 /// Pick a backend for a thread budget: ≤ 1 worker → [`SequentialBackend`],
-/// otherwise [`ParallelBackend`]; `threads = 0` auto-detects.
+/// otherwise [`ParallelBackend`]; `threads = 0` auto-detects. The returned
+/// backend prefers the **planar** layout (the default strategy).
 ///
 /// This is the resolver behind the `threads` knob everywhere — the CLI,
 /// the native server, and
 /// [`ForwardOptions::with_threads`](crate::ssm::api::ForwardOptions::with_threads)
 /// in the unified inference API all funnel through it.
 pub fn backend_for_threads(threads: usize) -> Box<dyn ScanBackend> {
+    backend_for(threads, ScanLayout::Planar)
+}
+
+/// [`backend_for_threads`] with an explicit layout: `Interleaved` wraps
+/// the same strategy in the layout-override oracle wrapper.
+pub fn backend_for(threads: usize, layout: ScanLayout) -> Box<dyn ScanBackend> {
     let t = crate::ssm::engine::auto_threads(threads);
-    if t <= 1 {
-        Box::new(SequentialBackend)
-    } else {
-        Box::new(ParallelBackend::new(t))
+    match (t <= 1, layout) {
+        (true, ScanLayout::Planar) => Box::new(SequentialBackend),
+        (false, ScanLayout::Planar) => Box::new(ParallelBackend::new(t)),
+        (true, ScanLayout::Interleaved) => Box::new(Interleaved(SequentialBackend)),
+        (false, ScanLayout::Interleaved) => Box::new(Interleaved(ParallelBackend::new(t))),
     }
 }
 
@@ -703,8 +1692,75 @@ mod tests {
         }
     }
 
+    /// The planar parallel kernels hit the same chunk boundaries as the
+    /// interleaved ones and must agree with the interleaved results
+    /// **exactly** (identical FP ops in identical order), including at
+    /// L = 1, chunk±1 and non-divisible remainders.
+    #[test]
+    fn planar_parallel_chunk_boundaries_match_interleaved_exactly() {
+        let mut g = Rng::new(17);
+        for &t in &[2usize, 3, 5, 8] {
+            for &l in &[1usize, 2, t - 1, t, t + 1, 4 * t - 1, 4 * t, 4 * t + 1, 10 * t + 3] {
+                let l = l.max(1);
+                let p = 3;
+                let a = rand_c32(&mut g, p, 0.6);
+                let b = rand_c32(&mut g, l * p, 1.0);
+                let (ar, ai) = planes(&a);
+                let (br, bi) = planes(&b);
+                let mut want = b.clone();
+                scan_parallel_ti_inplace(&a, &mut want, l, p, t);
+                let (mut xr, mut xi) = (br.clone(), bi.clone());
+                let mut s = vec![0.0f32; planar_scratch_len(p, t)];
+                scan_parallel_ti_planar_inplace(&ar, &ai, &mut xr, &mut xi, l, p, t, &mut s);
+                for (i, w) in want.iter().enumerate() {
+                    assert!(
+                        xr[i] == w.re && xi[i] == w.im,
+                        "TI t={t} l={l} idx {i}: {w:?} != {}+{}i",
+                        xr[i],
+                        xi[i]
+                    );
+                }
+
+                let a_tv = rand_c32(&mut g, l * p, 0.6);
+                let (atr, ati) = planes(&a_tv);
+                let mut want = b.clone();
+                scan_parallel_tv_inplace(&a_tv, &mut want, l, p, t);
+                let (mut xr, mut xi) = (br.clone(), bi.clone());
+                scan_parallel_tv_planar_inplace(&atr, &ati, &mut xr, &mut xi, l, p, t, &mut s);
+                for (i, w) in want.iter().enumerate() {
+                    assert!(
+                        xr[i] == w.re && xi[i] == w.im,
+                        "TV t={t} l={l} idx {i}: {w:?} != {}+{}i",
+                        xr[i],
+                        xi[i]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Split an interleaved C32 buffer into planar re/im planes.
+    fn planes(z: &[C32]) -> (Vec<f32>, Vec<f32>) {
+        (z.iter().map(|v| v.re).collect(), z.iter().map(|v| v.im).collect())
+    }
+
+    /// Compare planar planes against an interleaved reference.
+    fn close_planar(want: &[C32], xr: &[f32], xi: &[f32], tol: f32) -> prop::PropResult {
+        for (i, w) in want.iter().enumerate() {
+            let s = 1.0 + w.abs();
+            if (xr[i] - w.re).abs() > tol * s || (xi[i] - w.im).abs() > tol * s {
+                return Err(format!(
+                    "idx {i}: {:?} !~ {}+{}i",
+                    w, xr[i], xi[i]
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Every backend agrees with the sequential ground truth on single
-    /// sequences, for TI and TV multipliers.
+    /// sequences, for TI and TV multipliers — in both layouts, including
+    /// the `Interleaved` oracle wrapper.
     #[test]
     fn prop_backends_agree_single_sequence() {
         let backends: Vec<Box<dyn ScanBackend>> = vec![
@@ -712,6 +1768,7 @@ mod tests {
             Box::new(ParallelBackend::new(2)),
             Box::new(ParallelBackend::new(3)),
             Box::new(ParallelBackend::new(8)),
+            Box::new(Interleaved(ParallelBackend::new(3))),
         ];
         prop::check("ScanBackend single-seq equivalence", 25, |g| {
             let l = 1 + g.below(300);
@@ -721,15 +1778,27 @@ mod tests {
             let b = rand_c32(g, l * p, 1.0);
             let want_ti = scan_sequential_ti(&a, &b, l, p);
             let want_tv = scan_sequential(&a_tv, &b, l, p);
+            let (ar, ai) = planes(&a);
+            let (atr, ati) = planes(&a_tv);
+            let (br, bi) = planes(&b);
+            let mut scratch = ScanScratch::new();
             for be in &backends {
                 let mut got = b.clone();
-                be.scan_ti(&a, &mut got, l, p);
+                be.scan_ti(&a, &mut got, l, p, &mut scratch);
                 close(&want_ti, &got, 1e-4)
                     .map_err(|e| format!("{} TI: {e}", be.name()))?;
                 let mut got = b.clone();
-                be.scan_tv(&a_tv, &mut got, l, p);
+                be.scan_tv(&a_tv, &mut got, l, p, &mut scratch);
                 close(&want_tv, &got, 1e-4)
                     .map_err(|e| format!("{} TV: {e}", be.name()))?;
+                let (mut xr, mut xi) = (br.clone(), bi.clone());
+                be.scan_ti_planar(&ar, &ai, &mut xr, &mut xi, l, p, &mut scratch);
+                close_planar(&want_ti, &xr, &xi, 1e-4)
+                    .map_err(|e| format!("{} planar TI: {e}", be.name()))?;
+                let (mut xr, mut xi) = (br.clone(), bi.clone());
+                be.scan_tv_planar(&atr, &ati, &mut xr, &mut xi, l, p, &mut scratch);
+                close_planar(&want_tv, &xr, &xi, 1e-4)
+                    .map_err(|e| format!("{} planar TV: {e}", be.name()))?;
             }
             Ok(())
         });
@@ -764,15 +1833,27 @@ mod tests {
                     p,
                 );
             }
+            let (ar, ai) = planes(&a);
+            let (atr, ati) = planes(&a_tv);
+            let (br, bi) = planes(&b);
+            let mut scratch = ScanScratch::new();
             for be in &backends {
                 let mut got = b.clone();
-                be.scan_batch_ti(&a, &mut got, batch, l, p);
+                be.scan_batch_ti(&a, &mut got, batch, l, p, &mut scratch);
                 close(&want_ti, &got, 1e-4)
                     .map_err(|e| format!("{} batch TI (B={batch}): {e}", be.name()))?;
                 let mut got = b.clone();
-                be.scan_batch_tv(&a_tv, &mut got, batch, l, p);
+                be.scan_batch_tv(&a_tv, &mut got, batch, l, p, &mut scratch);
                 close(&want_tv, &got, 1e-4)
                     .map_err(|e| format!("{} batch TV (B={batch}): {e}", be.name()))?;
+                let (mut xr, mut xi) = (br.clone(), bi.clone());
+                be.scan_batch_ti_planar(&ar, &ai, &mut xr, &mut xi, batch, l, p, &mut scratch);
+                close_planar(&want_ti, &xr, &xi, 1e-4)
+                    .map_err(|e| format!("{} planar batch TI (B={batch}): {e}", be.name()))?;
+                let (mut xr, mut xi) = (br.clone(), bi.clone());
+                be.scan_batch_tv_planar(&atr, &ati, &mut xr, &mut xi, batch, l, p, &mut scratch);
+                close_planar(&want_tv, &xr, &xi, 1e-4)
+                    .map_err(|e| format!("{} planar batch TV (B={batch}): {e}", be.name()))?;
             }
             Ok(())
         });
@@ -858,5 +1939,177 @@ mod tests {
         let b = vec![C32::new(2.0, -1.0)];
         let xs = scan_parallel_ti(&a, &b, 1, 1, 8);
         assert_eq!(xs[0], b[0]); // x_1 = b_1
+    }
+
+    /// The planar streaming step replayed over a sequence equals the
+    /// offline planar TI scan — and the interleaved step — exactly.
+    #[test]
+    fn scan_step_planar_replay_equals_offline() {
+        let mut g = Rng::new(23);
+        let (l, p) = (64, 5);
+        let a = rand_c32(&mut g, p, 0.6);
+        let b = rand_c32(&mut g, l * p, 1.0);
+        let offline = scan_sequential_ti(&a, &b, l, p);
+        let (ar, ai) = planes(&a);
+        let (br, bi) = planes(&b);
+        let be = SequentialBackend;
+        let (mut sr, mut si) = (vec![0.0f32; p], vec![0.0f32; p]);
+        let mut state = vec![C32::ZERO; p];
+        for k in 0..l {
+            let row = k * p;
+            be.scan_step_planar(&ar, &ai, &mut sr, &mut si, &br[row..row + p], &bi[row..row + p]);
+            be.scan_step(&a, &mut state, &b[row..row + p]);
+            for j in 0..p {
+                let w = offline[row + j];
+                assert!(
+                    (sr[j] - w.re).abs() < 1e-6 * (1.0 + w.abs())
+                        && (si[j] - w.im).abs() < 1e-6 * (1.0 + w.abs()),
+                    "k={k} j={j}"
+                );
+                assert_eq!(sr[j], state[j].re, "planar/interleaved step diverged k={k} j={j}");
+                assert_eq!(si[j], state[j].im, "planar/interleaved step diverged k={k} j={j}");
+            }
+        }
+    }
+
+    /// Degenerate shapes — L = 0, P = 0, L < threads, L = 1, single-chunk
+    /// remainders — are accepted panic-free by every kernel and every
+    /// backend entry point, in both layouts.
+    #[test]
+    fn degenerate_shapes_are_panic_free() {
+        let mut g = Rng::new(29);
+        let backends: Vec<Box<dyn ScanBackend>> = vec![
+            Box::new(SequentialBackend),
+            Box::new(ParallelBackend::new(4)),
+            Box::new(Interleaved(ParallelBackend::new(4))),
+        ];
+        let mut scratch = ScanScratch::new();
+        for &(l, p, t) in &[
+            (0usize, 3usize, 4usize), // empty sequence
+            (5, 0, 4),                // empty state
+            (0, 0, 4),                // both empty
+            (1, 3, 8),                // L < threads (clamps to 1 chunk)
+            (2, 3, 8),                // L < threads, 2 chunks
+            (3, 1, 2),                // single-column state
+            (9, 3, 4),                // non-divisible remainder (chunk 3, last 3)
+            (7, 2, 3),                // remainder chunk shorter than the rest
+        ] {
+            let a = rand_c32(&mut g, p, 0.6);
+            let a_tv = rand_c32(&mut g, l * p, 0.6);
+            let b = rand_c32(&mut g, l * p, 1.0);
+            let (ar, ai) = planes(&a);
+            let (atr, ati) = planes(&a_tv);
+            let (br, bi) = planes(&b);
+
+            // free kernels (in-place, pooled and allocating forms)
+            let mut x = b.clone();
+            scan_sequential_ti_inplace(&a, &mut x, l, p);
+            let mut x = b.clone();
+            scan_sequential_tv_inplace(&a_tv, &mut x, l, p);
+            let mut x = b.clone();
+            scan_parallel_ti_inplace(&a, &mut x, l, p, t);
+            let mut x = b.clone();
+            scan_parallel_tv_inplace(&a_tv, &mut x, l, p, t);
+            let _ = scan_parallel_ti(&a, &b, l, p, t);
+            let _ = scan_parallel_tv(&a_tv, &b, l, p, t);
+            let (mut xr, mut xi) = (br.clone(), bi.clone());
+            scan_sequential_ti_planar_inplace(&ar, &ai, &mut xr, &mut xi, l, p);
+            let (mut xr, mut xi) = (br.clone(), bi.clone());
+            scan_sequential_tv_planar_inplace(&atr, &ati, &mut xr, &mut xi, l, p);
+            let mut s = vec![0.0f32; planar_scratch_len(p, t)];
+            let (mut xr, mut xi) = (br.clone(), bi.clone());
+            scan_parallel_ti_planar_inplace(&ar, &ai, &mut xr, &mut xi, l, p, t, &mut s);
+            let (mut xr, mut xi) = (br.clone(), bi.clone());
+            scan_parallel_tv_planar_inplace(&atr, &ati, &mut xr, &mut xi, l, p, t, &mut s);
+
+            // backend entry points, single and batched (B = 0 included)
+            for be in &backends {
+                for batch in [0usize, 1, 3] {
+                    let ab = rand_c32(&mut g, batch * l * p, 0.6);
+                    let bb = rand_c32(&mut g, batch * l * p, 1.0);
+                    let (abr, abi) = planes(&ab);
+                    let (bbr, bbi) = planes(&bb);
+                    let mut x = bb.clone();
+                    be.scan_batch_ti(&a, &mut x, batch, l, p, &mut scratch);
+                    let mut x = bb.clone();
+                    be.scan_batch_tv(&ab, &mut x, batch, l, p, &mut scratch);
+                    let (mut xr, mut xi) = (bbr.clone(), bbi.clone());
+                    be.scan_batch_ti_planar(&ar, &ai, &mut xr, &mut xi, batch, l, p, &mut scratch);
+                    let (mut xr, mut xi) = (bbr, bbi);
+                    be.scan_batch_tv_planar(
+                        &abr,
+                        &abi,
+                        &mut xr,
+                        &mut xi,
+                        batch,
+                        l,
+                        p,
+                        &mut scratch,
+                    );
+                }
+                let mut x = b.clone();
+                be.scan_ti(&a, &mut x, l, p, &mut scratch);
+                let mut x = b.clone();
+                be.scan_tv(&a_tv, &mut x, l, p, &mut scratch);
+            }
+        }
+    }
+
+    /// The pooled chunk summaries stop allocating after the first call:
+    /// capacity is stable across repeat scans and across every batch
+    /// sharding branch (B = 1 chunked, B < T, B ≥ T).
+    #[test]
+    fn scan_scratch_capacity_is_stable_after_warmup() {
+        let mut g = Rng::new(31);
+        let be = ParallelBackend::new(4);
+        let (l, p) = (64, 6);
+        let a = rand_c32(&mut g, p, 0.6);
+        let mut scratch = ScanScratch::new();
+        // warm up with the single-sequence chunked branch
+        let mut b = rand_c32(&mut g, l * p, 1.0);
+        be.scan_ti(&a, &mut b, l, p, &mut scratch);
+        let high_water = scratch.capacity_bytes();
+        assert!(high_water > 0);
+        // every other branch must fit inside the reserved envelope
+        for batch in [1usize, 2, 3, 4, 9] {
+            let mut bb = rand_c32(&mut g, batch * l * p, 1.0);
+            be.scan_batch_ti(&a, &mut bb, batch, l, p, &mut scratch);
+            let (ar, ai) = planes(&a);
+            let (mut xr, mut xi) = {
+                let bb = rand_c32(&mut g, batch * l * p, 1.0);
+                planes(&bb)
+            };
+            be.scan_batch_ti_planar(&ar, &ai, &mut xr, &mut xi, batch, l, p, &mut scratch);
+        }
+        // planar planes were reserved on first planar use; after that the
+        // envelope must hold for good
+        let planar_water = scratch.capacity_bytes();
+        for batch in [1usize, 3, 9] {
+            let mut bb = rand_c32(&mut g, batch * l * p, 1.0);
+            be.scan_batch_ti(&a, &mut bb, batch, l, p, &mut scratch);
+            let (ar, ai) = planes(&a);
+            let bb = rand_c32(&mut g, batch * l * p, 1.0);
+            let (mut xr, mut xi) = planes(&bb);
+            be.scan_batch_ti_planar(&ar, &ai, &mut xr, &mut xi, batch, l, p, &mut scratch);
+            let bb = rand_c32(&mut g, batch * l * p, 1.0);
+            let (atr, ati) = planes(&rand_c32(&mut g, batch * l * p, 0.6));
+            let (mut xr, mut xi) = planes(&bb);
+            be.scan_batch_tv_planar(&atr, &ati, &mut xr, &mut xi, batch, l, p, &mut scratch);
+            assert_eq!(
+                scratch.capacity_bytes(),
+                planar_water,
+                "scratch grew at B={batch} after warmup"
+            );
+        }
+    }
+
+    #[test]
+    fn backend_for_resolves_layouts() {
+        assert_eq!(backend_for_threads(1).layout(), ScanLayout::Planar);
+        assert_eq!(backend_for_threads(4).layout(), ScanLayout::Planar);
+        let il = backend_for(4, ScanLayout::Interleaved);
+        assert_eq!(il.layout(), ScanLayout::Interleaved);
+        assert_eq!(il.threads(), 4);
+        assert_eq!(backend_for(1, ScanLayout::Interleaved).layout(), ScanLayout::Interleaved);
     }
 }

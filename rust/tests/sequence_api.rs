@@ -10,6 +10,7 @@ use s5::ssm::api::{Batch, ForwardOptions, SequenceModel, Session};
 use s5::ssm::engine::EngineWorkspace;
 use s5::ssm::rnn::{CruLike, GruCell};
 use s5::ssm::s5::{S5Config, S5Model};
+use s5::ssm::scan::ScanLayout;
 use s5::testing::prop;
 use std::sync::Arc;
 use std::time::Duration;
@@ -91,6 +92,60 @@ fn session_reset_and_dt_paths() {
     session.reset();
     let yfast = session.step_dt(&x, 3.0);
     assert_ne!(y1, yfast, "Δt must influence the CRU-like output");
+}
+
+// ---------------------------------------------------------------------------
+// planar (default) ≡ interleaved oracle
+// ---------------------------------------------------------------------------
+
+/// The default planar scan layout reproduces the interleaved `C32` oracle
+/// **bit-for-bit** through the full `SequenceModel` surface — batched
+/// prefill at sequential and parallel thread budgets, across batch shapes
+/// and the chunk-boundary lengths the parallel scan shards at.
+#[test]
+fn prop_planar_prefill_matches_interleaved_oracle() {
+    prop::check("planar ≡ interleaved (API)", 6, |g| {
+        let model = s5_model(31 + g.below(100) as u64, 2);
+        let batch = 1 + g.below(5);
+        // lengths straddling the T=3 parallel backend's 4·T fallback and
+        // its chunk remainders, plus a random longer one
+        let l = [11usize, 12, 13, 24 + g.below(40)][g.below(4)];
+        let u: Vec<f32> = (0..batch * l * 2).map(|_| g.normal() as f32).collect();
+        for threads in [1usize, 3] {
+            let planar = ForwardOptions::new().with_threads(threads);
+            let oracle = ForwardOptions::new().with_scan(threads, ScanLayout::Interleaved);
+            assert_eq!(planar.scan_layout(), ScanLayout::Planar);
+            assert_eq!(oracle.scan_layout(), ScanLayout::Interleaved);
+            let mut wp = EngineWorkspace::new();
+            let mut wi = EngineWorkspace::new();
+            let got = model.prefill(Batch::new(&u, batch, l, 2), &planar, &mut wp);
+            let want = model.prefill(Batch::new(&u, batch, l, 2), &oracle, &mut wi);
+            if got != want {
+                return Err(format!("B={batch} L={l} t={threads}: {got:?} vs {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A streaming session (planar per-step kernel) reproduces the
+/// *interleaved* sequential prefill bit-for-bit too: the layout changes
+/// nothing, anywhere in the stack.
+#[test]
+fn session_steps_match_interleaved_prefill_bit_for_bit() {
+    let model: Arc<dyn SequenceModel> = Arc::new(s5_model(7, 2));
+    let l = 40;
+    let mut rng = Rng::new(9);
+    let u = rng.normal_vec_f32(l * 2);
+    let mut ws = EngineWorkspace::new();
+    let oracle = model.prefill(
+        Batch::single(&u, l, 2),
+        &ForwardOptions::new().with_scan(1, ScanLayout::Interleaved),
+        &mut ws,
+    );
+    let mut session = Session::new(model, ForwardOptions::new());
+    let streamed = session.prefill(&u, l);
+    assert_eq!(oracle, streamed);
 }
 
 // ---------------------------------------------------------------------------
