@@ -27,7 +27,7 @@ use s5::ssm::engine::EngineWorkspace;
 use s5::ssm::s5::{S5Config, S5Model};
 use s5::ssm::scan;
 use s5::ssm::scan::{
-    backend_for_threads, ParallelBackend, ScanBackend, ScanScratch, SequentialBackend,
+    backend_for_threads, ParallelBackend, ScanBackend, ScanExec, ScanScratch, SequentialBackend,
 };
 use s5::util::Table;
 
@@ -213,6 +213,58 @@ fn main() {
             par_planar.mean,
             elems / par_planar.mean / 1e6,
         ));
+    }
+
+    // 6. §Tentpole (worker-pool PR): persistent-pool vs scoped
+    // spawn-per-call dispatch of the same planar parallel scan at the
+    // serving shape — the per-batch spawn overhead the pool removes.
+    // Identical kernels, identical chunking, bit-identical results
+    // (tests/scan_matrix.rs); only the dispatch differs. A short-L shape
+    // is included because dispatch overhead is amortized at long L but
+    // dominates high-rate short-sequence serving.
+    {
+        let tthr = max_threads.clamp(2, 8);
+        let mut t = Table::new(&["shape", "dispatch", "time", "elements/s"]);
+        for &(lt, pt, tag) in &[(16384usize, 256usize, "serving"), (2048, 64, "short")] {
+            let a = rand_c32(&mut rng, pt, 0.5);
+            let b = rand_c32(&mut rng, lt * pt, 1.0);
+            let ar: Vec<f32> = a.iter().map(|z| z.re).collect();
+            let ai: Vec<f32> = a.iter().map(|z| z.im).collect();
+            let br: Vec<f32> = b.iter().map(|z| z.re).collect();
+            let bi: Vec<f32> = b.iter().map(|z| z.im).collect();
+            let elems = (lt * pt) as f64;
+            let scoped_be = ParallelBackend::with_exec(tthr, ScanExec::Scoped);
+            let pooled_be = ParallelBackend::new(tthr);
+            let mut scratch = ScanScratch::new();
+            let (mut xr, mut xi) = (br.clone(), bi.clone());
+            let scoped = measure(&format!("pool A/B scoped {tag}"), || {
+                xr.copy_from_slice(&br);
+                xi.copy_from_slice(&bi);
+                scoped_be.scan_ti_planar(&ar, &ai, &mut xr, &mut xi, lt, pt, &mut scratch);
+                std::hint::black_box((&xr, &xi));
+            });
+            let pooled = measure(&format!("pool A/B pooled {tag}"), || {
+                xr.copy_from_slice(&br);
+                xi.copy_from_slice(&bi);
+                pooled_be.scan_ti_planar(&ar, &ai, &mut xr, &mut xi, lt, pt, &mut scratch);
+                std::hint::black_box((&xr, &xi));
+            });
+            for (name, st) in [("scoped spawn-per-call", &scoped), ("persistent pool", &pooled)] {
+                t.row(&[
+                    format!("L={lt} P={pt}"),
+                    name.into(),
+                    fmt_secs(st.mean),
+                    format!("{:.0}M", elems / st.mean / 1e6),
+                ]);
+            }
+            println!(
+                "pool A/B ({tag}, L={lt}, P={pt}, T={tthr}): pooled speedup {:.2}x",
+                scoped.mean / pooled.mean
+            );
+            snap.push((format!("pool_ab_{tag}/scoped"), scoped.mean, elems / scoped.mean / 1e6));
+            snap.push((format!("pool_ab_{tag}/pooled"), pooled.mean, elems / pooled.mean / 1e6));
+        }
+        println!("## persistent pool vs scoped spawn dispatch (planar TI)\n{}", t.render());
     }
 
     // 3. linear growth in L

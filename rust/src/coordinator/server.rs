@@ -25,6 +25,11 @@
 //! Timescales are `f64` end to end (request → coalescing key → model), so
 //! server-side timescale grouping can never alias two nearby values
 //! through an f32 round trip.
+//!
+//! Both backends spawn their one long-lived worker through the shared
+//! [`spawn_worker`] path; per-batch parallelism inside the native engine
+//! dispatches on the process-wide persistent worker pool
+//! ([`crate::runtime::pool`]) instead of spawning per request.
 
 use anyhow::Context;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -33,6 +38,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::data::batcher::pack_rows_into;
+use crate::runtime::pool::spawn_worker;
 use crate::ssm::api::{Batch, ForwardOptions, SequenceModel, Session, SessionPool};
 use crate::ssm::engine::{auto_threads, EngineWorkspace};
 use crate::ssm::s5::S5Model;
@@ -183,7 +189,12 @@ impl NativeInferenceServer {
     /// The worker shares the model `Arc`, owns one [`EngineWorkspace`]
     /// (reused across batches: zero steady-state allocation on the big
     /// buffers) and a scan backend sized to `cfg.threads` (0 =
-    /// auto-detect).
+    /// auto-detect). The backend dispatches on the **process-wide
+    /// persistent worker pool** (see [`crate::runtime::pool`]): the
+    /// batch worker, every streaming [`Session`] handed out by
+    /// [`NativeInferenceServer::open_session`], and any co-resident
+    /// server share one pool, so high-rate serving performs zero
+    /// steady-state thread spawns after warmup.
     pub fn start_model(
         model: Arc<dyn SequenceModel>,
         l: usize,
@@ -197,7 +208,7 @@ impl NativeInferenceServer {
         let wstats = stats.clone();
         let opts = ForwardOptions::new().with_threads(auto_threads(cfg.threads));
         let sessions = SessionPool::new(model.clone(), opts.clone());
-        let worker = std::thread::spawn(move || {
+        let worker = spawn_worker("s5-native-server", move || {
             native_worker_loop(model, rx, cfg, opts, l, row, d_output, wstats);
         });
         NativeInferenceServer {
@@ -343,7 +354,7 @@ impl InferenceServer {
         let stats = Arc::new(ServerStats::default());
         let wstats = stats.clone();
         let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
-        let worker = std::thread::spawn(move || {
+        let worker = spawn_worker("s5-pjrt-server", move || {
             let setup = (|| -> anyhow::Result<(Artifact, Vec<Literal>)> {
                 let client = Client::cpu()?;
                 let art = Artifact::load(&dir, &fwd_name, &client)?;

@@ -87,7 +87,43 @@
 //! reference, streaming ≡ batched exactly) or chunked-parallel (Blelloch
 //! three-phase within a sequence, sequence-sharding across a batch, with
 //! pooled chunk summaries in [`ssm::scan::ScanScratch`] so steady-state
-//! serving allocates nothing).
+//! serving allocates nothing on the scan buffers).
+//!
+//! ## Threading model
+//!
+//! Parallel work — the chunked scans and the dense per-sequence engine
+//! stages — dispatches on an [`runtime::pool::Executor`] instead of
+//! spawning threads:
+//!
+//! * **Pool ownership.** By default every multi-threaded backend
+//!   ([`ssm::scan::backend_for_threads`],
+//!   [`ssm::api::ForwardOptions::with_threads`], the native server's
+//!   `--threads` knob) dispatches onto the **process-wide persistent
+//!   worker pool** ([`runtime::pool::global_pool`]): spawned lazily
+//!   once, sized to `available_parallelism − 1` workers (the calling
+//!   thread participates in every run; override with
+//!   `S5_POOL_WORKERS`), parked when idle, joined on drop. The batch
+//!   worker of [`coordinator::server::NativeInferenceServer`], its
+//!   pooled streaming [`ssm::api::Session`]s and any co-resident server
+//!   share this one pool, so high-rate serving performs **zero
+//!   steady-state thread spawns** (dispatch itself costs O(shards)
+//!   small boxed closures per parallel stage; the big data buffers stay
+//!   allocation-free in the workspace). A dedicated
+//!   [`runtime::pool::WorkerPool`] can be pinned per backend via
+//!   [`ssm::scan::ScanExec::Pool`].
+//! * **Opting out.** [`ssm::api::ForwardOptions::with_exec`] (or
+//!   [`ssm::scan::backend_for_exec`]) selects
+//!   [`ssm::scan::ScanExec::Scoped`] — the pre-pool spawn-per-call
+//!   scoped threads — or [`ssm::scan::ScanExec::Inline`], which runs
+//!   the same chunked decomposition single-threaded on the caller.
+//! * **Invariance.** The executor never changes the shard
+//!   decomposition (that is fixed by the backend's thread budget), so
+//!   pooled ≡ scoped ≡ inline **bit-for-bit** — pinned across every
+//!   kernel × layout × shape combination by the `tests/scan_matrix.rs`
+//!   equivalence matrix, which is what lets future scheduling changes
+//!   land without numeric drift.
+//! * **Streaming.** A session step is latency-bound O(P·H) and always
+//!   runs inline on the caller's thread; only prefills fan out.
 //!
 //! ## Module map
 //!
@@ -100,7 +136,7 @@
 //! | [`fft`] | radix-2 FFT (substrate for the S4 convolution baseline) |
 //! | [`ssm`] | HiPPO init, discretization, scans, batched engine, unified API, S5/S4/S4D |
 //! | [`data`] | the nine synthetic workload generators + batching |
-//! | [`runtime`] | manifests + native npz store; PJRT artifact loading (`pjrt` feature) |
+//! | [`runtime`] | manifests + native npz store; persistent worker pool; PJRT artifact loading (`pjrt` feature) |
 //! | [`coordinator`] | configs, trainer (`pjrt`), LR schedules, metrics, server |
 //! | [`testing`] | mini property-testing harness (offline: no `proptest`) |
 //! | [`bench`] | shared harness for the paper-table benchmark binaries |

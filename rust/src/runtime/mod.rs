@@ -16,12 +16,19 @@
 //! the native engine uses them for `s5 info` and for serving
 //! `<preset>_init.npz` / trained checkpoints without PJRT.
 
+//!
+//! [`pool`] is runtime in the other sense: the process-wide persistent
+//! worker pool and the [`pool::Executor`] dispatch handle every parallel
+//! stage of the native engine runs on (no PJRT involved; always
+//! available).
+
 #[cfg(feature = "pjrt")]
 pub mod artifact;
 pub mod manifest;
 pub mod npz;
 #[cfg(feature = "pjrt")]
 pub mod params;
+pub mod pool;
 
 #[cfg(feature = "pjrt")]
 pub use artifact::{Artifact, Client};
@@ -29,3 +36,4 @@ pub use manifest::{Dtype, Manifest, TensorSpec};
 pub use npz::NpzStore;
 #[cfg(feature = "pjrt")]
 pub use params::ParamStore;
+pub use pool::{Executor, WorkerPool};

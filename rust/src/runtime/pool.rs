@@ -1,0 +1,567 @@
+//! Persistent worker pool: how the native engine dispatches parallelism.
+//!
+//! Before this module, every multi-threaded stage in the native stack —
+//! the chunked Blelloch scans of [`crate::ssm::scan`], the dense per-
+//! sequence stages of [`crate::ssm::engine`] (`par_zip*`), the batch
+//! sharding of the `ScanBackend`s — paid a `std::thread::scope`
+//! spawn/join per call (~20 spawn sites). At serving request rates that
+//! per-batch spawn overhead is pure waste: the paper's pitch is that the
+//! scan "leverages efficient and widely implemented parallel scans"
+//! (Smith et al. 2023, §2.2), and on CPU an efficient parallel scan means
+//! fanning chunks onto *already-running* workers.
+//!
+//! Three pieces:
+//!
+//! * [`WorkerPool`] — N persistent, parked worker threads (one-time
+//!   spawn, condvar wakeup, joined on drop). [`WorkerPool::run`] /
+//!   [`WorkerPool::run_tasks`] are *scoped*: the shard closures may
+//!   borrow stack data exactly like `std::thread::scope` closures do,
+//!   because the call blocks until every shard has executed. The calling
+//!   thread participates in the work (it claims shards alongside the
+//!   workers), so a run always completes even when every worker is busy
+//!   — which also makes nested runs (batch sharding → in-sequence
+//!   chunking) deadlock-free by induction: a waiting caller has no
+//!   unclaimed shards left, and every claimed shard is being executed by
+//!   a thread that never blocks on the pool. A panicking shard poisons
+//!   only that task: the worker survives, the pool stays usable, the
+//!   remaining shards still run, and the first panic **payload** is
+//!   re-raised on the calling thread after the run completes. (The other
+//!   executors differ in detail: `thread::scope` re-raises with its own
+//!   "scoped thread panicked" payload, and inline execution propagates
+//!   immediately, skipping the remaining shards — panic behavior is a
+//!   best-effort debugging surface, not part of the bit-for-bit
+//!   equivalence contract, which covers successful runs only.)
+//! * [`Executor`] — the dispatch strategy handle the kernels and engine
+//!   stages take instead of spawning: [`Inline`](Executor::Inline) (run
+//!   shards on the caller, no threads), [`Scoped`](Executor::Scoped)
+//!   (the pre-pool spawn-per-call fallback) or
+//!   [`Pool`](Executor::Pool). All three run the identical shard
+//!   closures over the identical data decomposition, so results agree
+//!   **bit-for-bit** across executors — pinned by the
+//!   `tests/scan_matrix.rs` equivalence matrix, which is what lets
+//!   future scheduling changes land without numeric drift.
+//! * [`global_pool`] — the lazily-spawned process-wide pool every
+//!   [`backend_for_threads`](crate::ssm::scan::backend_for_threads)
+//!   strategy and the native server share, sized to
+//!   `available_parallelism − 1` workers (the caller is the +1) and
+//!   overridable with `S5_POOL_WORKERS` (CI oversubscribes it to shake
+//!   out scheduling bugs).
+//!
+//! Shard *decomposition* (how many chunks, which rows) is decided by the
+//! backends' `threads()` budget, never by the executor — the pool can be
+//! bigger or smaller than any budget without changing a single result.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A type-erased shard closure. The `'static` bound is a lie told once,
+/// inside [`WorkerPool::run_tasks`], where the completion barrier makes
+/// it true in practice (no task outlives the borrowed environment).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct GroupState {
+    /// shards executed so far (a run is complete when `done == n`)
+    done: usize,
+    /// first panic payload raised by a shard, re-raised on the caller
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+/// One scoped run: the remaining shard closures plus the completion
+/// latch. Workers and the calling thread claim tasks until none remain;
+/// the caller then blocks on `done == n`.
+struct Group {
+    tasks: Mutex<Vec<Task>>,
+    n: usize,
+    state: Mutex<GroupState>,
+    cv: Condvar,
+}
+
+impl Group {
+    /// Claim one shard and execute it. Returns false when no shards
+    /// remain to claim. Panics are captured into the group state; the
+    /// claim is always counted, so the completion latch cannot hang.
+    fn claim_and_run(&self) -> bool {
+        let task = self.tasks.lock().unwrap().pop();
+        let task = match task {
+            Some(t) => t,
+            None => return false,
+        };
+        let result = catch_unwind(AssertUnwindSafe(task));
+        let mut st = self.state.lock().unwrap();
+        if let Err(payload) = result {
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+        }
+        st.done += 1;
+        if st.done == self.n {
+            self.cv.notify_all();
+        }
+        true
+    }
+}
+
+struct Shared {
+    /// pending work: one entry per outstanding shard (stale entries for
+    /// fully-claimed groups are popped and discarded cheaply)
+    queue: Mutex<VecDeque<Arc<Group>>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    /// workers currently running their loop (drops to 0 after shutdown)
+    live: AtomicUsize,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let group = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(g) = q.pop_front() {
+                    break Some(g);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        match group {
+            Some(g) => {
+                g.claim_and_run();
+            }
+            None => break,
+        }
+    }
+    shared.live.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// A fixed-size pool of persistent, parked worker threads with a scoped
+/// fork-join `run` primitive. See the module docs for the execution and
+/// panic model. Dropping the pool joins every worker.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers` persistent threads (clamped to ≥ 1).
+    ///
+    /// Sizing rule of thumb: a run on a pool of W workers executes on up
+    /// to W + 1 threads (the caller participates), so a pool intended to
+    /// saturate T cores wants W = T − 1 workers.
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            live: AtomicUsize::new(workers),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("s5-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("failed to spawn pool worker thread")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of worker threads this pool spawned at construction. The
+    /// pool never spawns again — `workers()` is also the total thread
+    /// count it will ever create (the no-steady-state-spawn contract the
+    /// lifecycle tests pin).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Worker threads currently running their loop (equals [`workers`]
+    /// while the pool is alive; reaches 0 only during drop).
+    ///
+    /// [`workers`]: WorkerPool::workers
+    pub fn live_workers(&self) -> usize {
+        self.shared.live.load(Ordering::SeqCst)
+    }
+
+    /// Shards currently queued but not yet claimed (telemetry; includes
+    /// stale entries of already-completed runs until workers drain them).
+    pub fn queued(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Run `n_shards` invocations of `f(shard)` across the pool and the
+    /// calling thread, returning when all have completed. `f` may borrow
+    /// stack data (the call is a completion barrier, exactly like
+    /// `std::thread::scope`). Re-raises the first shard panic.
+    pub fn run<F>(&self, n_shards: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let f = &f;
+        self.run_tasks((0..n_shards).map(move |i| move || f(i)));
+    }
+
+    /// Run one closure per shard (each may own disjoint `&mut` borrows,
+    /// the way `thread::scope` spawn bodies do) across the pool and the
+    /// calling thread; returns when every closure has executed.
+    ///
+    /// Dispatch cost is O(shards) small heap objects (boxed closures +
+    /// one latch) — negligible against the OS-thread spawn/join this
+    /// replaces, and amortized by any non-trivial shard body. A future
+    /// zero-alloc fast path could pool the task buffers if profiles ever
+    /// show it.
+    pub fn run_tasks<'env, I, F>(&self, tasks: I)
+    where
+        I: IntoIterator<Item = F>,
+        F: FnOnce() + Send + 'env,
+    {
+        let mut boxed: Vec<Task> = tasks
+            .into_iter()
+            .map(|t| {
+                let t: Box<dyn FnOnce() + Send + 'env> = Box::new(t);
+                // SAFETY: every task is executed (and dropped) before
+                // this call returns — the caller claims until the task
+                // list is empty, then blocks on the `done == n` latch —
+                // so no closure ever outlives the `'env` borrows it
+                // captures. Only the lifetime is transmuted.
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(t) }
+            })
+            .collect();
+        let n = boxed.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            // single shard: run inline, no synchronization traffic
+            return (boxed.pop().unwrap())();
+        }
+        let group = Arc::new(Group {
+            tasks: Mutex::new(boxed),
+            n,
+            state: Mutex::new(GroupState { done: 0, panic: None }),
+            cv: Condvar::new(),
+        });
+        {
+            // one wakeup ticket per shard the workers could take (the
+            // caller is about to claim at least one itself)
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..n - 1 {
+                q.push_back(group.clone());
+            }
+        }
+        // wake at most one parked worker per ticket — notify_all would
+        // thundering-herd a large pool on a small run. A notification
+        // landing while every worker is busy is not lost: workers always
+        // re-check the queue before parking.
+        for _ in 0..n - 1 {
+            self.shared.cv.notify_one();
+        }
+        // the calling thread participates until no shard is left to claim
+        while group.claim_and_run() {}
+        // ...then waits for shards claimed by workers to finish
+        let mut st = group.state.lock().unwrap();
+        while st.done < n {
+            st = group.cv.wait(st).unwrap();
+        }
+        let panicked = st.panic.take();
+        drop(st);
+        if let Some(payload) = panicked {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers())
+            .field("live", &self.live_workers())
+            .finish()
+    }
+}
+
+/// How a parallel stage dispatches its shard closures. Cheap to copy;
+/// kernels and engine stages take one of these instead of spawning.
+///
+/// All three variants execute the identical closures over the identical
+/// decomposition — results are bit-for-bit executor-invariant (pinned by
+/// `tests/scan_matrix.rs`).
+#[derive(Clone, Copy)]
+pub enum Executor<'a> {
+    /// Run every shard on the calling thread, in order. Single-threaded
+    /// execution of the same chunked decomposition — the deterministic
+    /// debugging mode, and what sequential backends report.
+    Inline,
+    /// Spawn one scoped thread per shard (`std::thread::scope`) — the
+    /// pre-pool behavior, kept as the fallback and as the bench baseline
+    /// the pooled path is A/B'd against.
+    Scoped,
+    /// Dispatch onto a persistent [`WorkerPool`] (the calling thread
+    /// participates). The default for every pooled scan backend.
+    Pool(&'a WorkerPool),
+}
+
+impl<'a> Executor<'a> {
+    /// Execute one closure per shard to completion (a fork-join barrier
+    /// in every variant).
+    pub fn run_tasks<I, F>(&self, tasks: I)
+    where
+        I: IntoIterator<Item = F>,
+        F: FnOnce() + Send,
+    {
+        match self {
+            Executor::Inline => {
+                for t in tasks {
+                    t();
+                }
+            }
+            Executor::Scoped => {
+                std::thread::scope(|s| {
+                    for t in tasks {
+                        s.spawn(t);
+                    }
+                });
+            }
+            Executor::Pool(pool) => pool.run_tasks(tasks),
+        }
+    }
+
+    /// Execute `f(shard)` for `n_shards` shards to completion.
+    pub fn run<F>(&self, n_shards: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let f = &f;
+        self.run_tasks((0..n_shards).map(move |i| move || f(i)));
+    }
+
+    /// Short strategy name (telemetry, bench labels).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Executor::Inline => "inline",
+            Executor::Scoped => "scoped",
+            Executor::Pool(_) => "pool",
+        }
+    }
+
+    /// True when this executor dispatches onto a persistent pool.
+    pub fn is_pool(&self) -> bool {
+        matches!(self, Executor::Pool(_))
+    }
+}
+
+impl std::fmt::Debug for Executor<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.kind())
+    }
+}
+
+static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide worker pool shared by every pooled scan backend, the
+/// native inference server and its streaming sessions. Spawned lazily on
+/// first use and never dropped (workers park when idle).
+///
+/// Sized to `available_parallelism − 1` workers — the calling thread is
+/// the +1 — and overridable with the `S5_POOL_WORKERS` environment
+/// variable (read once; CI oversubscribes it to stress scheduling).
+pub fn global_pool() -> &'static WorkerPool {
+    GLOBAL_POOL.get_or_init(|| WorkerPool::new(default_global_workers()))
+}
+
+fn default_global_workers() -> usize {
+    if let Ok(v) = std::env::var("S5_POOL_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(2)
+        .saturating_sub(1)
+        .max(1)
+}
+
+/// Spawn a named long-lived service thread (server workers). The one
+/// `std::thread` spawn path outside the pool itself — the coordinator's
+/// native and PJRT serving loops both go through here instead of each
+/// hand-rolling a `std::thread::spawn` block.
+pub fn spawn_worker<F>(name: &str, f: F) -> std::thread::JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .unwrap_or_else(|e| panic!("failed to spawn worker thread {name:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    /// Every shard runs exactly once, with stack-borrowed data, and the
+    /// caller sees all writes after the barrier.
+    #[test]
+    fn run_executes_every_shard_with_borrowed_data() {
+        let pool = WorkerPool::new(3);
+        for &n in &[0usize, 1, 2, 3, 7, 64] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let base = 10u64;
+            pool.run(n, |i| {
+                hits[i].fetch_add(base + i as u64, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), base + i as u64, "n={n} shard {i}");
+            }
+        }
+    }
+
+    /// run_tasks closures may own disjoint `&mut` chunks, like
+    /// `thread::scope` spawn bodies.
+    #[test]
+    fn run_tasks_supports_disjoint_mut_chunks() {
+        let pool = WorkerPool::new(2);
+        let mut data = vec![0u64; 24];
+        pool.run_tasks(data.chunks_mut(5).enumerate().map(|(c, chunk)| {
+            move || {
+                for v in chunk.iter_mut() {
+                    *v = c as u64 + 1;
+                }
+            }
+        }));
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, (i / 5) as u64 + 1, "idx {i}");
+        }
+    }
+
+    /// Oversubscription: many more shards than workers completes, and
+    /// nested runs (a shard that itself runs shards) cannot deadlock
+    /// because the waiting caller participates.
+    #[test]
+    fn oversubscription_and_nesting_complete() {
+        let pool = WorkerPool::new(2);
+        let outer = 5usize;
+        let inner = 7usize;
+        let count = AtomicU64::new(0);
+        pool.run(outer, |_| {
+            pool.run(inner, |_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), (outer * inner) as u64);
+        // plain oversubscription, one level
+        let count = AtomicU64::new(0);
+        pool.run(64, |_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+    }
+
+    /// A panicking shard is re-raised on the caller (scope semantics) but
+    /// poisons only that task: the workers survive and the pool keeps
+    /// serving runs.
+    #[test]
+    fn panicking_shard_leaves_pool_usable() {
+        let pool = WorkerPool::new(2);
+        let before = pool.live_workers();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(6, |i| {
+                if i == 3 {
+                    panic!("shard 3 exploded");
+                }
+            });
+        }));
+        let payload = result.expect_err("shard panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .unwrap_or("<non-str payload>");
+        assert!(msg.contains("exploded"), "unexpected payload {msg:?}");
+        assert_eq!(pool.live_workers(), before, "a worker died with the task");
+        // the pool still works
+        let count = AtomicU64::new(0);
+        pool.run(8, |_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+    }
+
+    /// Reuse across differently-sized runs never spawns new threads:
+    /// `workers()` (total ever spawned) and `live_workers()` are stable
+    /// from construction to drop.
+    #[test]
+    fn varied_size_reuse_never_leaks_threads() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        assert_eq!(pool.live_workers(), 3);
+        for &n in &[1usize, 16, 2, 64, 5, 128, 3] {
+            let count = AtomicU64::new(0);
+            pool.run(n, |_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(count.load(Ordering::SeqCst), n as u64);
+            assert_eq!(pool.workers(), 3, "pool grew at n={n}");
+            assert_eq!(pool.live_workers(), 3, "a worker exited at n={n}");
+        }
+    }
+
+    /// Drop joins all workers: the live counter reaches 0 and the worker
+    /// threads are gone (join returned).
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = WorkerPool::new(4);
+        let shared = pool.shared.clone();
+        pool.run(10, |_| {});
+        assert_eq!(shared.live.load(Ordering::SeqCst), 4);
+        drop(pool); // joins — must not hang
+        assert_eq!(shared.live.load(Ordering::SeqCst), 0, "a worker outlived the pool");
+        assert_eq!(shared.queue.lock().unwrap().len(), 0, "work left behind after drop");
+    }
+
+    /// The executor variants run the same tasks to the same effect; the
+    /// clamped-to-one-worker pool still completes (caller participation).
+    #[test]
+    fn executor_variants_agree() {
+        let pool = WorkerPool::new(1);
+        for exec in [Executor::Inline, Executor::Scoped, Executor::Pool(&pool)] {
+            let mut data = vec![0u32; 12];
+            exec.run_tasks(data.chunks_mut(4).enumerate().map(|(c, chunk)| {
+                move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (c * 4 + j) as u32;
+                    }
+                }
+            }));
+            let want: Vec<u32> = (0..12).collect();
+            assert_eq!(data, want, "executor {}", exec.kind());
+        }
+        assert!(Executor::Pool(&pool).is_pool());
+        assert!(!Executor::Scoped.is_pool());
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let p1 = global_pool();
+        let p2 = global_pool();
+        assert!(std::ptr::eq(p1, p2));
+        assert!(p1.workers() >= 1);
+        assert_eq!(p1.live_workers(), p1.workers());
+    }
+}

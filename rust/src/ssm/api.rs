@@ -31,7 +31,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::ssm::engine::EngineWorkspace;
 use crate::ssm::scan::{
-    backend_for, backend_for_threads, ScanBackend, ScanLayout, SequentialBackend,
+    backend_for, backend_for_exec, backend_for_threads, ScanBackend, ScanExec, ScanLayout,
+    SequentialBackend,
 };
 
 // ---------------------------------------------------------------------------
@@ -148,8 +149,10 @@ impl ForwardOptions {
     /// Pick a scan strategy for a thread budget (0 = auto-detect, ≤ 1 =
     /// sequential, else parallel) — mirrors the legacy `threads` knob.
     /// The resolved backend drives the default **planar** (SIMD-friendly)
-    /// layout; use [`ForwardOptions::with_scan`] to pin the interleaved
-    /// reference oracle instead.
+    /// layout and dispatches shards on the process-wide persistent worker
+    /// pool; use [`ForwardOptions::with_scan`] to pin the interleaved
+    /// reference oracle, or [`ForwardOptions::with_exec`] to opt out of
+    /// the pool.
     pub fn with_threads(mut self, threads: usize) -> ForwardOptions {
         self.backend = Arc::from(backend_for_threads(threads));
         self
@@ -157,8 +160,27 @@ impl ForwardOptions {
 
     /// Pick a scan strategy with an explicit buffer layout — the A/B knob
     /// for validating the planar default against the interleaved oracle.
+    ///
+    /// Re-resolves the whole backend: a dispatch mode previously pinned
+    /// with [`ForwardOptions::with_exec`] resets to the pooled default
+    /// (call `with_scan` first, `with_exec` last — `with_exec` preserves
+    /// the layout).
     pub fn with_scan(mut self, threads: usize, layout: ScanLayout) -> ForwardOptions {
         self.backend = Arc::from(backend_for(threads, layout));
+        self
+    }
+
+    /// Pick a scan strategy with an explicit dispatch mode — the opt-out
+    /// knob for the persistent worker pool. [`ScanExec::Scoped`] restores
+    /// the pre-pool spawn-per-call threads, [`ScanExec::Inline`] runs the
+    /// same chunked decomposition single-threaded, and
+    /// [`ScanExec::Pool`] pins a dedicated pool instance. Results are
+    /// bit-for-bit identical across modes; only dispatch overhead
+    /// changes. The currently selected [`ScanLayout`] is preserved, so
+    /// `with_scan(...).with_exec(...)` composes.
+    pub fn with_exec(mut self, threads: usize, exec: ScanExec) -> ForwardOptions {
+        let layout = self.backend.layout();
+        self.backend = Arc::from(backend_for_exec(threads, layout, exec));
         self
     }
 
@@ -441,6 +463,17 @@ mod tests {
         let o = ForwardOptions::new().with_scan(2, ScanLayout::Interleaved);
         assert_eq!(o.scan_layout(), ScanLayout::Interleaved);
         assert_eq!(o.scan_backend().threads(), 2);
+        // pooled dispatch is the default; with_exec is the opt-out
+        assert!(ForwardOptions::new().with_threads(3).scan_backend().executor().is_pool());
+        let o = ForwardOptions::new().with_exec(3, ScanExec::Scoped);
+        assert_eq!(o.scan_backend().executor().kind(), "scoped");
+        assert_eq!(o.scan_backend().threads(), 3);
+        // with_exec composes with a previously pinned layout
+        let o = ForwardOptions::new()
+            .with_scan(3, ScanLayout::Interleaved)
+            .with_exec(3, ScanExec::Scoped);
+        assert_eq!(o.scan_layout(), ScanLayout::Interleaved);
+        assert_eq!(o.scan_backend().executor().kind(), "scoped");
     }
 
     #[test]

@@ -12,8 +12,12 @@
 //!   summaries of the parallel scan via
 //!   [`ScanScratch`](crate::ssm::scan::ScanScratch)). Buffers grow to the
 //!   high-water mark of the shapes seen and are then reused, so
-//!   steady-state inference performs **zero heap allocation** — including
-//!   inside the parallel scan (previously an open ROADMAP item).
+//!   steady-state inference performs **zero heap allocation on the data
+//!   buffers** — including inside the parallel scan (previously an open
+//!   ROADMAP item). (Pooled dispatch itself costs O(shards) small boxed
+//!   closures per parallel stage — see
+//!   [`crate::runtime::pool::WorkerPool::run_tasks`] — which replaced the
+//!   far costlier per-stage thread spawn/join.)
 //! * A per-layer **time-invariant discretization cache** (`TiDisc`,
 //!   keyed by layer slot and validated against (Λ, log Δ, timescale)) so
 //!   repeated same-timescale batches skip the exp-heavy re-discretization
@@ -31,8 +35,17 @@
 //! `par_zip`; the scan stage goes through `scan_batch_*`, which shards
 //! across B sequences × in-sequence chunks. A batch of 1 degrades to the
 //! classic single-sequence path with in-sequence chunking only.
+//!
+//! Since the worker-pool refactor, neither level spawns: every stage
+//! dispatches its shard closures on the backend's
+//! [`Executor`](crate::runtime::pool::Executor) — the process-wide
+//! persistent pool for the default pooled backends, scoped threads or
+//! inline execution for the opt-outs — with bit-for-bit identical
+//! results either way (the shard decomposition depends only on the
+//! thread budget).
 
 use crate::num::{C32, C64};
+use crate::runtime::pool::Executor;
 use crate::ssm::discretize::{discretize_diag, Method};
 use crate::ssm::scan::ScanScratch;
 
@@ -50,9 +63,14 @@ pub fn auto_threads(requested: usize) -> usize {
 /// `f(item_index, &src[i·ss..], &mut dst[i·ds..])` for every item, with
 /// disjoint mutable destination slices. `src` and `dst` may be longer than
 /// `n` items (workspace buffers keep their high-water capacity); the tail
-/// is ignored. With `threads ≤ 1` or `n == 1` the loop runs inline —
-/// no spawn overhead on the single-sequence path.
+/// is ignored. With `threads ≤ 1` or `n == 1` the loop runs inline — no
+/// dispatch overhead on the single-sequence path; otherwise the shards
+/// run on `exec` (the backend's persistent pool on the serving path —
+/// results are bit-for-bit executor-invariant since the item
+/// decomposition is fixed by `threads`, never by the executor).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn par_zip<T, U, F>(
+    exec: Executor<'_>,
     threads: usize,
     src: &[T],
     ss: usize,
@@ -78,20 +96,19 @@ pub(crate) fn par_zip<T, U, F>(
         return;
     }
     let per = n.div_ceil(shards);
-    std::thread::scope(|s| {
-        for (ci, (sc, dc)) in src
-            .chunks(per * ss)
+    let fr = &f;
+    exec.run_tasks(
+        src.chunks(per * ss)
             .zip(dst.chunks_mut(per * ds))
             .enumerate()
-        {
-            let f = &f;
-            s.spawn(move || {
-                for (j, (ss_, ds_)) in sc.chunks(ss).zip(dc.chunks_mut(ds)).enumerate() {
-                    f(ci * per + j, ss_, ds_);
+            .map(|(ci, (sc, dc))| {
+                move || {
+                    for (j, (ss_, ds_)) in sc.chunks(ss).zip(dc.chunks_mut(ds)).enumerate() {
+                        fr(ci * per + j, ss_, ds_);
+                    }
                 }
-            });
-        }
-    });
+            }),
+    );
 }
 
 /// Like [`par_zip`] but with four destination buffers per item — the
@@ -99,6 +116,7 @@ pub(crate) fn par_zip<T, U, F>(
 /// the drive re/im planes in one pass over the Δt rows.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn par_zip4<T, U1, U2, U3, U4, F>(
+    exec: Executor<'_>,
     threads: usize,
     src: &[T],
     ss: usize,
@@ -143,30 +161,29 @@ pub(crate) fn par_zip4<T, U1, U2, U3, U4, F>(
         return;
     }
     let per = n.div_ceil(shards);
-    std::thread::scope(|s| {
-        for (ci, ((((sc, c1), c2), c3), c4)) in src
-            .chunks(per * ss)
+    let fr = &f;
+    exec.run_tasks(
+        src.chunks(per * ss)
             .zip(d1.chunks_mut(per * s1))
             .zip(d2.chunks_mut(per * s2))
             .zip(d3.chunks_mut(per * s3))
             .zip(d4.chunks_mut(per * s4))
             .enumerate()
-        {
-            let f = &f;
-            s.spawn(move || {
-                for (j, ((((ss_, e1), e2), e3), e4)) in sc
-                    .chunks(ss)
-                    .zip(c1.chunks_mut(s1))
-                    .zip(c2.chunks_mut(s2))
-                    .zip(c3.chunks_mut(s3))
-                    .zip(c4.chunks_mut(s4))
-                    .enumerate()
-                {
-                    f(ci * per + j, ss_, e1, e2, e3, e4);
+            .map(|(ci, ((((sc, c1), c2), c3), c4))| {
+                move || {
+                    for (j, ((((ss_, e1), e2), e3), e4)) in sc
+                        .chunks(ss)
+                        .zip(c1.chunks_mut(s1))
+                        .zip(c2.chunks_mut(s2))
+                        .zip(c3.chunks_mut(s3))
+                        .zip(c4.chunks_mut(s4))
+                        .enumerate()
+                    {
+                        fr(ci * per + j, ss_, e1, e2, e3, e4);
+                    }
                 }
-            });
-        }
-    });
+            }),
+    );
 }
 
 /// Like [`par_zip`] but with two destination buffers per item (used by the
@@ -174,6 +191,7 @@ pub(crate) fn par_zip4<T, U1, U2, U3, U4, F>(
 /// scaled drive).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn par_zip2<T, U, V, F>(
+    exec: Executor<'_>,
     threads: usize,
     src: &[T],
     ss: usize,
@@ -208,26 +226,25 @@ pub(crate) fn par_zip2<T, U, V, F>(
         return;
     }
     let per = n.div_ceil(shards);
-    std::thread::scope(|s| {
-        for (ci, ((sc, c1), c2)) in src
-            .chunks(per * ss)
+    let fr = &f;
+    exec.run_tasks(
+        src.chunks(per * ss)
             .zip(d1.chunks_mut(per * s1))
             .zip(d2.chunks_mut(per * s2))
             .enumerate()
-        {
-            let f = &f;
-            s.spawn(move || {
-                for (j, ((ss_, d1_), d2_)) in sc
-                    .chunks(ss)
-                    .zip(c1.chunks_mut(s1))
-                    .zip(c2.chunks_mut(s2))
-                    .enumerate()
-                {
-                    f(ci * per + j, ss_, d1_, d2_);
+            .map(|(ci, ((sc, c1), c2))| {
+                move || {
+                    for (j, ((ss_, d1_), d2_)) in sc
+                        .chunks(ss)
+                        .zip(c1.chunks_mut(s1))
+                        .zip(c2.chunks_mut(s2))
+                        .enumerate()
+                    {
+                        fr(ci * per + j, ss_, d1_, d2_);
+                    }
                 }
-            });
-        }
-    });
+            }),
+    );
 }
 
 /// Grow (never shrink) a buffer to at least `n` elements.
@@ -448,20 +465,28 @@ mod tests {
 
     #[test]
     fn par_zip_matches_serial() {
-        for &threads in &[1usize, 2, 3, 8] {
-            for &n in &[0usize, 1, 2, 5, 16, 17] {
-                let ss = 3;
-                let ds = 2;
-                let src: Vec<f32> = (0..n * ss).map(|i| i as f32).collect();
-                let mut dst = vec![0.0f32; n * ds];
-                par_zip(threads, &src, ss, &mut dst, ds, n, |i, s, d| {
-                    d[0] = s.iter().sum::<f32>();
-                    d[1] = i as f32;
-                });
-                for i in 0..n {
-                    let want: f32 = (0..ss).map(|j| (i * ss + j) as f32).sum();
-                    assert_eq!(dst[i * ds], want, "threads={threads} n={n} i={i}");
-                    assert_eq!(dst[i * ds + 1], i as f32);
+        let pool = crate::runtime::pool::WorkerPool::new(2);
+        for exec in [Executor::Inline, Executor::Scoped, Executor::Pool(&pool)] {
+            for &threads in &[1usize, 2, 3, 8] {
+                for &n in &[0usize, 1, 2, 5, 16, 17] {
+                    let ss = 3;
+                    let ds = 2;
+                    let src: Vec<f32> = (0..n * ss).map(|i| i as f32).collect();
+                    let mut dst = vec![0.0f32; n * ds];
+                    par_zip(exec, threads, &src, ss, &mut dst, ds, n, |i, s, d| {
+                        d[0] = s.iter().sum::<f32>();
+                        d[1] = i as f32;
+                    });
+                    for i in 0..n {
+                        let want: f32 = (0..ss).map(|j| (i * ss + j) as f32).sum();
+                        assert_eq!(
+                            dst[i * ds],
+                            want,
+                            "exec={} threads={threads} n={n} i={i}",
+                            exec.kind()
+                        );
+                        assert_eq!(dst[i * ds + 1], i as f32);
+                    }
                 }
             }
         }
@@ -472,7 +497,7 @@ mod tests {
         // workspace buffers keep high-water capacity; par_zip must slice
         let src: Vec<f32> = (0..20).map(|i| i as f32).collect();
         let mut dst = vec![-1.0f32; 50];
-        par_zip(2, &src, 2, &mut dst, 1, 4, |_, s, d| d[0] = s[0] + s[1]);
+        par_zip(Executor::Scoped, 2, &src, 2, &mut dst, 1, 4, |_, s, d| d[0] = s[0] + s[1]);
         assert_eq!(&dst[..4], &[1.0, 5.0, 9.0, 13.0]);
         assert_eq!(dst[4], -1.0, "tail untouched");
     }
@@ -483,7 +508,7 @@ mod tests {
         let src: Vec<f32> = (0..n).map(|i| i as f32).collect();
         let mut d1 = vec![0.0f32; n];
         let mut d2 = vec![0.0f32; 2 * n];
-        par_zip2(3, &src, 1, &mut d1, 1, &mut d2, 2, n, |i, s, a, b| {
+        par_zip2(Executor::Scoped, 3, &src, 1, &mut d1, 1, &mut d2, 2, n, |i, s, a, b| {
             a[0] = s[0] * 2.0;
             b[0] = i as f32;
             b[1] = s[0];
@@ -497,31 +522,34 @@ mod tests {
 
     #[test]
     fn par_zip4_matches_serial() {
-        for &threads in &[1usize, 3] {
-            let n = 7;
-            let src: Vec<f32> = (0..n).map(|i| i as f32).collect();
-            let mut d1 = vec![0.0f32; n];
-            let mut d2 = vec![0.0f32; n];
-            let mut d3 = vec![0.0f32; 2 * n];
-            let mut d4 = vec![0.0f32; 2 * n];
-            par_zip4(
-                threads, &src, 1, &mut d1, 1, &mut d2, 1, &mut d3, 2, &mut d4, 2, n,
-                |i, s, a, b, c, d| {
-                    a[0] = s[0] * 2.0;
-                    b[0] = s[0] + 1.0;
-                    c[0] = i as f32;
-                    c[1] = s[0];
-                    d[0] = -s[0];
-                    d[1] = i as f32 * 10.0;
-                },
-            );
-            for i in 0..n {
-                assert_eq!(d1[i], 2.0 * i as f32, "t={threads}");
-                assert_eq!(d2[i], i as f32 + 1.0);
-                assert_eq!(d3[2 * i], i as f32);
-                assert_eq!(d3[2 * i + 1], i as f32);
-                assert_eq!(d4[2 * i], -(i as f32));
-                assert_eq!(d4[2 * i + 1], i as f32 * 10.0);
+        let pool = crate::runtime::pool::WorkerPool::new(2);
+        for exec in [Executor::Inline, Executor::Scoped, Executor::Pool(&pool)] {
+            for &threads in &[1usize, 3] {
+                let n = 7;
+                let src: Vec<f32> = (0..n).map(|i| i as f32).collect();
+                let mut d1 = vec![0.0f32; n];
+                let mut d2 = vec![0.0f32; n];
+                let mut d3 = vec![0.0f32; 2 * n];
+                let mut d4 = vec![0.0f32; 2 * n];
+                par_zip4(
+                    exec, threads, &src, 1, &mut d1, 1, &mut d2, 1, &mut d3, 2, &mut d4, 2, n,
+                    |i, s, a, b, c, d| {
+                        a[0] = s[0] * 2.0;
+                        b[0] = s[0] + 1.0;
+                        c[0] = i as f32;
+                        c[1] = s[0];
+                        d[0] = -s[0];
+                        d[1] = i as f32 * 10.0;
+                    },
+                );
+                for i in 0..n {
+                    assert_eq!(d1[i], 2.0 * i as f32, "exec={} t={threads}", exec.kind());
+                    assert_eq!(d2[i], i as f32 + 1.0);
+                    assert_eq!(d3[2 * i], i as f32);
+                    assert_eq!(d3[2 * i + 1], i as f32);
+                    assert_eq!(d4[2 * i], -(i as f32));
+                    assert_eq!(d4[2 * i + 1], i as f32 * 10.0);
+                }
             }
         }
     }

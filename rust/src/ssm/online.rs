@@ -24,6 +24,13 @@
 //! [`crate::ssm::api::SequenceModel`] trait; this module provides the
 //! S5-specific state it drives ([`LayerState`], [`S5StreamState`]). The
 //! old S5-only [`OnlineModel`] remains as a deprecated wrapper.
+//!
+//! Threading: a streaming step is O(P·H) — latency-bound, not
+//! throughput-bound — so it always runs inline on the caller's thread
+//! and never touches the worker pool; only the batched prefill path
+//! dispatches shards (see [`crate::runtime::pool`]). Many concurrent
+//! sessions therefore stream independently while sharing the
+//! process-wide pool with the batch worker for their prefills.
 
 use crate::num::C64;
 use crate::ssm::discretize::{discretize_diag, discretize_one, Method};

@@ -19,6 +19,7 @@
 //! parallelizes, never time.
 
 use crate::rng::Rng;
+use crate::runtime::pool::Executor;
 use crate::ssm::api::{Batch, ForwardOptions, ModelSpec, SequenceModel, SessionState};
 use crate::ssm::engine::{par_zip, EngineWorkspace};
 
@@ -109,7 +110,11 @@ impl GruCell {
     pub fn run_batch(&self, xs: &[f32], batch: usize, l: usize, threads: usize) -> Vec<f32> {
         assert_eq!(xs.len(), batch * l * self.d_in);
         let mut out = vec![0.0f32; batch * l * self.h];
-        par_zip(threads, xs, l * self.d_in, &mut out, l * self.h, batch, |_, xseq, oseq| {
+        let (ss, ds) = (l * self.d_in, l * self.h);
+        // deprecated positional API: keeps the historical spawn-per-call
+        // dispatch (results are executor-invariant; migrated callers get
+        // the pooled default through SequenceModel::prefill)
+        par_zip(Executor::Scoped, threads, xs, ss, &mut out, ds, batch, |_, xseq, oseq| {
             self.run_into(xseq, l, oseq);
         });
         out
@@ -139,10 +144,11 @@ impl SequenceModel for GruCell {
         assert_eq!(batch.width(), self.d_in, "batch width != model d_input");
         assert_eq!(out.len(), batch.batch() * self.h);
         let (h, l, d_in) = (self.h, batch.len(), self.d_in);
-        let threads = opts.scan_backend().threads();
+        let be = opts.scan_backend();
+        let (threads, ex) = (be.threads(), be.executor());
         // only the final hidden state leaves this function, so step with
         // O(H) state+scratch instead of materializing all L rows
-        par_zip(threads, batch.data(), l * d_in, out, h, batch.batch(), |_, xseq, oseq| {
+        par_zip(ex, threads, batch.data(), l * d_in, out, h, batch.batch(), |_, xseq, oseq| {
             let mut scratch = vec![0.0f32; 3 * h];
             oseq.fill(0.0);
             for k in 0..l {
@@ -234,7 +240,10 @@ impl CruLike {
         assert_eq!(xs.len(), batch * l * d_in);
         assert_eq!(dts.len(), batch * l);
         let mut out = vec![0.0f32; batch * l * h];
-        par_zip(threads, xs, l * d_in, &mut out, l * h, batch, |i, xseq, oseq| {
+        // deprecated positional API: historical spawn-per-call dispatch
+        // (see GruCell::run_batch)
+        let ex = Executor::Scoped;
+        par_zip(ex, threads, xs, l * d_in, &mut out, l * h, batch, |i, xseq, oseq| {
             let got = self.run(xseq, &dts[i * l..(i + 1) * l], l);
             oseq.copy_from_slice(&got);
         });
@@ -345,12 +354,13 @@ impl SequenceModel for CruLike {
         let (h, l) = (self.gru.h, batch.len());
         assert_eq!(batch.width(), self.gru.d_in, "batch width != model d_input");
         assert_eq!(out.len(), batch.batch() * h);
-        let threads = opts.scan_backend().threads();
+        let be = opts.scan_backend();
+        let (threads, ex) = (be.threads(), be.executor());
         let d_in = self.gru.d_in;
         // only the final gated row leaves this function: step a state
         // through the shared kernel, writing each row over `oseq`, instead
         // of materializing all L×H rows (and a Δt vector) per call
-        par_zip(threads, batch.data(), l * d_in, out, h, batch.batch(), |_, xseq, oseq| {
+        par_zip(ex, threads, batch.data(), l * d_in, out, h, batch.batch(), |_, xseq, oseq| {
             let mut st = CruStreamState::new(h);
             for k in 0..l {
                 self.step(&mut st, &xseq[k * d_in..(k + 1) * d_in], 1.0, oseq);

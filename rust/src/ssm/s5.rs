@@ -409,6 +409,7 @@ impl S5Layer {
         let sh = l * h;
         let sp = l * p2;
         let t = backend.threads();
+        let ex = backend.executor();
         let bidir = self.c_tilde.len() == 2;
         let SsmBuffers {
             bu_re, bu_im, bu_rev_re, bu_rev_im, a_tv_re, a_tv_im, scan, ..
@@ -417,7 +418,7 @@ impl S5Layer {
         grow(bu_im, np);
 
         // drive: bu = B̃ u, per sequence in parallel, straight into planes
-        par_zip2(t, u, sh, bu_re, sp, bu_im, sp, batch, |_, useq, br, bi| {
+        par_zip2(ex, t, u, sh, bu_re, sp, bu_im, sp, batch, |_, useq, br, bi| {
             self.drive_seq_planar(useq, l, br, bi);
         });
 
@@ -426,7 +427,7 @@ impl S5Layer {
         match dts {
             None => {
                 let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
-                par_zip2(t, u, sh, bu_re, sp, bu_im, sp, batch, |_, _, br, bi| {
+                par_zip2(ex, t, u, sh, bu_re, sp, bu_im, sp, batch, |_, _, br, bi| {
                     Self::scale_seq_planar(br, bi, &d.f_re, &d.f_im, l, p2);
                 });
                 backend.scan_batch_ti_planar(
@@ -449,7 +450,7 @@ impl S5Layer {
                 grow(a_tv_re, np);
                 grow(a_tv_im, np);
                 par_zip4(
-                    t, dts, l, a_tv_re, sp, a_tv_im, sp, bu_re, sp, bu_im, sp, batch,
+                    ex, t, dts, l, a_tv_re, sp, a_tv_im, sp, bu_re, sp, bu_im, sp, batch,
                     |_, dseq, ar, ai, br, bi| {
                         for k in 0..l {
                             for r in 0..p2 {
@@ -484,7 +485,7 @@ impl S5Layer {
         {
             let xr = &bu_re[..np];
             let xi = &bu_im[..np];
-            par_zip(t, xr, sp, y, sh, batch, |i, xrseq, yseq| {
+            par_zip(ex, t, xr, sp, y, sh, batch, |i, xrseq, yseq| {
                 yseq.fill(0.0);
                 self.project_seq_planar(xrseq, &xi[i * sp..(i + 1) * sp], l, 0, false, yseq);
                 if !bidir {
@@ -500,7 +501,7 @@ impl S5Layer {
             let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
             grow(bu_rev_re, np);
             grow(bu_rev_im, np);
-            par_zip2(t, u, sh, bu_rev_re, sp, bu_rev_im, sp, batch, |_, useq, br, bi| {
+            par_zip2(ex, t, u, sh, bu_rev_re, sp, bu_rev_im, sp, batch, |_, useq, br, bi| {
                 self.drive_rev_seq_planar(useq, l, &d.f64s, br, bi);
             });
             backend.scan_batch_ti_planar(
@@ -515,7 +516,7 @@ impl S5Layer {
             );
             let xr = &bu_rev_re[..np];
             let xi = &bu_rev_im[..np];
-            par_zip(t, xr, sp, y, sh, batch, |i, xrseq, yseq| {
+            par_zip(ex, t, xr, sp, y, sh, batch, |i, xrseq, yseq| {
                 self.project_seq_planar(xrseq, &xi[i * sp..(i + 1) * sp], l, 1, true, yseq);
                 self.feedthrough_seq(&u[i * sh..(i + 1) * sh], l, yseq);
             });
@@ -543,12 +544,13 @@ impl S5Layer {
         let sh = l * h;
         let sp = l * p2;
         let t = backend.threads();
+        let ex = backend.executor();
         let bidir = self.c_tilde.len() == 2;
         let SsmBuffers { bu, bu_rev, a_tv, scan, .. } = ssm;
         grow(bu, np);
 
         // drive: bu = B̃ u, per sequence in parallel
-        par_zip(t, u, sh, bu, sp, batch, |_, useq, buseq| {
+        par_zip(ex, t, u, sh, bu, sp, batch, |_, useq, buseq| {
             self.drive_seq(useq, l, buseq);
         });
 
@@ -559,7 +561,7 @@ impl S5Layer {
         match dts {
             None => {
                 let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
-                par_zip(t, u, sh, bu, sp, batch, |_, _, buseq| {
+                par_zip(ex, t, u, sh, bu, sp, batch, |_, _, buseq| {
                     Self::scale_seq(buseq, &d.f32s, l, p2);
                 });
                 backend.scan_batch_ti(&d.a32, &mut bu[..np], batch, l, p2, scan);
@@ -570,7 +572,7 @@ impl S5Layer {
                 let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
                 let base_dt = &d.base_dt;
                 grow(a_tv, np);
-                par_zip2(t, dts, l, a_tv, sp, bu, sp, batch, |_, dseq, aseq, buseq| {
+                par_zip2(ex, t, dts, l, a_tv, sp, bu, sp, batch, |_, dseq, aseq, buseq| {
                     for k in 0..l {
                         for r in 0..p2 {
                             let dt = base_dt[r] * dseq[k] as f64;
@@ -586,7 +588,7 @@ impl S5Layer {
 
         // forward projection; for unidirectional layers the feedthrough is
         // folded in here (matching the original projection → D order)
-        par_zip(t, &bu[..np], sp, y, sh, batch, |i, xs, yseq| {
+        par_zip(ex, t, &bu[..np], sp, y, sh, batch, |i, xs, yseq| {
             yseq.fill(0.0);
             self.project_seq(xs, l, 0, false, yseq);
             if !bidir {
@@ -600,11 +602,11 @@ impl S5Layer {
             // models (as in L2), also under irregular sampling.
             let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
             grow(bu_rev, np);
-            par_zip(t, u, sh, bu_rev, sp, batch, |_, useq, bseq| {
+            par_zip(ex, t, u, sh, bu_rev, sp, batch, |_, useq, bseq| {
                 self.drive_rev_seq(useq, l, &d.f64s, bseq);
             });
             backend.scan_batch_ti(&d.a32, &mut bu_rev[..np], batch, l, p2, scan);
-            par_zip(t, &bu_rev[..np], sp, y, sh, batch, |i, xs, yseq| {
+            par_zip(ex, t, &bu_rev[..np], sp, y, sh, batch, |i, xs, yseq| {
                 self.project_seq(xs, l, 1, true, yseq);
                 self.feedthrough_seq(&u[i * sh..(i + 1) * sh], l, yseq);
             });
@@ -632,18 +634,19 @@ impl S5Layer {
         let n = batch * l * h;
         let sh = l * h;
         let t = backend.threads();
+        let ex = backend.executor();
         if batch == 0 || l == 0 {
             return;
         }
         grow(v, n);
         grow(y, n);
-        par_zip(t, &x[..n], sh, v, sh, batch, |_, useq, vseq| {
+        par_zip(ex, t, &x[..n], sh, v, sh, batch, |_, useq, vseq| {
             self.norm_seq(useq, l, vseq);
         });
         self.apply_ssm_core(
             &v[..n], batch, l, timescale, dts, backend, slot, disc, ssm, &mut y[..n],
         );
-        par_zip(t, &y[..n], sh, x, sh, batch, |_, yseq, xseq| {
+        par_zip(ex, t, &y[..n], sh, x, sh, batch, |_, yseq, xseq| {
             self.gate_residual_seq(yseq, xseq, l);
         });
     }
@@ -863,15 +866,16 @@ impl S5Model {
         let h = self.h;
         let n = batch * l * h;
         let t = backend.threads();
+        let ex = backend.executor();
         let EngineWorkspace { x, v, y, ssm, disc } = ws;
         grow(x, n);
-        par_zip(t, u, l * self.d_in, x, l * h, batch, |_, useq, xseq| {
+        par_zip(ex, t, u, l * self.d_in, x, l * h, batch, |_, useq, xseq| {
             self.encode_seq(useq, l, xseq);
         });
         for (li, layer) in self.layers.iter().enumerate() {
             layer.apply_batch_core(x, v, y, ssm, li, disc, batch, l, timescale, None, backend);
         }
-        par_zip(t, &x[..n], l * h, out, self.classes, batch, |_, xseq, oseq| {
+        par_zip(ex, t, &x[..n], l * h, out, self.classes, batch, |_, xseq, oseq| {
             self.pool_decode_seq(xseq, l, oseq);
         });
     }

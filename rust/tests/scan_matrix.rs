@@ -1,0 +1,384 @@
+//! Cross-backend / cross-executor equivalence matrix (the pin that lets
+//! scheduling changes land without numeric drift).
+//!
+//! For every kernel variant — sequential/parallel strategy × TI/TV
+//! multipliers × single/batched/step entry points × planar/interleaved
+//! layout — and a shape sweep that includes every degenerate case the
+//! chunking can produce (L = 0, P = 0, B = 0, L < threads, remainder
+//! chunks), the matrix asserts that the **executor never changes a
+//! bit**: pooled (dedicated pool and the process-global pool), scoped
+//! spawn-per-call threads, and single-threaded inline execution of the
+//! same chunked decomposition all produce identical results. The pool is
+//! deliberately sized differently from every thread budget under test so
+//! oversubscription and under-subscription are both exercised.
+//!
+//! A second layer of tests pins the same invariance end-to-end through
+//! the engine: full S5 forwards (planar + interleaved, TI + irregular-Δt,
+//! uni- and bidirectional) and the generic `SequenceModel::prefill`
+//! surface are bit-for-bit executor-invariant, and a `ParallelBackend`
+//! clamped to one thread equals the `SequentialBackend` exactly.
+
+use std::sync::Arc;
+
+use s5::num::C32;
+use s5::rng::Rng;
+use s5::runtime::pool::WorkerPool;
+use s5::ssm::api::{Batch, ForwardOptions, SequenceModel};
+use s5::ssm::engine::EngineWorkspace;
+use s5::ssm::s5::{S5Config, S5Model};
+use s5::ssm::scan::{
+    backend_for_exec, backend_for_threads, ParallelBackend, ScanBackend, ScanExec, ScanLayout,
+    ScanScratch, SequentialBackend,
+};
+
+/// (batch, l, p) shapes: degenerate, boundary and regular. With thread
+/// budgets {2, 3, 8} these hit L = 0, P = 0, B = 0, L < threads,
+/// single-row chunks and non-divisible remainder chunks.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 0, 3),  // empty sequence
+    (1, 5, 0),  // empty state
+    (0, 4, 3),  // empty batch
+    (1, 1, 4),  // single step
+    (3, 2, 3),  // L < every thread budget
+    (1, 9, 3),  // non-divisible remainder
+    (2, 7, 2),  // remainder chunk shorter than the rest
+    (1, 64, 5), // chunked single sequence
+    (5, 33, 4), // B > some budgets, < others
+    (3, 40, 6), // B < budgets with chunked per-sequence scans
+];
+
+const THREADS: &[usize] = &[1, 2, 3, 8];
+
+fn rand_c32(g: &mut Rng, n: usize, scale: f32) -> Vec<C32> {
+    (0..n)
+        .map(|_| C32::new(g.normal() as f32 * scale, g.normal() as f32 * scale))
+        .collect()
+}
+
+fn planes(z: &[C32]) -> (Vec<f32>, Vec<f32>) {
+    (z.iter().map(|v| v.re).collect(), z.iter().map(|v| v.im).collect())
+}
+
+/// One deterministic input set for a (batch, l, p) shape.
+struct Case {
+    /// TI multipliers (p)
+    a_ti: Vec<C32>,
+    /// single-sequence TV multipliers (l·p)
+    a_tv1: Vec<C32>,
+    /// single-sequence drive (l·p)
+    b1: Vec<C32>,
+    /// batched TV multipliers (batch·l·p)
+    a_tv: Vec<C32>,
+    /// batched drive (batch·l·p)
+    b: Vec<C32>,
+}
+
+impl Case {
+    fn generate(seed: u64, batch: usize, l: usize, p: usize) -> Case {
+        let mut g = Rng::new(seed);
+        Case {
+            a_ti: rand_c32(&mut g, p, 0.6),
+            a_tv1: rand_c32(&mut g, l * p, 0.6),
+            b1: rand_c32(&mut g, l * p, 1.0),
+            a_tv: rand_c32(&mut g, batch * l * p, 0.6),
+            b: rand_c32(&mut g, batch * l * p, 1.0),
+        }
+    }
+}
+
+/// The executor axis for a fixed thread budget: scoped is the reference,
+/// the rest must match it bit-for-bit. The dedicated pool has 3 workers —
+/// none of the budgets under test — so shard counts and worker counts
+/// disagree in both directions.
+fn backends(t: usize, pool: &Arc<WorkerPool>) -> Vec<(&'static str, ParallelBackend)> {
+    vec![
+        ("scoped", ParallelBackend::with_exec(t, ScanExec::Scoped)),
+        ("pooled", ParallelBackend::with_exec(t, ScanExec::Pool(pool.clone()))),
+        ("inline", ParallelBackend::with_exec(t, ScanExec::Inline)),
+        ("global", ParallelBackend::new(t)),
+    ]
+}
+
+/// A kernel runner: execute one entry-point variant under a backend and
+/// return a canonical f32 flattening of the states.
+type Runner = fn(&dyn ScanBackend, &Case, usize, usize, usize) -> Vec<f32>;
+
+fn flat(z: &[C32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(2 * z.len());
+    for v in z {
+        out.push(v.re);
+        out.push(v.im);
+    }
+    out
+}
+
+fn run_ti_single(be: &dyn ScanBackend, c: &Case, _b: usize, l: usize, p: usize) -> Vec<f32> {
+    let mut scratch = ScanScratch::new();
+    let mut buf = c.b1.clone();
+    be.scan_ti(&c.a_ti, &mut buf, l, p, &mut scratch);
+    flat(&buf)
+}
+
+fn run_tv_single(be: &dyn ScanBackend, c: &Case, _b: usize, l: usize, p: usize) -> Vec<f32> {
+    let mut scratch = ScanScratch::new();
+    let mut buf = c.b1.clone();
+    be.scan_tv(&c.a_tv1, &mut buf, l, p, &mut scratch);
+    flat(&buf)
+}
+
+fn run_ti_batch(be: &dyn ScanBackend, c: &Case, b: usize, l: usize, p: usize) -> Vec<f32> {
+    let mut scratch = ScanScratch::new();
+    let mut buf = c.b.clone();
+    be.scan_batch_ti(&c.a_ti, &mut buf, b, l, p, &mut scratch);
+    flat(&buf)
+}
+
+fn run_tv_batch(be: &dyn ScanBackend, c: &Case, b: usize, l: usize, p: usize) -> Vec<f32> {
+    let mut scratch = ScanScratch::new();
+    let mut buf = c.b.clone();
+    be.scan_batch_tv(&c.a_tv, &mut buf, b, l, p, &mut scratch);
+    flat(&buf)
+}
+
+fn run_ti_single_planar(be: &dyn ScanBackend, c: &Case, _b: usize, l: usize, p: usize) -> Vec<f32> {
+    let mut scratch = ScanScratch::new();
+    let (ar, ai) = planes(&c.a_ti);
+    let (mut xr, mut xi) = planes(&c.b1);
+    be.scan_ti_planar(&ar, &ai, &mut xr, &mut xi, l, p, &mut scratch);
+    xr.extend_from_slice(&xi);
+    xr
+}
+
+fn run_tv_single_planar(be: &dyn ScanBackend, c: &Case, _b: usize, l: usize, p: usize) -> Vec<f32> {
+    let mut scratch = ScanScratch::new();
+    let (ar, ai) = planes(&c.a_tv1);
+    let (mut xr, mut xi) = planes(&c.b1);
+    be.scan_tv_planar(&ar, &ai, &mut xr, &mut xi, l, p, &mut scratch);
+    xr.extend_from_slice(&xi);
+    xr
+}
+
+fn run_ti_batch_planar(be: &dyn ScanBackend, c: &Case, b: usize, l: usize, p: usize) -> Vec<f32> {
+    let mut scratch = ScanScratch::new();
+    let (ar, ai) = planes(&c.a_ti);
+    let (mut xr, mut xi) = planes(&c.b);
+    be.scan_batch_ti_planar(&ar, &ai, &mut xr, &mut xi, b, l, p, &mut scratch);
+    xr.extend_from_slice(&xi);
+    xr
+}
+
+fn run_tv_batch_planar(be: &dyn ScanBackend, c: &Case, b: usize, l: usize, p: usize) -> Vec<f32> {
+    let mut scratch = ScanScratch::new();
+    let (ar, ai) = planes(&c.a_tv);
+    let (mut xr, mut xi) = planes(&c.b);
+    be.scan_batch_tv_planar(&ar, &ai, &mut xr, &mut xi, b, l, p, &mut scratch);
+    xr.extend_from_slice(&xi);
+    xr
+}
+
+/// Streaming-step replay over the single sequence (interleaved step).
+fn run_step(be: &dyn ScanBackend, c: &Case, _b: usize, l: usize, p: usize) -> Vec<f32> {
+    let mut state = vec![C32::ZERO; p];
+    let mut out = Vec::with_capacity(2 * l * p);
+    for k in 0..l {
+        be.scan_step(&c.a_ti, &mut state, &c.b1[k * p..(k + 1) * p]);
+        out.extend(flat(&state));
+    }
+    out
+}
+
+/// Streaming-step replay over the single sequence (planar step).
+fn run_step_planar(be: &dyn ScanBackend, c: &Case, _b: usize, l: usize, p: usize) -> Vec<f32> {
+    let (ar, ai) = planes(&c.a_ti);
+    let (br, bi) = planes(&c.b1);
+    let (mut sr, mut si) = (vec![0.0f32; p], vec![0.0f32; p]);
+    let mut out = Vec::with_capacity(2 * l * p);
+    for k in 0..l {
+        let row = k * p;
+        be.scan_step_planar(&ar, &ai, &mut sr, &mut si, &br[row..row + p], &bi[row..row + p]);
+        out.extend_from_slice(&sr);
+        out.extend_from_slice(&si);
+    }
+    out
+}
+
+fn bits_equal(a: &[f32], b: &[f32]) -> Option<usize> {
+    if a.len() != b.len() {
+        return Some(usize::MAX);
+    }
+    a.iter().zip(b.iter()).position(|(x, y)| x.to_bits() != y.to_bits())
+}
+
+/// Run one kernel variant across the full (threads × executors × shapes)
+/// grid, asserting bit-equality against the scoped reference — and, at a
+/// thread budget of 1, against the `SequentialBackend` too.
+fn check_matrix(run: Runner, name: &str) {
+    let pool = Arc::new(WorkerPool::new(3));
+    for (si, &(batch, l, p)) in SHAPES.iter().enumerate() {
+        let case = Case::generate(0xC0FFEE + si as u64, batch, l, p);
+        for &t in THREADS {
+            let mut reference: Option<Vec<f32>> = None;
+            for (ename, be) in backends(t, &pool) {
+                let got = run(&be, &case, batch, l, p);
+                match &reference {
+                    None => reference = Some(got),
+                    Some(want) => {
+                        if let Some(i) = bits_equal(want, &got) {
+                            panic!(
+                                "{name}: executor {ename} diverged from scoped at \
+                                 t={t} shape=(B={batch}, L={l}, P={p}) index {i}"
+                            );
+                        }
+                    }
+                }
+            }
+            if t == 1 {
+                // a one-thread parallel strategy must equal the
+                // sequential backend exactly, whatever the executor
+                let want = reference.unwrap();
+                let got = run(&SequentialBackend, &case, batch, l, p);
+                if let Some(i) = bits_equal(&want, &got) {
+                    panic!(
+                        "{name}: ParallelBackend(1) != SequentialBackend at \
+                         shape=(B={batch}, L={l}, P={p}) index {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+macro_rules! matrix {
+    ($($test:ident => $runner:ident),+ $(,)?) => {
+        $(
+            #[test]
+            fn $test() {
+                check_matrix($runner, stringify!($runner));
+            }
+        )+
+    };
+}
+
+matrix! {
+    ti_single_interleaved_is_executor_invariant => run_ti_single,
+    tv_single_interleaved_is_executor_invariant => run_tv_single,
+    ti_batch_interleaved_is_executor_invariant => run_ti_batch,
+    tv_batch_interleaved_is_executor_invariant => run_tv_batch,
+    ti_single_planar_is_executor_invariant => run_ti_single_planar,
+    tv_single_planar_is_executor_invariant => run_tv_single_planar,
+    ti_batch_planar_is_executor_invariant => run_ti_batch_planar,
+    tv_batch_planar_is_executor_invariant => run_tv_batch_planar,
+    step_interleaved_is_executor_invariant => run_step,
+    step_planar_is_executor_invariant => run_step_planar,
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: the engine hot path is executor-invariant too
+// ---------------------------------------------------------------------------
+
+/// Full S5 forwards — uni/bidirectional, TI and irregular-Δt, planar and
+/// interleaved — are bit-for-bit identical across executors.
+#[test]
+fn model_forward_is_executor_invariant() {
+    let pool = Arc::new(WorkerPool::new(3));
+    let cfg = S5Config { h: 8, p: 8, j: 1, ..Default::default() };
+    let model = S5Model::init(2, 5, 2, &cfg, &mut Rng::new(7));
+    let (batch, l) = (3usize, 40usize);
+    let mut g = Rng::new(8);
+    let u = g.normal_vec_f32(batch * l * 2);
+    for &t in &[2usize, 3] {
+        for layout in [ScanLayout::Planar, ScanLayout::Interleaved] {
+            let execs: Vec<(&'static str, Box<dyn ScanBackend>)> = vec![
+                ("scoped", backend_for_exec(t, layout, ScanExec::Scoped)),
+                ("pooled", backend_for_exec(t, layout, ScanExec::Pool(pool.clone()))),
+                ("inline", backend_for_exec(t, layout, ScanExec::Inline)),
+                ("global", backend_for_exec(t, layout, ScanExec::Pooled)),
+            ];
+            let mut reference: Option<Vec<f32>> = None;
+            for (ename, be) in &execs {
+                let mut ws = EngineWorkspace::new();
+                let got = model.forward_batch(&u, batch, l, 1.0, be.as_ref(), &mut ws);
+                match &reference {
+                    None => reference = Some(got),
+                    Some(want) => {
+                        if let Some(i) = bits_equal(want, &got) {
+                            panic!("model: {ename} diverged (t={t}, {layout:?}) at {i}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The irregular-Δt (TV) layer path and a bidirectional layer are
+/// executor-invariant as well.
+#[test]
+fn layer_tv_and_bidir_are_executor_invariant() {
+    use s5::ssm::s5::S5Layer;
+    let pool = Arc::new(WorkerPool::new(3));
+    let mut g = Rng::new(21);
+    let (batch, l) = (3usize, 36usize);
+    let uni =
+        S5Layer::init(&S5Config { h: 4, p: 8, j: 1, ..Default::default() }, &mut Rng::new(1));
+    let bidir = S5Layer::init(
+        &S5Config { h: 4, p: 8, j: 1, bidir: true, ..Default::default() },
+        &mut Rng::new(2),
+    );
+    let u = g.normal_vec_f32(batch * l * 4);
+    let dts: Vec<f32> = (0..batch * l).map(|_| g.uniform_in(0.3, 2.5) as f32).collect();
+    for &t in &[2usize, 3] {
+        let execs: Vec<(&'static str, Box<dyn ScanBackend>)> = vec![
+            ("scoped", backend_for_exec(t, ScanLayout::Planar, ScanExec::Scoped)),
+            ("pooled", backend_for_exec(t, ScanLayout::Planar, ScanExec::Pool(pool.clone()))),
+            ("inline", backend_for_exec(t, ScanLayout::Planar, ScanExec::Inline)),
+        ];
+        let mut want_tv: Option<Vec<f32>> = None;
+        let mut want_bi: Option<Vec<f32>> = None;
+        for (ename, be) in &execs {
+            let mut ws = EngineWorkspace::new();
+            let tv = uni.apply_ssm_batch(&u, batch, l, 1.0, Some(&dts), be.as_ref(), &mut ws);
+            let bi = bidir.apply_batch(&u, batch, l, 1.0, None, be.as_ref(), &mut ws);
+            match &want_tv {
+                None => want_tv = Some(tv),
+                Some(want) => {
+                    if let Some(i) = bits_equal(want, &tv) {
+                        panic!("TV layer: {ename} diverged (t={t}) at {i}");
+                    }
+                }
+            }
+            match &want_bi {
+                None => want_bi = Some(bi),
+                Some(want) => {
+                    if let Some(i) = bits_equal(want, &bi) {
+                        panic!("bidir layer: {ename} diverged (t={t}) at {i}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The typed `SequenceModel::prefill` surface with pooled options equals
+/// the scoped-option run bit-for-bit (what the server actually calls).
+#[test]
+fn prefill_api_is_executor_invariant() {
+    let cfg = S5Config { h: 8, p: 8, j: 1, ..Default::default() };
+    let model = S5Model::init(2, 5, 2, &cfg, &mut Rng::new(31));
+    let (batch, l) = (4usize, 48usize);
+    let u = Rng::new(32).normal_vec_f32(batch * l * 2);
+    let view = Batch::new(&u, batch, l, 2);
+    let mut ws_a = EngineWorkspace::new();
+    let mut ws_b = EngineWorkspace::new();
+    let pooled = model.prefill(view, &ForwardOptions::new().with_threads(3), &mut ws_a);
+    let scoped = model.prefill(
+        view,
+        &ForwardOptions::new().with_exec(3, ScanExec::Scoped),
+        &mut ws_b,
+    );
+    if let Some(i) = bits_equal(&pooled, &scoped) {
+        panic!("prefill: pooled != scoped at {i}");
+    }
+    // and the default resolver really is pooled
+    assert!(backend_for_threads(3).executor().is_pool());
+}
