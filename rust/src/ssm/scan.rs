@@ -44,8 +44,23 @@
 //! Parallel kernels need O(chunks·P) chunk summaries; the pooled form
 //! ([`ScanScratch`], owned by the engine workspace) reuses them so
 //! steady-state inference allocates nothing (ROADMAP item).
+//!
+//! ## Dispatch: the worker pool
+//!
+//! The multi-threaded kernels no longer spawn. Every parallel phase takes
+//! an [`Executor`] (see [`crate::runtime::pool`]) and every backend
+//! reports one via [`ScanBackend::executor`]: [`ParallelBackend`]
+//! dispatches onto the process-wide persistent [`WorkerPool`] by default
+//! ([`ScanExec::Pooled`]), with spawn-per-call scoped threads
+//! ([`ScanExec::Scoped`]) and inline execution ([`ScanExec::Inline`])
+//! retained as fallbacks/oracles. The executor never changes the shard
+//! decomposition — that is fixed by the backend's thread budget — so
+//! results are bit-for-bit identical across executors (pinned by
+//! `tests/scan_matrix.rs`).
 
 use crate::num::{C32, C64};
+use crate::runtime::pool::{global_pool, Executor, WorkerPool};
+use std::sync::Arc;
 
 // ---------------------------------------------------------------------------
 // In-place kernels
@@ -209,16 +224,21 @@ pub fn planar_scratch_len(p: usize, threads: usize) -> usize {
 /// [`ParallelBackend`] applies the "sequential is faster below 4·T rows"
 /// heuristic). Transient allocation is O(T·P) for the summaries; the
 /// pooled form ([`scan_parallel_ti_inplace_pooled`]) allocates nothing.
+/// Dispatches on scoped spawn-per-call threads — the backends route the
+/// persistent worker pool through the pooled form's [`Executor`].
 pub fn scan_parallel_ti_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize, threads: usize) {
     let mut scratch = vec![C32::ZERO; chunk_scratch_len(p, threads.min(l.max(1)))];
-    scan_parallel_ti_inplace_pooled(a, bu, l, p, threads, &mut scratch);
+    scan_parallel_ti_inplace_pooled(a, bu, l, p, threads, &mut scratch, Executor::Scoped);
 }
 
-/// [`scan_parallel_ti_inplace`] with caller-owned chunk summaries:
-/// `scratch` must hold at least [`chunk_scratch_len`]`(p, threads)`
-/// elements (its contents are ignored on entry and clobbered). The engine
-/// routes its pooled [`ScanScratch`] buffers here so steady-state scans
-/// perform zero heap allocation.
+/// [`scan_parallel_ti_inplace`] with caller-owned chunk summaries and an
+/// explicit shard dispatcher: `scratch` must hold at least
+/// [`chunk_scratch_len`]`(p, threads)` elements (its contents are ignored
+/// on entry and clobbered), and the parallel phases run on `exec` (pool,
+/// scoped threads or inline — bit-identical results either way). The
+/// engine routes its pooled [`ScanScratch`] buffers and the backend's
+/// executor here so steady-state scans neither allocate nor spawn.
+#[allow(clippy::too_many_arguments)]
 pub fn scan_parallel_ti_inplace_pooled(
     a: &[C32],
     bu: &mut [C32],
@@ -226,6 +246,7 @@ pub fn scan_parallel_ti_inplace_pooled(
     p: usize,
     threads: usize,
     scratch: &mut [C32],
+    exec: Executor<'_>,
 ) {
     assert_eq!(a.len(), p);
     assert_eq!(bu.len(), l * p);
@@ -251,30 +272,29 @@ pub fn scan_parallel_ti_inplace_pooled(
     let state = &mut rest[..p];
 
     // Phase 1: local in-place scans (parallel).
-    std::thread::scope(|s| {
-        for (c, ((xc, ac), lc)) in bu
-            .chunks_mut(chunk * p)
+    exec.run_tasks(
+        bu.chunks_mut(chunk * p)
             .zip(a_pow.chunks_mut(p))
             .zip(last.chunks_mut(p))
             .enumerate()
-        {
-            s.spawn(move || {
-                let start = c * chunk;
-                let len = chunk.min(l - start);
-                for k in 1..len {
-                    let (prev, cur) = xc.split_at_mut(k * p);
-                    let prev = &prev[(k - 1) * p..];
+            .map(|(c, ((xc, ac), lc))| {
+                move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    for k in 1..len {
+                        let (prev, cur) = xc.split_at_mut(k * p);
+                        let prev = &prev[(k - 1) * p..];
+                        for j in 0..p {
+                            cur[j] = a[j] * prev[j] + cur[j];
+                        }
+                    }
                     for j in 0..p {
-                        cur[j] = a[j] * prev[j] + cur[j];
+                        ac[j] = a[j].powi(len as u32);
+                        lc[j] = xc[(len - 1) * p + j];
                     }
                 }
-                for j in 0..p {
-                    ac[j] = a[j].powi(len as u32);
-                    lc[j] = xc[(len - 1) * p + j];
-                }
-            });
-        }
-    });
+            }),
+    );
 
     // Phase 2: combine chunk summaries sequentially → state entering chunk c.
     {
@@ -288,29 +308,27 @@ pub fn scan_parallel_ti_inplace_pooled(
     }
 
     // Phase 3: fixup (parallel): x_k += ā^{k−start+1} ∘ x_enter. The enter
-    // rows double as the carry accumulators.
-    std::thread::scope(|s| {
-        for (c, (xc, carry)) in bu
-            .chunks_mut(chunk * p)
+    // rows double as the carry accumulators. Chunk 0 enters at zero:
+    // nothing to add, so it is skipped.
+    exec.run_tasks(
+        bu.chunks_mut(chunk * p)
             .zip(enter.chunks_mut(p))
             .enumerate()
-        {
-            if c == 0 {
-                continue; // enters at zero: nothing to add
-            }
-            s.spawn(move || {
-                let start = c * chunk;
-                let len = chunk.min(l - start);
-                for k in 0..len {
-                    let row = k * p;
-                    for j in 0..p {
-                        carry[j] = carry[j] * a[j];
-                        xc[row + j] += carry[j];
+            .skip(1)
+            .map(|(c, (xc, carry))| {
+                move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    for k in 0..len {
+                        let row = k * p;
+                        for j in 0..p {
+                            carry[j] = carry[j] * a[j];
+                            xc[row + j] += carry[j];
+                        }
                     }
                 }
-            });
-        }
-    });
+            }),
+    );
 }
 
 /// Parallel chunked TV scan, in place (irregular sampling): `a`, `bu` are
@@ -318,11 +336,13 @@ pub fn scan_parallel_ti_inplace_pooled(
 /// multiplier products as the chunk summaries.
 pub fn scan_parallel_tv_inplace(a: &[C32], bu: &mut [C32], l: usize, p: usize, threads: usize) {
     let mut scratch = vec![C32::ZERO; chunk_scratch_len(p, threads.min(l.max(1)))];
-    scan_parallel_tv_inplace_pooled(a, bu, l, p, threads, &mut scratch);
+    scan_parallel_tv_inplace_pooled(a, bu, l, p, threads, &mut scratch, Executor::Scoped);
 }
 
-/// [`scan_parallel_tv_inplace`] with caller-owned chunk summaries (see
-/// [`scan_parallel_ti_inplace_pooled`] for the scratch contract).
+/// [`scan_parallel_tv_inplace`] with caller-owned chunk summaries and an
+/// explicit shard dispatcher (see [`scan_parallel_ti_inplace_pooled`] for
+/// the scratch and executor contract).
+#[allow(clippy::too_many_arguments)]
 pub fn scan_parallel_tv_inplace_pooled(
     a: &[C32],
     bu: &mut [C32],
@@ -330,6 +350,7 @@ pub fn scan_parallel_tv_inplace_pooled(
     p: usize,
     threads: usize,
     scratch: &mut [C32],
+    exec: Executor<'_>,
 ) {
     assert_eq!(a.len(), l * p);
     assert_eq!(bu.len(), l * p);
@@ -354,34 +375,33 @@ pub fn scan_parallel_tv_inplace_pooled(
     let (enter, rest) = rest.split_at_mut(n);
     let state = &mut rest[..p];
 
-    std::thread::scope(|s| {
-        for (c, ((xc, ac), lc)) in bu
-            .chunks_mut(chunk * p)
+    exec.run_tasks(
+        bu.chunks_mut(chunk * p)
             .zip(a_prod.chunks_mut(p))
             .zip(last.chunks_mut(p))
             .enumerate()
-        {
-            s.spawn(move || {
-                let start = c * chunk;
-                let len = chunk.min(l - start);
-                ac.fill(C32::ONE);
-                for k in 0..len {
-                    let g = (start + k) * p;
-                    if k > 0 {
-                        let (prev, cur) = xc.split_at_mut(k * p);
-                        let prev = &prev[(k - 1) * p..];
+            .map(|(c, ((xc, ac), lc))| {
+                move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    ac.fill(C32::ONE);
+                    for k in 0..len {
+                        let g = (start + k) * p;
+                        if k > 0 {
+                            let (prev, cur) = xc.split_at_mut(k * p);
+                            let prev = &prev[(k - 1) * p..];
+                            for j in 0..p {
+                                cur[j] = a[g + j] * prev[j] + cur[j];
+                            }
+                        }
                         for j in 0..p {
-                            cur[j] = a[g + j] * prev[j] + cur[j];
+                            ac[j] = a[g + j] * ac[j];
                         }
                     }
-                    for j in 0..p {
-                        ac[j] = a[g + j] * ac[j];
-                    }
+                    lc.copy_from_slice(&xc[(len - 1) * p..len * p]);
                 }
-                lc.copy_from_slice(&xc[(len - 1) * p..len * p]);
-            });
-        }
-    });
+            }),
+    );
 
     {
         state.fill(C32::ZERO);
@@ -393,36 +413,34 @@ pub fn scan_parallel_tv_inplace_pooled(
         }
     }
 
-    std::thread::scope(|s| {
-        for (c, (xc, carry)) in bu
-            .chunks_mut(chunk * p)
+    exec.run_tasks(
+        bu.chunks_mut(chunk * p)
             .zip(enter.chunks_mut(p))
             .enumerate()
-        {
-            if c == 0 {
-                continue;
-            }
-            s.spawn(move || {
-                let start = c * chunk;
-                let len = chunk.min(l - start);
-                for k in 0..len {
-                    let g = (start + k) * p;
-                    let row = k * p;
-                    for j in 0..p {
-                        carry[j] = a[g + j] * carry[j];
-                        xc[row + j] += carry[j];
+            .skip(1) // chunk 0 enters at zero: nothing to add
+            .map(|(c, (xc, carry))| {
+                move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    for k in 0..len {
+                        let g = (start + k) * p;
+                        let row = k * p;
+                        for j in 0..p {
+                            carry[j] = a[g + j] * carry[j];
+                            xc[row + j] += carry[j];
+                        }
                     }
                 }
-            });
-        }
-    });
+            }),
+    );
 }
 
 /// Parallel chunked TI scan in planar layout, in place: `ar`/`ai` length
 /// P, `bur`/`bui` (L, P) planes. Identical phases, chunking and FP op
 /// order to [`scan_parallel_ti_inplace_pooled`], so the two layouts agree
 /// bit-for-bit. `scratch` must hold at least
-/// [`planar_scratch_len`]`(p, threads)` elements.
+/// [`planar_scratch_len`]`(p, threads)` elements; the parallel phases
+/// dispatch on `exec` (results are executor-invariant).
 #[allow(clippy::too_many_arguments)]
 pub fn scan_parallel_ti_planar_inplace(
     ar: &[f32],
@@ -433,6 +451,7 @@ pub fn scan_parallel_ti_planar_inplace(
     p: usize,
     threads: usize,
     scratch: &mut [f32],
+    exec: Executor<'_>,
 ) {
     assert_eq!(ar.len(), p);
     assert_eq!(ai.len(), p);
@@ -464,42 +483,41 @@ pub fn scan_parallel_ti_planar_inplace(
     let st_i = &mut rest[..p];
 
     // Phase 1: local in-place scans + chunk summaries (ā^len, local final).
-    std::thread::scope(|s| {
-        for (c, (((((xrc, xic), arc), aic), lrc), lic)) in bur
-            .chunks_mut(chunk * p)
+    exec.run_tasks(
+        bur.chunks_mut(chunk * p)
             .zip(bui.chunks_mut(chunk * p))
             .zip(apw_r.chunks_mut(p))
             .zip(apw_i.chunks_mut(p))
             .zip(last_r.chunks_mut(p))
             .zip(last_i.chunks_mut(p))
             .enumerate()
-        {
-            s.spawn(move || {
-                let start = c * chunk;
-                let len = chunk.min(l - start);
-                for k in 1..len {
-                    let row = k * p;
-                    let (pr_all, cur_r) = xrc.split_at_mut(row);
-                    let (pi_all, cur_i) = xic.split_at_mut(row);
-                    let pr = &pr_all[row - p..];
-                    let pi = &pi_all[row - p..];
+            .map(|(c, (((((xrc, xic), arc), aic), lrc), lic))| {
+                move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    for k in 1..len {
+                        let row = k * p;
+                        let (pr_all, cur_r) = xrc.split_at_mut(row);
+                        let (pi_all, cur_i) = xic.split_at_mut(row);
+                        let pr = &pr_all[row - p..];
+                        let pi = &pi_all[row - p..];
+                        for j in 0..p {
+                            let nr = ar[j] * pr[j] - ai[j] * pi[j] + cur_r[j];
+                            let ni = ar[j] * pi[j] + ai[j] * pr[j] + cur_i[j];
+                            cur_r[j] = nr;
+                            cur_i[j] = ni;
+                        }
+                    }
                     for j in 0..p {
-                        let nr = ar[j] * pr[j] - ai[j] * pi[j] + cur_r[j];
-                        let ni = ar[j] * pi[j] + ai[j] * pr[j] + cur_i[j];
-                        cur_r[j] = nr;
-                        cur_i[j] = ni;
+                        let apw = C32::new(ar[j], ai[j]).powi(len as u32);
+                        arc[j] = apw.re;
+                        aic[j] = apw.im;
+                        lrc[j] = xrc[(len - 1) * p + j];
+                        lic[j] = xic[(len - 1) * p + j];
                     }
                 }
-                for j in 0..p {
-                    let apw = C32::new(ar[j], ai[j]).powi(len as u32);
-                    arc[j] = apw.re;
-                    aic[j] = apw.im;
-                    lrc[j] = xrc[(len - 1) * p + j];
-                    lic[j] = xic[(len - 1) * p + j];
-                }
-            });
-        }
-    });
+            }),
+    );
 
     // Phase 2: combine chunk summaries sequentially → state entering chunk c.
     st_r.fill(0.0);
@@ -516,35 +534,33 @@ pub fn scan_parallel_ti_planar_inplace(
         }
     }
 
-    // Phase 3: fixup (parallel): x_k += ā^{k−start+1} ∘ x_enter.
-    std::thread::scope(|s| {
-        for (c, (((xrc, xic), crr), cri)) in bur
-            .chunks_mut(chunk * p)
+    // Phase 3: fixup (parallel): x_k += ā^{k−start+1} ∘ x_enter. Chunk 0
+    // enters at zero: nothing to add, so it is skipped.
+    exec.run_tasks(
+        bur.chunks_mut(chunk * p)
             .zip(bui.chunks_mut(chunk * p))
             .zip(ent_r.chunks_mut(p))
             .zip(ent_i.chunks_mut(p))
             .enumerate()
-        {
-            if c == 0 {
-                continue; // enters at zero: nothing to add
-            }
-            s.spawn(move || {
-                let start = c * chunk;
-                let len = chunk.min(l - start);
-                for k in 0..len {
-                    let row = k * p;
-                    for j in 0..p {
-                        let nr = crr[j] * ar[j] - cri[j] * ai[j];
-                        let ni = crr[j] * ai[j] + cri[j] * ar[j];
-                        crr[j] = nr;
-                        cri[j] = ni;
-                        xrc[row + j] += nr;
-                        xic[row + j] += ni;
+            .skip(1)
+            .map(|(c, (((xrc, xic), crr), cri))| {
+                move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    for k in 0..len {
+                        let row = k * p;
+                        for j in 0..p {
+                            let nr = crr[j] * ar[j] - cri[j] * ai[j];
+                            let ni = crr[j] * ai[j] + cri[j] * ar[j];
+                            crr[j] = nr;
+                            cri[j] = ni;
+                            xrc[row + j] += nr;
+                            xic[row + j] += ni;
+                        }
                     }
                 }
-            });
-        }
-    });
+            }),
+    );
 }
 
 /// Parallel chunked TV scan in planar layout, in place: all planes (L, P).
@@ -559,6 +575,7 @@ pub fn scan_parallel_tv_planar_inplace(
     p: usize,
     threads: usize,
     scratch: &mut [f32],
+    exec: Executor<'_>,
 ) {
     assert_eq!(ar.len(), l * p);
     assert_eq!(ai.len(), l * p);
@@ -590,48 +607,47 @@ pub fn scan_parallel_tv_planar_inplace(
     let st_i = &mut rest[..p];
 
     // Phase 1: local scans + per-chunk multiplier products.
-    std::thread::scope(|s| {
-        for (c, (((((xrc, xic), arc), aic), lrc), lic)) in bur
-            .chunks_mut(chunk * p)
+    exec.run_tasks(
+        bur.chunks_mut(chunk * p)
             .zip(bui.chunks_mut(chunk * p))
             .zip(apd_r.chunks_mut(p))
             .zip(apd_i.chunks_mut(p))
             .zip(last_r.chunks_mut(p))
             .zip(last_i.chunks_mut(p))
             .enumerate()
-        {
-            s.spawn(move || {
-                let start = c * chunk;
-                let len = chunk.min(l - start);
-                arc.fill(1.0);
-                aic.fill(0.0);
-                for k in 0..len {
-                    let g = (start + k) * p;
-                    if k > 0 {
-                        let row = k * p;
-                        let (pr_all, cur_r) = xrc.split_at_mut(row);
-                        let (pi_all, cur_i) = xic.split_at_mut(row);
-                        let pr = &pr_all[row - p..];
-                        let pi = &pi_all[row - p..];
+            .map(|(c, (((((xrc, xic), arc), aic), lrc), lic))| {
+                move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    arc.fill(1.0);
+                    aic.fill(0.0);
+                    for k in 0..len {
+                        let g = (start + k) * p;
+                        if k > 0 {
+                            let row = k * p;
+                            let (pr_all, cur_r) = xrc.split_at_mut(row);
+                            let (pi_all, cur_i) = xic.split_at_mut(row);
+                            let pr = &pr_all[row - p..];
+                            let pi = &pi_all[row - p..];
+                            for j in 0..p {
+                                let nr = ar[g + j] * pr[j] - ai[g + j] * pi[j] + cur_r[j];
+                                let ni = ar[g + j] * pi[j] + ai[g + j] * pr[j] + cur_i[j];
+                                cur_r[j] = nr;
+                                cur_i[j] = ni;
+                            }
+                        }
                         for j in 0..p {
-                            let nr = ar[g + j] * pr[j] - ai[g + j] * pi[j] + cur_r[j];
-                            let ni = ar[g + j] * pi[j] + ai[g + j] * pr[j] + cur_i[j];
-                            cur_r[j] = nr;
-                            cur_i[j] = ni;
+                            let nr = ar[g + j] * arc[j] - ai[g + j] * aic[j];
+                            let ni = ar[g + j] * aic[j] + ai[g + j] * arc[j];
+                            arc[j] = nr;
+                            aic[j] = ni;
                         }
                     }
-                    for j in 0..p {
-                        let nr = ar[g + j] * arc[j] - ai[g + j] * aic[j];
-                        let ni = ar[g + j] * aic[j] + ai[g + j] * arc[j];
-                        arc[j] = nr;
-                        aic[j] = ni;
-                    }
+                    lrc.copy_from_slice(&xrc[(len - 1) * p..len * p]);
+                    lic.copy_from_slice(&xic[(len - 1) * p..len * p]);
                 }
-                lrc.copy_from_slice(&xrc[(len - 1) * p..len * p]);
-                lic.copy_from_slice(&xic[(len - 1) * p..len * p]);
-            });
-        }
-    });
+            }),
+    );
 
     // Phase 2: combine chunk summaries sequentially.
     st_r.fill(0.0);
@@ -648,36 +664,34 @@ pub fn scan_parallel_tv_planar_inplace(
         }
     }
 
-    // Phase 3: fixup with per-step multipliers.
-    std::thread::scope(|s| {
-        for (c, (((xrc, xic), crr), cri)) in bur
-            .chunks_mut(chunk * p)
+    // Phase 3: fixup with per-step multipliers (chunk 0 skipped: it
+    // enters at zero).
+    exec.run_tasks(
+        bur.chunks_mut(chunk * p)
             .zip(bui.chunks_mut(chunk * p))
             .zip(ent_r.chunks_mut(p))
             .zip(ent_i.chunks_mut(p))
             .enumerate()
-        {
-            if c == 0 {
-                continue;
-            }
-            s.spawn(move || {
-                let start = c * chunk;
-                let len = chunk.min(l - start);
-                for k in 0..len {
-                    let g = (start + k) * p;
-                    let row = k * p;
-                    for j in 0..p {
-                        let nr = ar[g + j] * crr[j] - ai[g + j] * cri[j];
-                        let ni = ar[g + j] * cri[j] + ai[g + j] * crr[j];
-                        crr[j] = nr;
-                        cri[j] = ni;
-                        xrc[row + j] += nr;
-                        xic[row + j] += ni;
+            .skip(1)
+            .map(|(c, (((xrc, xic), crr), cri))| {
+                move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    for k in 0..len {
+                        let g = (start + k) * p;
+                        let row = k * p;
+                        for j in 0..p {
+                            let nr = ar[g + j] * crr[j] - ai[g + j] * cri[j];
+                            let ni = ar[g + j] * cri[j] + ai[g + j] * crr[j];
+                            crr[j] = nr;
+                            cri[j] = ni;
+                            xrc[row + j] += nr;
+                            xic[row + j] += ni;
+                        }
                     }
                 }
-            });
-        }
-    });
+            }),
+    );
 }
 
 // ---------------------------------------------------------------------------
@@ -801,6 +815,17 @@ pub trait ScanBackend: Send + Sync {
     /// Buffer layout the engine should drive this backend with.
     fn layout(&self) -> ScanLayout {
         ScanLayout::Planar
+    }
+
+    /// How this backend (and every engine stage driven by it) dispatches
+    /// shard closures. The default is the pre-pool spawn-per-call scoped
+    /// fallback; [`SequentialBackend`] runs inline and
+    /// [`ParallelBackend`] dispatches onto the persistent worker pool
+    /// unless configured otherwise (see [`ScanExec`]). The executor never
+    /// affects the shard decomposition, so results are bit-for-bit
+    /// executor-invariant.
+    fn executor(&self) -> Executor<'_> {
+        Executor::Scoped
     }
 
     /// Time-invariant scan of one sequence: `a` (P), `bu` (L, P) in/out.
@@ -967,6 +992,10 @@ impl ScanBackend for SequentialBackend {
         1
     }
 
+    fn executor(&self) -> Executor<'_> {
+        Executor::Inline
+    }
+
     fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize, _scratch: &mut ScanScratch) {
         scan_sequential_ti_inplace(a, bu, l, p);
     }
@@ -1002,6 +1031,40 @@ impl ScanBackend for SequentialBackend {
     }
 }
 
+/// How a [`ParallelBackend`] dispatches its shard closures — the knob
+/// behind "pooled by default, scoped/inline on request".
+///
+/// Every mode runs the identical shard closures over the identical
+/// decomposition (fixed by the backend's thread budget), so the results
+/// are bit-for-bit mode-invariant; `tests/scan_matrix.rs` pins this.
+#[derive(Clone, Default)]
+pub enum ScanExec {
+    /// The process-wide persistent worker pool
+    /// ([`crate::runtime::pool::global_pool`]) — the default everywhere
+    /// ([`backend_for_threads`], the native server).
+    #[default]
+    Pooled,
+    /// A dedicated pool instance (tests, isolated serving pools).
+    Pool(Arc<WorkerPool>),
+    /// Spawn scoped threads per call — the pre-pool dispatch, kept as
+    /// the opt-out and as the bench baseline.
+    Scoped,
+    /// Run every shard inline on the caller thread (deterministic
+    /// single-threaded execution of the same chunked decomposition).
+    Inline,
+}
+
+impl std::fmt::Debug for ScanExec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ScanExec::Pooled => "pooled",
+            ScanExec::Pool(_) => "pool",
+            ScanExec::Scoped => "scoped",
+            ScanExec::Inline => "inline",
+        })
+    }
+}
+
 /// Multi-threaded backend: chunked Blelloch scan within a sequence,
 /// sequence-sharding across a batch.
 ///
@@ -1009,15 +1072,27 @@ impl ScanBackend for SequentialBackend {
 /// 4·T rows (chunk bookkeeping would dominate); a batch with B ≥ T shards
 /// whole sequences across workers (embarrassingly parallel, no fixup
 /// phase); a batch with B < T gives each sequence ⌊T/B⌋ chunk-workers.
-#[derive(Clone, Copy, Debug)]
+///
+/// Shards dispatch on the configured [`ScanExec`] — the persistent
+/// worker pool by default, so steady-state serving never spawns a
+/// thread.
+#[derive(Clone, Debug)]
 pub struct ParallelBackend {
     threads: usize,
+    exec: ScanExec,
 }
 
 impl ParallelBackend {
     /// `threads = 0` auto-detects via `std::thread::available_parallelism`.
+    /// Dispatches on the process-wide persistent pool ([`ScanExec::Pooled`]).
     pub fn new(threads: usize) -> ParallelBackend {
-        ParallelBackend { threads: crate::ssm::engine::auto_threads(threads) }
+        ParallelBackend::with_exec(threads, ScanExec::Pooled)
+    }
+
+    /// A backend with an explicit dispatch mode (`threads = 0`
+    /// auto-detects).
+    pub fn with_exec(threads: usize, exec: ScanExec) -> ParallelBackend {
+        ParallelBackend { threads: crate::ssm::engine::auto_threads(threads), exec }
     }
 }
 
@@ -1031,12 +1106,22 @@ impl ScanBackend for ParallelBackend {
         self.threads
     }
 
+    fn executor(&self) -> Executor<'_> {
+        match &self.exec {
+            ScanExec::Pooled => Executor::Pool(global_pool()),
+            ScanExec::Pool(pool) => Executor::Pool(pool.as_ref()),
+            ScanExec::Scoped => Executor::Scoped,
+            ScanExec::Inline => Executor::Inline,
+        }
+    }
+
     fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize, scratch: &mut ScanScratch) {
         scratch.reserve_interleaved(p, self.threads);
         if self.threads <= 1 || l < 4 * self.threads {
             scan_sequential_ti_inplace(a, bu, l, p);
         } else {
-            scan_parallel_ti_inplace_pooled(a, bu, l, p, self.threads, &mut scratch.c[0]);
+            let ex = self.executor();
+            scan_parallel_ti_inplace_pooled(a, bu, l, p, self.threads, &mut scratch.c[0], ex);
         }
     }
 
@@ -1045,7 +1130,8 @@ impl ScanBackend for ParallelBackend {
         if self.threads <= 1 || l < 4 * self.threads {
             scan_sequential_tv_inplace(a, bu, l, p);
         } else {
-            scan_parallel_tv_inplace_pooled(a, bu, l, p, self.threads, &mut scratch.c[0]);
+            let ex = self.executor();
+            scan_parallel_tv_inplace_pooled(a, bu, l, p, self.threads, &mut scratch.c[0], ex);
         }
     }
 
@@ -1074,29 +1160,26 @@ impl ScanBackend for ParallelBackend {
             }
         } else if batch >= t {
             let per = batch.div_ceil(t);
-            std::thread::scope(|s| {
-                for shard in bu.chunks_mut(per * rows) {
-                    s.spawn(move || {
-                        for seq in shard.chunks_mut(rows) {
-                            scan_sequential_ti_inplace(a, seq, l, p);
-                        }
-                    });
+            self.executor().run_tasks(bu.chunks_mut(per * rows).map(|shard| {
+                move || {
+                    for seq in shard.chunks_mut(rows) {
+                        scan_sequential_ti_inplace(a, seq, l, p);
+                    }
                 }
-            });
+            }));
         } else {
             let per_seq = t / batch;
+            let ex = self.executor();
             let workers = scratch.c_workers(batch);
-            std::thread::scope(|s| {
-                for (seq, w) in bu.chunks_mut(rows).zip(workers.iter_mut()) {
-                    s.spawn(move || {
-                        if per_seq <= 1 || l < 4 * per_seq {
-                            scan_sequential_ti_inplace(a, seq, l, p);
-                        } else {
-                            scan_parallel_ti_inplace_pooled(a, seq, l, p, per_seq, w);
-                        }
-                    });
+            ex.run_tasks(bu.chunks_mut(rows).zip(workers.iter_mut()).map(|(seq, w)| {
+                move || {
+                    if per_seq <= 1 || l < 4 * per_seq {
+                        scan_sequential_ti_inplace(a, seq, l, p);
+                    } else {
+                        scan_parallel_ti_inplace_pooled(a, seq, l, p, per_seq, w, ex);
+                    }
                 }
-            });
+            }));
         }
     }
 
@@ -1126,31 +1209,35 @@ impl ScanBackend for ParallelBackend {
             }
         } else if batch >= t {
             let per = batch.div_ceil(t);
-            std::thread::scope(|s| {
-                for (ashard, shard) in a.chunks(per * rows).zip(bu.chunks_mut(per * rows)) {
-                    s.spawn(move || {
-                        for (aseq, seq) in ashard.chunks(rows).zip(shard.chunks_mut(rows)) {
-                            scan_sequential_tv_inplace(aseq, seq, l, p);
+            self.executor().run_tasks(
+                a.chunks(per * rows)
+                    .zip(bu.chunks_mut(per * rows))
+                    .map(|(ashard, shard)| {
+                        move || {
+                            for (aseq, seq) in ashard.chunks(rows).zip(shard.chunks_mut(rows)) {
+                                scan_sequential_tv_inplace(aseq, seq, l, p);
+                            }
                         }
-                    });
-                }
-            });
+                    }),
+            );
         } else {
             let per_seq = t / batch;
+            let ex = self.executor();
             let workers = scratch.c_workers(batch);
-            std::thread::scope(|s| {
-                for ((aseq, seq), w) in
-                    a.chunks(rows).zip(bu.chunks_mut(rows)).zip(workers.iter_mut())
-                {
-                    s.spawn(move || {
-                        if per_seq <= 1 || l < 4 * per_seq {
-                            scan_sequential_tv_inplace(aseq, seq, l, p);
-                        } else {
-                            scan_parallel_tv_inplace_pooled(aseq, seq, l, p, per_seq, w);
+            ex.run_tasks(
+                a.chunks(rows)
+                    .zip(bu.chunks_mut(rows))
+                    .zip(workers.iter_mut())
+                    .map(|((aseq, seq), w)| {
+                        move || {
+                            if per_seq <= 1 || l < 4 * per_seq {
+                                scan_sequential_tv_inplace(aseq, seq, l, p);
+                            } else {
+                                scan_parallel_tv_inplace_pooled(aseq, seq, l, p, per_seq, w, ex);
+                            }
                         }
-                    });
-                }
-            });
+                    }),
+            );
         }
     }
 
@@ -1168,8 +1255,9 @@ impl ScanBackend for ParallelBackend {
         if self.threads <= 1 || l < 4 * self.threads {
             scan_sequential_ti_planar_inplace(ar, ai, bur, bui, l, p);
         } else {
+            let ex = self.executor();
             let w = &mut scratch.f[0];
-            scan_parallel_ti_planar_inplace(ar, ai, bur, bui, l, p, self.threads, w);
+            scan_parallel_ti_planar_inplace(ar, ai, bur, bui, l, p, self.threads, w, ex);
         }
     }
 
@@ -1187,8 +1275,9 @@ impl ScanBackend for ParallelBackend {
         if self.threads <= 1 || l < 4 * self.threads {
             scan_sequential_tv_planar_inplace(ar, ai, bur, bui, l, p);
         } else {
+            let ex = self.executor();
             let w = &mut scratch.f[0];
-            scan_parallel_tv_planar_inplace(ar, ai, bur, bui, l, p, self.threads, w);
+            scan_parallel_tv_planar_inplace(ar, ai, bur, bui, l, p, self.threads, w, ex);
         }
     }
 
@@ -1222,33 +1311,37 @@ impl ScanBackend for ParallelBackend {
             }
         } else if batch >= t {
             let per = batch.div_ceil(t);
-            std::thread::scope(|s| {
-                for (shr, shi) in bur.chunks_mut(per * rows).zip(bui.chunks_mut(per * rows)) {
-                    s.spawn(move || {
-                        for (sr, si) in shr.chunks_mut(rows).zip(shi.chunks_mut(rows)) {
-                            scan_sequential_ti_planar_inplace(ar, ai, sr, si, l, p);
+            self.executor().run_tasks(
+                bur.chunks_mut(per * rows)
+                    .zip(bui.chunks_mut(per * rows))
+                    .map(|(shr, shi)| {
+                        move || {
+                            for (sr, si) in shr.chunks_mut(rows).zip(shi.chunks_mut(rows)) {
+                                scan_sequential_ti_planar_inplace(ar, ai, sr, si, l, p);
+                            }
                         }
-                    });
-                }
-            });
+                    }),
+            );
         } else {
             let per_seq = t / batch;
+            let ex = self.executor();
             let workers = scratch.f_workers(batch);
-            std::thread::scope(|s| {
-                for ((sr, si), w) in bur
-                    .chunks_mut(rows)
+            ex.run_tasks(
+                bur.chunks_mut(rows)
                     .zip(bui.chunks_mut(rows))
                     .zip(workers.iter_mut())
-                {
-                    s.spawn(move || {
-                        if per_seq <= 1 || l < 4 * per_seq {
-                            scan_sequential_ti_planar_inplace(ar, ai, sr, si, l, p);
-                        } else {
-                            scan_parallel_ti_planar_inplace(ar, ai, sr, si, l, p, per_seq, w);
+                    .map(|((sr, si), w)| {
+                        move || {
+                            if per_seq <= 1 || l < 4 * per_seq {
+                                scan_sequential_ti_planar_inplace(ar, ai, sr, si, l, p);
+                            } else {
+                                scan_parallel_ti_planar_inplace(
+                                    ar, ai, sr, si, l, p, per_seq, w, ex,
+                                );
+                            }
                         }
-                    });
-                }
-            });
+                    }),
+            );
         }
     }
 
@@ -1287,45 +1380,46 @@ impl ScanBackend for ParallelBackend {
             }
         } else if batch >= t {
             let per = batch.div_ceil(t);
-            std::thread::scope(|s| {
-                for (((arsh, aish), shr), shi) in ar
-                    .chunks(per * rows)
+            self.executor().run_tasks(
+                ar.chunks(per * rows)
                     .zip(ai.chunks(per * rows))
                     .zip(bur.chunks_mut(per * rows))
                     .zip(bui.chunks_mut(per * rows))
-                {
-                    s.spawn(move || {
-                        for (((arseq, aiseq), sr), si) in arsh
-                            .chunks(rows)
-                            .zip(aish.chunks(rows))
-                            .zip(shr.chunks_mut(rows))
-                            .zip(shi.chunks_mut(rows))
-                        {
-                            scan_sequential_tv_planar_inplace(arseq, aiseq, sr, si, l, p);
+                    .map(|(((arsh, aish), shr), shi)| {
+                        move || {
+                            for (((arseq, aiseq), sr), si) in arsh
+                                .chunks(rows)
+                                .zip(aish.chunks(rows))
+                                .zip(shr.chunks_mut(rows))
+                                .zip(shi.chunks_mut(rows))
+                            {
+                                scan_sequential_tv_planar_inplace(arseq, aiseq, sr, si, l, p);
+                            }
                         }
-                    });
-                }
-            });
+                    }),
+            );
         } else {
             let per_seq = t / batch;
+            let ex = self.executor();
             let workers = scratch.f_workers(batch);
-            std::thread::scope(|s| {
-                for ((((arseq, aiseq), sr), si), w) in ar
-                    .chunks(rows)
+            ex.run_tasks(
+                ar.chunks(rows)
                     .zip(ai.chunks(rows))
                     .zip(bur.chunks_mut(rows))
                     .zip(bui.chunks_mut(rows))
                     .zip(workers.iter_mut())
-                {
-                    s.spawn(move || {
-                        if per_seq <= 1 || l < 4 * per_seq {
-                            scan_sequential_tv_planar_inplace(arseq, aiseq, sr, si, l, p);
-                        } else {
-                            scan_parallel_tv_planar_inplace(arseq, aiseq, sr, si, l, p, per_seq, w);
+                    .map(|((((arseq, aiseq), sr), si), w)| {
+                        move || {
+                            if per_seq <= 1 || l < 4 * per_seq {
+                                scan_sequential_tv_planar_inplace(arseq, aiseq, sr, si, l, p);
+                            } else {
+                                scan_parallel_tv_planar_inplace(
+                                    arseq, aiseq, sr, si, l, p, per_seq, w, ex,
+                                );
+                            }
                         }
-                    });
-                }
-            });
+                    }),
+            );
         }
     }
 }
@@ -1350,6 +1444,10 @@ impl<B: ScanBackend> ScanBackend for Interleaved<B> {
 
     fn layout(&self) -> ScanLayout {
         ScanLayout::Interleaved
+    }
+
+    fn executor(&self) -> Executor<'_> {
+        self.0.executor()
     }
 
     fn scan_ti(&self, a: &[C32], bu: &mut [C32], l: usize, p: usize, scratch: &mut ScanScratch) {
@@ -1457,7 +1555,10 @@ impl<B: ScanBackend> ScanBackend for Interleaved<B> {
 
 /// Pick a backend for a thread budget: ≤ 1 worker → [`SequentialBackend`],
 /// otherwise [`ParallelBackend`]; `threads = 0` auto-detects. The returned
-/// backend prefers the **planar** layout (the default strategy).
+/// backend prefers the **planar** layout (the default strategy) and
+/// dispatches shards on the process-wide persistent worker pool
+/// ([`ScanExec::Pooled`]) — one pool shared across every batch, request
+/// and session, so steady-state serving never spawns a thread.
 ///
 /// This is the resolver behind the `threads` knob everywhere — the CLI,
 /// the native server, and
@@ -1470,12 +1571,27 @@ pub fn backend_for_threads(threads: usize) -> Box<dyn ScanBackend> {
 /// [`backend_for_threads`] with an explicit layout: `Interleaved` wraps
 /// the same strategy in the layout-override oracle wrapper.
 pub fn backend_for(threads: usize, layout: ScanLayout) -> Box<dyn ScanBackend> {
+    backend_for_exec(threads, layout, ScanExec::Pooled)
+}
+
+/// [`backend_for`] with an explicit dispatch mode — the opt-out knob for
+/// the persistent pool (e.g. [`ScanExec::Scoped`] restores the
+/// spawn-per-call behavior, [`ScanExec::Inline`] pins single-threaded
+/// execution of the same chunked decomposition). Results are bit-for-bit
+/// identical across modes.
+pub fn backend_for_exec(
+    threads: usize,
+    layout: ScanLayout,
+    exec: ScanExec,
+) -> Box<dyn ScanBackend> {
     let t = crate::ssm::engine::auto_threads(threads);
     match (t <= 1, layout) {
         (true, ScanLayout::Planar) => Box::new(SequentialBackend),
-        (false, ScanLayout::Planar) => Box::new(ParallelBackend::new(t)),
+        (false, ScanLayout::Planar) => Box::new(ParallelBackend::with_exec(t, exec)),
         (true, ScanLayout::Interleaved) => Box::new(Interleaved(SequentialBackend)),
-        (false, ScanLayout::Interleaved) => Box::new(Interleaved(ParallelBackend::new(t))),
+        (false, ScanLayout::Interleaved) => {
+            Box::new(Interleaved(ParallelBackend::with_exec(t, exec)))
+        }
     }
 }
 
@@ -1711,7 +1827,17 @@ mod tests {
                 scan_parallel_ti_inplace(&a, &mut want, l, p, t);
                 let (mut xr, mut xi) = (br.clone(), bi.clone());
                 let mut s = vec![0.0f32; planar_scratch_len(p, t)];
-                scan_parallel_ti_planar_inplace(&ar, &ai, &mut xr, &mut xi, l, p, t, &mut s);
+                scan_parallel_ti_planar_inplace(
+                    &ar,
+                    &ai,
+                    &mut xr,
+                    &mut xi,
+                    l,
+                    p,
+                    t,
+                    &mut s,
+                    Executor::Scoped,
+                );
                 for (i, w) in want.iter().enumerate() {
                     assert!(
                         xr[i] == w.re && xi[i] == w.im,
@@ -1726,7 +1852,17 @@ mod tests {
                 let mut want = b.clone();
                 scan_parallel_tv_inplace(&a_tv, &mut want, l, p, t);
                 let (mut xr, mut xi) = (br.clone(), bi.clone());
-                scan_parallel_tv_planar_inplace(&atr, &ati, &mut xr, &mut xi, l, p, t, &mut s);
+                scan_parallel_tv_planar_inplace(
+                    &atr,
+                    &ati,
+                    &mut xr,
+                    &mut xi,
+                    l,
+                    p,
+                    t,
+                    &mut s,
+                    Executor::Scoped,
+                );
                 for (i, w) in want.iter().enumerate() {
                     assert!(
                         xr[i] == w.re && xi[i] == w.im,
@@ -2018,9 +2154,29 @@ mod tests {
             scan_sequential_tv_planar_inplace(&atr, &ati, &mut xr, &mut xi, l, p);
             let mut s = vec![0.0f32; planar_scratch_len(p, t)];
             let (mut xr, mut xi) = (br.clone(), bi.clone());
-            scan_parallel_ti_planar_inplace(&ar, &ai, &mut xr, &mut xi, l, p, t, &mut s);
+            scan_parallel_ti_planar_inplace(
+                &ar,
+                &ai,
+                &mut xr,
+                &mut xi,
+                l,
+                p,
+                t,
+                &mut s,
+                Executor::Scoped,
+            );
             let (mut xr, mut xi) = (br.clone(), bi.clone());
-            scan_parallel_tv_planar_inplace(&atr, &ati, &mut xr, &mut xi, l, p, t, &mut s);
+            scan_parallel_tv_planar_inplace(
+                &atr,
+                &ati,
+                &mut xr,
+                &mut xi,
+                l,
+                p,
+                t,
+                &mut s,
+                Executor::Scoped,
+            );
 
             // backend entry points, single and batched (B = 0 included)
             for be in &backends {
@@ -2111,5 +2267,27 @@ mod tests {
         assert_eq!(il.layout(), ScanLayout::Interleaved);
         assert_eq!(il.threads(), 4);
         assert_eq!(backend_for(1, ScanLayout::Interleaved).layout(), ScanLayout::Interleaved);
+    }
+
+    /// Pooled dispatch is the default for every multi-threaded resolver
+    /// (the acceptance criterion of the worker-pool PR); sequential
+    /// strategies run inline; the opt-outs resolve as asked.
+    #[test]
+    fn backend_for_resolves_executors() {
+        assert!(backend_for_threads(4).executor().is_pool());
+        assert!(backend_for(4, ScanLayout::Interleaved).executor().is_pool());
+        assert_eq!(backend_for_threads(1).executor().kind(), "inline");
+        assert_eq!(
+            backend_for_exec(4, ScanLayout::Planar, ScanExec::Scoped).executor().kind(),
+            "scoped"
+        );
+        assert_eq!(
+            backend_for_exec(4, ScanLayout::Planar, ScanExec::Inline).executor().kind(),
+            "inline"
+        );
+        let own = Arc::new(WorkerPool::new(2));
+        let be = ParallelBackend::with_exec(4, ScanExec::Pool(own.clone()));
+        assert!(be.executor().is_pool());
+        assert_eq!(be.threads(), 4, "thread budget is independent of pool size");
     }
 }
