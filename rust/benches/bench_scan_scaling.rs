@@ -23,8 +23,9 @@
 use s5::bench::{fmt_secs, measure, quick_mode};
 use s5::num::{C32, C64};
 use s5::rng::Rng;
-use s5::ssm::engine::EngineWorkspace;
-use s5::ssm::s5::{S5Config, S5Model};
+use s5::ssm::api::ForwardOptions;
+use s5::ssm::engine::{EngineWorkspace, Tiling};
+use s5::ssm::s5::{S5Config, S5Layer, S5Model};
 use s5::ssm::scan;
 use s5::ssm::scan::{
     backend_for_threads, ParallelBackend, ScanBackend, ScanExec, ScanScratch, SequentialBackend,
@@ -44,6 +45,8 @@ fn main() {
     let max_threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(8);
     // snapshot rows: (name, mean seconds, million elements/second)
     let mut snap: Vec<(String, f64, f64)> = Vec::new();
+    // scalar metrics (workspace bytes, bytes/token, …) for the snapshot
+    let mut metrics: Vec<(String, f64)> = Vec::new();
 
     println!("# Parallel scan scaling (L={l}, P={p})\n");
     let mut rng = Rng::new(1);
@@ -267,6 +270,91 @@ fn main() {
         println!("## persistent pool vs scoped spawn dispatch (planar TI)\n{}", t.render());
     }
 
+    // 7. §Tentpole (fused-tiling PR): the cache-blocked fused
+    // drive→scale→scan→project pipeline vs the staged full-plane pipeline
+    // through a whole S5 SSM stage, at the serving shape and a short
+    // shape. Same kernels per element — the delta is pure memory traffic
+    // (the staged path round-trips full (B, L, P2) planes through DRAM
+    // four times; the fused path keeps each tile L2-resident) — plus the
+    // SsmBuffers footprint, reported per token so the O(B·T·P) claim is
+    // measured rather than asserted.
+    {
+        let tthr = max_threads.clamp(4, 8); // ≥ 4 (sequence × direction) pipelines
+        let mut t = Table::new(&["shape", "pipeline", "time", "tokens/s", "ssm bytes/token"]);
+        for &(lt, p2t, ht, bt, tag) in
+            &[(16384usize, 256usize, 32usize, 4usize, "serving"), (2048, 64, 16, 4, "short")]
+        {
+            let mut rng2 = Rng::new(11);
+            let layer = random_layer(&mut rng2, ht, p2t);
+            let u = rng2.normal_vec_f32(bt * lt * ht);
+            let mut y = vec![0.0f32; bt * lt * ht];
+            let tokens = (bt * lt) as f64;
+            let staged_opts =
+                ForwardOptions::new().with_threads(tthr).with_tiling(Tiling::Staged);
+            let fused_opts = ForwardOptions::new().with_threads(tthr); // Auto tile
+            let mut ws_staged = EngineWorkspace::new();
+            let mut ws_fused = EngineWorkspace::new();
+            // warm both so the measured loops are steady-state (no alloc)
+            layer.apply_ssm_batch_opts_into(&u, bt, lt, None, &staged_opts, &mut ws_staged, &mut y);
+            layer.apply_ssm_batch_opts_into(&u, bt, lt, None, &fused_opts, &mut ws_fused, &mut y);
+            let staged = measure(&format!("fused A/B staged {tag}"), || {
+                layer.apply_ssm_batch_opts_into(
+                    &u, bt, lt, None, &staged_opts, &mut ws_staged, &mut y,
+                );
+                std::hint::black_box(&y);
+            });
+            let fused = measure(&format!("fused A/B fused {tag}"), || {
+                layer.apply_ssm_batch_opts_into(
+                    &u, bt, lt, None, &fused_opts, &mut ws_fused, &mut y,
+                );
+                std::hint::black_box(&y);
+            });
+            let staged_bytes = ws_staged.ssm_capacity_bytes() as f64;
+            let fused_bytes = ws_fused.ssm_capacity_bytes() as f64;
+            for (name, st, bytes) in
+                [("staged full-plane", &staged, staged_bytes), ("fused tiled", &fused, fused_bytes)]
+            {
+                t.row(&[
+                    format!("L={lt} P2={p2t} H={ht} B={bt}"),
+                    name.into(),
+                    fmt_secs(st.mean),
+                    format!("{:.0}k", tokens / st.mean / 1e3),
+                    format!("{:.1}", bytes / tokens),
+                ]);
+            }
+            println!(
+                "fused A/B ({tag}, L={lt}, P2={p2t}, H={ht}, B={bt}, T={tthr}): \
+                 fused speedup {:.2}x, ssm bytes/token {:.1} → {:.1}",
+                staged.mean / fused.mean,
+                staged_bytes / tokens,
+                fused_bytes / tokens
+            );
+            snap.push((format!("fused_ab_{tag}/staged"), staged.mean, tokens / staged.mean / 1e6));
+            snap.push((format!("fused_ab_{tag}/fused"), fused.mean, tokens / fused.mean / 1e6));
+            metrics.push((format!("fused_ab_{tag}/staged_ssm_bytes"), staged_bytes));
+            metrics.push((format!("fused_ab_{tag}/fused_ssm_bytes"), fused_bytes));
+            metrics
+                .push((format!("fused_ab_{tag}/staged_ssm_bytes_per_token"), staged_bytes / tokens));
+            metrics
+                .push((format!("fused_ab_{tag}/fused_ssm_bytes_per_token"), fused_bytes / tokens));
+            // the O(B·T·P) claim, measured: doubling L must not move the
+            // fused high-water mark (the staged one doubles)
+            let l2 = lt * 2;
+            let u2 = rng2.normal_vec_f32(bt * l2 * ht);
+            let mut y2 = vec![0.0f32; bt * l2 * ht];
+            layer.apply_ssm_batch_opts_into(&u2, bt, l2, None, &fused_opts, &mut ws_fused, &mut y2);
+            metrics.push((
+                format!("fused_ab_{tag}/fused_ssm_bytes_at_2x_l"),
+                ws_fused.ssm_capacity_bytes() as f64,
+            ));
+        }
+        println!("## fused cache-blocked vs staged SSM pipeline (TI)\n{}", t.render());
+        println!(
+            "acceptance: fused speedup > 1x at the serving shape, fused ssm bytes \
+             independent of L\n"
+        );
+    }
+
     // 3. linear growth in L
     let mut t = Table::new(&["L", "time", "time/L (ns)"]);
     for &ll in &[4096usize, 8192, 16384, if quick { 16384 } else { 32768 }] {
@@ -342,13 +430,48 @@ fn main() {
         println!("expected shape: batched speedup > 1x from B=4 up at ≥2 threads");
     }
 
-    write_snapshot(&snap, quick, max_threads);
+    write_snapshot(&snap, &metrics, quick, max_threads);
+}
+
+/// A random stable S5 layer at an explicit (H, P2) — the serving-shape
+/// fused-vs-staged A/B wants P2 = 256, where the HiPPO eigendecomposition
+/// of `S5Layer::init` would dominate bench startup for no measurement
+/// value. Eigenvalues sit in the stable left half-plane; magnitudes match
+/// the standard init scalings.
+fn random_layer(rng: &mut Rng, h: usize, p2: usize) -> S5Layer {
+    let sb = 1.0 / (h as f64).sqrt();
+    let sc = (0.5 / p2 as f64).sqrt();
+    S5Layer {
+        lambda: (0..p2)
+            .map(|_| C64::new(-(0.1 + rng.uniform_in(0.0, 1.0)), rng.normal()))
+            .collect(),
+        b_tilde: (0..p2 * h).map(|_| C64::new(rng.normal(), rng.normal()).scale(sb)).collect(),
+        c_tilde: vec![(0..h * p2)
+            .map(|_| C64::new(rng.normal(), rng.normal()).scale(sc))
+            .collect()],
+        d: rng.normal_vec_f32(h),
+        log_dt: (0..p2)
+            .map(|_| rng.uniform_in((1e-3f64).ln(), (1e-1f64).ln()) as f32)
+            .collect(),
+        gate_w: rng.normal_vec_f32(h * h),
+        norm_scale: vec![1.0; h],
+        norm_bias: vec![0.0; h],
+        h,
+        p2,
+    }
 }
 
 /// Write the scan-bench snapshot as JSON (hand-rolled — the offline build
 /// has no serde) so the perf trajectory is recorded run-over-run. Path:
 /// `BENCH_scan.json` in the working directory, or `S5_BENCH_JSON`.
-fn write_snapshot(rows: &[(String, f64, f64)], quick: bool, max_threads: usize) {
+/// Timing rows carry mean seconds + throughput; `metrics` carries scalar
+/// measurements (workspace bytes, bytes/token) keyed by name.
+fn write_snapshot(
+    rows: &[(String, f64, f64)],
+    metrics: &[(String, f64)],
+    quick: bool,
+    max_threads: usize,
+) {
     let path = std::env::var("S5_BENCH_JSON").unwrap_or_else(|_| "BENCH_scan.json".into());
     let mut out = String::from("{\n  \"bench\": \"scan_scaling\",\n");
     out.push_str(&format!(
@@ -360,7 +483,12 @@ fn write_snapshot(rows: &[(String, f64, f64)], quick: bool, max_threads: usize) 
             "    {{\"name\": \"{name}\", \"mean_s\": {mean:.6e}, \"melem_per_s\": {meps:.3}}}{comma}\n"
         ));
     }
-    out.push_str("  ]\n}\n");
+    out.push_str("  ],\n  \"metrics\": {\n");
+    for (i, (name, value)) in metrics.iter().enumerate() {
+        let comma = if i + 1 == metrics.len() { "" } else { "," };
+        out.push_str(&format!("    \"{name}\": {value:.3}{comma}\n"));
+    }
+    out.push_str("  }\n}\n");
     match std::fs::write(&path, &out) {
         Ok(()) => println!("\nwrote scan bench snapshot to {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),

@@ -89,6 +89,47 @@
 //! pooled chunk summaries in [`ssm::scan::ScanScratch`] so steady-state
 //! serving allocates nothing on the scan buffers).
 //!
+//! ## Memory model & tiling
+//!
+//! At serving shapes (L = 16k, P = 256) the native forward is bound by
+//! memory traffic, not FLOPs: materializing full (B, L, P2) drive planes
+//! and re-streaming them through scale, scan and projection round-trips
+//! DRAM once per stage. The default forward is therefore the **fused
+//! cache-blocked** pipeline ([`ssm::engine::Tiling::Auto`]): every
+//! (sequence × direction) processes its L in tiles, fusing drive → Δt
+//! scale → tile-resumable scan ([`ssm::scan::ScanBackend::scan_ti_planar_resume`])
+//! → projection (+ feedthrough) per tile, carrying the scan state across
+//! tile boundaries. Consequences:
+//!
+//! * **Workspace**: the scan-facing buffers
+//!   ([`ssm::engine::EngineWorkspace::ssm_capacity_bytes`]) hold
+//!   O(B·T·P2) — independent of L, growing only with the tile length
+//!   (capacity tests pin this; `bench_scan_scaling` reports the measured
+//!   bytes/token).
+//! * **Tile auto-sizing**: T is chosen so one pipeline's tile working
+//!   set (drive planes + TV multiplier planes + touched input/output
+//!   rows) fits [`ssm::engine::auto_tile_l`]'s 256 KiB L2 budget,
+//!   clamped to [64, 8192] rows. Override per forward with
+//!   [`ssm::api::ForwardOptions::with_tile`] / `with_tiling`, or
+//!   process-wide with `S5_TILE_L` (0 = staged; CI sweeps {1, 64, 4096}).
+//! * **Equivalence**: in-tile scans are sequential (tiles of one
+//!   sequence are data-dependent; parallelism shards the B × direction
+//!   pipelines across the worker pool), so the fused result equals the
+//!   staged pipeline over the sequential strategy **bit-for-bit** — for
+//!   any tile size, thread budget and executor. The untiled staged
+//!   pipeline ([`ssm::engine::Tiling::Staged`]) is retained as the
+//!   reference oracle (and is what the interleaved layout always runs);
+//!   use it when you need the chunked-parallel in-sequence scan of a
+//!   single long sequence.
+//! * **Chunked prefill**: `Session::prefill` swallows its prefix through
+//!   the same tile pipeline resuming from the live stream state
+//!   ([`ssm::api::SequenceModel::advance_batch`]), bit-for-bit equal to
+//!   per-token stepping at batch-kernel throughput.
+//! * **f64 state**: [`ssm::api::ForwardOptions::with_f64_state`] carries
+//!   the scan state in f64 (long-L drift studies) through the fused
+//!   pipeline; results are tile-invariant since the carry never
+//!   round-trips through f32.
+//!
 //! ## Threading model
 //!
 //! Parallel work — the chunked scans and the dense per-sequence engine

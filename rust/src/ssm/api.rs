@@ -29,7 +29,7 @@
 use std::any::Any;
 use std::sync::{Arc, Mutex};
 
-use crate::ssm::engine::EngineWorkspace;
+use crate::ssm::engine::{EngineWorkspace, ScanPolicy, Tiling};
 use crate::ssm::scan::{
     backend_for, backend_for_exec, backend_for_threads, ScanBackend, ScanExec, ScanLayout,
     SequentialBackend,
@@ -125,13 +125,19 @@ pub struct ForwardOptions {
     /// Zero-shot Δ-rescale factor (§6.2); 1.0 = the trained sampling rate.
     pub timescale: f64,
     backend: Arc<dyn ScanBackend>,
+    policy: ScanPolicy,
 }
 
 impl Default for ForwardOptions {
-    /// Sequential scan, timescale 1.0 — the deterministic reference
-    /// configuration (streaming ≡ batched bit-for-bit).
+    /// Sequential scan, timescale 1.0, fused auto-tiled forward — the
+    /// deterministic reference configuration (streaming ≡ batched
+    /// bit-for-bit).
     fn default() -> Self {
-        ForwardOptions { timescale: 1.0, backend: Arc::new(SequentialBackend) }
+        ForwardOptions {
+            timescale: 1.0,
+            backend: Arc::new(SequentialBackend),
+            policy: ScanPolicy::default(),
+        }
     }
 }
 
@@ -188,6 +194,43 @@ impl ForwardOptions {
     pub fn with_backend(mut self, backend: Arc<dyn ScanBackend>) -> ForwardOptions {
         self.backend = backend;
         self
+    }
+
+    /// Pin an explicit L-tile length for the fused cache-blocked forward
+    /// (`0` disables tiling — the staged reference pipeline). The default
+    /// is [`Tiling::Auto`]: a tile auto-sized to the L2 budget
+    /// ([`crate::ssm::engine::auto_tile_l`]), overridable process-wide
+    /// with the `S5_TILE_L` environment variable. The tile never changes
+    /// the result — fused forwards equal the staged sequential pipeline
+    /// bit-for-bit for any tile — only the memory-traffic profile.
+    pub fn with_tile(mut self, tile_l: usize) -> ForwardOptions {
+        self.policy.tiling = if tile_l == 0 { Tiling::Staged } else { Tiling::Fixed(tile_l) };
+        self
+    }
+
+    /// Select the forward blocking policy explicitly — [`Tiling::Staged`]
+    /// pins the untiled full-plane reference pipeline the fused default
+    /// is validated against.
+    pub fn with_tiling(mut self, tiling: Tiling) -> ForwardOptions {
+        self.policy.tiling = tiling;
+        self
+    }
+
+    /// Carry the scan state in f64 across the sequence (long-L drift
+    /// studies): the recurrence accumulates in f64 while the emitted
+    /// state rows stay f32, so results are tile- and thread-invariant
+    /// bit-for-bit. Planar layout only (the interleaved oracle is
+    /// f32-only, and streaming sessions always carry f32 state); with
+    /// [`Tiling::Staged`] the sequence runs as a single fused tile.
+    pub fn with_f64_state(mut self) -> ForwardOptions {
+        self.policy.f64_state = true;
+        self
+    }
+
+    /// The engine-level scan policy (tiling + state precision) this
+    /// forward will run under.
+    pub fn scan_policy(&self) -> ScanPolicy {
+        self.policy
     }
 
     /// The scan strategy this forward will run with.
@@ -297,6 +340,27 @@ pub trait SequenceModel: Send + Sync {
     fn advance(&self, state: &mut SessionState, u: &[f32], dt: Option<f32>, opts: &ForwardOptions) {
         let _ = self.step(state, u, dt, opts);
     }
+
+    /// Advance the state over a whole packed (L, d_input) chunk of
+    /// regular-Δt observations without materializing outputs — the
+    /// chunked-prefill fast path. Must be observably equivalent to `l`
+    /// calls to [`SequenceModel::advance`] (the default does exactly
+    /// that); models override to run their batched/tiled kernels instead
+    /// — S5 runs the fused cache-blocked tile pipeline, resuming from the
+    /// live stream state, with bit-for-bit identical results.
+    fn advance_batch(
+        &self,
+        state: &mut SessionState,
+        tokens: &[f32],
+        l: usize,
+        opts: &ForwardOptions,
+    ) {
+        let d = self.spec().d_input;
+        assert_eq!(tokens.len(), l * d);
+        for k in 0..l {
+            self.advance(state, &tokens[k * d..(k + 1) * d], None, opts);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -338,15 +402,21 @@ impl Session {
 
     /// Feed a whole (L × d_input) prefix through the streaming path;
     /// returns the output row after the last token. Only the final token
-    /// materializes an output (swallowed tokens go through the
-    /// state-advance-only fast path).
+    /// materializes an output; the swallowed prefix goes through the
+    /// chunked [`SequenceModel::advance_batch`] fast path (for S5, the
+    /// fused tile pipeline — same results as per-token stepping,
+    /// bit-for-bit, at batch-kernel throughput).
     pub fn prefill(&mut self, tokens: &[f32], l: usize) -> Vec<f32> {
         let d = self.model.spec().d_input;
         let tokens = Batch::single(tokens, l, d);
-        for k in 0..l - 1 {
-            self.steps += 1;
-            self.model
-                .advance(&mut self.state, &tokens.data()[k * d..(k + 1) * d], None, &self.opts);
+        if l > 1 {
+            self.model.advance_batch(
+                &mut self.state,
+                &tokens.data()[..(l - 1) * d],
+                l - 1,
+                &self.opts,
+            );
+            self.steps += l - 1;
         }
         self.step(&tokens.data()[(l - 1) * d..l * d])
     }
@@ -474,6 +544,25 @@ mod tests {
             .with_exec(3, ScanExec::Scoped);
         assert_eq!(o.scan_layout(), ScanLayout::Interleaved);
         assert_eq!(o.scan_backend().executor().kind(), "scoped");
+    }
+
+    /// The tiling/state policy defaults to (fused Auto, f32), the knobs
+    /// set it, and re-resolving the backend never resets it.
+    #[test]
+    fn options_builder_carries_scan_policy() {
+        let o = ForwardOptions::new();
+        assert_eq!(o.scan_policy().tiling, Tiling::Auto);
+        assert!(!o.scan_policy().f64_state);
+        let o = ForwardOptions::new().with_tile(128).with_threads(3);
+        assert_eq!(o.scan_policy().tiling, Tiling::Fixed(128), "with_threads reset the tiling");
+        assert_eq!(ForwardOptions::new().with_tile(0).scan_policy().tiling, Tiling::Staged);
+        let o = ForwardOptions::new()
+            .with_tiling(Tiling::Staged)
+            .with_f64_state()
+            .with_scan(2, ScanLayout::Planar)
+            .with_exec(2, ScanExec::Scoped);
+        assert_eq!(o.scan_policy().tiling, Tiling::Staged);
+        assert!(o.scan_policy().f64_state, "with_scan/with_exec reset f64_state");
     }
 
     #[test]

@@ -254,6 +254,106 @@ pub(crate) fn grow<T: Clone + Default>(buf: &mut Vec<T>, n: usize) {
     }
 }
 
+/// How the S5 forward materializes and scans the per-layer drive.
+///
+/// The default is the **fused cache-blocked** path: each (sequence,
+/// direction) runs as an independent pipeline of L-tiles — drive → Δt
+/// scale → tile-resumable scan → projection per tile — so the drive
+/// working set stays O(tile·P2) per pipeline and the workspace's
+/// [`SsmBuffers`] hold O(B·T·P2) total instead of full (B, L, P2) planes.
+/// [`Tiling::Staged`] selects the untiled reference pipeline (separate
+/// full-sequence drive/scale/scan/projection passes), retained as the
+/// oracle the fused path is validated against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Tiling {
+    /// Fused path with a tile auto-sized to the L2 budget (see
+    /// [`auto_tile_l`]). The `S5_TILE_L` environment variable overrides
+    /// the auto size (`S5_TILE_L=0` selects the staged path) — the CI
+    /// tile sweep drives the equivalence matrix through it.
+    #[default]
+    Auto,
+    /// Fused path with an explicit tile length (`Fixed(0)` degrades to
+    /// [`Tiling::Staged`]).
+    Fixed(usize),
+    /// The untiled staged reference pipeline (full-plane materialization;
+    /// the pre-tiling behavior). The interleaved oracle layout always
+    /// runs staged regardless of this knob.
+    Staged,
+}
+
+impl Tiling {
+    /// Resolve to a concrete tile length (`None` = staged). `Auto`
+    /// consults `S5_TILE_L` first, then sizes to the L2 budget.
+    pub(crate) fn resolve(self, p2: usize, h: usize, tv: bool) -> Option<usize> {
+        match self {
+            Tiling::Staged => None,
+            Tiling::Fixed(0) => None,
+            Tiling::Fixed(t) => Some(t),
+            Tiling::Auto => match tile_env_override() {
+                Some(0) => None,
+                Some(t) => Some(t),
+                None => Some(auto_tile_l(p2, h, tv)),
+            },
+        }
+    }
+}
+
+/// The `S5_TILE_L` override, parsed once per process — `resolve` runs per
+/// layer per forward, and `std::env::var` takes the env lock and
+/// allocates, which has no place on the serving hot path. A set-but-
+/// unparsable value warns once and falls back to the auto size (a sweep
+/// that silently tested nothing would be worse than the noise).
+fn tile_env_override() -> Option<usize> {
+    static TILE_ENV: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *TILE_ENV.get_or_init(|| match std::env::var("S5_TILE_L") {
+        Err(_) => None,
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(t) => Some(t),
+            Err(_) => {
+                eprintln!("S5_TILE_L={v:?} is not a tile length; using the auto tile size");
+                None
+            }
+        },
+    })
+}
+
+/// Per-pipeline cache budget the auto-sized tile targets: roughly half a
+/// typical per-core L2 slice, leaving room for the layer parameters the
+/// drive/projection loops stream.
+pub const TILE_TARGET_BYTES: usize = 256 * 1024;
+
+/// Auto-size the fused path's L-tile so one pipeline's per-tile working
+/// set — the re/im drive planes (plus TV multiplier planes under
+/// irregular sampling) and the touched input/output rows — fits the
+/// [`TILE_TARGET_BYTES`] budget. Clamped to [64, 8192] rows so degenerate
+/// widths neither thrash (tiny tiles) nor defeat the blocking.
+pub fn auto_tile_l(p2: usize, h: usize, tv: bool) -> usize {
+    let planes = if tv { 4 } else { 2 };
+    let bytes_per_row = 4 * (planes * p2 + 2 * h);
+    (TILE_TARGET_BYTES / bytes_per_row.max(1)).clamp(64, 8192)
+}
+
+/// Engine-level execution policy that rides alongside the
+/// [`ScanBackend`](crate::ssm::scan::ScanBackend): where the backend
+/// picks the scan *strategy* (sequential/parallel, layout, executor),
+/// the policy picks how the forward is *blocked* ([`Tiling`]) and what
+/// precision the scan state carries.
+///
+/// Plumbed from [`ForwardOptions`](crate::ssm::api::ForwardOptions)
+/// (`with_tile` / `with_tiling` / `with_f64_state`); the positional
+/// layer/model entry points use the default (fused auto-tiled, f32).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScanPolicy {
+    /// Forward blocking: fused cache-blocked tiles (default) or the
+    /// staged full-plane reference pipeline.
+    pub tiling: Tiling,
+    /// Carry the scan state in f64 across the sequence (long-L drift
+    /// studies — an open ROADMAP item). Planar layout only; the state
+    /// rows are still emitted as f32. With [`Tiling::Staged`] the
+    /// sequence runs as a single tile of the fused pipeline.
+    pub f64_state: bool,
+}
+
 /// Scan-facing scratch of the engine: drive/state buffers in both layouts
 /// plus the pooled chunk summaries of the parallel scan. Grouped so the S5
 /// forward path can borrow all of it with one `&mut` while the activation
@@ -264,15 +364,26 @@ pub(crate) fn grow<T: Clone + Default>(buf: &mut Vec<T>, n: usize) {
 /// state size); only the family matching the backend's
 /// [`ScanLayout`](crate::ssm::scan::ScanLayout) is ever grown:
 ///
-/// | field                    | shape      | role                          |
-/// |--------------------------|------------|-------------------------------|
-/// | `bu`                     | (B, L, P2) | interleaved drive → states    |
-/// | `bu_rev`                 | (B, L, P2) | interleaved reversed drive    |
-/// | `a_tv`                   | (B, L, P2) | interleaved TV multipliers    |
-/// | `bu_re`/`bu_im`          | (B, L, P2) | planar drive → states         |
-/// | `bu_rev_re`/`bu_rev_im`  | (B, L, P2) | planar reversed drive         |
-/// | `a_tv_re`/`a_tv_im`      | (B, L, P2) | planar TV multipliers         |
-/// | `scan`                   | O(T·P2)    | pooled chunk summaries        |
+/// Shapes under the **staged** reference pipeline (`U` = B·n_dir units,
+/// `T` = tile length under the default **fused** cache-blocked path —
+/// fused forwards reuse the same planar fields at the far smaller
+/// O(U·T·P2) footprint and never touch the full-plane shapes):
+///
+/// | field                    | staged     | fused      | role                        |
+/// |--------------------------|------------|------------|-----------------------------|
+/// | `bu`                     | (B, L, P2) | —          | interleaved drive → states  |
+/// | `bu_rev`                 | (B, L, P2) | —          | interleaved reversed drive  |
+/// | `a_tv`                   | (B, L, P2) | —          | interleaved TV multipliers  |
+/// | `bu_re`/`bu_im`          | (B, L, P2) | (U, T, P2) | planar drive → states       |
+/// | `bu_rev_re`/`bu_rev_im`  | (B, L, P2) | —          | planar reversed drive       |
+/// | `a_tv_re`/`a_tv_im`      | (B, L, P2) | (B, T, P2) | planar TV multipliers       |
+/// | `state_re`/`state_im`    | —          | (U, P2)    | fused carry states (f32)    |
+/// | `state64_re`/`state64_im`| —          | (U, P2)    | fused carry states (f64)    |
+/// | `scan`                   | O(T·P2)    | —          | pooled chunk summaries      |
+///
+/// On the fused path the high-water footprint is therefore independent
+/// of L — it grows only with the tile length and B (the workspace
+/// capacity tests pin this).
 #[derive(Default)]
 pub struct SsmBuffers {
     pub(crate) bu: Vec<C32>,
@@ -284,6 +395,10 @@ pub struct SsmBuffers {
     pub(crate) bu_rev_im: Vec<f32>,
     pub(crate) a_tv_re: Vec<f32>,
     pub(crate) a_tv_im: Vec<f32>,
+    pub(crate) state_re: Vec<f32>,
+    pub(crate) state_im: Vec<f32>,
+    pub(crate) state64_re: Vec<f64>,
+    pub(crate) state64_im: Vec<f64>,
     pub(crate) scan: ScanScratch,
 }
 
@@ -295,8 +410,11 @@ impl SsmBuffers {
                 + self.bu_rev_re.capacity()
                 + self.bu_rev_im.capacity()
                 + self.a_tv_re.capacity()
-                + self.a_tv_im.capacity())
+                + self.a_tv_im.capacity()
+                + self.state_re.capacity()
+                + self.state_im.capacity())
                 * 4
+            + (self.state64_re.capacity() + self.state64_im.capacity()) * 8
             + self.scan.capacity_bytes()
     }
 }
@@ -314,13 +432,15 @@ impl SsmBuffers {
 /// | `x`      | (B, L, H)  | running activations (layer in/out)     |
 /// | `v`      | (B, L, H)  | pre-norm output / gate scratch         |
 /// | `y`      | (B, L, H)  | SSM output before activation           |
-/// | `ssm`    | see [`SsmBuffers`] | scan drives + pooled summaries |
+/// | `y2`     | (B, L, H)  | backward-direction projection plane of the fused bidirectional path |
+/// | `ssm`    | see [`SsmBuffers`] | scan drives + carry states + pooled summaries |
 /// | `disc`   | per layer  | cached TI discretization (`TiDisc`)    |
 #[derive(Default)]
 pub struct EngineWorkspace {
     pub(crate) x: Vec<f32>,
     pub(crate) v: Vec<f32>,
     pub(crate) y: Vec<f32>,
+    pub(crate) y2: Vec<f32>,
     pub(crate) ssm: SsmBuffers,
     pub(crate) disc: Vec<Vec<TiDisc>>,
 }
@@ -338,6 +458,7 @@ impl EngineWorkspace {
         self.x.capacity() * 4
             + self.v.capacity() * 4
             + self.y.capacity() * 4
+            + self.y2.capacity() * 4
             + self.ssm.capacity_bytes()
             + self
                 .disc
@@ -345,6 +466,15 @@ impl EngineWorkspace {
                 .flat_map(|slot| slot.iter())
                 .map(TiDisc::capacity_bytes)
                 .sum::<usize>()
+    }
+
+    /// Heap footprint of the scan-facing buffers ([`SsmBuffers`]) alone,
+    /// in bytes. On the fused cache-blocked path this is the quantity
+    /// that must stay **independent of L** — it bounds the drive/state
+    /// working set at O(B·T·P2) — while the activation planes (`x`, `v`,
+    /// `y`, `y2`) necessarily scale with the batch content.
+    pub fn ssm_capacity_bytes(&self) -> usize {
+        self.ssm.capacity_bytes()
     }
 }
 
@@ -558,8 +688,39 @@ mod tests {
     fn workspace_starts_empty_and_reports_bytes() {
         let mut ws = EngineWorkspace::new();
         assert_eq!(ws.capacity_bytes(), 0);
+        assert_eq!(ws.ssm_capacity_bytes(), 0);
         grow(&mut ws.x, 128);
         assert!(ws.capacity_bytes() >= 128 * 4);
+        // activation planes are not scan-facing
+        assert_eq!(ws.ssm_capacity_bytes(), 0);
+        grow(&mut ws.ssm.state_re, 16);
+        assert!(ws.ssm_capacity_bytes() >= 16 * 4);
+    }
+
+    /// The auto tile targets the L2 budget: wider states get shorter
+    /// tiles, the result is clamped to [64, 8192], and the TV path (two
+    /// extra multiplier planes) tiles tighter than the TI path.
+    #[test]
+    fn auto_tile_tracks_row_width() {
+        assert!(auto_tile_l(256, 256, false) >= 64);
+        assert!(auto_tile_l(256, 256, false) <= auto_tile_l(64, 64, false));
+        assert!(auto_tile_l(256, 256, true) <= auto_tile_l(256, 256, false));
+        assert_eq!(auto_tile_l(1 << 20, 1 << 20, false), 64, "clamped below");
+        assert_eq!(auto_tile_l(1, 1, false), 8192, "clamped above");
+    }
+
+    /// Tiling resolution: Staged and Fixed(0) disable tiling, Fixed(t)
+    /// passes through; Auto falls back to the auto size (the `S5_TILE_L`
+    /// environment override is exercised by the CI tile sweep, not here —
+    /// mutating the process environment would race other tests).
+    #[test]
+    fn tiling_resolves() {
+        assert_eq!(Tiling::Staged.resolve(8, 8, false), None);
+        assert_eq!(Tiling::Fixed(0).resolve(8, 8, false), None);
+        assert_eq!(Tiling::Fixed(17).resolve(8, 8, false), Some(17));
+        if std::env::var("S5_TILE_L").is_err() {
+            assert_eq!(Tiling::Auto.resolve(8, 8, false), Some(auto_tile_l(8, 8, false)));
+        }
     }
 
     /// The discretization cache must hit on identical keys and recompute

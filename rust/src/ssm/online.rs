@@ -33,8 +33,10 @@
 //! process-wide pool with the batch worker for their prefills.
 
 use crate::num::C64;
+use crate::ssm::api::ForwardOptions;
 use crate::ssm::discretize::{discretize_diag, discretize_one, Method};
-use crate::ssm::s5::{gelu, layer_norm_row, sigmoid, S5Layer, S5Model};
+use crate::ssm::engine::{grow, EngineWorkspace, SsmBuffers};
+use crate::ssm::s5::{gelu, layer_norm_row, sigmoid, FusedUnit, S5Layer, S5Model};
 use crate::ssm::scan::{ScanBackend, SequentialBackend};
 
 /// Streaming state of one S5 layer: the complex latent x_k plus the
@@ -266,6 +268,16 @@ pub struct S5StreamState {
     states: Vec<LayerState>,
     pool: Vec<f32>,
     steps: usize,
+    /// Scratch for the chunked-prefill fast path ([`push_chunk`]): the
+    /// activation rows plus the fused tile planes, reused across chunks
+    /// so steady-state prefills allocate nothing. Empty until the first
+    /// chunked prefill — pure per-token streaming never touches it — and
+    /// dropped on [`reset`] so pooled idle sessions don't retain the
+    /// high-water planes of their largest past prefill.
+    ///
+    /// [`push_chunk`]: S5StreamState::push_chunk
+    /// [`reset`]: S5StreamState::reset
+    ws: EngineWorkspace,
 }
 
 impl S5StreamState {
@@ -274,16 +286,24 @@ impl S5StreamState {
             states: model.layers.iter().map(|l| LayerState::new(l, timescale)).collect(),
             pool: vec![0.0; model.h],
             steps: 0,
+            ws: EngineWorkspace::new(),
         }
     }
 
-    /// Restart the stream without reallocating.
+    /// Restart the stream without reallocating the per-layer states.
+    ///
+    /// The chunked-prefill scratch is dropped here: reset marks a
+    /// connection boundary (session pooling), and an idle pooled session
+    /// must not retain the O(L·H) activation planes of its largest past
+    /// prefill. Within one stream's life repeated prefills still reuse
+    /// the scratch allocation-free.
     pub fn reset(&mut self) {
         for st in &mut self.states {
             st.reset();
         }
         self.pool.iter_mut().for_each(|v| *v = 0.0);
         self.steps = 0;
+        self.ws = EngineWorkspace::new();
     }
 
     /// Feed one observation (d_in); updates all layer states. `dt` is the
@@ -305,6 +325,92 @@ impl S5StreamState {
             self.pool[r] += x[r];
         }
         self.steps += 1;
+    }
+
+    /// Chunked prefill: swallow `l` regular (Δt = 1) observations through
+    /// the fused tile pipeline instead of `l` per-token [`push`] calls —
+    /// per layer one drive → scale → tile-resumable scan → projection →
+    /// gate pipeline over the whole chunk, resuming from (and writing
+    /// back, in place) this stream's per-layer latent. The tile length
+    /// follows the [`ForwardOptions`] tiling policy (staged runs as one
+    /// tile — the carry is live either way).
+    ///
+    /// Equivalence: the pipeline runs the same planar kernels in the same
+    /// per-element order as the per-token path — the scan resumes through
+    /// `scan_ti_planar_resume`, whose row op is exactly
+    /// [`ScanBackend::scan_step_planar`]; drive/scale/projection/gate
+    /// match `step_ssm`/`step` op-for-op — so a chunked prefill equals
+    /// the step-by-step replay **bit-for-bit** (pinned in
+    /// `tests/sequence_api.rs`). The stream state's f32 latent is the
+    /// carry, so the f64-state offline option does not apply here.
+    ///
+    /// [`push`]: S5StreamState::push
+    pub fn push_chunk(&mut self, m: &S5Model, tokens: &[f32], l: usize, opts: &ForwardOptions) {
+        assert_eq!(tokens.len(), l * m.d_in);
+        assert!(m.streamable(), "bidirectional layers cannot stream");
+        if l == 0 {
+            return;
+        }
+        let timescale = opts.timescale;
+        let h = m.h;
+        let n = l * h;
+        let backend = opts.scan_backend();
+        let ws = &mut self.ws;
+        let EngineWorkspace { x, v, y, ssm, .. } = ws;
+        grow(x, n);
+        grow(v, n);
+        grow(y, n);
+        m.encode_seq(tokens, l, &mut x[..n]);
+        for (layer, lstate) in m.layers.iter().zip(self.states.iter_mut()) {
+            // a chunk of regular steps: restore the default discretization
+            // exactly like each per-token regular step would
+            lstate.restore_default_dt(layer, timescale);
+            let p2 = layer.p2;
+            let tile = opts
+                .scan_policy()
+                .tiling
+                .resolve(p2, h, false)
+                .unwrap_or(l)
+                .min(l)
+                .max(1);
+            let SsmBuffers { bu_re, bu_im, .. } = ssm;
+            grow(bu_re, tile * p2);
+            grow(bu_im, tile * p2);
+            layer.norm_seq(&x[..n], l, &mut v[..n]);
+            let mut unit = FusedUnit {
+                dir: 0,
+                useq: &v[..n],
+                dseq: None,
+                yseq: &mut y[..n],
+                dr: &mut bu_re[..tile * p2],
+                di: &mut bu_im[..tile * p2],
+                tv: None,
+                sr: &mut lstate.xr[..],
+                si: &mut lstate.xi[..],
+                s64: None,
+            };
+            layer.fused_unit(
+                &mut unit,
+                l,
+                tile,
+                &lstate.lam_re,
+                &lstate.lam_im,
+                &lstate.scale_re,
+                &lstate.scale_im,
+                &[],
+                &[],
+                backend,
+                true, // resume from (and write back) the live stream state
+                true, // unidirectional: fold the feedthrough per tile
+            );
+            layer.gate_residual_seq(&y[..n], &mut x[..n], l);
+        }
+        for k in 0..l {
+            for r in 0..h {
+                self.pool[r] += x[k * h + r];
+            }
+        }
+        self.steps += l;
     }
 
     /// Current logits from the running mean-pool. The inline

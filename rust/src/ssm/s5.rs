@@ -17,14 +17,24 @@
 //! [`ScanBackend`] strategy object and an [`EngineWorkspace`] that owns all
 //! large scratch ([`S5Model::forward_batch_into`], [`S5Layer::apply_batch`],
 //! [`S5Layer::apply_ssm_batch`]). The SSM stage dispatches on the
-//! backend's [`ScanLayout`]: the default **planar** path materializes the
-//! drive as separate re/im `f32` planes end-to-end (drive → scale → scan →
-//! projection, no transpose anywhere), the interleaved `[C32]` path is
-//! kept as the reference oracle; both run identical FP ops in identical
-//! order. Per-sequence math is factored into `*_seq` helpers shared by
-//! every path, so a batch of B is elementwise identical to B independent
-//! forwards (up to the scan strategy's documented 1e-4 chunk-combine
-//! tolerance). The original single-sequence
+//! backend's [`ScanLayout`] and the engine
+//! [`ScanPolicy`](crate::ssm::engine::ScanPolicy): the default is the
+//! **fused cache-blocked** planar pipeline — every (sequence, direction)
+//! processes its L in tiles sized to the L2 budget, fusing drive → Δt
+//! scale → tile-resumable scan → projection (+ feedthrough) per tile, so
+//! the workspace's scan buffers hold O(B·T·P2) instead of full
+//! (B, L, P2) planes and each tile stays cache-resident end-to-end.
+//! [`Tiling::Staged`](crate::ssm::engine::Tiling::Staged) selects the
+//! untiled full-plane planar pipeline (the pre-tiling behavior), and the
+//! interleaved `[C32]` path is kept as the staged reference oracle. The
+//! fused pipeline's in-tile scans are sequential (pipelines shard across
+//! the worker pool instead), so fused ≡ staged-sequential ≡
+//! interleaved-sequential **bit-for-bit** for any tile size, thread
+//! budget and executor; staged planar ≡ staged interleaved bit-for-bit
+//! at equal strategy. Per-sequence math is factored into `*_seq` helpers
+//! shared by every path, so a batch of B is elementwise identical to B
+//! independent forwards (up to the staged parallel strategy's documented
+//! 1e-4 chunk-combine tolerance). The original single-sequence
 //! signatures ([`S5Layer::apply`], [`S5Layer::apply_ssm`],
 //! [`S5Model::forward`]) remain as deprecated batch-of-1 wrappers that
 //! allocate a private workspace; the typed entry point is the
@@ -37,11 +47,15 @@ use crate::rng::Rng;
 use crate::ssm::api::{Batch, ForwardOptions, ModelSpec, SequenceModel, SessionState};
 use crate::ssm::discretize::{discretize_one, Method};
 use crate::ssm::engine::{
-    grow, par_zip, par_zip2, par_zip4, ti_disc, EngineWorkspace, SsmBuffers, TiDisc,
+    grow, par_zip, par_zip2, par_zip4, ti_disc, EngineWorkspace, ScanPolicy, SsmBuffers, TiDisc,
 };
 use crate::ssm::hippo;
 use crate::ssm::online::S5StreamState;
-use crate::ssm::scan::{ParallelBackend, ScanBackend, ScanLayout, SequentialBackend};
+use crate::ssm::scan::{
+    scan_resume_ti_planar_f64_inplace, scan_resume_tv_planar_f64_inplace,
+    scan_sequential_ti_planar_inplace, scan_sequential_tv_planar_inplace, ParallelBackend,
+    ScanBackend, ScanLayout, SequentialBackend,
+};
 
 /// Parameters of one S5 layer (conjugate-symmetric storage: P2 = P/2).
 #[derive(Clone, Debug)]
@@ -81,6 +95,32 @@ impl Default for S5Config {
     fn default() -> Self {
         S5Config { h: 32, p: 32, j: 1, conj_sym: true, dt_min: 1e-3, dt_max: 1e-1, bidir: false }
     }
+}
+
+/// One (sequence, direction) unit of the fused cache-blocked forward:
+/// the disjoint borrows a tile pipeline works over. Units shard across
+/// the backend's executor — each is an independent sequential pipeline,
+/// so the fused result is executor- and thread-count-invariant by
+/// construction.
+pub(crate) struct FusedUnit<'a> {
+    /// scan direction: 0 = forward, 1 = reversed (bidirectional backward)
+    pub dir: usize,
+    /// this sequence's (L, H) input rows (pre-normed activations)
+    pub useq: &'a [f32],
+    /// per-step Δt multipliers (L) — forward direction only
+    pub dseq: Option<&'a [f32]>,
+    /// output rows: y (dir 0) or the backward accumulator plane (dir 1)
+    pub yseq: &'a mut [f32],
+    /// tile drive planes (T, P2)
+    pub dr: &'a mut [f32],
+    pub di: &'a mut [f32],
+    /// tile TV multiplier planes (T, P2) — irregular-Δt forward units only
+    pub tv: Option<(&'a mut [f32], &'a mut [f32])>,
+    /// carried f32 scan state (P2)
+    pub sr: &'a mut [f32],
+    pub si: &'a mut [f32],
+    /// carried f64 scan state (P2) — [`ScanPolicy::f64_state`] only
+    pub s64: Option<(&'a mut [f64], &'a mut [f64])>,
 }
 
 /// Backend preserving the legacy `threads: usize` knob of the
@@ -220,19 +260,9 @@ impl S5Layer {
         bur: &mut [f32],
         bui: &mut [f32],
     ) {
-        let (h, p2) = (self.h, self.p2);
-        for k in 0..l {
-            let src = l - 1 - k;
-            for r in 0..p2 {
-                let mut acc = C64::ZERO;
-                for c in 0..h {
-                    acc += self.b_tilde[r * h + c].scale(u[src * h + c] as f64);
-                }
-                let z = (f[r] * acc).to_c32();
-                bur[k * p2 + r] = z.re;
-                bui[k * p2 + r] = z.im;
-            }
-        }
+        // the whole sequence as one window of the tile form, so the
+        // staged and fused backward drives share one implementation
+        self.drive_rev_tile_planar(u, l, 0, l, f, bur, bui);
     }
 
     /// Planar drive scaling: `bu ← f ∘ bu` over separate planes, with the
@@ -252,6 +282,71 @@ impl S5Layer {
                 let bi = bui[row + r];
                 bur[row + r] = fr[r] * br - fi[r] * bi;
                 bui[row + r] = fr[r] * bi + fi[r] * br;
+            }
+        }
+    }
+
+    /// The planar time-varying discretize + scale pass over a row window:
+    /// for each row k, per-state ZOH discretization at Δt =
+    /// `base_dt[r] · dseq[k]`, writing the Λ̄ multiplier planes and
+    /// scaling the drive planes in place. This is the **single** copy of
+    /// the TV op sequence both the staged pass and the fused tile
+    /// pipeline call, so the fused ≡ staged bit-for-bit contract cannot
+    /// drift between them.
+    #[allow(clippy::too_many_arguments)]
+    fn tv_disc_scale_rows(
+        &self,
+        base_dt: &[f64],
+        dseq: &[f32],
+        rows: usize,
+        ar: &mut [f32],
+        ai: &mut [f32],
+        br: &mut [f32],
+        bi: &mut [f32],
+    ) {
+        let p2 = self.p2;
+        for k in 0..rows {
+            let dk = dseq[k] as f64;
+            for r in 0..p2 {
+                let dt = base_dt[r] * dk;
+                let (lb, f) = discretize_one(self.lambda[r], dt, Method::Zoh);
+                let lb = lb.to_c32();
+                let f = f.to_c32();
+                ar[k * p2 + r] = lb.re;
+                ai[k * p2 + r] = lb.im;
+                let (b_re, b_im) = (br[k * p2 + r], bi[k * p2 + r]);
+                br[k * p2 + r] = f.re * b_re - f.im * b_im;
+                bi[k * p2 + r] = f.re * b_im + f.im * b_re;
+            }
+        }
+    }
+
+    /// Planar reversed-time drive for one L-tile of the backward
+    /// direction: reversed rows `t0..t0+tl` (reversed row k reads source
+    /// row `l−1−k`), with the input scaling folded in — the exact per-row
+    /// ops of [`S5Layer::drive_rev_seq_planar`], windowed.
+    #[allow(clippy::too_many_arguments)]
+    fn drive_rev_tile_planar(
+        &self,
+        u: &[f32],
+        l: usize,
+        t0: usize,
+        tl: usize,
+        f: &[C64],
+        bur: &mut [f32],
+        bui: &mut [f32],
+    ) {
+        let (h, p2) = (self.h, self.p2);
+        for k in 0..tl {
+            let src = l - 1 - (t0 + k);
+            for r in 0..p2 {
+                let mut acc = C64::ZERO;
+                for c in 0..h {
+                    acc += self.b_tilde[r * h + c].scale(u[src * h + c] as f64);
+                }
+                let z = (f[r] * acc).to_c32();
+                bur[k * p2 + r] = z.re;
+                bui[k * p2 + r] = z.im;
             }
         }
     }
@@ -313,7 +408,7 @@ impl S5Layer {
     }
 
     /// Pre-norm of one sequence: v_k = LayerNorm(u_k).
-    fn norm_seq(&self, u: &[f32], l: usize, v: &mut [f32]) {
+    pub(crate) fn norm_seq(&self, u: &[f32], l: usize, v: &mut [f32]) {
         let h = self.h;
         for k in 0..l {
             layer_norm_row(
@@ -327,7 +422,7 @@ impl S5Layer {
 
     /// GELU → weighted-sigmoid gate → residual, in place over the layer
     /// input `x` (reads SSM output `y`): x_k ← x_k + g ∘ σ(W g).
-    fn gate_residual_seq(&self, y: &[f32], x: &mut [f32], l: usize) {
+    pub(crate) fn gate_residual_seq(&self, y: &[f32], x: &mut [f32], l: usize) {
         let h = self.h;
         let mut g = vec![0.0f32; h];
         for k in 0..l {
@@ -344,6 +439,321 @@ impl S5Layer {
         }
     }
 
+    // -- fused cache-blocked pipeline --------------------------------------
+
+    /// Run one (sequence, direction) tile pipeline of the fused
+    /// cache-blocked forward: for each L-tile, drive → (Δt) scale →
+    /// tile-resumable scan → projection (with the feedthrough folded in
+    /// for unidirectional layers), carrying the scan state across tile
+    /// boundaries. The working set per tile is O(T·P2) — the whole point
+    /// of the blocking — and every per-element FP op matches the staged
+    /// pipeline's op order exactly.
+    ///
+    /// `resume == false` (offline forwards): the first tile runs the
+    /// plain sequential kernel (row 0 = b_0, the staged op order), later
+    /// tiles resume from the copied-out carry — fused ≡ staged-sequential
+    /// bit-for-bit. `resume == true` (chunked streaming prefill): every
+    /// tile resumes from the live carry in `sr`/`si`, whose per-row op is
+    /// exactly [`ScanBackend::scan_step_planar`] — fused ≡ step replay
+    /// bit-for-bit, and the stream state is updated in place.
+    ///
+    /// With an f64 carry (`s64`) every tile resumes through the f64
+    /// kernels; the result is tile-decomposition invariant because the
+    /// carry never round-trips through f32.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn fused_unit(
+        &self,
+        unit: &mut FusedUnit<'_>,
+        l: usize,
+        tile: usize,
+        a_re: &[f32],
+        a_im: &[f32],
+        f_re: &[f32],
+        f_im: &[f32],
+        f_rev: &[C64],
+        base_dt: &[f64],
+        backend: &dyn ScanBackend,
+        resume: bool,
+        fold_feedthrough: bool,
+    ) {
+        let (h, p2) = (self.h, self.p2);
+        let tcap = tile.min(l).max(1);
+        let mut first = !resume;
+        let mut t0 = 0usize;
+        while t0 < l {
+            let tl = tcap.min(l - t0);
+            let np = tl * p2;
+            // drive (+ scale / TV discretize) for this tile's rows
+            if unit.dir == 0 {
+                let dr = &mut unit.dr[..np];
+                let di = &mut unit.di[..np];
+                self.drive_seq_planar(&unit.useq[t0 * h..(t0 + tl) * h], tl, dr, di);
+                match (&mut unit.tv, unit.dseq) {
+                    (Some((atr, ati)), Some(dseq)) => {
+                        // irregular sampling: per-step ZOH discretization
+                        // through the shared TV row pass (same ops as the
+                        // staged pipeline by construction)
+                        self.tv_disc_scale_rows(
+                            base_dt,
+                            &dseq[t0..t0 + tl],
+                            tl,
+                            &mut atr[..np],
+                            &mut ati[..np],
+                            dr,
+                            di,
+                        );
+                    }
+                    _ => Self::scale_seq_planar(dr, di, f_re, f_im, tl, p2),
+                }
+            } else {
+                self.drive_rev_tile_planar(
+                    unit.useq,
+                    l,
+                    t0,
+                    tl,
+                    f_rev,
+                    &mut unit.dr[..np],
+                    &mut unit.di[..np],
+                );
+            }
+            // scan: sequential within the tile, carrying state across
+            // tile boundaries (parallelism lives one level up, across
+            // the sequence × direction pipelines)
+            {
+                let dr = &mut unit.dr[..np];
+                let di = &mut unit.di[..np];
+                if let Some((s64r, s64i)) = unit.s64.as_mut() {
+                    match unit.tv.as_ref() {
+                        Some((atr, ati)) => scan_resume_tv_planar_f64_inplace(
+                            &atr[..np],
+                            &ati[..np],
+                            s64r,
+                            s64i,
+                            dr,
+                            di,
+                            tl,
+                            p2,
+                        ),
+                        None => scan_resume_ti_planar_f64_inplace(
+                            a_re, a_im, s64r, s64i, dr, di, tl, p2,
+                        ),
+                    }
+                } else if first {
+                    match unit.tv.as_ref() {
+                        Some((atr, ati)) => scan_sequential_tv_planar_inplace(
+                            &atr[..np],
+                            &ati[..np],
+                            dr,
+                            di,
+                            tl,
+                            p2,
+                        ),
+                        None => scan_sequential_ti_planar_inplace(a_re, a_im, dr, di, tl, p2),
+                    }
+                    unit.sr.copy_from_slice(&dr[(tl - 1) * p2..np]);
+                    unit.si.copy_from_slice(&di[(tl - 1) * p2..np]);
+                } else {
+                    match unit.tv.as_ref() {
+                        Some((atr, ati)) => backend.scan_tv_planar_resume(
+                            &atr[..np],
+                            &ati[..np],
+                            unit.sr,
+                            unit.si,
+                            dr,
+                            di,
+                            tl,
+                            p2,
+                        ),
+                        None => backend.scan_ti_planar_resume(
+                            a_re, a_im, unit.sr, unit.si, dr, di, tl, p2,
+                        ),
+                    }
+                }
+            }
+            // projection (+ feedthrough fold-in), straight off the warm
+            // tile states
+            {
+                let xr = &unit.dr[..np];
+                let xi = &unit.di[..np];
+                if unit.dir == 0 {
+                    let yw = &mut unit.yseq[t0 * h..(t0 + tl) * h];
+                    yw.fill(0.0);
+                    self.project_seq_planar(xr, xi, tl, 0, false, yw);
+                    if fold_feedthrough {
+                        self.feedthrough_seq(&unit.useq[t0 * h..(t0 + tl) * h], tl, yw);
+                    }
+                } else {
+                    // reversed tile: state row k is original row l−1−(t0+k)
+                    let o0 = l - t0 - tl;
+                    let yw = &mut unit.yseq[o0 * h..(o0 + tl) * h];
+                    yw.fill(0.0);
+                    self.project_seq_planar(xr, xi, tl, 1, true, yw);
+                }
+            }
+            first = false;
+            t0 += tl;
+        }
+    }
+
+    /// The cache-blocked fused SSM path (planar layout, the default):
+    /// every (sequence, direction) runs as an independent pipeline of
+    /// L-tiles via [`S5Layer::fused_unit`], so `SsmBuffers` holds
+    /// O(B·T·P2) instead of materializing full (B, L, P2) drive planes,
+    /// and each tile's drive/state working set stays cache-resident from
+    /// drive through projection. Pipelines shard across the backend's
+    /// executor (the PR-4 worker pool); in-tile scans are sequential, so
+    /// the result equals the staged pipeline over the sequential scan
+    /// strategy **bit-for-bit** — independent of tile size, thread budget
+    /// and executor (pinned by `tests/scan_matrix.rs`).
+    #[allow(clippy::too_many_arguments)]
+    fn apply_ssm_fused(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        dts: Option<&[f32]>,
+        backend: &dyn ScanBackend,
+        tile: usize,
+        f64_state: bool,
+        slot: usize,
+        disc: &mut Vec<Vec<TiDisc>>,
+        ssm: &mut SsmBuffers,
+        y2: &mut Vec<f32>,
+        y: &mut [f32],
+    ) {
+        let (h, p2) = (self.h, self.p2);
+        let sh = l * h;
+        let bidir = self.c_tilde.len() == 2;
+        let n_units = batch * self.c_tilde.len();
+        let tcap = tile.min(l).max(1);
+        let tcp2 = tcap * p2;
+        let t = backend.threads();
+        let ex = backend.executor();
+        if let Some(dts) = dts {
+            assert_eq!(dts.len(), batch * l);
+        }
+        if p2 == 0 {
+            // stateless degenerate layer: the SSM contributes nothing
+            for (b, yseq) in y[..batch * sh].chunks_mut(sh).enumerate() {
+                yseq.fill(0.0);
+                self.feedthrough_seq(&u[b * sh..(b + 1) * sh], l, yseq);
+            }
+            return;
+        }
+        let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
+        let SsmBuffers {
+            bu_re, bu_im, a_tv_re, a_tv_im, state_re, state_im, state64_re, state64_im, ..
+        } = ssm;
+        grow(bu_re, n_units * tcp2);
+        grow(bu_im, n_units * tcp2);
+        grow(state_re, n_units * p2);
+        grow(state_im, n_units * p2);
+        state_re[..n_units * p2].fill(0.0);
+        state_im[..n_units * p2].fill(0.0);
+        if f64_state {
+            grow(state64_re, n_units * p2);
+            grow(state64_im, n_units * p2);
+            state64_re[..n_units * p2].fill(0.0);
+            state64_im[..n_units * p2].fill(0.0);
+        }
+        if dts.is_some() {
+            grow(a_tv_re, batch * tcp2);
+            grow(a_tv_im, batch * tcp2);
+        }
+        if bidir {
+            grow(y2, batch * sh);
+        }
+
+        // Build the (sequence × direction) unit list: disjoint borrows of
+        // tile planes, carry states and output rows. Forward units write
+        // y; backward units write the y2 accumulator plane, summed (then
+        // feedthrough'd) in the combine pass below — the staged op order.
+        let mut units: Vec<FusedUnit<'_>> = Vec::with_capacity(n_units);
+        {
+            let mut dr_it = bu_re[..n_units * tcp2].chunks_mut(tcp2);
+            let mut di_it = bu_im[..n_units * tcp2].chunks_mut(tcp2);
+            let mut sr_it = state_re[..n_units * p2].chunks_mut(p2);
+            let mut si_it = state_im[..n_units * p2].chunks_mut(p2);
+            let mut s64r_it =
+                if f64_state { Some(state64_re[..n_units * p2].chunks_mut(p2)) } else { None };
+            let mut s64i_it =
+                if f64_state { Some(state64_im[..n_units * p2].chunks_mut(p2)) } else { None };
+            let mut tvr_it =
+                if dts.is_some() { Some(a_tv_re[..batch * tcp2].chunks_mut(tcp2)) } else { None };
+            let mut tvi_it =
+                if dts.is_some() { Some(a_tv_im[..batch * tcp2].chunks_mut(tcp2)) } else { None };
+            for (b, yseq) in y[..batch * sh].chunks_mut(sh).enumerate() {
+                units.push(FusedUnit {
+                    dir: 0,
+                    useq: &u[b * sh..(b + 1) * sh],
+                    dseq: dts.map(|dv| &dv[b * l..(b + 1) * l]),
+                    yseq,
+                    dr: dr_it.next().unwrap(),
+                    di: di_it.next().unwrap(),
+                    tv: match (&mut tvr_it, &mut tvi_it) {
+                        (Some(r), Some(i)) => Some((r.next().unwrap(), i.next().unwrap())),
+                        _ => None,
+                    },
+                    sr: sr_it.next().unwrap(),
+                    si: si_it.next().unwrap(),
+                    s64: match (&mut s64r_it, &mut s64i_it) {
+                        (Some(r), Some(i)) => Some((r.next().unwrap(), i.next().unwrap())),
+                        _ => None,
+                    },
+                });
+            }
+            if bidir {
+                for (b, yseq) in y2[..batch * sh].chunks_mut(sh).enumerate() {
+                    units.push(FusedUnit {
+                        dir: 1,
+                        useq: &u[b * sh..(b + 1) * sh],
+                        dseq: None,
+                        yseq,
+                        dr: dr_it.next().unwrap(),
+                        di: di_it.next().unwrap(),
+                        tv: None,
+                        sr: sr_it.next().unwrap(),
+                        si: si_it.next().unwrap(),
+                        s64: match (&mut s64r_it, &mut s64i_it) {
+                            (Some(r), Some(i)) => Some((r.next().unwrap(), i.next().unwrap())),
+                            _ => None,
+                        },
+                    });
+                }
+            }
+        }
+
+        // Shard the pipelines across the executor. The decomposition is
+        // fixed by the thread budget (never the executor), and each unit
+        // is fully sequential, so results are invariant to both.
+        let shards = t.max(1).min(n_units);
+        let per = n_units.div_ceil(shards);
+        let fold = !bidir;
+        ex.run_tasks(units.chunks_mut(per).map(|chunk| {
+            move || {
+                for unit in chunk.iter_mut() {
+                    self.fused_unit(
+                        unit, l, tcap, &d.a_re, &d.a_im, &d.f_re, &d.f_im, &d.f64s, &d.base_dt,
+                        backend, false, fold,
+                    );
+                }
+            }
+        }));
+
+        if bidir {
+            // combine: y += backward projection, then the feedthrough —
+            // per element the exact add order of the staged backward pass
+            let y2r = &y2[..batch * sh];
+            par_zip(ex, t, y2r, sh, y, sh, batch, |i, y2seq, yseq| {
+                for (a, b) in yseq.iter_mut().zip(y2seq.iter()) {
+                    *a += *b;
+                }
+                self.feedthrough_seq(&u[i * sh..(i + 1) * sh], l, yseq);
+            });
+        }
+    }
+
     // -- batched core ------------------------------------------------------
 
     /// SSM over a packed (B, L, H) batch, writing y (B, L, H). Scan
@@ -353,12 +763,16 @@ impl S5Layer {
     /// workspace (validated by value, so slot collisions only cost a
     /// recompute).
     ///
-    /// Dispatches on [`ScanBackend::layout`]: the planar path (default)
-    /// materializes the drive as separate re/im planes so the whole layer
-    /// — drive, scale, scan, projection — runs struct-of-arrays with no
-    /// interleave↔planar transpose anywhere; the interleaved path is the
-    /// retained reference oracle. Both execute identical FP ops in
-    /// identical order.
+    /// Dispatches on [`ScanBackend::layout`] and the [`ScanPolicy`]: the
+    /// planar layout (default) runs the **fused cache-blocked** tile
+    /// pipeline ([`S5Layer::apply_ssm_fused`]) unless the policy pins
+    /// [`Tiling::Staged`](crate::ssm::engine::Tiling::Staged), in which
+    /// case it runs the untiled full-plane planar pipeline; the
+    /// interleaved path is the retained staged reference oracle (always
+    /// untiled, f32-only). The fused path with any tile/thread/executor
+    /// equals the staged planar pipeline over the sequential scan
+    /// strategy bit-for-bit; planar staged ≡ interleaved staged
+    /// bit-for-bit at equal strategy.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn apply_ssm_core(
         &self,
@@ -368,9 +782,11 @@ impl S5Layer {
         timescale: f64,
         dts: Option<&[f32]>,
         backend: &dyn ScanBackend,
+        policy: ScanPolicy,
         slot: usize,
         disc: &mut Vec<Vec<TiDisc>>,
         ssm: &mut SsmBuffers,
+        y2: &mut Vec<f32>,
         y: &mut [f32],
     ) {
         let h = self.h;
@@ -381,11 +797,38 @@ impl S5Layer {
         }
         match backend.layout() {
             ScanLayout::Planar => {
-                self.apply_ssm_planar(u, batch, l, timescale, dts, backend, slot, disc, ssm, y)
+                let tile = policy.tiling.resolve(self.p2, h, dts.is_some());
+                // the f64 carry lives in the fused pipeline; under the
+                // staged policy the whole sequence runs as one tile
+                let tile = if policy.f64_state { Some(tile.unwrap_or(l)) } else { tile };
+                match tile {
+                    Some(tile) => self.apply_ssm_fused(
+                        u,
+                        batch,
+                        l,
+                        timescale,
+                        dts,
+                        backend,
+                        tile,
+                        policy.f64_state,
+                        slot,
+                        disc,
+                        ssm,
+                        y2,
+                        y,
+                    ),
+                    None => self.apply_ssm_planar(
+                        u, batch, l, timescale, dts, backend, slot, disc, ssm, y,
+                    ),
+                }
             }
-            ScanLayout::Interleaved => self.apply_ssm_interleaved(
-                u, batch, l, timescale, dts, backend, slot, disc, ssm, y,
-            ),
+            ScanLayout::Interleaved => {
+                assert!(
+                    !policy.f64_state,
+                    "f64 scan state requires the planar layout (the interleaved oracle is f32-only)"
+                );
+                self.apply_ssm_interleaved(u, batch, l, timescale, dts, backend, slot, disc, ssm, y)
+            }
         }
     }
 
@@ -452,19 +895,9 @@ impl S5Layer {
                 par_zip4(
                     ex, t, dts, l, a_tv_re, sp, a_tv_im, sp, bu_re, sp, bu_im, sp, batch,
                     |_, dseq, ar, ai, br, bi| {
-                        for k in 0..l {
-                            for r in 0..p2 {
-                                let dt = base_dt[r] * dseq[k] as f64;
-                                let (lb, f) = discretize_one(self.lambda[r], dt, Method::Zoh);
-                                let lb = lb.to_c32();
-                                let f = f.to_c32();
-                                ar[k * p2 + r] = lb.re;
-                                ai[k * p2 + r] = lb.im;
-                                let (b_re, b_im) = (br[k * p2 + r], bi[k * p2 + r]);
-                                br[k * p2 + r] = f.re * b_re - f.im * b_im;
-                                bi[k * p2 + r] = f.re * b_im + f.im * b_re;
-                            }
-                        }
+                        // the one shared TV discretize+scale row pass —
+                        // also what the fused tile pipeline runs
+                        self.tv_disc_scale_rows(base_dt, dseq, l, ar, ai, br, bi);
                     },
                 );
                 backend.scan_batch_tv_planar(
@@ -621,6 +1054,7 @@ impl S5Layer {
         x: &mut Vec<f32>,
         v: &mut Vec<f32>,
         y: &mut Vec<f32>,
+        y2: &mut Vec<f32>,
         ssm: &mut SsmBuffers,
         slot: usize,
         disc: &mut Vec<Vec<TiDisc>>,
@@ -629,6 +1063,7 @@ impl S5Layer {
         timescale: f64,
         dts: Option<&[f32]>,
         backend: &dyn ScanBackend,
+        policy: ScanPolicy,
     ) {
         let h = self.h;
         let n = batch * l * h;
@@ -644,7 +1079,7 @@ impl S5Layer {
             self.norm_seq(useq, l, vseq);
         });
         self.apply_ssm_core(
-            &v[..n], batch, l, timescale, dts, backend, slot, disc, ssm, &mut y[..n],
+            &v[..n], batch, l, timescale, dts, backend, policy, slot, disc, ssm, y2, &mut y[..n],
         );
         par_zip(ex, t, &y[..n], sh, x, sh, batch, |_, yseq, xseq| {
             self.gate_residual_seq(yseq, xseq, l);
@@ -655,7 +1090,9 @@ impl S5Layer {
 
     /// Apply the SSM part (no norm/activation) to a packed (B, L, H)
     /// batch: returns y (B, L, H). `dts` is (B, L) per-step Δt multipliers
-    /// for the irregular-sampling path (§6.3).
+    /// for the irregular-sampling path (§6.3). Runs under the default
+    /// [`ScanPolicy`] (fused auto-tiled, f32 state); use
+    /// [`S5Layer::apply_ssm_batch_opts`] to pin tiling or state precision.
     #[allow(clippy::too_many_arguments)]
     pub fn apply_ssm_batch(
         &self,
@@ -668,13 +1105,63 @@ impl S5Layer {
         ws: &mut EngineWorkspace,
     ) -> Vec<f32> {
         let mut y = vec![0.0f32; batch * l * self.h];
-        let EngineWorkspace { ssm, disc, .. } = ws;
-        self.apply_ssm_core(u, batch, l, timescale, dts, backend, 0, disc, ssm, &mut y);
+        let EngineWorkspace { ssm, disc, y2, .. } = ws;
+        self.apply_ssm_core(
+            u, batch, l, timescale, dts, backend, ScanPolicy::default(), 0, disc, ssm, y2, &mut y,
+        );
+        y
+    }
+
+    /// [`S5Layer::apply_ssm_batch`] under explicit [`ForwardOptions`]
+    /// (timescale, scan strategy, tiling / f64-state policy), writing
+    /// into a caller-provided `y` (exactly B·L·H long) — the zero-alloc
+    /// hot entry the benches A/B the fused and staged pipelines through.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_ssm_batch_opts_into(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        dts: Option<&[f32]>,
+        opts: &ForwardOptions,
+        ws: &mut EngineWorkspace,
+        y: &mut [f32],
+    ) {
+        let EngineWorkspace { ssm, disc, y2, .. } = ws;
+        self.apply_ssm_core(
+            u,
+            batch,
+            l,
+            opts.timescale,
+            dts,
+            opts.scan_backend(),
+            opts.scan_policy(),
+            0,
+            disc,
+            ssm,
+            y2,
+            y,
+        );
+    }
+
+    /// [`S5Layer::apply_ssm_batch`] under explicit [`ForwardOptions`].
+    pub fn apply_ssm_batch_opts(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        dts: Option<&[f32]>,
+        opts: &ForwardOptions,
+        ws: &mut EngineWorkspace,
+    ) -> Vec<f32> {
+        let mut y = vec![0.0f32; batch * l * self.h];
+        self.apply_ssm_batch_opts_into(u, batch, l, dts, opts, ws, &mut y);
         y
     }
 
     /// Full layer over a packed (B, L, H) batch: pre-norm → SSM → GELU →
-    /// gate → residual. Returns the layer output (B, L, H).
+    /// gate → residual. Returns the layer output (B, L, H). Runs under
+    /// the default [`ScanPolicy`]; see [`S5Layer::apply_batch_opts`].
     #[allow(clippy::too_many_arguments)]
     pub fn apply_batch(
         &self,
@@ -688,10 +1175,58 @@ impl S5Layer {
     ) -> Vec<f32> {
         let n = batch * l * self.h;
         assert_eq!(u.len(), n);
-        let EngineWorkspace { x, v, y, ssm, disc } = ws;
+        let EngineWorkspace { x, v, y, y2, ssm, disc } = ws;
         grow(x, n);
         x[..n].copy_from_slice(u);
-        self.apply_batch_core(x, v, y, ssm, 0, disc, batch, l, timescale, dts, backend);
+        self.apply_batch_core(
+            x,
+            v,
+            y,
+            y2,
+            ssm,
+            0,
+            disc,
+            batch,
+            l,
+            timescale,
+            dts,
+            backend,
+            ScanPolicy::default(),
+        );
+        x[..n].to_vec()
+    }
+
+    /// [`S5Layer::apply_batch`] under explicit [`ForwardOptions`]
+    /// (timescale, scan strategy, tiling / f64-state policy).
+    pub fn apply_batch_opts(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        dts: Option<&[f32]>,
+        opts: &ForwardOptions,
+        ws: &mut EngineWorkspace,
+    ) -> Vec<f32> {
+        let n = batch * l * self.h;
+        assert_eq!(u.len(), n);
+        let EngineWorkspace { x, v, y, y2, ssm, disc } = ws;
+        grow(x, n);
+        x[..n].copy_from_slice(u);
+        self.apply_batch_core(
+            x,
+            v,
+            y,
+            y2,
+            ssm,
+            0,
+            disc,
+            batch,
+            l,
+            opts.timescale,
+            dts,
+            opts.scan_backend(),
+            opts.scan_policy(),
+        );
         x[..n].to_vec()
     }
 
@@ -811,7 +1346,7 @@ impl S5Model {
     }
 
     /// Linear encoder for one sequence: u (L × d_in) → x (L × H).
-    fn encode_seq(&self, u: &[f32], l: usize, x: &mut [f32]) {
+    pub(crate) fn encode_seq(&self, u: &[f32], l: usize, x: &mut [f32]) {
         let h = self.h;
         for k in 0..l {
             for r in 0..h {
@@ -848,7 +1383,10 @@ impl S5Model {
     /// Batched forward: packed u (B, L, d_in) → logits written into `out`
     /// (B × classes). All large scratch lives in (and is reused from) the
     /// workspace; the backend parallelizes dense stages across sequences
-    /// and scans across B × chunks.
+    /// and the SSM stage across (sequence × direction) tile pipelines
+    /// (fused default) or B × chunks (staged). Runs under the default
+    /// [`ScanPolicy`] — [`S5Model::forward_batch_opts_into`] takes the
+    /// policy from [`ForwardOptions`].
     #[allow(clippy::too_many_arguments)]
     pub fn forward_batch_into(
         &self,
@@ -860,6 +1398,45 @@ impl S5Model {
         ws: &mut EngineWorkspace,
         out: &mut [f32],
     ) {
+        self.forward_core(u, batch, l, timescale, backend, ScanPolicy::default(), ws, out);
+    }
+
+    /// [`S5Model::forward_batch_into`] under explicit [`ForwardOptions`]
+    /// (timescale, scan strategy, tiling / f64-state policy) — the
+    /// [`SequenceModel`] prefill surface routes through here.
+    pub fn forward_batch_opts_into(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        opts: &ForwardOptions,
+        ws: &mut EngineWorkspace,
+        out: &mut [f32],
+    ) {
+        self.forward_core(
+            u,
+            batch,
+            l,
+            opts.timescale,
+            opts.scan_backend(),
+            opts.scan_policy(),
+            ws,
+            out,
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_core(
+        &self,
+        u: &[f32],
+        batch: usize,
+        l: usize,
+        timescale: f64,
+        backend: &dyn ScanBackend,
+        policy: ScanPolicy,
+        ws: &mut EngineWorkspace,
+        out: &mut [f32],
+    ) {
         assert!(batch > 0 && l > 0, "empty batch/sequence");
         assert_eq!(u.len(), batch * l * self.d_in);
         assert_eq!(out.len(), batch * self.classes);
@@ -867,13 +1444,15 @@ impl S5Model {
         let n = batch * l * h;
         let t = backend.threads();
         let ex = backend.executor();
-        let EngineWorkspace { x, v, y, ssm, disc } = ws;
+        let EngineWorkspace { x, v, y, y2, ssm, disc } = ws;
         grow(x, n);
         par_zip(ex, t, u, l * self.d_in, x, l * h, batch, |_, useq, xseq| {
             self.encode_seq(useq, l, xseq);
         });
         for (li, layer) in self.layers.iter().enumerate() {
-            layer.apply_batch_core(x, v, y, ssm, li, disc, batch, l, timescale, None, backend);
+            layer.apply_batch_core(
+                x, v, y, y2, ssm, li, disc, batch, l, timescale, None, backend, policy,
+            );
         }
         par_zip(ex, t, &x[..n], l * h, out, self.classes, batch, |_, xseq, oseq| {
             self.pool_decode_seq(xseq, l, oseq);
@@ -942,15 +1521,7 @@ impl SequenceModel for S5Model {
         out: &mut [f32],
     ) {
         assert_eq!(batch.width(), self.d_in, "batch width != model d_input");
-        self.forward_batch_into(
-            batch.data(),
-            batch.batch(),
-            batch.len(),
-            opts.timescale,
-            opts.scan_backend(),
-            ws,
-            out,
-        );
+        self.forward_batch_opts_into(batch.data(), batch.batch(), batch.len(), opts, ws, out);
     }
 
     fn make_state(&self, opts: &ForwardOptions) -> SessionState {
@@ -992,6 +1563,24 @@ impl SequenceModel for S5Model {
             .downcast_mut::<S5StreamState>()
             .expect("state is not an S5StreamState")
             .push(self, u, opts.timescale, dt);
+    }
+
+    /// Chunked prefill: swallow a whole (L, d_in) prefix through the
+    /// fused tile pipeline — one drive/scan/projection pipeline per
+    /// layer, resuming from (and writing back) the stream's per-layer
+    /// state — instead of L per-token steps. Bit-for-bit equal to the
+    /// step-by-step replay (see [`S5StreamState::push_chunk`]).
+    fn advance_batch(
+        &self,
+        state: &mut SessionState,
+        tokens: &[f32],
+        l: usize,
+        opts: &ForwardOptions,
+    ) {
+        state
+            .downcast_mut::<S5StreamState>()
+            .expect("state is not an S5StreamState")
+            .push_chunk(self, tokens, l, opts);
     }
 }
 
@@ -1398,52 +1987,75 @@ mod tests {
         }
     }
 
-    /// The planar (default) forward equals the interleaved oracle exactly
-    /// — layer, bidirectional layer, irregular-Δt SSM and full model, at
-    /// sequential and parallel thread budgets. (Identical FP ops in
-    /// identical order ⇒ bit-for-bit, asserted with == via a 0-tolerance
-    /// compare.)
+    /// The planar pipelines equal the interleaved oracle exactly — layer,
+    /// bidirectional layer, irregular-Δt SSM and full model. Two pins:
+    /// the **staged** planar pipeline matches the interleaved oracle at
+    /// the *same* strategy (identical FP ops in identical order, any
+    /// thread budget), and the default **fused** pipeline matches the
+    /// interleaved *sequential* oracle (the fused tile scans are
+    /// sequential whatever the thread budget). Both bit-for-bit,
+    /// asserted via a 0-tolerance compare.
     #[test]
     fn prop_planar_forward_matches_interleaved_oracle() {
-        use crate::ssm::scan::backend_for;
+        use crate::ssm::engine::Tiling;
         prop::check("planar ≡ interleaved (layer/model)", 6, |g| {
             let batch = 1 + g.below(5);
             let l = 4 + g.below(60);
             let bidir = g.coin(0.5);
             let lp = layer(4, 8, 1, bidir);
             let u: Vec<f32> = (0..batch * l * 4).map(|_| g.normal() as f32).collect();
+            let dts: Vec<f32> = (0..batch * l).map(|_| g.uniform_in(0.3, 2.5) as f32).collect();
+            let seq_oracle = ForwardOptions::new().with_scan(1, ScanLayout::Interleaved);
             for threads in [1usize, 3] {
-                let planar = backend_for(threads, ScanLayout::Planar);
-                let oracle = backend_for(threads, ScanLayout::Interleaved);
+                let staged = ForwardOptions::new()
+                    .with_threads(threads)
+                    .with_tiling(Tiling::Staged);
+                let fused = ForwardOptions::new().with_threads(threads);
+                let oracle = ForwardOptions::new().with_scan(threads, ScanLayout::Interleaved);
                 let mut ws_p = EngineWorkspace::new();
+                let mut ws_f = EngineWorkspace::new();
                 let mut ws_i = EngineWorkspace::new();
-                let got = lp.apply_batch(&u, batch, l, 1.0, planar.as_ref(), &mut ws_p);
-                let want = lp.apply_batch(&u, batch, l, 1.0, oracle.as_ref(), &mut ws_i);
+                let mut ws_s = EngineWorkspace::new();
+                let want = lp.apply_batch_opts(&u, batch, l, None, &oracle, &mut ws_i);
+                let got = lp.apply_batch_opts(&u, batch, l, None, &staged, &mut ws_p);
                 prop::close_slice_f32(&want, &got, 0.0)
-                    .map_err(|e| format!("layer bidir={bidir} t={threads}: {e}"))?;
+                    .map_err(|e| format!("staged bidir={bidir} t={threads}: {e}"))?;
+                let want_seq = lp.apply_batch_opts(&u, batch, l, None, &seq_oracle, &mut ws_s);
+                let got = lp.apply_batch_opts(&u, batch, l, None, &fused, &mut ws_f);
+                prop::close_slice_f32(&want_seq, &got, 0.0)
+                    .map_err(|e| format!("fused bidir={bidir} t={threads}: {e}"))?;
                 if !bidir {
-                    let dts: Vec<f32> =
-                        (0..batch * l).map(|_| g.uniform_in(0.3, 2.5) as f32).collect();
-                    let got = lp.apply_ssm_batch(
-                        &u, batch, l, 1.0, Some(&dts), planar.as_ref(), &mut ws_p,
-                    );
-                    let want = lp.apply_ssm_batch(
-                        &u, batch, l, 1.0, Some(&dts), oracle.as_ref(), &mut ws_i,
-                    );
+                    let want =
+                        lp.apply_ssm_batch_opts(&u, batch, l, Some(&dts), &oracle, &mut ws_i);
+                    let got =
+                        lp.apply_ssm_batch_opts(&u, batch, l, Some(&dts), &staged, &mut ws_p);
                     prop::close_slice_f32(&want, &got, 0.0)
-                        .map_err(|e| format!("ssm dts t={threads}: {e}"))?;
+                        .map_err(|e| format!("staged ssm dts t={threads}: {e}"))?;
+                    let want =
+                        lp.apply_ssm_batch_opts(&u, batch, l, Some(&dts), &seq_oracle, &mut ws_s);
+                    let got =
+                        lp.apply_ssm_batch_opts(&u, batch, l, Some(&dts), &fused, &mut ws_f);
+                    prop::close_slice_f32(&want, &got, 0.0)
+                        .map_err(|e| format!("fused ssm dts t={threads}: {e}"))?;
                 }
             }
             let cfg = S5Config { h: 8, p: 8, j: 1, ..Default::default() };
             let m = S5Model::init(2, 5, 2, &cfg, &mut Rng::new(13));
             let mu: Vec<f32> = (0..batch * l * 2).map(|_| g.normal() as f32).collect();
-            let planar = backend_for(2, ScanLayout::Planar);
-            let oracle = backend_for(2, ScanLayout::Interleaved);
             let mut ws_p = EngineWorkspace::new();
             let mut ws_i = EngineWorkspace::new();
-            let got = m.forward_batch(&mu, batch, l, 1.0, planar.as_ref(), &mut ws_p);
-            let want = m.forward_batch(&mu, batch, l, 1.0, oracle.as_ref(), &mut ws_i);
-            prop::close_slice_f32(&want, &got, 0.0).map_err(|e| format!("model: {e}"))
+            let mut out_p = vec![0.0f32; batch * 5];
+            let mut out_i = vec![0.0f32; batch * 5];
+            m.forward_batch_opts_into(
+                &mu,
+                batch,
+                l,
+                &ForwardOptions::new().with_threads(2),
+                &mut ws_p,
+                &mut out_p,
+            );
+            m.forward_batch_opts_into(&mu, batch, l, &seq_oracle, &mut ws_i, &mut out_i);
+            prop::close_slice_f32(&out_i, &out_p, 0.0).map_err(|e| format!("model: {e}"))
         });
     }
 
@@ -1466,6 +2078,102 @@ mod tests {
         assert_eq!(y1, y2);
         assert_eq!(ws.disc[0].len(), 1, "repeat TV batch must hit the cache");
         assert_eq!(ws.capacity_bytes(), water, "repeat TV batch reallocated");
+    }
+
+    /// The fused path's acceptance contract on memory: the scan-facing
+    /// buffers ([`SsmBuffers`]) reach a high-water mark that is
+    /// **independent of L** (it grows only with the tile length), and
+    /// steady-state fused forwards allocate nothing — while the staged
+    /// oracle's scan buffers grow linearly with L.
+    #[test]
+    fn fused_ssm_buffers_are_l_independent_and_alloc_free() {
+        use crate::ssm::engine::Tiling;
+        let lp = layer(8, 16, 1, true); // bidirectional: both directions + y2
+        let opts = ForwardOptions::new().with_threads(2).with_tile(16);
+        let mut ws = EngineWorkspace::new();
+        let mut rng = Rng::new(33);
+        let u1 = rng.normal_vec_f32(2 * 64 * 8);
+        let _ = lp.apply_batch_opts(&u1, 2, 64, None, &opts, &mut ws);
+        let ssm_water = ws.ssm_capacity_bytes();
+        assert!(ssm_water > 0);
+        // 4× longer sequences: the scan-facing buffers must not grow
+        let u2 = rng.normal_vec_f32(2 * 256 * 8);
+        let _ = lp.apply_batch_opts(&u2, 2, 256, None, &opts, &mut ws);
+        assert_eq!(
+            ws.ssm_capacity_bytes(),
+            ssm_water,
+            "fused SsmBuffers grew with L (the O(B·T·P) contract)"
+        );
+        // steady state: repeating the shape allocates nothing anywhere
+        let water = ws.capacity_bytes();
+        let _ = lp.apply_batch_opts(&u2, 2, 256, None, &opts, &mut ws);
+        assert_eq!(ws.capacity_bytes(), water, "steady-state fused forward allocated");
+        // a longer tile is allowed to grow the envelope — T, not L
+        let opts_big = ForwardOptions::new().with_threads(2).with_tile(32);
+        let _ = lp.apply_batch_opts(&u2, 2, 256, None, &opts_big, &mut ws);
+        assert!(ws.ssm_capacity_bytes() > ssm_water, "envelope must scale with the tile");
+        // contrast: the staged oracle materializes full (B, L, P2) planes
+        let staged = ForwardOptions::new().with_threads(2).with_tiling(Tiling::Staged);
+        let mut ws_s1 = EngineWorkspace::new();
+        let mut ws_s2 = EngineWorkspace::new();
+        let _ = lp.apply_batch_opts(&u1, 2, 64, None, &staged, &mut ws_s1);
+        let _ = lp.apply_batch_opts(&u2, 2, 256, None, &staged, &mut ws_s2);
+        assert!(
+            ws_s2.ssm_capacity_bytes() > ws_s1.ssm_capacity_bytes(),
+            "staged scan buffers should scale with L"
+        );
+    }
+
+    /// The f64-state option: tile- and policy-invariant bit-for-bit (the
+    /// carry never round-trips through f32), close to the f32 result on a
+    /// short stable sequence, and panics on the interleaved oracle.
+    #[test]
+    fn f64_state_is_tile_invariant_and_tracks_f32() {
+        use crate::ssm::engine::Tiling;
+        let lp = layer(4, 8, 1, false);
+        let l = 200;
+        let mut rng = Rng::new(44);
+        let u = rng.normal_vec_f32(l * 4);
+        let dts = rng.uniform_vec_f32(l, 0.3, 2.5);
+        for dts in [None, Some(&dts[..])] {
+            let mut reference: Option<Vec<f32>> = None;
+            for opts in [
+                ForwardOptions::new().with_f64_state().with_tile(7),
+                ForwardOptions::new().with_f64_state().with_tile(64),
+                ForwardOptions::new().with_f64_state().with_threads(3).with_tile(7),
+                ForwardOptions::new().with_f64_state().with_tiling(Tiling::Staged),
+            ] {
+                let mut ws = EngineWorkspace::new();
+                let got = lp.apply_ssm_batch_opts(&u, 1, l, dts, &opts, &mut ws);
+                match &reference {
+                    None => reference = Some(got),
+                    Some(want) => assert_eq!(want, &got, "f64 state must be tile-invariant"),
+                }
+            }
+            let mut ws = EngineWorkspace::new();
+            let f32_res = lp.apply_ssm_batch_opts(
+                &u,
+                1,
+                l,
+                dts,
+                &ForwardOptions::new().with_tile(7),
+                &mut ws,
+            );
+            prop::close_slice_f32(&f32_res, reference.as_ref().unwrap(), 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "planar layout")]
+    fn f64_state_rejects_interleaved_oracle() {
+        let lp = layer(4, 8, 1, false);
+        let mut rng = Rng::new(45);
+        let u = rng.normal_vec_f32(10 * 4);
+        let opts = ForwardOptions::new()
+            .with_scan(1, ScanLayout::Interleaved)
+            .with_f64_state();
+        let mut ws = EngineWorkspace::new();
+        let _ = lp.apply_ssm_batch_opts(&u, 1, 10, None, &opts, &mut ws);
     }
 
     #[test]

@@ -198,6 +198,182 @@ pub fn scan_sequential_tv_planar_inplace(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Tile-resumable kernels (the fused cache-blocked forward path)
+// ---------------------------------------------------------------------------
+
+/// Sequential TI scan of an (L, P) tile resumed from a carried state:
+/// `state` holds the state entering the tile (the previous tile's final
+/// state row, or zeros) and holds the post-tile state on exit; `bu` holds
+/// the tile's drive on entry and its states on exit. Row k executes the
+/// exact per-element op of [`scan_step_inplace`] (and of row k ≥ 1 of
+/// [`scan_sequential_ti_inplace`], with the carried state playing the
+/// previous row), so an arbitrary tile decomposition reproduces the
+/// whole-sequence sequential scan bit-for-bit.
+pub fn scan_resume_ti_inplace(a: &[C32], state: &mut [C32], bu: &mut [C32], l: usize, p: usize) {
+    assert_eq!(a.len(), p);
+    assert_eq!(state.len(), p);
+    assert_eq!(bu.len(), l * p);
+    for k in 0..l {
+        let row = k * p;
+        for j in 0..p {
+            state[j] = a[j] * state[j] + bu[row + j];
+            bu[row + j] = state[j];
+        }
+    }
+}
+
+/// Tile-resumable TV scan (interleaved): `a` and `bu` are (L, P) tile
+/// rows; see [`scan_resume_ti_inplace`] for the state contract.
+pub fn scan_resume_tv_inplace(a: &[C32], state: &mut [C32], bu: &mut [C32], l: usize, p: usize) {
+    assert_eq!(a.len(), l * p);
+    assert_eq!(state.len(), p);
+    assert_eq!(bu.len(), l * p);
+    for k in 0..l {
+        let row = k * p;
+        for j in 0..p {
+            state[j] = a[row + j] * state[j] + bu[row + j];
+            bu[row + j] = state[j];
+        }
+    }
+}
+
+/// Planar tile-resumable TI scan: `sr`/`si` carry the state in/out,
+/// `bur`/`bui` are (L, P) drive-in/states-out planes. Identical FP ops in
+/// identical order to [`scan_step_planar_inplace`] per row (and to rows
+/// k ≥ 1 of [`scan_sequential_ti_planar_inplace`]), so tiled ≡ staged ≡
+/// streaming, bit-for-bit, on the sequential op order.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_resume_ti_planar_inplace(
+    ar: &[f32],
+    ai: &[f32],
+    sr: &mut [f32],
+    si: &mut [f32],
+    bur: &mut [f32],
+    bui: &mut [f32],
+    l: usize,
+    p: usize,
+) {
+    assert_eq!(ar.len(), p);
+    assert_eq!(ai.len(), p);
+    assert_eq!(sr.len(), p);
+    assert_eq!(si.len(), p);
+    assert_eq!(bur.len(), l * p);
+    assert_eq!(bui.len(), l * p);
+    for k in 0..l {
+        let row = k * p;
+        for j in 0..p {
+            let nr = ar[j] * sr[j] - ai[j] * si[j] + bur[row + j];
+            let ni = ar[j] * si[j] + ai[j] * sr[j] + bui[row + j];
+            sr[j] = nr;
+            si[j] = ni;
+            bur[row + j] = nr;
+            bui[row + j] = ni;
+        }
+    }
+}
+
+/// Planar tile-resumable TV scan: all four data planes are (L, P) tile
+/// rows; see [`scan_resume_ti_planar_inplace`] for the state contract.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_resume_tv_planar_inplace(
+    ar: &[f32],
+    ai: &[f32],
+    sr: &mut [f32],
+    si: &mut [f32],
+    bur: &mut [f32],
+    bui: &mut [f32],
+    l: usize,
+    p: usize,
+) {
+    assert_eq!(ar.len(), l * p);
+    assert_eq!(ai.len(), l * p);
+    assert_eq!(sr.len(), p);
+    assert_eq!(si.len(), p);
+    assert_eq!(bur.len(), l * p);
+    assert_eq!(bui.len(), l * p);
+    for k in 0..l {
+        let row = k * p;
+        for j in 0..p {
+            let nr = ar[row + j] * sr[j] - ai[row + j] * si[j] + bur[row + j];
+            let ni = ar[row + j] * si[j] + ai[row + j] * sr[j] + bui[row + j];
+            sr[j] = nr;
+            si[j] = ni;
+            bur[row + j] = nr;
+            bui[row + j] = ni;
+        }
+    }
+}
+
+/// Planar tile-resumable TI scan with an **f64 carry state** (the
+/// `ForwardOptions::with_f64_state` long-L drift option): the recurrence
+/// accumulates in f64 end-to-end — the state never round-trips through
+/// f32 — while the emitted state rows are rounded to f32 per row. Because
+/// the carry is continuous, the result is independent of the tile
+/// decomposition bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_resume_ti_planar_f64_inplace(
+    ar: &[f32],
+    ai: &[f32],
+    sr: &mut [f64],
+    si: &mut [f64],
+    bur: &mut [f32],
+    bui: &mut [f32],
+    l: usize,
+    p: usize,
+) {
+    assert_eq!(ar.len(), p);
+    assert_eq!(ai.len(), p);
+    assert_eq!(sr.len(), p);
+    assert_eq!(si.len(), p);
+    assert_eq!(bur.len(), l * p);
+    assert_eq!(bui.len(), l * p);
+    for k in 0..l {
+        let row = k * p;
+        for j in 0..p {
+            let nr = ar[j] as f64 * sr[j] - ai[j] as f64 * si[j] + bur[row + j] as f64;
+            let ni = ar[j] as f64 * si[j] + ai[j] as f64 * sr[j] + bui[row + j] as f64;
+            sr[j] = nr;
+            si[j] = ni;
+            bur[row + j] = nr as f32;
+            bui[row + j] = ni as f32;
+        }
+    }
+}
+
+/// Planar tile-resumable TV scan with an f64 carry state (irregular-Δt
+/// twin of [`scan_resume_ti_planar_f64_inplace`]; the multipliers stay
+/// f32 — only the carried state is widened).
+#[allow(clippy::too_many_arguments)]
+pub fn scan_resume_tv_planar_f64_inplace(
+    ar: &[f32],
+    ai: &[f32],
+    sr: &mut [f64],
+    si: &mut [f64],
+    bur: &mut [f32],
+    bui: &mut [f32],
+    l: usize,
+    p: usize,
+) {
+    assert_eq!(ar.len(), l * p);
+    assert_eq!(ai.len(), l * p);
+    assert_eq!(sr.len(), p);
+    assert_eq!(si.len(), p);
+    assert_eq!(bur.len(), l * p);
+    assert_eq!(bui.len(), l * p);
+    for k in 0..l {
+        let row = k * p;
+        for j in 0..p {
+            let nr = ar[row + j] as f64 * sr[j] - ai[row + j] as f64 * si[j] + bur[row + j] as f64;
+            let ni = ar[row + j] as f64 * si[j] + ai[row + j] as f64 * sr[j] + bui[row + j] as f64;
+            sr[j] = nr;
+            si[j] = ni;
+            bur[row + j] = nr as f32;
+            bui[row + j] = ni as f32;
+        }
+    }
+}
+
 /// Scratch elements a parallel interleaved scan needs for a given state
 /// size and chunk-worker budget: 3 chunk-summary rows per chunk (ā-power,
 /// local-final, enter) plus the combine state.
@@ -974,6 +1150,62 @@ pub trait ScanBackend: Send + Sync {
         bi: &[f32],
     ) {
         scan_step_planar_inplace(ar, ai, sr, si, br, bi);
+    }
+
+    /// Tile-resumable TI scan (interleaved): scan an (L, P) tile from a
+    /// carried `state`, leaving the post-tile state in `state` — the
+    /// multi-row generalization of [`ScanBackend::scan_step`] the fused
+    /// cache-blocked forward carries state across tile boundaries with.
+    ///
+    /// In-tile scanning is inherently sequential (the tiles of one
+    /// sequence are data-dependent), so every strategy shares the
+    /// sequential resume kernel; fused-path parallelism comes from
+    /// sharding (sequence × direction) tile pipelines across the
+    /// executor instead of splitting the scan within a pass.
+    fn scan_ti_resume(&self, a: &[C32], state: &mut [C32], bu: &mut [C32], l: usize, p: usize) {
+        scan_resume_ti_inplace(a, state, bu, l, p);
+    }
+
+    /// Tile-resumable TV scan (interleaved): `a`, `bu` are (L, P) tile
+    /// rows; see [`ScanBackend::scan_ti_resume`].
+    fn scan_tv_resume(&self, a: &[C32], state: &mut [C32], bu: &mut [C32], l: usize, p: usize) {
+        scan_resume_tv_inplace(a, state, bu, l, p);
+    }
+
+    /// Tile-resumable planar TI scan: `sr`/`si` carry the state in/out
+    /// (see [`ScanBackend::scan_ti_resume`]). This is the entry point the
+    /// fused forward and the chunked-prefill streaming path drive; its
+    /// per-row op is exactly [`ScanBackend::scan_step_planar`], so tiled
+    /// prefill ≡ step replay bit-for-bit.
+    #[allow(clippy::too_many_arguments)]
+    fn scan_ti_planar_resume(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        sr: &mut [f32],
+        si: &mut [f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+    ) {
+        scan_resume_ti_planar_inplace(ar, ai, sr, si, bur, bui, l, p);
+    }
+
+    /// Tile-resumable planar TV scan: all planes are (L, P) tile rows.
+    #[allow(clippy::too_many_arguments)]
+    fn scan_tv_planar_resume(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        sr: &mut [f32],
+        si: &mut [f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+    ) {
+        scan_resume_tv_planar_inplace(ar, ai, sr, si, bur, bui, l, p);
     }
 }
 
@@ -2289,5 +2521,232 @@ mod tests {
         let be = ParallelBackend::with_exec(4, ScanExec::Pool(own.clone()));
         assert!(be.executor().is_pool());
         assert_eq!(be.threads(), 4, "thread budget is independent of pool size");
+    }
+
+    /// The tile-resumable kernels reproduce the whole-sequence sequential
+    /// scans bit-for-bit under arbitrary tile decompositions — including
+    /// T = 1 (step-sized tiles), tiles that don't divide L, and a single
+    /// tile covering everything — in both layouts, TI and TV.
+    #[test]
+    fn resume_kernels_match_whole_sequence_over_any_tiling() {
+        let mut g = Rng::new(41);
+        for &(l, p) in &[(1usize, 3usize), (7, 2), (40, 5), (64, 1)] {
+            let a = rand_c32(&mut g, p, 0.6);
+            let a_tv = rand_c32(&mut g, l * p, 0.6);
+            let b = rand_c32(&mut g, l * p, 1.0);
+            let (ar, ai) = planes(&a);
+            let (atr, ati) = planes(&a_tv);
+            let (br, bi) = planes(&b);
+            let mut want_ti = b.clone();
+            scan_sequential_ti_inplace(&a, &mut want_ti, l, p);
+            let mut want_tv = b.clone();
+            scan_sequential_tv_inplace(&a_tv, &mut want_tv, l, p);
+            for &tile in &[1usize, 2, 3, l.saturating_sub(1).max(1), l, l + 5] {
+                // interleaved resume: first tile scanned plain (row 0 =
+                // b_0, the staged op order), later tiles resumed from the
+                // carried state — exactly how the fused driver tiles.
+                for (want, tv) in [(&want_ti, false), (&want_tv, true)] {
+                    let mut got = b.clone();
+                    let mut state = vec![C32::ZERO; p];
+                    let mut t0 = 0usize;
+                    while t0 < l {
+                        let tl = tile.min(l - t0);
+                        let rows = &mut got[t0 * p..(t0 + tl) * p];
+                        if t0 == 0 {
+                            if tv {
+                                scan_sequential_tv_inplace(&a_tv[..tl * p], rows, tl, p);
+                            } else {
+                                scan_sequential_ti_inplace(&a, rows, tl, p);
+                            }
+                            state.copy_from_slice(&rows[(tl - 1) * p..]);
+                        } else if tv {
+                            scan_resume_tv_inplace(
+                                &a_tv[t0 * p..(t0 + tl) * p],
+                                &mut state,
+                                rows,
+                                tl,
+                                p,
+                            );
+                        } else {
+                            scan_resume_ti_inplace(&a, &mut state, rows, tl, p);
+                        }
+                        t0 += tl;
+                    }
+                    for (i, w) in want.iter().enumerate() {
+                        assert_eq!(
+                            (got[i].re, got[i].im),
+                            (w.re, w.im),
+                            "interleaved tv={tv} l={l} p={p} tile={tile} idx {i}"
+                        );
+                    }
+                }
+                // planar resume, via the backend entry points, resuming
+                // from zero state for every tile including the first (the
+                // chunked-prefill contract: ≡ scan_step replay).
+                for tv in [false, true] {
+                    let (mut xr, mut xi) = (br.clone(), bi.clone());
+                    let (mut sr, mut si) = (vec![0.0f32; p], vec![0.0f32; p]);
+                    let be = SequentialBackend;
+                    let mut t0 = 0usize;
+                    while t0 < l {
+                        let tl = tile.min(l - t0);
+                        let (rr, ri) = (
+                            &mut xr[t0 * p..(t0 + tl) * p],
+                            &mut xi[t0 * p..(t0 + tl) * p],
+                        );
+                        if tv {
+                            be.scan_tv_planar_resume(
+                                &atr[t0 * p..(t0 + tl) * p],
+                                &ati[t0 * p..(t0 + tl) * p],
+                                &mut sr,
+                                &mut si,
+                                rr,
+                                ri,
+                                tl,
+                                p,
+                            );
+                        } else {
+                            be.scan_ti_planar_resume(&ar, &ai, &mut sr, &mut si, rr, ri, tl, p);
+                        }
+                        t0 += tl;
+                    }
+                    // reference: the planar streaming step replayed row by
+                    // row (the online path) — must agree bit-for-bit
+                    let (mut wr, mut wi) = (vec![0.0f32; p], vec![0.0f32; p]);
+                    for k in 0..l {
+                        let row = k * p;
+                        if tv {
+                            // TV step: same per-element op with row multipliers
+                            for j in 0..p {
+                                let nr = atr[row + j] * wr[j] - ati[row + j] * wi[j]
+                                    + br[row + j];
+                                let ni = atr[row + j] * wi[j] + ati[row + j] * wr[j]
+                                    + bi[row + j];
+                                wr[j] = nr;
+                                wi[j] = ni;
+                            }
+                        } else {
+                            be.scan_step_planar(
+                                &ar,
+                                &ai,
+                                &mut wr,
+                                &mut wi,
+                                &br[row..row + p],
+                                &bi[row..row + p],
+                            );
+                        }
+                        for j in 0..p {
+                            assert_eq!(
+                                (xr[row + j], xi[row + j]),
+                                (wr[j], wi[j]),
+                                "planar tv={tv} l={l} p={p} tile={tile} k={k} j={j}"
+                            );
+                        }
+                    }
+                    // the carried state ends at the final state row
+                    if l > 0 && p > 0 {
+                        assert_eq!(&sr[..], &xr[(l - 1) * p..]);
+                        assert_eq!(&si[..], &xi[(l - 1) * p..]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The f64-state kernels are tile-decomposition invariant bit-for-bit
+    /// (the carry never round-trips through f32), for TI and TV.
+    #[test]
+    fn f64_resume_is_tile_invariant() {
+        let mut g = Rng::new(43);
+        let (l, p) = (57usize, 4usize);
+        let a = rand_c32(&mut g, p, 0.6);
+        let a_tv = rand_c32(&mut g, l * p, 0.6);
+        let b = rand_c32(&mut g, l * p, 1.0);
+        let (ar, ai) = planes(&a);
+        let (atr, ati) = planes(&a_tv);
+        let (br, bi) = planes(&b);
+        for tv in [false, true] {
+            let mut reference: Option<(Vec<f32>, Vec<f32>)> = None;
+            for &tile in &[1usize, 5, 16, l, l + 9] {
+                let (mut xr, mut xi) = (br.clone(), bi.clone());
+                let (mut sr, mut si) = (vec![0.0f64; p], vec![0.0f64; p]);
+                let mut t0 = 0usize;
+                while t0 < l {
+                    let tl = tile.min(l - t0);
+                    let (rr, ri) = (
+                        &mut xr[t0 * p..(t0 + tl) * p],
+                        &mut xi[t0 * p..(t0 + tl) * p],
+                    );
+                    if tv {
+                        scan_resume_tv_planar_f64_inplace(
+                            &atr[t0 * p..(t0 + tl) * p],
+                            &ati[t0 * p..(t0 + tl) * p],
+                            &mut sr,
+                            &mut si,
+                            rr,
+                            ri,
+                            tl,
+                            p,
+                        );
+                    } else {
+                        scan_resume_ti_planar_f64_inplace(
+                            &ar, &ai, &mut sr, &mut si, rr, ri, tl, p,
+                        );
+                    }
+                    t0 += tl;
+                }
+                match &reference {
+                    None => reference = Some((xr, xi)),
+                    Some((wr, wi)) => {
+                        assert_eq!(&xr, wr, "tv={tv} tile={tile} re plane diverged");
+                        assert_eq!(&xi, wi, "tv={tv} tile={tile} im plane diverged");
+                    }
+                }
+            }
+        }
+    }
+
+    /// The f64 state option exists for long-L drift (open ROADMAP item):
+    /// with ā = 1 the TI scan is a running sum, where the f32 carry loses
+    /// low bits as the magnitude grows. At L = 64k the f64-state rows
+    /// must track the exact (f64) running sum strictly better than the
+    /// f32-state rows.
+    #[test]
+    fn f64_state_reduces_long_l_drift() {
+        let l = 65536usize;
+        let p = 2usize;
+        let mut g = Rng::new(77);
+        let ar = vec![1.0f32; p];
+        let ai = vec![0.0f32; p];
+        let br: Vec<f32> = (0..l * p).map(|_| g.normal() as f32).collect();
+        let bi = vec![0.0f32; l * p];
+
+        let (mut xr32, mut xi32) = (br.clone(), bi.clone());
+        let (mut sr, mut si) = (vec![0.0f32; p], vec![0.0f32; p]);
+        scan_resume_ti_planar_inplace(&ar, &ai, &mut sr, &mut si, &mut xr32, &mut xi32, l, p);
+
+        let (mut xr64, mut xi64) = (br.clone(), bi);
+        let (mut s64r, mut s64i) = (vec![0.0f64; p], vec![0.0f64; p]);
+        scan_resume_ti_planar_f64_inplace(
+            &ar, &ai, &mut s64r, &mut s64i, &mut xr64, &mut xi64, l, p,
+        );
+
+        let mut acc = vec![0.0f64; p];
+        let (mut err32, mut err64) = (0.0f64, 0.0f64);
+        for k in 0..l {
+            for j in 0..p {
+                acc[j] += br[k * p + j] as f64;
+                err32 = err32.max((xr32[k * p + j] as f64 - acc[j]).abs());
+                err64 = err64.max((xr64[k * p + j] as f64 - acc[j]).abs());
+            }
+        }
+        assert!(
+            err64 < err32,
+            "f64 state must drift less than f32 at L={l}: err64={err64:e} err32={err32:e}"
+        );
+        // the f64 rows are exact sums rounded once to f32 — error bounded
+        // by one ulp of the running magnitude (~sqrt(L)·σ), far below the
+        // accumulated f32 drift
+        assert!(err64 < 5e-3, "f64-state error unexpectedly large: {err64:e}");
     }
 }

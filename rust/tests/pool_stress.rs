@@ -23,7 +23,7 @@ use s5::coordinator::server::{NativeInferenceServer, ServerConfig};
 use s5::rng::Rng;
 use s5::runtime::pool::{global_pool, WorkerPool};
 use s5::ssm::api::{Batch, ForwardOptions, SequenceModel};
-use s5::ssm::engine::EngineWorkspace;
+use s5::ssm::engine::{EngineWorkspace, Tiling};
 use s5::ssm::s5::{S5Config, S5Model};
 use s5::ssm::scan::{backend_for_threads, ParallelBackend, ScanExec};
 
@@ -133,7 +133,10 @@ fn concurrent_pooled_chunked_prefills_match_scoped_reference() {
     let pool = Arc::new(WorkerPool::new(3));
     let m = model(91, 2);
     // (threads, batch, l): chunked single-sequence scans and the B < T
-    // branch with ⌊T/B⌋ ≥ 2 chunk-workers per sequence
+    // branch with ⌊T/B⌋ ≥ 2 chunk-workers per sequence. The staged
+    // pipeline is pinned explicitly: the fused (default) forward scans
+    // tiles sequentially, and this test exists to race the Blelloch
+    // chunk-combine on a shared pool.
     let configs = [(3usize, 1usize, 200usize), (8, 3, 64)];
     for &(t, batch, l) in &configs {
         let n_inputs = 6u64;
@@ -141,9 +144,11 @@ fn concurrent_pooled_chunked_prefills_match_scoped_reference() {
         let refs: Vec<(Vec<f32>, Vec<f32>)> = (0..n_inputs)
             .map(|i| {
                 let u = Rng::new(3000 + i).normal_vec_f32(batch * l * 2);
-                let be = ParallelBackend::with_exec(t, ScanExec::Scoped);
+                let opts = ForwardOptions::new()
+                    .with_exec(t, ScanExec::Scoped)
+                    .with_tiling(Tiling::Staged);
                 let mut ws = EngineWorkspace::new();
-                let want = m.forward_batch(&u, batch, l, 1.0, &be, &mut ws);
+                let want = m.prefill(Batch::new(&u, batch, l, 2), &opts, &mut ws);
                 (u, want)
             })
             .collect();
@@ -152,10 +157,12 @@ fn concurrent_pooled_chunked_prefills_match_scoped_reference() {
                 let pool = pool.clone();
                 let m = &m;
                 s.spawn(move || {
-                    let be = ParallelBackend::with_exec(t, ScanExec::Pool(pool));
+                    let opts = ForwardOptions::new()
+                        .with_exec(t, ScanExec::Pool(pool))
+                        .with_tiling(Tiling::Staged);
                     let mut ws = EngineWorkspace::new();
                     for round in 0..4 {
-                        let got = m.forward_batch(u, batch, l, 1.0, &be, &mut ws);
+                        let got = m.prefill(Batch::new(u, batch, l, 2), &opts, &mut ws);
                         assert_bits_equal(
                             want,
                             &got,

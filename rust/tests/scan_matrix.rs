@@ -359,6 +359,116 @@ fn layer_tv_and_bidir_are_executor_invariant() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fused cache-blocked (tiled) forward ≡ staged reference
+// ---------------------------------------------------------------------------
+
+/// The fused tile pipeline scans each tile sequentially (parallelism
+/// comes from sharding sequence × direction pipelines), so whatever the
+/// tile size, thread budget or executor, its output must equal the
+/// staged planar pipeline over the **sequential** scan strategy exactly —
+/// layer level, uni- and bidirectional, TI and irregular-Δt, batched.
+/// This is the pin that lets tile-size heuristics change freely (and
+/// what the CI `S5_TILE_L` sweep drives through `Tiling::Auto`).
+#[test]
+fn fused_tiled_matches_staged_sequential_bit_for_bit() {
+    use s5::ssm::engine::Tiling;
+    use s5::ssm::s5::{S5Config, S5Layer};
+    let pool = Arc::new(WorkerPool::new(3));
+    let mut g = Rng::new(0xF05E);
+    for &bidir in &[false, true] {
+        let layer = S5Layer::init(
+            &S5Config { h: 6, p: 8, j: 1, bidir, ..Default::default() },
+            &mut Rng::new(3),
+        );
+        for &(batch, l) in &[(1usize, 1usize), (1, 7), (2, 33), (3, 40)] {
+            let u: Vec<f32> = (0..batch * l * 6).map(|_| g.normal() as f32).collect();
+            let dts: Vec<f32> =
+                (0..batch * l).map(|_| g.uniform_in(0.3, 2.5) as f32).collect();
+            let staged = ForwardOptions::new().with_tiling(Tiling::Staged);
+            let mut ws = EngineWorkspace::new();
+            let want = layer.apply_batch_opts(&u, batch, l, None, &staged, &mut ws);
+            let want_tv = if bidir {
+                None
+            } else {
+                Some(layer.apply_ssm_batch_opts(&u, batch, l, Some(&dts), &staged, &mut ws))
+            };
+            for &tile in &[1usize, 3, 8, l, l + 7, 4096] {
+                for &t in &[1usize, 3, 8] {
+                    for exec in
+                        [ScanExec::Scoped, ScanExec::Pool(pool.clone()), ScanExec::Inline]
+                    {
+                        let ename = format!("{exec:?}");
+                        let fused = ForwardOptions::new()
+                            .with_exec(t, exec)
+                            .with_tile(tile);
+                        let mut wsf = EngineWorkspace::new();
+                        let got = layer.apply_batch_opts(&u, batch, l, None, &fused, &mut wsf);
+                        if let Some(i) = bits_equal(&want, &got) {
+                            panic!(
+                                "fused layer bidir={bidir} B={batch} L={l} tile={tile} \
+                                 t={t} exec={ename}: diverged from staged sequential at {i}"
+                            );
+                        }
+                        if let Some(want_tv) = &want_tv {
+                            let got = layer.apply_ssm_batch_opts(
+                                &u,
+                                batch,
+                                l,
+                                Some(&dts),
+                                &fused,
+                                &mut wsf,
+                            );
+                            if let Some(i) = bits_equal(want_tv, &got) {
+                                panic!(
+                                    "fused TV B={batch} L={l} tile={tile} t={t} \
+                                     exec={ename}: diverged at {i}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Model level, through the typed prefill surface: the default (Auto)
+/// fused pipeline — whatever tile `S5_TILE_L` injects — equals the
+/// staged sequential reference bit-for-bit, and the staged parallel
+/// strategy stays within the documented chunk-combine tolerance.
+#[test]
+fn fused_auto_prefill_matches_staged_reference() {
+    use s5::ssm::engine::Tiling;
+    let cfg = S5Config { h: 8, p: 8, j: 1, ..Default::default() };
+    let model = S5Model::init(2, 5, 2, &cfg, &mut Rng::new(41));
+    let (batch, l) = (3usize, 52usize);
+    let u = Rng::new(42).normal_vec_f32(batch * l * 2);
+    let view = Batch::new(&u, batch, l, 2);
+    let mut ws_a = EngineWorkspace::new();
+    let mut ws_b = EngineWorkspace::new();
+    let mut ws_c = EngineWorkspace::new();
+    let want = model.prefill(view, &ForwardOptions::new().with_tiling(Tiling::Staged), &mut ws_a);
+    for t in [1usize, 4] {
+        let got = model.prefill(view, &ForwardOptions::new().with_threads(t), &mut ws_b);
+        if let Some(i) = bits_equal(&want, &got) {
+            panic!("fused auto prefill (t={t}) diverged from staged sequential at {i}");
+        }
+    }
+    // staged parallel: equal within the documented 1e-4 combine tolerance
+    let par = model.prefill(
+        view,
+        &ForwardOptions::new().with_threads(4).with_tiling(Tiling::Staged),
+        &mut ws_c,
+    );
+    for (i, (a, b)) in want.iter().zip(par.iter()).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + a.abs().max(b.abs())),
+            "staged parallel drifted past tolerance at {i}: {a} vs {b}"
+        );
+    }
+}
+
 /// The typed `SequenceModel::prefill` surface with pooled options equals
 /// the scoped-option run bit-for-bit (what the server actually calls).
 #[test]

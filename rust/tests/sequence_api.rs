@@ -7,7 +7,7 @@ use s5::coordinator::server::{NativeInferenceServer, ServerConfig};
 use s5::rng::Rng;
 use s5::runtime::NpzStore;
 use s5::ssm::api::{Batch, ForwardOptions, SequenceModel, Session};
-use s5::ssm::engine::EngineWorkspace;
+use s5::ssm::engine::{EngineWorkspace, Tiling};
 use s5::ssm::rnn::{CruLike, GruCell};
 use s5::ssm::s5::{S5Config, S5Model};
 use s5::ssm::scan::ScanLayout;
@@ -98,10 +98,12 @@ fn session_reset_and_dt_paths() {
 // planar (default) ≡ interleaved oracle
 // ---------------------------------------------------------------------------
 
-/// The default planar scan layout reproduces the interleaved `C32` oracle
-/// **bit-for-bit** through the full `SequenceModel` surface — batched
-/// prefill at sequential and parallel thread budgets, across batch shapes
-/// and the chunk-boundary lengths the parallel scan shards at.
+/// The planar pipelines reproduce the interleaved `C32` oracle
+/// **bit-for-bit** through the full `SequenceModel` surface: the staged
+/// planar pipeline against the interleaved oracle at the *same* strategy
+/// (sequential and parallel), and the default fused tiled pipeline
+/// against the interleaved *sequential* oracle (fused in-tile scans are
+/// sequential whatever the thread budget).
 #[test]
 fn prop_planar_prefill_matches_interleaved_oracle() {
     prop::check("planar ≡ interleaved (API)", 6, |g| {
@@ -111,21 +113,147 @@ fn prop_planar_prefill_matches_interleaved_oracle() {
         // its chunk remainders, plus a random longer one
         let l = [11usize, 12, 13, 24 + g.below(40)][g.below(4)];
         let u: Vec<f32> = (0..batch * l * 2).map(|_| g.normal() as f32).collect();
+        let seq_oracle = ForwardOptions::new().with_scan(1, ScanLayout::Interleaved);
         for threads in [1usize, 3] {
-            let planar = ForwardOptions::new().with_threads(threads);
+            let staged = ForwardOptions::new().with_threads(threads).with_tiling(Tiling::Staged);
+            let fused = ForwardOptions::new().with_threads(threads);
             let oracle = ForwardOptions::new().with_scan(threads, ScanLayout::Interleaved);
-            assert_eq!(planar.scan_layout(), ScanLayout::Planar);
+            assert_eq!(staged.scan_layout(), ScanLayout::Planar);
             assert_eq!(oracle.scan_layout(), ScanLayout::Interleaved);
             let mut wp = EngineWorkspace::new();
+            let mut wf = EngineWorkspace::new();
             let mut wi = EngineWorkspace::new();
-            let got = model.prefill(Batch::new(&u, batch, l, 2), &planar, &mut wp);
+            let mut ws = EngineWorkspace::new();
+            let got = model.prefill(Batch::new(&u, batch, l, 2), &staged, &mut wp);
             let want = model.prefill(Batch::new(&u, batch, l, 2), &oracle, &mut wi);
             if got != want {
-                return Err(format!("B={batch} L={l} t={threads}: {got:?} vs {want:?}"));
+                return Err(format!("staged B={batch} L={l} t={threads}: {got:?} vs {want:?}"));
+            }
+            let got = model.prefill(Batch::new(&u, batch, l, 2), &fused, &mut wf);
+            let want = model.prefill(Batch::new(&u, batch, l, 2), &seq_oracle, &mut ws);
+            if got != want {
+                return Err(format!("fused B={batch} L={l} t={threads}: {got:?} vs {want:?}"));
             }
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// tile-boundary streaming equivalence (the fused-forward PR's contract)
+// ---------------------------------------------------------------------------
+
+/// `Session::step`-by-step replay ≡ tiled prefill on the same tokens,
+/// bit-for-bit, across tile sizes that don't divide L, T = 1, T ≥ L and
+/// the auto tile — both for the batched prefill output and for the
+/// chunked `Session::prefill` fast path (which runs the fused pipeline
+/// on the live stream state).
+#[test]
+fn tiled_prefill_equals_step_replay_bit_for_bit() {
+    let model: Arc<dyn SequenceModel> = Arc::new(s5_model(61, 3));
+    for l in [1usize, 2, 19, 64] {
+        let mut rng = Rng::new(100 + l as u64);
+        let u = rng.normal_vec_f32(l * 2);
+        // pure per-token replay (the streaming ground truth)
+        let mut stepper = Session::new(model.clone(), ForwardOptions::new());
+        let mut stepped = Vec::new();
+        for k in 0..l {
+            stepped = stepper.step(&u[k * 2..(k + 1) * 2]);
+        }
+        let tiles = [1usize, 3, 5, l, l + 9, 0 /* 0 = auto via default */];
+        for &tile in &tiles {
+            let opts = if tile == 0 {
+                ForwardOptions::new()
+            } else {
+                ForwardOptions::new().with_tile(tile)
+            };
+            // batched tiled prefill
+            let mut ws = EngineWorkspace::new();
+            let offline = model.prefill(Batch::single(&u, l, 2), &opts, &mut ws);
+            assert_eq!(
+                offline, stepped,
+                "tiled prefill (tile={tile}) diverged from step replay at L={l}"
+            );
+            // chunked Session::prefill (advance_batch fast path)
+            let mut session = Session::new(model.clone(), opts);
+            let streamed = session.prefill(&u, l);
+            assert_eq!(
+                streamed, stepped,
+                "chunked Session::prefill (tile={tile}) diverged from step replay at L={l}"
+            );
+            assert_eq!(session.steps(), l);
+            // and the session state is live: one more step matches a
+            // stepper that consumed the same prefix token-by-token
+            let extra = rng.normal_vec_f32(2);
+            assert_eq!(
+                session.step(&extra),
+                stepper.step(&extra),
+                "post-prefill step diverged (tile={tile}, L={l})"
+            );
+            stepper.reset();
+            for k in 0..l {
+                stepper.step(&u[k * 2..(k + 1) * 2]);
+            }
+        }
+    }
+}
+
+/// Bidirectional stacks cannot stream, but their tiled prefill must
+/// equal the staged reference bit-for-bit across tile shapes — including
+/// tiles that don't divide L, T = 1 and T ≥ L.
+#[test]
+fn bidirectional_tiled_prefill_matches_staged() {
+    let cfg = S5Config { h: 6, p: 8, j: 1, bidir: true, ..Default::default() };
+    let model = S5Model::init(2, 4, 2, &cfg, &mut Rng::new(71));
+    let (batch, l) = (2usize, 45usize);
+    let u = Rng::new(72).normal_vec_f32(batch * l * 2);
+    let view = Batch::new(&u, batch, l, 2);
+    let mut ws = EngineWorkspace::new();
+    let want = model.prefill(view, &ForwardOptions::new().with_tiling(Tiling::Staged), &mut ws);
+    for tile in [1usize, 4, 7, l, l + 3] {
+        for threads in [1usize, 3] {
+            let opts = ForwardOptions::new().with_threads(threads).with_tile(tile);
+            let mut wsf = EngineWorkspace::new();
+            let got = model.prefill(view, &opts, &mut wsf);
+            assert_eq!(want, got, "bidir tiled prefill diverged (tile={tile}, t={threads})");
+        }
+    }
+}
+
+/// The f64 scan-state option flows through the API surface: finite,
+/// tile-invariant, close to the f32 path — and streaming sessions keep
+/// their f32 semantics regardless.
+#[test]
+fn f64_state_flows_through_prefill() {
+    let model: Arc<dyn SequenceModel> = Arc::new(s5_model(81, 2));
+    let l = 120;
+    let u = Rng::new(82).normal_vec_f32(l * 2);
+    let mut ws_a = EngineWorkspace::new();
+    let mut ws_b = EngineWorkspace::new();
+    let mut ws_c = EngineWorkspace::new();
+    let a = model.prefill(
+        Batch::single(&u, l, 2),
+        &ForwardOptions::new().with_f64_state().with_tile(9),
+        &mut ws_a,
+    );
+    let b = model.prefill(
+        Batch::single(&u, l, 2),
+        &ForwardOptions::new().with_f64_state().with_tile(50),
+        &mut ws_b,
+    );
+    assert_eq!(a, b, "f64 state must be tile-invariant");
+    let f32_res = model.prefill(Batch::single(&u, l, 2), &ForwardOptions::new(), &mut ws_c);
+    prop::close_slice_f32(&f32_res, &a, 1e-3).unwrap();
+    // a session under f64 options still streams (f32 state) and matches
+    // its own replay
+    let mut s1 = Session::new(model.clone(), ForwardOptions::new().with_f64_state());
+    let mut s2 = Session::new(model, ForwardOptions::new());
+    let prefilled = s1.prefill(&u, l);
+    let mut stepped = Vec::new();
+    for k in 0..l {
+        stepped = s2.step(&u[k * 2..(k + 1) * 2]);
+    }
+    assert_eq!(prefilled, stepped, "streaming is f32 regardless of the offline option");
 }
 
 /// A streaming session (planar per-step kernel) reproduces the
