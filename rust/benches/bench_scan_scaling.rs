@@ -355,6 +355,57 @@ fn main() {
         );
     }
 
+    // 8. §Tentpole (single-stream PR): in-tile wide scaling. One stream
+    // (B = 1, unidirectional) has a single (sequence × direction)
+    // pipeline, so the default fused path uses one worker regardless of
+    // the budget. `with_wide` sends the leftover workers *inside* each
+    // tile (row-split drive/projection + seeded chunked scan); this
+    // measures single-stream tokens/s at 1, 2 and max workers. The
+    // snapshot records the pool-width speedup (acceptance: > 1.5x).
+    {
+        let (lt, p2t, ht) = (16384usize, 256usize, 32usize);
+        let mut rng2 = Rng::new(13);
+        let layer = random_layer(&mut rng2, ht, p2t);
+        let u = rng2.normal_vec_f32(lt * ht);
+        let mut y = vec![0.0f32; lt * ht];
+        let tokens = lt as f64;
+        let mut widths = vec![1usize, 2];
+        if max_threads > 2 {
+            widths.push(max_threads);
+        }
+        let mut t = Table::new(&["workers", "time", "tokens/s", "speedup vs 1"]);
+        let mut base_mean = f64::NAN;
+        let mut max_speedup = 1.0f64;
+        for &w in &widths {
+            let opts = ForwardOptions::new().with_wide().with_threads(w);
+            let mut ws = EngineWorkspace::new();
+            // warm so the measured loop is steady-state (no alloc)
+            layer.apply_ssm_batch_opts_into(&u, 1, lt, None, &opts, &mut ws, &mut y);
+            let st = measure(&format!("single-stream wide t{w}"), || {
+                layer.apply_ssm_batch_opts_into(&u, 1, lt, None, &opts, &mut ws, &mut y);
+                std::hint::black_box(&y);
+            });
+            if w == 1 {
+                base_mean = st.mean;
+            }
+            let speedup = base_mean / st.mean;
+            max_speedup = max_speedup.max(speedup);
+            t.row(&[
+                w.to_string(),
+                fmt_secs(st.mean),
+                format!("{:.0}k", tokens / st.mean / 1e3),
+                format!("{speedup:.2}x"),
+            ]);
+            snap.push((format!("single_stream/t{w}"), st.mean, tokens / st.mean / 1e6));
+        }
+        metrics.push(("single_stream/wide_speedup_at_pool_width".into(), max_speedup));
+        println!(
+            "## single-stream in-tile wide scaling (B=1 unidirectional, L={lt}, P2={p2t}, H={ht})\n{}",
+            t.render()
+        );
+        println!("acceptance: tokens/s at pool width > 1.5x one worker\n");
+    }
+
     // 3. linear growth in L
     let mut t = Table::new(&["L", "time", "time/L (ns)"]);
     for &ll in &[4096usize, 8192, 16384, if quick { 16384 } else { 32768 }] {

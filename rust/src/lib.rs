@@ -108,19 +108,37 @@
 //!   bytes/token).
 //! * **Tile auto-sizing**: T is chosen so one pipeline's tile working
 //!   set (drive planes + TV multiplier planes + touched input/output
-//!   rows) fits [`ssm::engine::auto_tile_l`]'s 256 KiB L2 budget,
-//!   clamped to [64, 8192] rows. Override per forward with
+//!   rows) fits a **measured** cache budget
+//!   ([`ssm::engine::tile_target_bytes`]), clamped to [64, 8192] rows.
+//!   The budget is calibrated once per process, before the worker pool
+//!   spawns: a pointer-chase probe walks a shuffled cycle over working
+//!   sets from 64 KiB to 8 MiB and takes half the largest size that
+//!   still runs near cache latency (falling back to the historical
+//!   256 KiB guess if the timings are degenerate). Override the
+//!   measurement with `S5_CACHE_KB` (effective cache size in KiB), or
+//!   pin the tile directly per forward with
 //!   [`ssm::api::ForwardOptions::with_tile`] / `with_tiling`, or
 //!   process-wide with `S5_TILE_L` (0 = staged; CI sweeps {1, 64, 4096}).
-//! * **Equivalence**: in-tile scans are sequential (tiles of one
-//!   sequence are data-dependent; parallelism shards the B × direction
-//!   pipelines across the worker pool), so the fused result equals the
-//!   staged pipeline over the sequential strategy **bit-for-bit** — for
-//!   any tile size, thread budget and executor. The untiled staged
-//!   pipeline ([`ssm::engine::Tiling::Staged`]) is retained as the
-//!   reference oracle (and is what the interleaved layout always runs);
-//!   use it when you need the chunked-parallel in-sequence scan of a
-//!   single long sequence.
+//! * **Equivalence**: in-tile scans are sequential by default (tiles of
+//!   one sequence are data-dependent; parallelism shards the B ×
+//!   direction pipelines across the worker pool), so the fused result
+//!   equals the staged pipeline over the sequential strategy
+//!   **bit-for-bit** — for any tile size, thread budget and executor.
+//!   The untiled staged pipeline ([`ssm::engine::Tiling::Staged`]) is
+//!   retained as the reference oracle (and is what the interleaved
+//!   layout always runs); use it when you need the chunked-parallel
+//!   in-sequence scan of a single long sequence.
+//! * **Single-stream width**: [`ssm::api::ForwardOptions::with_wide`]
+//!   ([`ssm::engine::ScanPolicy::wide`]) lets the fused pipeline go wide
+//!   *inside* the tile when there are fewer (sequence × direction)
+//!   pipelines than workers: drive/Δt-scale and projection row-split
+//!   (bit-exact), the tile scan runs seeded chunked-parallel resume
+//!   kernels ([`ssm::scan::ScanBackend::scan_ti_planar_resume_par`]),
+//!   and the tile widens to one cache budget per chunk worker. The
+//!   carry reassociation makes wide results tolerance-equal (≤ 1e-4
+//!   relative) to the sequential reference — deterministic for a fixed
+//!   thread budget and executor-invariant, but not bit-for-bit, which
+//!   is why it is opt-in and the default stays exactly reproducible.
 //! * **Chunked prefill**: `Session::prefill` swallows its prefix through
 //!   the same tile pipeline resuming from the live stream state
 //!   ([`ssm::api::SequenceModel::advance_batch`]), bit-for-bit equal to
@@ -149,9 +167,21 @@
 //!   share this one pool, so high-rate serving performs **zero
 //!   steady-state thread spawns** (dispatch itself costs O(shards)
 //!   small boxed closures per parallel stage; the big data buffers stay
-//!   allocation-free in the workspace). A dedicated
+//!   allocation-free in the workspace). The pool initializer also runs
+//!   the one-shot cache calibration (see *Memory model & tiling*) so
+//!   the timing probe never races worker startup. A dedicated
 //!   [`runtime::pool::WorkerPool`] can be pinned per backend via
 //!   [`ssm::scan::ScanExec::Pool`].
+//! * **Work splitting.** Parallelism prefers the coarsest independent
+//!   axis: batched forwards shard (sequence × direction) pipelines;
+//!   only when those can't fill the budget does work split *within* a
+//!   sequence — the staged pipeline's chunked scan, or (opt-in) the
+//!   fused pipeline's in-tile wide path, which gives each leftover
+//!   worker a row-chunk of every tile. Env overrides (`S5_POOL_WORKERS`,
+//!   `S5_TILE_L`, `S5_CACHE_KB`) parse strictly via
+//!   [`runtime::envcfg`]: a malformed value warns once on stderr and
+//!   falls back to the default instead of silently misconfiguring a
+//!   sweep.
 //! * **Opting out.** [`ssm::api::ForwardOptions::with_exec`] (or
 //!   [`ssm::scan::backend_for_exec`]) selects
 //!   [`ssm::scan::ScanExec::Scoped`] — the pre-pool spawn-per-call
@@ -189,6 +219,16 @@
 //! serving backend. The default build is fully hermetic (no crates.io,
 //! no prebuilt xla_extension) and still provides the entire native stack
 //! including the batched inference server.
+//!
+//! `simd` (**on** by default) routes the four hottest planar loops —
+//! Δt-scale, scan recurrence, chunk combine, projection accumulate —
+//! through the explicit-lane kernels in [`ssm::simd`]. The lane kernels
+//! perform the identical floating-point operations in the identical
+//! per-element order as the scalar loops, so enabling the feature
+//! changes **no bit of any result** (pinned by the `ssm::simd` unit
+//! tests and the full equivalence matrix, which CI runs both with and
+//! without the feature); `--no-default-features` pins the plain scalar
+//! oracle build.
 
 pub mod bench;
 pub mod coordinator;

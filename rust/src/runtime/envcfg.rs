@@ -1,0 +1,110 @@
+//! Strict, warn-once parsing for the `S5_*` environment overrides.
+//!
+//! The runtime knobs (`S5_TILE_L`, `S5_POOL_WORKERS`, `S5_CACHE_KB`,
+//! benchmark toggles) are read from the environment exactly once per
+//! process and cached in a caller-owned `OnceLock` — `std::env::var`
+//! takes the env lock and allocates, which has no place on a hot path,
+//! and a knob that changed mid-process would make runs irreproducible
+//! anyway.
+//!
+//! Parsing is **strict**: the value must be a plain non-negative decimal
+//! integer (surrounding whitespace tolerated). Anything else — empty,
+//! signs, floats, hex, unit suffixes, non-UTF-8 — is *rejected with a
+//! one-time warning on stderr* and the built-in default is used, rather
+//! than silently misconfiguring a sweep (`S5_POOL_WORKERS=max` used to be
+//! quietly ignored; a CI matrix that tested nothing is worse than a
+//! failure). The pure parser is separated from the env read so the
+//! accept/reject behavior is unit-testable without mutating the process
+//! environment (which would race parallel tests).
+
+use std::sync::OnceLock;
+
+/// Strictly parse one override value: a non-negative decimal integer,
+/// with surrounding ASCII whitespace tolerated. Returns a human-readable
+/// rejection reason otherwise.
+pub fn parse_usize_strict(raw: &str) -> Result<usize, &'static str> {
+    let t = raw.trim();
+    if t.is_empty() {
+        return Err("empty value");
+    }
+    if !t.bytes().all(|b| b.is_ascii_digit()) {
+        return Err("not a plain non-negative decimal integer");
+    }
+    t.parse::<usize>().map_err(|_| "out of range for usize")
+}
+
+/// Read + strictly parse an environment override, once per process.
+///
+/// `cell` is the caller-owned cache (one per variable); `expect`
+/// describes the expected value for the one-time warning, e.g.
+/// `"a worker count"`. Returns `None` when the variable is unset **or**
+/// invalid — the caller applies its default either way.
+pub fn env_usize_once(
+    cell: &OnceLock<Option<usize>>,
+    name: &str,
+    expect: &str,
+) -> Option<usize> {
+    *cell.get_or_init(|| {
+        let raw = match std::env::var(name) {
+            Ok(v) => v,
+            Err(std::env::VarError::NotPresent) => return None,
+            Err(std::env::VarError::NotUnicode(_)) => {
+                eprintln!("{name} is not valid UTF-8; expected {expect} — using the default");
+                return None;
+            }
+        };
+        match parse_usize_strict(&raw) {
+            Ok(n) => Some(n),
+            Err(why) => {
+                eprintln!("{name}={raw:?} ignored ({why}); expected {expect} — using the default");
+                None
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_plain_decimals() {
+        assert_eq!(parse_usize_strict("0"), Ok(0));
+        assert_eq!(parse_usize_strict("7"), Ok(7));
+        assert_eq!(parse_usize_strict("4096"), Ok(4096));
+        assert_eq!(parse_usize_strict("  12 "), Ok(12));
+        assert_eq!(parse_usize_strict("\t3\n"), Ok(3));
+    }
+
+    #[test]
+    fn rejects_everything_else() {
+        for bad in [
+            "", "  ", "-1", "+1", "1.5", "0x10", "1e3", "12k", "two", "1 2", "∞",
+        ] {
+            assert!(
+                parse_usize_strict(bad).is_err(),
+                "{bad:?} should be rejected"
+            );
+        }
+        // out of range for usize (u64::MAX * 10)
+        assert_eq!(
+            parse_usize_strict("184467440737095516150"),
+            Err("out of range for usize")
+        );
+    }
+
+    #[test]
+    fn unset_variable_falls_back_without_poisoning_the_cache() {
+        // A variable that is never set in any test environment: the read
+        // caches None and later reads stay None.
+        static CELL: OnceLock<Option<usize>> = OnceLock::new();
+        assert_eq!(
+            env_usize_once(&CELL, "S5_ENVCFG_TEST_NEVER_SET", "a number"),
+            None
+        );
+        assert_eq!(
+            env_usize_once(&CELL, "S5_ENVCFG_TEST_NEVER_SET", "a number"),
+            None
+        );
+    }
+}

@@ -20,10 +20,12 @@
 //! [`pool`] is runtime in the other sense: the process-wide persistent
 //! worker pool and the [`pool::Executor`] dispatch handle every parallel
 //! stage of the native engine runs on (no PJRT involved; always
-//! available).
+//! available). [`envcfg`] centralizes the strict, warn-once parsing of
+//! the `S5_*` environment overrides the runtime knobs read.
 
 #[cfg(feature = "pjrt")]
 pub mod artifact;
+pub mod envcfg;
 pub mod manifest;
 pub mod npz;
 #[cfg(feature = "pjrt")]

@@ -379,16 +379,26 @@ static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
 ///
 /// Sized to `available_parallelism − 1` workers — the calling thread is
 /// the +1 — and overridable with the `S5_POOL_WORKERS` environment
-/// variable (read once; CI oversubscribes it to stress scheduling).
+/// variable (read once, parsed strictly via [`crate::runtime::envcfg`];
+/// CI oversubscribes it to stress scheduling).
+///
+/// First use also runs the one-shot cache calibration
+/// ([`crate::ssm::engine::tile_target_bytes`]) *before* the workers spin
+/// up, so the timing probe measures a quiet process and every fused
+/// forward dispatched onto this pool finds the budget already resolved.
 pub fn global_pool() -> &'static WorkerPool {
-    GLOBAL_POOL.get_or_init(|| WorkerPool::new(default_global_workers()))
+    GLOBAL_POOL.get_or_init(|| {
+        let _ = crate::ssm::engine::tile_target_bytes();
+        WorkerPool::new(default_global_workers())
+    })
 }
 
 fn default_global_workers() -> usize {
-    if let Ok(v) = std::env::var("S5_POOL_WORKERS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            return n.max(1);
-        }
+    static WORKERS: OnceLock<Option<usize>> = OnceLock::new();
+    if let Some(n) =
+        crate::runtime::envcfg::env_usize_once(&WORKERS, "S5_POOL_WORKERS", "a worker count")
+    {
+        return n.max(1);
     }
     std::thread::available_parallelism()
         .map(|v| v.get())

@@ -227,8 +227,26 @@ impl ForwardOptions {
         self
     }
 
-    /// The engine-level scan policy (tiling + state precision) this
-    /// forward will run under.
+    /// Opt into **in-tile** parallelism for the fused forward
+    /// ([`ScanPolicy::wide`]): when a pass has fewer (sequence ×
+    /// direction) pipelines than the backend's thread budget — the
+    /// single-stream / low-batch regime — the leftover workers split each
+    /// tile's rows instead of idling. Drive, Δt-scale and projection
+    /// row-splits are bit-exact; the tile scan runs the seeded
+    /// chunked-parallel kernels, whose carry reassociation makes the wide
+    /// path **tolerance-equal** (≤ 1e-4 relative) to the sequential
+    /// reference rather than bit-for-bit — which is why this is opt-in
+    /// and the default stays exactly reproducible. Results remain
+    /// deterministic for a fixed thread budget and executor-invariant.
+    /// Ignored by [`ForwardOptions::with_f64_state`] (the f64 carry
+    /// contract is sequential) and by streaming sessions.
+    pub fn with_wide(mut self) -> ForwardOptions {
+        self.policy.wide = true;
+        self
+    }
+
+    /// The engine-level scan policy (tiling + state precision + in-tile
+    /// width) this forward will run under.
     pub fn scan_policy(&self) -> ScanPolicy {
         self.policy
     }
@@ -553,6 +571,7 @@ mod tests {
         let o = ForwardOptions::new();
         assert_eq!(o.scan_policy().tiling, Tiling::Auto);
         assert!(!o.scan_policy().f64_state);
+        assert!(!o.scan_policy().wide, "wide must be opt-in: the default path is bit-for-bit");
         let o = ForwardOptions::new().with_tile(128).with_threads(3);
         assert_eq!(o.scan_policy().tiling, Tiling::Fixed(128), "with_threads reset the tiling");
         assert_eq!(ForwardOptions::new().with_tile(0).scan_policy().tiling, Tiling::Staged);
@@ -563,6 +582,9 @@ mod tests {
             .with_exec(2, ScanExec::Scoped);
         assert_eq!(o.scan_policy().tiling, Tiling::Staged);
         assert!(o.scan_policy().f64_state, "with_scan/with_exec reset f64_state");
+        let o = ForwardOptions::new().with_wide().with_threads(4).with_tile(64);
+        assert!(o.scan_policy().wide, "with_threads/with_tile reset wide");
+        assert!(!o.scan_policy().f64_state);
     }
 
     #[test]

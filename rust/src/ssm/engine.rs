@@ -302,35 +302,150 @@ impl Tiling {
 /// layer per forward, and `std::env::var` takes the env lock and
 /// allocates, which has no place on the serving hot path. A set-but-
 /// unparsable value warns once and falls back to the auto size (a sweep
-/// that silently tested nothing would be worse than the noise).
+/// that silently tested nothing would be worse than the noise); the
+/// strict parse lives in [`crate::runtime::envcfg`].
 fn tile_env_override() -> Option<usize> {
     static TILE_ENV: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
-    *TILE_ENV.get_or_init(|| match std::env::var("S5_TILE_L") {
-        Err(_) => None,
-        Ok(v) => match v.trim().parse::<usize>() {
-            Ok(t) => Some(t),
-            Err(_) => {
-                eprintln!("S5_TILE_L={v:?} is not a tile length; using the auto tile size");
-                None
-            }
-        },
+    crate::runtime::envcfg::env_usize_once(
+        &TILE_ENV,
+        "S5_TILE_L",
+        "a tile length (rows; 0 = staged)",
+    )
+}
+
+/// Fallback per-pipeline cache budget: roughly half a typical per-core
+/// L2 slice, leaving room for the layer parameters the drive/projection
+/// loops stream. Used when the calibration probe can't produce a sane
+/// measurement; the live budget is [`tile_target_bytes`].
+pub const TILE_TARGET_BYTES: usize = 256 * 1024;
+
+/// Bounds on the calibrated budget: even a tiny-L2 part gets a tile big
+/// enough to amortize the per-tile fixed costs, and a huge-L3 part must
+/// not size tiles past the point where the (64, 8192)-row clamp of
+/// [`auto_tile_l`] stops binding the shapes the tests pin.
+const TILE_BUDGET_MIN_BYTES: usize = 128 * 1024;
+const TILE_BUDGET_MAX_BYTES: usize = 4 * 1024 * 1024;
+
+/// The measured per-pipeline cache budget, calibrated once per process.
+///
+/// Resolution order: a strict `S5_CACHE_KB` override (the *effective
+/// cache size* in KiB; the budget is half of it, mirroring the probe
+/// rule), else a one-shot timing probe ([`probe_effective_cache_bytes`]),
+/// else [`TILE_TARGET_BYTES`]. Clamped to [128 KiB, 4 MiB]. The result
+/// feeds both [`auto_tile_l`] (`Tiling::Auto`) and the fused path's
+/// in-tile chunk split (`ScanPolicy::wide` widens the tile to one budget
+/// per chunk worker).
+///
+/// [`crate::runtime::pool::global_pool`] forces this calibration before
+/// its workers spin up, so the probe times a quiet process.
+pub fn tile_target_bytes() -> usize {
+    static BUDGET: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *BUDGET.get_or_init(|| {
+        static CACHE_KB: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+        let cache_bytes = crate::runtime::envcfg::env_usize_once(
+            &CACHE_KB,
+            "S5_CACHE_KB",
+            "an effective cache size in KiB",
+        )
+        .map(|kb| kb.saturating_mul(1024))
+        .unwrap_or_else(probe_effective_cache_bytes);
+        (cache_bytes / 2).clamp(TILE_BUDGET_MIN_BYTES, TILE_BUDGET_MAX_BYTES)
     })
 }
 
-/// Per-pipeline cache budget the auto-sized tile targets: roughly half a
-/// typical per-core L2 slice, leaving room for the layer parameters the
-/// drive/projection loops stream.
-pub const TILE_TARGET_BYTES: usize = 256 * 1024;
+/// One-shot effective-cache probe: dependent-load (pointer-chase) timing
+/// sweep over power-of-two working sets from 64 KiB to 8 MiB.
+///
+/// Each working set is a cyclic single-cycle permutation of cache lines
+/// (Sattolo's algorithm over one u32 index per 64-byte line), chased for
+/// a fixed number of steps so every step is one serialized cache-line
+/// load — the access pattern a hardware stride prefetcher cannot hide,
+/// which keeps the latency knees sharp where a plain strided traversal
+/// would flatten them. The effective cache size is the largest working
+/// set whose per-step latency stays within 4× of the smallest set's
+/// (L1/L2-resident) latency — i.e. everything cheaper than the
+/// L3/memory cliff. Runs in a few tens of milliseconds, once per
+/// process. Returns `2 × TILE_TARGET_BYTES` (≡ the historical 256 KiB
+/// budget) if the timings are degenerate (e.g. a coarse clock).
+fn probe_effective_cache_bytes() -> usize {
+    use std::time::Instant;
+    const LINE_ELEMS: usize = 16; // one 64-byte line of u32 indices
+    const SIZES: [usize; 8] = [
+        64 << 10,
+        128 << 10,
+        256 << 10,
+        512 << 10,
+        1 << 20,
+        2 << 20,
+        4 << 20,
+        8 << 20,
+    ];
+    const STEPS: usize = 1 << 16;
+
+    // The chase buffer doubles as the working set: one index per line.
+    let max_lines = SIZES[SIZES.len() - 1] / 64;
+    let mut next = vec![0u32; max_lines * LINE_ELEMS];
+    let mut perm: Vec<u32> = Vec::with_capacity(max_lines);
+    let mut ns_per_step = [0.0f64; SIZES.len()];
+
+    for (s, &bytes) in SIZES.iter().enumerate() {
+        let lines = bytes / 64;
+        // Sattolo shuffle of the identity → a single-cycle permutation,
+        // seeded deterministically (an LCG, not the crate Rng, to keep
+        // this module free of test-only deps).
+        perm.clear();
+        perm.extend(0..lines as u32);
+        let mut seed = 0x9E3779B97F4A7C15u64 ^ bytes as u64;
+        for i in (1..lines).rev() {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let j = ((seed >> 33) as usize) % i;
+            perm.swap(i, j);
+        }
+        for i in 0..lines {
+            next[i * LINE_ELEMS] = perm[i];
+        }
+        // Warm the set, then time the chase.
+        let mut idx = 0u32;
+        for _ in 0..lines {
+            idx = next[idx as usize * LINE_ELEMS];
+        }
+        let start = Instant::now();
+        for _ in 0..STEPS {
+            idx = next[idx as usize * LINE_ELEMS];
+        }
+        let elapsed = start.elapsed();
+        // The chase result feeds the timing decision, so the loop cannot
+        // be optimized away even without a black_box.
+        if idx as usize >= lines {
+            return 2 * TILE_TARGET_BYTES;
+        }
+        ns_per_step[s] = elapsed.as_nanos() as f64 / STEPS as f64;
+    }
+
+    let base = ns_per_step[0].min(ns_per_step[1]);
+    if !(base.is_finite() && base > 0.0) {
+        return 2 * TILE_TARGET_BYTES;
+    }
+    let mut effective = SIZES[0];
+    for (s, &bytes) in SIZES.iter().enumerate() {
+        if ns_per_step[s] <= 4.0 * base {
+            effective = bytes;
+        } else {
+            break;
+        }
+    }
+    effective
+}
 
 /// Auto-size the fused path's L-tile so one pipeline's per-tile working
 /// set — the re/im drive planes (plus TV multiplier planes under
 /// irregular sampling) and the touched input/output rows — fits the
-/// [`TILE_TARGET_BYTES`] budget. Clamped to [64, 8192] rows so degenerate
-/// widths neither thrash (tiny tiles) nor defeat the blocking.
+/// calibrated [`tile_target_bytes`] budget. Clamped to [64, 8192] rows so
+/// degenerate widths neither thrash (tiny tiles) nor defeat the blocking.
 pub fn auto_tile_l(p2: usize, h: usize, tv: bool) -> usize {
     let planes = if tv { 4 } else { 2 };
     let bytes_per_row = 4 * (planes * p2 + 2 * h);
-    (TILE_TARGET_BYTES / bytes_per_row.max(1)).clamp(64, 8192)
+    (tile_target_bytes() / bytes_per_row.max(1)).clamp(64, 8192)
 }
 
 /// Engine-level execution policy that rides alongside the
@@ -340,8 +455,9 @@ pub fn auto_tile_l(p2: usize, h: usize, tv: bool) -> usize {
 /// precision the scan state carries.
 ///
 /// Plumbed from [`ForwardOptions`](crate::ssm::api::ForwardOptions)
-/// (`with_tile` / `with_tiling` / `with_f64_state`); the positional
-/// layer/model entry points use the default (fused auto-tiled, f32).
+/// (`with_tile` / `with_tiling` / `with_f64_state` / `with_wide`); the
+/// positional layer/model entry points use the default (fused
+/// auto-tiled, f32, sequential in-tile).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ScanPolicy {
     /// Forward blocking: fused cache-blocked tiles (default) or the
@@ -352,6 +468,23 @@ pub struct ScanPolicy {
     /// rows are still emitted as f32. With [`Tiling::Staged`] the
     /// sequence runs as a single tile of the fused pipeline.
     pub f64_state: bool,
+    /// Let the fused pipeline go wide *inside* a tile when there are
+    /// fewer (sequence × direction) units than workers: the drive,
+    /// Δt-scale and projection rows split across the idle workers
+    /// (bit-exact — rows are independent), and the tile scan runs the
+    /// seeded chunked-parallel resume kernels
+    /// ([`scan_resume_ti_planar_par_inplace`](crate::ssm::scan::scan_resume_ti_planar_par_inplace)).
+    /// The tile itself widens to one [`tile_target_bytes`] budget per
+    /// chunk worker, so each chunk keeps the cache locality a lone
+    /// pipeline would have had.
+    ///
+    /// **Off by default** because the chunked scan reassociates the carry
+    /// propagation: the default fused forward stays bit-for-bit equal to
+    /// the staged/sequential oracles, while the wide path is
+    /// tolerance-pinned (≤ 1e-4 relative; executor-invariant and
+    /// deterministic for a fixed thread budget). Ignored by the f64-state
+    /// path, whose tile-invariance contract requires a continuous carry.
+    pub wide: bool,
 }
 
 /// Scan-facing scratch of the engine: drive/state buffers in both layouts

@@ -37,3 +37,4 @@ pub mod rnn;
 pub mod s4;
 pub mod s5;
 pub mod scan;
+pub mod simd;

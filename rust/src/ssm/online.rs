@@ -373,7 +373,7 @@ impl S5StreamState {
                 .unwrap_or(l)
                 .min(l)
                 .max(1);
-            let SsmBuffers { bu_re, bu_im, .. } = ssm;
+            let SsmBuffers { bu_re, bu_im, scan, .. } = ssm;
             grow(bu_re, tile * p2);
             grow(bu_im, tile * p2);
             layer.norm_seq(&x[..n], l, &mut v[..n]);
@@ -402,6 +402,8 @@ impl S5StreamState {
                 backend,
                 true, // resume from (and write back) the live stream state
                 true, // unidirectional: fold the feedthrough per tile
+                1,    // in-tile width 1: keep the bit-for-bit step-replay pin
+                &mut scan.f_workers(1)[0],
             );
             layer.gate_residual_seq(&y[..n], &mut x[..n], l);
         }

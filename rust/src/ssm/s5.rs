@@ -51,6 +51,7 @@ use crate::ssm::engine::{
 };
 use crate::ssm::hippo;
 use crate::ssm::online::S5StreamState;
+use crate::ssm::simd;
 use crate::ssm::scan::{
     scan_resume_ti_planar_f64_inplace, scan_resume_tv_planar_f64_inplace,
     scan_sequential_ti_planar_inplace, scan_sequential_tv_planar_inplace, ParallelBackend,
@@ -266,7 +267,9 @@ impl S5Layer {
     }
 
     /// Planar drive scaling: `bu ← f ∘ bu` over separate planes, with the
-    /// complex-multiply op order of [`S5Layer::scale_seq`].
+    /// complex-multiply op order of [`S5Layer::scale_seq`]. Dispatches to
+    /// the lane-blocked kernel under the `simd` feature (bit-identical —
+    /// see [`crate::ssm::simd`]).
     fn scale_seq_planar(
         bur: &mut [f32],
         bui: &mut [f32],
@@ -275,6 +278,9 @@ impl S5Layer {
         l: usize,
         p2: usize,
     ) {
+        if cfg!(feature = "simd") {
+            return simd::scale_rows(bur, bui, fr, fi, l, p2);
+        }
         for k in 0..l {
             let row = k * p2;
             for r in 0..p2 {
@@ -353,6 +359,9 @@ impl S5Layer {
 
     /// Planar projection: accumulate 2·Re(C̃_dir · x) into `y` from
     /// separate state planes (mirrors [`S5Layer::project_seq`]).
+    /// Dispatches to the channel-blocked kernel under the `simd` feature
+    /// (bit-identical — each channel keeps its own sequential f64
+    /// reduction; see [`crate::ssm::simd`]).
     fn project_seq_planar(
         &self,
         xr: &[f32],
@@ -366,13 +375,24 @@ impl S5Layer {
         let ct = &self.c_tilde[dir];
         for k in 0..l {
             let xrow = if reversed { (l - 1 - k) * p2 } else { k * p2 };
-            for r in 0..h {
-                let mut acc = 0.0f64;
-                for c in 0..p2 {
-                    let cv = ct[r * p2 + c];
-                    acc += cv.re * xr[xrow + c] as f64 - cv.im * xi[xrow + c] as f64;
+            if cfg!(feature = "simd") {
+                simd::project_row(
+                    ct,
+                    &xr[xrow..xrow + p2],
+                    &xi[xrow..xrow + p2],
+                    &mut y[k * h..(k + 1) * h],
+                    h,
+                    p2,
+                );
+            } else {
+                for r in 0..h {
+                    let mut acc = 0.0f64;
+                    for c in 0..p2 {
+                        let cv = ct[r * p2 + c];
+                        acc += cv.re * xr[xrow + c] as f64 - cv.im * xi[xrow + c] as f64;
+                    }
+                    y[k * h + r] += 2.0 * acc as f32;
                 }
-                y[k * h + r] += 2.0 * acc as f32;
             }
         }
     }
@@ -460,6 +480,16 @@ impl S5Layer {
     /// With an f64 carry (`s64`) every tile resumes through the f64
     /// kernels; the result is tile-decomposition invariant because the
     /// carry never round-trips through f32.
+    ///
+    /// `wide` is the in-tile worker budget ([`ScanPolicy::wide`], granted
+    /// per unit by [`S5Layer::apply_ssm_fused`]; pass 1 for the exact
+    /// sequential behavior). With `wide > 1` the drive/Δt-scale and
+    /// projection row-split across the backend's executor (row-
+    /// independent, so bit-exact) and the tile scan runs the seeded
+    /// chunked-parallel resume kernels with `pscratch` as their
+    /// caller-pooled chunk-summary buffer (tolerance-pinned — see the
+    /// policy docs). The f64-state path ignores `wide` (its
+    /// tile-invariance contract needs a continuous sequential carry).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn fused_unit(
         &self,
@@ -475,6 +505,8 @@ impl S5Layer {
         backend: &dyn ScanBackend,
         resume: bool,
         fold_feedthrough: bool,
+        wide: usize,
+        pscratch: &mut Vec<f32>,
     ) {
         let (h, p2) = (self.h, self.p2);
         let tcap = tile.min(l).max(1);
@@ -483,28 +515,99 @@ impl S5Layer {
         while t0 < l {
             let tl = tcap.min(l - t0);
             let np = tl * p2;
+            // in-tile split: `parts` row-chunks of `rows_per` rows each
+            let parts = if h == 0 || p2 == 0 { 1 } else { wide.max(1).min(tl) };
+            let rows_per = tl.div_ceil(parts);
             // drive (+ scale / TV discretize) for this tile's rows
             if unit.dir == 0 {
                 let dr = &mut unit.dr[..np];
                 let di = &mut unit.di[..np];
-                self.drive_seq_planar(&unit.useq[t0 * h..(t0 + tl) * h], tl, dr, di);
-                match (&mut unit.tv, unit.dseq) {
-                    (Some((atr, ati)), Some(dseq)) => {
-                        // irregular sampling: per-step ZOH discretization
-                        // through the shared TV row pass (same ops as the
-                        // staged pipeline by construction)
-                        self.tv_disc_scale_rows(
-                            base_dt,
-                            &dseq[t0..t0 + tl],
-                            tl,
-                            &mut atr[..np],
-                            &mut ati[..np],
-                            dr,
-                            di,
-                        );
+                if parts > 1 {
+                    // rows are independent: chunked drive+scale is
+                    // bit-exact vs the single-pass form
+                    let ex = backend.executor();
+                    let u_t = &unit.useq[t0 * h..(t0 + tl) * h];
+                    match (&mut unit.tv, unit.dseq) {
+                        (Some((atr, ati)), Some(dseq)) => {
+                            let dseq_t = &dseq[t0..t0 + tl];
+                            ex.run_tasks(
+                                dr.chunks_mut(rows_per * p2)
+                                    .zip(di.chunks_mut(rows_per * p2))
+                                    .zip(atr[..np].chunks_mut(rows_per * p2))
+                                    .zip(ati[..np].chunks_mut(rows_per * p2))
+                                    .zip(u_t.chunks(rows_per * h))
+                                    .zip(dseq_t.chunks(rows_per))
+                                    .map(|(((((dcr, dci), acr), aci), uc), dc)| {
+                                        move || {
+                                            let rows = dc.len();
+                                            self.drive_seq_planar(uc, rows, dcr, dci);
+                                            self.tv_disc_scale_rows(
+                                                base_dt, dc, rows, acr, aci, dcr, dci,
+                                            );
+                                        }
+                                    }),
+                            );
+                        }
+                        _ => {
+                            ex.run_tasks(
+                                dr.chunks_mut(rows_per * p2)
+                                    .zip(di.chunks_mut(rows_per * p2))
+                                    .zip(u_t.chunks(rows_per * h))
+                                    .map(|((dcr, dci), uc)| {
+                                        move || {
+                                            let rows = uc.len() / h;
+                                            self.drive_seq_planar(uc, rows, dcr, dci);
+                                            Self::scale_seq_planar(
+                                                dcr, dci, f_re, f_im, rows, p2,
+                                            );
+                                        }
+                                    }),
+                            );
+                        }
                     }
-                    _ => Self::scale_seq_planar(dr, di, f_re, f_im, tl, p2),
+                } else {
+                    self.drive_seq_planar(&unit.useq[t0 * h..(t0 + tl) * h], tl, dr, di);
+                    match (&mut unit.tv, unit.dseq) {
+                        (Some((atr, ati)), Some(dseq)) => {
+                            // irregular sampling: per-step ZOH discretization
+                            // through the shared TV row pass (same ops as the
+                            // staged pipeline by construction)
+                            self.tv_disc_scale_rows(
+                                base_dt,
+                                &dseq[t0..t0 + tl],
+                                tl,
+                                &mut atr[..np],
+                                &mut ati[..np],
+                                dr,
+                                di,
+                            );
+                        }
+                        _ => Self::scale_seq_planar(dr, di, f_re, f_im, tl, p2),
+                    }
                 }
+            } else if parts > 1 {
+                let ex = backend.executor();
+                let useq = unit.useq;
+                ex.run_tasks(
+                    unit.dr[..np]
+                        .chunks_mut(rows_per * p2)
+                        .zip(unit.di[..np].chunks_mut(rows_per * p2))
+                        .enumerate()
+                        .map(|(ci, (dcr, dci))| {
+                            move || {
+                                let rows = dcr.len() / p2;
+                                self.drive_rev_tile_planar(
+                                    useq,
+                                    l,
+                                    t0 + ci * rows_per,
+                                    rows,
+                                    f_rev,
+                                    dcr,
+                                    dci,
+                                );
+                            }
+                        }),
+                );
             } else {
                 self.drive_rev_tile_planar(
                     unit.useq,
@@ -516,9 +619,12 @@ impl S5Layer {
                     &mut unit.di[..np],
                 );
             }
-            // scan: sequential within the tile, carrying state across
-            // tile boundaries (parallelism lives one level up, across
-            // the sequence × direction pipelines)
+            // scan: sequential within the tile by default, carrying state
+            // across tile boundaries (parallelism lives one level up,
+            // across the sequence × direction pipelines); with a wide
+            // budget the tile scan itself runs chunked-parallel, seeded
+            // from the carry (the caller pre-zeroes it, so the first tile
+            // needs no special case)
             {
                 let dr = &mut unit.dr[..np];
                 let di = &mut unit.di[..np];
@@ -536,6 +642,24 @@ impl S5Layer {
                         ),
                         None => scan_resume_ti_planar_f64_inplace(
                             a_re, a_im, s64r, s64i, dr, di, tl, p2,
+                        ),
+                    }
+                } else if parts > 1 {
+                    match unit.tv.as_ref() {
+                        Some((atr, ati)) => backend.scan_tv_planar_resume_par(
+                            &atr[..np],
+                            &ati[..np],
+                            unit.sr,
+                            unit.si,
+                            dr,
+                            di,
+                            tl,
+                            p2,
+                            parts,
+                            pscratch,
+                        ),
+                        None => backend.scan_ti_planar_resume_par(
+                            a_re, a_im, unit.sr, unit.si, dr, di, tl, p2, parts, pscratch,
                         ),
                     }
                 } else if first {
@@ -577,17 +701,60 @@ impl S5Layer {
                 let xi = &unit.di[..np];
                 if unit.dir == 0 {
                     let yw = &mut unit.yseq[t0 * h..(t0 + tl) * h];
-                    yw.fill(0.0);
-                    self.project_seq_planar(xr, xi, tl, 0, false, yw);
-                    if fold_feedthrough {
-                        self.feedthrough_seq(&unit.useq[t0 * h..(t0 + tl) * h], tl, yw);
+                    if parts > 1 {
+                        // output rows are independent: chunked projection
+                        // (+ feedthrough) is bit-exact
+                        let ex = backend.executor();
+                        let u_t = &unit.useq[t0 * h..(t0 + tl) * h];
+                        ex.run_tasks(
+                            yw.chunks_mut(rows_per * h)
+                                .zip(xr.chunks(rows_per * p2))
+                                .zip(xi.chunks(rows_per * p2))
+                                .zip(u_t.chunks(rows_per * h))
+                                .map(|(((yc, xrc), xic), uc)| {
+                                    move || {
+                                        let rows = yc.len() / h;
+                                        yc.fill(0.0);
+                                        self.project_seq_planar(xrc, xic, rows, 0, false, yc);
+                                        if fold_feedthrough {
+                                            self.feedthrough_seq(uc, rows, yc);
+                                        }
+                                    }
+                                }),
+                        );
+                    } else {
+                        yw.fill(0.0);
+                        self.project_seq_planar(xr, xi, tl, 0, false, yw);
+                        if fold_feedthrough {
+                            self.feedthrough_seq(&unit.useq[t0 * h..(t0 + tl) * h], tl, yw);
+                        }
                     }
                 } else {
                     // reversed tile: state row k is original row l−1−(t0+k)
                     let o0 = l - t0 - tl;
                     let yw = &mut unit.yseq[o0 * h..(o0 + tl) * h];
-                    yw.fill(0.0);
-                    self.project_seq_planar(xr, xi, tl, 1, true, yw);
+                    if parts > 1 {
+                        // state chunk [c0, c0+rows) maps to y rows
+                        // [o0+tl−c0−rows, o0+tl−c0): the y windows walk
+                        // backwards as the state chunks walk forwards, so
+                        // zip the state chunks against reverse y chunks
+                        let ex = backend.executor();
+                        ex.run_tasks(
+                            yw.rchunks_mut(rows_per * h)
+                                .zip(xr.chunks(rows_per * p2))
+                                .zip(xi.chunks(rows_per * p2))
+                                .map(|((yc, xrc), xic)| {
+                                    move || {
+                                        let rows = yc.len() / h;
+                                        yc.fill(0.0);
+                                        self.project_seq_planar(xrc, xic, rows, 1, true, yc);
+                                    }
+                                }),
+                        );
+                    } else {
+                        yw.fill(0.0);
+                        self.project_seq_planar(xr, xi, tl, 1, true, yw);
+                    }
                 }
             }
             first = false;
@@ -601,10 +768,21 @@ impl S5Layer {
     /// O(B·T·P2) instead of materializing full (B, L, P2) drive planes,
     /// and each tile's drive/state working set stays cache-resident from
     /// drive through projection. Pipelines shard across the backend's
-    /// executor (the PR-4 worker pool); in-tile scans are sequential, so
-    /// the result equals the staged pipeline over the sequential scan
-    /// strategy **bit-for-bit** — independent of tile size, thread budget
-    /// and executor (pinned by `tests/scan_matrix.rs`).
+    /// executor (the PR-4 worker pool); in-tile scans are sequential by
+    /// default, so the result equals the staged pipeline over the
+    /// sequential scan strategy **bit-for-bit** — independent of tile
+    /// size, thread budget and executor (pinned by
+    /// `tests/scan_matrix.rs`).
+    ///
+    /// With `wide` ([`ScanPolicy::wide`]) and fewer pipelines than
+    /// threads, the leftover workers go *inside* each tile: the
+    /// per-pipeline worker budget is `threads / n_units`, the tile is
+    /// widened by the same factor (one cache budget per chunk worker,
+    /// so per-worker locality matches the sequential tiling), and
+    /// [`S5Layer::fused_unit`] row-splits drive/projection (bit-exact)
+    /// and runs the seeded chunked-parallel tile scan
+    /// (tolerance-pinned). The f64-state path keeps `wide` off — its
+    /// carry contract is sequential.
     #[allow(clippy::too_many_arguments)]
     fn apply_ssm_fused(
         &self,
@@ -616,6 +794,7 @@ impl S5Layer {
         backend: &dyn ScanBackend,
         tile: usize,
         f64_state: bool,
+        wide: bool,
         slot: usize,
         disc: &mut Vec<Vec<TiDisc>>,
         ssm: &mut SsmBuffers,
@@ -626,10 +805,19 @@ impl S5Layer {
         let sh = l * h;
         let bidir = self.c_tilde.len() == 2;
         let n_units = batch * self.c_tilde.len();
-        let tcap = tile.min(l).max(1);
-        let tcp2 = tcap * p2;
         let t = backend.threads();
         let ex = backend.executor();
+        // in-tile worker budget: only when pipelines alone can't fill the
+        // thread budget (single-stream / low-batch regime)
+        let inner = if wide && !f64_state && n_units > 0 && n_units < t {
+            (t / n_units).max(1)
+        } else {
+            1
+        };
+        let tcap = tile.min(l).max(1);
+        // widen the tile so each chunk worker gets one cache budget
+        let tcap = if inner > 1 { tcap.saturating_mul(inner).min(l.max(1)) } else { tcap };
+        let tcp2 = tcap * p2;
         if let Some(dts) = dts {
             assert_eq!(dts.len(), batch * l);
         }
@@ -643,7 +831,16 @@ impl S5Layer {
         }
         let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
         let SsmBuffers {
-            bu_re, bu_im, a_tv_re, a_tv_im, state_re, state_im, state64_re, state64_im, ..
+            bu_re,
+            bu_im,
+            a_tv_re,
+            a_tv_im,
+            state_re,
+            state_im,
+            state64_re,
+            state64_im,
+            scan,
+            ..
         } = ssm;
         grow(bu_re, n_units * tcp2);
         grow(bu_im, n_units * tcp2);
@@ -726,16 +923,26 @@ impl S5Layer {
 
         // Shard the pipelines across the executor. The decomposition is
         // fixed by the thread budget (never the executor), and each unit
-        // is fully sequential, so results are invariant to both.
+        // runs its tiles in order, so results are invariant to both (with
+        // an in-tile budget the chunking inside each tile is likewise
+        // fixed by `inner`, never by the executor). Each shard carries a
+        // pooled scratch Vec for the chunked scan's summary rows (unused,
+        // and untouched, when `inner == 1`).
         let shards = t.max(1).min(n_units);
         let per = n_units.div_ceil(shards);
         let fold = !bidir;
-        ex.run_tasks(units.chunks_mut(per).map(|chunk| {
+        if inner > 1 {
+            // pre-size so the steady state never allocates: shard i's Vec
+            // is sized for t/(i+1) chunks ≥ the `inner` chunks it needs
+            scan.reserve_planar(p2, t);
+        }
+        let workers = scan.f_workers(shards);
+        ex.run_tasks(units.chunks_mut(per).zip(workers.iter_mut()).map(|(chunk, w)| {
             move || {
                 for unit in chunk.iter_mut() {
                     self.fused_unit(
                         unit, l, tcap, &d.a_re, &d.a_im, &d.f_re, &d.f_im, &d.f64s, &d.base_dt,
-                        backend, false, fold,
+                        backend, false, fold, inner, w,
                     );
                 }
             }
@@ -811,6 +1018,7 @@ impl S5Layer {
                         backend,
                         tile,
                         policy.f64_state,
+                        policy.wide,
                         slot,
                         disc,
                         ssm,

@@ -45,6 +45,26 @@
 //! ([`ScanScratch`], owned by the engine workspace) reuses them so
 //! steady-state inference allocates nothing (ROADMAP item).
 //!
+//! The planar hot loops additionally dispatch onto the explicit
+//! lane-blocked kernels of [`crate::ssm::simd`] when the `simd` cargo
+//! feature is on (the default). Those kernels execute the identical FP
+//! ops per element, so the dispatch is invisible to every bit-for-bit
+//! pin; `--no-default-features` builds keep the scalar loops as the
+//! oracle.
+//!
+//! ## Tile-resumable kernels and the in-tile wide path
+//!
+//! The fused cache-blocked forward scans one tile at a time, carrying the
+//! state across tiles ([`scan_resume_ti_planar_inplace`] and friends —
+//! bit-for-bit equal to the staged sequential scan under any tiling).
+//! When a single stream must saturate the machine (B × direction units <
+//! workers), [`scan_resume_ti_planar_par_inplace`] /
+//! [`scan_resume_tv_planar_par_inplace`] run the chunked three-phase scan
+//! *within* the tile, seeding the chunk-summary combine from the carried
+//! state and fixing up chunk 0 as well. Seeded chunking reassociates the
+//! carry propagation, so this path is tolerance-pinned (not bitwise)
+//! against the sequential oracle and is opt-in via `ScanPolicy::wide`.
+//!
 //! ## Dispatch: the worker pool
 //!
 //! The multi-threaded kernels no longer spawn. Every parallel phase takes
@@ -60,6 +80,7 @@
 
 use crate::num::{C32, C64};
 use crate::runtime::pool::{global_pool, Executor, WorkerPool};
+use crate::ssm::simd;
 use std::sync::Arc;
 
 // ---------------------------------------------------------------------------
@@ -160,11 +181,15 @@ pub fn scan_sequential_ti_planar_inplace(
         let (pi_all, cur_i) = bui.split_at_mut(row);
         let pr = &pr_all[row - p..];
         let pi = &pi_all[row - p..];
-        for j in 0..p {
-            let nr = ar[j] * pr[j] - ai[j] * pi[j] + cur_r[j];
-            let ni = ar[j] * pi[j] + ai[j] * pr[j] + cur_i[j];
-            cur_r[j] = nr;
-            cur_i[j] = ni;
+        if cfg!(feature = "simd") {
+            simd::scan_row_step(ar, ai, pr, pi, &mut cur_r[..p], &mut cur_i[..p]);
+        } else {
+            for j in 0..p {
+                let nr = ar[j] * pr[j] - ai[j] * pi[j] + cur_r[j];
+                let ni = ar[j] * pi[j] + ai[j] * pr[j] + cur_i[j];
+                cur_r[j] = nr;
+                cur_i[j] = ni;
+            }
         }
     }
 }
@@ -189,11 +214,22 @@ pub fn scan_sequential_tv_planar_inplace(
         let (pi_all, cur_i) = bui.split_at_mut(row);
         let pr = &pr_all[row - p..];
         let pi = &pi_all[row - p..];
-        for j in 0..p {
-            let nr = ar[row + j] * pr[j] - ai[row + j] * pi[j] + cur_r[j];
-            let ni = ar[row + j] * pi[j] + ai[row + j] * pr[j] + cur_i[j];
-            cur_r[j] = nr;
-            cur_i[j] = ni;
+        if cfg!(feature = "simd") {
+            simd::scan_row_step(
+                &ar[row..row + p],
+                &ai[row..row + p],
+                pr,
+                pi,
+                &mut cur_r[..p],
+                &mut cur_i[..p],
+            );
+        } else {
+            for j in 0..p {
+                let nr = ar[row + j] * pr[j] - ai[row + j] * pi[j] + cur_r[j];
+                let ni = ar[row + j] * pi[j] + ai[row + j] * pr[j] + cur_i[j];
+                cur_r[j] = nr;
+                cur_i[j] = ni;
+            }
         }
     }
 }
@@ -262,13 +298,24 @@ pub fn scan_resume_ti_planar_inplace(
     assert_eq!(bui.len(), l * p);
     for k in 0..l {
         let row = k * p;
-        for j in 0..p {
-            let nr = ar[j] * sr[j] - ai[j] * si[j] + bur[row + j];
-            let ni = ar[j] * si[j] + ai[j] * sr[j] + bui[row + j];
-            sr[j] = nr;
-            si[j] = ni;
-            bur[row + j] = nr;
-            bui[row + j] = ni;
+        if cfg!(feature = "simd") {
+            simd::scan_row_resume(
+                ar,
+                ai,
+                sr,
+                si,
+                &mut bur[row..row + p],
+                &mut bui[row..row + p],
+            );
+        } else {
+            for j in 0..p {
+                let nr = ar[j] * sr[j] - ai[j] * si[j] + bur[row + j];
+                let ni = ar[j] * si[j] + ai[j] * sr[j] + bui[row + j];
+                sr[j] = nr;
+                si[j] = ni;
+                bur[row + j] = nr;
+                bui[row + j] = ni;
+            }
         }
     }
 }
@@ -294,13 +341,24 @@ pub fn scan_resume_tv_planar_inplace(
     assert_eq!(bui.len(), l * p);
     for k in 0..l {
         let row = k * p;
-        for j in 0..p {
-            let nr = ar[row + j] * sr[j] - ai[row + j] * si[j] + bur[row + j];
-            let ni = ar[row + j] * si[j] + ai[row + j] * sr[j] + bui[row + j];
-            sr[j] = nr;
-            si[j] = ni;
-            bur[row + j] = nr;
-            bui[row + j] = ni;
+        if cfg!(feature = "simd") {
+            simd::scan_row_resume(
+                &ar[row..row + p],
+                &ai[row..row + p],
+                sr,
+                si,
+                &mut bur[row..row + p],
+                &mut bui[row..row + p],
+            );
+        } else {
+            for j in 0..p {
+                let nr = ar[row + j] * sr[j] - ai[row + j] * si[j] + bur[row + j];
+                let ni = ar[row + j] * si[j] + ai[row + j] * sr[j] + bui[row + j];
+                sr[j] = nr;
+                si[j] = ni;
+                bur[row + j] = nr;
+                bui[row + j] = ni;
+            }
         }
     }
 }
@@ -677,11 +735,15 @@ pub fn scan_parallel_ti_planar_inplace(
                         let (pi_all, cur_i) = xic.split_at_mut(row);
                         let pr = &pr_all[row - p..];
                         let pi = &pi_all[row - p..];
-                        for j in 0..p {
-                            let nr = ar[j] * pr[j] - ai[j] * pi[j] + cur_r[j];
-                            let ni = ar[j] * pi[j] + ai[j] * pr[j] + cur_i[j];
-                            cur_r[j] = nr;
-                            cur_i[j] = ni;
+                        if cfg!(feature = "simd") {
+                            simd::scan_row_step(ar, ai, pr, pi, &mut cur_r[..p], &mut cur_i[..p]);
+                        } else {
+                            for j in 0..p {
+                                let nr = ar[j] * pr[j] - ai[j] * pi[j] + cur_r[j];
+                                let ni = ar[j] * pi[j] + ai[j] * pr[j] + cur_i[j];
+                                cur_r[j] = nr;
+                                cur_i[j] = ni;
+                            }
                         }
                     }
                     for j in 0..p {
@@ -702,11 +764,22 @@ pub fn scan_parallel_ti_planar_inplace(
         let row = c * p;
         ent_r[row..row + p].copy_from_slice(st_r);
         ent_i[row..row + p].copy_from_slice(st_i);
-        for j in 0..p {
-            let nr = apw_r[row + j] * st_r[j] - apw_i[row + j] * st_i[j] + last_r[row + j];
-            let ni = apw_r[row + j] * st_i[j] + apw_i[row + j] * st_r[j] + last_i[row + j];
-            st_r[j] = nr;
-            st_i[j] = ni;
+        if cfg!(feature = "simd") {
+            simd::combine_row(
+                &apw_r[row..row + p],
+                &apw_i[row..row + p],
+                &last_r[row..row + p],
+                &last_i[row..row + p],
+                st_r,
+                st_i,
+            );
+        } else {
+            for j in 0..p {
+                let nr = apw_r[row + j] * st_r[j] - apw_i[row + j] * st_i[j] + last_r[row + j];
+                let ni = apw_r[row + j] * st_i[j] + apw_i[row + j] * st_r[j] + last_i[row + j];
+                st_r[j] = nr;
+                st_i[j] = ni;
+            }
         }
     }
 
@@ -725,13 +798,19 @@ pub fn scan_parallel_ti_planar_inplace(
                     let len = chunk.min(l - start);
                     for k in 0..len {
                         let row = k * p;
-                        for j in 0..p {
-                            let nr = crr[j] * ar[j] - cri[j] * ai[j];
-                            let ni = crr[j] * ai[j] + cri[j] * ar[j];
-                            crr[j] = nr;
-                            cri[j] = ni;
-                            xrc[row + j] += nr;
-                            xic[row + j] += ni;
+                        if cfg!(feature = "simd") {
+                            let (xr_row, xi_row) =
+                                (&mut xrc[row..row + p], &mut xic[row..row + p]);
+                            simd::fixup_row(ar, ai, crr, cri, xr_row, xi_row);
+                        } else {
+                            for j in 0..p {
+                                let nr = crr[j] * ar[j] - cri[j] * ai[j];
+                                let ni = crr[j] * ai[j] + cri[j] * ar[j];
+                                crr[j] = nr;
+                                cri[j] = ni;
+                                xrc[row + j] += nr;
+                                xic[row + j] += ni;
+                            }
                         }
                     }
                 }
@@ -805,18 +884,33 @@ pub fn scan_parallel_tv_planar_inplace(
                             let (pi_all, cur_i) = xic.split_at_mut(row);
                             let pr = &pr_all[row - p..];
                             let pi = &pi_all[row - p..];
-                            for j in 0..p {
-                                let nr = ar[g + j] * pr[j] - ai[g + j] * pi[j] + cur_r[j];
-                                let ni = ar[g + j] * pi[j] + ai[g + j] * pr[j] + cur_i[j];
-                                cur_r[j] = nr;
-                                cur_i[j] = ni;
+                            if cfg!(feature = "simd") {
+                                simd::scan_row_step(
+                                    &ar[g..g + p],
+                                    &ai[g..g + p],
+                                    pr,
+                                    pi,
+                                    &mut cur_r[..p],
+                                    &mut cur_i[..p],
+                                );
+                            } else {
+                                for j in 0..p {
+                                    let nr = ar[g + j] * pr[j] - ai[g + j] * pi[j] + cur_r[j];
+                                    let ni = ar[g + j] * pi[j] + ai[g + j] * pr[j] + cur_i[j];
+                                    cur_r[j] = nr;
+                                    cur_i[j] = ni;
+                                }
                             }
                         }
-                        for j in 0..p {
-                            let nr = ar[g + j] * arc[j] - ai[g + j] * aic[j];
-                            let ni = ar[g + j] * aic[j] + ai[g + j] * arc[j];
-                            arc[j] = nr;
-                            aic[j] = ni;
+                        if cfg!(feature = "simd") {
+                            simd::cmul_row(&ar[g..g + p], &ai[g..g + p], arc, aic);
+                        } else {
+                            for j in 0..p {
+                                let nr = ar[g + j] * arc[j] - ai[g + j] * aic[j];
+                                let ni = ar[g + j] * aic[j] + ai[g + j] * arc[j];
+                                arc[j] = nr;
+                                aic[j] = ni;
+                            }
                         }
                     }
                     lrc.copy_from_slice(&xrc[(len - 1) * p..len * p]);
@@ -832,11 +926,22 @@ pub fn scan_parallel_tv_planar_inplace(
         let row = c * p;
         ent_r[row..row + p].copy_from_slice(st_r);
         ent_i[row..row + p].copy_from_slice(st_i);
-        for j in 0..p {
-            let nr = apd_r[row + j] * st_r[j] - apd_i[row + j] * st_i[j] + last_r[row + j];
-            let ni = apd_r[row + j] * st_i[j] + apd_i[row + j] * st_r[j] + last_i[row + j];
-            st_r[j] = nr;
-            st_i[j] = ni;
+        if cfg!(feature = "simd") {
+            simd::combine_row(
+                &apd_r[row..row + p],
+                &apd_i[row..row + p],
+                &last_r[row..row + p],
+                &last_i[row..row + p],
+                st_r,
+                st_i,
+            );
+        } else {
+            for j in 0..p {
+                let nr = apd_r[row + j] * st_r[j] - apd_i[row + j] * st_i[j] + last_r[row + j];
+                let ni = apd_r[row + j] * st_i[j] + apd_i[row + j] * st_r[j] + last_i[row + j];
+                st_r[j] = nr;
+                st_i[j] = ni;
+            }
         }
     }
 
@@ -856,18 +961,363 @@ pub fn scan_parallel_tv_planar_inplace(
                     for k in 0..len {
                         let g = (start + k) * p;
                         let row = k * p;
-                        for j in 0..p {
-                            let nr = ar[g + j] * crr[j] - ai[g + j] * cri[j];
-                            let ni = ar[g + j] * cri[j] + ai[g + j] * crr[j];
-                            crr[j] = nr;
-                            cri[j] = ni;
-                            xrc[row + j] += nr;
-                            xic[row + j] += ni;
+                        if cfg!(feature = "simd") {
+                            let (xr_row, xi_row) =
+                                (&mut xrc[row..row + p], &mut xic[row..row + p]);
+                            simd::fixup_row(&ar[g..g + p], &ai[g..g + p], crr, cri, xr_row, xi_row);
+                        } else {
+                            for j in 0..p {
+                                let nr = ar[g + j] * crr[j] - ai[g + j] * cri[j];
+                                let ni = ar[g + j] * cri[j] + ai[g + j] * crr[j];
+                                crr[j] = nr;
+                                cri[j] = ni;
+                                xrc[row + j] += nr;
+                                xic[row + j] += ni;
+                            }
                         }
                     }
                 }
             }),
     );
+}
+
+/// Chunked-parallel planar tile-resumable TI scan: the **in-tile wide
+/// path** of the fused forward (`ScanPolicy::wide`). Splits the (L, P)
+/// tile into `threads` chunks on `exec` and runs the same three phases as
+/// [`scan_parallel_ti_planar_inplace`], except that the phase-2 combine is
+/// *seeded* from the incoming carry `sr`/`si` instead of zero, so chunk 0
+/// is fixed up too (its entering state is the live carry). On exit
+/// `sr`/`si` hold the emitted final state row — the same carry contract as
+/// [`scan_resume_ti_planar_inplace`].
+///
+/// Numerics: the chunk decomposition reassociates the carry propagation,
+/// so the result is **not** bit-for-bit equal to the sequential resume
+/// kernel — it is executor-invariant and chunking-deterministic (same
+/// `threads` ⇒ same bits), and agrees with the sequential op order to
+/// O(ε·L) rounding (tolerance-pinned in `tests/scan_matrix.rs`).
+/// `threads == 1` falls back to the sequential resume kernel exactly.
+///
+/// `scratch` must hold [`planar_scratch_len`]`(p, threads)` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_resume_ti_planar_par_inplace(
+    ar: &[f32],
+    ai: &[f32],
+    sr: &mut [f32],
+    si: &mut [f32],
+    bur: &mut [f32],
+    bui: &mut [f32],
+    l: usize,
+    p: usize,
+    threads: usize,
+    scratch: &mut [f32],
+    exec: Executor<'_>,
+) {
+    assert_eq!(ar.len(), p);
+    assert_eq!(ai.len(), p);
+    assert_eq!(sr.len(), p);
+    assert_eq!(si.len(), p);
+    assert_eq!(bur.len(), l * p);
+    assert_eq!(bui.len(), l * p);
+    if l == 0 || p == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(l);
+    if threads == 1 {
+        return scan_resume_ti_planar_inplace(ar, ai, sr, si, bur, bui, l, p);
+    }
+    let chunk = l.div_ceil(threads);
+    let n_chunks = l.div_ceil(chunk);
+    let n = n_chunks * p;
+    assert!(
+        scratch.len() >= 6 * n + 2 * p,
+        "planar scan scratch too small: {} < {}",
+        scratch.len(),
+        6 * n + 2 * p
+    );
+    let (apw_r, rest) = scratch.split_at_mut(n);
+    let (apw_i, rest) = rest.split_at_mut(n);
+    let (last_r, rest) = rest.split_at_mut(n);
+    let (last_i, rest) = rest.split_at_mut(n);
+    let (ent_r, rest) = rest.split_at_mut(n);
+    let (ent_i, rest) = rest.split_at_mut(n);
+    let (st_r, rest) = rest.split_at_mut(p);
+    let st_i = &mut rest[..p];
+
+    // Phase 1: local in-place scans from zero + chunk summaries — identical
+    // to the from-zero parallel kernel.
+    exec.run_tasks(
+        bur.chunks_mut(chunk * p)
+            .zip(bui.chunks_mut(chunk * p))
+            .zip(apw_r.chunks_mut(p))
+            .zip(apw_i.chunks_mut(p))
+            .zip(last_r.chunks_mut(p))
+            .zip(last_i.chunks_mut(p))
+            .enumerate()
+            .map(|(c, (((((xrc, xic), arc), aic), lrc), lic))| {
+                move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    for k in 1..len {
+                        let row = k * p;
+                        let (pr_all, cur_r) = xrc.split_at_mut(row);
+                        let (pi_all, cur_i) = xic.split_at_mut(row);
+                        let pr = &pr_all[row - p..];
+                        let pi = &pi_all[row - p..];
+                        if cfg!(feature = "simd") {
+                            simd::scan_row_step(ar, ai, pr, pi, &mut cur_r[..p], &mut cur_i[..p]);
+                        } else {
+                            for j in 0..p {
+                                let nr = ar[j] * pr[j] - ai[j] * pi[j] + cur_r[j];
+                                let ni = ar[j] * pi[j] + ai[j] * pr[j] + cur_i[j];
+                                cur_r[j] = nr;
+                                cur_i[j] = ni;
+                            }
+                        }
+                    }
+                    for j in 0..p {
+                        let apw = C32::new(ar[j], ai[j]).powi(len as u32);
+                        arc[j] = apw.re;
+                        aic[j] = apw.im;
+                        lrc[j] = xrc[(len - 1) * p + j];
+                        lic[j] = xic[(len - 1) * p + j];
+                    }
+                }
+            }),
+    );
+
+    // Phase 2: combine seeded from the incoming carry (the one line that
+    // distinguishes this kernel from the from-zero parallel scan).
+    st_r.copy_from_slice(sr);
+    st_i.copy_from_slice(si);
+    for c in 0..n_chunks {
+        let row = c * p;
+        ent_r[row..row + p].copy_from_slice(st_r);
+        ent_i[row..row + p].copy_from_slice(st_i);
+        if cfg!(feature = "simd") {
+            simd::combine_row(
+                &apw_r[row..row + p],
+                &apw_i[row..row + p],
+                &last_r[row..row + p],
+                &last_i[row..row + p],
+                st_r,
+                st_i,
+            );
+        } else {
+            for j in 0..p {
+                let nr = apw_r[row + j] * st_r[j] - apw_i[row + j] * st_i[j] + last_r[row + j];
+                let ni = apw_r[row + j] * st_i[j] + apw_i[row + j] * st_r[j] + last_i[row + j];
+                st_r[j] = nr;
+                st_i[j] = ni;
+            }
+        }
+    }
+
+    // Phase 3: fixup — every chunk participates (chunk 0's entering state
+    // is the live carry, not zero).
+    exec.run_tasks(
+        bur.chunks_mut(chunk * p)
+            .zip(bui.chunks_mut(chunk * p))
+            .zip(ent_r.chunks_mut(p))
+            .zip(ent_i.chunks_mut(p))
+            .map(|(((xrc, xic), crr), cri)| {
+                move || {
+                    let len = xrc.len() / p;
+                    for k in 0..len {
+                        let row = k * p;
+                        if cfg!(feature = "simd") {
+                            let (xr_row, xi_row) =
+                                (&mut xrc[row..row + p], &mut xic[row..row + p]);
+                            simd::fixup_row(ar, ai, crr, cri, xr_row, xi_row);
+                        } else {
+                            for j in 0..p {
+                                let nr = crr[j] * ar[j] - cri[j] * ai[j];
+                                let ni = crr[j] * ai[j] + cri[j] * ar[j];
+                                crr[j] = nr;
+                                cri[j] = ni;
+                                xrc[row + j] += nr;
+                                xic[row + j] += ni;
+                            }
+                        }
+                    }
+                }
+            }),
+    );
+
+    // Carry out: the state leaving the tile is the emitted final row (the
+    // sequential resume contract — state ≡ last row, bit-for-bit).
+    sr.copy_from_slice(&bur[(l - 1) * p..]);
+    si.copy_from_slice(&bui[(l - 1) * p..]);
+}
+
+/// Chunked-parallel planar tile-resumable TV scan: irregular-Δt twin of
+/// [`scan_resume_ti_planar_par_inplace`] (per-row multipliers, per-chunk
+/// multiplier products instead of ā-powers). Same seeded-combine carry
+/// contract and the same numerics caveat.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_resume_tv_planar_par_inplace(
+    ar: &[f32],
+    ai: &[f32],
+    sr: &mut [f32],
+    si: &mut [f32],
+    bur: &mut [f32],
+    bui: &mut [f32],
+    l: usize,
+    p: usize,
+    threads: usize,
+    scratch: &mut [f32],
+    exec: Executor<'_>,
+) {
+    assert_eq!(ar.len(), l * p);
+    assert_eq!(ai.len(), l * p);
+    assert_eq!(sr.len(), p);
+    assert_eq!(si.len(), p);
+    assert_eq!(bur.len(), l * p);
+    assert_eq!(bui.len(), l * p);
+    if l == 0 || p == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(l);
+    if threads == 1 {
+        return scan_resume_tv_planar_inplace(ar, ai, sr, si, bur, bui, l, p);
+    }
+    let chunk = l.div_ceil(threads);
+    let n_chunks = l.div_ceil(chunk);
+    let n = n_chunks * p;
+    assert!(
+        scratch.len() >= 6 * n + 2 * p,
+        "planar scan scratch too small: {} < {}",
+        scratch.len(),
+        6 * n + 2 * p
+    );
+    let (apd_r, rest) = scratch.split_at_mut(n);
+    let (apd_i, rest) = rest.split_at_mut(n);
+    let (last_r, rest) = rest.split_at_mut(n);
+    let (last_i, rest) = rest.split_at_mut(n);
+    let (ent_r, rest) = rest.split_at_mut(n);
+    let (ent_i, rest) = rest.split_at_mut(n);
+    let (st_r, rest) = rest.split_at_mut(p);
+    let st_i = &mut rest[..p];
+
+    // Phase 1: local scans + per-chunk multiplier products.
+    exec.run_tasks(
+        bur.chunks_mut(chunk * p)
+            .zip(bui.chunks_mut(chunk * p))
+            .zip(apd_r.chunks_mut(p))
+            .zip(apd_i.chunks_mut(p))
+            .zip(last_r.chunks_mut(p))
+            .zip(last_i.chunks_mut(p))
+            .enumerate()
+            .map(|(c, (((((xrc, xic), arc), aic), lrc), lic))| {
+                move || {
+                    let start = c * chunk;
+                    let len = chunk.min(l - start);
+                    arc.fill(1.0);
+                    aic.fill(0.0);
+                    for k in 0..len {
+                        let g = (start + k) * p;
+                        if k > 0 {
+                            let row = k * p;
+                            let (pr_all, cur_r) = xrc.split_at_mut(row);
+                            let (pi_all, cur_i) = xic.split_at_mut(row);
+                            let pr = &pr_all[row - p..];
+                            let pi = &pi_all[row - p..];
+                            if cfg!(feature = "simd") {
+                                simd::scan_row_step(
+                                    &ar[g..g + p],
+                                    &ai[g..g + p],
+                                    pr,
+                                    pi,
+                                    &mut cur_r[..p],
+                                    &mut cur_i[..p],
+                                );
+                            } else {
+                                for j in 0..p {
+                                    let nr = ar[g + j] * pr[j] - ai[g + j] * pi[j] + cur_r[j];
+                                    let ni = ar[g + j] * pi[j] + ai[g + j] * pr[j] + cur_i[j];
+                                    cur_r[j] = nr;
+                                    cur_i[j] = ni;
+                                }
+                            }
+                        }
+                        if cfg!(feature = "simd") {
+                            simd::cmul_row(&ar[g..g + p], &ai[g..g + p], arc, aic);
+                        } else {
+                            for j in 0..p {
+                                let nr = ar[g + j] * arc[j] - ai[g + j] * aic[j];
+                                let ni = ar[g + j] * aic[j] + ai[g + j] * arc[j];
+                                arc[j] = nr;
+                                aic[j] = ni;
+                            }
+                        }
+                    }
+                    lrc.copy_from_slice(&xrc[(len - 1) * p..len * p]);
+                    lic.copy_from_slice(&xic[(len - 1) * p..len * p]);
+                }
+            }),
+    );
+
+    // Phase 2: combine seeded from the incoming carry.
+    st_r.copy_from_slice(sr);
+    st_i.copy_from_slice(si);
+    for c in 0..n_chunks {
+        let row = c * p;
+        ent_r[row..row + p].copy_from_slice(st_r);
+        ent_i[row..row + p].copy_from_slice(st_i);
+        if cfg!(feature = "simd") {
+            simd::combine_row(
+                &apd_r[row..row + p],
+                &apd_i[row..row + p],
+                &last_r[row..row + p],
+                &last_i[row..row + p],
+                st_r,
+                st_i,
+            );
+        } else {
+            for j in 0..p {
+                let nr = apd_r[row + j] * st_r[j] - apd_i[row + j] * st_i[j] + last_r[row + j];
+                let ni = apd_r[row + j] * st_i[j] + apd_i[row + j] * st_r[j] + last_i[row + j];
+                st_r[j] = nr;
+                st_i[j] = ni;
+            }
+        }
+    }
+
+    // Phase 3: fixup with per-step multipliers — every chunk participates.
+    exec.run_tasks(
+        bur.chunks_mut(chunk * p)
+            .zip(bui.chunks_mut(chunk * p))
+            .zip(ent_r.chunks_mut(p))
+            .zip(ent_i.chunks_mut(p))
+            .enumerate()
+            .map(|(c, (((xrc, xic), crr), cri))| {
+                move || {
+                    let start = c * chunk;
+                    let len = xrc.len() / p;
+                    for k in 0..len {
+                        let g = (start + k) * p;
+                        let row = k * p;
+                        if cfg!(feature = "simd") {
+                            let (xr_row, xi_row) =
+                                (&mut xrc[row..row + p], &mut xic[row..row + p]);
+                            simd::fixup_row(&ar[g..g + p], &ai[g..g + p], crr, cri, xr_row, xi_row);
+                        } else {
+                            for j in 0..p {
+                                let nr = ar[g + j] * crr[j] - ai[g + j] * cri[j];
+                                let ni = ar[g + j] * cri[j] + ai[g + j] * crr[j];
+                                crr[j] = nr;
+                                cri[j] = ni;
+                                xrc[row + j] += nr;
+                                xic[row + j] += ni;
+                            }
+                        }
+                    }
+                }
+            }),
+    );
+
+    // Carry out: state ≡ emitted final row.
+    sr.copy_from_slice(&bur[(l - 1) * p..]);
+    si.copy_from_slice(&bui[(l - 1) * p..]);
 }
 
 // ---------------------------------------------------------------------------
@@ -906,7 +1356,7 @@ impl ScanScratch {
         &mut self.c[..n]
     }
 
-    fn f_workers(&mut self, n: usize) -> &mut [Vec<f32>] {
+    pub(crate) fn f_workers(&mut self, n: usize) -> &mut [Vec<f32>] {
         if self.f.len() < n {
             self.f.resize_with(n, Vec::new);
         }
@@ -923,7 +1373,7 @@ impl ScanScratch {
         }
     }
 
-    fn reserve_planar(&mut self, p: usize, threads: usize) {
+    pub(crate) fn reserve_planar(&mut self, p: usize, threads: usize) {
         let t = threads.max(1);
         for (i, w) in self.f_workers(t).iter_mut().enumerate() {
             let need = planar_scratch_len(p, t / (i + 1));
@@ -1157,11 +1607,16 @@ pub trait ScanBackend: Send + Sync {
     /// multi-row generalization of [`ScanBackend::scan_step`] the fused
     /// cache-blocked forward carries state across tile boundaries with.
     ///
-    /// In-tile scanning is inherently sequential (the tiles of one
-    /// sequence are data-dependent), so every strategy shares the
-    /// sequential resume kernel; fused-path parallelism comes from
-    /// sharding (sequence × direction) tile pipelines across the
-    /// executor instead of splitting the scan within a pass.
+    /// The default in-tile scan is sequential (the rows of one tile are
+    /// data-dependent) and fused-path parallelism comes from sharding
+    /// (sequence × direction) tile pipelines across the executor. When
+    /// those units can't cover the worker budget, the fused path can
+    /// instead go wide *inside* the tile via
+    /// [`ScanBackend::scan_ti_planar_resume_par`] — a chunked parallel
+    /// scan seeded from the carry (opt-in through `ScanPolicy::wide`,
+    /// because the chunked combine reassociates the carry propagation and
+    /// therefore trades the bit-for-bit fused ≡ staged pin for a
+    /// tolerance pin).
     fn scan_ti_resume(&self, a: &[C32], state: &mut [C32], bu: &mut [C32], l: usize, p: usize) {
         scan_resume_ti_inplace(a, state, bu, l, p);
     }
@@ -1205,6 +1660,57 @@ pub trait ScanBackend: Send + Sync {
         l: usize,
         p: usize,
     ) {
+        scan_resume_tv_planar_inplace(ar, ai, sr, si, bur, bui, l, p);
+    }
+
+    /// Tile-resumable planar TI scan that may split the tile into
+    /// `threads` chunks scanned in parallel and stitched through the
+    /// seeded combine ([`scan_resume_ti_planar_par_inplace`]) — the
+    /// single-stream saturation path. `threads` is the per-tile worker
+    /// budget *granted by the caller* (the fused path hands each unit its
+    /// share of the backend budget), not the backend's own thread count;
+    /// `scratch` is a caller-owned buffer grown as needed (pooled by the
+    /// engine workspace, so steady state allocates nothing).
+    ///
+    /// The default ignores the budget and stays sequential — bitwise
+    /// identical to [`ScanBackend::scan_ti_planar_resume`]. Backends that
+    /// override it (the parallel planar strategies) return chunked
+    /// results: executor-invariant and deterministic for a fixed budget,
+    /// tolerance-pinned against the sequential op order.
+    #[allow(clippy::too_many_arguments)]
+    fn scan_ti_planar_resume_par(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        sr: &mut [f32],
+        si: &mut [f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        threads: usize,
+        scratch: &mut Vec<f32>,
+    ) {
+        let _ = (threads, &scratch);
+        scan_resume_ti_planar_inplace(ar, ai, sr, si, bur, bui, l, p);
+    }
+
+    /// TV twin of [`ScanBackend::scan_ti_planar_resume_par`].
+    #[allow(clippy::too_many_arguments)]
+    fn scan_tv_planar_resume_par(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        sr: &mut [f32],
+        si: &mut [f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        threads: usize,
+        scratch: &mut Vec<f32>,
+    ) {
+        let _ = (threads, &scratch);
         scan_resume_tv_planar_inplace(ar, ai, sr, si, bur, bui, l, p);
     }
 }
@@ -1513,6 +2019,81 @@ impl ScanBackend for ParallelBackend {
         }
     }
 
+    fn scan_ti_planar_resume_par(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        sr: &mut [f32],
+        si: &mut [f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        threads: usize,
+        scratch: &mut Vec<f32>,
+    ) {
+        // Same too-short-to-split heuristic as the from-zero parallel
+        // entry points; the caller's grant is additionally clamped to the
+        // backend budget so a misconfigured caller can't oversubscribe.
+        let t = threads.max(1).min(self.threads.max(1));
+        if t <= 1 || l < 4 * t {
+            return scan_resume_ti_planar_inplace(ar, ai, sr, si, bur, bui, l, p);
+        }
+        let need = planar_scratch_len(p, t);
+        if scratch.len() < need {
+            scratch.resize(need, 0.0);
+        }
+        scan_resume_ti_planar_par_inplace(
+            ar,
+            ai,
+            sr,
+            si,
+            bur,
+            bui,
+            l,
+            p,
+            t,
+            &mut scratch[..need],
+            self.executor(),
+        );
+    }
+
+    fn scan_tv_planar_resume_par(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        sr: &mut [f32],
+        si: &mut [f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        threads: usize,
+        scratch: &mut Vec<f32>,
+    ) {
+        let t = threads.max(1).min(self.threads.max(1));
+        if t <= 1 || l < 4 * t {
+            return scan_resume_tv_planar_inplace(ar, ai, sr, si, bur, bui, l, p);
+        }
+        let need = planar_scratch_len(p, t);
+        if scratch.len() < need {
+            scratch.resize(need, 0.0);
+        }
+        scan_resume_tv_planar_par_inplace(
+            ar,
+            ai,
+            sr,
+            si,
+            bur,
+            bui,
+            l,
+            p,
+            t,
+            &mut scratch[..need],
+            self.executor(),
+        );
+    }
+
     fn scan_batch_ti_planar(
         &self,
         ar: &[f32],
@@ -1782,6 +2363,38 @@ impl<B: ScanBackend> ScanBackend for Interleaved<B> {
         bi: &[f32],
     ) {
         self.0.scan_step_planar(ar, ai, sr, si, br, bi);
+    }
+
+    fn scan_ti_planar_resume_par(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        sr: &mut [f32],
+        si: &mut [f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        threads: usize,
+        scratch: &mut Vec<f32>,
+    ) {
+        self.0.scan_ti_planar_resume_par(ar, ai, sr, si, bur, bui, l, p, threads, scratch);
+    }
+
+    fn scan_tv_planar_resume_par(
+        &self,
+        ar: &[f32],
+        ai: &[f32],
+        sr: &mut [f32],
+        si: &mut [f32],
+        bur: &mut [f32],
+        bui: &mut [f32],
+        l: usize,
+        p: usize,
+        threads: usize,
+        scratch: &mut Vec<f32>,
+    ) {
+        self.0.scan_tv_planar_resume_par(ar, ai, sr, si, bur, bui, l, p, threads, scratch);
     }
 }
 
@@ -2748,5 +3361,205 @@ mod tests {
         // by one ulp of the running magnitude (~sqrt(L)·σ), far below the
         // accumulated f32 drift
         assert!(err64 < 5e-3, "f64-state error unexpectedly large: {err64:e}");
+    }
+
+    fn assert_rel_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let denom = w.abs().max(1.0);
+            assert!(
+                (g - w).abs() / denom <= tol,
+                "{what}: idx {i} got {g} want {w}"
+            );
+        }
+    }
+
+    /// The seeded chunked-parallel resume kernels agree with the
+    /// sequential resume kernel to rounding tolerance for every chunking,
+    /// are bitwise identical across executors (the decomposition is fixed
+    /// by `threads`, not by who runs it), fall back to the sequential
+    /// kernel exactly at `threads == 1`, and leave the carry equal to the
+    /// emitted final row bit-for-bit.
+    #[test]
+    fn resume_par_matches_sequential_resume_over_any_chunking() {
+        let pool = WorkerPool::new(4);
+        let mut g = Rng::new(91);
+        for &(l, p) in &[(1usize, 3usize), (7, 2), (40, 5), (64, 1), (129, 8)] {
+            let a = rand_c32(&mut g, p, 0.6);
+            let a_tv = rand_c32(&mut g, l * p, 0.6);
+            let b = rand_c32(&mut g, l * p, 1.0);
+            let (ar, ai) = planes(&a);
+            let (atr, ati) = planes(&a_tv);
+            let (br, bi) = planes(&b);
+            let carry = rand_c32(&mut g, p, 1.0);
+            let (cr, ci) = planes(&carry);
+            for tv in [false, true] {
+                // Oracle: the sequential resume from the same carry.
+                let (mut wxr, mut wxi) = (br.clone(), bi.clone());
+                let (mut wsr, mut wsi) = (cr.clone(), ci.clone());
+                if tv {
+                    scan_resume_tv_planar_inplace(
+                        &atr, &ati, &mut wsr, &mut wsi, &mut wxr, &mut wxi, l, p,
+                    );
+                } else {
+                    scan_resume_ti_planar_inplace(
+                        &ar, &ai, &mut wsr, &mut wsi, &mut wxr, &mut wxi, l, p,
+                    );
+                }
+                for threads in [1usize, 2, 3, 8] {
+                    let mut ref_run: Option<(Vec<f32>, Vec<f32>)> = None;
+                    for exec in [Executor::Inline, Executor::Scoped, Executor::Pool(&pool)] {
+                        let (mut xr, mut xi) = (br.clone(), bi.clone());
+                        let (mut sr, mut si) = (cr.clone(), ci.clone());
+                        let mut scratch = vec![0.0f32; planar_scratch_len(p, threads)];
+                        if tv {
+                            scan_resume_tv_planar_par_inplace(
+                                &atr,
+                                &ati,
+                                &mut sr,
+                                &mut si,
+                                &mut xr,
+                                &mut xi,
+                                l,
+                                p,
+                                threads,
+                                &mut scratch,
+                                exec,
+                            );
+                        } else {
+                            scan_resume_ti_planar_par_inplace(
+                                &ar,
+                                &ai,
+                                &mut sr,
+                                &mut si,
+                                &mut xr,
+                                &mut xi,
+                                l,
+                                p,
+                                threads,
+                                &mut scratch,
+                                exec,
+                            );
+                        }
+                        let what = format!("tv={tv} l={l} p={p} threads={threads}");
+                        assert_rel_close(&xr, &wxr, 1e-4, &format!("{what} re"));
+                        assert_rel_close(&xi, &wxi, 1e-4, &format!("{what} im"));
+                        if threads == 1 {
+                            assert_eq!((&xr, &xi), (&wxr, &wxi), "{what}: t=1 must be bitwise");
+                        }
+                        // carry contract: state ≡ emitted final row, bitwise
+                        assert_eq!(&sr[..], &xr[(l - 1) * p..], "{what}: carry re");
+                        assert_eq!(&si[..], &xi[(l - 1) * p..], "{what}: carry im");
+                        // executor invariance: identical decomposition ⇒
+                        // identical bits, regardless of who runs it
+                        match &ref_run {
+                            None => ref_run = Some((xr, xi)),
+                            Some((rr, ri)) => {
+                                assert_eq!((&xr, &xi), (rr, ri), "{what}: executor variance");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Tiling composition: driving the chunked-parallel resume tile by
+    /// tile (the fused wide path's usage: carry in, carry out) tracks the
+    /// whole-sequence sequential scan within rounding tolerance, for
+    /// tile sizes that do and don't divide L.
+    #[test]
+    fn resume_par_tiled_composition_tracks_whole_sequence() {
+        let mut g = Rng::new(93);
+        let (l, p) = (101usize, 6usize);
+        let a = rand_c32(&mut g, p, 0.6);
+        let b = rand_c32(&mut g, l * p, 1.0);
+        let (ar, ai) = planes(&a);
+        let (br, bi) = planes(&b);
+        let (mut wxr, mut wxi) = (br.clone(), bi.clone());
+        scan_sequential_ti_planar_inplace(&ar, &ai, &mut wxr, &mut wxi, l, p);
+        for &tile in &[4usize, 17, 50, l, l + 3] {
+            let (mut xr, mut xi) = (br.clone(), bi.clone());
+            let (mut sr, mut si) = (vec![0.0f32; p], vec![0.0f32; p]);
+            let mut scratch = vec![0.0f32; planar_scratch_len(p, 3)];
+            let mut t0 = 0usize;
+            while t0 < l {
+                let tl = tile.min(l - t0);
+                let (rr, ri) = (
+                    &mut xr[t0 * p..(t0 + tl) * p],
+                    &mut xi[t0 * p..(t0 + tl) * p],
+                );
+                scan_resume_ti_planar_par_inplace(
+                    &ar,
+                    &ai,
+                    &mut sr,
+                    &mut si,
+                    rr,
+                    ri,
+                    tl,
+                    p,
+                    3,
+                    &mut scratch,
+                    Executor::Scoped,
+                );
+                t0 += tl;
+            }
+            assert_rel_close(&xr, &wxr, 1e-4, &format!("tile={tile} re"));
+            assert_rel_close(&xi, &wxi, 1e-4, &format!("tile={tile} im"));
+        }
+    }
+
+    /// The backend entry point honors its contract: sequential fallback
+    /// for a budget of 1 (bitwise) and for short tiles, chunked execution
+    /// otherwise, with the scratch vector grown on demand.
+    #[test]
+    fn backend_resume_par_entry_points() {
+        let mut g = Rng::new(95);
+        let (l, p) = (64usize, 4usize);
+        let a = rand_c32(&mut g, p, 0.6);
+        let b = rand_c32(&mut g, l * p, 1.0);
+        let (ar, ai) = planes(&a);
+        let (br, bi) = planes(&b);
+        let (mut wxr, mut wxi) = (br.clone(), bi.clone());
+        let (mut wsr, mut wsi) = (vec![0.0f32; p], vec![0.0f32; p]);
+        scan_resume_ti_planar_inplace(&ar, &ai, &mut wsr, &mut wsi, &mut wxr, &mut wxi, l, p);
+
+        // SequentialBackend's default: ignores the budget, stays bitwise.
+        let (mut xr, mut xi) = (br.clone(), bi.clone());
+        let (mut sr, mut si) = (vec![0.0f32; p], vec![0.0f32; p]);
+        let mut scratch = Vec::new();
+        SequentialBackend.scan_ti_planar_resume_par(
+            &ar, &ai, &mut sr, &mut si, &mut xr, &mut xi, l, p, 8, &mut scratch,
+        );
+        assert_eq!((&xr, &xi), (&wxr, &wxi));
+        assert!(scratch.is_empty(), "default must not touch scratch");
+
+        // ParallelBackend: budget 1 → bitwise sequential; budget > 1 →
+        // tolerance, scratch grown once and reused.
+        let be = ParallelBackend::with_exec(4, ScanExec::Scoped);
+        let (mut xr, mut xi) = (br.clone(), bi.clone());
+        let (mut sr, mut si) = (vec![0.0f32; p], vec![0.0f32; p]);
+        be.scan_ti_planar_resume_par(
+            &ar, &ai, &mut sr, &mut si, &mut xr, &mut xi, l, p, 1, &mut scratch,
+        );
+        assert_eq!((&xr, &xi), (&wxr, &wxi), "budget 1 must be bitwise");
+        assert!(scratch.is_empty());
+
+        let (mut xr, mut xi) = (br.clone(), bi.clone());
+        let (mut sr, mut si) = (vec![0.0f32; p], vec![0.0f32; p]);
+        be.scan_ti_planar_resume_par(
+            &ar, &ai, &mut sr, &mut si, &mut xr, &mut xi, l, p, 4, &mut scratch,
+        );
+        assert_rel_close(&xr, &wxr, 1e-4, "budget 4 re");
+        assert_rel_close(&xi, &wxi, 1e-4, "budget 4 im");
+        let cap = scratch.len();
+        assert!(cap >= planar_scratch_len(p, 4));
+        // a second call must not need more scratch (steady state)
+        let (mut xr, mut xi) = (br.clone(), bi.clone());
+        let (mut sr, mut si) = (vec![0.0f32; p], vec![0.0f32; p]);
+        be.scan_ti_planar_resume_par(
+            &ar, &ai, &mut sr, &mut si, &mut xr, &mut xi, l, p, 4, &mut scratch,
+        );
+        assert_eq!(scratch.len(), cap);
     }
 }

@@ -1,0 +1,514 @@
+//! Explicit lane-blocked planar kernels — the `simd` feature's hot path.
+//!
+//! The planar (SoA) layout was introduced (PR 3) so LLVM *could* vectorize
+//! the scan hot loops; this module stops relying on the autovectorizer's
+//! mood and writes the four hottest loop families as explicit fixed-width
+//! lane blocks:
+//!
+//! 1. **drive Δt-scale** — [`scale_rows`] (complex `f ∘ bu` over re/im
+//!    planes);
+//! 2. **scan recurrence** — [`scan_row_step`] (previous-row form of the
+//!    sequential kernels and the parallel local-scan phase) and
+//!    [`scan_row_resume`] (carried-state form of the tile-resumable
+//!    kernels);
+//! 3. **combine** — [`combine_row`] (chunk-summary combine of the
+//!    parallel scans) and [`fixup_row`] (the carry-propagating fixup
+//!    phase);
+//! 4. **projection accumulate** — [`project_row`] (2·Re(C̃x) with f64
+//!    accumulators, blocked over output channels).
+//!
+//! ## Why not `core::simd`
+//!
+//! `core::simd` is still nightly-only and this crate builds on stable, so
+//! the lanes are spelled as fixed-width `[f32; LANES]` / `[f64; PROJ_LANES]`
+//! blocks over `try_into`-converted sub-slices: a load phase, an arithmetic
+//! phase over the whole block, a store phase. Rust's default FP semantics
+//! (no fast-math, no FMA contraction) mean LLVM lowers each block to the
+//! corresponding packed vector ops without reassociating anything.
+//!
+//! ## Equivalence contract
+//!
+//! Every kernel here performs, **per element, the identical FP ops in the
+//! identical order** as its scalar twin — the blocks only group
+//! *independent* elements (the P state lanes, or independent output
+//! channels whose private reductions keep their own accumulation order).
+//! SIMD results are therefore bit-for-bit equal to the scalar oracle, and
+//! enabling the `simd` feature (on by default) cannot disturb any of the
+//! planar ≡ interleaved / fused ≡ staged bit-for-bit pins. The module
+//! tests assert exact equality against inline scalar references, including
+//! a long-L (64k-step) running-sum drift case; `tests/scan_matrix.rs`
+//! additionally tolerance-pins the end-to-end forward against the f64
+//! oracle at L = 64k, which would catch any numeric drift if a toolchain
+//! ever broke the exactness assumption.
+//!
+//! The scalar loops stay in place in `scan.rs`/`s5.rs` under
+//! `--no-default-features` (the oracle build CI exercises); the dispatch
+//! is a `cfg!(feature = "simd")` branch at each call site, so both paths
+//! type-check in every configuration.
+
+use crate::num::C64;
+
+/// f32 lane width of the element-wise blocks (two AVX2 `f32x8` registers /
+/// one AVX-512 register worth per re/im pair).
+pub(crate) const LANES: usize = 8;
+
+/// f64 accumulator lanes of the projection blocks.
+pub(crate) const PROJ_LANES: usize = 4;
+
+#[inline(always)]
+fn load(s: &[f32], j: usize) -> [f32; LANES] {
+    s[j..j + LANES].try_into().unwrap()
+}
+
+#[inline(always)]
+fn store(d: &mut [f32], j: usize, v: &[f32; LANES]) {
+    d[j..j + LANES].copy_from_slice(v);
+}
+
+/// `bu ← f ∘ bu` over `rows` planar (rows, p) re/im rows: the drive
+/// Δt-scale. Per element: `br' = fr·br − fi·bi; bi' = fr·bi + fi·br` —
+/// the exact op order of the scalar `scale_seq_planar`.
+pub(crate) fn scale_rows(
+    bur: &mut [f32],
+    bui: &mut [f32],
+    fr: &[f32],
+    fi: &[f32],
+    rows: usize,
+    p: usize,
+) {
+    let pb = p - p % LANES;
+    for k in 0..rows {
+        let row = k * p;
+        let mut j = 0;
+        while j < pb {
+            let (frv, fiv) = (load(fr, j), load(fi, j));
+            let (br, bi) = (load(bur, row + j), load(bui, row + j));
+            let mut nr = [0.0f32; LANES];
+            let mut ni = [0.0f32; LANES];
+            for t in 0..LANES {
+                nr[t] = frv[t] * br[t] - fiv[t] * bi[t];
+                ni[t] = frv[t] * bi[t] + fiv[t] * br[t];
+            }
+            store(bur, row + j, &nr);
+            store(bui, row + j, &ni);
+            j += LANES;
+        }
+        for j in pb..p {
+            let br = bur[row + j];
+            let bi = bui[row + j];
+            bur[row + j] = fr[j] * br - fi[j] * bi;
+            bui[row + j] = fr[j] * bi + fi[j] * br;
+        }
+    }
+}
+
+/// One scan-recurrence row in previous-row form:
+/// `cur ← a ∘ prev + cur` (the row body of the sequential planar kernels
+/// and of the parallel local-scan phase). All slices have length P.
+#[inline]
+pub(crate) fn scan_row_step(
+    ar: &[f32],
+    ai: &[f32],
+    pr: &[f32],
+    pi: &[f32],
+    cr: &mut [f32],
+    ci: &mut [f32],
+) {
+    let p = cr.len();
+    let pb = p - p % LANES;
+    let mut j = 0;
+    while j < pb {
+        let (av, bv) = (load(ar, j), load(ai, j));
+        let (prv, piv) = (load(pr, j), load(pi, j));
+        let (crv, civ) = (load(cr, j), load(ci, j));
+        let mut nr = [0.0f32; LANES];
+        let mut ni = [0.0f32; LANES];
+        for t in 0..LANES {
+            nr[t] = av[t] * prv[t] - bv[t] * piv[t] + crv[t];
+            ni[t] = av[t] * piv[t] + bv[t] * prv[t] + civ[t];
+        }
+        store(cr, j, &nr);
+        store(ci, j, &ni);
+        j += LANES;
+    }
+    for j in pb..p {
+        let nr = ar[j] * pr[j] - ai[j] * pi[j] + cr[j];
+        let ni = ar[j] * pi[j] + ai[j] * pr[j] + ci[j];
+        cr[j] = nr;
+        ci[j] = ni;
+    }
+}
+
+/// One scan-recurrence row in carried-state form:
+/// `state ← a ∘ state + b`, with the new state also written to the row
+/// (the row body of the tile-resumable planar kernels and of
+/// `scan_step_planar_inplace`). All slices have length P.
+#[inline]
+pub(crate) fn scan_row_resume(
+    ar: &[f32],
+    ai: &[f32],
+    sr: &mut [f32],
+    si: &mut [f32],
+    br: &mut [f32],
+    bi: &mut [f32],
+) {
+    let p = sr.len();
+    let pb = p - p % LANES;
+    let mut j = 0;
+    while j < pb {
+        let (av, bv) = (load(ar, j), load(ai, j));
+        let (srv, siv) = (load(sr, j), load(si, j));
+        let (brv, biv) = (load(br, j), load(bi, j));
+        let mut nr = [0.0f32; LANES];
+        let mut ni = [0.0f32; LANES];
+        for t in 0..LANES {
+            nr[t] = av[t] * srv[t] - bv[t] * siv[t] + brv[t];
+            ni[t] = av[t] * siv[t] + bv[t] * srv[t] + biv[t];
+        }
+        store(sr, j, &nr);
+        store(si, j, &ni);
+        store(br, j, &nr);
+        store(bi, j, &ni);
+        j += LANES;
+    }
+    for j in pb..p {
+        let nr = ar[j] * sr[j] - ai[j] * si[j] + br[j];
+        let ni = ar[j] * si[j] + ai[j] * sr[j] + bi[j];
+        sr[j] = nr;
+        si[j] = ni;
+        br[j] = nr;
+        bi[j] = ni;
+    }
+}
+
+/// One complex multiplier-accumulate row: `c ← a ∘ c` (the per-chunk
+/// multiplier product of the TV parallel scan's local phase). All slices
+/// have length P.
+#[inline]
+pub(crate) fn cmul_row(ar: &[f32], ai: &[f32], cr: &mut [f32], ci: &mut [f32]) {
+    let p = cr.len();
+    let pb = p - p % LANES;
+    let mut j = 0;
+    while j < pb {
+        let (av, bv) = (load(ar, j), load(ai, j));
+        let (crv, civ) = (load(cr, j), load(ci, j));
+        let mut nr = [0.0f32; LANES];
+        let mut ni = [0.0f32; LANES];
+        for t in 0..LANES {
+            nr[t] = av[t] * crv[t] - bv[t] * civ[t];
+            ni[t] = av[t] * civ[t] + bv[t] * crv[t];
+        }
+        store(cr, j, &nr);
+        store(ci, j, &ni);
+        j += LANES;
+    }
+    for j in pb..p {
+        let nr = ar[j] * cr[j] - ai[j] * ci[j];
+        let ni = ar[j] * ci[j] + ai[j] * cr[j];
+        cr[j] = nr;
+        ci[j] = ni;
+    }
+}
+
+/// One chunk-summary combine row: `st ← apw ∘ st + last` (phase 2 of the
+/// chunked parallel scans). All slices have length P.
+#[inline]
+pub(crate) fn combine_row(
+    apw_r: &[f32],
+    apw_i: &[f32],
+    last_r: &[f32],
+    last_i: &[f32],
+    st_r: &mut [f32],
+    st_i: &mut [f32],
+) {
+    let p = st_r.len();
+    let pb = p - p % LANES;
+    let mut j = 0;
+    while j < pb {
+        let (av, bv) = (load(apw_r, j), load(apw_i, j));
+        let (lrv, liv) = (load(last_r, j), load(last_i, j));
+        let (srv, siv) = (load(st_r, j), load(st_i, j));
+        let mut nr = [0.0f32; LANES];
+        let mut ni = [0.0f32; LANES];
+        for t in 0..LANES {
+            nr[t] = av[t] * srv[t] - bv[t] * siv[t] + lrv[t];
+            ni[t] = av[t] * siv[t] + bv[t] * srv[t] + liv[t];
+        }
+        store(st_r, j, &nr);
+        store(st_i, j, &ni);
+        j += LANES;
+    }
+    for j in pb..p {
+        let nr = apw_r[j] * st_r[j] - apw_i[j] * st_i[j] + last_r[j];
+        let ni = apw_r[j] * st_i[j] + apw_i[j] * st_r[j] + last_i[j];
+        st_r[j] = nr;
+        st_i[j] = ni;
+    }
+}
+
+/// One fixup row of the chunked parallel scans (phase 3): advance the
+/// entering carry by the row's multiplier (`carry ← carry ∘ a`) and add
+/// it into the row (`x += carry`). All slices have length P.
+///
+/// The TI scalar loop writes `carry·a` and the TV scalar loop writes
+/// `a·carry`; IEEE-754 `*` and `+` are commutative bit-for-bit on the
+/// finite values these kernels see, so this one body serves both.
+#[inline]
+pub(crate) fn fixup_row(
+    ar: &[f32],
+    ai: &[f32],
+    cr: &mut [f32],
+    ci: &mut [f32],
+    xr: &mut [f32],
+    xi: &mut [f32],
+) {
+    let p = cr.len();
+    let pb = p - p % LANES;
+    let mut j = 0;
+    while j < pb {
+        let (av, bv) = (load(ar, j), load(ai, j));
+        let (crv, civ) = (load(cr, j), load(ci, j));
+        let mut nr = [0.0f32; LANES];
+        let mut ni = [0.0f32; LANES];
+        for t in 0..LANES {
+            nr[t] = crv[t] * av[t] - civ[t] * bv[t];
+            ni[t] = crv[t] * bv[t] + civ[t] * av[t];
+        }
+        store(cr, j, &nr);
+        store(ci, j, &ni);
+        let (xrv, xiv) = (load(xr, j), load(xi, j));
+        let mut sxr = [0.0f32; LANES];
+        let mut sxi = [0.0f32; LANES];
+        for t in 0..LANES {
+            sxr[t] = xrv[t] + nr[t];
+            sxi[t] = xiv[t] + ni[t];
+        }
+        store(xr, j, &sxr);
+        store(xi, j, &sxi);
+        j += LANES;
+    }
+    for j in pb..p {
+        let nr = cr[j] * ar[j] - ci[j] * ai[j];
+        let ni = cr[j] * ai[j] + ci[j] * ar[j];
+        cr[j] = nr;
+        ci[j] = ni;
+        xr[j] += nr;
+        xi[j] += ni;
+    }
+}
+
+/// One projection row: `y[r] += 2·Re(C̃[r,·] · x)` for every output
+/// channel r, blocked [`PROJ_LANES`] channels at a time with one private
+/// f64 accumulator per channel. Each channel's reduction runs over the
+/// P2 states in ascending order — exactly the scalar op order — so the
+/// blocking never reassociates a sum.
+pub(crate) fn project_row(
+    ct: &[C64],
+    xr: &[f32],
+    xi: &[f32],
+    y: &mut [f32],
+    h: usize,
+    p2: usize,
+) {
+    let hb = h - h % PROJ_LANES;
+    let mut r = 0;
+    while r < hb {
+        let mut acc = [0.0f64; PROJ_LANES];
+        for c in 0..p2 {
+            let (xrc, xic) = (xr[c] as f64, xi[c] as f64);
+            for t in 0..PROJ_LANES {
+                let cv = ct[(r + t) * p2 + c];
+                acc[t] += cv.re * xrc - cv.im * xic;
+            }
+        }
+        for t in 0..PROJ_LANES {
+            y[r + t] += 2.0 * acc[t] as f32;
+        }
+        r += PROJ_LANES;
+    }
+    for r in hb..h {
+        let mut acc = 0.0f64;
+        for c in 0..p2 {
+            let cv = ct[r * p2 + c];
+            acc += cv.re * xr[c] as f64 - cv.im * xi[c] as f64;
+        }
+        y[r] += 2.0 * acc as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny deterministic generator (no external deps; value range keeps
+    /// products finite).
+    struct Lcg(u64);
+    impl Lcg {
+        fn f32(&mut self) -> f32 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((self.0 >> 33) as i32 as f64 / i32::MAX as f64) as f32
+        }
+        fn vec(&mut self, n: usize) -> Vec<f32> {
+            (0..n).map(|_| self.f32()).collect()
+        }
+    }
+
+    const PS: [usize; 6] = [1, 3, 7, 8, 17, 40];
+
+    /// The lane-blocked kernels equal their scalar references **bit for
+    /// bit** — the blocks group independent elements and never change an
+    /// op order, so this is exact equality, not a tolerance.
+    #[test]
+    fn lane_blocks_match_scalar_bit_for_bit() {
+        let mut g = Lcg(7);
+        for &p in &PS {
+            let rows = 5;
+            let (ar, ai) = (g.vec(p), g.vec(p));
+            let (fr, fi) = (g.vec(p), g.vec(p));
+
+            // scale_rows
+            let (mut br, mut bi) = (g.vec(rows * p), g.vec(rows * p));
+            let (mut br2, mut bi2) = (br.clone(), bi.clone());
+            scale_rows(&mut br, &mut bi, &fr, &fi, rows, p);
+            for k in 0..rows {
+                for j in 0..p {
+                    let (b_r, b_i) = (br2[k * p + j], bi2[k * p + j]);
+                    br2[k * p + j] = fr[j] * b_r - fi[j] * b_i;
+                    bi2[k * p + j] = fr[j] * b_i + fi[j] * b_r;
+                }
+            }
+            assert_eq!(br, br2, "scale re p={p}");
+            assert_eq!(bi, bi2, "scale im p={p}");
+
+            // scan_row_step
+            let (pr, pi) = (g.vec(p), g.vec(p));
+            let (mut cr, mut ci) = (g.vec(p), g.vec(p));
+            let (mut cr2, mut ci2) = (cr.clone(), ci.clone());
+            scan_row_step(&ar, &ai, &pr, &pi, &mut cr, &mut ci);
+            for j in 0..p {
+                let nr = ar[j] * pr[j] - ai[j] * pi[j] + cr2[j];
+                let ni = ar[j] * pi[j] + ai[j] * pr[j] + ci2[j];
+                cr2[j] = nr;
+                ci2[j] = ni;
+            }
+            assert_eq!(cr, cr2, "step re p={p}");
+            assert_eq!(ci, ci2, "step im p={p}");
+
+            // scan_row_resume
+            let (mut sr, mut si) = (g.vec(p), g.vec(p));
+            let (mut rr, mut ri) = (g.vec(p), g.vec(p));
+            let (mut sr2, mut si2) = (sr.clone(), si.clone());
+            let (mut rr2, mut ri2) = (rr.clone(), ri.clone());
+            scan_row_resume(&ar, &ai, &mut sr, &mut si, &mut rr, &mut ri);
+            for j in 0..p {
+                let nr = ar[j] * sr2[j] - ai[j] * si2[j] + rr2[j];
+                let ni = ar[j] * si2[j] + ai[j] * sr2[j] + ri2[j];
+                sr2[j] = nr;
+                si2[j] = ni;
+                rr2[j] = nr;
+                ri2[j] = ni;
+            }
+            assert_eq!((sr, si), (sr2, si2), "resume state p={p}");
+            assert_eq!((rr, ri), (rr2, ri2), "resume row p={p}");
+
+            // combine_row
+            let (lr, li) = (g.vec(p), g.vec(p));
+            let (mut str_, mut sti) = (g.vec(p), g.vec(p));
+            let (mut str2, mut sti2) = (str_.clone(), sti.clone());
+            combine_row(&ar, &ai, &lr, &li, &mut str_, &mut sti);
+            for j in 0..p {
+                let nr = ar[j] * str2[j] - ai[j] * sti2[j] + lr[j];
+                let ni = ar[j] * sti2[j] + ai[j] * str2[j] + li[j];
+                str2[j] = nr;
+                sti2[j] = ni;
+            }
+            assert_eq!((str_, sti), (str2, sti2), "combine p={p}");
+
+            // cmul_row
+            let (mut mr, mut mi) = (g.vec(p), g.vec(p));
+            let (mut mr2, mut mi2) = (mr.clone(), mi.clone());
+            cmul_row(&ar, &ai, &mut mr, &mut mi);
+            for j in 0..p {
+                let nr = ar[j] * mr2[j] - ai[j] * mi2[j];
+                let ni = ar[j] * mi2[j] + ai[j] * mr2[j];
+                mr2[j] = nr;
+                mi2[j] = ni;
+            }
+            assert_eq!((mr, mi), (mr2, mi2), "cmul p={p}");
+
+            // fixup_row
+            let (mut fcr, mut fci) = (g.vec(p), g.vec(p));
+            let (mut xr, mut xi) = (g.vec(p), g.vec(p));
+            let (mut fcr2, mut fci2) = (fcr.clone(), fci.clone());
+            let (mut xr2, mut xi2) = (xr.clone(), xi.clone());
+            fixup_row(&ar, &ai, &mut fcr, &mut fci, &mut xr, &mut xi);
+            for j in 0..p {
+                let nr = fcr2[j] * ar[j] - fci2[j] * ai[j];
+                let ni = fcr2[j] * ai[j] + fci2[j] * ar[j];
+                fcr2[j] = nr;
+                fci2[j] = ni;
+                xr2[j] += nr;
+                xi2[j] += ni;
+            }
+            assert_eq!((fcr, fci), (fcr2, fci2), "fixup carry p={p}");
+            assert_eq!((xr, xi), (xr2, xi2), "fixup x p={p}");
+        }
+    }
+
+    /// Projection block: private per-channel f64 reductions in scalar
+    /// order — exact equality for every (h, p2) block/tail split.
+    #[test]
+    fn project_row_matches_scalar_bit_for_bit() {
+        let mut g = Lcg(11);
+        for &h in &[1usize, 3, 4, 5, 11, 16] {
+            for &p2 in &[1usize, 2, 8, 33] {
+                let ct: Vec<C64> =
+                    (0..h * p2).map(|_| C64::new(g.f32() as f64, g.f32() as f64)).collect();
+                let (xr, xi) = (g.vec(p2), g.vec(p2));
+                let mut y = g.vec(h);
+                let mut y2 = y.clone();
+                project_row(&ct, &xr, &xi, &mut y, h, p2);
+                for r in 0..h {
+                    let mut acc = 0.0f64;
+                    for c in 0..p2 {
+                        let cv = ct[r * p2 + c];
+                        acc += cv.re * xr[c] as f64 - cv.im * xi[c] as f64;
+                    }
+                    y2[r] += 2.0 * acc as f32;
+                }
+                assert_eq!(y, y2, "h={h} p2={p2}");
+            }
+        }
+    }
+
+    /// 64k resumed steps of a running sum (ā = 1, constant drive): the
+    /// drift-prone long-L shape. The lane path must track the scalar path
+    /// exactly at every step — accumulated f32 rounding and all.
+    #[test]
+    fn long_l_running_sum_stays_bit_exact() {
+        let p = 12; // one full block + tail
+        let ar = vec![1.0f32; p];
+        let ai = vec![0.0f32; p];
+        let (mut sr, mut si) = (vec![0.0f32; p], vec![0.0f32; p]);
+        let (mut sr2, mut si2) = (sr.clone(), si.clone());
+        let mut g = Lcg(3);
+        for _ in 0..65536 {
+            let (mut br, mut bi) = (g.vec(p), g.vec(p));
+            for v in br.iter_mut().chain(bi.iter_mut()) {
+                *v *= 1e-3;
+            }
+            let (mut br2, mut bi2) = (br.clone(), bi.clone());
+            scan_row_resume(&ar, &ai, &mut sr, &mut si, &mut br, &mut bi);
+            for j in 0..p {
+                let nr = ar[j] * sr2[j] - ai[j] * si2[j] + br2[j];
+                let ni = ar[j] * si2[j] + ai[j] * sr2[j] + bi2[j];
+                sr2[j] = nr;
+                si2[j] = ni;
+                br2[j] = nr;
+                bi2[j] = ni;
+            }
+            assert_eq!((&sr, &si), (&sr2, &si2));
+        }
+        assert!(sr.iter().any(|v| v.abs() > 1.0), "the sum should have accumulated");
+    }
+}

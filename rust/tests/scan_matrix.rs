@@ -469,6 +469,174 @@ fn fused_auto_prefill_matches_staged_reference() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// In-tile wide path (single-stream): tolerance-pinned vs the staged oracle
+// ---------------------------------------------------------------------------
+
+/// Max relative divergence gate for the wide path: the seeded
+/// chunked-parallel tile scan reassociates the carry, so wide results are
+/// tolerance-equal to the sequential reference, never bit-equal.
+fn assert_rel_close(want: &[f32], got: &[f32], tol: f32, what: &str) {
+    assert_eq!(want.len(), got.len(), "{what}: length mismatch");
+    for (i, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+        let denom = w.abs().max(g.abs()).max(1.0);
+        assert!(
+            (w - g).abs() <= tol * denom,
+            "{what}: drifted past tol={tol:e} at {i}: want {w} got {g}"
+        );
+    }
+}
+
+/// The opt-in wide fused path ([`ForwardOptions::with_wide`]) on a
+/// single stream (B = 1, fewer pipelines than workers): within the
+/// documented 1e-4 relative tolerance of the staged **sequential**
+/// oracle for every tile × thread budget, bit-for-bit identical across
+/// executors at a fixed budget (the in-tile chunking is fixed by the
+/// budget, never the executor), and exactly equal to the sequential
+/// fused path when the budget leaves no leftover workers (t = 1, or
+/// bidirectional t = 2).
+#[test]
+fn fused_wide_single_stream_tracks_staged_sequential() {
+    use s5::ssm::engine::Tiling;
+    use s5::ssm::s5::{S5Config, S5Layer};
+    let pool = Arc::new(WorkerPool::new(3));
+    let mut g = Rng::new(0x51DE);
+    for &bidir in &[false, true] {
+        let layer = S5Layer::init(
+            &S5Config { h: 6, p: 8, j: 1, bidir, ..Default::default() },
+            &mut Rng::new(9),
+        );
+        for &l in &[33usize, 129] {
+            let u: Vec<f32> = (0..l * 6).map(|_| g.normal() as f32).collect();
+            let dts: Vec<f32> = (0..l).map(|_| g.uniform_in(0.3, 2.5) as f32).collect();
+            let staged = ForwardOptions::new().with_tiling(Tiling::Staged);
+            let mut ws = EngineWorkspace::new();
+            let want = layer.apply_batch_opts(&u, 1, l, None, &staged, &mut ws);
+            let want_tv = if bidir {
+                None
+            } else {
+                Some(layer.apply_ssm_batch_opts(&u, 1, l, Some(&dts), &staged, &mut ws))
+            };
+            for &tile in &[1usize, 5, 64, l + 7] {
+                for &t in &[1usize, 2, 8] {
+                    let mut reference: Option<(Vec<f32>, Option<Vec<f32>>)> = None;
+                    for exec in
+                        [ScanExec::Scoped, ScanExec::Pool(pool.clone()), ScanExec::Inline]
+                    {
+                        let ename = format!("{exec:?}");
+                        let tag = format!(
+                            "wide bidir={bidir} L={l} tile={tile} t={t} exec={ename}"
+                        );
+                        let wide = ForwardOptions::new()
+                            .with_wide()
+                            .with_exec(t, exec)
+                            .with_tile(tile);
+                        let mut wsf = EngineWorkspace::new();
+                        let got = layer.apply_batch_opts(&u, 1, l, None, &wide, &mut wsf);
+                        assert_rel_close(&want, &got, 1e-4, &tag);
+                        let got_tv = want_tv.as_ref().map(|want_tv| {
+                            let got_tv = layer.apply_ssm_batch_opts(
+                                &u,
+                                1,
+                                l,
+                                Some(&dts),
+                                &wide,
+                                &mut wsf,
+                            );
+                            assert_rel_close(want_tv, &got_tv, 1e-4, &format!("{tag} TV"));
+                            got_tv
+                        });
+                        // inactive split (no leftover workers) = exactly
+                        // the sequential fused path = the staged oracle
+                        let n_units = if bidir { 2 } else { 1 };
+                        if t <= n_units {
+                            if let Some(i) = bits_equal(&want, &got) {
+                                panic!("{tag}: inactive wide split must be bitwise at {i}");
+                            }
+                        }
+                        // executor invariance at a fixed budget is bitwise
+                        match &reference {
+                            None => reference = Some((got, got_tv)),
+                            Some((w, w_tv)) => {
+                                if let Some(i) = bits_equal(w, &got) {
+                                    panic!("{tag}: executor changed wide bits at {i}");
+                                }
+                                if let (Some(w_tv), Some(got_tv)) = (w_tv, &got_tv) {
+                                    if let Some(i) = bits_equal(w_tv, got_tv) {
+                                        panic!("{tag}: executor changed TV wide bits at {i}");
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Long-L (64k) drift gate for the wide path, against the f64-carry
+/// reference (the PR-5 drift harness): going wide may not add more than
+/// a small multiple of the drift the sequential f32 path already
+/// accumulates, and must stay within 1e-3 of that sequential f32 path
+/// outright. Runs identically under `--features simd` and
+/// `--no-default-features`, so it doubles as the lane-kernel tolerance
+/// suite at depth (bit-exactness of simd-vs-scalar is pinned separately
+/// in the `ssm::simd` unit tests).
+#[test]
+fn fused_wide_long_l_stays_within_drift_tolerance() {
+    use s5::ssm::s5::{S5Config, S5Layer};
+    let layer =
+        S5Layer::init(&S5Config { h: 2, p: 4, j: 1, ..Default::default() }, &mut Rng::new(11));
+    let l = 65536usize;
+    let u = Rng::new(12).normal_vec_f32(l * 2);
+    let mut ws = EngineWorkspace::new();
+    let want64 = layer.apply_batch_opts(
+        &u,
+        1,
+        l,
+        None,
+        &ForwardOptions::new().with_f64_state(),
+        &mut ws,
+    );
+    let seq32 = layer.apply_batch_opts(&u, 1, l, None, &ForwardOptions::new(), &mut ws);
+    let wide32 = layer.apply_batch_opts(
+        &u,
+        1,
+        l,
+        None,
+        &ForwardOptions::new().with_wide().with_exec(8, ScanExec::Scoped),
+        &mut ws,
+    );
+    assert_rel_close(&seq32, &wide32, 1e-3, "wide vs sequential f32 at L=64k");
+    let rel_err = |a: &[f32], b: &[f32]| {
+        a.iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x - y).abs() / x.abs().max(y.abs()).max(1.0))
+            .fold(0.0f32, f32::max)
+    };
+    let err_seq = rel_err(&want64, &seq32);
+    let err_wide = rel_err(&want64, &wide32);
+    assert!(
+        err_wide <= 4.0 * err_seq + 1e-4,
+        "wide drift {err_wide:e} not comparable to sequential f32 drift {err_seq:e}"
+    );
+    // wide is documented as ignored under the f64 carry: bit-for-bit
+    let w64 = layer.apply_batch_opts(
+        &u,
+        1,
+        l,
+        None,
+        &ForwardOptions::new().with_f64_state().with_wide().with_exec(8, ScanExec::Scoped),
+        &mut ws,
+    );
+    // f64 carries are thread-invariant, so only the executor-side shard
+    // count differs — results must match the 1-thread f64 run exactly
+    if let Some(i) = bits_equal(&want64, &w64) {
+        panic!("wide + f64_state must leave the f64 result untouched (diverged at {i})");
+    }
+}
+
 /// The typed `SequenceModel::prefill` surface with pooled options equals
 /// the scoped-option run bit-for-bit (what the server actually calls).
 #[test]
