@@ -82,9 +82,12 @@ pub fn measure<F: FnMut()>(name: &str, f: F) -> Stats {
     stats
 }
 
-/// True when benches should run tiny workloads.
+/// True when benches should run tiny workloads (`S5_BENCH_QUICK=1`).
+/// Routed through [`crate::runtime::envcfg`] like every other knob:
+/// strict 0/1 parse, one warning on anything else, read once per process.
 pub fn quick_mode() -> bool {
-    std::env::var("S5_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+    static CELL: std::sync::OnceLock<Option<bool>> = std::sync::OnceLock::new();
+    crate::runtime::envcfg::env_flag_once(&CELL, "S5_BENCH_QUICK").unwrap_or(false)
 }
 
 /// Paper-vs-measured comparison row for EXPERIMENTS.md-style output.

@@ -209,7 +209,7 @@
 //! | [`data`] | the nine synthetic workload generators + batching |
 //! | [`runtime`] | manifests + native npz store; persistent worker pool; PJRT artifact loading (`pjrt` feature) |
 //! | [`coordinator`] | configs, trainer (`pjrt`), LR schedules, metrics, server |
-//! | [`testing`] | mini property-testing harness (offline: no `proptest`) |
+//! | [`testing`] | mini property-testing harness (offline: no `proptest`) + counting-allocator guard |
 //! | [`bench`] | shared harness for the paper-table benchmark binaries |
 //!
 //! ## Features
@@ -229,6 +229,48 @@
 //! tests and the full equivalence matrix, which CI runs both with and
 //! without the feature); `--no-default-features` pins the plain scalar
 //! oracle build.
+//!
+//! ## Checked invariants
+//!
+//! Five repo-wide source invariants are machine-enforced by the `xtask`
+//! workspace crate — run `cargo run -p xtask -- check` from `rust/`
+//! (CI runs it on every push, next to `cargo clippy --all-targets -- -D
+//! warnings`). They are properties of the *source*, so ordinary tests
+//! cannot pin them:
+//!
+//! * **L1 `pool-threading`** — the thread-spawn primitives
+//!   (`thread::spawn` / `thread::scope` / `thread::Builder`) appear only
+//!   inside `runtime/pool.rs`. Everything else goes through
+//!   [`runtime::pool::spawn_worker`] or the pool's `Executor`, keeping
+//!   the persistent worker pool the single source of parallelism.
+//! * **L2 `env-registry`** — `std::env::var*` reads live only in
+//!   `runtime/envcfg.rs` (use its strict warn-once accessors), and every
+//!   `S5_*` knob string in the sources, benches, tests and examples is
+//!   listed in [`runtime::envcfg::ENV_REGISTRY`] — and vice versa, no
+//!   stale registry rows.
+//! * **L3 `hot-alloc`** — no allocating calls (`Vec::new`, `vec!`,
+//!   `.push(`, `.collect`, `.clone(`, `format!`, …) between
+//!   `// s5:hot-begin` and `// s5:hot-end` fence comments. The fences
+//!   wrap the per-tile kernels in `ssm::scan`, `ssm::simd`,
+//!   `ssm::engine` and `ssm::s5`; the *runtime* twin of this static rule
+//!   is the counting-allocator harness [`testing::alloc_guard`], which
+//!   `tests/alloc_guard.rs` uses to assert the steady-state fused
+//!   forward and `Session::step_into` perform zero heap allocations.
+//! * **L4 `unsafe-safety`** — every `unsafe` token is directly preceded
+//!   by a `// SAFETY:` comment, and the full inventory is mirrored in
+//!   the committed `UNSAFE.md` (regenerate with `cargo run -p xtask --
+//!   write-unsafe`).
+//! * **L5 `simd-symmetry`** — the scalar build stays a complete oracle:
+//!   per file, `#[cfg(feature = "simd")]` and `#[cfg(not(feature =
+//!   "simd"))]` counts match, and every `cfg!(feature = "simd")` is an
+//!   `if` dispatch whose block is followed by scalar fallthrough code
+//!   (or an `else` branch).
+//!
+//! Any line can be exempted with `// s5:allow(<lint>) <reason>` on the
+//! offending line or the line directly above; the reason is mandatory.
+//! CI additionally runs the pool lifecycle and scan kernels under Miri,
+//! and the pool stress test under ThreadSanitizer (nightly jobs whose
+//! logs upload as artifacts).
 
 pub mod bench;
 pub mod coordinator;

@@ -18,7 +18,7 @@
 
 use anyhow::bail;
 use s5::coordinator::server::{NativeInferenceServer, RunningServer, ServerConfig};
-use s5::data::make_task;
+use s5::data::{make_task, TaskGen};
 use s5::rng::Rng;
 use s5::runtime::{Manifest, NpzStore};
 use s5::ssm::api::SequenceModel;
@@ -129,6 +129,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     let task = make_task(&preset)
         .ok_or_else(|| anyhow::anyhow!("no generator for preset {preset:?}"))?;
+    // Shared across the client threads below (the generators are stateless
+    // per-sample; `TaskGen: Send + Sync`).
+    let task: Arc<dyn TaskGen> = Arc::from(task);
     let server = match engine.as_str() {
         "native" => {
             // Serve the pure-Rust batched engine through the unified
@@ -189,20 +192,27 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     info!("server up ({engine}); firing {n_requests} concurrent requests");
 
     let t0 = std::time::Instant::now();
-    let lat: Vec<f64> = std::thread::scope(|s| {
-        let mut joins = Vec::new();
-        for i in 0..n_requests {
-            let h = handle.clone();
-            let task = &task;
-            joins.push(s.spawn(move || {
-                let mut rng = Rng::new(i as u64);
-                let ex = task.sample(&mut rng);
-                let resp = h.infer(ex.x).expect("infer");
-                resp.total_secs
-            }));
-        }
-        joins.into_iter().map(|j| j.join().unwrap()).collect()
-    });
+    // Named worker threads via runtime::pool (lint L1: no raw
+    // thread::spawn/scope outside the pool module); latencies come back
+    // over a channel since the clients outlive this stack frame's borrows.
+    let (lat_tx, lat_rx) = std::sync::mpsc::channel();
+    let mut joins = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let h = handle.clone();
+        let task = Arc::clone(&task);
+        let lat_tx = lat_tx.clone();
+        joins.push(s5::runtime::pool::spawn_worker(&format!("serve-client-{i}"), move || {
+            let mut rng = Rng::new(i as u64);
+            let ex = task.sample(&mut rng);
+            let resp = h.infer(ex.x).expect("infer");
+            let _ = lat_tx.send(resp.total_secs);
+        }));
+    }
+    drop(lat_tx);
+    let lat: Vec<f64> = lat_rx.iter().collect();
+    for j in joins {
+        j.join().expect("serve client thread panicked");
+    }
     let wall = t0.elapsed().as_secs_f64();
     let stats = s5::util::Stats::from(&lat);
     println!(

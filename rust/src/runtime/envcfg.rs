@@ -19,6 +19,23 @@
 
 use std::sync::OnceLock;
 
+// s5:env-registry-begin
+/// Every `S5_*` environment knob the repo reads, with what it controls.
+/// This table is the registry lint L2 (`env-registry`, see `xtask`)
+/// cross-checks: a knob string used anywhere in the sources must appear
+/// here, and every entry here must be used somewhere — so the table can
+/// neither lag behind a new knob nor accumulate stale ones.
+pub const ENV_REGISTRY: &[(&str, &str)] = &[
+    ("S5_TILE_L", "fused-forward L-tile length override (engine auto-tiling)"),
+    ("S5_CACHE_KB", "per-core cache budget in KiB (skips the pointer-chase probe)"),
+    ("S5_POOL_WORKERS", "global worker-pool size override"),
+    ("S5_BENCH_QUICK", "benches: 0/1 — tiny sizes for CI smoke runs"),
+    ("S5_BENCH_JSON", "benches: output path for the scan perf snapshot"),
+    ("S5_BENCH_STEPS", "benches: step-count override for the table benches"),
+    ("S5_ENVCFG_TEST_NEVER_SET", "(tests only) a name no environment ever sets"),
+];
+// s5:env-registry-end
+
 /// Strictly parse one override value: a non-negative decimal integer,
 /// with surrounding ASCII whitespace tolerated. Returns a human-readable
 /// rejection reason otherwise.
@@ -61,6 +78,41 @@ pub fn env_usize_once(
             }
         }
     })
+}
+
+/// Read a boolean toggle, once per process. Accepts exactly `0` / `1`
+/// (surrounding whitespace tolerated) — same strictness contract as
+/// [`env_usize_once`]: anything else warns once on stderr and returns
+/// `None` so the caller's default applies (`S5_BENCH_QUICK=yes` silently
+/// running the full bench matrix would be the quiet-misconfiguration bug
+/// all over again).
+pub fn env_flag_once(cell: &OnceLock<Option<bool>>, name: &str) -> Option<bool> {
+    *cell.get_or_init(|| {
+        let raw = match std::env::var(name) {
+            Ok(v) => v,
+            Err(std::env::VarError::NotPresent) => return None,
+            Err(std::env::VarError::NotUnicode(_)) => {
+                eprintln!("{name} is not valid UTF-8; expected 0 or 1 — using the default");
+                return None;
+            }
+        };
+        match raw.trim() {
+            "0" => Some(false),
+            "1" => Some(true),
+            _ => {
+                eprintln!("{name}={raw:?} ignored; expected 0 or 1 — using the default");
+                None
+            }
+        }
+    })
+}
+
+/// Is the variable present in the environment at all (any value)?
+/// For tests and diagnostics that only need to know whether an override
+/// is active — keeps raw `std::env::var` probes out of the rest of the
+/// crate (lint L2).
+pub fn is_set(name: &str) -> bool {
+    std::env::var_os(name).is_some()
 }
 
 #[cfg(test)]
@@ -106,5 +158,19 @@ mod tests {
             env_usize_once(&CELL, "S5_ENVCFG_TEST_NEVER_SET", "a number"),
             None
         );
+    }
+
+    #[test]
+    fn flag_and_presence_probes_on_an_unset_variable() {
+        static CELL: OnceLock<Option<bool>> = OnceLock::new();
+        assert_eq!(env_flag_once(&CELL, "S5_ENVCFG_TEST_NEVER_SET"), None);
+        assert_eq!(env_flag_once(&CELL, "S5_ENVCFG_TEST_NEVER_SET"), None);
+        assert!(!is_set("S5_ENVCFG_TEST_NEVER_SET"));
+        // The registry lists every knob exactly once.
+        let mut names: Vec<&str> = ENV_REGISTRY.iter().map(|(n, _)| *n).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate registry entries");
     }
 }

@@ -351,6 +351,21 @@ pub trait SequenceModel: Send + Sync {
         opts: &ForwardOptions,
     ) -> Vec<f32>;
 
+    /// [`step`](SequenceModel::step) into a caller-provided output row
+    /// (`d_output`). Default: the allocating `step` copied into `out`;
+    /// models override to make the steady-state streaming path
+    /// allocation-free (S5 does — pinned by `tests/alloc_guard.rs`).
+    fn step_into(
+        &self,
+        state: &mut SessionState,
+        u: &[f32],
+        dt: Option<f32>,
+        opts: &ForwardOptions,
+        out: &mut [f32],
+    ) {
+        out.copy_from_slice(&self.step(state, u, dt, opts));
+    }
+
     /// Advance the state without materializing an output row — the
     /// prefill fast path (a classifier head projection per swallowed
     /// token would be pure waste). Default: `step` with the output
@@ -410,6 +425,15 @@ impl Session {
     pub fn step(&mut self, u: &[f32]) -> Vec<f32> {
         self.steps += 1;
         self.model.step(&mut self.state, u, None, &self.opts)
+    }
+
+    /// Feed one observation, writing the output row into `out`
+    /// (`d_output`). The allocation-free form of [`step`](Session::step):
+    /// for models that override [`SequenceModel::step_into`] (S5 does), a
+    /// warmed-up session performs zero heap allocations per step.
+    pub fn step_into(&mut self, u: &[f32], out: &mut [f32]) {
+        self.steps += 1;
+        self.model.step_into(&mut self.state, u, None, &self.opts, out);
     }
 
     /// Feed one irregularly-sampled observation (Δt multiplier `dt`).

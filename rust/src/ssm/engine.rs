@@ -59,6 +59,10 @@ pub fn auto_threads(requested: usize) -> usize {
     }
 }
 
+// s5:hot-begin — the par_zip shard dispatchers run once per layer per
+// forward on the serving path; they must never allocate (lint L3, and the
+// alloc_guard steady-state tests in tests/alloc_guard.rs).
+
 /// Shard `n` strided items across up to `threads` workers: calls
 /// `f(item_index, &src[i·ss..], &mut dst[i·ds..])` for every item, with
 /// disjoint mutable destination slices. `src` and `dst` may be longer than
@@ -246,6 +250,8 @@ pub(crate) fn par_zip2<T, U, V, F>(
             }),
     );
 }
+
+// s5:hot-end
 
 /// Grow (never shrink) a buffer to at least `n` elements.
 pub(crate) fn grow<T: Clone + Default>(buf: &mut Vec<T>, n: usize) {
@@ -851,7 +857,7 @@ mod tests {
         assert_eq!(Tiling::Staged.resolve(8, 8, false), None);
         assert_eq!(Tiling::Fixed(0).resolve(8, 8, false), None);
         assert_eq!(Tiling::Fixed(17).resolve(8, 8, false), Some(17));
-        if std::env::var("S5_TILE_L").is_err() {
+        if !crate::runtime::envcfg::is_set("S5_TILE_L") {
             assert_eq!(Tiling::Auto.resolve(8, 8, false), Some(auto_tile_l(8, 8, false)));
         }
     }

@@ -187,7 +187,24 @@ impl S5Layer {
         timescale: f64,
         dt_k: Option<f32>,
     ) -> Vec<f32> {
+        let mut y = vec![0.0f32; self.h];
+        self.step_ssm_into(state, u, timescale, dt_k, &mut y);
+        y
+    }
+
+    /// [`step_ssm`](S5Layer::step_ssm) into a caller-provided output row —
+    /// the allocation-free form the steady-state streaming path uses (the
+    /// counting-allocator harness in `tests/alloc_guard.rs` pins it).
+    pub fn step_ssm_into(
+        &self,
+        state: &mut LayerState,
+        u: &[f32],
+        timescale: f64,
+        dt_k: Option<f32>,
+        y: &mut [f32],
+    ) {
         assert_eq!(u.len(), self.h);
+        assert_eq!(y.len(), self.h);
         assert_eq!(self.c_tilde.len(), 1, "bidirectional layers cannot stream");
         // dt_k = None means a *regular* step (Δt multiplier 1), matching the
         // offline convention where omitted dts ≡ all-ones — so a regular
@@ -223,7 +240,6 @@ impl S5Layer {
         // the offline `project_seq` + `feedthrough_seq`, so one online step
         // equals one row of the offline sequential scan bit-for-bit.
         let ct = &self.c_tilde[0];
-        let mut y = vec![0.0f32; self.h];
         for r in 0..self.h {
             let mut acc = 0.0f64;
             for c in 0..self.p2 {
@@ -232,7 +248,6 @@ impl S5Layer {
             }
             y[r] = 2.0 * acc as f32 + self.d[r] * u[r];
         }
-        y
     }
 
     /// One online *layer* step: pre-norm → SSM step → activation → residual.
@@ -243,19 +258,39 @@ impl S5Layer {
         timescale: f64,
         dt_k: Option<f32>,
     ) -> Vec<f32> {
+        let mut x = u.to_vec();
         let mut v = vec![0.0f32; self.h];
-        layer_norm_row(u, &self.norm_scale, &self.norm_bias, &mut v);
-        let y = self.step_ssm(state, &v, timescale, dt_k);
-        let mut out = vec![0.0f32; self.h];
-        let g: Vec<f32> = y.iter().map(|&x| gelu(x)).collect();
+        let mut y = vec![0.0f32; self.h];
+        self.step_into(state, &mut x, timescale, dt_k, &mut v, &mut y);
+        x
+    }
+
+    /// [`step`](S5Layer::step) in place: `x` holds the layer input on entry
+    /// and the layer output (residual applied) on exit; `v` and `y` are
+    /// H-length scratch rows lent by the caller. Identical FP op order to
+    /// the allocating wrapper — the gelu runs in place on `y` and the gate
+    /// reads the already-activated row, exactly like the old `g` vector.
+    pub fn step_into(
+        &self,
+        state: &mut LayerState,
+        x: &mut [f32],
+        timescale: f64,
+        dt_k: Option<f32>,
+        v: &mut [f32],
+        y: &mut [f32],
+    ) {
+        layer_norm_row(x, &self.norm_scale, &self.norm_bias, v);
+        self.step_ssm_into(state, v, timescale, dt_k, y);
+        for g in y.iter_mut() {
+            *g = gelu(*g);
+        }
         for r in 0..self.h {
             let mut lin = 0.0f32;
             for c in 0..self.h {
-                lin += self.gate_w[r * self.h + c] * g[c];
+                lin += self.gate_w[r * self.h + c] * y[c];
             }
-            out[r] = u[r] + g[r] * sigmoid(lin);
+            x[r] += y[r] * sigmoid(lin);
         }
-        out
     }
 }
 
@@ -268,12 +303,12 @@ pub struct S5StreamState {
     states: Vec<LayerState>,
     pool: Vec<f32>,
     steps: usize,
-    /// Scratch for the chunked-prefill fast path ([`push_chunk`]): the
-    /// activation rows plus the fused tile planes, reused across chunks
-    /// so steady-state prefills allocate nothing. Empty until the first
-    /// chunked prefill — pure per-token streaming never touches it — and
-    /// dropped on [`reset`] so pooled idle sessions don't retain the
-    /// high-water planes of their largest past prefill.
+    /// Scratch shared by the chunked-prefill fast path ([`push_chunk`])
+    /// and the per-token path ([`push`], which only uses the H-length
+    /// activation rows): reused across calls so steady-state streaming
+    /// and prefills allocate nothing. Dropped on [`reset`] so pooled idle
+    /// sessions don't retain the high-water planes of their largest past
+    /// prefill.
     ///
     /// [`push_chunk`]: S5StreamState::push_chunk
     /// [`reset`]: S5StreamState::reset
@@ -308,23 +343,33 @@ impl S5StreamState {
 
     /// Feed one observation (d_in); updates all layer states. `dt` is the
     /// per-step Δt multiplier for irregular sampling (§6.3).
+    ///
+    /// Runs through the workspace's activation rows via
+    /// [`S5Layer::step_into`], so steady-state streaming performs no
+    /// allocation (pinned by `tests/alloc_guard.rs`).
     pub fn push(&mut self, m: &S5Model, u: &[f32], timescale: f64, dt: Option<f32>) {
         assert_eq!(u.len(), m.d_in);
-        let mut x = vec![0.0f32; m.h];
-        for r in 0..m.h {
+        let h = m.h;
+        let S5StreamState { states, pool, ws, steps } = self;
+        let EngineWorkspace { x, v, y, .. } = ws;
+        grow(x, h);
+        grow(v, h);
+        grow(y, h);
+        let (x, v, y) = (&mut x[..h], &mut v[..h], &mut y[..h]);
+        for r in 0..h {
             let mut acc = m.enc_b[r];
             for c in 0..m.d_in {
                 acc += m.enc_w[r * m.d_in + c] * u[c];
             }
             x[r] = acc;
         }
-        for (layer, state) in m.layers.iter().zip(self.states.iter_mut()) {
-            x = layer.step(state, &x, timescale, dt);
+        for (layer, state) in m.layers.iter().zip(states.iter_mut()) {
+            layer.step_into(state, x, timescale, dt, v, y);
         }
-        for r in 0..m.h {
-            self.pool[r] += x[r];
+        for r in 0..h {
+            pool[r] += x[r];
         }
-        self.steps += 1;
+        *steps += 1;
     }
 
     /// Chunked prefill: swallow `l` regular (Δt = 1) observations through
@@ -405,7 +450,7 @@ impl S5StreamState {
                 1,    // in-tile width 1: keep the bit-for-bit step-replay pin
                 &mut scan.f_workers(1)[0],
             );
-            layer.gate_residual_seq(&y[..n], &mut x[..n], l);
+            layer.gate_residual_seq(&y[..n], &mut x[..n], l, &mut v[..h]);
         }
         for k in 0..l {
             for r in 0..h {
@@ -422,8 +467,16 @@ impl S5StreamState {
     /// forward bit-for-bit on the sequential scan path — with no per-call
     /// pool clone on the streaming hot path.
     pub fn logits(&self, m: &S5Model) -> Vec<f32> {
-        let denom = self.steps.max(1) as f32;
         let mut out = vec![0.0f32; m.classes];
+        self.logits_into(m, &mut out);
+        out
+    }
+
+    /// [`logits`](S5StreamState::logits) into a caller-provided row — the
+    /// allocation-free form [`crate::ssm::api::Session::step_into`] drives.
+    pub fn logits_into(&self, m: &S5Model, out: &mut [f32]) {
+        assert_eq!(out.len(), m.classes);
+        let denom = self.steps.max(1) as f32;
         for r in 0..m.classes {
             let mut acc = m.dec_b[r];
             for c in 0..m.h {
@@ -431,7 +484,6 @@ impl S5StreamState {
             }
             out[r] = acc;
         }
-        out
     }
 
     /// Observations consumed since the last reset.

@@ -251,6 +251,11 @@ impl S5Layer {
         }
     }
 
+    // s5:hot-begin — per-tile drive/scale/project kernels, the norm/gate
+    // stages and the fused tile pipeline: everything here runs per layer
+    // per forward on the serving path and works strictly in caller-owned
+    // scratch (lint L3; runtime twin in tests/alloc_guard.rs).
+
     /// Planar reversed-time drive with the input scaling folded in
     /// (mirrors [`S5Layer::drive_rev_seq`]).
     fn drive_rev_seq_planar(
@@ -442,9 +447,14 @@ impl S5Layer {
 
     /// GELU → weighted-sigmoid gate → residual, in place over the layer
     /// input `x` (reads SSM output `y`): x_k ← x_k + g ∘ σ(W g).
-    pub(crate) fn gate_residual_seq(&self, y: &[f32], x: &mut [f32], l: usize) {
+    ///
+    /// `g` is caller-owned scratch for one GELU row (≥ `h` elements, any
+    /// contents) — this runs per layer per forward on the serving path
+    /// and must not allocate (lint L3 / the alloc_guard tests); callers
+    /// lend a dead workspace row.
+    pub(crate) fn gate_residual_seq(&self, y: &[f32], x: &mut [f32], l: usize, g: &mut [f32]) {
         let h = self.h;
-        let mut g = vec![0.0f32; h];
+        let g = &mut g[..h];
         for k in 0..l {
             for c in 0..h {
                 g[c] = gelu(y[k * h + c]);
@@ -762,6 +772,9 @@ impl S5Layer {
         }
     }
 
+    // s5:hot-end — apply_ssm_fused below owns the one sanctioned
+    // multi-shard unit-list allocation (O(shards) boxed dispatch).
+
     /// The cache-blocked fused SSM path (planar layout, the default):
     /// every (sequence, direction) runs as an independent pipeline of
     /// L-tiles via [`S5Layer::fused_unit`], so `SsmBuffers` holds
@@ -862,24 +875,93 @@ impl S5Layer {
             grow(y2, batch * sh);
         }
 
-        // Build the (sequence × direction) unit list: disjoint borrows of
-        // tile planes, carry states and output rows. Forward units write
-        // y; backward units write the y2 accumulator plane, summed (then
-        // feedthrough'd) in the combine pass below — the staged op order.
-        let mut units: Vec<FusedUnit<'_>> = Vec::with_capacity(n_units);
-        {
-            let mut dr_it = bu_re[..n_units * tcp2].chunks_mut(tcp2);
-            let mut di_it = bu_im[..n_units * tcp2].chunks_mut(tcp2);
-            let mut sr_it = state_re[..n_units * p2].chunks_mut(p2);
-            let mut si_it = state_im[..n_units * p2].chunks_mut(p2);
-            let mut s64r_it =
-                if f64_state { Some(state64_re[..n_units * p2].chunks_mut(p2)) } else { None };
-            let mut s64i_it =
-                if f64_state { Some(state64_im[..n_units * p2].chunks_mut(p2)) } else { None };
-            let mut tvr_it =
-                if dts.is_some() { Some(a_tv_re[..batch * tcp2].chunks_mut(tcp2)) } else { None };
-            let mut tvi_it =
-                if dts.is_some() { Some(a_tv_im[..batch * tcp2].chunks_mut(tcp2)) } else { None };
+        // Shard the pipelines across the executor. The decomposition is
+        // fixed by the thread budget (never the executor), and each unit
+        // runs its tiles in order, so results are invariant to both (with
+        // an in-tile budget the chunking inside each tile is likewise
+        // fixed by `inner`, never by the executor). Each shard carries a
+        // pooled scratch Vec for the chunked scan's summary rows (unused,
+        // and untouched, when `inner == 1`).
+        let shards = t.max(1).min(n_units);
+        let fold = !bidir;
+        if inner > 1 {
+            // pre-size so the steady state never allocates: shard i's Vec
+            // is sized for t/(i+1) chunks ≥ the `inner` chunks it needs
+            scan.reserve_planar(p2, t);
+        }
+        // The unit planes: disjoint borrows of tile buffers, carry states
+        // and output rows. Forward units write y; backward units write the
+        // y2 accumulator plane, summed (then feedthrough'd) in the combine
+        // pass below — the staged op order.
+        let mut dr_it = bu_re[..n_units * tcp2].chunks_mut(tcp2);
+        let mut di_it = bu_im[..n_units * tcp2].chunks_mut(tcp2);
+        let mut sr_it = state_re[..n_units * p2].chunks_mut(p2);
+        let mut si_it = state_im[..n_units * p2].chunks_mut(p2);
+        let mut s64r_it =
+            if f64_state { Some(state64_re[..n_units * p2].chunks_mut(p2)) } else { None };
+        let mut s64i_it =
+            if f64_state { Some(state64_im[..n_units * p2].chunks_mut(p2)) } else { None };
+        let mut tvr_it =
+            if dts.is_some() { Some(a_tv_re[..batch * tcp2].chunks_mut(tcp2)) } else { None };
+        let mut tvi_it =
+            if dts.is_some() { Some(a_tv_im[..batch * tcp2].chunks_mut(tcp2)) } else { None };
+        if shards <= 1 {
+            // Single-shard regime: the sequential default, and the B = 1
+            // unidirectional serving shape on any backend. Run each unit
+            // as it is assembled — no unit list, no boxed dispatch; after
+            // warmup this path allocates nothing (tests/alloc_guard.rs
+            // pins it). Unit order, tile order and scratch handoff are
+            // identical to the sharded path below.
+            let w = &mut scan.f_workers(1)[0];
+            for (b, yseq) in y[..batch * sh].chunks_mut(sh).enumerate() {
+                let mut unit = FusedUnit {
+                    dir: 0,
+                    useq: &u[b * sh..(b + 1) * sh],
+                    dseq: dts.map(|dv| &dv[b * l..(b + 1) * l]),
+                    yseq,
+                    dr: dr_it.next().unwrap(),
+                    di: di_it.next().unwrap(),
+                    tv: match (&mut tvr_it, &mut tvi_it) {
+                        (Some(r), Some(i)) => Some((r.next().unwrap(), i.next().unwrap())),
+                        _ => None,
+                    },
+                    sr: sr_it.next().unwrap(),
+                    si: si_it.next().unwrap(),
+                    s64: match (&mut s64r_it, &mut s64i_it) {
+                        (Some(r), Some(i)) => Some((r.next().unwrap(), i.next().unwrap())),
+                        _ => None,
+                    },
+                };
+                self.fused_unit(
+                    &mut unit, l, tcap, &d.a_re, &d.a_im, &d.f_re, &d.f_im, &d.f64s, &d.base_dt,
+                    backend, false, fold, inner, w,
+                );
+            }
+            if bidir {
+                for (b, yseq) in y2[..batch * sh].chunks_mut(sh).enumerate() {
+                    let mut unit = FusedUnit {
+                        dir: 1,
+                        useq: &u[b * sh..(b + 1) * sh],
+                        dseq: None,
+                        yseq,
+                        dr: dr_it.next().unwrap(),
+                        di: di_it.next().unwrap(),
+                        tv: None,
+                        sr: sr_it.next().unwrap(),
+                        si: si_it.next().unwrap(),
+                        s64: match (&mut s64r_it, &mut s64i_it) {
+                            (Some(r), Some(i)) => Some((r.next().unwrap(), i.next().unwrap())),
+                            _ => None,
+                        },
+                    };
+                    self.fused_unit(
+                        &mut unit, l, tcap, &d.a_re, &d.a_im, &d.f_re, &d.f_im, &d.f64s,
+                        &d.base_dt, backend, false, fold, inner, w,
+                    );
+                }
+            }
+        } else {
+            let mut units: Vec<FusedUnit<'_>> = Vec::with_capacity(n_units);
             for (b, yseq) in y[..batch * sh].chunks_mut(sh).enumerate() {
                 units.push(FusedUnit {
                     dir: 0,
@@ -919,34 +1001,19 @@ impl S5Layer {
                     });
                 }
             }
-        }
-
-        // Shard the pipelines across the executor. The decomposition is
-        // fixed by the thread budget (never the executor), and each unit
-        // runs its tiles in order, so results are invariant to both (with
-        // an in-tile budget the chunking inside each tile is likewise
-        // fixed by `inner`, never by the executor). Each shard carries a
-        // pooled scratch Vec for the chunked scan's summary rows (unused,
-        // and untouched, when `inner == 1`).
-        let shards = t.max(1).min(n_units);
-        let per = n_units.div_ceil(shards);
-        let fold = !bidir;
-        if inner > 1 {
-            // pre-size so the steady state never allocates: shard i's Vec
-            // is sized for t/(i+1) chunks ≥ the `inner` chunks it needs
-            scan.reserve_planar(p2, t);
-        }
-        let workers = scan.f_workers(shards);
-        ex.run_tasks(units.chunks_mut(per).zip(workers.iter_mut()).map(|(chunk, w)| {
-            move || {
-                for unit in chunk.iter_mut() {
-                    self.fused_unit(
-                        unit, l, tcap, &d.a_re, &d.a_im, &d.f_re, &d.f_im, &d.f64s, &d.base_dt,
-                        backend, false, fold, inner, w,
-                    );
+            let per = n_units.div_ceil(shards);
+            let workers = scan.f_workers(shards);
+            ex.run_tasks(units.chunks_mut(per).zip(workers.iter_mut()).map(|(chunk, w)| {
+                move || {
+                    for unit in chunk.iter_mut() {
+                        self.fused_unit(
+                            unit, l, tcap, &d.a_re, &d.a_im, &d.f_re, &d.f_im, &d.f64s,
+                            &d.base_dt, backend, false, fold, inner, w,
+                        );
+                    }
                 }
-            }
-        }));
+            }));
+        }
 
         if bidir {
             // combine: y += backward projection, then the feedthrough —
@@ -1289,8 +1356,10 @@ impl S5Layer {
         self.apply_ssm_core(
             &v[..n], batch, l, timescale, dts, backend, policy, slot, disc, ssm, y2, &mut y[..n],
         );
-        par_zip(ex, t, &y[..n], sh, x, sh, batch, |_, yseq, xseq| {
-            self.gate_residual_seq(yseq, xseq, l);
+        // `v` (the normed input) is dead once the SSM ran; its rows serve
+        // as the per-sequence GELU scratch so the gate stays alloc-free.
+        par_zip2(ex, t, &y[..n], sh, x, sh, v, sh, batch, |_, yseq, xseq, vseq| {
+            self.gate_residual_seq(yseq, xseq, l, vseq);
         });
     }
 
@@ -1568,9 +1637,12 @@ impl S5Model {
     }
 
     /// Mean-pool + linear decoder for one sequence: x (L × H) → logits.
-    fn pool_decode_seq(&self, x: &[f32], l: usize, logits: &mut [f32]) {
+    /// `pooled` is caller-owned scratch (≥ `h` elements, any contents) so
+    /// the decode stage stays alloc-free on the serving path.
+    fn pool_decode_seq(&self, x: &[f32], l: usize, logits: &mut [f32], pooled: &mut [f32]) {
         let h = self.h;
-        let mut pooled = vec![0.0f32; h];
+        let pooled = &mut pooled[..h];
+        pooled.fill(0.0);
         for k in 0..l {
             for r in 0..h {
                 pooled[r] += x[k * h + r];
@@ -1662,8 +1734,12 @@ impl S5Model {
                 x, v, y, y2, ssm, li, disc, batch, l, timescale, None, backend, policy,
             );
         }
-        par_zip(ex, t, &x[..n], l * h, out, self.classes, batch, |_, xseq, oseq| {
-            self.pool_decode_seq(xseq, l, oseq);
+        // `v` is dead after the last layer; lend its rows to the decoder
+        // as the mean-pool scratch (alloc-free decode, lint L3's runtime
+        // twin in tests/alloc_guard.rs).
+        grow(v, n);
+        par_zip2(ex, t, &x[..n], l * h, out, self.classes, v, l * h, batch, |_, xseq, oseq, vseq| {
+            self.pool_decode_seq(xseq, l, oseq, vseq);
         });
     }
 
@@ -1751,11 +1827,28 @@ impl SequenceModel for S5Model {
         dt: Option<f32>,
         opts: &ForwardOptions,
     ) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.classes];
+        self.step_into(state, u, dt, opts, &mut out);
+        out
+    }
+
+    /// Allocation-free step: push runs through the stream state's
+    /// workspace rows and the logits land in `out`, so after warmup a
+    /// steady-state step performs zero heap allocations (pinned by the
+    /// counting-allocator harness in `tests/alloc_guard.rs`).
+    fn step_into(
+        &self,
+        state: &mut SessionState,
+        u: &[f32],
+        dt: Option<f32>,
+        opts: &ForwardOptions,
+        out: &mut [f32],
+    ) {
         let st = state
             .downcast_mut::<S5StreamState>()
             .expect("state is not an S5StreamState");
         st.push(self, u, opts.timescale, dt);
-        st.logits(self)
+        st.logits_into(self, out);
     }
 
     /// Prefill fast path: advance the layer stack and the pool without

@@ -86,6 +86,9 @@ use std::sync::Arc;
 // ---------------------------------------------------------------------------
 // In-place kernels
 // ---------------------------------------------------------------------------
+// s5:hot-begin — the sequential / tile-resumable scan kernels are the
+// innermost loops of both the fused forward and streaming decode; all
+// scratch is caller-owned (lint L3, plus the alloc_guard runtime tests).
 
 /// One streaming recurrence step: `state ← a ∘ state + b` (elementwise).
 ///
@@ -444,6 +447,9 @@ pub fn chunk_scratch_len(p: usize, threads: usize) -> usize {
 pub fn planar_scratch_len(p: usize, threads: usize) -> usize {
     6 * threads.max(1) * p + 2 * p
 }
+
+// s5:hot-end — the spawn-per-call convenience wrappers below allocate
+// their own chunk summaries by design; the pooled forms stay fenced above.
 
 /// Parallel chunked TI scan, in place, over exactly `threads` chunks
 /// (clamped to L). Three phases (classic two-pass prefix scan, Blelloch

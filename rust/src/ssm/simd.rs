@@ -48,6 +48,9 @@
 
 use crate::num::C64;
 
+// s5:hot-begin — explicit-lane twins of the four hottest planar loops;
+// strictly slice arithmetic over caller-owned planes (lint L3).
+
 /// f32 lane width of the element-wise blocks (two AVX2 `f32x8` registers /
 /// one AVX-512 register worth per re/im pair).
 pub(crate) const LANES: usize = 8;
@@ -335,6 +338,8 @@ pub(crate) fn project_row(
         y[r] += 2.0 * acc as f32;
     }
 }
+
+// s5:hot-end
 
 #[cfg(test)]
 mod tests {

@@ -1,9 +1,115 @@
-//! Mini property-testing harness (the offline build has no `proptest`).
+//! Mini property-testing harness (the offline build has no `proptest`)
+//! plus the counting-allocator harness behind the repo's zero-allocation
+//! invariants.
 //!
 //! [`prop::check`] runs a closure against many deterministically-seeded RNG
 //! streams; a failure reports the seed so the case replays exactly. This is
 //! intentionally shrink-free: generators here draw structured inputs whose
 //! failing seeds are already small enough to debug directly.
+//!
+//! [`alloc_guard`] provides a forwarding `#[global_allocator]` that counts
+//! per-thread heap traffic; `tests/alloc_guard.rs` installs it and asserts
+//! the steady-state fused forward and `Session::step` paths allocate
+//! nothing after warmup.
+
+/// Counting-allocator harness for the zero-allocation invariants.
+///
+/// The steady-state hot paths (the fused batched forward after workspace
+/// warmup, and `Session::step` via the `step_into` chain) are documented
+/// as allocation-free. This module makes that a *tested* property rather
+/// than a code-review one: a dedicated test binary installs
+/// [`CountingAlloc`](alloc_guard::CountingAlloc) as its global allocator
+/// and wraps the hot path in [`assert_no_alloc`](alloc_guard::assert_no_alloc).
+///
+/// Counting is per-thread by design: the pool workers' warmup-era buffers
+/// are owned by the pool, and what the harness pins is the *caller's*
+/// steady-state path. Work handed to the pool is counted on the worker
+/// threads, not the measuring thread — size assertions under test configs
+/// keep those paths single-threaded so the count is meaningful.
+pub mod alloc_guard {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    thread_local! {
+        /// Heap allocations observed on this thread since it started.
+        static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// A `#[global_allocator]` that forwards to [`System`] and counts
+    /// every allocation on the current thread. Frees are not counted:
+    /// the invariant under test is "no new heap traffic", and dropping a
+    /// warmup-era buffer inside a measured window is benign.
+    ///
+    /// Install it in a dedicated test binary — the test harness itself
+    /// allocates freely; only [`measure`]d windows are asserted:
+    ///
+    /// ```ignore
+    /// #[global_allocator]
+    /// static COUNTING: CountingAlloc = CountingAlloc;
+    /// ```
+    ///
+    /// [`measure`]: alloc_guard::measure
+    pub struct CountingAlloc;
+
+    /// Bump this thread's allocation counter.
+    fn count() {
+        // try_with, not with: the allocator can be re-entered during TLS
+        // teardown, where `with` would panic inside alloc — skip those.
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+
+    // SAFETY: every method forwards verbatim to `System`, which upholds
+    // the `GlobalAlloc` contract; the only extra work is a thread-local
+    // counter bump, which never allocates and never unwinds.
+    unsafe impl GlobalAlloc for CountingAlloc {
+        // SAFETY: caller obligations on `layout` pass straight through
+        // to `System::alloc`.
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            count();
+            System.alloc(layout)
+        }
+
+        // SAFETY: caller obligations on `layout` pass straight through
+        // to `System::alloc_zeroed`.
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            count();
+            System.alloc_zeroed(layout)
+        }
+
+        // SAFETY: caller obligations on `ptr`/`layout`/`new_size` pass
+        // straight through to `System::realloc`.
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            count();
+            System.realloc(ptr, layout, new_size)
+        }
+
+        // SAFETY: caller obligations on `ptr`/`layout` pass straight
+        // through to `System::dealloc` (frees are deliberately uncounted).
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    /// Allocations made on this thread while running `f`, plus `f`'s
+    /// result. Reads zero unless [`CountingAlloc`] is the process's
+    /// global allocator.
+    pub fn measure<R>(f: impl FnOnce() -> R) -> (u64, R) {
+        let before = ALLOCS.with(|c| c.get());
+        let out = f();
+        let n = ALLOCS.with(|c| c.get()) - before;
+        (n, out)
+    }
+
+    /// Run `f`, panicking (with `label`) if it allocated on this thread.
+    pub fn assert_no_alloc<R>(label: &str, f: impl FnOnce() -> R) -> R {
+        let (n, out) = measure(f);
+        assert!(
+            n == 0,
+            "{label}: expected zero heap allocations in the measured window, observed {n}"
+        );
+        out
+    }
+}
 
 pub mod prop {
     use crate::rng::Rng;

@@ -1,0 +1,90 @@
+//! Counting-allocator harness: pins the zero-allocation invariants of the
+//! steady-state hot paths — the fused batched forward after workspace
+//! warmup, and `Session::step_into` streaming. Lives in its own test
+//! binary because it installs a `#[global_allocator]`; the other test
+//! binaries keep the untouched system allocator.
+//!
+//! Everything runs on the sequential (threads = 1) reference
+//! configuration: allocation counting is per-thread, so a meaningful
+//! zero-allocation window needs the measured work to stay on the
+//! measuring thread (shards ≤ 1 runs inline, no pool dispatch).
+
+use s5::rng::Rng;
+use s5::ssm::api::{Batch, ForwardOptions, SequenceModel, Session};
+use s5::ssm::engine::EngineWorkspace;
+use s5::ssm::s5::{S5Config, S5Model};
+use s5::testing::alloc_guard::{assert_no_alloc, measure, CountingAlloc};
+use std::sync::Arc;
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+fn model(seed: u64) -> S5Model {
+    let cfg = S5Config { h: 8, p: 8, j: 1, ..Default::default() };
+    S5Model::init(3, 4, 2, &cfg, &mut Rng::new(seed))
+}
+
+/// The guard itself works: it observes a deliberate allocation, and
+/// `assert_no_alloc` trips on one (the lint-harness self-test).
+#[test]
+fn guard_counts_and_trips() {
+    let (n, v) = measure(|| vec![1u8; 4096]);
+    assert!(n >= 1, "allocating a Vec must be observed, got {n}");
+    drop(v);
+    let trip = std::panic::catch_unwind(|| {
+        assert_no_alloc("deliberate allocation", || {
+            std::hint::black_box(vec![2u8; 64]);
+        })
+    });
+    assert!(trip.is_err(), "assert_no_alloc must panic on a deliberate allocation");
+}
+
+/// The fused batched forward allocates only on warmup: once the engine
+/// workspace is grown for a shape, repeat forwards of that shape are
+/// heap-silent — and still produce identical output.
+#[test]
+fn fused_forward_steady_state_is_alloc_free() {
+    let m = model(7);
+    let opts = ForwardOptions::new(); // sequential scan, fused auto-tiled
+    let (b, l, d) = (2usize, 48usize, 3usize);
+    let mut rng = Rng::new(11);
+    let u = rng.normal_vec_f32(b * l * d);
+    let mut ws = EngineWorkspace::new();
+    let mut out = vec![0.0f32; b * 4];
+    for _ in 0..2 {
+        m.prefill_into(Batch::new(&u, b, l, d), &opts, &mut ws, &mut out);
+    }
+    let warm = out.clone();
+    assert_no_alloc("steady-state fused forward", || {
+        m.prefill_into(Batch::new(&u, b, l, d), &opts, &mut ws, &mut out);
+    });
+    assert_eq!(out, warm, "steady-state forward must reproduce the warmup output");
+}
+
+/// A warmed-up streaming session steps without touching the heap, and the
+/// `step_into` path is bit-identical to the allocating `step`.
+#[test]
+fn session_step_steady_state_is_alloc_free() {
+    let m: Arc<dyn SequenceModel> = Arc::new(model(13));
+    let mut fast = Session::new(m.clone(), ForwardOptions::new());
+    let mut oracle = Session::new(m, ForwardOptions::new());
+    let mut rng = Rng::new(17);
+    let mut out = vec![0.0f32; 4];
+    // warmup: grows the stream state's workspace rows
+    for _ in 0..3 {
+        let u = rng.normal_vec_f32(3);
+        fast.step_into(&u, &mut out);
+        assert_eq!(out, oracle.step(&u), "step_into must equal the allocating step");
+    }
+    let u = rng.normal_vec_f32(3);
+    assert_no_alloc("steady-state Session::step_into", || {
+        for _ in 0..8 {
+            fast.step_into(&u, &mut out);
+        }
+    });
+    let mut want = Vec::new();
+    for _ in 0..8 {
+        want = oracle.step(&u);
+    }
+    assert_eq!(out, want, "steady-state steps must match the oracle replay");
+}

@@ -1,0 +1,872 @@
+//! Invariant checker for the s5 repo: `cargo run -p xtask -- check`.
+//!
+//! The engine's performance story rests on a handful of repo-wide
+//! invariants that ordinary tests cannot see (they are properties of the
+//! *source*, not of any one execution). This crate machine-checks them
+//! with a hand-rolled line lexer — no `syn`, no dependencies; the build
+//! container is hermetic — that strips comments, string literals and char
+//! literals from every line of `rust/src`, then pattern-matches the
+//! remaining code text. Five named lints:
+//!
+//! * **`pool-threading` (L1)** — `thread::spawn` / `thread::scope` /
+//!   `thread::Builder` appear only inside `runtime/pool.rs`. Everything
+//!   else must go through [`spawn_worker`]/`Executor` so the persistent
+//!   worker pool stays the single source of parallelism.
+//! * **`env-registry` (L2)** — `std::env::var*` reads live only in
+//!   `runtime/envcfg.rs`, and every `S5_*` knob string found anywhere in
+//!   the sources is listed in the committed registry table between the
+//!   `s5:env-registry-begin` / `-end` markers (and vice versa: no stale
+//!   registry entries).
+//! * **`hot-alloc` (L3)** — no allocating calls (`Vec::new`, `vec!`,
+//!   `.push(`, `.collect`, `.clone(`, `Box::new`, `format!`, …) between
+//!   `// s5:hot-begin` and `// s5:hot-end` fence comments. The fences
+//!   wrap the scan/SIMD/engine tile kernels; the runtime twin of this
+//!   lint is the counting-allocator harness (`s5::testing::alloc_guard`).
+//! * **`unsafe-safety` (L4)** — every `unsafe` token is directly preceded
+//!   by a `// SAFETY:` comment, and the full inventory is mirrored in the
+//!   committed `UNSAFE.md` (regenerate with `cargo run -p xtask --
+//!   write-unsafe`).
+//! * **`simd-symmetry` (L5)** — the scalar build stays a complete oracle:
+//!   per file, `#[cfg(feature = "simd")]` and `#[cfg(not(feature =
+//!   "simd"))]` counts match, and every `cfg!(feature = "simd")` is an
+//!   `if` dispatch whose block is followed by scalar fallthrough code
+//!   (or an `else`).
+//!
+//! Any line can be exempted with `// s5:allow(<lint>) <reason>` on the
+//! offending line or the line directly above; the reason is mandatory.
+//!
+//! [`spawn_worker`]: ../s5/runtime/pool/fn.spawn_worker.html
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The lint catalogue: `(name, what it enforces)`.
+pub const LINTS: &[(&str, &str)] = &[
+    ("pool-threading", "L1: thread spawn primitives only inside runtime/pool.rs"),
+    ("env-registry", "L2: env reads only in runtime/envcfg.rs; S5_* knobs match the registry"),
+    ("hot-alloc", "L3: no allocating calls inside // s5:hot-begin / // s5:hot-end fences"),
+    ("unsafe-safety", "L4: every `unsafe` has a // SAFETY: comment; UNSAFE.md is in sync"),
+    ("simd-symmetry", "L5: every simd feature gate has a scalar twin"),
+];
+
+/// One lint violation (or checker-internal error such as an unbalanced
+/// fence) at a source location. Line numbers are 1-based.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub lint: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}:{}: {}", self.lint, self.file, self.line, self.msg)
+    }
+}
+
+/// One `unsafe` occurrence, for the `UNSAFE.md` inventory.
+#[derive(Debug, Clone)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: usize,
+    /// The trimmed raw source line containing the `unsafe` token.
+    pub text: String,
+}
+
+/// Everything one `run_check` pass produces.
+#[derive(Debug, Default)]
+pub struct CheckResult {
+    pub findings: Vec<Finding>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+    pub files_scanned: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+/// One lexed source line. `code` has the same char length as the raw line
+/// with comments, string-literal contents and char-literal contents
+/// blanked to spaces (string quotes are kept, so `format!("…")` still
+/// shows `format!` and `("")` in code). `comment` is the concatenated
+/// comment text on the line (used for fence / suppression / SAFETY
+/// detection); `strings` holds the contents of string literals that start
+/// or continue on the line (used for the `S5_*` registry scan and for
+/// recognising the `"simd"` feature string).
+#[derive(Debug, Default, Clone)]
+struct Line {
+    raw: String,
+    code: String,
+    comment: String,
+    strings: Vec<String>,
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    /// Block comment, with nesting depth (Rust block comments nest).
+    Block(u32),
+    /// Inside a `"…"` (or `b"…"`) string literal.
+    Str,
+    /// Inside a raw string literal with this many `#`s.
+    RawStr(usize),
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Is `chars[i]` the `r`/`b` opening a raw string literal (`r"`, `r#"`,
+/// `br"`, …)? Requires a non-identifier char before it, so `for r in …`
+/// and identifiers ending in `r` never match.
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return false;
+    }
+    let mut j = i + 1;
+    if chars[i] == 'b' {
+        if chars.get(j) != Some(&'r') {
+            return false;
+        }
+        j += 1;
+    } else if chars[i] != 'r' {
+        return false;
+    }
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+/// For a raw-string opener at `i`, return `(hash_count, index past the
+/// opening quote)`.
+fn raw_string_open(chars: &[char], i: usize) -> (usize, usize) {
+    let mut j = i + 1;
+    if chars[i] == 'b' {
+        j += 1;
+    }
+    let mut h = 0;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+        h += 1;
+    }
+    (h, j + 1)
+}
+
+/// Lex a whole file into per-line `code` / `comment` / `strings` views.
+/// Block comments, plain strings and raw strings may span lines; the
+/// lexer state carries across.
+fn lex(text: &str) -> Vec<Line> {
+    let mut mode = Mode::Code;
+    let mut out = Vec::new();
+    for raw in text.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = vec![' '; chars.len()];
+        let mut comment = String::new();
+        let mut strings = Vec::new();
+        let mut cur = String::new();
+        let mut i = 0;
+        while i < chars.len() {
+            mode = match mode {
+                Mode::Code => {
+                    let c = chars[i];
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        for &cc in &chars[i + 2..] {
+                            comment.push(cc);
+                        }
+                        i = chars.len();
+                        Mode::Code
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        i += 2;
+                        Mode::Block(1)
+                    } else if c == '"' {
+                        code[i] = '"';
+                        i += 1;
+                        Mode::Str
+                    } else if (c == 'r' || c == 'b') && is_raw_string_start(&chars, i) {
+                        let (h, after) = raw_string_open(&chars, i);
+                        code[i] = c;
+                        i = after;
+                        Mode::RawStr(h)
+                    } else if c == 'b' && chars.get(i + 1) == Some(&'"') {
+                        code[i] = 'b';
+                        code[i + 1] = '"';
+                        i += 2;
+                        Mode::Str
+                    } else if c == '\'' {
+                        // Char literal vs lifetime: `'x'` / `'\n'` are
+                        // literals (contents blanked); `'env` is a
+                        // lifetime (left in code).
+                        if chars.get(i + 1) == Some(&'\\') {
+                            code[i] = '\'';
+                            let mut j = i + 2;
+                            while j < chars.len() && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            if j < chars.len() {
+                                code[j] = '\'';
+                            }
+                            i = j + 1;
+                        } else if chars.get(i + 2) == Some(&'\'') {
+                            code[i] = '\'';
+                            code[i + 2] = '\'';
+                            i += 3;
+                        } else {
+                            code[i] = '\'';
+                            i += 1;
+                        }
+                        Mode::Code
+                    } else {
+                        code[i] = c;
+                        i += 1;
+                        Mode::Code
+                    }
+                }
+                Mode::Block(depth) => {
+                    if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        i += 2;
+                        if depth == 1 {
+                            Mode::Code
+                        } else {
+                            Mode::Block(depth - 1)
+                        }
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        i += 2;
+                        Mode::Block(depth + 1)
+                    } else {
+                        comment.push(chars[i]);
+                        i += 1;
+                        Mode::Block(depth)
+                    }
+                }
+                Mode::Str => {
+                    if chars[i] == '\\' {
+                        if let Some(&e) = chars.get(i + 1) {
+                            cur.push(e);
+                        }
+                        i += 2;
+                        Mode::Str
+                    } else if chars[i] == '"' {
+                        code[i] = '"';
+                        i += 1;
+                        strings.push(std::mem::take(&mut cur));
+                        Mode::Code
+                    } else {
+                        cur.push(chars[i]);
+                        i += 1;
+                        Mode::Str
+                    }
+                }
+                Mode::RawStr(h) => {
+                    let closes = chars[i] == '"'
+                        && chars[i + 1..].iter().take(h).filter(|&&c| c == '#').count() == h;
+                    if closes {
+                        code[i] = '"';
+                        i += 1 + h;
+                        strings.push(std::mem::take(&mut cur));
+                        Mode::Code
+                    } else {
+                        cur.push(chars[i]);
+                        i += 1;
+                        Mode::RawStr(h)
+                    }
+                }
+            };
+        }
+        // A literal spanning lines contributes its partial content to
+        // each line it touches.
+        if !cur.is_empty() {
+            strings.push(std::mem::take(&mut cur));
+        }
+        out.push(Line {
+            raw: raw.to_string(),
+            code: code.into_iter().collect(),
+            comment,
+            strings,
+        });
+    }
+    out
+}
+
+/// Does `code` contain `word` with non-identifier chars (or edges) on both
+/// sides? (`unsafe_code` does not contain the word `unsafe`.)
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let i = start + pos;
+        let before_ok = i == 0 || {
+            let c = bytes[i - 1] as char;
+            !is_ident_char(c)
+        };
+        let j = i + word.len();
+        let after_ok = j >= bytes.len() || {
+            let c = bytes[j] as char;
+            !is_ident_char(c)
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        start = i + 1;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Per-file annotations: suppressions and hot fences
+// ---------------------------------------------------------------------------
+
+/// `// s5:allow(<lint>) <reason>` markers; each covers its own line and
+/// the next one (0-based line indices).
+struct Suppressions(BTreeSet<(usize, String)>);
+
+impl Suppressions {
+    fn collect(rel: &str, lines: &[Line], findings: &mut Vec<Finding>) -> Suppressions {
+        let mut set = BTreeSet::new();
+        for (n, line) in lines.iter().enumerate() {
+            let mut rest = line.comment.as_str();
+            while let Some(pos) = rest.find("s5:allow(") {
+                let after = &rest[pos + "s5:allow(".len()..];
+                let Some(close) = after.find(')') else {
+                    findings.push(Finding {
+                        lint: "suppression",
+                        file: rel.to_string(),
+                        line: n + 1,
+                        msg: "malformed s5:allow — missing `)`".to_string(),
+                    });
+                    break;
+                };
+                let name = after[..close].trim().to_string();
+                let reason = after[close + 1..].trim();
+                if name.is_empty() || reason.is_empty() {
+                    findings.push(Finding {
+                        lint: "suppression",
+                        file: rel.to_string(),
+                        line: n + 1,
+                        msg: "s5:allow(<lint>) needs a lint name and a non-empty reason"
+                            .to_string(),
+                    });
+                } else {
+                    set.insert((n, name.clone()));
+                    set.insert((n + 1, name));
+                }
+                rest = &after[close + 1..];
+            }
+        }
+        Suppressions(set)
+    }
+
+    fn allows(&self, n: usize, lint: &str) -> bool {
+        self.0.contains(&(n, lint.to_string()))
+    }
+}
+
+/// `// s5:hot-begin` / `// s5:hot-end` fence ranges (0-based, inclusive of
+/// the marker lines — the markers themselves carry no code).
+fn fence_ranges(rel: &str, lines: &[Line], findings: &mut Vec<Finding>) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut open: Option<usize> = None;
+    for (n, line) in lines.iter().enumerate() {
+        if line.comment.contains("s5:hot-begin") {
+            if open.is_some() {
+                findings.push(Finding {
+                    lint: "fence",
+                    file: rel.to_string(),
+                    line: n + 1,
+                    msg: "nested s5:hot-begin (fences do not nest)".to_string(),
+                });
+            } else {
+                open = Some(n);
+            }
+        }
+        if line.comment.contains("s5:hot-end") {
+            match open.take() {
+                Some(s) => ranges.push((s, n)),
+                None => findings.push(Finding {
+                    lint: "fence",
+                    file: rel.to_string(),
+                    line: n + 1,
+                    msg: "s5:hot-end without a matching s5:hot-begin".to_string(),
+                }),
+            }
+        }
+    }
+    if let Some(s) = open {
+        findings.push(Finding {
+            lint: "fence",
+            file: rel.to_string(),
+            line: s + 1,
+            msg: "unclosed s5:hot-begin".to_string(),
+        });
+    }
+    ranges
+}
+
+// ---------------------------------------------------------------------------
+// Lints
+// ---------------------------------------------------------------------------
+
+const THREAD_PATS: &[&str] = &["thread::spawn", "thread::scope", "thread::Builder"];
+
+fn lint_threads(rel: &str, lines: &[Line], sup: &Suppressions, findings: &mut Vec<Finding>) {
+    if rel.ends_with("runtime/pool.rs") {
+        return;
+    }
+    for (n, line) in lines.iter().enumerate() {
+        for pat in THREAD_PATS {
+            if line.code.contains(pat) && !sup.allows(n, "pool-threading") {
+                findings.push(Finding {
+                    lint: "pool-threading",
+                    file: rel.to_string(),
+                    line: n + 1,
+                    msg: format!(
+                        "`{pat}` outside runtime/pool.rs — use runtime::pool \
+                         (spawn_worker / Executor)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+const ENV_PATS: &[&str] = &["env::var", "env::set_var", "env::remove_var"];
+
+fn lint_env_reads(rel: &str, lines: &[Line], sup: &Suppressions, findings: &mut Vec<Finding>) {
+    if rel.ends_with("runtime/envcfg.rs") {
+        return;
+    }
+    for (n, line) in lines.iter().enumerate() {
+        for pat in ENV_PATS {
+            if line.code.contains(pat) && !sup.allows(n, "env-registry") {
+                findings.push(Finding {
+                    lint: "env-registry",
+                    file: rel.to_string(),
+                    line: n + 1,
+                    msg: format!(
+                        "`{pat}` outside runtime/envcfg.rs — use the envcfg accessors \
+                         (env_usize_once / env_flag_once / is_set)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Allocating calls banned inside hot fences. Substring matches against
+/// lexed code, so comments and strings never trip it; `.clone(` does not
+/// match `.cloned(`.
+const HOT_BANNED: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    "Box::new",
+    "Arc::new",
+    "Rc::new",
+    "String::new",
+    "format!",
+    ".push(",
+    ".collect",
+    ".to_vec",
+    ".clone(",
+    ".to_string",
+    ".to_owned",
+    ".reserve(",
+    ".resize(",
+    ".extend(",
+    "with_capacity",
+];
+
+fn lint_hot_alloc(
+    rel: &str,
+    lines: &[Line],
+    fences: &[(usize, usize)],
+    sup: &Suppressions,
+    findings: &mut Vec<Finding>,
+) {
+    for &(s, e) in fences {
+        for (n, line) in lines.iter().enumerate().take(e + 1).skip(s) {
+            for pat in HOT_BANNED {
+                if line.code.contains(pat) && !sup.allows(n, "hot-alloc") {
+                    findings.push(Finding {
+                        lint: "hot-alloc",
+                        file: rel.to_string(),
+                        line: n + 1,
+                        msg: format!("allocating call `{pat}` inside an s5:hot fence"),
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn lint_unsafe(
+    rel: &str,
+    lines: &[Line],
+    sup: &Suppressions,
+    findings: &mut Vec<Finding>,
+    sites: &mut Vec<UnsafeSite>,
+) {
+    for (n, line) in lines.iter().enumerate() {
+        if !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        sites.push(UnsafeSite {
+            file: rel.to_string(),
+            line: n + 1,
+            text: line.raw.trim().to_string(),
+        });
+        // The contiguous comment block directly above (no blank lines in
+        // between) — or a trailing comment on the line itself — must say
+        // SAFETY:.
+        let mut ok = line.comment.contains("SAFETY:");
+        let mut k = n;
+        while !ok && k > 0 {
+            k -= 1;
+            let above = &lines[k];
+            if !above.code.trim().is_empty() || above.raw.trim().is_empty() {
+                break;
+            }
+            ok = above.comment.contains("SAFETY:");
+        }
+        if !ok && !sup.allows(n, "unsafe-safety") {
+            findings.push(Finding {
+                lint: "unsafe-safety",
+                file: rel.to_string(),
+                line: n + 1,
+                msg: "`unsafe` without a `// SAFETY:` comment directly above".to_string(),
+            });
+        }
+    }
+}
+
+/// Find the line index of the `}` closing the block whose `{` is the
+/// first open brace at/after char `from` on line `n`, plus what (if
+/// anything) follows that `}` on its own line.
+fn block_close(lines: &[Line], n: usize, from: usize) -> Option<(usize, String)> {
+    let mut depth = 0usize;
+    let mut seen_open = false;
+    for (k, line) in lines.iter().enumerate().skip(n) {
+        let code = &line.code;
+        let start = if k == n { from.min(code.len()) } else { 0 };
+        for (ci, c) in code.char_indices() {
+            if ci < start {
+                continue;
+            }
+            if c == '{' {
+                depth += 1;
+                seen_open = true;
+            } else if c == '}' {
+                depth = depth.saturating_sub(1);
+                if seen_open && depth == 0 {
+                    let rest: String = code[ci + c.len_utf8()..].trim().to_string();
+                    return Some((k, rest));
+                }
+            }
+        }
+    }
+    None
+}
+
+fn lint_simd_symmetry(rel: &str, lines: &[Line], sup: &Suppressions, findings: &mut Vec<Finding>) {
+    let simd_str = |l: &Line| l.strings.iter().any(|s| s == "simd");
+    // (a) attribute gates: every #[cfg(feature = "simd")] item needs a
+    // #[cfg(not(feature = "simd"))] scalar twin in the same file.
+    let pos = lines
+        .iter()
+        .filter(|l| l.code.contains("#[cfg(feature =") && simd_str(l))
+        .count();
+    let neg = lines
+        .iter()
+        .filter(|l| l.code.contains("#[cfg(not(feature =") && simd_str(l))
+        .count();
+    if pos != neg {
+        findings.push(Finding {
+            lint: "simd-symmetry",
+            file: rel.to_string(),
+            line: 1,
+            msg: format!(
+                "feature-gate asymmetry: {pos} #[cfg(feature = \"simd\")] vs {neg} \
+                 #[cfg(not(feature = \"simd\"))] — every gated item needs a scalar twin"
+            ),
+        });
+    }
+    // (b) expression gates: cfg!(feature = "simd") must be an `if`
+    // dispatch whose block is followed by the scalar path (code or an
+    // `else` branch) — a bare block at the end of a function means the
+    // scalar build silently does nothing.
+    for (n, line) in lines.iter().enumerate() {
+        let Some(idx) = line.code.find("cfg!(feature =") else {
+            continue;
+        };
+        if !line.strings.iter().any(|s| s == "simd") || sup.allows(n, "simd-symmetry") {
+            continue;
+        }
+        let before = line.code[..idx].trim_end();
+        if !(before.ends_with("if") || before.ends_with("if !")) {
+            findings.push(Finding {
+                lint: "simd-symmetry",
+                file: rel.to_string(),
+                line: n + 1,
+                msg: "cfg!(feature = \"simd\") must be an `if` dispatch with a scalar twin"
+                    .to_string(),
+            });
+            continue;
+        }
+        let Some((close, rest)) = block_close(lines, n, idx) else {
+            findings.push(Finding {
+                lint: "simd-symmetry",
+                file: rel.to_string(),
+                line: n + 1,
+                msg: "unclosed cfg!(feature = \"simd\") dispatch block".to_string(),
+            });
+            continue;
+        };
+        // `} else {` (or trailing code) on the closing line counts as the
+        // scalar continuation; otherwise the next code line must exist
+        // and not immediately close the enclosing item.
+        let mut scalar_follows = !rest.is_empty();
+        let mut k = close + 1;
+        while !scalar_follows && k < lines.len() {
+            let t = lines[k].code.trim();
+            if !t.is_empty() {
+                scalar_follows = t != "}";
+                break;
+            }
+            k += 1;
+        }
+        if !scalar_follows {
+            findings.push(Finding {
+                lint: "simd-symmetry",
+                file: rel.to_string(),
+                line: n + 1,
+                msg: "simd dispatch block has no scalar fallthrough after it".to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// S5_* knob registry cross-check
+// ---------------------------------------------------------------------------
+
+/// Extract `S5_<NAME>` knob names from a string-literal body.
+fn knob_names(s: &str, out: &mut BTreeSet<String>) {
+    let bytes = s.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = s[start..].find("S5_") {
+        let i = start + pos;
+        let mut j = i + 3;
+        while j < bytes.len() && (bytes[j].is_ascii_uppercase() || bytes[j].is_ascii_digit() || bytes[j] == b'_') {
+            j += 1;
+        }
+        if j > i + 3 {
+            out.insert(s[i..j].to_string());
+        }
+        start = j.max(i + 1);
+    }
+}
+
+/// The registry table range in envcfg.rs (0-based, inclusive), if the
+/// markers are present.
+fn registry_range(lines: &[Line]) -> Option<(usize, usize)> {
+    let begin = lines.iter().position(|l| l.comment.contains("s5:env-registry-begin"))?;
+    let end = lines.iter().position(|l| l.comment.contains("s5:env-registry-end"))?;
+    (begin < end).then_some((begin, end))
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+fn rs_files(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let Ok(rd) = fs::read_dir(&dir) else { continue };
+        for entry in rd.flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+fn rel_name(root: &Path, prefix: &str, path: &Path) -> String {
+    let tail = path.strip_prefix(root).unwrap_or(path);
+    let tail = tail.to_string_lossy().replace('\\', "/");
+    if prefix.is_empty() {
+        tail
+    } else {
+        format!("{prefix}/{tail}")
+    }
+}
+
+/// Run every lint over the `.rs` files under `src_dir` (displayed with
+/// `src_prefix`, e.g. `rust/src`). `usage_dirs` are scanned only for
+/// `S5_*` knob strings (benches and tests read registered knobs without
+/// being subject to the source lints).
+pub fn run_check(src_dir: &Path, src_prefix: &str, usage_dirs: &[&Path]) -> CheckResult {
+    let mut res = CheckResult::default();
+    // knob name -> first place it appears in a string literal
+    let mut used: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    // registered knob name -> registry line (in envcfg.rs)
+    let mut registered: BTreeMap<String, usize> = BTreeMap::new();
+    let mut envcfg_rel = String::new();
+
+    for path in rs_files(src_dir) {
+        let rel = rel_name(src_dir, src_prefix, &path);
+        let Ok(text) = fs::read_to_string(&path) else { continue };
+        let lines = lex(&text);
+        res.files_scanned += 1;
+
+        let sup = Suppressions::collect(&rel, &lines, &mut res.findings);
+        let fences = fence_ranges(&rel, &lines, &mut res.findings);
+        lint_threads(&rel, &lines, &sup, &mut res.findings);
+        lint_env_reads(&rel, &lines, &sup, &mut res.findings);
+        lint_hot_alloc(&rel, &lines, &fences, &sup, &mut res.findings);
+        lint_unsafe(&rel, &lines, &sup, &mut res.findings, &mut res.unsafe_sites);
+        lint_simd_symmetry(&rel, &lines, &sup, &mut res.findings);
+
+        // Registry table + knob usage. The registry lines themselves are
+        // excluded from the usage scan (they would trivially satisfy it).
+        let reg = if rel.ends_with("runtime/envcfg.rs") {
+            envcfg_rel = rel.clone();
+            registry_range(&lines)
+        } else {
+            None
+        };
+        if let Some((b, e)) = reg {
+            for (n, line) in lines.iter().enumerate().take(e + 1).skip(b) {
+                let mut names = BTreeSet::new();
+                for s in &line.strings {
+                    knob_names(s, &mut names);
+                }
+                for name in names {
+                    registered.entry(name).or_insert(n + 1);
+                }
+            }
+        }
+        for (n, line) in lines.iter().enumerate() {
+            if let Some((b, e)) = reg {
+                if n >= b && n <= e {
+                    continue;
+                }
+            }
+            let mut names = BTreeSet::new();
+            for s in &line.strings {
+                knob_names(s, &mut names);
+            }
+            for name in names {
+                used.entry(name).or_insert_with(|| (rel.clone(), n + 1));
+            }
+        }
+    }
+
+    for dir in usage_dirs {
+        let prefix = dir
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        for path in rs_files(dir) {
+            let rel = rel_name(dir, &prefix, &path);
+            let Ok(text) = fs::read_to_string(&path) else { continue };
+            for (n, line) in lex(&text).iter().enumerate() {
+                let mut names = BTreeSet::new();
+                for s in &line.strings {
+                    knob_names(s, &mut names);
+                }
+                for name in names {
+                    used.entry(name).or_insert_with(|| (rel.clone(), n + 1));
+                }
+            }
+        }
+    }
+
+    // Cross-check (only when a registry table exists — fixture trees
+    // without an envcfg.rs still get the location lint above).
+    if !registered.is_empty() {
+        for (name, (file, line)) in &used {
+            if !registered.contains_key(name) {
+                res.findings.push(Finding {
+                    lint: "env-registry",
+                    file: file.clone(),
+                    line: *line,
+                    msg: format!(
+                        "knob `{name}` is not listed in the envcfg registry table \
+                         (// s5:env-registry-begin)"
+                    ),
+                });
+            }
+        }
+        for (name, line) in &registered {
+            if !used.contains_key(name) {
+                res.findings.push(Finding {
+                    lint: "env-registry",
+                    file: envcfg_rel.clone(),
+                    line: *line,
+                    msg: format!("registry entry `{name}` is referenced nowhere — stale?"),
+                });
+            }
+        }
+    }
+
+    res
+}
+
+/// Render the committed `UNSAFE.md` inventory. Deliberately line-number
+/// free so unrelated edits above an `unsafe` site do not churn the file.
+pub fn render_unsafe_md(sites: &[UnsafeSite]) -> String {
+    let mut out = String::new();
+    out.push_str("# Unsafe inventory\n\n");
+    out.push_str(
+        "Generated by `cargo run -p xtask -- write-unsafe`; checked for staleness\n\
+         by `cargo run -p xtask -- check` (lint L4, `unsafe-safety`). Every\n\
+         `unsafe` in `rust/src` must be directly preceded by a `// SAFETY:`\n\
+         comment explaining why the invariants hold.\n\n",
+    );
+    if sites.is_empty() {
+        out.push_str("No `unsafe` code.\n");
+        return out;
+    }
+    let mut files: Vec<&str> = Vec::new();
+    for s in sites {
+        if files.last() != Some(&s.file.as_str()) {
+            files.push(&s.file);
+        }
+    }
+    out.push_str(&format!(
+        "Total: {} occurrences across {} files.\n",
+        sites.len(),
+        files.len()
+    ));
+    for f in files {
+        out.push_str(&format!("\n## {f}\n\n"));
+        for s in sites.iter().filter(|s| s.file == f) {
+            out.push_str(&format!("- `{}`\n", s.text));
+        }
+    }
+    out
+}
+
+/// The real-repo invocation shared by the `xtask` binary and the
+/// self-test: lints `rust/src`, scans `rust/benches`, `rust/tests` and
+/// `examples/` for knob usage. Returns the result and the repo root
+/// (where `UNSAFE.md` lives).
+pub fn check_repo(xtask_manifest_dir: &Path) -> (CheckResult, PathBuf) {
+    let rust_dir = xtask_manifest_dir.parent().expect("xtask sits in rust/");
+    let repo = rust_dir.parent().expect("rust/ sits in the repo root").to_path_buf();
+    let src = rust_dir.join("src");
+    let benches = rust_dir.join("benches");
+    let tests = rust_dir.join("tests");
+    let examples = repo.join("examples");
+    let usage = [benches.as_path(), tests.as_path(), examples.as_path()];
+    let res = run_check(&src, "rust/src", &usage);
+    (res, repo)
+}

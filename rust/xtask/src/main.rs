@@ -1,0 +1,60 @@
+//! CLI for the invariant checker.
+//!
+//! * `cargo run -p xtask -- check` — run lints L1–L5 over `rust/src`,
+//!   verify `UNSAFE.md` is in sync; non-zero exit on any finding.
+//! * `cargo run -p xtask -- write-unsafe` — regenerate `UNSAFE.md`.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("check");
+    let (res, repo) = xtask::check_repo(Path::new(env!("CARGO_MANIFEST_DIR")));
+    let unsafe_md = xtask::render_unsafe_md(&res.unsafe_sites);
+    let unsafe_path = repo.join("UNSAFE.md");
+
+    match cmd {
+        "check" => {
+            let mut failed = false;
+            for f in &res.findings {
+                eprintln!("{f}");
+                failed = true;
+            }
+            match std::fs::read_to_string(&unsafe_path) {
+                Ok(cur) if cur == unsafe_md => {}
+                _ => {
+                    eprintln!(
+                        "unsafe-safety: {}: stale or missing — regenerate with \
+                         `cargo run -p xtask -- write-unsafe`",
+                        unsafe_path.display()
+                    );
+                    failed = true;
+                }
+            }
+            if failed {
+                eprintln!("xtask check: FAILED");
+                ExitCode::FAILURE
+            } else {
+                println!(
+                    "xtask check: OK ({} files, {} unsafe sites, 0 findings)",
+                    res.files_scanned,
+                    res.unsafe_sites.len()
+                );
+                ExitCode::SUCCESS
+            }
+        }
+        "write-unsafe" => {
+            if let Err(e) = std::fs::write(&unsafe_path, unsafe_md) {
+                eprintln!("failed to write {}: {e}", unsafe_path.display());
+                return ExitCode::FAILURE;
+            }
+            println!("wrote {} ({} sites)", unsafe_path.display(), res.unsafe_sites.len());
+            ExitCode::SUCCESS
+        }
+        other => {
+            eprintln!("unknown command {other:?}; usage: xtask [check|write-unsafe]");
+            ExitCode::FAILURE
+        }
+    }
+}

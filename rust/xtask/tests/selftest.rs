@@ -1,0 +1,303 @@
+//! Self-tests for the invariant checker: every lint L1–L5 must trip on a
+//! seeded violation and stay quiet on its clean twin, suppressions must
+//! work (and demand a reason), and — the real teeth — the repo at HEAD
+//! must come back clean with `UNSAFE.md` in sync.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Write a throwaway fixture tree under the OS temp dir and return its
+/// root. Re-created from scratch on every call (`cargo test` may rerun).
+fn fixture(name: &str, files: &[(&str, &str)]) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("xtask-selftest-{}-{name}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    for (rel, text) in files {
+        let p = dir.join(rel);
+        fs::create_dir_all(p.parent().unwrap()).unwrap();
+        fs::write(&p, text).unwrap();
+    }
+    dir
+}
+
+fn check(dir: &Path) -> xtask::CheckResult {
+    xtask::run_check(dir, "fixture", &[])
+}
+
+fn lints_hit(res: &xtask::CheckResult) -> Vec<&'static str> {
+    res.findings.iter().map(|f| f.lint).collect()
+}
+
+// ---- L1: pool-only threading ----
+
+#[test]
+fn l1_thread_spawn_outside_pool_trips() {
+    let dir = fixture(
+        "l1-bad",
+        &[(
+            "worker.rs",
+            "pub fn go() {\n    std::thread::spawn(|| {}).join().unwrap();\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert_eq!(lints_hit(&res), ["pool-threading"], "{:#?}", res.findings);
+}
+
+#[test]
+fn l1_pool_rs_itself_is_exempt() {
+    let dir = fixture(
+        "l1-pool",
+        &[(
+            "runtime/pool.rs",
+            "pub fn go() {\n    std::thread::spawn(|| {}).join().unwrap();\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+}
+
+#[test]
+fn l1_mentions_in_comments_and_strings_do_not_trip() {
+    let dir = fixture(
+        "l1-comment",
+        &[(
+            "doc.rs",
+            "//! Replaces `thread::spawn` everywhere.\n/* thread::scope too */\npub const HELP: &str = \"thread::spawn is banned\";\n",
+        )],
+    );
+    let res = check(&dir);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+}
+
+#[test]
+fn suppression_with_reason_silences_and_without_reason_trips() {
+    let ok = fixture(
+        "sup-ok",
+        &[(
+            "worker.rs",
+            "pub fn go() {\n    // s5:allow(pool-threading) fixture exercises a raw spawn\n    std::thread::spawn(|| {}).join().unwrap();\n}\n",
+        )],
+    );
+    let res = check(&ok);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+
+    let bad = fixture(
+        "sup-bad",
+        &[(
+            "worker.rs",
+            "pub fn go() {\n    // s5:allow(pool-threading)\n    std::thread::spawn(|| {}).join().unwrap();\n}\n",
+        )],
+    );
+    let res = check(&bad);
+    // The reason-less allow is itself a finding, and it does not suppress.
+    let hit = lints_hit(&res);
+    assert!(hit.contains(&"suppression"), "{:#?}", res.findings);
+    assert!(hit.contains(&"pool-threading"), "{:#?}", res.findings);
+}
+
+// ---- L2: env reads + registry ----
+
+#[test]
+fn l2_env_var_outside_envcfg_trips() {
+    let dir = fixture(
+        "l2-bad",
+        &[(
+            "knobs.rs",
+            "pub fn debug() -> bool {\n    std::env::var(\"DEBUG\").is_ok()\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert_eq!(lints_hit(&res), ["env-registry"], "{:#?}", res.findings);
+}
+
+#[test]
+fn l2_registry_cross_check_flags_unregistered_and_stale() {
+    let envcfg = "\
+// s5:env-registry-begin
+pub const ENV_REGISTRY: &[(&str, &str)] = &[
+    (\"S5_GOOD\", \"a registered knob\"),
+    (\"S5_UNUSED\", \"a stale entry\"),
+];
+// s5:env-registry-end
+pub fn read(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+";
+    let dir = fixture(
+        "l2-registry",
+        &[
+            ("runtime/envcfg.rs", envcfg),
+            (
+                "user.rs",
+                "pub const A: &str = \"S5_GOOD\";\npub const B: &str = \"S5_BOGUS\";\n",
+            ),
+        ],
+    );
+    let res = check(&dir);
+    let msgs: Vec<&str> = res.findings.iter().map(|f| f.msg.as_str()).collect();
+    assert_eq!(res.findings.len(), 2, "{:#?}", res.findings);
+    assert!(msgs.iter().any(|m| m.contains("S5_BOGUS")), "{msgs:#?}");
+    assert!(msgs.iter().any(|m| m.contains("S5_UNUSED")), "{msgs:#?}");
+}
+
+// ---- L3: hot fences ----
+
+#[test]
+fn l3_alloc_inside_fence_trips() {
+    let dir = fixture(
+        "l3-bad",
+        &[(
+            "kern.rs",
+            "pub fn hot(xs: &mut Vec<f32>) {\n    // s5:hot-begin\n    xs.push(1.0);\n    // s5:hot-end\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert_eq!(lints_hit(&res), ["hot-alloc"], "{:#?}", res.findings);
+}
+
+#[test]
+fn l3_clean_fence_and_alloc_outside_fence_pass() {
+    let dir = fixture(
+        "l3-ok",
+        &[(
+            "kern.rs",
+            "pub fn hot(xs: &mut [f32], ys: &mut Vec<f32>) {\n    ys.push(0.0);\n    // s5:hot-begin\n    xs[0] = 1.0;\n    // s5:hot-end\n    ys.push(2.0);\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+}
+
+#[test]
+fn l3_unbalanced_fence_is_an_error() {
+    let dir = fixture(
+        "l3-fence",
+        &[("kern.rs", "// s5:hot-begin\npub fn f() {}\n")],
+    );
+    let res = check(&dir);
+    assert_eq!(lints_hit(&res), ["fence"], "{:#?}", res.findings);
+}
+
+// ---- L4: unsafe hygiene ----
+
+#[test]
+fn l4_undocumented_unsafe_trips_and_documented_passes() {
+    let bad = fixture(
+        "l4-bad",
+        &[(
+            "raw.rs",
+            "pub fn f(p: *const i32) -> i32 {\n    unsafe { *p }\n}\n",
+        )],
+    );
+    let res = check(&bad);
+    assert_eq!(lints_hit(&res), ["unsafe-safety"], "{:#?}", res.findings);
+    assert_eq!(res.unsafe_sites.len(), 1);
+
+    let ok = fixture(
+        "l4-ok",
+        &[(
+            "raw.rs",
+            "pub fn f(p: *const i32) -> i32 {\n    // SAFETY: caller guarantees p is valid and aligned.\n    unsafe { *p }\n}\n",
+        )],
+    );
+    let res = check(&ok);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+    assert_eq!(res.unsafe_sites.len(), 1);
+}
+
+#[test]
+fn l4_inventory_renders_deterministically() {
+    let dir = fixture(
+        "l4-md",
+        &[(
+            "raw.rs",
+            "pub fn f(p: *const i32) -> i32 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    let md = xtask::render_unsafe_md(&res.unsafe_sites);
+    assert!(md.contains("## fixture/raw.rs"), "{md}");
+    assert!(md.contains("- `unsafe { *p }`"), "{md}");
+    assert!(md.contains("Total: 1 occurrences across 1 files."), "{md}");
+}
+
+// ---- L5: simd gate symmetry ----
+
+#[test]
+fn l5_attribute_gate_without_scalar_twin_trips() {
+    let dir = fixture(
+        "l5-attr",
+        &[(
+            "lanes.rs",
+            "#[cfg(feature = \"simd\")]\npub fn lanes() {}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert_eq!(lints_hit(&res), ["simd-symmetry"], "{:#?}", res.findings);
+
+    let ok = fixture(
+        "l5-attr-ok",
+        &[(
+            "lanes.rs",
+            "#[cfg(feature = \"simd\")]\npub fn lanes() {}\n#[cfg(not(feature = \"simd\"))]\npub fn lanes() {}\n",
+        )],
+    );
+    let res = check(&ok);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+}
+
+#[test]
+fn l5_cfg_macro_outside_if_dispatch_trips() {
+    let dir = fixture(
+        "l5-expr",
+        &[(
+            "gate.rs",
+            "pub fn wide() -> bool {\n    cfg!(feature = \"simd\")\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert_eq!(lints_hit(&res), ["simd-symmetry"], "{:#?}", res.findings);
+}
+
+#[test]
+fn l5_dispatch_without_scalar_fallthrough_trips() {
+    let dir = fixture(
+        "l5-fall",
+        &[(
+            "gate.rs",
+            "pub fn kernel(x: &mut [f32]) {\n    if cfg!(feature = \"simd\") {\n        x[0] = 1.0;\n    }\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert_eq!(lints_hit(&res), ["simd-symmetry"], "{:#?}", res.findings);
+}
+
+#[test]
+fn l5_dispatch_with_fallthrough_or_else_passes() {
+    let dir = fixture(
+        "l5-ok",
+        &[(
+            "gate.rs",
+            "pub fn kernel(x: &mut [f32]) {\n    if cfg!(feature = \"simd\") {\n        x[0] = 1.0;\n        return;\n    }\n    x[0] = 2.0;\n}\npub fn kernel2(x: &mut [f32]) {\n    if cfg!(feature = \"simd\") {\n        x[0] = 1.0;\n    } else {\n        x[0] = 2.0;\n    }\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+}
+
+// ---- the repo itself ----
+
+/// The teeth: `rust/src` at HEAD is lint-clean and the committed
+/// `UNSAFE.md` matches the regenerated inventory byte-for-byte.
+#[test]
+fn repo_head_is_clean_and_unsafe_md_in_sync() {
+    let (res, repo) = xtask::check_repo(Path::new(env!("CARGO_MANIFEST_DIR")));
+    assert!(res.files_scanned > 10, "src scan found too few files");
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+    let md = xtask::render_unsafe_md(&res.unsafe_sites);
+    let committed = fs::read_to_string(repo.join("UNSAFE.md"))
+        .expect("UNSAFE.md missing — run `cargo run -p xtask -- write-unsafe`");
+    assert_eq!(
+        committed, md,
+        "UNSAFE.md is stale — run `cargo run -p xtask -- write-unsafe`"
+    );
+}
