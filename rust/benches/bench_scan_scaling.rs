@@ -406,6 +406,58 @@ fn main() {
         println!("acceptance: tokens/s at pool width > 1.5x one worker\n");
     }
 
+    // 9. §Tentpole (dtype PR): storage-dtype A/B. The fused pipeline with
+    // f32 vs bf16 drive planes at the serving shape — identical kernels
+    // and f32 accumulation on both arms; bf16 halves the drive-plane
+    // bytes each tile streams through the cache, so the delta is pure
+    // storage traffic. The workspace footprint is reported per token on
+    // both arms so the bytes/token halving is measured, not asserted.
+    {
+        use s5::ssm::dtype::Dtype;
+        let tthr = max_threads.clamp(4, 8);
+        let (lt, p2t, ht, bt) = (16384usize, 256usize, 32usize, 4usize);
+        let mut rng2 = Rng::new(17);
+        let layer = random_layer(&mut rng2, ht, p2t);
+        let u = rng2.normal_vec_f32(bt * lt * ht);
+        let mut y = vec![0.0f32; bt * lt * ht];
+        let tokens = (bt * lt) as f64;
+        let mut t = Table::new(&["dtype", "time", "tokens/s", "ssm bytes/token"]);
+        let mut means = [f64::NAN; 2];
+        let mut bpt = [f64::NAN; 2];
+        let arms = [("f32", Dtype::F32), ("bf16", Dtype::Bf16)];
+        for (i, (tag, dtype)) in arms.into_iter().enumerate() {
+            let opts = ForwardOptions::new().with_threads(tthr).with_dtype(dtype);
+            let mut ws = EngineWorkspace::new();
+            // warm so the measured loop is steady-state (no alloc)
+            layer.apply_ssm_batch_opts_into(&u, bt, lt, None, &opts, &mut ws, &mut y);
+            let st = measure(&format!("dtype A/B {tag}"), || {
+                layer.apply_ssm_batch_opts_into(&u, bt, lt, None, &opts, &mut ws, &mut y);
+                std::hint::black_box(&y);
+            });
+            let bytes = ws.ssm_capacity_bytes() as f64;
+            means[i] = st.mean;
+            bpt[i] = bytes / tokens;
+            t.row(&[
+                tag.into(),
+                fmt_secs(st.mean),
+                format!("{:.0}k", tokens / st.mean / 1e3),
+                format!("{:.1}", bytes / tokens),
+            ]);
+            snap.push((format!("dtype_ab/{tag}"), st.mean, tokens / st.mean / 1e6));
+            metrics.push((format!("dtype_ab/{tag}_ssm_bytes_per_token"), bytes / tokens));
+        }
+        println!(
+            "## storage dtype A/B (fused TI, L={lt}, P2={p2t}, H={ht}, B={bt}, T={tthr})\n{}",
+            t.render()
+        );
+        println!(
+            "dtype A/B: bf16 speedup {:.2}x, ssm bytes/token {:.1} → {:.1}\n",
+            means[0] / means[1],
+            bpt[0],
+            bpt[1]
+        );
+    }
+
     // 3. linear growth in L
     let mut t = Table::new(&["L", "time", "time/L (ns)"]);
     for &ll in &[4096usize, 8192, 16384, if quick { 16384 } else { 32768 }] {

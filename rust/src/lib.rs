@@ -148,6 +148,40 @@
 //!   pipeline; results are tile-invariant since the carry never
 //!   round-trips through f32.
 //!
+//! ## Precision model
+//!
+//! The engine splits **storage precision** from **compute precision**
+//! ([`ssm::dtype`]). Compute — the scan recurrence, chunk summaries of
+//! the parallel scan, tile carries and the f64 projection accumulate —
+//! always runs in f32 (or f64 with `with_f64_state`); what the storage
+//! dtype selects is the element type of the *drive planes*, the (T, P2)
+//! buffers that dominate the fused forward's memory traffic:
+//!
+//! * **f32 (the default).** [`ssm::dtype::Dtype::F32`] is bit-for-bit
+//!   the pre-dtype pipeline: the generic kernels instantiate to the
+//!   identical floating-point operations (pinned by the equivalence
+//!   matrix in `tests/scan_matrix.rs`).
+//! * **bf16 storage.** [`ssm::dtype::Dtype::Bf16`] — selected per
+//!   forward with [`ssm::api::ForwardOptions::with_dtype`] or
+//!   process-wide with `S5_DTYPE` — narrow-stores the drive planes as
+//!   software bfloat16 ([`ssm::dtype::Bf16`]: round-to-nearest-even
+//!   f32→bf16, exact widen back; no hardware or crate dependency),
+//!   halving drive-plane bytes/token. Every bf16 value is produced by
+//!   one narrow-store and consumed by one widen-load; arithmetic never
+//!   runs in bf16. Accuracy is pinned by a long-L drift harness
+//!   (≤ 0.05 relative vs. the f64-state oracle at L = 64k), and results
+//!   stay tile- and executor-invariant per dtype.
+//! * **Streaming composes.** A bf16 session round-trips its per-step
+//!   drive and projection read through bf16 at exactly the points the
+//!   fused tile narrow-stores, so chunked prefill ≡ step replay remains
+//!   **bit-for-bit** within the dtype (`tests/sequence_api.rs`).
+//! * **Precedence.** An explicit `with_dtype` beats `S5_DTYPE`;
+//!   `with_f64_state` forces f32 storage (its tile-invariance contract
+//!   is the precision story); the interleaved oracle layout is f32-only.
+//!   On-disk checkpoints are unaffected: npz import widens `<f2`/`<f8`
+//!   members to f32 ([`runtime::npz`]), and bf16 exists only in the
+//!   runtime workspace, never in checkpoints.
+//!
 //! ## Threading model
 //!
 //! Parallel work — the chunked scans and the dense per-sequence engine

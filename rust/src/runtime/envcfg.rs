@@ -32,6 +32,7 @@ pub const ENV_REGISTRY: &[(&str, &str)] = &[
     ("S5_BENCH_QUICK", "benches: 0/1 — tiny sizes for CI smoke runs"),
     ("S5_BENCH_JSON", "benches: output path for the scan perf snapshot"),
     ("S5_BENCH_STEPS", "benches: step-count override for the table benches"),
+    ("S5_DTYPE", "storage dtype of the planar drive planes: f32 (default) or bf16"),
     ("S5_ENVCFG_TEST_NEVER_SET", "(tests only) a name no environment ever sets"),
 ];
 // s5:env-registry-end
@@ -107,6 +108,52 @@ pub fn env_flag_once(cell: &OnceLock<Option<bool>>, name: &str) -> Option<bool> 
     })
 }
 
+/// Strictly parse one choice-valued override: the trimmed value must
+/// equal one of `choices` exactly (case-sensitive — the accepted spellings
+/// are part of the contract, like the 0/1 flags). Returns the index into
+/// `choices`, or a human-readable rejection reason.
+pub fn parse_choice_strict(raw: &str, choices: &[&str]) -> Result<usize, &'static str> {
+    let t = raw.trim();
+    if t.is_empty() {
+        return Err("empty value");
+    }
+    choices.iter().position(|c| *c == t).ok_or("not one of the accepted values")
+}
+
+/// Read + strictly parse a choice-valued override, once per process.
+/// Same contract as [`env_usize_once`]: `None` when unset **or** invalid
+/// (after a one-time stderr warning naming the accepted set), so the
+/// caller's default applies — `S5_DTYPE=fp16` silently serving f32 would
+/// be the quiet-misconfiguration bug all over again. `Some(i)` indexes
+/// into `choices`.
+pub fn env_choice_once(
+    cell: &OnceLock<Option<usize>>,
+    name: &str,
+    choices: &[&str],
+) -> Option<usize> {
+    *cell.get_or_init(|| {
+        let raw = match std::env::var(name) {
+            Ok(v) => v,
+            Err(std::env::VarError::NotPresent) => return None,
+            Err(std::env::VarError::NotUnicode(_)) => {
+                eprintln!(
+                    "{name} is not valid UTF-8; expected one of {choices:?} — using the default"
+                );
+                return None;
+            }
+        };
+        match parse_choice_strict(&raw, choices) {
+            Ok(i) => Some(i),
+            Err(why) => {
+                eprintln!(
+                    "{name}={raw:?} ignored ({why}); expected one of {choices:?} — using the default"
+                );
+                None
+            }
+        }
+    })
+}
+
 /// Is the variable present in the environment at all (any value)?
 /// For tests and diagnostics that only need to know whether an override
 /// is active — keeps raw `std::env::var` probes out of the rest of the
@@ -158,6 +205,33 @@ mod tests {
             env_usize_once(&CELL, "S5_ENVCFG_TEST_NEVER_SET", "a number"),
             None
         );
+    }
+
+    #[test]
+    fn choice_parser_accepts_exact_spellings_only() {
+        const DTYPES: &[&str] = &["f32", "bf16"];
+        assert_eq!(parse_choice_strict("f32", DTYPES), Ok(0));
+        assert_eq!(parse_choice_strict("bf16", DTYPES), Ok(1));
+        assert_eq!(parse_choice_strict("  bf16 ", DTYPES), Ok(1), "whitespace tolerated");
+        assert_eq!(parse_choice_strict("", DTYPES), Err("empty value"));
+        for bad in ["BF16", "f16", "fp32", "bf 16", "bf16,f32", "2"] {
+            assert_eq!(
+                parse_choice_strict(bad, DTYPES),
+                Err("not one of the accepted values"),
+                "{bad:?} should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn choice_read_on_an_unset_variable_falls_back() {
+        // The invalid-*set*-value path is pinned through the pure parser
+        // above (mutating the process environment would race parallel
+        // tests); the unset path caches None like the usize reader.
+        static CELL: OnceLock<Option<usize>> = OnceLock::new();
+        let choices = ["f32", "bf16"];
+        assert_eq!(env_choice_once(&CELL, "S5_ENVCFG_TEST_NEVER_SET", &choices), None);
+        assert_eq!(env_choice_once(&CELL, "S5_ENVCFG_TEST_NEVER_SET", &choices), None);
     }
 
     #[test]

@@ -15,7 +15,10 @@
 //!
 //! Only STORED (uncompressed) zip members are supported — which is what
 //! `numpy.savez` and both of our writers emit; `savez_compressed` archives
-//! are rejected with a pointed error.
+//! are rejected with a pointed error. Loading converts member dtypes to
+//! the native stack's compute precision: `<f8` downcasts and `<f2` (IEEE
+//! binary16, from mixed-precision trainers) widens to f32; writers emit
+//! `<f4`/`<i4` only.
 
 use anyhow::{bail, Context};
 use std::collections::BTreeMap;
@@ -252,6 +255,22 @@ fn parse_npy(bytes: &[u8]) -> anyhow::Result<NpzTensor> {
                     .collect(),
             )
         }
+        "<f2" | "=f2" => {
+            // IEEE binary16 checkpoints (mixed-precision trainers) widen
+            // to f32 on load — exact, since every f16 value is
+            // representable in f32. The native stack's own low-precision
+            // format is bf16 and lives only in the runtime drive planes
+            // (see the crate-level "Precision model" docs), never on disk.
+            if payload.len() < n * 2 {
+                bail!("npy payload too short for {n} f16 values");
+            }
+            NpzData::F32(
+                payload[..n * 2]
+                    .chunks_exact(2)
+                    .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                    .collect(),
+            )
+        }
         "<f8" => {
             // f64 checkpoints downcast (the native stack computes in f32)
             if payload.len() < n * 8 {
@@ -277,9 +296,25 @@ fn parse_npy(bytes: &[u8]) -> anyhow::Result<NpzTensor> {
                     .collect(),
             )
         }
-        other => bail!("unsupported npy dtype {other:?} (want <f4/<i4)"),
+        other => bail!("unsupported npy dtype {other:?} (want <f2/<f4/<f8/<i4)"),
     };
     Ok(NpzTensor { dims, data })
+}
+
+/// Widen one IEEE binary16 bit pattern to f32 — exact for every input.
+/// Subnormals scale the raw mantissa by 2⁻²⁴, infinities and NaNs map to
+/// their f32 counterparts (NaN payload preserved in the top mantissa
+/// bits), normals rebias the exponent 15 → 127.
+fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = ((bits >> 15) as u32) << 31;
+    let exp = (bits >> 10) & 0x1f;
+    let mant = (bits & 0x3ff) as u32;
+    match exp {
+        // ±zero and subnormals: magnitude = mant · 2⁻²⁴ (exact in f32)
+        0 => f32::from_bits(sign | (mant as f32 * 2.0f32.powi(-24)).to_bits()),
+        0x1f => f32::from_bits(sign | 0x7f80_0000 | (mant << 13)),
+        _ => f32::from_bits(sign | ((exp as u32 + 112) << 23) | (mant << 13)),
+    }
 }
 
 /// Pull the quoted string value of `key` out of an npy header dict.
@@ -501,6 +536,67 @@ mod tests {
         h[pos..pos + 5].copy_from_slice(b"True,");
         h.extend_from_slice(&[0u8; 8]);
         assert!(parse_npy(&h).is_err());
+    }
+
+    #[test]
+    fn f16_widening_matches_reference_bit_patterns() {
+        let patterns: [(u16, f32); 8] = [
+            (0x3C00, 1.0),
+            (0xC000, -2.0),
+            (0x3555, 0.25 * (1.0 + 341.0 / 1024.0)), // ≈ 1/3, exact widen
+            (0x7BFF, 65504.0),                       // largest finite f16
+            (0x0001, 1.0 / 16_777_216.0),            // smallest subnormal
+            (0x03FF, 1023.0 / 16_777_216.0),         // largest subnormal
+            (0x8000, -0.0),
+            (0x7C00, f32::INFINITY),
+        ];
+        for (bits, want) in patterns {
+            assert_eq!(
+                f16_bits_to_f32(bits).to_bits(),
+                want.to_bits(),
+                "pattern {bits:#06x}"
+            );
+        }
+        // NaN stays NaN, payload shifted into the top f32 mantissa bits
+        assert!(f16_bits_to_f32(0x7E01).is_nan());
+        assert!(f16_bits_to_f32(0xFE00).is_nan());
+    }
+
+    #[test]
+    fn f16_members_load_widened_and_roundtrip_as_f32() {
+        // hand-build a one-member STORED archive with an `<f2` payload
+        // (our writers never emit f16 — reading is import-compat only)
+        let mut payload = npy_header("<f2", &[3]);
+        for bits in [0x3C00u16, 0xC000, 0x7BFF] {
+            payload.extend_from_slice(&bits.to_le_bytes());
+        }
+        let crc = crc32(&payload);
+        let mut zip = Vec::new();
+        let mut central = Vec::new();
+        write_local_header(&mut zip, "w.npy", crc, payload.len() as u32);
+        zip.extend_from_slice(&payload);
+        write_central_header(&mut central, "w.npy", crc, payload.len() as u32, 0);
+        let cd_offset = zip.len() as u32;
+        let cd_size = central.len() as u32;
+        zip.extend_from_slice(&central);
+        zip.extend_from_slice(&0x06054b50u32.to_le_bytes());
+        zip.extend_from_slice(&[0u8; 4]);
+        zip.extend_from_slice(&1u16.to_le_bytes());
+        zip.extend_from_slice(&1u16.to_le_bytes());
+        zip.extend_from_slice(&cd_size.to_le_bytes());
+        zip.extend_from_slice(&cd_offset.to_le_bytes());
+        zip.extend_from_slice(&[0u8; 2]);
+        let path = tmp("f16.npz");
+        std::fs::write(&path, zip).unwrap();
+        let store = NpzStore::load(&path).unwrap();
+        assert_eq!(store.get("w").unwrap().f32s().unwrap(), &[1.0, -2.0, 65504.0]);
+        // widened members save back as plain <f4 and reload unchanged
+        let path2 = tmp("f16_as_f32.npz");
+        store.save(&path2).unwrap();
+        let reloaded = NpzStore::load(&path2).unwrap();
+        assert_eq!(reloaded.get("w"), store.get("w"));
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
     }
 
     #[test]

@@ -29,6 +29,7 @@
 use std::any::Any;
 use std::sync::{Arc, Mutex};
 
+use crate::ssm::dtype::Dtype;
 use crate::ssm::engine::{EngineWorkspace, ScanPolicy, Tiling};
 use crate::ssm::scan::{
     backend_for, backend_for_exec, backend_for_threads, ScanBackend, ScanExec, ScanLayout,
@@ -242,6 +243,23 @@ impl ForwardOptions {
     /// contract is sequential) and by streaming sessions.
     pub fn with_wide(mut self) -> ForwardOptions {
         self.policy.wide = true;
+        self
+    }
+
+    /// Pin the storage dtype for the SSM drive planes
+    /// ([`ScanPolicy::dtype`]): [`Dtype::Bf16`] halves the dominant
+    /// memory traffic of the fused forward (and of streaming sessions)
+    /// by narrow-storing the drive planes, while every accumulation —
+    /// scan recurrence, chunk carries, projection — stays f32. Unset
+    /// (the default), the process-wide `S5_DTYPE` environment knob
+    /// decides, falling back to [`Dtype::F32`] — which is bit-for-bit
+    /// the pre-dtype pipeline. bf16 runs fused (a staged policy
+    /// executes as one tile) and composes with streaming: a bf16
+    /// session's step replay equals its chunked prefill bit-for-bit.
+    /// [`ForwardOptions::with_f64_state`] overrides this back to f32
+    /// storage (its tile-invariance contract is the precision story).
+    pub fn with_dtype(mut self, dtype: Dtype) -> ForwardOptions {
+        self.policy.dtype = Some(dtype);
         self
     }
 
@@ -609,6 +627,15 @@ mod tests {
         let o = ForwardOptions::new().with_wide().with_threads(4).with_tile(64);
         assert!(o.scan_policy().wide, "with_threads/with_tile reset wide");
         assert!(!o.scan_policy().f64_state);
+        // storage dtype: unset defers to the env knob (f32 unless
+        // S5_DTYPE says otherwise); an explicit pin wins and survives
+        // backend/tiling re-resolution
+        assert_eq!(ForwardOptions::new().scan_policy().dtype, None);
+        let o = ForwardOptions::new().with_dtype(Dtype::Bf16).with_threads(3).with_tile(64);
+        assert_eq!(o.scan_policy().dtype, Some(Dtype::Bf16), "with_threads/with_tile reset it");
+        assert_eq!(o.scan_policy().storage_dtype(), Dtype::Bf16);
+        let o = ForwardOptions::new().with_dtype(Dtype::F32);
+        assert_eq!(o.scan_policy().storage_dtype(), Dtype::F32);
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Storage dtypes for the planar engine: the storage/compute split.
+//!
+//! The fused planar pipeline is memory-bound (see `BENCH_scan.json`'s
+//! ssm-bytes-per-token rows), so the *storage* element type of the drive
+//! planes is a first-class parameter: [`ScanElem`] abstracts over what the
+//! workspace planes hold, while every recurrence, chunk summary and
+//! projection accumulator stays `f32` (or `f64` under the f64-state
+//! option) — kernels load-widen, compute in full precision, and
+//! narrow-store.
+//!
+//! Two storage types exist today:
+//!
+//! * `f32` — the identity instantiation. `from_f32`/`to_f32` are the
+//!   identity function, so the monomorphized kernels are the exact
+//!   pre-refactor code and stay **bit-for-bit** with the scalar/staged
+//!   oracles (pinned by `tests/scan_matrix.rs`).
+//! * [`Bf16`] — a hand-rolled software bfloat16 (the container is
+//!   hermetic; no external half-float crate). bfloat16 is the top 16 bits
+//!   of an IEEE-754 binary32: same 8-bit exponent, 7-bit mantissa, so
+//!   widening is exact (a shift) and narrowing is a round-to-nearest-even
+//!   on the low 16 bits. Relative precision is 2⁻⁸ per stored element;
+//!   the end-to-end forward error budget is documented in the crate-level
+//!   "Precision model" section and pinned by the L = 64k drift test in
+//!   `tests/scan_matrix.rs`.
+//!
+//! The trait is **sealed**: the planar kernels in `ssm/scan.rs` and
+//! `ssm/simd.rs` pattern-match storage behavior per type (e.g. the f32
+//! first-tile fast path), so an out-of-crate element type could not be
+//! given a correct kernel set anyway. int8 drive planes would slot in
+//! here as a third implementation.
+
+/// The storage dtype of the planar drive planes, as a runtime value —
+/// what [`ScanPolicy`](crate::ssm::engine::ScanPolicy) carries and the
+/// `S5_DTYPE` environment knob selects.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Dtype {
+    /// 4-byte IEEE binary32 storage (the default; bit-for-bit with the
+    /// pre-dtype engine).
+    #[default]
+    F32,
+    /// 2-byte bfloat16 storage with f32 accumulate (half the plane
+    /// traffic; tolerance-pinned).
+    Bf16,
+}
+
+impl Dtype {
+    /// Bytes per stored element (what the workspace capacity accounting
+    /// and the bench's bytes-per-token metric charge per plane slot).
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 => 2,
+        }
+    }
+
+    /// Canonical lowercase name (`"f32"` / `"bf16"`), matching the
+    /// accepted `S5_DTYPE` values.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+}
+
+/// A software bfloat16: the top 16 bits of an IEEE-754 binary32.
+///
+/// Stored as the raw bit pattern. Arithmetic never happens in this type —
+/// kernels widen to `f32` ([`Bf16::to_f32`], exact), compute, and narrow
+/// back ([`Bf16::from_f32`], round-to-nearest-even).
+#[repr(transparent)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+/// Narrow an `f32` to bfloat16 with IEEE round-to-nearest-even.
+///
+/// The non-NaN path is the classic bias trick: adding
+/// `0x7FFF + lsb(upper half)` to the f32 bits carries into the kept half
+/// exactly when the discarded half is above the tie, or at the tie with
+/// an odd kept half — i.e. round-to-nearest, ties-to-even. This also
+/// rounds values past `bf16` max to ±inf and handles subnormals and ±0
+/// with no special cases. NaN is handled separately because the bias
+/// could carry a NaN payload up into an infinity bit pattern: the result
+/// keeps the sign and high payload bits and forces the quiet bit.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> Bf16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return Bf16(((bits >> 16) as u16) | 0x0040);
+    }
+    Bf16((bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) >> 16) as u16)
+}
+
+/// Widen a bfloat16 to `f32`. Exact for every bit pattern (bfloat16 is a
+/// bit-prefix of binary32).
+#[inline]
+pub fn bf16_to_f32(b: Bf16) -> f32 {
+    f32::from_bits((b.0 as u32) << 16)
+}
+
+/// One f32 → bf16 → f32 round trip: the value actually stored when a
+/// computed f32 lands in a bfloat16 plane. The streaming step path uses
+/// this to reproduce the prefill path's storage rounding bit-for-bit
+/// without materializing bf16 planes.
+#[inline]
+pub fn bf16_round_trip(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for super::Bf16 {}
+}
+
+/// A storage element of the planar drive planes. Sealed — see the module
+/// docs for why.
+///
+/// The contract kernels rely on:
+/// * `to_f32(from_f32(x))` is a *pure rounding* of `x` (identity for
+///   `f32`, round-to-nearest-even for [`Bf16`]), and
+/// * `from_f32(to_f32(e)) == e` for every non-NaN stored element
+///   (narrow∘widen is the identity), so re-storing a widened element is
+///   lossless and tile boundaries cannot introduce double-rounding drift.
+pub trait ScanElem:
+    sealed::Sealed + Copy + Default + Send + Sync + PartialEq + std::fmt::Debug + 'static
+{
+    /// The runtime tag for this storage type.
+    const DTYPE: Dtype;
+
+    /// Narrow a computed f32 into storage (rounding for narrow types).
+    fn from_f32(x: f32) -> Self;
+
+    /// Widen a stored element to f32 (always exact).
+    fn to_f32(self) -> f32;
+}
+
+impl ScanElem for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+
+    #[inline]
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+impl ScanElem for Bf16 {
+    const DTYPE: Dtype = Dtype::Bf16;
+
+    #[inline]
+    fn from_f32(x: f32) -> Self {
+        f32_to_bf16(x)
+    }
+
+    #[inline]
+    fn to_f32(self) -> f32 {
+        bf16_to_f32(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn narrow_bits(bits: u32) -> u16 {
+        f32_to_bf16(f32::from_bits(bits)).0
+    }
+
+    /// Reference bit patterns for the round-to-nearest-even narrowing:
+    /// below the tie truncates, above the tie rounds up, and exact ties
+    /// go to the even (lsb-0) kept half in both directions.
+    #[test]
+    fn narrowing_rounds_to_nearest_even() {
+        // 1.0: exact in bf16.
+        assert_eq!(narrow_bits(0x3F80_0000), 0x3F80);
+        // Just below the tie between 0x3F80 and 0x3F81: truncates.
+        assert_eq!(narrow_bits(0x3F80_7FFF), 0x3F80);
+        // Exact tie with even kept half: stays even (down).
+        assert_eq!(narrow_bits(0x3F80_8000), 0x3F80);
+        // Just above the tie: rounds up.
+        assert_eq!(narrow_bits(0x3F80_8001), 0x3F81);
+        // Exact tie with odd kept half: rounds up to even.
+        assert_eq!(narrow_bits(0x3F81_8000), 0x3F82);
+        // Just below that tie: truncates to the odd half.
+        assert_eq!(narrow_bits(0x3F81_7FFF), 0x3F81);
+        // Carry propagation across the mantissa into the exponent:
+        // 0x3FFF_8000 is the tie between 0x3FFF (1.9921875) and the next
+        // representable, which is 2.0 = 0x4000 — even, so the tie lands
+        // there via a full mantissa carry.
+        assert_eq!(narrow_bits(0x3FFF_8000), 0x4000);
+        // Sign is preserved through the same paths.
+        assert_eq!(narrow_bits(0xBF80_8001), 0xBF81);
+    }
+
+    #[test]
+    fn special_values_survive() {
+        // ±0 keep their sign bit.
+        assert_eq!(narrow_bits(0x0000_0000), 0x0000);
+        assert_eq!(narrow_bits(0x8000_0000), 0x8000);
+        assert_eq!(bf16_to_f32(Bf16(0x8000)).to_bits(), 0x8000_0000);
+        // ±inf round-trip exactly.
+        assert_eq!(f32_to_bf16(f32::INFINITY).0, 0x7F80);
+        assert_eq!(f32_to_bf16(f32::NEG_INFINITY).0, 0xFF80);
+        assert_eq!(bf16_to_f32(Bf16(0x7F80)), f32::INFINITY);
+        // Values past bf16 max (but finite in f32) round to inf…
+        assert_eq!(f32_to_bf16(f32::MAX).0, 0x7F80);
+        // …while bf16 max itself is representable and round-trips.
+        assert_eq!(narrow_bits(0x7F7F_0000), 0x7F7F);
+        // NaN stays NaN (quiet bit forced, sign + high payload kept),
+        // and never collapses into an infinity bit pattern.
+        let q = f32_to_bf16(f32::NAN);
+        assert!(bf16_to_f32(q).is_nan());
+        let signaling = f32::from_bits(0xFF80_0001); // -NaN, payload only in low bits
+        let n = f32_to_bf16(signaling);
+        assert!(bf16_to_f32(n).is_nan(), "payload below bit 16 must not vanish");
+        assert_eq!(n.0 & 0x8000, 0x8000, "NaN sign preserved");
+        // f32 subnormals: the smallest ones round to (signed) zero…
+        assert_eq!(narrow_bits(0x0000_0001), 0x0000);
+        assert_eq!(narrow_bits(0x8000_0001), 0x8000);
+        // …and bf16's own subnormals are exactly representable f32
+        // subnormals, rounding to nearest like everything else.
+        assert_eq!(narrow_bits(0x0001_0000), 0x0001);
+        assert_eq!(narrow_bits(0x0000_8000), 0x0000, "tie at half the smallest: to even");
+        assert_eq!(narrow_bits(0x0000_8001), 0x0001, "just above: rounds up");
+    }
+
+    /// Every one of the 65536 bf16 bit patterns widens and re-narrows to
+    /// itself (NaNs: to *a* NaN — the quiet bit is forced). This is the
+    /// narrow∘widen = identity half of the [`ScanElem`] contract, and it
+    /// makes f32→bf16→f32 idempotent by construction.
+    #[test]
+    fn widen_then_narrow_is_identity_for_all_bit_patterns() {
+        for bits in 0..=u16::MAX {
+            let b = Bf16(bits);
+            let wide = bf16_to_f32(b);
+            let back = f32_to_bf16(wide);
+            if wide.is_nan() {
+                assert!(bf16_to_f32(back).is_nan(), "{bits:#06x} lost NaN-ness");
+                assert_eq!(back.0 & 0xFF80, bits & 0xFF80, "{bits:#06x} sign/exponent");
+            } else {
+                assert_eq!(back.0, bits, "{bits:#06x} failed to round-trip");
+            }
+        }
+    }
+
+    /// f32 → bf16 → f32 is idempotent: rounding an already-rounded value
+    /// changes nothing. Property-tested over an LCG stream of raw f32
+    /// bit patterns (covering normals, subnormals, huge values and NaNs).
+    #[test]
+    fn round_trip_is_idempotent() {
+        let mut seed = 0x9E37_79B9_7F4A_7C15u64;
+        for _ in 0..100_000 {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let x = f32::from_bits((seed >> 32) as u32);
+            let once = bf16_round_trip(x);
+            let twice = bf16_round_trip(once);
+            if once.is_nan() {
+                assert!(twice.is_nan());
+            } else {
+                assert_eq!(twice.to_bits(), once.to_bits(), "x={:#010x}", x.to_bits());
+            }
+        }
+    }
+
+    /// The f32 instantiation of [`ScanElem`] is the identity at the bit
+    /// level — the guarantee behind "f32 storage is bit-for-bit with the
+    /// pre-dtype engine".
+    #[test]
+    fn f32_elem_is_bitwise_identity() {
+        for bits in [0u32, 0x8000_0000, 0x3F80_0001, 0x7F80_0000, 0x0000_0001] {
+            let x = f32::from_bits(bits);
+            assert_eq!(<f32 as ScanElem>::from_f32(x).to_bits(), bits);
+            assert_eq!(ScanElem::to_f32(x).to_bits(), bits);
+        }
+        assert_eq!(<f32 as ScanElem>::DTYPE, Dtype::F32);
+        assert_eq!(<Bf16 as ScanElem>::DTYPE, Dtype::Bf16);
+        assert_eq!(Dtype::F32.bytes(), 4);
+        assert_eq!(Dtype::Bf16.bytes(), 2);
+        assert_eq!(Dtype::F32.name(), "f32");
+        assert_eq!(Dtype::Bf16.name(), "bf16");
+        assert_eq!(Dtype::default(), Dtype::F32);
+    }
+
+    /// bf16 relative precision: one round trip perturbs a normal value by
+    /// at most 2⁻⁸ relative (half-ulp of a 7-bit mantissa) — the
+    /// per-element term the end-to-end drift budget is built from.
+    #[test]
+    fn relative_error_within_half_ulp() {
+        let mut seed = 1u64;
+        for _ in 0..10_000 {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            // Map to (-8, 8), away from zero-crossing denormal noise.
+            let x = ((seed >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * 16.0;
+            if x.abs() < 1e-3 {
+                continue;
+            }
+            let r = bf16_round_trip(x);
+            assert!((r - x).abs() <= x.abs() * (1.0 / 256.0), "x={x} r={r}");
+        }
+    }
+}

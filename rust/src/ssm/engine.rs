@@ -47,6 +47,7 @@
 use crate::num::{C32, C64};
 use crate::runtime::pool::Executor;
 use crate::ssm::discretize::{discretize_diag, Method};
+use crate::ssm::dtype::{Bf16, Dtype};
 use crate::ssm::scan::ScanScratch;
 
 /// Resolve a thread-count knob: `0` auto-detects the machine's parallelism
@@ -491,6 +492,36 @@ pub struct ScanPolicy {
     /// deterministic for a fixed thread budget). Ignored by the f64-state
     /// path, whose tile-invariance contract requires a continuous carry.
     pub wide: bool,
+    /// Storage dtype of the planar drive planes (the storage/compute
+    /// split — see the crate-level "Precision model" docs and
+    /// [`Dtype`]). `None` (the default) defers to the `S5_DTYPE`
+    /// environment knob, then f32. Scan state, chunk summaries and all
+    /// accumulation stay f32 regardless; `f64_state` takes precedence
+    /// (its tile-invariance contract needs full-precision planes) and
+    /// the interleaved oracle layout is f32-only.
+    pub dtype: Option<Dtype>,
+}
+
+impl ScanPolicy {
+    /// Resolve the effective storage dtype: an explicit
+    /// [`with_dtype`](crate::ssm::api::ForwardOptions::with_dtype) choice
+    /// wins, else the strictly-parsed `S5_DTYPE` environment knob
+    /// (`f32`/`bf16`, warn-once on anything else), else [`Dtype::F32`].
+    pub fn storage_dtype(&self) -> Dtype {
+        self.dtype.unwrap_or_else(dtype_env_override)
+    }
+}
+
+/// The `S5_DTYPE` override, parsed once per process — same rationale and
+/// strictness contract as [`tile_env_override`]: a set-but-unrecognized
+/// value warns once and serves the f32 default rather than silently
+/// running a different A/B arm than the sweep asked for.
+fn dtype_env_override() -> Dtype {
+    static DTYPE_ENV: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    match crate::runtime::envcfg::env_choice_once(&DTYPE_ENV, "S5_DTYPE", &["f32", "bf16"]) {
+        Some(1) => Dtype::Bf16,
+        _ => Dtype::F32,
+    }
 }
 
 /// Scan-facing scratch of the engine: drive/state buffers in both layouts
@@ -514,6 +545,7 @@ pub struct ScanPolicy {
 /// | `bu_rev`                 | (B, L, P2) | —          | interleaved reversed drive  |
 /// | `a_tv`                   | (B, L, P2) | —          | interleaved TV multipliers  |
 /// | `bu_re`/`bu_im`          | (B, L, P2) | (U, T, P2) | planar drive → states       |
+/// | `bu_re16`/`bu_im16`      | —          | (U, T, P2) | planar drive, bf16 storage  |
 /// | `bu_rev_re`/`bu_rev_im`  | (B, L, P2) | —          | planar reversed drive       |
 /// | `a_tv_re`/`a_tv_im`      | (B, L, P2) | (B, T, P2) | planar TV multipliers       |
 /// | `state_re`/`state_im`    | —          | (U, P2)    | fused carry states (f32)    |
@@ -530,6 +562,8 @@ pub struct SsmBuffers {
     pub(crate) a_tv: Vec<C32>,
     pub(crate) bu_re: Vec<f32>,
     pub(crate) bu_im: Vec<f32>,
+    pub(crate) bu_re16: Vec<Bf16>,
+    pub(crate) bu_im16: Vec<Bf16>,
     pub(crate) bu_rev_re: Vec<f32>,
     pub(crate) bu_rev_im: Vec<f32>,
     pub(crate) a_tv_re: Vec<f32>,
@@ -553,6 +587,7 @@ impl SsmBuffers {
                 + self.state_re.capacity()
                 + self.state_im.capacity())
                 * 4
+            + (self.bu_re16.capacity() + self.bu_im16.capacity()) * 2
             + (self.state64_re.capacity() + self.state64_im.capacity()) * 8
             + self.scan.capacity_bytes()
     }
@@ -860,6 +895,24 @@ mod tests {
         if !crate::runtime::envcfg::is_set("S5_TILE_L") {
             assert_eq!(Tiling::Auto.resolve(8, 8, false), Some(auto_tile_l(8, 8, false)));
         }
+    }
+
+    /// Storage-dtype resolution: an explicit policy choice wins in both
+    /// directions; the built-in default (no choice, `S5_DTYPE` unset) is
+    /// f32 storage. The env-knob arm itself is exercised by the CI
+    /// `S5_DTYPE=bf16` run, not here — mutating the process environment
+    /// would race other tests.
+    #[test]
+    fn scan_policy_resolves_storage_dtype() {
+        let mut p = ScanPolicy::default();
+        assert_eq!(p.dtype, None);
+        if !crate::runtime::envcfg::is_set("S5_DTYPE") {
+            assert_eq!(p.storage_dtype(), Dtype::F32);
+        }
+        p.dtype = Some(Dtype::Bf16);
+        assert_eq!(p.storage_dtype(), Dtype::Bf16);
+        p.dtype = Some(Dtype::F32);
+        assert_eq!(p.storage_dtype(), Dtype::F32);
     }
 
     /// The discretization cache must hit on identical keys and recompute

@@ -30,6 +30,7 @@
 pub mod api;
 pub mod complexity;
 pub mod discretize;
+pub mod dtype;
 pub mod engine;
 pub mod hippo;
 pub mod online;

@@ -35,6 +35,7 @@
 use crate::num::C64;
 use crate::ssm::api::ForwardOptions;
 use crate::ssm::discretize::{discretize_diag, discretize_one, Method};
+use crate::ssm::dtype::{bf16_round_trip, Dtype};
 use crate::ssm::engine::{grow, EngineWorkspace, SsmBuffers};
 use crate::ssm::s5::{gelu, layer_norm_row, sigmoid, FusedUnit, S5Layer, S5Model};
 use crate::ssm::scan::{ScanBackend, SequentialBackend};
@@ -72,11 +73,26 @@ pub struct LayerState {
     cur_timescale: f64,
     /// timescale the cached default discretization was built for
     base_timescale: f64,
+    /// storage dtype this stream mirrors ([`ScanPolicy::dtype`]): the
+    /// latent itself stays f32 compute precision, but under bf16 each
+    /// step round-trips the drive and the projection read through bf16 —
+    /// exactly the narrow-store/widen-load a fused bf16 tile row performs
+    /// — so chunked prefill ≡ step replay stays bit-for-bit per dtype.
+    ///
+    /// [`ScanPolicy::dtype`]: crate::ssm::engine::ScanPolicy
+    dtype: Dtype,
 }
 
 impl LayerState {
-    /// Fresh state with the layer's default (time-invariant) discretization.
+    /// Fresh state with the layer's default (time-invariant)
+    /// discretization and f32 storage semantics.
     pub fn new(layer: &S5Layer, timescale: f64) -> LayerState {
+        LayerState::with_dtype(layer, timescale, Dtype::F32)
+    }
+
+    /// [`LayerState::new`] with an explicit storage dtype for the
+    /// stream's step/prefill arithmetic.
+    pub fn with_dtype(layer: &S5Layer, timescale: f64, dtype: Dtype) -> LayerState {
         let dt: Vec<f64> = layer
             .log_dt
             .iter()
@@ -103,6 +119,7 @@ impl LayerState {
             dt_scale: None,
             cur_timescale: timescale,
             base_timescale: timescale,
+            dtype,
         }
     }
 
@@ -219,14 +236,34 @@ impl S5Layer {
         // the drive b = f∘(B̃u) as planes then advance with
         // ScanBackend::scan_step_planar (same op order as the interleaved
         // `in_scale * bu`, so nothing drifts vs. the old layout)
-        for r in 0..self.p2 {
-            let mut bu = C64::ZERO;
-            for c in 0..self.h {
-                bu += self.b_tilde[r * self.h + c].scale(u[c] as f64);
+        if state.dtype == Dtype::Bf16 {
+            // bf16 storage twin: round-trip the drive through bf16 before
+            // and after the scale multiply — the narrow-store → widen-load
+            // a fused bf16 tile applies at the same two points (drive
+            // store, Δt-scale store) — so a step replay stays bit-for-bit
+            // with the chunked bf16 prefill
+            for r in 0..self.p2 {
+                let mut bu = C64::ZERO;
+                for c in 0..self.h {
+                    bu += self.b_tilde[r * self.h + c].scale(u[c] as f64);
+                }
+                let b = bu.to_c32();
+                let (br, bi) = (bf16_round_trip(b.re), bf16_round_trip(b.im));
+                let dre = state.scale_re[r] * br - state.scale_im[r] * bi;
+                let dim = state.scale_re[r] * bi + state.scale_im[r] * br;
+                state.drive_re[r] = bf16_round_trip(dre);
+                state.drive_im[r] = bf16_round_trip(dim);
             }
-            let b = bu.to_c32();
-            state.drive_re[r] = state.scale_re[r] * b.re - state.scale_im[r] * b.im;
-            state.drive_im[r] = state.scale_re[r] * b.im + state.scale_im[r] * b.re;
+        } else {
+            for r in 0..self.p2 {
+                let mut bu = C64::ZERO;
+                for c in 0..self.h {
+                    bu += self.b_tilde[r * self.h + c].scale(u[c] as f64);
+                }
+                let b = bu.to_c32();
+                state.drive_re[r] = state.scale_re[r] * b.re - state.scale_im[r] * b.im;
+                state.drive_im[r] = state.scale_re[r] * b.im + state.scale_im[r] * b.re;
+            }
         }
         SequentialBackend.scan_step_planar(
             &state.lam_re,
@@ -238,15 +275,31 @@ impl S5Layer {
         );
         // y = 2·Re(C̃x) + D∘u — f64 accumulation with the exact op order of
         // the offline `project_seq` + `feedthrough_seq`, so one online step
-        // equals one row of the offline sequential scan bit-for-bit.
+        // equals one row of the offline sequential scan bit-for-bit. The
+        // latent carry stays f32 at every dtype (the fused kernels carry
+        // f32 across rows the same way); under bf16 the projection reads
+        // the state through a bf16 round trip — the widen-load of the
+        // narrowed tile row a fused projection consumes.
         let ct = &self.c_tilde[0];
-        for r in 0..self.h {
-            let mut acc = 0.0f64;
-            for c in 0..self.p2 {
-                let cv = ct[r * self.p2 + c];
-                acc += cv.re * state.xr[c] as f64 - cv.im * state.xi[c] as f64;
+        if state.dtype == Dtype::Bf16 {
+            for r in 0..self.h {
+                let mut acc = 0.0f64;
+                for c in 0..self.p2 {
+                    let cv = ct[r * self.p2 + c];
+                    acc += cv.re * bf16_round_trip(state.xr[c]) as f64
+                        - cv.im * bf16_round_trip(state.xi[c]) as f64;
+                }
+                y[r] = 2.0 * acc as f32 + self.d[r] * u[r];
             }
-            y[r] = 2.0 * acc as f32 + self.d[r] * u[r];
+        } else {
+            for r in 0..self.h {
+                let mut acc = 0.0f64;
+                for c in 0..self.p2 {
+                    let cv = ct[r * self.p2 + c];
+                    acc += cv.re * state.xr[c] as f64 - cv.im * state.xi[c] as f64;
+                }
+                y[r] = 2.0 * acc as f32 + self.d[r] * u[r];
+            }
         }
     }
 
@@ -303,6 +356,10 @@ pub struct S5StreamState {
     states: Vec<LayerState>,
     pool: Vec<f32>,
     steps: usize,
+    /// Storage dtype shared by every layer's stream (see
+    /// [`LayerState::with_dtype`]); selects which drive-plane family the
+    /// chunked prefill borrows from the workspace.
+    dtype: Dtype,
     /// Scratch shared by the chunked-prefill fast path ([`push_chunk`])
     /// and the per-token path ([`push`], which only uses the H-length
     /// activation rows): reused across calls so steady-state streaming
@@ -317,10 +374,21 @@ pub struct S5StreamState {
 
 impl S5StreamState {
     pub fn new(model: &S5Model, timescale: f64) -> S5StreamState {
+        S5StreamState::with_dtype(model, timescale, Dtype::F32)
+    }
+
+    /// [`S5StreamState::new`] with an explicit storage dtype, mirrored
+    /// into every per-layer stream ([`LayerState::with_dtype`]).
+    pub fn with_dtype(model: &S5Model, timescale: f64, dtype: Dtype) -> S5StreamState {
         S5StreamState {
-            states: model.layers.iter().map(|l| LayerState::new(l, timescale)).collect(),
+            states: model
+                .layers
+                .iter()
+                .map(|l| LayerState::with_dtype(l, timescale, dtype))
+                .collect(),
             pool: vec![0.0; model.h],
             steps: 0,
+            dtype,
             ws: EngineWorkspace::new(),
         }
     }
@@ -389,6 +457,12 @@ impl S5StreamState {
     /// `tests/sequence_api.rs`). The stream state's f32 latent is the
     /// carry, so the f64-state offline option does not apply here.
     ///
+    /// The equivalence holds **per storage dtype**: a bf16 stream's
+    /// per-token path round-trips the drive and the projection read
+    /// through bf16 at exactly the points the fused bf16 tile
+    /// narrow-stores, so bf16 chunked prefill ≡ bf16 step replay stays
+    /// bit-for-bit too (same test, bf16 twin).
+    ///
     /// [`push`]: S5StreamState::push
     pub fn push_chunk(&mut self, m: &S5Model, tokens: &[f32], l: usize, opts: &ForwardOptions) {
         assert_eq!(tokens.len(), l * m.d_in);
@@ -397,6 +471,7 @@ impl S5StreamState {
             return;
         }
         let timescale = opts.timescale;
+        let dtype = self.dtype;
         let h = m.h;
         let n = l * h;
         let backend = opts.scan_backend();
@@ -418,38 +493,74 @@ impl S5StreamState {
                 .unwrap_or(l)
                 .min(l)
                 .max(1);
-            let SsmBuffers { bu_re, bu_im, scan, .. } = ssm;
-            grow(bu_re, tile * p2);
-            grow(bu_im, tile * p2);
+            let SsmBuffers { bu_re, bu_im, bu_re16, bu_im16, scan, .. } = ssm;
             layer.norm_seq(&x[..n], l, &mut v[..n]);
-            let mut unit = FusedUnit {
-                dir: 0,
-                useq: &v[..n],
-                dseq: None,
-                yseq: &mut y[..n],
-                dr: &mut bu_re[..tile * p2],
-                di: &mut bu_im[..tile * p2],
-                tv: None,
-                sr: &mut lstate.xr[..],
-                si: &mut lstate.xi[..],
-                s64: None,
-            };
-            layer.fused_unit(
-                &mut unit,
-                l,
-                tile,
-                &lstate.lam_re,
-                &lstate.lam_im,
-                &lstate.scale_re,
-                &lstate.scale_im,
-                &[],
-                &[],
-                backend,
-                true, // resume from (and write back) the live stream state
-                true, // unidirectional: fold the feedthrough per tile
-                1,    // in-tile width 1: keep the bit-for-bit step-replay pin
-                &mut scan.f_workers(1)[0],
-            );
+            match dtype {
+                Dtype::F32 => {
+                    grow(bu_re, tile * p2);
+                    grow(bu_im, tile * p2);
+                    let mut unit = FusedUnit {
+                        dir: 0,
+                        useq: &v[..n],
+                        dseq: None,
+                        yseq: &mut y[..n],
+                        dr: &mut bu_re[..tile * p2],
+                        di: &mut bu_im[..tile * p2],
+                        tv: None,
+                        sr: &mut lstate.xr[..],
+                        si: &mut lstate.xi[..],
+                        s64: None,
+                    };
+                    layer.fused_unit(
+                        &mut unit,
+                        l,
+                        tile,
+                        &lstate.lam_re,
+                        &lstate.lam_im,
+                        &lstate.scale_re,
+                        &lstate.scale_im,
+                        &[],
+                        &[],
+                        backend,
+                        true, // resume from (and write back) the live stream state
+                        true, // unidirectional: fold the feedthrough per tile
+                        1,    // in-tile width 1: keep the bit-for-bit step-replay pin
+                        &mut scan.f_workers(1)[0],
+                    );
+                }
+                Dtype::Bf16 => {
+                    grow(bu_re16, tile * p2);
+                    grow(bu_im16, tile * p2);
+                    let mut unit = FusedUnit {
+                        dir: 0,
+                        useq: &v[..n],
+                        dseq: None,
+                        yseq: &mut y[..n],
+                        dr: &mut bu_re16[..tile * p2],
+                        di: &mut bu_im16[..tile * p2],
+                        tv: None,
+                        sr: &mut lstate.xr[..],
+                        si: &mut lstate.xi[..],
+                        s64: None,
+                    };
+                    layer.fused_unit(
+                        &mut unit,
+                        l,
+                        tile,
+                        &lstate.lam_re,
+                        &lstate.lam_im,
+                        &lstate.scale_re,
+                        &lstate.scale_im,
+                        &[],
+                        &[],
+                        backend,
+                        true, // resume from (and write back) the live stream state
+                        true, // unidirectional: fold the feedthrough per tile
+                        1,    // in-tile width 1: keep the bit-for-bit step-replay pin
+                        &mut scan.f_workers(1)[0],
+                    );
+                }
+            }
             layer.gate_residual_seq(&y[..n], &mut x[..n], l, &mut v[..h]);
         }
         for k in 0..l {

@@ -46,16 +46,14 @@ use crate::num::{C32, C64};
 use crate::rng::Rng;
 use crate::ssm::api::{Batch, ForwardOptions, ModelSpec, SequenceModel, SessionState};
 use crate::ssm::discretize::{discretize_one, Method};
+use crate::ssm::dtype::{Bf16, Dtype, ScanElem};
 use crate::ssm::engine::{
     grow, par_zip, par_zip2, par_zip4, ti_disc, EngineWorkspace, ScanPolicy, SsmBuffers, TiDisc,
 };
 use crate::ssm::hippo;
 use crate::ssm::online::S5StreamState;
-use crate::ssm::simd;
 use crate::ssm::scan::{
-    scan_resume_ti_planar_f64_inplace, scan_resume_tv_planar_f64_inplace,
-    scan_sequential_ti_planar_inplace, scan_sequential_tv_planar_inplace, ParallelBackend,
-    ScanBackend, ScanLayout, SequentialBackend,
+    ParallelBackend, PlanarElem, ScanBackend, ScanLayout, SequentialBackend,
 };
 
 /// Parameters of one S5 layer (conjugate-symmetric storage: P2 = P/2).
@@ -103,7 +101,13 @@ impl Default for S5Config {
 /// the backend's executor — each is an independent sequential pipeline,
 /// so the fused result is executor- and thread-count-invariant by
 /// construction.
-pub(crate) struct FusedUnit<'a> {
+///
+/// `T` is the **storage** dtype of the tile drive planes
+/// ([`ScanPolicy::dtype`](crate::ssm::engine::ScanPolicy)); every other
+/// field — TV multipliers, carry states, outputs — stays f32/f64
+/// compute precision regardless (the storage/compute split; see the
+/// crate-level "Precision model" docs).
+pub(crate) struct FusedUnit<'a, T: ScanElem = f32> {
     /// scan direction: 0 = forward, 1 = reversed (bidirectional backward)
     pub dir: usize,
     /// this sequence's (L, H) input rows (pre-normed activations)
@@ -112,9 +116,9 @@ pub(crate) struct FusedUnit<'a> {
     pub dseq: Option<&'a [f32]>,
     /// output rows: y (dir 0) or the backward accumulator plane (dir 1)
     pub yseq: &'a mut [f32],
-    /// tile drive planes (T, P2)
-    pub dr: &'a mut [f32],
-    pub di: &'a mut [f32],
+    /// tile drive planes (T, P2), in the policy's storage dtype
+    pub dr: &'a mut [T],
+    pub di: &'a mut [T],
     /// tile TV multiplier planes (T, P2) — irregular-Δt forward units only
     pub tv: Option<(&'a mut [f32], &'a mut [f32])>,
     /// carried f32 scan state (P2)
@@ -236,7 +240,10 @@ impl S5Layer {
     /// Planar drive: bu_k = B̃ u_k for one sequence, written as separate
     /// re/im planes (same f64 accumulation and `to_c32` rounding as
     /// [`S5Layer::drive_seq`], so the two layouts agree bit-for-bit).
-    fn drive_seq_planar(&self, u: &[f32], l: usize, bur: &mut [f32], bui: &mut [f32]) {
+    /// Generic over the storage dtype: the accumulate → `to_c32` op order
+    /// is unchanged, a narrow store (`T::from_f32`, RNE) is appended —
+    /// the identity for f32.
+    fn drive_seq_planar<T: ScanElem>(&self, u: &[f32], l: usize, bur: &mut [T], bui: &mut [T]) {
         let (h, p2) = (self.h, self.p2);
         for k in 0..l {
             for r in 0..p2 {
@@ -245,8 +252,8 @@ impl S5Layer {
                     acc += self.b_tilde[r * h + c].scale(u[k * h + c] as f64);
                 }
                 let z = acc.to_c32();
-                bur[k * p2 + r] = z.re;
-                bui[k * p2 + r] = z.im;
+                bur[k * p2 + r] = T::from_f32(z.re);
+                bui[k * p2 + r] = T::from_f32(z.im);
             }
         }
     }
@@ -258,13 +265,13 @@ impl S5Layer {
 
     /// Planar reversed-time drive with the input scaling folded in
     /// (mirrors [`S5Layer::drive_rev_seq`]).
-    fn drive_rev_seq_planar(
+    fn drive_rev_seq_planar<T: ScanElem>(
         &self,
         u: &[f32],
         l: usize,
         f: &[C64],
-        bur: &mut [f32],
-        bui: &mut [f32],
+        bur: &mut [T],
+        bui: &mut [T],
     ) {
         // the whole sequence as one window of the tile form, so the
         // staged and fused backward drives share one implementation
@@ -273,26 +280,28 @@ impl S5Layer {
 
     /// Planar drive scaling: `bu ← f ∘ bu` over separate planes, with the
     /// complex-multiply op order of [`S5Layer::scale_seq`]. Dispatches to
-    /// the lane-blocked kernel under the `simd` feature (bit-identical —
-    /// see [`crate::ssm::simd`]).
-    fn scale_seq_planar(
-        bur: &mut [f32],
-        bui: &mut [f32],
+    /// the dtype's lane-blocked kernel under the `simd` feature
+    /// (bit-identical to the scalar loop below at every dtype — see
+    /// [`crate::ssm::simd`]); the scalar loop widens, multiplies in f32
+    /// and narrow-stores (both identities for f32).
+    fn scale_seq_planar<T: PlanarElem>(
+        bur: &mut [T],
+        bui: &mut [T],
         fr: &[f32],
         fi: &[f32],
         l: usize,
         p2: usize,
     ) {
         if cfg!(feature = "simd") {
-            return simd::scale_rows(bur, bui, fr, fi, l, p2);
+            return T::scale_rows_simd(bur, bui, fr, fi, l, p2);
         }
         for k in 0..l {
             let row = k * p2;
             for r in 0..p2 {
-                let br = bur[row + r];
-                let bi = bui[row + r];
-                bur[row + r] = fr[r] * br - fi[r] * bi;
-                bui[row + r] = fr[r] * bi + fi[r] * br;
+                let br = bur[row + r].to_f32();
+                let bi = bui[row + r].to_f32();
+                bur[row + r] = T::from_f32(fr[r] * br - fi[r] * bi);
+                bui[row + r] = T::from_f32(fr[r] * bi + fi[r] * br);
             }
         }
     }
@@ -305,16 +314,19 @@ impl S5Layer {
     /// pipeline call, so the fused ≡ staged bit-for-bit contract cannot
     /// drift between them.
     #[allow(clippy::too_many_arguments)]
-    fn tv_disc_scale_rows(
+    fn tv_disc_scale_rows<T: ScanElem>(
         &self,
         base_dt: &[f64],
         dseq: &[f32],
         rows: usize,
         ar: &mut [f32],
         ai: &mut [f32],
-        br: &mut [f32],
-        bi: &mut [f32],
+        br: &mut [T],
+        bi: &mut [T],
     ) {
+        // the Λ̄ multiplier planes stay f32 compute precision at every
+        // storage dtype (they seed the f32 recurrence); only the drive
+        // store narrows
         let p2 = self.p2;
         for k in 0..rows {
             let dk = dseq[k] as f64;
@@ -325,9 +337,9 @@ impl S5Layer {
                 let f = f.to_c32();
                 ar[k * p2 + r] = lb.re;
                 ai[k * p2 + r] = lb.im;
-                let (b_re, b_im) = (br[k * p2 + r], bi[k * p2 + r]);
-                br[k * p2 + r] = f.re * b_re - f.im * b_im;
-                bi[k * p2 + r] = f.re * b_im + f.im * b_re;
+                let (b_re, b_im) = (br[k * p2 + r].to_f32(), bi[k * p2 + r].to_f32());
+                br[k * p2 + r] = T::from_f32(f.re * b_re - f.im * b_im);
+                bi[k * p2 + r] = T::from_f32(f.re * b_im + f.im * b_re);
             }
         }
     }
@@ -337,15 +349,15 @@ impl S5Layer {
     /// row `l−1−k`), with the input scaling folded in — the exact per-row
     /// ops of [`S5Layer::drive_rev_seq_planar`], windowed.
     #[allow(clippy::too_many_arguments)]
-    fn drive_rev_tile_planar(
+    fn drive_rev_tile_planar<T: ScanElem>(
         &self,
         u: &[f32],
         l: usize,
         t0: usize,
         tl: usize,
         f: &[C64],
-        bur: &mut [f32],
-        bui: &mut [f32],
+        bur: &mut [T],
+        bui: &mut [T],
     ) {
         let (h, p2) = (self.h, self.p2);
         for k in 0..tl {
@@ -356,8 +368,8 @@ impl S5Layer {
                     acc += self.b_tilde[r * h + c].scale(u[src * h + c] as f64);
                 }
                 let z = (f[r] * acc).to_c32();
-                bur[k * p2 + r] = z.re;
-                bui[k * p2 + r] = z.im;
+                bur[k * p2 + r] = T::from_f32(z.re);
+                bui[k * p2 + r] = T::from_f32(z.im);
             }
         }
     }
@@ -367,10 +379,10 @@ impl S5Layer {
     /// Dispatches to the channel-blocked kernel under the `simd` feature
     /// (bit-identical — each channel keeps its own sequential f64
     /// reduction; see [`crate::ssm::simd`]).
-    fn project_seq_planar(
+    fn project_seq_planar<T: PlanarElem>(
         &self,
-        xr: &[f32],
-        xi: &[f32],
+        xr: &[T],
+        xi: &[T],
         l: usize,
         dir: usize,
         reversed: bool,
@@ -381,7 +393,7 @@ impl S5Layer {
         for k in 0..l {
             let xrow = if reversed { (l - 1 - k) * p2 } else { k * p2 };
             if cfg!(feature = "simd") {
-                simd::project_row(
+                T::project_row_simd(
                     ct,
                     &xr[xrow..xrow + p2],
                     &xi[xrow..xrow + p2],
@@ -394,7 +406,8 @@ impl S5Layer {
                     let mut acc = 0.0f64;
                     for c in 0..p2 {
                         let cv = ct[r * p2 + c];
-                        acc += cv.re * xr[xrow + c] as f64 - cv.im * xi[xrow + c] as f64;
+                        acc += cv.re * xr[xrow + c].to_f32() as f64
+                            - cv.im * xi[xrow + c].to_f32() as f64;
                     }
                     y[k * h + r] += 2.0 * acc as f32;
                 }
@@ -500,10 +513,19 @@ impl S5Layer {
     /// caller-pooled chunk-summary buffer (tolerance-pinned — see the
     /// policy docs). The f64-state path ignores `wide` (its
     /// tile-invariance contract needs a continuous sequential carry).
+    ///
+    /// Generic over the drive-plane **storage** dtype `T`
+    /// ([`PlanarElem`]): every scan routes through the dtype's kernels,
+    /// which widen on load, run the recurrence in f32 and narrow-store —
+    /// all identities for f32, so the f32 instantiation compiles to the
+    /// pre-dtype code. The carry (`sr`/`si`/`s64`) stays full precision
+    /// across tiles at every dtype; under bf16 the "first" tile runs the
+    /// resume kernel from the pre-zeroed carry (see
+    /// [`PlanarElem::scan_ti_first`]).
     #[allow(clippy::too_many_arguments)]
-    pub(crate) fn fused_unit(
+    pub(crate) fn fused_unit<T: PlanarElem>(
         &self,
-        unit: &mut FusedUnit<'_>,
+        unit: &mut FusedUnit<'_, T>,
         l: usize,
         tile: usize,
         a_re: &[f32],
@@ -640,7 +662,7 @@ impl S5Layer {
                 let di = &mut unit.di[..np];
                 if let Some((s64r, s64i)) = unit.s64.as_mut() {
                     match unit.tv.as_ref() {
-                        Some((atr, ati)) => scan_resume_tv_planar_f64_inplace(
+                        Some((atr, ati)) => T::scan_tv_f64(
                             &atr[..np],
                             &ati[..np],
                             s64r,
@@ -650,13 +672,12 @@ impl S5Layer {
                             tl,
                             p2,
                         ),
-                        None => scan_resume_ti_planar_f64_inplace(
-                            a_re, a_im, s64r, s64i, dr, di, tl, p2,
-                        ),
+                        None => T::scan_ti_f64(a_re, a_im, s64r, s64i, dr, di, tl, p2),
                     }
                 } else if parts > 1 {
                     match unit.tv.as_ref() {
-                        Some((atr, ati)) => backend.scan_tv_planar_resume_par(
+                        Some((atr, ati)) => T::scan_tv_resume_par(
+                            backend,
                             &atr[..np],
                             &ati[..np],
                             unit.sr,
@@ -668,27 +689,16 @@ impl S5Layer {
                             parts,
                             pscratch,
                         ),
-                        None => backend.scan_ti_planar_resume_par(
-                            a_re, a_im, unit.sr, unit.si, dr, di, tl, p2, parts, pscratch,
+                        None => T::scan_ti_resume_par(
+                            backend, a_re, a_im, unit.sr, unit.si, dr, di, tl, p2, parts, pscratch,
                         ),
                     }
                 } else if first {
+                    // the dtype owns its first-tile strategy: f32 runs the
+                    // zero-scratch sequential kernel and copies the carry
+                    // out, bf16 resumes from the pre-zeroed carry
                     match unit.tv.as_ref() {
-                        Some((atr, ati)) => scan_sequential_tv_planar_inplace(
-                            &atr[..np],
-                            &ati[..np],
-                            dr,
-                            di,
-                            tl,
-                            p2,
-                        ),
-                        None => scan_sequential_ti_planar_inplace(a_re, a_im, dr, di, tl, p2),
-                    }
-                    unit.sr.copy_from_slice(&dr[(tl - 1) * p2..np]);
-                    unit.si.copy_from_slice(&di[(tl - 1) * p2..np]);
-                } else {
-                    match unit.tv.as_ref() {
-                        Some((atr, ati)) => backend.scan_tv_planar_resume(
+                        Some((atr, ati)) => T::scan_tv_first(
                             &atr[..np],
                             &ati[..np],
                             unit.sr,
@@ -698,8 +708,23 @@ impl S5Layer {
                             tl,
                             p2,
                         ),
-                        None => backend.scan_ti_planar_resume(
-                            a_re, a_im, unit.sr, unit.si, dr, di, tl, p2,
+                        None => T::scan_ti_first(a_re, a_im, unit.sr, unit.si, dr, di, tl, p2),
+                    }
+                } else {
+                    match unit.tv.as_ref() {
+                        Some((atr, ati)) => T::scan_tv_resume(
+                            backend,
+                            &atr[..np],
+                            &ati[..np],
+                            unit.sr,
+                            unit.si,
+                            dr,
+                            di,
+                            tl,
+                            p2,
+                        ),
+                        None => T::scan_ti_resume(
+                            backend, a_re, a_im, unit.sr, unit.si, dr, di, tl, p2,
                         ),
                     }
                 }
@@ -797,7 +822,7 @@ impl S5Layer {
     /// (tolerance-pinned). The f64-state path keeps `wide` off — its
     /// carry contract is sequential.
     #[allow(clippy::too_many_arguments)]
-    fn apply_ssm_fused(
+    fn apply_ssm_fused<T: PlanarElem>(
         &self,
         u: &[f32],
         batch: usize,
@@ -846,6 +871,8 @@ impl S5Layer {
         let SsmBuffers {
             bu_re,
             bu_im,
+            bu_re16,
+            bu_im16,
             a_tv_re,
             a_tv_im,
             state_re,
@@ -855,6 +882,9 @@ impl S5Layer {
             scan,
             ..
         } = ssm;
+        // the workspace carries both drive-plane families; the storage
+        // dtype selects (and grows) exactly one of them
+        let (bu_re, bu_im) = T::pick_drive((bu_re, bu_im), (bu_re16, bu_im16));
         grow(bu_re, n_units * tcp2);
         grow(bu_im, n_units * tcp2);
         grow(state_re, n_units * p2);
@@ -961,7 +991,7 @@ impl S5Layer {
                 }
             }
         } else {
-            let mut units: Vec<FusedUnit<'_>> = Vec::with_capacity(n_units);
+            let mut units: Vec<FusedUnit<'_, T>> = Vec::with_capacity(n_units);
             for (b, yseq) in y[..batch * sh].chunks_mut(sh).enumerate() {
                 units.push(FusedUnit {
                     dir: 0,
@@ -1047,6 +1077,12 @@ impl S5Layer {
     /// equals the staged planar pipeline over the sequential scan
     /// strategy bit-for-bit; planar staged ≡ interleaved staged
     /// bit-for-bit at equal strategy.
+    ///
+    /// The policy's storage dtype instantiates the fused pipeline: f32
+    /// (the default) is the pre-dtype code path bit-for-bit; bf16 stores
+    /// the drive planes narrow and keeps every accumulation in f32 (see
+    /// the crate-level "Precision model" docs). The f64-state option and
+    /// the interleaved oracle layout always run f32 storage.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn apply_ssm_core(
         &self,
@@ -1075,8 +1111,15 @@ impl S5Layer {
                 // the f64 carry lives in the fused pipeline; under the
                 // staged policy the whole sequence runs as one tile
                 let tile = if policy.f64_state { Some(tile.unwrap_or(l)) } else { tile };
-                match tile {
-                    Some(tile) => self.apply_ssm_fused(
+                // storage dtype: f64-state forces f32 planes (its
+                // tile-invariance contract is the precision story), and
+                // bf16 storage only exists in the fused pipeline — a
+                // staged policy runs as one fused tile rather than
+                // through the f32-only full-plane path
+                let dtype = if policy.f64_state { Dtype::F32 } else { policy.storage_dtype() };
+                let tile = if dtype == Dtype::Bf16 { Some(tile.unwrap_or(l)) } else { tile };
+                match (tile, dtype) {
+                    (Some(tile), Dtype::F32) => self.apply_ssm_fused::<f32>(
                         u,
                         batch,
                         l,
@@ -1092,7 +1135,23 @@ impl S5Layer {
                         y2,
                         y,
                     ),
-                    None => self.apply_ssm_planar(
+                    (Some(tile), Dtype::Bf16) => self.apply_ssm_fused::<Bf16>(
+                        u,
+                        batch,
+                        l,
+                        timescale,
+                        dts,
+                        backend,
+                        tile,
+                        policy.f64_state,
+                        policy.wide,
+                        slot,
+                        disc,
+                        ssm,
+                        y2,
+                        y,
+                    ),
+                    (None, _) => self.apply_ssm_planar(
                         u, batch, l, timescale, dts, backend, slot, disc, ssm, y,
                     ),
                 }
@@ -1810,7 +1869,8 @@ impl SequenceModel for S5Model {
 
     fn make_state(&self, opts: &ForwardOptions) -> SessionState {
         assert!(self.streamable(), "bidirectional layers cannot stream");
-        SessionState::new(S5StreamState::new(self, opts.timescale))
+        let dtype = opts.scan_policy().storage_dtype();
+        SessionState::new(S5StreamState::with_dtype(self, opts.timescale, dtype))
     }
 
     fn reset_state(&self, state: &mut SessionState) {

@@ -47,9 +47,11 @@
 //! type-check in every configuration.
 
 use crate::num::C64;
+use crate::ssm::dtype::{bf16_to_f32, f32_to_bf16, Bf16};
 
-// s5:hot-begin — explicit-lane twins of the four hottest planar loops;
-// strictly slice arithmetic over caller-owned planes (lint L3).
+// s5:hot-begin — explicit-lane twins of the four hottest planar loops
+// (plus their bf16-storage widen/narrow variants); strictly slice
+// arithmetic over caller-owned planes (lint L3).
 
 /// f32 lane width of the element-wise blocks (two AVX2 `f32x8` registers /
 /// one AVX-512 register worth per re/im pair).
@@ -66,6 +68,27 @@ fn load(s: &[f32], j: usize) -> [f32; LANES] {
 #[inline(always)]
 fn store(d: &mut [f32], j: usize, v: &[f32; LANES]) {
     d[j..j + LANES].copy_from_slice(v);
+}
+
+/// Widen one lane block of bf16 storage to f32 (exact — bfloat16 is a
+/// bit-prefix of binary32, so this lowers to a zero-extend + shift).
+#[inline(always)]
+fn load16(s: &[Bf16], j: usize) -> [f32; LANES] {
+    let b: [Bf16; LANES] = s[j..j + LANES].try_into().unwrap();
+    let mut v = [0.0f32; LANES];
+    for t in 0..LANES {
+        v[t] = bf16_to_f32(b[t]);
+    }
+    v
+}
+
+/// Narrow one computed f32 lane block into bf16 storage
+/// (round-to-nearest-even per element).
+#[inline(always)]
+fn store16(d: &mut [Bf16], j: usize, v: &[f32; LANES]) {
+    for t in 0..LANES {
+        d[j + t] = f32_to_bf16(v[t]);
+    }
 }
 
 /// `bu ← f ∘ bu` over `rows` planar (rows, p) re/im rows: the drive
@@ -339,6 +362,171 @@ pub(crate) fn project_row(
     }
 }
 
+// ---- bf16-storage twins -------------------------------------------------
+//
+// Same lane blocks, same per-element f32 op order — the only difference
+// is a widen on load and a round-to-nearest-even narrow on store, exactly
+// matching the generic scalar loops' `to_f32`/`from_f32` placement, so
+// each bf16 lane kernel is bit-for-bit equal to its scalar twin too.
+
+/// bf16 twin of [`scale_rows`]: widen the stored drive, scale in f32,
+/// narrow-store.
+pub(crate) fn scale_rows_bf16(
+    bur: &mut [Bf16],
+    bui: &mut [Bf16],
+    fr: &[f32],
+    fi: &[f32],
+    rows: usize,
+    p: usize,
+) {
+    let pb = p - p % LANES;
+    for k in 0..rows {
+        let row = k * p;
+        let mut j = 0;
+        while j < pb {
+            let (frv, fiv) = (load(fr, j), load(fi, j));
+            let (br, bi) = (load16(bur, row + j), load16(bui, row + j));
+            let mut nr = [0.0f32; LANES];
+            let mut ni = [0.0f32; LANES];
+            for t in 0..LANES {
+                nr[t] = frv[t] * br[t] - fiv[t] * bi[t];
+                ni[t] = frv[t] * bi[t] + fiv[t] * br[t];
+            }
+            store16(bur, row + j, &nr);
+            store16(bui, row + j, &ni);
+            j += LANES;
+        }
+        for j in pb..p {
+            let br = bf16_to_f32(bur[row + j]);
+            let bi = bf16_to_f32(bui[row + j]);
+            bur[row + j] = f32_to_bf16(fr[j] * br - fi[j] * bi);
+            bui[row + j] = f32_to_bf16(fr[j] * bi + fi[j] * br);
+        }
+    }
+}
+
+/// bf16 twin of [`scan_row_resume`]: the carried state stays f32 across
+/// the whole sequence (the compute dtype); only the emitted row narrows.
+#[inline]
+pub(crate) fn scan_row_resume_bf16(
+    ar: &[f32],
+    ai: &[f32],
+    sr: &mut [f32],
+    si: &mut [f32],
+    br: &mut [Bf16],
+    bi: &mut [Bf16],
+) {
+    let p = sr.len();
+    let pb = p - p % LANES;
+    let mut j = 0;
+    while j < pb {
+        let (av, bv) = (load(ar, j), load(ai, j));
+        let (srv, siv) = (load(sr, j), load(si, j));
+        let (brv, biv) = (load16(br, j), load16(bi, j));
+        let mut nr = [0.0f32; LANES];
+        let mut ni = [0.0f32; LANES];
+        for t in 0..LANES {
+            nr[t] = av[t] * srv[t] - bv[t] * siv[t] + brv[t];
+            ni[t] = av[t] * siv[t] + bv[t] * srv[t] + biv[t];
+        }
+        store(sr, j, &nr);
+        store(si, j, &ni);
+        store16(br, j, &nr);
+        store16(bi, j, &ni);
+        j += LANES;
+    }
+    for j in pb..p {
+        let nr = ar[j] * sr[j] - ai[j] * si[j] + bf16_to_f32(br[j]);
+        let ni = ar[j] * si[j] + ai[j] * sr[j] + bf16_to_f32(bi[j]);
+        sr[j] = nr;
+        si[j] = ni;
+        br[j] = f32_to_bf16(nr);
+        bi[j] = f32_to_bf16(ni);
+    }
+}
+
+/// bf16 twin of [`fixup_row`]: the carry advances in f32; the emitted
+/// rows widen, take the addition in f32, and narrow back.
+#[inline]
+pub(crate) fn fixup_row_bf16(
+    ar: &[f32],
+    ai: &[f32],
+    cr: &mut [f32],
+    ci: &mut [f32],
+    xr: &mut [Bf16],
+    xi: &mut [Bf16],
+) {
+    let p = cr.len();
+    let pb = p - p % LANES;
+    let mut j = 0;
+    while j < pb {
+        let (av, bv) = (load(ar, j), load(ai, j));
+        let (crv, civ) = (load(cr, j), load(ci, j));
+        let mut nr = [0.0f32; LANES];
+        let mut ni = [0.0f32; LANES];
+        for t in 0..LANES {
+            nr[t] = crv[t] * av[t] - civ[t] * bv[t];
+            ni[t] = crv[t] * bv[t] + civ[t] * av[t];
+        }
+        store(cr, j, &nr);
+        store(ci, j, &ni);
+        let (xrv, xiv) = (load16(xr, j), load16(xi, j));
+        let mut sxr = [0.0f32; LANES];
+        let mut sxi = [0.0f32; LANES];
+        for t in 0..LANES {
+            sxr[t] = xrv[t] + nr[t];
+            sxi[t] = xiv[t] + ni[t];
+        }
+        store16(xr, j, &sxr);
+        store16(xi, j, &sxi);
+        j += LANES;
+    }
+    for j in pb..p {
+        let nr = cr[j] * ar[j] - ci[j] * ai[j];
+        let ni = cr[j] * ai[j] + ci[j] * ar[j];
+        cr[j] = nr;
+        ci[j] = ni;
+        xr[j] = f32_to_bf16(bf16_to_f32(xr[j]) + nr);
+        xi[j] = f32_to_bf16(bf16_to_f32(xi[j]) + ni);
+    }
+}
+
+/// bf16 twin of [`project_row`]: widen each stored state element once,
+/// then the identical blocked f64 reduction.
+pub(crate) fn project_row_bf16(
+    ct: &[C64],
+    xr: &[Bf16],
+    xi: &[Bf16],
+    y: &mut [f32],
+    h: usize,
+    p2: usize,
+) {
+    let hb = h - h % PROJ_LANES;
+    let mut r = 0;
+    while r < hb {
+        let mut acc = [0.0f64; PROJ_LANES];
+        for c in 0..p2 {
+            let (xrc, xic) = (bf16_to_f32(xr[c]) as f64, bf16_to_f32(xi[c]) as f64);
+            for t in 0..PROJ_LANES {
+                let cv = ct[(r + t) * p2 + c];
+                acc[t] += cv.re * xrc - cv.im * xic;
+            }
+        }
+        for t in 0..PROJ_LANES {
+            y[r + t] += 2.0 * acc[t] as f32;
+        }
+        r += PROJ_LANES;
+    }
+    for r in hb..h {
+        let mut acc = 0.0f64;
+        for c in 0..p2 {
+            let cv = ct[r * p2 + c];
+            acc += cv.re * bf16_to_f32(xr[c]) as f64 - cv.im * bf16_to_f32(xi[c]) as f64;
+        }
+        y[r] += 2.0 * acc as f32;
+    }
+}
+
 // s5:hot-end
 
 #[cfg(test)]
@@ -482,6 +670,96 @@ mod tests {
                     y2[r] += 2.0 * acc as f32;
                 }
                 assert_eq!(y, y2, "h={h} p2={p2}");
+            }
+        }
+    }
+
+    /// The bf16 lane kernels equal their widen/narrow scalar references
+    /// **bit for bit** — same contract as the f32 blocks, with the
+    /// round-to-nearest-even narrowing placed identically.
+    #[test]
+    fn bf16_lane_blocks_match_scalar_bit_for_bit() {
+        let mut g = Lcg(19);
+        let narrow = |v: Vec<f32>| -> Vec<Bf16> { v.iter().map(|&x| f32_to_bf16(x)).collect() };
+        for &p in &PS {
+            let rows = 5;
+            let (ar, ai) = (g.vec(p), g.vec(p));
+            let (fr, fi) = (g.vec(p), g.vec(p));
+
+            // scale_rows_bf16
+            let (mut br, mut bi) = (narrow(g.vec(rows * p)), narrow(g.vec(rows * p)));
+            let (mut br2, mut bi2) = (br.clone(), bi.clone());
+            scale_rows_bf16(&mut br, &mut bi, &fr, &fi, rows, p);
+            for k in 0..rows {
+                for j in 0..p {
+                    let (b_r, b_i) = (bf16_to_f32(br2[k * p + j]), bf16_to_f32(bi2[k * p + j]));
+                    br2[k * p + j] = f32_to_bf16(fr[j] * b_r - fi[j] * b_i);
+                    bi2[k * p + j] = f32_to_bf16(fr[j] * b_i + fi[j] * b_r);
+                }
+            }
+            assert_eq!(br, br2, "bf16 scale re p={p}");
+            assert_eq!(bi, bi2, "bf16 scale im p={p}");
+
+            // scan_row_resume_bf16 — state stays f32, row narrows
+            let (mut sr, mut si) = (g.vec(p), g.vec(p));
+            let (mut rr, mut ri) = (narrow(g.vec(p)), narrow(g.vec(p)));
+            let (mut sr2, mut si2) = (sr.clone(), si.clone());
+            let (mut rr2, mut ri2) = (rr.clone(), ri.clone());
+            scan_row_resume_bf16(&ar, &ai, &mut sr, &mut si, &mut rr, &mut ri);
+            for j in 0..p {
+                let nr = ar[j] * sr2[j] - ai[j] * si2[j] + bf16_to_f32(rr2[j]);
+                let ni = ar[j] * si2[j] + ai[j] * sr2[j] + bf16_to_f32(ri2[j]);
+                sr2[j] = nr;
+                si2[j] = ni;
+                rr2[j] = f32_to_bf16(nr);
+                ri2[j] = f32_to_bf16(ni);
+            }
+            assert_eq!((sr, si), (sr2, si2), "bf16 resume state p={p}");
+            assert_eq!((rr, ri), (rr2, ri2), "bf16 resume row p={p}");
+
+            // fixup_row_bf16 — carry stays f32, rows widen-add-narrow
+            let (mut fcr, mut fci) = (g.vec(p), g.vec(p));
+            let (mut xr, mut xi) = (narrow(g.vec(p)), narrow(g.vec(p)));
+            let (mut fcr2, mut fci2) = (fcr.clone(), fci.clone());
+            let (mut xr2, mut xi2) = (xr.clone(), xi.clone());
+            fixup_row_bf16(&ar, &ai, &mut fcr, &mut fci, &mut xr, &mut xi);
+            for j in 0..p {
+                let nr = fcr2[j] * ar[j] - fci2[j] * ai[j];
+                let ni = fcr2[j] * ai[j] + fci2[j] * ar[j];
+                fcr2[j] = nr;
+                fci2[j] = ni;
+                xr2[j] = f32_to_bf16(bf16_to_f32(xr2[j]) + nr);
+                xi2[j] = f32_to_bf16(bf16_to_f32(xi2[j]) + ni);
+            }
+            assert_eq!((fcr, fci), (fcr2, fci2), "bf16 fixup carry p={p}");
+            assert_eq!((xr, xi), (xr2, xi2), "bf16 fixup x p={p}");
+        }
+    }
+
+    /// bf16 projection block vs the scalar widen-first reference — exact
+    /// equality (widening is exact, the f64 reduction order is shared).
+    #[test]
+    fn bf16_project_row_matches_scalar_bit_for_bit() {
+        let mut g = Lcg(23);
+        for &h in &[1usize, 3, 4, 5, 11, 16] {
+            for &p2 in &[1usize, 2, 8, 33] {
+                let ct: Vec<C64> =
+                    (0..h * p2).map(|_| C64::new(g.f32() as f64, g.f32() as f64)).collect();
+                let xr: Vec<Bf16> = g.vec(p2).iter().map(|&x| f32_to_bf16(x)).collect();
+                let xi: Vec<Bf16> = g.vec(p2).iter().map(|&x| f32_to_bf16(x)).collect();
+                let mut y = g.vec(h);
+                let mut y2 = y.clone();
+                project_row_bf16(&ct, &xr, &xi, &mut y, h, p2);
+                for r in 0..h {
+                    let mut acc = 0.0f64;
+                    for c in 0..p2 {
+                        let cv = ct[r * p2 + c];
+                        let (wr, wi) = (bf16_to_f32(xr[c]) as f64, bf16_to_f32(xi[c]) as f64);
+                        acc += cv.re * wr - cv.im * wi;
+                    }
+                    y2[r] += 2.0 * acc as f32;
+                }
+                assert_eq!(y, y2, "bf16 h={h} p2={p2}");
             }
         }
     }

@@ -11,6 +11,7 @@
 
 use s5::rng::Rng;
 use s5::ssm::api::{Batch, ForwardOptions, SequenceModel, Session};
+use s5::ssm::dtype::Dtype;
 use s5::ssm::engine::EngineWorkspace;
 use s5::ssm::s5::{S5Config, S5Model};
 use s5::testing::alloc_guard::{assert_no_alloc, measure, CountingAlloc};
@@ -61,6 +62,28 @@ fn fused_forward_steady_state_is_alloc_free() {
     assert_eq!(out, warm, "steady-state forward must reproduce the warmup output");
 }
 
+/// The bf16 twin: with bf16 drive planes the fused forward reuses the
+/// workspace's narrow plane family the same way — warmup grows it once,
+/// then repeat forwards of the shape are heap-silent.
+#[test]
+fn fused_forward_bf16_steady_state_is_alloc_free() {
+    let m = model(7);
+    let opts = ForwardOptions::new().with_dtype(Dtype::Bf16);
+    let (b, l, d) = (2usize, 48usize, 3usize);
+    let mut rng = Rng::new(11);
+    let u = rng.normal_vec_f32(b * l * d);
+    let mut ws = EngineWorkspace::new();
+    let mut out = vec![0.0f32; b * 4];
+    for _ in 0..2 {
+        m.prefill_into(Batch::new(&u, b, l, d), &opts, &mut ws, &mut out);
+    }
+    let warm = out.clone();
+    assert_no_alloc("steady-state bf16 fused forward", || {
+        m.prefill_into(Batch::new(&u, b, l, d), &opts, &mut ws, &mut out);
+    });
+    assert_eq!(out, warm, "steady-state bf16 forward must reproduce the warmup output");
+}
+
 /// A warmed-up streaming session steps without touching the heap, and the
 /// `step_into` path is bit-identical to the allocating `step`.
 #[test]
@@ -87,4 +110,29 @@ fn session_step_steady_state_is_alloc_free() {
         want = oracle.step(&u);
     }
     assert_eq!(out, want, "steady-state steps must match the oracle replay");
+}
+
+/// The bf16 twin for streaming: a bf16 session (whose chunked prefill
+/// borrows the workspace's bf16 plane family) still steps heap-silently
+/// through `step_into` once warmed up.
+#[test]
+fn session_bf16_steady_state_is_alloc_free() {
+    let m: Arc<dyn SequenceModel> = Arc::new(model(13));
+    let opts = ForwardOptions::new().with_dtype(Dtype::Bf16);
+    let mut sess = Session::new(m, opts);
+    let mut rng = Rng::new(19);
+    let mut out = vec![0.0f32; 4];
+    let chunk = rng.normal_vec_f32(16 * 3);
+    // warmup: grows the stream state's rows and the bf16 prefill planes
+    for _ in 0..2 {
+        sess.prefill(&chunk, 16);
+        let u = rng.normal_vec_f32(3);
+        sess.step_into(&u, &mut out);
+    }
+    let u = rng.normal_vec_f32(3);
+    assert_no_alloc("steady-state bf16 Session::step_into", || {
+        for _ in 0..8 {
+            sess.step_into(&u, &mut out);
+        }
+    });
 }

@@ -24,6 +24,7 @@ use s5::num::C32;
 use s5::rng::Rng;
 use s5::runtime::pool::WorkerPool;
 use s5::ssm::api::{Batch, ForwardOptions, SequenceModel};
+use s5::ssm::dtype::Dtype;
 use s5::ssm::engine::EngineWorkspace;
 use s5::ssm::s5::{S5Config, S5Model};
 use s5::ssm::scan::{
@@ -509,7 +510,10 @@ fn fused_wide_single_stream_tracks_staged_sequential() {
         for &l in &[33usize, 129] {
             let u: Vec<f32> = (0..l * 6).map(|_| g.normal() as f32).collect();
             let dts: Vec<f32> = (0..l).map(|_| g.uniform_in(0.3, 2.5) as f32).collect();
-            let staged = ForwardOptions::new().with_tiling(Tiling::Staged);
+            // pinned f32: the wide path's 1e-4 gate is the f32 carry
+            // reassociation story (bf16 wide is budget-gated separately)
+            let staged =
+                ForwardOptions::new().with_dtype(Dtype::F32).with_tiling(Tiling::Staged);
             let mut ws = EngineWorkspace::new();
             let want = layer.apply_batch_opts(&u, 1, l, None, &staged, &mut ws);
             let want_tv = if bidir {
@@ -528,6 +532,7 @@ fn fused_wide_single_stream_tracks_staged_sequential() {
                             "wide bidir={bidir} L={l} tile={tile} t={t} exec={ename}"
                         );
                         let wide = ForwardOptions::new()
+                            .with_dtype(Dtype::F32)
                             .with_wide()
                             .with_exec(t, exec)
                             .with_tile(tile);
@@ -599,13 +604,21 @@ fn fused_wide_long_l_stays_within_drift_tolerance() {
         &ForwardOptions::new().with_f64_state(),
         &mut ws,
     );
-    let seq32 = layer.apply_batch_opts(&u, 1, l, None, &ForwardOptions::new(), &mut ws);
+    // pinned f32 (this gate is the f32 story; bf16 has its own budget)
+    let seq32 = layer.apply_batch_opts(
+        &u,
+        1,
+        l,
+        None,
+        &ForwardOptions::new().with_dtype(Dtype::F32),
+        &mut ws,
+    );
     let wide32 = layer.apply_batch_opts(
         &u,
         1,
         l,
         None,
-        &ForwardOptions::new().with_wide().with_exec(8, ScanExec::Scoped),
+        &ForwardOptions::new().with_dtype(Dtype::F32).with_wide().with_exec(8, ScanExec::Scoped),
         &mut ws,
     );
     assert_rel_close(&seq32, &wide32, 1e-3, "wide vs sequential f32 at L=64k");
@@ -635,6 +648,158 @@ fn fused_wide_long_l_stays_within_drift_tolerance() {
     if let Some(i) = bits_equal(&want64, &w64) {
         panic!("wide + f64_state must leave the f64 result untouched (diverged at {i})");
     }
+}
+
+// ---------------------------------------------------------------------------
+// bf16 storage: per-dtype invariance and the long-L drift budget
+// ---------------------------------------------------------------------------
+
+/// bf16 drive-plane storage keeps the fused pipeline's invariance story
+/// *within the dtype*: the scan carry stays f32 across tiles and every
+/// bf16 value is exactly one narrow-store/widen-load pair at fixed
+/// pipeline points, so the result is identical for every tile size,
+/// thread budget and executor — including `Tiling::Staged`, which bf16
+/// runs as a single fused tile.
+#[test]
+fn fused_bf16_is_tile_thread_and_executor_invariant() {
+    use s5::ssm::engine::Tiling;
+    use s5::ssm::s5::S5Layer;
+    let pool = Arc::new(WorkerPool::new(3));
+    let mut g = Rng::new(0xBF16);
+    for &bidir in &[false, true] {
+        let layer = S5Layer::init(
+            &S5Config { h: 6, p: 8, j: 1, bidir, ..Default::default() },
+            &mut Rng::new(5),
+        );
+        for &(batch, l) in &[(1usize, 7usize), (2, 33), (3, 40)] {
+            let u: Vec<f32> = (0..batch * l * 6).map(|_| g.normal() as f32).collect();
+            let dts: Vec<f32> =
+                (0..batch * l).map(|_| g.uniform_in(0.3, 2.5) as f32).collect();
+            let staged =
+                ForwardOptions::new().with_dtype(Dtype::Bf16).with_tiling(Tiling::Staged);
+            let mut ws = EngineWorkspace::new();
+            let want = layer.apply_batch_opts(&u, batch, l, None, &staged, &mut ws);
+            // sanity: the narrowed planes really took effect — the bf16
+            // output differs bitwise from the f32 pipeline at these shapes
+            let f32_out = layer.apply_batch_opts(
+                &u,
+                batch,
+                l,
+                None,
+                &ForwardOptions::new().with_dtype(Dtype::F32),
+                &mut ws,
+            );
+            assert!(
+                bits_equal(&want, &f32_out).is_some(),
+                "bf16 silently ran f32 (bidir={bidir} B={batch} L={l})"
+            );
+            let want_tv = if bidir {
+                None
+            } else {
+                Some(layer.apply_ssm_batch_opts(&u, batch, l, Some(&dts), &staged, &mut ws))
+            };
+            for &tile in &[1usize, 3, 8, l + 7] {
+                for &t in &[1usize, 3] {
+                    for exec in
+                        [ScanExec::Scoped, ScanExec::Pool(pool.clone()), ScanExec::Inline]
+                    {
+                        let ename = format!("{exec:?}");
+                        let fused = ForwardOptions::new()
+                            .with_dtype(Dtype::Bf16)
+                            .with_exec(t, exec)
+                            .with_tile(tile);
+                        let mut wsf = EngineWorkspace::new();
+                        let got = layer.apply_batch_opts(&u, batch, l, None, &fused, &mut wsf);
+                        if let Some(i) = bits_equal(&want, &got) {
+                            panic!(
+                                "bf16 fused bidir={bidir} B={batch} L={l} tile={tile} \
+                                 t={t} exec={ename}: diverged from staged bf16 at {i}"
+                            );
+                        }
+                        if let Some(want_tv) = &want_tv {
+                            let got = layer.apply_ssm_batch_opts(
+                                &u,
+                                batch,
+                                l,
+                                Some(&dts),
+                                &fused,
+                                &mut wsf,
+                            );
+                            if let Some(i) = bits_equal(want_tv, &got) {
+                                panic!(
+                                    "bf16 fused TV B={batch} L={l} tile={tile} t={t} \
+                                     exec={ename}: diverged at {i}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The bf16 drift budget at depth (the acceptance gate): a bf16 fused
+/// forward at L = 64k stays within 0.05 relative of the f64-carry
+/// oracle, on the batched path, on the opt-in wide path, and through a
+/// streaming session's chunked prefill (the bf16 storage rounding enters
+/// at fixed narrow-store points while all accumulation stays f32, so the
+/// error does not compound with depth).
+#[test]
+fn fused_bf16_long_l_drift_within_budget() {
+    use s5::ssm::s5::S5Layer;
+    let layer =
+        S5Layer::init(&S5Config { h: 2, p: 4, j: 1, ..Default::default() }, &mut Rng::new(11));
+    let l = 65536usize;
+    let u = Rng::new(12).normal_vec_f32(l * 2);
+    let mut ws = EngineWorkspace::new();
+    let want64 = layer.apply_batch_opts(
+        &u,
+        1,
+        l,
+        None,
+        &ForwardOptions::new().with_f64_state(),
+        &mut ws,
+    );
+    let bf = layer.apply_batch_opts(
+        &u,
+        1,
+        l,
+        None,
+        &ForwardOptions::new().with_dtype(Dtype::Bf16),
+        &mut ws,
+    );
+    assert_rel_close(&want64, &bf, 0.05, "bf16 fused vs f64 oracle at L=64k");
+    // wide bf16: the seeded chunked tile scan reassociates the carry on
+    // top of the storage rounding — still within the same budget
+    let bf_wide = layer.apply_batch_opts(
+        &u,
+        1,
+        l,
+        None,
+        &ForwardOptions::new()
+            .with_dtype(Dtype::Bf16)
+            .with_wide()
+            .with_exec(8, ScanExec::Scoped),
+        &mut ws,
+    );
+    assert_rel_close(&want64, &bf_wide, 0.05, "wide bf16 vs f64 oracle at L=64k");
+    // streaming at depth: a bf16 session prefill (the chunked push path)
+    // tracks the f64-state batched oracle within the same budget
+    let cfg = S5Config { h: 4, p: 4, j: 1, ..Default::default() };
+    let model = S5Model::init(2, 3, 1, &cfg, &mut Rng::new(21));
+    let toks = Rng::new(22).normal_vec_f32(l * 2);
+    let mut ws2 = EngineWorkspace::new();
+    let want = model.prefill(
+        Batch::single(&toks, l, 2),
+        &ForwardOptions::new().with_f64_state(),
+        &mut ws2,
+    );
+    let model: Arc<dyn SequenceModel> = Arc::new(model);
+    let mut sess =
+        s5::ssm::api::Session::new(model, ForwardOptions::new().with_dtype(Dtype::Bf16));
+    let got = sess.prefill(&toks, l);
+    assert_rel_close(&want, &got, 0.05, "bf16 streaming prefill vs f64 oracle at L=64k");
 }
 
 /// The typed `SequenceModel::prefill` surface with pooled options equals

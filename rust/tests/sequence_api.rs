@@ -198,6 +198,71 @@ fn tiled_prefill_equals_step_replay_bit_for_bit() {
     }
 }
 
+/// The bf16 storage dtype keeps the tile-boundary streaming contract
+/// **within the dtype**: per-token step replay ≡ tiled/chunked prefill
+/// bit-for-bit, because the per-step path round-trips its drive and its
+/// projection read through bf16 at exactly the points where a fused bf16
+/// tile narrow-stores (see `ssm::online`).
+#[test]
+fn bf16_tiled_prefill_equals_step_replay_bit_for_bit() {
+    use s5::ssm::dtype::Dtype;
+    let model: Arc<dyn SequenceModel> = Arc::new(s5_model(62, 3));
+    for l in [1usize, 2, 19, 64] {
+        let mut rng = Rng::new(200 + l as u64);
+        let u = rng.normal_vec_f32(l * 2);
+        let bf = ForwardOptions::new().with_dtype(Dtype::Bf16);
+        // pure per-token replay under bf16 (the streaming ground truth)
+        let mut stepper = Session::new(model.clone(), bf.clone());
+        let mut stepped = Vec::new();
+        for k in 0..l {
+            stepped = stepper.step(&u[k * 2..(k + 1) * 2]);
+        }
+        // sanity: the bf16 stream is a *different* stream than f32
+        if l >= 19 {
+            let f32_opts = ForwardOptions::new().with_dtype(Dtype::F32);
+            let mut f32_stepper = Session::new(model.clone(), f32_opts);
+            let mut f32_stepped = Vec::new();
+            for k in 0..l {
+                f32_stepped = f32_stepper.step(&u[k * 2..(k + 1) * 2]);
+            }
+            assert_ne!(stepped, f32_stepped, "bf16 stream silently ran f32 at L={l}");
+        }
+        for tile in [1usize, 3, 5, l, l + 9] {
+            let opts = ForwardOptions::new().with_dtype(Dtype::Bf16).with_tile(tile);
+            // batched tiled prefill under bf16
+            let mut ws = EngineWorkspace::new();
+            let offline = model.prefill(Batch::single(&u, l, 2), &opts, &mut ws);
+            assert_eq!(
+                offline, stepped,
+                "bf16 tiled prefill (tile={tile}) diverged from step replay at L={l}"
+            );
+            // chunked Session::prefill (advance_batch fast path)
+            let mut session = Session::new(model.clone(), opts);
+            let streamed = session.prefill(&u, l);
+            assert_eq!(
+                streamed, stepped,
+                "bf16 chunked Session::prefill (tile={tile}) diverged at L={l}"
+            );
+            // the session state is live: one more step matches replay
+            let extra = rng.normal_vec_f32(2);
+            assert_eq!(
+                session.step(&extra),
+                stepper.step(&extra),
+                "bf16 post-prefill step diverged (tile={tile}, L={l})"
+            );
+            stepper.reset();
+            for k in 0..l {
+                stepper.step(&u[k * 2..(k + 1) * 2]);
+            }
+        }
+        // a staged policy runs as one fused tile under bf16 — same stream
+        let staged = ForwardOptions::new().with_dtype(Dtype::Bf16).with_tiling(Tiling::Staged);
+        let mut ws = EngineWorkspace::new();
+        let offline = model.prefill(Batch::single(&u, l, 2), &staged, &mut ws);
+        assert_eq!(offline, stepped, "bf16 staged prefill diverged from step replay at L={l}");
+    }
+}
+
 /// Bidirectional stacks cannot stream, but their tiled prefill must
 /// equal the staged reference bit-for-bit across tile shapes — including
 /// tiles that don't divide L, T = 1 and T ≥ L.
