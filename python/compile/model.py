@@ -201,7 +201,13 @@ def s5_ssm_apply(
     scale = 2.0 if conj_sym else 1.0
     y = scale * jnp.real(xs @ c_tilde[0].T)
     if bidir:
-        xs_b = _ssm_scan(lam_el, drive[::-1])[::-1]
+        # Backward scan over reversed time. Under irregular sampling the
+        # multipliers must reverse *with* the drive so scan step m pairs
+        # Λ̄, f and B̃u all taken from source row L−1−m (using the
+        # forward-order multipliers here would integrate each reversed
+        # input over another step's Δt).
+        lam_b = lam_el if dts is None else lam_el[::-1]
+        xs_b = _ssm_scan(lam_b, drive[::-1])[::-1]
         y = y + scale * jnp.real(xs_b @ c_tilde[1].T)
     return y + lp["d"] * u
 

@@ -1,0 +1,293 @@
+"""Emit the committed golden parity fixtures under ``rust/tests/fixtures/``.
+
+The Rust engine's only cross-language pin: this script runs the
+``python/compile`` reference (hippo init, ZOH discretization, the scan
+oracles, ``s5_ssm_apply`` / ``s5_layer_apply`` / the classifier) on small
+fixed-seed cases and commits inputs plus expected outputs as npz files the
+pure-Rust ``runtime/npz.rs`` reader can load. ``rust/tests/parity_fixtures.rs``
+pins the engine against every file with per-module tolerances.
+
+Conventions (dictated by the Rust loader):
+
+* every tensor is stored float32 (complex values as ``<name>_re``/``<name>_im``
+  planes) — the Rust loader would downcast ``<f8`` members to f32 anyway, so
+  committing f64 buys nothing on the consuming side;
+* expected values for the *kernel-level* fixtures (init eigenvalues,
+  discretization, scans) are computed in float64/complex128 first, so the
+  committed f32 value is the correctly rounded ground truth;
+* *module-level* expectations (ssm/layer/logits) come from the JAX reference
+  functions themselves — the oracle is the reference implementation, rounding
+  warts and all, and the Rust-side tolerances are sized for the f32-vs-mixed
+  precision gap (measured by ``test_fixture_parity.py``);
+* ``MANIFEST.txt`` records per-file crc32/size and per-tensor shapes so the
+  Rust suite can prove the committed files parse before trusting any of them.
+
+Run offline from ``python/``:  ``python tests/gen_fixtures.py``
+Deterministic: JAX threefry keys + fixed numpy seeds, no network, CPU-only.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from compile import hippo, model  # noqa: E402
+
+REPO = Path(__file__).resolve().parents[2]
+OUT = REPO / "rust" / "tests" / "fixtures"
+
+F32 = np.float32
+
+
+def _f32(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float64).astype(F32)
+
+
+def _planes(z, prefix: str) -> dict:
+    z = np.asarray(z)
+    return {f"{prefix}_re": z.real.astype(F32), f"{prefix}_im": z.imag.astype(F32)}
+
+
+def _zoh(lam: np.ndarray, dt: np.ndarray):
+    """float64 ZOH: Λ̄ = exp(ΛΔ), f = (Λ̄ − 1)/Λ (the eq. 6 pair)."""
+    lam = lam.astype(np.complex128)
+    dt = dt.astype(np.float64)
+    lam_bar = np.exp(lam * dt)
+    scale = (lam_bar - 1.0) / lam
+    return lam_bar, scale
+
+
+def _scan_sequential(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """x_k = a_k ∘ x_{k−1} + b_k in complex128; a is (P,) or (L, P)."""
+    length, p = b.shape
+    a = np.broadcast_to(np.asarray(a, np.complex128), (length, p))
+    x = np.zeros(p, np.complex128)
+    out = np.empty((length, p), np.complex128)
+    for k in range(length):
+        x = a[k] * x + b[k].astype(np.complex128)
+        out[k] = x
+    return out
+
+
+# --------------------------------------------------------------------------
+# Fixture builders
+# --------------------------------------------------------------------------
+
+def fx_hippo() -> dict:
+    """Block-diagonal HiPPO-N init: eigenvalues per (p, j, conj_sym) case.
+
+    Only eigenvalues are pinned: eigen*vector* phases are solver-specific
+    (LAPACK here, cyclic Jacobi in Rust), so V itself is not comparable —
+    the model-level fixtures cover the eigenbasis end-to-end by exporting
+    concrete B̃/C̃ parameters instead.
+    """
+    arrays = {}
+    cases = [(8, 1, True), (16, 4, True), (8, 2, False)]
+    for i, (p, j, conj) in enumerate(cases):
+        lam, _v, _vinv = hippo.block_diag_hippo_init(p, j, conj)
+        arrays[f"case{i}.meta"] = _f32([p, j, 1.0 if conj else 0.0])
+        arrays.update(_planes(lam, f"case{i}.lambda"))
+    return arrays
+
+
+def fx_discretize() -> dict:
+    """ZOH discretization of the HiPPO-N spectrum, vector and scalar Δt."""
+    lam, _v, _vinv = hippo.block_diag_hippo_init(16, 1, True)  # P2 = 8
+    lam = np.asarray(lam)
+    arrays = dict(_planes(lam, "lambda"))
+
+    dt_vec = np.geomspace(1e-3, 1e-1, lam.shape[0])
+    lam_bar, scale = _zoh(lam, dt_vec)
+    arrays["vec.dt"] = _f32(dt_vec)
+    arrays.update(_planes(lam_bar, "vec.lam_bar"))
+    arrays.update(_planes(scale, "vec.scale"))
+
+    dt_s = np.array([0.02])
+    lam_bar, scale = _zoh(lam, dt_s)
+    arrays["scalar.dt"] = _f32(dt_s)
+    arrays.update(_planes(lam_bar, "scalar.lam_bar"))
+    arrays.update(_planes(scale, "scalar.scale"))
+    return arrays
+
+
+def fx_scan_ti() -> dict:
+    """Time-invariant linear recurrence: realistic Λ̄ magnitudes, L = 48."""
+    rng = np.random.default_rng(11)
+    p2, length = 6, 48
+    lam = -0.5 - 1j * np.arange(1, p2 + 1, dtype=np.float64) * 2.0
+    a = np.exp(lam * rng.uniform(0.01, 0.08, p2))
+    drive = (rng.standard_normal((length, p2))
+             + 1j * rng.standard_normal((length, p2))) * 0.5
+    # the committed drive is f32; the reference must scan the f32 values
+    a32, d32 = a.astype(np.complex64), drive.astype(np.complex64)
+    xs = _scan_sequential(a32.astype(np.complex128), d32.astype(np.complex128))
+    arrays = dict(_planes(a32, "a"))
+    arrays.update(_planes(d32, "drive"))
+    arrays.update(_planes(xs, "x"))
+    return arrays
+
+
+def fx_scan_tv() -> dict:
+    """Time-varying multipliers (irregular-Δt shape), L = 40."""
+    rng = np.random.default_rng(13)
+    p2, length = 5, 40
+    lam = -0.5 - 1j * np.linspace(0.5, 9.0, p2)
+    dts = rng.uniform(0.3, 2.5, (length, 1)) * rng.uniform(0.01, 0.08, (1, p2))
+    a = np.exp(lam[None, :] * dts)
+    drive = (rng.standard_normal((length, p2))
+             + 1j * rng.standard_normal((length, p2))) * 0.5
+    a32, d32 = a.astype(np.complex64), drive.astype(np.complex64)
+    xs = _scan_sequential(a32.astype(np.complex128), d32.astype(np.complex128))
+    arrays = dict(_planes(a32, "a"))
+    arrays.update(_planes(d32, "drive"))
+    arrays.update(_planes(xs, "x"))
+    return arrays
+
+
+def _layer_arrays(lp: dict, prefix: str) -> dict:
+    """Flatten an init_s5_layer param dict into fixture tensors."""
+    out = {}
+    for k, v in lp.items():
+        out[f"{prefix}.{k}"] = np.asarray(v).astype(F32)
+    return out
+
+
+def fx_ssm() -> dict:
+    """`s5_ssm_apply` (no norm/gate): TI, timescale, TV, bidir, bidir+TV."""
+    key = jax.random.PRNGKey(5)
+    k_uni, k_bi, k_u, k_dt = jax.random.split(key, 4)
+    h, batch, length = 8, 2, 40
+    uni = model.init_s5_layer(k_uni, h=h, p=16, j=2)            # P2 = 8
+    bi = model.init_s5_layer(k_bi, h=h, p=8, j=1, bidir=True)   # P2 = 4
+    u = jax.random.normal(k_u, (batch, length, h), jnp.float32)
+    dts = jax.random.uniform(k_dt, (batch, length), jnp.float32, 0.3, 2.5)
+
+    def run2(lp, timescale=1.0, use_dts=False, bidir=False):
+        rows = []
+        for b in range(batch):
+            rows.append(np.asarray(model.s5_ssm_apply(
+                lp, u[b], timescale=timescale,
+                dts=dts[b] if use_dts else None, bidir=bidir)))
+        return np.stack(rows)
+
+    arrays = _layer_arrays(uni, "uni")
+    arrays.update(_layer_arrays(bi, "bi"))
+    arrays["input.u"] = np.asarray(u).astype(F32)
+    arrays["input.dts"] = np.asarray(dts).astype(F32)
+    arrays["input.timescale"] = _f32([1.0, 0.5])
+    arrays["expect.uni_ti"] = run2(uni).astype(F32)
+    arrays["expect.uni_ts"] = run2(uni, timescale=0.5).astype(F32)
+    arrays["expect.uni_tv"] = run2(uni, use_dts=True).astype(F32)
+    arrays["expect.bi_ti"] = run2(bi, bidir=True).astype(F32)
+    arrays["expect.bi_tv"] = run2(bi, use_dts=True, bidir=True).astype(F32)
+    return arrays
+
+
+def fx_layer() -> dict:
+    """Full layer: pre-norm → SSM → GELU → weighted-sigmoid gate → residual."""
+    key = jax.random.PRNGKey(7)
+    k_uni, k_bi, k_u, k_dt, k_ns = jax.random.split(key, 5)
+    h, batch, length = 8, 2, 32
+    uni = model.init_s5_layer(k_uni, h=h, p=16, j=2)
+    bi = model.init_s5_layer(k_bi, h=h, p=8, j=1, bidir=True)
+    # non-trivial norm affine so the fixture actually exercises it
+    uni["norm_scale"] = 1.0 + 0.1 * jax.random.normal(k_ns, (h,), jnp.float32)
+    uni["norm_bias"] = 0.05 * jax.random.normal(k_dt, (h,), jnp.float32)
+    u = jax.random.normal(k_u, (batch, length, h), jnp.float32)
+    dts = jax.random.uniform(k_dt, (batch, length), jnp.float32, 0.3, 2.5)
+
+    def run(lp, use_dts=False, bidir=False):
+        return np.stack([
+            np.asarray(model.s5_layer_apply(
+                lp, u[b], dts=dts[b] if use_dts else None, bidir=bidir))
+            for b in range(batch)
+        ])
+
+    arrays = _layer_arrays(uni, "uni")
+    arrays.update(_layer_arrays(bi, "bi"))
+    arrays["input.u"] = np.asarray(u).astype(F32)
+    arrays["input.dts"] = np.asarray(dts).astype(F32)
+    arrays["expect.uni_y"] = run(uni).astype(F32)
+    arrays["expect.uni_tv_y"] = run(uni, use_dts=True).astype(F32)
+    arrays["expect.bi_y"] = run(bi, bidir=True).astype(F32)
+    return arrays
+
+
+def fx_model() -> dict:
+    """Classifier logits end-to-end. The param tensors use the Rust
+    checkpoint naming (`params.encoder.w`, `params.layers.<i>.*`, ...) so
+    the fixture doubles as an `S5Model::from_param_store` checkpoint; the
+    extra `input.*`/`expect.*` tensors are ignored by the loader."""
+    key = jax.random.PRNGKey(9)
+    k_p, k_u = jax.random.split(key)
+    d_in, classes, depth, h, p = 3, 4, 2, 8, 8
+    batch, length = 3, 24
+    params = model.init_classifier(k_p, d_in, classes, depth, h, p, bidir=True)
+    u = jax.random.normal(k_u, (batch, length, d_in), jnp.float32)
+
+    arrays = {
+        "params.encoder.w": np.asarray(params["encoder"]["w"]).astype(F32),
+        "params.encoder.bias": np.asarray(params["encoder"]["bias"]).astype(F32),
+        "params.decoder.w": np.asarray(params["decoder"]["w"]).astype(F32),
+        "params.decoder.bias": np.asarray(params["decoder"]["bias"]).astype(F32),
+    }
+    for i, lp in enumerate(params["layers"]):
+        arrays.update(_layer_arrays(lp, f"params.layers.{i}"))
+
+    logits = model.batched_classifier_apply(params, u, 1.0, bidir=True)
+    logits_ts = model.batched_classifier_apply(params, u, 0.5, bidir=True)
+    arrays["input.u"] = np.asarray(u).astype(F32)
+    arrays["input.timescale"] = _f32([1.0, 0.5])
+    arrays["expect.logits"] = np.asarray(logits).astype(F32)
+    arrays["expect.logits_ts"] = np.asarray(logits_ts).astype(F32)
+    return arrays
+
+
+FIXTURES = {
+    "fx_hippo.npz": fx_hippo,
+    "fx_discretize.npz": fx_discretize,
+    "fx_scan_ti.npz": fx_scan_ti,
+    "fx_scan_tv.npz": fx_scan_tv,
+    "fx_ssm.npz": fx_ssm,
+    "fx_layer.npz": fx_layer,
+    "fx_model.npz": fx_model,
+}
+
+
+def emit(out_dir: Path = OUT) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = [
+        "# Golden parity fixture manifest — generated by",
+        "# python/tests/gen_fixtures.py; verified by the",
+        "# `manifest_matches_committed_fixtures` test in",
+        "# rust/tests/parity_fixtures.rs (crc32 = IEEE reflected, whole file).",
+        "#",
+        "# file <name> <crc32-hex8> <size-bytes>",
+        "# tensor <file>:<name> <d0>x<d1>x...",
+    ]
+    for fname, build in FIXTURES.items():
+        arrays = build()
+        path = out_dir / fname
+        # np.savez = STORED zip of npy members — what runtime/npz.rs reads
+        np.savez(path, **arrays)
+        raw = path.read_bytes()
+        manifest.append(f"file {fname} {zlib.crc32(raw) & 0xFFFFFFFF:08x} {len(raw)}")
+        for name in sorted(arrays):
+            shape = "x".join(str(d) for d in arrays[name].shape) or "1"
+            manifest.append(f"tensor {fname}:{name} {shape}")
+        print(f"wrote {path} ({len(raw)} bytes, {len(arrays)} tensors)")
+    (out_dir / "MANIFEST.txt").write_text("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir / 'MANIFEST.txt'}")
+
+
+if __name__ == "__main__":
+    emit()

@@ -1,0 +1,280 @@
+"""Cross-validate the Rust engine's numeric pipeline against the JAX
+reference on the committed golden fixtures — without a Rust toolchain.
+
+``rust_mirror`` below is a literal numpy re-statement of the Rust engine's
+op order (f64 drive accumulation rounded to complex64, f64 ZOH
+discretization rounded to complex64, a complex64 sequential scan, f64
+projection with the conjugate-symmetric 2·Re(·) factor, f32 norm/GELU/
+gate). Asserting mirror ≡ fixture-expected within the *same tolerances*
+``rust/tests/parity_fixtures.rs`` uses gives the committed tolerances an
+offline, re-runnable justification: if the mirror fits, the only way the
+real Rust engine can miss is by diverging from its own documented op
+order — exactly what the fixture suite exists to catch in CI.
+
+Run from ``python/``:  ``python -m pytest tests/test_fixture_parity.py -q``
+(regenerate fixtures first via ``python tests/gen_fixtures.py`` if stale).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+FIXDIR = Path(__file__).resolve().parents[2] / "rust" / "tests" / "fixtures"
+
+# The per-module tolerance table — keep in sync with the table at the top
+# of rust/tests/parity_fixtures.rs (|got − want| ≤ ATOL + RTOL·|want|).
+TOL = {
+    "hippo": (1e-5, 1e-6),
+    "discretize": (1e-6, 1e-5),
+    "scan": (1e-5, 1e-4),
+    "ssm": (5e-4, 5e-4),
+    "layer": (5e-4, 5e-4),
+    "logits": (5e-4, 5e-4),
+}
+
+
+def load(name: str) -> dict:
+    path = FIXDIR / name
+    if not path.exists():
+        pytest.fail(f"{path} missing — run python tests/gen_fixtures.py")
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def assert_close(got, want, module: str, what: str) -> None:
+    got = np.asarray(got, np.float64)
+    want = np.asarray(want, np.float64)
+    atol, rtol = TOL[module]
+    err = np.abs(got - want) - rtol * np.abs(want)
+    worst = float(err.max()) if err.size else 0.0
+    assert worst <= atol, (
+        f"{what}: worst |Δ|−rtol·|ref| = {worst:.3e} exceeds atol {atol:.1e}"
+    )
+
+
+# --------------------------------------------------------------------------
+# rust_mirror: the engine's op order, in numpy
+# --------------------------------------------------------------------------
+
+class rust_mirror:
+    """Numpy mirror of rust/src/ssm/{discretize,s5}.rs op order."""
+
+    @staticmethod
+    def zoh(lam64: np.ndarray, dt64: np.ndarray):
+        """discretize_diag: f64 compute, C32 rounding at the cache edge."""
+        lam_bar = np.exp(lam64 * dt64)
+        small = np.abs(lam64) < 1e-12
+        scale = np.where(small, dt64.astype(np.complex128),
+                         (lam_bar - 1.0) / np.where(small, 1.0, lam64))
+        return lam_bar, scale
+
+    @staticmethod
+    def drive(u: np.ndarray, b_tilde64: np.ndarray) -> np.ndarray:
+        """drive_seq: per-element f64 accumulation → to_c32."""
+        acc = u.astype(np.float64) @ b_tilde64.T
+        return acc.astype(np.complex64)
+
+    @staticmethod
+    def scan(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """scan_ti/scan_tv: the complex64 sequential recurrence."""
+        length, p2 = b.shape
+        a = np.broadcast_to(a.astype(np.complex64), (length, p2))
+        b = b.astype(np.complex64)
+        x = np.zeros(p2, np.complex64)
+        out = np.empty((length, p2), np.complex64)
+        for k in range(length):
+            x = a[k] * x + b[k]
+            out[k] = x
+        return out
+
+    @staticmethod
+    def project(xs: np.ndarray, ct64: np.ndarray) -> np.ndarray:
+        """project_seq: f64 reduction, ×2 (conj-sym), rounded to f32."""
+        acc = xs.astype(np.complex128) @ ct64.T
+        return (2.0 * acc.real).astype(np.float32)
+
+    @classmethod
+    def ssm(cls, lp, u, timescale=1.0, dts=None, bidir=False):
+        """apply_ssm (staged planar op order) for one (L, H) sequence."""
+        lam = lp["lambda_re"].astype(np.float64) + 1j * lp["lambda_im"].astype(np.float64)
+        b64 = lp["b_re"].astype(np.float64) + 1j * lp["b_im"].astype(np.float64)
+        c_re, c_im = np.atleast_3d(lp["c_re"]), np.atleast_3d(lp["c_im"])
+        if c_re.ndim == 2:
+            c_re, c_im = c_re[None], c_im[None]
+        c64 = c_re.astype(np.float64) + 1j * c_im.astype(np.float64)
+        base_dt = np.exp(lp["log_dt"].astype(np.float64)) * timescale
+        length = u.shape[0]
+
+        bu = cls.drive(u, b64)
+        if dts is None:
+            lam_bar64, scale64 = cls.zoh(lam, base_dt)
+            a32 = lam_bar64.astype(np.complex64)
+            f32c = scale64.astype(np.complex64)
+            xs = cls.scan(a32, bu * f32c)
+            a_el, f_el = None, None
+        else:
+            dt_k = base_dt[None, :] * dts.astype(np.float64)[:, None]
+            lam_bar64, scale64 = cls.zoh(lam[None, :], dt_k)
+            a_el = lam_bar64.astype(np.complex64)
+            f_el = scale64.astype(np.complex64)
+            xs = cls.scan(a_el, bu * f_el)
+        y = cls.project(xs, c64[0])
+        if bidir:
+            if dts is None:
+                # TI backward: drive_rev folds the f64 scale pre-rounding
+                bu_rev = ((u[::-1].astype(np.float64) @ b64.T)
+                          * scale64).astype(np.complex64)
+                xs_b = cls.scan(a32, bu_rev)[::-1]
+            else:
+                # TV backward: multipliers/scale reverse with the drive
+                bu_rev = cls.drive(u[::-1], b64)
+                xs_b = cls.scan(a_el[::-1], bu_rev * f_el[::-1])[::-1]
+            y = y + cls.project(xs_b, c64[1])
+        return (y + lp["d"] * u).astype(np.float32)
+
+    @staticmethod
+    def layer_norm(x, scale, bias):
+        x = x.astype(np.float32)
+        mu = np.mean(x, axis=-1, keepdims=True, dtype=np.float32)
+        var = np.mean((x - mu) ** 2, axis=-1, keepdims=True, dtype=np.float32)
+        inv = 1.0 / np.sqrt(var + np.float32(1e-6))
+        return (x - mu) * inv * scale + bias
+
+    @staticmethod
+    def gelu(x):
+        c = np.float32(0.7978845608)
+        x = x.astype(np.float32)
+        return 0.5 * x * (1.0 + np.tanh(c * (x + 0.044715 * x * x * x)))
+
+    @classmethod
+    def layer(cls, lp, u, timescale=1.0, dts=None, bidir=False):
+        v = cls.layer_norm(u, lp["norm_scale"], lp["norm_bias"])
+        y = cls.ssm(lp, v, timescale, dts, bidir)
+        g = cls.gelu(y)
+        sig = 1.0 / (1.0 + np.exp(-(g @ lp["gate_w"].T.astype(np.float32))))
+        return (u + g * sig).astype(np.float32)
+
+
+def sub(d: dict, prefix: str) -> dict:
+    n = len(prefix) + 1
+    return {k[n:]: v for k, v in d.items() if k.startswith(prefix + ".")}
+
+
+# --------------------------------------------------------------------------
+# Tests
+# --------------------------------------------------------------------------
+
+def test_manifest_matches_files():
+    lines = (FIXDIR / "MANIFEST.txt").read_text().splitlines()
+    files = {}
+    for ln in lines:
+        if ln.startswith("file "):
+            _, name, crc, size = ln.split()
+            files[name] = (int(crc, 16), int(size))
+    assert files, "manifest lists no fixture files"
+    for name, (crc, size) in files.items():
+        raw = (FIXDIR / name).read_bytes()
+        assert len(raw) == size, f"{name}: size drifted from manifest"
+        assert zlib.crc32(raw) & 0xFFFFFFFF == crc, f"{name}: crc drifted"
+
+
+def test_hippo_eigenvalues():
+    from compile import hippo
+
+    z = load("fx_hippo.npz")
+    for i in range(3):
+        p, j, conj = z[f"case{i}.meta"]
+        lam, _v, _vinv = hippo.block_diag_hippo_init(int(p), int(j), bool(conj))
+        assert_close(np.real(lam), z[f"case{i}.lambda_re"], "hippo", f"case{i} re")
+        assert_close(np.imag(lam), z[f"case{i}.lambda_im"], "hippo", f"case{i} im")
+
+
+def test_discretize_mirror():
+    z = load("fx_discretize.npz")
+    lam = z["lambda_re"].astype(np.float64) + 1j * z["lambda_im"].astype(np.float64)
+    for case in ("vec", "scalar"):
+        dt = z[f"{case}.dt"].astype(np.float64)
+        lam_bar, scale = rust_mirror.zoh(lam, dt)
+        assert_close(lam_bar.real, z[f"{case}.lam_bar_re"], "discretize", f"{case} Λ̄re")
+        assert_close(lam_bar.imag, z[f"{case}.lam_bar_im"], "discretize", f"{case} Λ̄im")
+        assert_close(scale.real, z[f"{case}.scale_re"], "discretize", f"{case} f re")
+        assert_close(scale.imag, z[f"{case}.scale_im"], "discretize", f"{case} f im")
+
+
+@pytest.mark.parametrize("name", ["fx_scan_ti.npz", "fx_scan_tv.npz"])
+def test_scan_mirror(name):
+    z = load(name)
+    a = z["a_re"].astype(np.complex64) + 1j * z["a_im"].astype(np.complex64)
+    b = z["drive_re"].astype(np.complex64) + 1j * z["drive_im"].astype(np.complex64)
+    xs = rust_mirror.scan(a, b)
+    assert_close(xs.real, z["x_re"], "scan", f"{name} re")
+    assert_close(xs.imag, z["x_im"], "scan", f"{name} im")
+
+
+def test_ssm_mirror():
+    z = load("fx_ssm.npz")
+    uni, bi = sub(z, "uni"), sub(z, "bi")
+    u, dts = z["input.u"], z["input.dts"]
+    cases = [
+        ("expect.uni_ti", uni, dict()),
+        ("expect.uni_ts", uni, dict(timescale=0.5)),
+        ("expect.uni_tv", uni, dict(use_dts=True)),
+        ("expect.bi_ti", bi, dict(bidir=True)),
+        ("expect.bi_tv", bi, dict(use_dts=True, bidir=True)),
+    ]
+    for key, lp, kw in cases:
+        got = np.stack([
+            rust_mirror.ssm(
+                lp, u[b], timescale=kw.get("timescale", 1.0),
+                dts=dts[b] if kw.get("use_dts") else None,
+                bidir=kw.get("bidir", False))
+            for b in range(u.shape[0])
+        ])
+        assert_close(got, z[key], "ssm", key)
+
+
+def test_layer_mirror():
+    z = load("fx_layer.npz")
+    uni, bi = sub(z, "uni"), sub(z, "bi")
+    u, dts = z["input.u"], z["input.dts"]
+    for key, lp, kw in [
+        ("expect.uni_y", uni, dict()),
+        ("expect.uni_tv_y", uni, dict(use_dts=True)),
+        ("expect.bi_y", bi, dict(bidir=True)),
+    ]:
+        got = np.stack([
+            rust_mirror.layer(
+                lp, u[b], dts=dts[b] if kw.get("use_dts") else None,
+                bidir=kw.get("bidir", False))
+            for b in range(u.shape[0])
+        ])
+        assert_close(got, z[key], "layer", key)
+
+
+def test_classifier_mirror():
+    z = load("fx_model.npz")
+    u = z["input.u"]
+    enc_w, enc_b = z["params.encoder.w"], z["params.encoder.bias"]
+    dec_w, dec_b = z["params.decoder.w"], z["params.decoder.bias"]
+    layers = [sub(z, f"params.layers.{i}") for i in range(2)]
+    for key, ts in [("expect.logits", 1.0), ("expect.logits_ts", 0.5)]:
+        out = []
+        for b in range(u.shape[0]):
+            x = (u[b] @ enc_w.T + enc_b).astype(np.float32)
+            for lp in layers:
+                x = rust_mirror.layer(lp, x, timescale=ts, bidir=True)
+            pooled = np.mean(x, axis=0, dtype=np.float32)
+            out.append((pooled @ dec_w.T + dec_b).astype(np.float32))
+        assert_close(np.stack(out), z[key], "logits", key)
+
+
+if __name__ == "__main__":
+    # `python tests/test_fixture_parity.py` must never silently no-op.
+    raise SystemExit(pytest.main([__file__, "-q"] + sys.argv[1:]))

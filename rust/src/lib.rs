@@ -230,6 +230,52 @@
 //! * **Streaming.** A session step is latency-bound O(P·H) and always
 //!   runs inline on the caller's thread; only prefills fan out.
 //!
+//! ## Oracles & parity
+//!
+//! "Correct" is defined by three oracle tiers, ordered by strictness:
+//!
+//! 1. **The in-process bit-for-bit oracle.** The interleaved-`[C32]`
+//!    layout over the untiled staged pipeline
+//!    ([`ssm::scan::ScanLayout::Interleaved`] +
+//!    [`ssm::engine::Tiling::Staged`]) is the reference every optimized
+//!    path must reproduce **exactly**: fused tiling (any tile length),
+//!    planar layout, explicit-lane SIMD kernels, every executor and
+//!    thread budget, and each storage dtype against itself. The
+//!    equivalence matrix in `tests/scan_matrix.rs` pins this, and CI
+//!    re-runs it across tile/dtype/pool sweeps.
+//! 2. **The f64-state drift oracle.** For contracts that are
+//!    tolerance-bound rather than bitwise — the opt-in wide path's carry
+//!    reassociation, bf16 storage drift at long L —
+//!    [`ssm::api::ForwardOptions::with_f64_state`] provides the
+//!    higher-precision reference the bounds are measured against.
+//! 3. **The cross-language golden fixtures.** `tests/fixtures/*.npz` are
+//!    small committed input/expected pairs generated by the Python
+//!    reference implementation (`python/tests/gen_fixtures.py`, pure
+//!    NumPy, offline and deterministic) for every module boundary:
+//!    HiPPO-LegS init ([`ssm::hippo::block_diag_hippo_init`]), ZOH
+//!    discretization ([`ssm::discretize::discretize_one`]), the TI/TV
+//!    scans, `s5_ssm_apply` (incl. bidirectional), the full layer, and
+//!    classifier logits ([`ssm::s5::S5Model::from_param_store`]).
+//!    `tests/parity_fixtures.rs` loads them through
+//!    [`runtime::npz::NpzStore`], first verifying the committed bytes
+//!    against `tests/fixtures/MANIFEST.txt` (size + CRC-32 via
+//!    [`runtime::npz::crc32`] + per-tensor shapes), then pins the engine
+//!    across a 12-config sweep (fused/staged × planar/interleaved ×
+//!    executors × f64-state/wide/bf16). Tolerances are per tier:
+//!    tight f32 bounds for init/discretize/scan primitives, 5e-4 for
+//!    module-level outputs (one f32 run vs. another), 5e-2 for bf16
+//!    storage. Unlike the PJRT-based `tests/parity.rs` (which needs
+//!    `make artifacts` and is `#[ignore]`d without it), the fixture
+//!    suite runs everywhere and **cannot silently skip** — missing or
+//!    mismatched fixtures are a panic, not an ignore.
+//!
+//! One convention the fixtures pin deliberately: in a **bidirectional**
+//! layer under **time-varying** Δt, the backward scan reverses the Δt
+//! multipliers *together with* the drive — step `k` of the backward scan
+//! uses Λ̄ and B̃u discretized at source row `l−1−k`. Both the Python
+//! reference and all three Rust paths implement this; the `bi_tv` fixture
+//! case is the regression pin.
+//!
 //! ## Module map
 //!
 //! | module | role |

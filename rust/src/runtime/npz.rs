@@ -472,8 +472,11 @@ fn write_central_header(out: &mut Vec<u8>, name: &str, crc: u32, size: u32, offs
     out.extend_from_slice(name.as_bytes());
 }
 
-/// CRC-32 (IEEE, reflected) — required by the zip format.
-fn crc32(data: &[u8]) -> u32 {
+/// CRC-32 (IEEE, reflected) — required by the zip format. Public so the
+/// golden-fixture harness (`tests/parity_fixtures.rs`) can verify the
+/// committed fixture files against their MANIFEST checksums with the
+/// same polynomial Python's `zlib.crc32` uses.
+pub fn crc32(data: &[u8]) -> u32 {
     let mut crc = !0u32;
     for &byte in data {
         crc ^= byte as u32;

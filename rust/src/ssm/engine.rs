@@ -547,7 +547,8 @@ fn dtype_env_override() -> Dtype {
 /// | `bu_re`/`bu_im`          | (B, L, P2) | (U, T, P2) | planar drive → states       |
 /// | `bu_re16`/`bu_im16`      | —          | (U, T, P2) | planar drive, bf16 storage  |
 /// | `bu_rev_re`/`bu_rev_im`  | (B, L, P2) | —          | planar reversed drive       |
-/// | `a_tv_re`/`a_tv_im`      | (B, L, P2) | (B, T, P2) | planar TV multipliers       |
+/// | `a_tv_re`/`a_tv_im`      | (B, L, P2) | (U, T, P2) | planar TV multipliers       |
+/// | `dts_rev`                | (B, L)     | (B, L)     | reversed Δt (bidir TV)      |
 /// | `state_re`/`state_im`    | —          | (U, P2)    | fused carry states (f32)    |
 /// | `state64_re`/`state64_im`| —          | (U, P2)    | fused carry states (f64)    |
 /// | `scan`                   | O(T·P2)    | —          | pooled chunk summaries      |
@@ -568,6 +569,7 @@ pub struct SsmBuffers {
     pub(crate) bu_rev_im: Vec<f32>,
     pub(crate) a_tv_re: Vec<f32>,
     pub(crate) a_tv_im: Vec<f32>,
+    pub(crate) dts_rev: Vec<f32>,
     pub(crate) state_re: Vec<f32>,
     pub(crate) state_im: Vec<f32>,
     pub(crate) state64_re: Vec<f64>,
@@ -584,6 +586,7 @@ impl SsmBuffers {
                 + self.bu_rev_im.capacity()
                 + self.a_tv_re.capacity()
                 + self.a_tv_im.capacity()
+                + self.dts_rev.capacity()
                 + self.state_re.capacity()
                 + self.state_im.capacity())
                 * 4

@@ -112,14 +112,18 @@ pub(crate) struct FusedUnit<'a, T: ScanElem = f32> {
     pub dir: usize,
     /// this sequence's (L, H) input rows (pre-normed activations)
     pub useq: &'a [f32],
-    /// per-step Δt multipliers (L) — forward direction only
+    /// per-step Δt multipliers (L) in *scan-time* order: the caller's
+    /// sequence for forward units, the reversed sequence for backward
+    /// units (so row k always discretizes the Δt of the source step the
+    /// tile drive read)
     pub dseq: Option<&'a [f32]>,
     /// output rows: y (dir 0) or the backward accumulator plane (dir 1)
     pub yseq: &'a mut [f32],
     /// tile drive planes (T, P2), in the policy's storage dtype
     pub dr: &'a mut [T],
     pub di: &'a mut [T],
-    /// tile TV multiplier planes (T, P2) — irregular-Δt forward units only
+    /// tile TV multiplier planes (T, P2) — irregular-Δt units (both
+    /// directions)
     pub tv: Option<(&'a mut [f32], &'a mut [f32])>,
     /// carried f32 scan state (P2)
     pub sr: &'a mut [f32],
@@ -214,7 +218,11 @@ impl S5Layer {
     /// Reversed-time drive for the backward direction of a bidirectional
     /// layer, with the input scaling folded in (matches the original
     /// `(f[r] * acc).to_c32()` op order).
-    fn drive_rev_seq(&self, u: &[f32], l: usize, f: &[C64], bu_rev: &mut [C32]) {
+    /// Reversed-time drive for one sequence. `f` folds the time-invariant
+    /// input scaling in at f64 before the C32 rounding (the TI backward
+    /// pass); `None` leaves the drive raw for the per-row TV scaling of
+    /// the irregular-Δt backward pass.
+    fn drive_rev_seq(&self, u: &[f32], l: usize, f: Option<&[C64]>, bu_rev: &mut [C32]) {
         let (h, p2) = (self.h, self.p2);
         for k in 0..l {
             let src = l - 1 - k;
@@ -223,7 +231,10 @@ impl S5Layer {
                 for c in 0..h {
                     acc += self.b_tilde[r * h + c].scale(u[src * h + c] as f64);
                 }
-                bu_rev[k * p2 + r] = (f[r] * acc).to_c32();
+                if let Some(f) = f {
+                    acc = f[r] * acc;
+                }
+                bu_rev[k * p2 + r] = acc.to_c32();
             }
         }
     }
@@ -264,12 +275,13 @@ impl S5Layer {
     // scratch (lint L3; runtime twin in tests/alloc_guard.rs).
 
     /// Planar reversed-time drive with the input scaling folded in
-    /// (mirrors [`S5Layer::drive_rev_seq`]).
+    /// (mirrors [`S5Layer::drive_rev_seq`]); `f: None` leaves the drive
+    /// raw for the TV backward pass.
     fn drive_rev_seq_planar<T: ScanElem>(
         &self,
         u: &[f32],
         l: usize,
-        f: &[C64],
+        f: Option<&[C64]>,
         bur: &mut [T],
         bui: &mut [T],
     ) {
@@ -346,8 +358,10 @@ impl S5Layer {
 
     /// Planar reversed-time drive for one L-tile of the backward
     /// direction: reversed rows `t0..t0+tl` (reversed row k reads source
-    /// row `l−1−k`), with the input scaling folded in — the exact per-row
-    /// ops of [`S5Layer::drive_rev_seq_planar`], windowed.
+    /// row `l−1−k`), with the time-invariant input scaling folded in
+    /// (`f: None` for the TV backward pass, whose per-row scaling runs in
+    /// [`S5Layer::tv_disc_scale_rows`]) — the exact per-row ops of
+    /// [`S5Layer::drive_rev_seq_planar`], windowed.
     #[allow(clippy::too_many_arguments)]
     fn drive_rev_tile_planar<T: ScanElem>(
         &self,
@@ -355,7 +369,7 @@ impl S5Layer {
         l: usize,
         t0: usize,
         tl: usize,
-        f: &[C64],
+        f: Option<&[C64]>,
         bur: &mut [T],
         bui: &mut [T],
     ) {
@@ -367,7 +381,10 @@ impl S5Layer {
                 for c in 0..h {
                     acc += self.b_tilde[r * h + c].scale(u[src * h + c] as f64);
                 }
-                let z = (f[r] * acc).to_c32();
+                if let Some(f) = f {
+                    acc = f[r] * acc;
+                }
+                let z = acc.to_c32();
                 bur[k * p2 + r] = T::from_f32(z.re);
                 bui[k * p2 + r] = T::from_f32(z.im);
             }
@@ -617,39 +634,87 @@ impl S5Layer {
                         _ => Self::scale_seq_planar(dr, di, f_re, f_im, tl, p2),
                     }
                 }
-            } else if parts > 1 {
-                let ex = backend.executor();
-                let useq = unit.useq;
-                ex.run_tasks(
-                    unit.dr[..np]
-                        .chunks_mut(rows_per * p2)
-                        .zip(unit.di[..np].chunks_mut(rows_per * p2))
-                        .enumerate()
-                        .map(|(ci, (dcr, dci))| {
-                            move || {
-                                let rows = dcr.len() / p2;
-                                self.drive_rev_tile_planar(
-                                    useq,
-                                    l,
-                                    t0 + ci * rows_per,
-                                    rows,
-                                    f_rev,
-                                    dcr,
-                                    dci,
-                                );
-                            }
-                        }),
-                );
             } else {
-                self.drive_rev_tile_planar(
-                    unit.useq,
-                    l,
-                    t0,
-                    tl,
-                    f_rev,
-                    &mut unit.dr[..np],
-                    &mut unit.di[..np],
-                );
+                // backward direction: reversed drive. A TV backward unit
+                // carries the *reversed* Δt sequence in `dseq`, so row k
+                // pairs Λ̄, f and B̃u all from source row l−1−(t0+k) —
+                // the same per-row TV pass as the forward direction, just
+                // over a raw (unscaled) reversed drive.
+                let dr = &mut unit.dr[..np];
+                let di = &mut unit.di[..np];
+                let useq = unit.useq;
+                if parts > 1 {
+                    let ex = backend.executor();
+                    match (&mut unit.tv, unit.dseq) {
+                        (Some((atr, ati)), Some(dseq)) => {
+                            let dseq_t = &dseq[t0..t0 + tl];
+                            ex.run_tasks(
+                                dr.chunks_mut(rows_per * p2)
+                                    .zip(di.chunks_mut(rows_per * p2))
+                                    .zip(atr[..np].chunks_mut(rows_per * p2))
+                                    .zip(ati[..np].chunks_mut(rows_per * p2))
+                                    .zip(dseq_t.chunks(rows_per))
+                                    .enumerate()
+                                    .map(|(ci, ((((dcr, dci), acr), aci), dc))| {
+                                        move || {
+                                            let rows = dc.len();
+                                            self.drive_rev_tile_planar(
+                                                useq,
+                                                l,
+                                                t0 + ci * rows_per,
+                                                rows,
+                                                None,
+                                                dcr,
+                                                dci,
+                                            );
+                                            self.tv_disc_scale_rows(
+                                                base_dt, dc, rows, acr, aci, dcr, dci,
+                                            );
+                                        }
+                                    }),
+                            );
+                        }
+                        _ => {
+                            ex.run_tasks(
+                                dr.chunks_mut(rows_per * p2)
+                                    .zip(di.chunks_mut(rows_per * p2))
+                                    .enumerate()
+                                    .map(|(ci, (dcr, dci))| {
+                                        move || {
+                                            let rows = dcr.len() / p2;
+                                            self.drive_rev_tile_planar(
+                                                useq,
+                                                l,
+                                                t0 + ci * rows_per,
+                                                rows,
+                                                Some(f_rev),
+                                                dcr,
+                                                dci,
+                                            );
+                                        }
+                                    }),
+                            );
+                        }
+                    }
+                } else {
+                    match (&mut unit.tv, unit.dseq) {
+                        (Some((atr, ati)), Some(dseq)) => {
+                            self.drive_rev_tile_planar(useq, l, t0, tl, None, dr, di);
+                            self.tv_disc_scale_rows(
+                                base_dt,
+                                &dseq[t0..t0 + tl],
+                                tl,
+                                &mut atr[..np],
+                                &mut ati[..np],
+                                dr,
+                                di,
+                            );
+                        }
+                        _ => {
+                            self.drive_rev_tile_planar(useq, l, t0, tl, Some(f_rev), dr, di);
+                        }
+                    }
+                }
             }
             // scan: sequential within the tile by default, carrying state
             // across tile boundaries (parallelism lives one level up,
@@ -875,6 +940,7 @@ impl S5Layer {
             bu_im16,
             a_tv_re,
             a_tv_im,
+            dts_rev,
             state_re,
             state_im,
             state64_re,
@@ -898,12 +964,30 @@ impl S5Layer {
             state64_im[..n_units * p2].fill(0.0);
         }
         if dts.is_some() {
-            grow(a_tv_re, batch * tcp2);
-            grow(a_tv_im, batch * tcp2);
+            // every unit needs multiplier planes under TV — the backward
+            // direction discretizes per-row too (over reversed Δt)
+            grow(a_tv_re, n_units * tcp2);
+            grow(a_tv_im, n_units * tcp2);
         }
         if bidir {
             grow(y2, batch * sh);
         }
+        // Backward TV units consume the Δt sequence in reversed order so
+        // tile row k (scan time) discretizes source row l−1−k — pairing
+        // Λ̄, f and B̃u from the same source step (the L2 reference
+        // semantics; fixture-pinned by tests/parity_fixtures.rs).
+        let dts_rev: Option<&[f32]> = match (bidir, dts) {
+            (true, Some(dv)) => {
+                grow(dts_rev, batch * l);
+                for b in 0..batch {
+                    for k in 0..l {
+                        dts_rev[b * l + k] = dv[b * l + (l - 1 - k)];
+                    }
+                }
+                Some(&dts_rev[..batch * l])
+            }
+            _ => None,
+        };
 
         // Shard the pipelines across the executor. The decomposition is
         // fixed by the thread budget (never the executor), and each unit
@@ -932,9 +1016,9 @@ impl S5Layer {
         let mut s64i_it =
             if f64_state { Some(state64_im[..n_units * p2].chunks_mut(p2)) } else { None };
         let mut tvr_it =
-            if dts.is_some() { Some(a_tv_re[..batch * tcp2].chunks_mut(tcp2)) } else { None };
+            if dts.is_some() { Some(a_tv_re[..n_units * tcp2].chunks_mut(tcp2)) } else { None };
         let mut tvi_it =
-            if dts.is_some() { Some(a_tv_im[..batch * tcp2].chunks_mut(tcp2)) } else { None };
+            if dts.is_some() { Some(a_tv_im[..n_units * tcp2].chunks_mut(tcp2)) } else { None };
         if shards <= 1 {
             // Single-shard regime: the sequential default, and the B = 1
             // unidirectional serving shape on any backend. Run each unit
@@ -972,11 +1056,14 @@ impl S5Layer {
                     let mut unit = FusedUnit {
                         dir: 1,
                         useq: &u[b * sh..(b + 1) * sh],
-                        dseq: None,
+                        dseq: dts_rev.map(|dv| &dv[b * l..(b + 1) * l]),
                         yseq,
                         dr: dr_it.next().unwrap(),
                         di: di_it.next().unwrap(),
-                        tv: None,
+                        tv: match (&mut tvr_it, &mut tvi_it) {
+                            (Some(r), Some(i)) => Some((r.next().unwrap(), i.next().unwrap())),
+                            _ => None,
+                        },
                         sr: sr_it.next().unwrap(),
                         si: si_it.next().unwrap(),
                         s64: match (&mut s64r_it, &mut s64i_it) {
@@ -1017,11 +1104,14 @@ impl S5Layer {
                     units.push(FusedUnit {
                         dir: 1,
                         useq: &u[b * sh..(b + 1) * sh],
-                        dseq: None,
+                        dseq: dts_rev.map(|dv| &dv[b * l..(b + 1) * l]),
                         yseq,
                         dr: dr_it.next().unwrap(),
                         di: di_it.next().unwrap(),
-                        tv: None,
+                        tv: match (&mut tvr_it, &mut tvi_it) {
+                            (Some(r), Some(i)) => Some((r.next().unwrap(), i.next().unwrap())),
+                            _ => None,
+                        },
                         sr: sr_it.next().unwrap(),
                         si: si_it.next().unwrap(),
                         s64: match (&mut s64r_it, &mut s64i_it) {
@@ -1189,7 +1279,7 @@ impl S5Layer {
         let ex = backend.executor();
         let bidir = self.c_tilde.len() == 2;
         let SsmBuffers {
-            bu_re, bu_im, bu_rev_re, bu_rev_im, a_tv_re, a_tv_im, scan, ..
+            bu_re, bu_im, bu_rev_re, bu_rev_im, a_tv_re, a_tv_im, dts_rev, scan, ..
         } = ssm;
         grow(bu_re, np);
         grow(bu_im, np);
@@ -1263,24 +1353,81 @@ impl S5Layer {
 
         if bidir {
             // backward pass: scan the reversed drive, project back in
-            // natural order. Time-invariant Λ̄ assumed for bidirectional
-            // models (as in L2), also under irregular sampling.
+            // natural order. Under irregular sampling the multipliers
+            // reverse *with* the drive (reversed Δt through the shared TV
+            // row pass), so scan step k pairs Λ̄, f and B̃u from source
+            // row l−1−k — the L2 reference semantics, fixture-pinned by
+            // tests/parity_fixtures.rs.
             let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
             grow(bu_rev_re, np);
             grow(bu_rev_im, np);
-            par_zip2(ex, t, u, sh, bu_rev_re, sp, bu_rev_im, sp, batch, |_, useq, br, bi| {
-                self.drive_rev_seq_planar(useq, l, &d.f64s, br, bi);
-            });
-            backend.scan_batch_ti_planar(
-                &d.a_re,
-                &d.a_im,
-                &mut bu_rev_re[..np],
-                &mut bu_rev_im[..np],
-                batch,
-                l,
-                p2,
-                scan,
-            );
+            match dts {
+                None => {
+                    par_zip2(
+                        ex, t, u, sh, bu_rev_re, sp, bu_rev_im, sp, batch,
+                        |_, useq, br, bi| {
+                            self.drive_rev_seq_planar(useq, l, Some(&d.f64s), br, bi);
+                        },
+                    );
+                    backend.scan_batch_ti_planar(
+                        &d.a_re,
+                        &d.a_im,
+                        &mut bu_rev_re[..np],
+                        &mut bu_rev_im[..np],
+                        batch,
+                        l,
+                        p2,
+                        scan,
+                    );
+                }
+                Some(dts) => {
+                    let base_dt = &d.base_dt;
+                    grow(dts_rev, batch * l);
+                    for b in 0..batch {
+                        for k in 0..l {
+                            dts_rev[b * l + k] = dts[b * l + (l - 1 - k)];
+                        }
+                    }
+                    par_zip2(
+                        ex, t, u, sh, bu_rev_re, sp, bu_rev_im, sp, batch,
+                        |_, useq, br, bi| {
+                            self.drive_rev_seq_planar(useq, l, None, br, bi);
+                        },
+                    );
+                    // multiplier planes: reuse the forward pass's a_tv
+                    // scratch (its values are dead once the forward scan
+                    // ran); the row pass is the same one the forward
+                    // direction and the fused tiles run.
+                    par_zip4(
+                        ex,
+                        t,
+                        &dts_rev[..batch * l],
+                        l,
+                        a_tv_re,
+                        sp,
+                        a_tv_im,
+                        sp,
+                        bu_rev_re,
+                        sp,
+                        bu_rev_im,
+                        sp,
+                        batch,
+                        |_, dseq, ar, ai, br, bi| {
+                            self.tv_disc_scale_rows(base_dt, dseq, l, ar, ai, br, bi);
+                        },
+                    );
+                    backend.scan_batch_tv_planar(
+                        &a_tv_re[..np],
+                        &a_tv_im[..np],
+                        &mut bu_rev_re[..np],
+                        &mut bu_rev_im[..np],
+                        batch,
+                        l,
+                        p2,
+                        scan,
+                    );
+                }
+            }
             let xr = &bu_rev_re[..np];
             let xi = &bu_rev_im[..np];
             par_zip(ex, t, xr, sp, y, sh, batch, |i, xrseq, yseq| {
@@ -1365,14 +1512,39 @@ impl S5Layer {
 
         if bidir {
             // backward pass: scan the reversed drive, project back in
-            // natural order. Time-invariant Λ̄ assumed for bidirectional
-            // models (as in L2), also under irregular sampling.
+            // natural order. Under irregular sampling the multipliers
+            // reverse *with* the drive — the same per-row discretize+scale
+            // ops as the forward TV loop above, indexed at source row
+            // l−1−k, so this stays bit-for-bit with the planar paths.
             let d = ti_disc(disc, slot, &self.lambda, &self.log_dt, timescale);
             grow(bu_rev, np);
-            par_zip(ex, t, u, sh, bu_rev, sp, batch, |_, useq, bseq| {
-                self.drive_rev_seq(useq, l, &d.f64s, bseq);
-            });
-            backend.scan_batch_ti(&d.a32, &mut bu_rev[..np], batch, l, p2, scan);
+            match dts {
+                None => {
+                    par_zip(ex, t, u, sh, bu_rev, sp, batch, |_, useq, bseq| {
+                        self.drive_rev_seq(useq, l, Some(&d.f64s), bseq);
+                    });
+                    backend.scan_batch_ti(&d.a32, &mut bu_rev[..np], batch, l, p2, scan);
+                }
+                Some(dts) => {
+                    let base_dt = &d.base_dt;
+                    par_zip(ex, t, u, sh, bu_rev, sp, batch, |_, useq, bseq| {
+                        self.drive_rev_seq(useq, l, None, bseq);
+                    });
+                    grow(a_tv, np);
+                    par_zip2(ex, t, dts, l, a_tv, sp, bu_rev, sp, batch, |_, dseq, aseq, bseq| {
+                        for k in 0..l {
+                            let dk = dseq[l - 1 - k] as f64;
+                            for r in 0..p2 {
+                                let dt = base_dt[r] * dk;
+                                let (lb, f) = discretize_one(self.lambda[r], dt, Method::Zoh);
+                                aseq[k * p2 + r] = lb.to_c32();
+                                bseq[k * p2 + r] = f.to_c32() * bseq[k * p2 + r];
+                            }
+                        }
+                    });
+                    backend.scan_batch_tv(&a_tv[..np], &mut bu_rev[..np], batch, l, p2, scan);
+                }
+            }
             par_zip(ex, t, &bu_rev[..np], sp, y, sh, batch, |i, xs, yseq| {
                 self.project_seq(xs, l, 1, true, yseq);
                 self.feedthrough_seq(&u[i * sh..(i + 1) * sh], l, yseq);

@@ -6,6 +6,16 @@
 //! the Rust [`s5::ssm::s5::S5Layer`]; outputs must agree to f32 tolerances.
 //! A failure here means the L2 math and the reference implementation have
 //! diverged (or the manifest/param plumbing reordered something).
+//!
+//! These tests need `artifacts/` (built by `make artifacts`, which needs
+//! the Python toolchain + a PJRT plugin), so they are `#[ignore]`d in the
+//! default run and **panic** — never silently pass — when invoked
+//! explicitly (`cargo test --test parity -- --ignored`) without the
+//! artifacts present. The default `cargo test` output therefore shows
+//! them as `ignored`, which is the honest state; the previous
+//! eprintln-and-return-Ok shape reported a green "parity" result on
+//! machines that had never run the compiled model at all. Offline golden
+//! parity (no PJRT needed) lives in `tests/parity_fixtures.rs`.
 
 #![allow(deprecated)] // legacy positional wrappers are the subjects/oracles here
 
@@ -17,14 +27,15 @@ use s5::ssm::s5::S5Layer;
 use std::collections::BTreeMap;
 use std::path::Path;
 
-fn artifacts_dir() -> Option<&'static Path> {
+fn artifacts_dir() -> &'static Path {
     let p = Path::new("artifacts");
-    if p.join("quickstart_fwd.hlo.txt").exists() {
-        Some(p)
-    } else {
-        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
-        None
-    }
+    assert!(
+        p.join("quickstart_fwd.hlo.txt").exists(),
+        "artifacts/ not built — this test was invoked explicitly but has nothing \
+         to check. Run `make artifacts` first (Python + PJRT required); the \
+         offline golden-fixture parity suite is `cargo test --test parity_fixtures`."
+    );
+    p
 }
 
 /// Build an S5Layer from the quickstart npz (the same tensors the HLO gets).
@@ -66,8 +77,9 @@ fn layer_from_store(store: &ParamStore, h: usize, p2: usize) -> S5Layer {
 }
 
 #[test]
+#[ignore = "needs artifacts/ (run `make artifacts`, requires Python + PJRT)"]
 fn quickstart_layer_hlo_matches_rust_oracle() {
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
     let client = Client::cpu().unwrap();
     let art = Artifact::load(dir, "quickstart_fwd", &client).unwrap();
     let store = ParamStore::load_npz(&Artifact::init_npz_path(dir, "quickstart")).unwrap();
@@ -97,8 +109,9 @@ fn quickstart_layer_hlo_matches_rust_oracle() {
 }
 
 #[test]
+#[ignore = "needs artifacts/ (run `make artifacts`, requires Python + PJRT)"]
 fn quickstart_parity_across_magnitudes() {
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
     let client = Client::cpu().unwrap();
     let art = Artifact::load(dir, "quickstart_fwd", &client).unwrap();
     let store = ParamStore::load_npz(&Artifact::init_npz_path(dir, "quickstart")).unwrap();
@@ -124,11 +137,12 @@ fn quickstart_parity_across_magnitudes() {
 }
 
 #[test]
+#[ignore = "needs artifacts/ (run `make artifacts`, requires Python + PJRT)"]
 fn oracle_parallel_scan_agrees_inside_parity_setup() {
     // layered sanity: the oracle's threaded path equals its sequential path
     // on the real quickstart parameters (ties the scan substrate into the
     // parity chain).
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = artifacts_dir();
     let store = ParamStore::load_npz(&Artifact::init_npz_path(dir, "quickstart")).unwrap();
     let layer = layer_from_store(&store, 8, 4);
     let mut rng = Rng::new(7);

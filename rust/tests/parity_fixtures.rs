@@ -1,0 +1,487 @@
+//! Golden parity: the pure-Rust engine pinned to the Python reference
+//! through small **committed** npz fixtures (`tests/fixtures/`).
+//!
+//! `python/tests/gen_fixtures.py` runs the `python/compile` reference
+//! (hippo init, ZOH discretization, the scan oracle, `s5_ssm_apply`,
+//! `s5_layer_apply`, the classifier) on fixed-seed cases and commits
+//! inputs plus expected outputs; this suite loads them through the
+//! no-dependency `runtime/npz.rs` reader and checks every module
+//! boundary of the Rust engine against them, sweeping the execution
+//! surface (fused/staged tiling, planar/interleaved layout, f32/f64-state
+//! /bf16 storage, pooled/scoped/inline dispatch, thread budgets, wide
+//! mode). Unlike `tests/parity.rs` this needs no Python and no PJRT at
+//! test time — the fixtures are the contract — and it **cannot silently
+//! skip**: a missing or unreadable fixture is a test failure, and the
+//! `MANIFEST.txt` checksums prove the committed bytes are the generated
+//! ones before any numeric claim is made.
+//!
+//! Tolerances (`|got − want| ≤ ATOL + RTOL·|want|`, per f32 component),
+//! kept in sync with `python/tests/test_fixture_parity.py::TOL` which
+//! measures the actual gap of a numpy mirror of the Rust op order:
+//!
+//! | module                   | ATOL | RTOL | why                                      |
+//! |--------------------------|------|------|------------------------------------------|
+//! | hippo eigenvalues        | 1e-5 | 1e-6 | Jacobi vs LAPACK eigenvalue agreement    |
+//! | ZOH discretization       | 1e-6 | 1e-5 | both sides f64; dt round-trips f32       |
+//! | scan (TI/TV)             | 1e-5 | 1e-4 | f32 recurrence vs complex128 reference;  |
+//! |                          |      |      | covers the parallel chunk-combine too    |
+//! | ssm / layer / logits     | 5e-4 | 5e-4 | f32 engine vs mixed-precision JAX ref    |
+//! | any module, bf16 storage | 5e-2 | 5e-2 | the PR-8 bf16 drift budget (0.05)        |
+//!
+//! Measured headroom: the module-level gap of the numpy mirror is
+//! ≈ 5e-7 absolute on these shapes, three orders under the gate.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use s5::num::{C32, C64};
+use s5::runtime::npz::{crc32, NpzStore, NpzTensor};
+use s5::runtime::pool::WorkerPool;
+use s5::ssm::api::ForwardOptions;
+use s5::ssm::discretize::{discretize_one, Method};
+use s5::ssm::dtype::Dtype;
+use s5::ssm::engine::{EngineWorkspace, Tiling};
+use s5::ssm::hippo::block_diag_hippo_init;
+use s5::ssm::s5::{S5Layer, S5Model};
+use s5::ssm::scan::{
+    backend_for_exec, ScanBackend, ScanExec, ScanLayout, ScanScratch, SequentialBackend,
+};
+
+// -- tolerances (see the module docs table) ---------------------------------
+
+const TOL_HIPPO: (f32, f32) = (1e-5, 1e-6);
+const TOL_DISC: (f32, f32) = (1e-6, 1e-5);
+const TOL_SCAN: (f32, f32) = (1e-5, 1e-4);
+const TOL_MODULE: (f32, f32) = (5e-4, 5e-4);
+const TOL_BF16: (f32, f32) = (5e-2, 5e-2);
+
+/// The seven committed fixture files; the manifest test proves the set on
+/// disk is exactly this.
+const FIXTURE_FILES: &[&str] = &[
+    "fx_hippo.npz",
+    "fx_discretize.npz",
+    "fx_scan_ti.npz",
+    "fx_scan_tv.npz",
+    "fx_ssm.npz",
+    "fx_layer.npz",
+    "fx_model.npz",
+];
+
+// -- loading helpers (every failure panics — no silent skips) ---------------
+
+fn fixtures_dir() -> PathBuf {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures");
+    assert!(
+        dir.join("MANIFEST.txt").is_file(),
+        "golden fixtures missing at {dir:?} — they are committed files; \
+         regenerate with `python tests/gen_fixtures.py` from python/ if lost"
+    );
+    dir
+}
+
+fn load(name: &str) -> NpzStore {
+    let path = fixtures_dir().join(name);
+    NpzStore::load(&path).unwrap_or_else(|e| panic!("loading fixture {path:?}: {e:#}"))
+}
+
+fn tensor<'a>(store: &'a NpzStore, file: &str, name: &str) -> &'a NpzTensor {
+    store.get(name).unwrap_or_else(|| panic!("fixture {file}: tensor {name:?} missing"))
+}
+
+fn f32s<'a>(store: &'a NpzStore, file: &str, name: &str) -> &'a [f32] {
+    tensor(store, file, name)
+        .f32s()
+        .unwrap_or_else(|| panic!("fixture {file}: tensor {name:?} is not f32"))
+}
+
+fn to_c64(re: &[f32], im: &[f32]) -> Vec<C64> {
+    assert_eq!(re.len(), im.len());
+    re.iter().zip(im).map(|(&r, &i)| C64::new(r as f64, i as f64)).collect()
+}
+
+fn to_c32(re: &[f32], im: &[f32]) -> Vec<C32> {
+    assert_eq!(re.len(), im.len());
+    re.iter().zip(im).map(|(&r, &i)| C32::new(r, i)).collect()
+}
+
+/// `|got − want| ≤ atol + rtol·|want|` per f32 component.
+fn assert_close(want: &[f32], got: &[f32], (atol, rtol): (f32, f32), tag: &str) {
+    assert_eq!(want.len(), got.len(), "{tag}: length {} vs {}", want.len(), got.len());
+    for (i, (&w, &g)) in want.iter().zip(got).enumerate() {
+        let err = (w - g).abs();
+        let gate = atol + rtol * w.abs();
+        assert!(
+            err <= gate,
+            "{tag}: index {i}: want {w}, got {g} (|err| {err} > {gate} = \
+             {atol} + {rtol}·|want|)"
+        );
+    }
+}
+
+/// Build an [`S5Layer`] from a fixture's `<prefix>.*` tensors (the
+/// `init_s5_layer` param dict flattened by gen_fixtures.py).
+fn layer_from_fixture(store: &NpzStore, file: &str, prefix: &str) -> S5Layer {
+    let g = |suffix: &str| f32s(store, file, &format!("{prefix}.{suffix}"));
+    let d = g("d").to_vec();
+    let lam_re = g("lambda_re");
+    let (h, p2) = (d.len(), lam_re.len());
+    let c_re = g("c_re");
+    let n_dir = c_re.len() / (h * p2);
+    assert!(n_dir == 1 || n_dir == 2, "{file}:{prefix}: bad C shape");
+    let c_all = to_c64(c_re, g("c_im"));
+    S5Layer {
+        lambda: to_c64(lam_re, g("lambda_im")),
+        b_tilde: to_c64(g("b_re"), g("b_im")),
+        c_tilde: c_all.chunks(h * p2).map(|c| c.to_vec()).collect(),
+        d,
+        log_dt: g("log_dt").to_vec(),
+        gate_w: g("gate_w").to_vec(),
+        norm_scale: g("norm_scale").to_vec(),
+        norm_bias: g("norm_bias").to_vec(),
+        h,
+        p2,
+    }
+}
+
+/// The engine-configuration sweep the module-level fixtures run under:
+/// every (tiling × layout × dispatch × state-precision) combination the
+/// engine exposes, plus the bf16 storage dtype with its own tolerance.
+/// Returns `(label, options, tolerance)`.
+fn engine_sweep() -> Vec<(&'static str, ForwardOptions, (f32, f32))> {
+    let pool = Arc::new(WorkerPool::new(3));
+    vec![
+        ("fused-auto-seq", ForwardOptions::new(), TOL_MODULE),
+        (
+            "fused-tile1-scoped3",
+            ForwardOptions::new().with_exec(3, ScanExec::Scoped).with_tile(1),
+            TOL_MODULE,
+        ),
+        (
+            "fused-tile7-pooled3",
+            ForwardOptions::new().with_exec(3, ScanExec::Pool(pool)).with_tile(7),
+            TOL_MODULE,
+        ),
+        ("fused-inline3", ForwardOptions::new().with_exec(3, ScanExec::Inline), TOL_MODULE),
+        ("staged-planar-seq", ForwardOptions::new().with_tiling(Tiling::Staged), TOL_MODULE),
+        (
+            "staged-planar-scoped8",
+            ForwardOptions::new().with_tiling(Tiling::Staged).with_exec(8, ScanExec::Scoped),
+            TOL_MODULE,
+        ),
+        (
+            "interleaved-seq",
+            ForwardOptions::new().with_scan(1, ScanLayout::Interleaved),
+            TOL_MODULE,
+        ),
+        (
+            "interleaved-t3",
+            ForwardOptions::new().with_scan(3, ScanLayout::Interleaved),
+            TOL_MODULE,
+        ),
+        ("f64-state", ForwardOptions::new().with_f64_state(), TOL_MODULE),
+        (
+            "wide-scoped4",
+            ForwardOptions::new().with_wide().with_exec(4, ScanExec::Scoped),
+            TOL_MODULE,
+        ),
+        ("bf16-fused-auto", ForwardOptions::new().with_dtype(Dtype::Bf16), TOL_BF16),
+        (
+            "bf16-tile5-scoped3",
+            ForwardOptions::new()
+                .with_dtype(Dtype::Bf16)
+                .with_exec(3, ScanExec::Scoped)
+                .with_tile(5),
+            TOL_BF16,
+        ),
+    ]
+}
+
+// -- 0. the manifest: committed bytes are the generated bytes ---------------
+
+#[test]
+fn manifest_matches_committed_fixtures() {
+    let dir = fixtures_dir();
+    let manifest = std::fs::read_to_string(dir.join("MANIFEST.txt")).unwrap();
+    let mut files_seen = BTreeSet::new();
+    let mut tensors_listed: Vec<(String, String, Vec<usize>)> = Vec::new();
+    for line in manifest.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        match parts.as_slice() {
+            ["file", name, crc_hex, size] => {
+                let raw = std::fs::read(dir.join(name))
+                    .unwrap_or_else(|e| panic!("fixture {name} listed but unreadable: {e}"));
+                assert_eq!(
+                    raw.len(),
+                    size.parse::<usize>().unwrap(),
+                    "{name}: size drifted from the manifest — regenerate fixtures \
+                     and manifest together (python tests/gen_fixtures.py)"
+                );
+                let crc = u32::from_str_radix(crc_hex, 16).unwrap();
+                assert_eq!(
+                    crc32(&raw),
+                    crc,
+                    "{name}: crc32 drifted from the manifest — the committed npz \
+                     is not the file the generator wrote"
+                );
+                files_seen.insert(name.to_string());
+            }
+            ["tensor", spec, shape] => {
+                let (file, tname) = spec.split_once(':').unwrap();
+                let dims: Vec<usize> = shape.split('x').map(|d| d.parse().unwrap()).collect();
+                tensors_listed.push((file.to_string(), tname.to_string(), dims));
+            }
+            _ => panic!("unrecognized manifest line: {line:?}"),
+        }
+    }
+    // the file set is closed: exactly the seven fixtures, each listed
+    let want: BTreeSet<String> = FIXTURE_FILES.iter().map(|s| s.to_string()).collect();
+    assert_eq!(files_seen, want, "manifest file set != expected fixture set");
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let name = entry.unwrap().file_name().into_string().unwrap();
+        if name.ends_with(".npz") {
+            assert!(files_seen.contains(&name), "untracked fixture on disk: {name}");
+        }
+    }
+    // every listed tensor parses with the listed shape, and every tensor
+    // in every store is listed (no unmanifested payload)
+    assert!(!tensors_listed.is_empty(), "manifest lists no tensors");
+    for file in FIXTURE_FILES {
+        let store = load(file);
+        let listed: Vec<&(String, String, Vec<usize>)> =
+            tensors_listed.iter().filter(|(f, _, _)| f == file).collect();
+        assert_eq!(
+            listed.len(),
+            store.len(),
+            "{file}: manifest lists {} tensors, store holds {}",
+            listed.len(),
+            store.len()
+        );
+        for (_, tname, dims) in listed {
+            let t = tensor(&store, file, tname);
+            // the generator writes "1" for both () and (1,) — normalize
+            let mut got = t.dims.clone();
+            if got.is_empty() {
+                got.push(1);
+            }
+            assert_eq!(&got, dims, "{file}:{tname}: shape mismatch");
+        }
+    }
+}
+
+// -- 1. HiPPO block-diagonal init ------------------------------------------
+
+#[test]
+fn hippo_eigenvalues_match_reference() {
+    let file = "fx_hippo.npz";
+    let store = load(file);
+    for case in 0..3 {
+        let meta = f32s(&store, file, &format!("case{case}.meta"));
+        let (p, j, conj) = (meta[0] as usize, meta[1] as usize, meta[2] != 0.0);
+        let (lam, _v, _vinv) = block_diag_hippo_init(p, j, conj);
+        let want_re = f32s(&store, file, &format!("case{case}.lambda_re"));
+        let want_im = f32s(&store, file, &format!("case{case}.lambda_im"));
+        assert_eq!(lam.len(), want_re.len(), "case{case}: P2 mismatch");
+        let got_re: Vec<f32> = lam.iter().map(|z| z.re as f32).collect();
+        let got_im: Vec<f32> = lam.iter().map(|z| z.im as f32).collect();
+        let tag = format!("hippo case{case} (p={p} j={j} conj={conj})");
+        assert_close(want_re, &got_re, TOL_HIPPO, &format!("{tag} re"));
+        assert_close(want_im, &got_im, TOL_HIPPO, &format!("{tag} im"));
+    }
+}
+
+// -- 2. ZOH discretization --------------------------------------------------
+
+#[test]
+fn zoh_discretization_matches_reference() {
+    let file = "fx_discretize.npz";
+    let store = load(file);
+    let lam = to_c64(f32s(&store, file, "lambda_re"), f32s(&store, file, "lambda_im"));
+    for prefix in ["vec", "scalar"] {
+        let dt = f32s(&store, file, &format!("{prefix}.dt"));
+        let want_lb_re = f32s(&store, file, &format!("{prefix}.lam_bar_re"));
+        let want_lb_im = f32s(&store, file, &format!("{prefix}.lam_bar_im"));
+        let want_sc_re = f32s(&store, file, &format!("{prefix}.scale_re"));
+        let want_sc_im = f32s(&store, file, &format!("{prefix}.scale_im"));
+        let (mut lb_re, mut lb_im) = (Vec::new(), Vec::new());
+        let (mut sc_re, mut sc_im) = (Vec::new(), Vec::new());
+        for (r, &l) in lam.iter().enumerate() {
+            let dt_r = dt[if dt.len() == 1 { 0 } else { r }] as f64;
+            let (lb, sc) = discretize_one(l, dt_r, Method::Zoh);
+            lb_re.push(lb.re as f32);
+            lb_im.push(lb.im as f32);
+            sc_re.push(sc.re as f32);
+            sc_im.push(sc.im as f32);
+        }
+        assert_close(want_lb_re, &lb_re, TOL_DISC, &format!("zoh {prefix} lam_bar re"));
+        assert_close(want_lb_im, &lb_im, TOL_DISC, &format!("zoh {prefix} lam_bar im"));
+        assert_close(want_sc_re, &sc_re, TOL_DISC, &format!("zoh {prefix} scale re"));
+        assert_close(want_sc_im, &sc_im, TOL_DISC, &format!("zoh {prefix} scale im"));
+    }
+}
+
+// -- 3. the scan substrate (TI and TV, every backend) -----------------------
+
+/// The scan-backend sweep: sequential, and the parallel strategy across
+/// thread budgets and dispatch modes (whose chunk-combine is the one
+/// tolerance-bearing reassociation — covered by TOL_SCAN).
+fn scan_backends() -> Vec<(String, Box<dyn ScanBackend>)> {
+    let pool = Arc::new(WorkerPool::new(3));
+    let mut v: Vec<(String, Box<dyn ScanBackend>)> =
+        vec![("sequential".into(), Box::new(SequentialBackend))];
+    for &t in &[1usize, 3, 8] {
+        for (ename, exec) in [
+            ("scoped", ScanExec::Scoped),
+            ("pooled", ScanExec::Pool(pool.clone())),
+            ("inline", ScanExec::Inline),
+        ] {
+            for layout in [ScanLayout::Planar, ScanLayout::Interleaved] {
+                v.push((
+                    format!("{layout:?}-t{t}-{ename}"),
+                    backend_for_exec(t, layout, exec.clone()),
+                ));
+            }
+        }
+    }
+    v
+}
+
+fn check_scan_fixture(file: &str, time_varying: bool) {
+    let store = load(file);
+    let a = to_c32(f32s(&store, file, "a_re"), f32s(&store, file, "a_im"));
+    let drive = to_c32(f32s(&store, file, "drive_re"), f32s(&store, file, "drive_im"));
+    let dims = &tensor(&store, file, "drive_re").dims;
+    let (l, p) = (dims[0], dims[1]);
+    let want_re = f32s(&store, file, "x_re");
+    let want_im = f32s(&store, file, "x_im");
+    for (name, be) in scan_backends() {
+        let tag = format!("{file} {name}");
+        // interleaved entry point
+        let mut scratch = ScanScratch::new();
+        let mut buf = drive.clone();
+        if time_varying {
+            be.scan_tv(&a, &mut buf, l, p, &mut scratch);
+        } else {
+            be.scan_ti(&a, &mut buf, l, p, &mut scratch);
+        }
+        let got_re: Vec<f32> = buf.iter().map(|z| z.re).collect();
+        let got_im: Vec<f32> = buf.iter().map(|z| z.im).collect();
+        assert_close(want_re, &got_re, TOL_SCAN, &format!("{tag} interleaved re"));
+        assert_close(want_im, &got_im, TOL_SCAN, &format!("{tag} interleaved im"));
+        // planar twin
+        let (ar, ai): (Vec<f32>, Vec<f32>) =
+            (a.iter().map(|z| z.re).collect(), a.iter().map(|z| z.im).collect());
+        let mut xr: Vec<f32> = drive.iter().map(|z| z.re).collect();
+        let mut xi: Vec<f32> = drive.iter().map(|z| z.im).collect();
+        if time_varying {
+            be.scan_tv_planar(&ar, &ai, &mut xr, &mut xi, l, p, &mut scratch);
+        } else {
+            be.scan_ti_planar(&ar, &ai, &mut xr, &mut xi, l, p, &mut scratch);
+        }
+        assert_close(want_re, &xr, TOL_SCAN, &format!("{tag} planar re"));
+        assert_close(want_im, &xi, TOL_SCAN, &format!("{tag} planar im"));
+    }
+}
+
+#[test]
+fn scan_ti_matches_reference() {
+    check_scan_fixture("fx_scan_ti.npz", false);
+}
+
+#[test]
+fn scan_tv_matches_reference() {
+    check_scan_fixture("fx_scan_tv.npz", true);
+}
+
+// -- 4. s5_ssm_apply (conj-sym projection, ZOH, bidir, TV) ------------------
+
+#[test]
+fn ssm_apply_matches_reference_across_engine_configs() {
+    let file = "fx_ssm.npz";
+    let store = load(file);
+    let uni = layer_from_fixture(&store, file, "uni");
+    let bi = layer_from_fixture(&store, file, "bi");
+    let u = f32s(&store, file, "input.u");
+    let dts = f32s(&store, file, "input.dts");
+    let dims = &tensor(&store, file, "input.u").dims;
+    let (batch, l) = (dims[0], dims[1]);
+    let ts = f32s(&store, file, "input.timescale"); // [1.0, 0.5]
+    // (case label, layer, dts?, timescale, expected) — `bi_tv` is the
+    // regression pin for the bidirectional irregular-sampling fix: the
+    // backward scan must reverse the Δt multipliers *with* the drive.
+    let cases: [(&str, &S5Layer, Option<&[f32]>, f64, &str); 5] = [
+        ("uni_ti", &uni, None, ts[0] as f64, "expect.uni_ti"),
+        ("uni_ts", &uni, None, ts[1] as f64, "expect.uni_ts"),
+        ("uni_tv", &uni, Some(dts), ts[0] as f64, "expect.uni_tv"),
+        ("bi_ti", &bi, None, ts[0] as f64, "expect.bi_ti"),
+        ("bi_tv", &bi, Some(dts), ts[0] as f64, "expect.bi_tv"),
+    ];
+    for (label, layer, case_dts, timescale, expect_key) in cases {
+        let want = f32s(&store, file, expect_key);
+        for (cfg, opts, tol) in engine_sweep() {
+            let opts = opts.with_timescale(timescale);
+            let mut ws = EngineWorkspace::new();
+            let got = layer.apply_ssm_batch_opts(u, batch, l, case_dts, &opts, &mut ws);
+            assert_close(want, &got, tol, &format!("ssm {label} [{cfg}]"));
+        }
+    }
+}
+
+// -- 5. the full layer (pre-norm → SSM → GELU → gate → residual) ------------
+
+#[test]
+fn layer_apply_matches_reference_across_engine_configs() {
+    let file = "fx_layer.npz";
+    let store = load(file);
+    let uni = layer_from_fixture(&store, file, "uni");
+    let bi = layer_from_fixture(&store, file, "bi");
+    let u = f32s(&store, file, "input.u");
+    let dts = f32s(&store, file, "input.dts");
+    let dims = &tensor(&store, file, "input.u").dims;
+    let (batch, l) = (dims[0], dims[1]);
+    let cases: [(&str, &S5Layer, Option<&[f32]>, &str); 3] = [
+        ("uni_y", &uni, None, "expect.uni_y"),
+        ("uni_tv_y", &uni, Some(dts), "expect.uni_tv_y"),
+        ("bi_y", &bi, None, "expect.bi_y"),
+    ];
+    for (label, layer, case_dts, expect_key) in cases {
+        let want = f32s(&store, file, expect_key);
+        for (cfg, opts, tol) in engine_sweep() {
+            let mut ws = EngineWorkspace::new();
+            let got = layer.apply_batch_opts(u, batch, l, case_dts, &opts, &mut ws);
+            assert_close(want, &got, tol, &format!("layer {label} [{cfg}]"));
+        }
+    }
+}
+
+// -- 6. the classifier end-to-end (fixture doubles as a checkpoint) ---------
+
+#[test]
+fn classifier_logits_match_reference_across_engine_configs() {
+    let file = "fx_model.npz";
+    let store = load(file);
+    // the fixture's params.* tensors are a Rust-native checkpoint — this
+    // also pins `from_param_store` against the Python-side naming
+    let model = S5Model::from_param_store(&store)
+        .unwrap_or_else(|e| panic!("{file}: from_param_store failed: {e:#}"));
+    let u = f32s(&store, file, "input.u");
+    let dims = &tensor(&store, file, "input.u").dims;
+    let (batch, l) = (dims[0], dims[1]);
+    let classes = tensor(&store, file, "expect.logits").dims[1];
+    let ts = f32s(&store, file, "input.timescale"); // [1.0, 0.5]
+    let runs = [(ts[0] as f64, "expect.logits"), (ts[1] as f64, "expect.logits_ts")];
+    for (timescale, expect_key) in runs {
+        let want = f32s(&store, file, expect_key);
+        for (cfg, opts, tol) in engine_sweep() {
+            let opts = opts.with_timescale(timescale);
+            let mut ws = EngineWorkspace::new();
+            let mut got = vec![0.0f32; batch * classes];
+            model.forward_batch_opts_into(u, batch, l, &opts, &mut ws, &mut got);
+            assert_close(want, &got, tol, &format!("logits ts={timescale} [{cfg}]"));
+        }
+    }
+}

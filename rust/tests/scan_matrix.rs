@@ -389,11 +389,11 @@ fn fused_tiled_matches_staged_sequential_bit_for_bit() {
             let staged = ForwardOptions::new().with_tiling(Tiling::Staged);
             let mut ws = EngineWorkspace::new();
             let want = layer.apply_batch_opts(&u, batch, l, None, &staged, &mut ws);
-            let want_tv = if bidir {
-                None
-            } else {
-                Some(layer.apply_ssm_batch_opts(&u, batch, l, Some(&dts), &staged, &mut ws))
-            };
+            // TV covered in both directions: the backward scan reverses
+            // the Δt multipliers with the drive (fixture-pinned semantics)
+            // and stays bit-exact across tilings.
+            let want_tv =
+                Some(layer.apply_ssm_batch_opts(&u, batch, l, Some(&dts), &staged, &mut ws));
             for &tile in &[1usize, 3, 8, l, l + 7, 4096] {
                 for &t in &[1usize, 3, 8] {
                     for exec in
@@ -516,11 +516,10 @@ fn fused_wide_single_stream_tracks_staged_sequential() {
                 ForwardOptions::new().with_dtype(Dtype::F32).with_tiling(Tiling::Staged);
             let mut ws = EngineWorkspace::new();
             let want = layer.apply_batch_opts(&u, 1, l, None, &staged, &mut ws);
-            let want_tv = if bidir {
-                None
-            } else {
-                Some(layer.apply_ssm_batch_opts(&u, 1, l, Some(&dts), &staged, &mut ws))
-            };
+            // bidirectional TV included: the backward scan reverses the Δt
+            // multipliers with the drive, so the wide gates apply there too
+            let want_tv =
+                Some(layer.apply_ssm_batch_opts(&u, 1, l, Some(&dts), &staged, &mut ws));
             for &tile in &[1usize, 5, 64, l + 7] {
                 for &t in &[1usize, 2, 8] {
                     let mut reference: Option<(Vec<f32>, Option<Vec<f32>>)> = None;
@@ -693,11 +692,9 @@ fn fused_bf16_is_tile_thread_and_executor_invariant() {
                 bits_equal(&want, &f32_out).is_some(),
                 "bf16 silently ran f32 (bidir={bidir} B={batch} L={l})"
             );
-            let want_tv = if bidir {
-                None
-            } else {
-                Some(layer.apply_ssm_batch_opts(&u, batch, l, Some(&dts), &staged, &mut ws))
-            };
+            // bidirectional TV included (reversed-Δt backward multipliers)
+            let want_tv =
+                Some(layer.apply_ssm_batch_opts(&u, batch, l, Some(&dts), &staged, &mut ws));
             for &tile in &[1usize, 3, 8, l + 7] {
                 for &t in &[1usize, 3] {
                     for exec in
