@@ -62,6 +62,7 @@ fn main() {
                 max_wait: Duration::from_millis(wait_ms),
                 max_batch,
                 threads: 0, // auto
+                ..ServerConfig::default()
             },
         ));
         let t0 = std::time::Instant::now();

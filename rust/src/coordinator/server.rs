@@ -26,29 +26,119 @@
 //! server-side timescale grouping can never alias two nearby values
 //! through an f32 round trip.
 //!
+//! # Fault containment
+//!
+//! Every way a request can fail is a typed [`ServeError`], decided at one
+//! of three points:
+//!
+//! * **Admission** (caller's thread): malformed payloads are rejected as
+//!   [`ServeError::InvalidInput`] before touching the queue; the queue is
+//!   capacity-bounded (`queue_cap` / `S5_QUEUE_CAP`), and a full queue
+//!   sheds the request as [`ServeError::QueueFull`] immediately instead
+//!   of growing without bound.
+//! * **Dequeue** (worker thread): a request whose deadline (its own, or
+//!   the server default / `S5_REQ_DEADLINE_MS`) has already passed is
+//!   answered [`ServeError::DeadlineExceeded`] without executing —
+//!   drop-before-execute, so an overloaded server never burns a batch on
+//!   work nobody is waiting for. Callers with an explicit deadline also
+//!   stop waiting on their own clock, so they can never hang forever.
+//! * **Execution** (worker thread): the batch forward runs under
+//!   `catch_unwind`, riding the worker pool's per-task panic isolation
+//!   ([`crate::runtime::pool`]). A panicking model answers exactly the
+//!   requests in *its own* batch with [`ServeError::ModelPanic`]; the
+//!   worker survives (same thread, not respawned), discards the possibly
+//!   half-written workspace, and subsequent batches are bit-for-bit
+//!   unaffected — pinned by `tests/server_robustness.rs`.
+//!
+//! [`NativeInferenceServer::shutdown`] (also run on drop) drains rather
+//! than abandons: admission stops ([`ServeError::ShuttingDown`]), the
+//! in-flight batch finishes, and every still-queued request is answered
+//! `ShuttingDown` — no sender is ever left blocked on a dead channel.
+//!
 //! Both backends spawn their one long-lived worker through the shared
 //! [`spawn_worker`] path; per-batch parallelism inside the native engine
 //! dispatches on the process-wide persistent worker pool
 //! ([`crate::runtime::pool`]) instead of spawning per request.
 
+#[cfg(feature = "pjrt")]
 use anyhow::Context;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::data::batcher::pack_rows_into;
-use crate::runtime::pool::spawn_worker;
+use crate::runtime::envcfg::env_usize_once;
+use crate::runtime::pool::{panic_message, spawn_worker};
 use crate::ssm::api::{Batch, ForwardOptions, SequenceModel, Session, SessionPool};
 use crate::ssm::engine::{auto_threads, EngineWorkspace};
 use crate::ssm::s5::S5Model;
+
+/// How a request failed. Every serving failure is one of these — the
+/// stringly `anyhow` surface is gone from the request path, so callers
+/// can match on the cause (shed vs expired vs poisoned batch) instead of
+/// grepping messages.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Load-shed at admission: the bounded queue already holds `cap`
+    /// requests. Retry later or scale out; nothing was enqueued.
+    QueueFull { cap: usize },
+    /// The request's deadline budget elapsed before a result was
+    /// produced — either caught at dequeue (drop-before-execute) or by
+    /// the caller's own clock while waiting.
+    DeadlineExceeded { budget: Duration },
+    /// Rejected at admission before touching the queue: wrong row width,
+    /// non-finite payload values, or a non-positive/non-finite timescale.
+    InvalidInput(String),
+    /// The model panicked while executing the batch this request was in.
+    /// Only that batch is poisoned; the worker survives and later
+    /// requests are unaffected.
+    ModelPanic(String),
+    /// The server is draining (or already gone): admission is closed and
+    /// queued requests are being answered with this error.
+    ShuttingDown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::QueueFull { cap } => {
+                write!(f, "request shed: admission queue full ({cap} queued)")
+            }
+            ServeError::DeadlineExceeded { budget } => {
+                write!(f, "deadline exceeded (budget {budget:?})")
+            }
+            ServeError::InvalidInput(msg) => write!(f, "invalid input: {msg}"),
+            ServeError::ModelPanic(msg) => {
+                write!(f, "model panicked while serving this batch: {msg}")
+            }
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// One inference request: a single (L × d_input) sequence.
 struct Request {
     x: Vec<f32>,
     timescale: f64,
     submitted: Instant,
-    resp: Sender<anyhow::Result<Response>>,
+    /// Client-supplied deadline budget; `None` defers to the server
+    /// default (see [`ServerConfig::deadline`]).
+    deadline: Option<Duration>,
+    resp: Sender<Result<Response, ServeError>>,
+}
+
+/// What travels over the bounded admission queue: requests, plus a
+/// shutdown sentinel so a drain can wake a worker parked in `recv()`.
+enum Msg {
+    Infer(Request),
+    Shutdown,
 }
 
 /// The reply: logits plus telemetry.
@@ -72,19 +162,85 @@ pub struct ServerConfig {
     /// worker/scan threads for the native engine; 0 = auto-detect via
     /// `std::thread::available_parallelism`
     pub threads: usize,
+    /// admission-queue capacity in requests; a full queue sheds new
+    /// requests as [`ServeError::QueueFull`]. 0 = auto: the
+    /// `S5_QUEUE_CAP` override if set (and ≥ 1), else
+    /// [`DEFAULT_QUEUE_CAP`].
+    pub queue_cap: usize,
+    /// default per-request deadline, enforced at dequeue
+    /// (drop-before-execute); `None` = auto: `S5_REQ_DEADLINE_MS` if set
+    /// and non-zero, else no deadline. A client-supplied deadline
+    /// ([`ServeHandle::infer_deadline`]) always takes precedence.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_wait: Duration::from_millis(2), max_batch: 16, threads: 0 }
+        ServerConfig {
+            max_wait: Duration::from_millis(2),
+            max_batch: 16,
+            threads: 0,
+            queue_cap: 0,
+            deadline: None,
+        }
+    }
+}
+
+/// Built-in admission-queue capacity when neither
+/// [`ServerConfig::queue_cap`] nor `S5_QUEUE_CAP` is set.
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
+/// Extra slack on the *client-side* wait beyond an explicit request
+/// deadline: the dequeue-side verdict for an expired request (or a
+/// just-in-time success) needs a moment to travel back before the caller
+/// gives up on its own clock.
+const CLIENT_DEADLINE_GRACE: Duration = Duration::from_millis(50);
+
+fn resolved_queue_cap(cfg: &ServerConfig) -> usize {
+    if cfg.queue_cap > 0 {
+        return cfg.queue_cap;
+    }
+    static CAP: OnceLock<Option<usize>> = OnceLock::new();
+    match env_usize_once(&CAP, "S5_QUEUE_CAP", "an admission-queue capacity in requests (>= 1)") {
+        Some(n) if n > 0 => n,
+        _ => DEFAULT_QUEUE_CAP,
+    }
+}
+
+fn resolved_default_deadline(cfg: &ServerConfig) -> Option<Duration> {
+    if let Some(d) = cfg.deadline {
+        return Some(d);
+    }
+    static MS: OnceLock<Option<usize>> = OnceLock::new();
+    match env_usize_once(
+        &MS,
+        "S5_REQ_DEADLINE_MS",
+        "a default request deadline in milliseconds (0 disables)",
+    ) {
+        Some(ms) if ms > 0 => Some(Duration::from_millis(ms as u64)),
+        _ => None,
     }
 }
 
 /// Aggregate serving statistics.
 #[derive(Default)]
 pub struct ServerStats {
+    /// requests that reached execution accounting (includes stragglers)
     pub requests: AtomicU64,
+    /// executed batches (includes singleton straggler batches)
     pub batches: AtomicU64,
+    /// requests shed at admission because the bounded queue was full
+    pub shed: AtomicU64,
+    /// requests dropped at dequeue because their deadline had passed
+    pub expired: AtomicU64,
+    /// requests answered [`ServeError::ModelPanic`] because their batch's
+    /// forward panicked
+    pub panicked: AtomicU64,
+    /// mismatched-timescale requests executed as singleton straggler
+    /// batches (they dilute [`ServerStats::mean_batch_fill`]; this
+    /// counter makes that visible)
+    pub stragglers: AtomicU64,
+    queue_depth: AtomicU64,
 }
 
 impl ServerStats {
@@ -97,12 +253,39 @@ impl ServerStats {
             self.requests.load(Ordering::Relaxed) as f64 / b as f64
         }
     }
+
+    /// Gauge: requests admitted but not yet dequeued by the worker.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed) as usize
+    }
+
+    fn depth_inc(&self) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn depth_dec(&self) {
+        // Every dec pairs with an admission-side inc, but a relaxed gauge
+        // must never wrap even if a future refactor breaks that pairing.
+        let _ = self
+            .queue_depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| Some(d.saturating_sub(1)));
+    }
+}
+
+/// State shared between client handles and the worker: the drain flag
+/// that closes admission.
+#[derive(Default)]
+struct ServeShared {
+    shutting_down: AtomicBool,
 }
 
 /// Handle for submitting requests; clone freely across client threads.
 #[derive(Clone)]
 pub struct ServeHandle {
-    tx: Sender<Request>,
+    tx: SyncSender<Msg>,
+    shared: Arc<ServeShared>,
+    stats: Arc<ServerStats>,
+    queue_cap: usize,
     /// Flat request width: L × d_input.
     pub row: usize,
     /// Output row width per sequence (classifier logits, hidden state, …).
@@ -111,36 +294,133 @@ pub struct ServeHandle {
 
 impl ServeHandle {
     /// Blocking single inference (row-major L×d sequence → logits).
-    pub fn infer(&self, x: Vec<f32>) -> anyhow::Result<Response> {
-        self.infer_with_timescale(x, 1.0)
+    pub fn infer(&self, x: Vec<f32>) -> Result<Response, ServeError> {
+        self.submit(x, 1.0, None)
     }
 
     /// Inference with a Δ-rescale factor (zero-shot resampling path).
     /// `timescale` is `f64` all the way into the model, matching the
     /// forward signatures (no lossy f32 hop).
-    pub fn infer_with_timescale(&self, x: Vec<f32>, timescale: f64) -> anyhow::Result<Response> {
-        anyhow::ensure!(x.len() == self.row, "bad request width {}", x.len());
+    pub fn infer_with_timescale(&self, x: Vec<f32>, timescale: f64) -> Result<Response, ServeError> {
+        self.submit(x, timescale, None)
+    }
+
+    /// Inference with a hard per-request deadline. The worker drops the
+    /// request unexecuted if the budget elapses while it is queued, and
+    /// the caller stops waiting shortly after the budget on its own
+    /// clock — so this call can never hang forever, even against a
+    /// wedged worker.
+    pub fn infer_deadline(
+        &self,
+        x: Vec<f32>,
+        timescale: f64,
+        deadline: Duration,
+    ) -> Result<Response, ServeError> {
+        self.submit(x, timescale, Some(deadline))
+    }
+
+    /// Validate → admit (bounded, shedding) → wait. All input checking
+    /// happens here on the caller's thread, before the queue.
+    fn submit(
+        &self,
+        x: Vec<f32>,
+        timescale: f64,
+        deadline: Option<Duration>,
+    ) -> Result<Response, ServeError> {
+        self.validate(&x, timescale)?;
+        if self.shared.shutting_down.load(Ordering::Acquire) {
+            return Err(ServeError::ShuttingDown);
+        }
         let (rtx, rrx) = channel();
-        self.tx
-            .send(Request { x, timescale, submitted: Instant::now(), resp: rtx })
-            .ok()
-            .context("server stopped")?;
-        rrx.recv().context("server dropped request")?
+        let req = Request { x, timescale, submitted: Instant::now(), deadline, resp: rtx };
+        match self.tx.try_send(Msg::Infer(req)) {
+            Ok(()) => self.stats.depth_inc(),
+            Err(TrySendError::Full(_)) => {
+                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::QueueFull { cap: self.queue_cap });
+            }
+            Err(TrySendError::Disconnected(_)) => return Err(ServeError::ShuttingDown),
+        }
+        match deadline {
+            Some(d) => match rrx.recv_timeout(d + CLIENT_DEADLINE_GRACE) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => Err(ServeError::DeadlineExceeded { budget: d }),
+                Err(RecvTimeoutError::Disconnected) => Err(ServeError::ShuttingDown),
+            },
+            // a dropped response sender means the worker is gone: drain
+            None => rrx.recv().unwrap_or(Err(ServeError::ShuttingDown)),
+        }
+    }
+
+    fn validate(&self, x: &[f32], timescale: f64) -> Result<(), ServeError> {
+        if x.len() != self.row {
+            return Err(ServeError::InvalidInput(format!(
+                "bad request width {} (expected {})",
+                x.len(),
+                self.row
+            )));
+        }
+        if let Some(i) = x.iter().position(|v| !v.is_finite()) {
+            return Err(ServeError::InvalidInput(format!("non-finite payload value at index {i}")));
+        }
+        if !(timescale.is_finite() && timescale > 0.0) {
+            return Err(ServeError::InvalidInput(format!(
+                "timescale {timescale} must be positive and finite"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Dequeue-side triage: answer drain/expired requests without executing
+/// them. Returns the request back when it should still run.
+fn triage(
+    r: Request,
+    shared: &ServeShared,
+    default_deadline: Option<Duration>,
+    stats: &ServerStats,
+) -> Option<Request> {
+    if shared.shutting_down.load(Ordering::Acquire) {
+        let _ = r.resp.send(Err(ServeError::ShuttingDown));
+        return None;
+    }
+    if let Some(b) = r.deadline.or(default_deadline) {
+        if r.submitted.elapsed() >= b {
+            stats.expired.fetch_add(1, Ordering::Relaxed);
+            let _ = r.resp.send(Err(ServeError::DeadlineExceeded { budget: b }));
+            return None;
+        }
+    }
+    Some(r)
+}
+
+/// Answer every still-queued request with `ShuttingDown`. Called by the
+/// worker once it observes a shutdown sentinel (or is about to exit).
+fn drain_queue(rx: &Receiver<Msg>, stats: &ServerStats) {
+    while let Ok(msg) = rx.try_recv() {
+        if let Msg::Infer(r) = msg {
+            stats.depth_dec();
+            let _ = r.resp.send(Err(ServeError::ShuttingDown));
+        }
     }
 }
 
 /// Drain the channel into a batch of ≤ `max_batch` same-timescale
 /// requests, waiting at most `max_wait` past the first request.
-/// Mismatched-timescale stragglers are executed alone via `run_one`.
+/// Each candidate passes through `triage` first (deadline/drain checks);
+/// mismatched-timescale survivors are executed alone via `run_one`.
 /// The coalescing key is the exact `f64` timescale, so two nearby-but-
 /// different values are never batched (and thus never served) as one.
+/// Returns the batch plus whether a shutdown sentinel was observed —
+/// requests *behind* the sentinel stay queued for the caller's drain.
 fn coalesce(
-    rx: &Receiver<Request>,
+    rx: &Receiver<Msg>,
     first: Request,
     max_batch: usize,
     max_wait: Duration,
+    mut triage: impl FnMut(Request) -> Option<Request>,
     mut run_one: impl FnMut(Vec<Request>),
-) -> Vec<Request> {
+) -> (Vec<Request>, bool) {
     let mut pending = vec![first];
     let deadline = Instant::now() + max_wait;
     while pending.len() < max_batch {
@@ -149,17 +429,21 @@ fn coalesce(
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(r) if r.timescale == pending[0].timescale => pending.push(r),
-            Ok(r) => {
-                // different timescale: run it in its own batch
-                run_one(vec![r]);
-                continue;
+            Ok(Msg::Shutdown) => return (pending, true),
+            Ok(Msg::Infer(r)) => {
+                let Some(r) = triage(r) else { continue };
+                if r.timescale == pending[0].timescale {
+                    pending.push(r);
+                } else {
+                    // different timescale: run it in its own batch
+                    run_one(vec![r]);
+                }
             }
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    pending
+    (pending, false)
 }
 
 // ---------------------------------------------------------------------------
@@ -167,7 +451,8 @@ fn coalesce(
 // ---------------------------------------------------------------------------
 
 /// A running native inference server over the batched pure-Rust engine,
-/// generic over `dyn` [`SequenceModel`]. Dropping it stops the worker.
+/// generic over `dyn` [`SequenceModel`]. Dropping it drains and stops the
+/// worker (see [`NativeInferenceServer::shutdown`]).
 pub struct NativeInferenceServer {
     handle: ServeHandle,
     pub stats: Arc<ServerStats>,
@@ -203,16 +488,29 @@ impl NativeInferenceServer {
         let spec = model.spec();
         let row = l * spec.d_input;
         let d_output = spec.d_output;
-        let (tx, rx) = channel::<Request>();
+        let queue_cap = resolved_queue_cap(&cfg);
+        let deadline = resolved_default_deadline(&cfg);
+        let (tx, rx) = sync_channel::<Msg>(queue_cap);
         let stats = Arc::new(ServerStats::default());
-        let wstats = stats.clone();
+        let shared = Arc::new(ServeShared::default());
         let opts = ForwardOptions::new().with_threads(auto_threads(cfg.threads));
-        let sessions = SessionPool::new(model.clone(), opts.clone());
+        let sessions = SessionPool::with_ttl(model.clone(), opts.clone(), DEFAULT_SESSION_TTL);
+        let ctx = WorkerCtx {
+            model,
+            cfg,
+            opts,
+            l,
+            row,
+            d_output,
+            deadline,
+            stats: stats.clone(),
+            shared: shared.clone(),
+        };
         let worker = spawn_worker("s5-native-server", move || {
-            native_worker_loop(model, rx, cfg, opts, l, row, d_output, wstats);
+            native_worker_loop(ctx, rx);
         });
         NativeInferenceServer {
-            handle: ServeHandle { tx, row, d_output },
+            handle: ServeHandle { tx, shared, stats: stats.clone(), queue_cap, row, d_output },
             stats,
             sessions,
             worker: Some(worker),
@@ -235,72 +533,150 @@ impl NativeInferenceServer {
     pub fn close_session(&self, session: Session) {
         self.sessions.release(session);
     }
-}
 
-impl Drop for NativeInferenceServer {
-    fn drop(&mut self) {
-        // closing the channel stops the worker
-        let (tx, _) = channel();
-        self.handle.tx = tx;
+    /// Reclaim pooled session states that have sat idle past the pool's
+    /// TTL (sessions opened and never returned are unaffected — the pool
+    /// only owns returned states). Returns how many were evicted.
+    pub fn evict_idle_sessions(&self) -> usize {
+        self.sessions.evict_idle()
+    }
+
+    /// Graceful drain: close admission (new submissions get
+    /// [`ServeError::ShuttingDown`]), let the in-flight batch finish,
+    /// answer every still-queued request with `ShuttingDown`, then join
+    /// the worker. Bounded: at most one batch execution plus the queue
+    /// drain. Idempotent — a second call is a no-op.
+    pub fn shutdown(&mut self) {
+        self.handle.shared.shutting_down.store(true, Ordering::Release);
         if let Some(w) = self.worker.take() {
+            // Wake the worker if it is parked in recv() on an empty
+            // queue. A full queue cannot block this send forever: the
+            // draining worker is popping entries; if the worker is
+            // already gone the send fails, which is fine.
+            let _ = self.handle.tx.send(Msg::Shutdown);
             let _ = w.join();
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn native_worker_loop(
+impl Drop for NativeInferenceServer {
+    fn drop(&mut self) {
+        // Route through the drain path: queued senders get a typed answer
+        // instead of a dropped channel, and the join is bounded.
+        self.shutdown();
+    }
+}
+
+/// Idle-TTL for the server-owned [`SessionPool`]: returned states that no
+/// connection reclaims within this window are dropped (their buffers
+/// freed) on the next pool operation or explicit
+/// [`NativeInferenceServer::evict_idle_sessions`] call.
+const DEFAULT_SESSION_TTL: Duration = Duration::from_secs(300);
+
+/// Everything the native worker thread owns, bundled so the loop and its
+/// closures share one immutable context.
+struct WorkerCtx {
     model: Arc<dyn SequenceModel>,
-    rx: Receiver<Request>,
     cfg: ServerConfig,
     opts: ForwardOptions,
     l: usize,
     row: usize,
     d_output: usize,
+    deadline: Option<Duration>,
     stats: Arc<ServerStats>,
-) {
-    let d_input = row / l;
+    shared: Arc<ServeShared>,
+}
+
+fn native_worker_loop(ctx: WorkerCtx, rx: Receiver<Msg>) {
+    let d_input = ctx.row / ctx.l;
     let mut ws = EngineWorkspace::new();
     let mut xbuf = Vec::new();
     let mut logits = Vec::new();
-    let max_batch = cfg.max_batch.max(1);
+    let max_batch = ctx.cfg.max_batch.max(1);
     loop {
         let first = match rx.recv() {
-            Ok(r) => r,
+            Ok(Msg::Infer(r)) => {
+                ctx.stats.depth_dec();
+                match triage(r, &ctx.shared, ctx.deadline, &ctx.stats) {
+                    Some(r) => r,
+                    None => continue,
+                }
+            }
+            Ok(Msg::Shutdown) => {
+                drain_queue(&rx, &ctx.stats);
+                return;
+            }
             Err(_) => return, // all senders dropped
         };
         let execute = |pending: Vec<Request>,
                        ws: &mut EngineWorkspace,
                        xbuf: &mut Vec<f32>,
-                       logits: &mut Vec<f32>| {
+                       logits: &mut Vec<f32>,
+                       straggler: bool| {
             let n = pending.len();
-            stats.requests.fetch_add(n as u64, Ordering::Relaxed);
-            stats.batches.fetch_add(1, Ordering::Relaxed);
+            ctx.stats.requests.fetch_add(n as u64, Ordering::Relaxed);
+            ctx.stats.batches.fetch_add(1, Ordering::Relaxed);
+            if straggler {
+                ctx.stats.stragglers.fetch_add(n as u64, Ordering::Relaxed);
+            }
             let t0 = Instant::now();
             let rows: Vec<&[f32]> = pending.iter().map(|r| r.x.as_slice()).collect();
-            pack_rows_into(&rows, n, row, xbuf);
-            logits.resize(n * d_output, 0.0);
-            let batch_opts = opts.clone().with_timescale(pending[0].timescale);
-            model.prefill_into(
-                Batch::new(&xbuf[..n * row], n, l, d_input),
-                &batch_opts,
-                ws,
-                &mut logits[..n * d_output],
-            );
-            for (i, r) in pending.into_iter().enumerate() {
-                let resp = Response {
-                    logits: logits[i * d_output..(i + 1) * d_output].to_vec(),
-                    batched_with: n,
-                    queue_secs: (t0 - r.submitted).as_secs_f64(),
-                    total_secs: r.submitted.elapsed().as_secs_f64(),
-                };
-                let _ = r.resp.send(Ok(resp));
+            pack_rows_into(&rows, n, ctx.row, xbuf);
+            logits.resize(n * ctx.d_output, 0.0);
+            let batch_opts = ctx.opts.clone().with_timescale(pending[0].timescale);
+            // Panic containment: only this batch's forward is inside the
+            // unwind boundary; `pending` stays owned out here so the
+            // poisoned batch can still answer its own requests.
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                ctx.model.prefill_into(
+                    Batch::new(&xbuf[..n * ctx.row], n, ctx.l, d_input),
+                    &batch_opts,
+                    ws,
+                    &mut logits[..n * ctx.d_output],
+                );
+            }));
+            match run {
+                Ok(()) => {
+                    for (i, r) in pending.into_iter().enumerate() {
+                        let resp = Response {
+                            logits: logits[i * ctx.d_output..(i + 1) * ctx.d_output].to_vec(),
+                            batched_with: n,
+                            queue_secs: (t0 - r.submitted).as_secs_f64(),
+                            total_secs: r.submitted.elapsed().as_secs_f64(),
+                        };
+                        let _ = r.resp.send(Ok(resp));
+                    }
+                }
+                Err(payload) => {
+                    let msg = panic_message(payload);
+                    ctx.stats.panicked.fetch_add(n as u64, Ordering::Relaxed);
+                    for r in pending {
+                        let _ = r.resp.send(Err(ServeError::ModelPanic(msg.clone())));
+                    }
+                    // The unwound forward may have left the workspace
+                    // mid-update; discard the scratch rather than trust
+                    // it — the next batch rebuilds from clean buffers.
+                    *ws = EngineWorkspace::new();
+                    logits.clear();
+                }
             }
         };
-        let pending = coalesce(&rx, first, max_batch, cfg.max_wait, |one| {
-            execute(one, &mut ws, &mut xbuf, &mut logits)
-        });
-        execute(pending, &mut ws, &mut xbuf, &mut logits);
+        let (pending, saw_shutdown) = coalesce(
+            &rx,
+            first,
+            max_batch,
+            ctx.cfg.max_wait,
+            |r| {
+                ctx.stats.depth_dec();
+                triage(r, &ctx.shared, ctx.deadline, &ctx.stats)
+            },
+            |one| execute(one, &mut ws, &mut xbuf, &mut logits, true),
+        );
+        execute(pending, &mut ws, &mut xbuf, &mut logits, false);
+        if saw_shutdown {
+            drain_queue(&rx, &ctx.stats);
+            return;
+        }
     }
 }
 
@@ -308,7 +684,8 @@ fn native_worker_loop(
 // PJRT backend (feature-gated: needs the xla runtime)
 // ---------------------------------------------------------------------------
 
-/// A running PJRT inference server. Dropping it stops the worker.
+/// A running PJRT inference server. Dropping it drains and stops the
+/// worker.
 #[cfg(feature = "pjrt")]
 pub struct InferenceServer {
     handle: ServeHandle,
@@ -350,9 +727,13 @@ impl InferenceServer {
         let dir = artifacts_dir.to_path_buf();
         let fwd_name = format!("{preset}_fwd");
 
-        let (tx, rx) = channel::<Request>();
+        let queue_cap = resolved_queue_cap(&cfg);
+        let deadline = resolved_default_deadline(&cfg);
+        let (tx, rx) = sync_channel::<Msg>(queue_cap);
         let stats = Arc::new(ServerStats::default());
+        let shared = Arc::new(ServeShared::default());
         let wstats = stats.clone();
+        let wshared = shared.clone();
         let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
         let worker = spawn_worker("s5-pjrt-server", move || {
             let setup = (|| -> anyhow::Result<(Artifact, Vec<Literal>)> {
@@ -367,7 +748,10 @@ impl InferenceServer {
             match setup {
                 Ok((art, params)) => {
                     let _ = ready_tx.send(Ok(()));
-                    pjrt::worker_loop(art, params, rx, cfg, batch, row, classes, x_dims, wstats);
+                    pjrt::worker_loop(
+                        art, params, rx, cfg, batch, row, classes, x_dims, wstats, wshared,
+                        deadline,
+                    );
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
@@ -379,7 +763,14 @@ impl InferenceServer {
             .context("server worker died during startup")??;
 
         Ok(InferenceServer {
-            handle: ServeHandle { tx, row, d_output: classes },
+            handle: ServeHandle {
+                tx,
+                shared,
+                stats: stats.clone(),
+                queue_cap,
+                row,
+                d_output: classes,
+            },
             stats,
             worker: Some(worker),
         })
@@ -388,17 +779,21 @@ impl InferenceServer {
     pub fn handle(&self) -> ServeHandle {
         self.handle.clone()
     }
+
+    /// Graceful drain, mirroring [`NativeInferenceServer::shutdown`].
+    pub fn shutdown(&mut self) {
+        self.handle.shared.shutting_down.store(true, Ordering::Release);
+        if let Some(w) = self.worker.take() {
+            let _ = self.handle.tx.send(Msg::Shutdown);
+            let _ = w.join();
+        }
+    }
 }
 
 #[cfg(feature = "pjrt")]
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        // closing the channel stops the worker
-        let (tx, _) = channel();
-        self.handle.tx = tx;
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -413,23 +808,47 @@ mod pjrt {
     pub(super) fn worker_loop(
         art: Artifact,
         params: Vec<Literal>,
-        rx: Receiver<Request>,
+        rx: Receiver<Msg>,
         cfg: ServerConfig,
         batch: usize,
         row: usize,
         classes: usize,
         x_dims: Vec<usize>,
         stats: Arc<ServerStats>,
+        shared: Arc<ServeShared>,
+        deadline: Option<Duration>,
     ) {
         loop {
             let first = match rx.recv() {
-                Ok(r) => r,
+                Ok(Msg::Infer(r)) => {
+                    stats.depth_dec();
+                    match triage(r, &shared, deadline, &stats) {
+                        Some(r) => r,
+                        None => continue,
+                    }
+                }
+                Ok(Msg::Shutdown) => {
+                    drain_queue(&rx, &stats);
+                    return;
+                }
                 Err(_) => return,
             };
-            let pending = coalesce(&rx, first, batch, cfg.max_wait, |one| {
-                execute_batch(&art, &params, one, batch, row, classes, &x_dims, &stats)
-            });
-            execute_batch(&art, &params, pending, batch, row, classes, &x_dims, &stats);
+            let (pending, saw_shutdown) = coalesce(
+                &rx,
+                first,
+                batch,
+                cfg.max_wait,
+                |r| {
+                    stats.depth_dec();
+                    triage(r, &shared, deadline, &stats)
+                },
+                |one| execute_batch(&art, &params, one, batch, row, classes, &x_dims, &stats, true),
+            );
+            execute_batch(&art, &params, pending, batch, row, classes, &x_dims, &stats, false);
+            if saw_shutdown {
+                drain_queue(&rx, &stats);
+                return;
+            }
         }
     }
 
@@ -443,10 +862,14 @@ mod pjrt {
         classes: usize,
         x_dims: &[usize],
         stats: &Arc<ServerStats>,
+        straggler: bool,
     ) {
         let n_real = pending.len();
         stats.requests.fetch_add(n_real as u64, Ordering::Relaxed);
         stats.batches.fetch_add(1, Ordering::Relaxed);
+        if straggler {
+            stats.stragglers.fetch_add(n_real as u64, Ordering::Relaxed);
+        }
         let t0 = Instant::now();
 
         // pad to the artifact's fixed batch dimension
@@ -479,9 +902,14 @@ mod pjrt {
                 }
             }
             Err(e) => {
-                let msg = format!("{e:#}");
+                // The xla runtime reports execution failure as an error
+                // rather than unwinding; it poisons this batch the same
+                // way a native panic would, so it maps to the same
+                // variant and counter.
+                let msg = format!("pjrt run failed: {e:#}");
+                stats.panicked.fetch_add(n_real as u64, Ordering::Relaxed);
                 for r in pending {
-                    let _ = r.resp.send(Err(anyhow::anyhow!("{msg}")));
+                    let _ = r.resp.send(Err(ServeError::ModelPanic(msg.clone())));
                 }
             }
         }
@@ -518,6 +946,18 @@ impl RunningServer {
 mod tests {
     use super::*;
 
+    fn test_req(ts: f64) -> (Request, Receiver<Result<Response, ServeError>>) {
+        let (rtx, rrx) = channel();
+        let req = Request {
+            x: Vec::new(),
+            timescale: ts,
+            submitted: Instant::now(),
+            deadline: None,
+            resp: rtx,
+        };
+        (req, rrx)
+    }
+
     #[test]
     fn server_config_default_sane() {
         let c = ServerConfig::default();
@@ -526,6 +966,18 @@ mod tests {
         // threads = 0 means auto-detect, which must resolve to ≥ 1 worker
         assert_eq!(c.threads, 0);
         assert!(auto_threads(c.threads) >= 1);
+        // queue_cap = 0 / deadline = None mean auto (env, then built-in)
+        assert_eq!(c.queue_cap, 0);
+        assert_eq!(c.deadline, None);
+        assert!(resolved_queue_cap(&c) >= 1);
+        // an explicit value always wins without consulting the env
+        let explicit = ServerConfig { queue_cap: 7, ..ServerConfig::default() };
+        assert_eq!(resolved_queue_cap(&explicit), 7);
+        let with_deadline = ServerConfig {
+            deadline: Some(Duration::from_millis(9)),
+            ..ServerConfig::default()
+        };
+        assert_eq!(resolved_default_deadline(&with_deadline), Some(Duration::from_millis(9)));
     }
 
     #[test]
@@ -536,5 +988,83 @@ mod tests {
         assert!((s.mean_batch_fill() - 2.5).abs() < 1e-12);
         let empty = ServerStats::default();
         assert_eq!(empty.mean_batch_fill(), 0.0);
+        // the depth gauge never wraps below zero
+        empty.depth_dec();
+        assert_eq!(empty.queue_depth(), 0);
+        empty.depth_inc();
+        assert_eq!(empty.queue_depth(), 1);
+        empty.depth_dec();
+        assert_eq!(empty.queue_depth(), 0);
+    }
+
+    #[test]
+    fn serve_error_display_names_the_cause() {
+        assert!(format!("{}", ServeError::QueueFull { cap: 4 }).contains("queue full"));
+        let e = ServeError::DeadlineExceeded { budget: Duration::from_millis(5) };
+        assert!(format!("{e}").contains("deadline"));
+        assert!(format!("{}", ServeError::InvalidInput("bad request width 3".into()))
+            .contains("width"));
+        assert!(format!("{}", ServeError::ModelPanic("boom".into())).contains("boom"));
+        assert!(format!("{}", ServeError::ShuttingDown).contains("shutting down"));
+    }
+
+    #[test]
+    fn coalesce_groups_on_the_exact_f64_key_and_runs_stragglers_alone() {
+        let (tx, rx) = sync_channel::<Msg>(16);
+        // a key one ulp-ish away must NOT coalesce with 1.0
+        let near = 1.0 + 2f64.powi(-30);
+        let (first, _k0) = test_req(1.0);
+        let (r1, _k1) = test_req(1.0);
+        let (r2, _k2) = test_req(near);
+        let (r3, _k3) = test_req(1.0);
+        for r in [r1, r2, r3] {
+            tx.send(Msg::Infer(r)).expect("queue send");
+        }
+        let mut singles = Vec::new();
+        let (batch, saw_shutdown) =
+            coalesce(&rx, first, 8, Duration::from_millis(200), Some, |one| {
+                singles.push(one[0].timescale);
+            });
+        assert!(!saw_shutdown);
+        assert_eq!(batch.len(), 3, "the three exact-1.0 requests coalesce");
+        assert!(batch.iter().all(|r| r.timescale == 1.0));
+        assert_eq!(singles, vec![near], "the near-miss ran as its own batch");
+    }
+
+    #[test]
+    fn coalesce_stops_filling_at_a_shutdown_sentinel() {
+        let (tx, rx) = sync_channel::<Msg>(16);
+        let (first, _k0) = test_req(1.0);
+        let (r1, _k1) = test_req(1.0);
+        let (r2, _k2) = test_req(1.0);
+        tx.send(Msg::Infer(r1)).expect("queue send");
+        tx.send(Msg::Shutdown).expect("queue send");
+        tx.send(Msg::Infer(r2)).expect("queue send");
+        let (batch, saw_shutdown) =
+            coalesce(&rx, first, 8, Duration::from_millis(200), Some, |_| {
+                panic!("no stragglers expected")
+            });
+        assert!(saw_shutdown);
+        // the request behind the sentinel stays queued for the drain
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn triage_answers_expired_and_draining_requests_without_executing() {
+        let stats = ServerStats::default();
+        let shared = ServeShared::default();
+        // a zero budget is always already expired
+        let (r, rrx) = test_req(1.0);
+        assert!(triage(r, &shared, Some(Duration::ZERO), &stats).is_none());
+        assert!(matches!(rrx.try_recv(), Ok(Err(ServeError::DeadlineExceeded { .. }))));
+        assert_eq!(stats.expired.load(Ordering::Relaxed), 1);
+        // no deadline: passes through untouched
+        let (r, _keep) = test_req(1.0);
+        assert!(triage(r, &shared, None, &stats).is_some());
+        // draining: answered ShuttingDown
+        shared.shutting_down.store(true, Ordering::Release);
+        let (r, rrx) = test_req(1.0);
+        assert!(triage(r, &shared, None, &stats).is_none());
+        assert!(matches!(rrx.try_recv(), Ok(Err(ServeError::ShuttingDown))));
     }
 }

@@ -105,19 +105,15 @@ impl SweepResults {
     }
 
     /// Best run by highest metric (accuracy) — ties broken by lower loss.
+    /// `total_cmp` (not `partial_cmp().unwrap()`): a NaN loss from a
+    /// diverged run must not panic the whole sweep report.
     pub fn best_by_metric(&self) -> Option<&(String, f64, f64)> {
-        self.rows.iter().max_by(|a, b| {
-            a.2.partial_cmp(&b.2)
-                .unwrap()
-                .then(b.1.partial_cmp(&a.1).unwrap())
-        })
+        self.rows.iter().max_by(|a, b| a.2.total_cmp(&b.2).then(b.1.total_cmp(&a.1)))
     }
 
     /// Best run by lowest loss (regression tasks).
     pub fn best_by_loss(&self) -> Option<&(String, f64, f64)> {
-        self.rows
-            .iter()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        self.rows.iter().min_by(|a, b| a.1.total_cmp(&b.1))
     }
 
     pub fn render(&self) -> String {

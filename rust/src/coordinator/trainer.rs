@@ -70,8 +70,8 @@ impl Trainer {
             .map(|&i| &train_art.manifest.inputs[i])
             .collect();
         let params = store.gather(&specs)?;
-        let m: Vec<Literal> = specs.iter().map(|s| literal_zeros(s).unwrap()).collect();
-        let v: Vec<Literal> = specs.iter().map(|s| literal_zeros(s).unwrap()).collect();
+        let m: Vec<Literal> = specs.iter().map(|s| literal_zeros(s)).collect::<Result<_, _>>()?;
+        let v: Vec<Literal> = specs.iter().map(|s| literal_zeros(s)).collect::<Result<_, _>>()?;
         let n_params = params.len();
 
         let kind = train_art.manifest.kind.clone();

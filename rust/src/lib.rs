@@ -289,7 +289,7 @@
 //! | [`data`] | the nine synthetic workload generators + batching |
 //! | [`runtime`] | manifests + native npz store; persistent worker pool; PJRT artifact loading (`pjrt` feature) |
 //! | [`coordinator`] | configs, trainer (`pjrt`), LR schedules, metrics, server |
-//! | [`testing`] | mini property-testing harness (offline: no `proptest`) + counting-allocator guard |
+//! | [`testing`] | mini property-testing harness (offline: no `proptest`) + counting-allocator guard + deterministic fault injection ([`testing::fault`]) |
 //! | [`bench`] | shared harness for the paper-table benchmark binaries |
 //!
 //! ## Features
@@ -310,9 +310,49 @@
 //! without the feature); `--no-default-features` pins the plain scalar
 //! oracle build.
 //!
+//! ## Failure model
+//!
+//! Serving is fault-contained: every way a request can fail is a typed
+//! [`coordinator::server::ServeError`], and a failure never out-lives
+//! the request (or batch) it belongs to.
+//!
+//! * **Panic ≠ crash.** A model panic during a served batch is caught
+//!   (`catch_unwind`, riding the worker pool's per-task isolation);
+//!   exactly that batch's requests are answered
+//!   [`coordinator::server::ServeError::ModelPanic`], the worker thread
+//!   survives in place, and later batches are **bit-for-bit** unaffected
+//!   (the possibly half-written workspace is discarded). Pooled
+//!   streaming sessions have the same property at the
+//!   [`ssm::api::SessionPool`] layer: states are reset before re-pooling
+//!   and the free-list mutex recovers from poisoning, so a panicking
+//!   stream can never leak state into the next connection.
+//! * **Error ≠ panic.** Malformed input is rejected at admission
+//!   ([`coordinator::server::ServeError::InvalidInput`]) on the caller's
+//!   thread; on the worker, recoverable conditions return errors. Lint
+//!   L6 (below) statically bans `.unwrap()` / `.expect(` on the serving
+//!   path so a recoverable condition cannot be promoted to a panic by
+//!   accident.
+//! * **Shed, don't queue without bound.** The admission queue is
+//!   capacity-bounded (`queue_cap` / `S5_QUEUE_CAP`); a full queue sheds
+//!   immediately with [`coordinator::server::ServeError::QueueFull`].
+//!   Requests carry deadlines (client-supplied, or the server default /
+//!   `S5_REQ_DEADLINE_MS`) enforced at dequeue — drop-before-execute —
+//!   and on the caller's own clock, so callers never hang on a wedged
+//!   worker. [`coordinator::server::ServerStats`] counts every shed,
+//!   expired and panicked request and gauges the live queue depth.
+//! * **Drain, don't abandon.** Shutdown (explicit or on drop) closes
+//!   admission, finishes the in-flight batch, and answers every queued
+//!   request with [`coordinator::server::ServeError::ShuttingDown`].
+//!
+//! All of it is pinned deterministically by the fault-injection harness
+//! in [`testing::fault`] ([`testing::fault::FaultPlan`] schedules exact
+//! panic batch/step indices and injected latency;
+//! [`testing::fault::FaultyModel`] wraps any model) driven by
+//! `tests/server_robustness.rs` on both the simd and scalar builds.
+//!
 //! ## Checked invariants
 //!
-//! Five repo-wide source invariants are machine-enforced by the `xtask`
+//! Six repo-wide source invariants are machine-enforced by the `xtask`
 //! workspace crate — run `cargo run -p xtask -- check` from `rust/`
 //! (CI runs it on every push, next to `cargo clippy --all-targets -- -D
 //! warnings`). They are properties of the *source*, so ordinary tests
@@ -345,6 +385,12 @@
 //!   "simd"))]` counts match, and every `cfg!(feature = "simd")` is an
 //!   `if` dispatch whose block is followed by scalar fallthrough code
 //!   (or an `else` branch).
+//! * **L6 `serve-unwrap`** — no `.unwrap()` / `.expect(` on the serving
+//!   path (`coordinator/` and `ssm/api.rs`) outside `#[cfg(test)]` code:
+//!   every serving failure must become a typed
+//!   [`coordinator::server::ServeError`] instead of a worker-killing
+//!   panic (see *Failure model*). The poison-recovery idiom
+//!   `.unwrap_or_else(|p| p.into_inner())` is deliberately not matched.
 //!
 //! Any line can be exempted with `// s5:allow(<lint>) <reason>` on the
 //! offending line or the line directly above; the reason is mandatory.

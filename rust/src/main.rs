@@ -119,10 +119,16 @@ fn cmd_eval(_args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let preset = args.get_or("preset", "smnist");
     let n_requests = args.get_usize("requests", 64);
+    // --queue-cap 0 and --deadline-ms 0 mean auto: the S5_QUEUE_CAP /
+    // S5_REQ_DEADLINE_MS knobs if set, else the built-in defaults.
+    let deadline_ms = args.get_usize("deadline-ms", 0);
     let cfg = ServerConfig {
         max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 2) as u64),
         max_batch: args.get_usize("max-batch", 16),
         threads: args.get_usize("threads", 0),
+        queue_cap: args.get_usize("queue-cap", 0),
+        deadline: (deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(deadline_ms as u64)),
     };
     let default_engine = if cfg!(feature = "pjrt") { "pjrt" } else { "native" };
     let engine = args.get_or("engine", default_engine);
@@ -215,13 +221,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = s5::util::Stats::from(&lat);
+    let st = server.stats();
     println!(
         "served {n_requests} requests in {wall:.3}s  ({:.1} req/s)\n\
-         latency p50={:.1}ms p95={:.1}ms  mean batch fill={:.2}",
+         latency p50={:.1}ms p95={:.1}ms  mean batch fill={:.2}\n\
+         shed={} expired={} panicked={}",
         n_requests as f64 / wall,
         stats.p50 * 1e3,
         stats.p95 * 1e3,
-        server.stats().mean_batch_fill()
+        st.mean_batch_fill(),
+        st.shed.load(std::sync::atomic::Ordering::Relaxed),
+        st.expired.load(std::sync::atomic::Ordering::Relaxed),
+        st.panicked.load(std::sync::atomic::Ordering::Relaxed)
     );
     Ok(())
 }

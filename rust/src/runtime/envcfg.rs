@@ -33,6 +33,8 @@ pub const ENV_REGISTRY: &[(&str, &str)] = &[
     ("S5_BENCH_JSON", "benches: output path for the scan perf snapshot"),
     ("S5_BENCH_STEPS", "benches: step-count override for the table benches"),
     ("S5_DTYPE", "storage dtype of the planar drive planes: f32 (default) or bf16"),
+    ("S5_QUEUE_CAP", "server admission-queue capacity in requests (full queue sheds)"),
+    ("S5_REQ_DEADLINE_MS", "server default per-request deadline in ms (0/unset = none)"),
     ("S5_ENVCFG_TEST_NEVER_SET", "(tests only) a name no environment ever sets"),
 ];
 // s5:env-registry-end

@@ -407,6 +407,21 @@ fn default_global_workers() -> usize {
         .max(1)
 }
 
+/// Render a caught panic payload as its message. `panic!` with a format
+/// string produces a `String` payload and `panic!("literal")` a
+/// `&'static str`; anything else (custom `panic_any` values) gets a
+/// placeholder. Used by the serving layer to surface a contained model
+/// panic as a typed error without re-raising it.
+pub fn panic_message(payload: Box<dyn Any + Send>) -> String {
+    match payload.downcast::<String>() {
+        Ok(s) => *s,
+        Err(p) => match p.downcast::<&'static str>() {
+            Ok(s) => (*s).to_string(),
+            Err(_) => "<non-string panic payload>".to_string(),
+        },
+    }
+}
+
 /// Spawn a named long-lived service thread (server workers). The one
 /// `std::thread` spawn path outside the pool itself — the coordinator's
 /// native and PJRT serving loops both go through here instead of each
@@ -499,11 +514,15 @@ mod tests {
             });
         }));
         let payload = result.expect_err("shard panic must propagate to the caller");
-        let msg = payload
-            .downcast_ref::<&str>()
-            .copied()
-            .unwrap_or("<non-str payload>");
+        let msg = panic_message(payload);
         assert!(msg.contains("exploded"), "unexpected payload {msg:?}");
+        // the helper also renders formatted (String) payloads and shrugs
+        // at non-string ones instead of panicking itself
+        let shard = 3;
+        let formatted = catch_unwind(|| panic!("shard {shard} exploded")).expect_err("must panic");
+        assert_eq!(panic_message(formatted), "shard 3 exploded");
+        let opaque = catch_unwind(|| std::panic::panic_any(42u32)).expect_err("must panic");
+        assert_eq!(panic_message(opaque), "<non-string panic payload>");
         assert_eq!(pool.live_workers(), before, "a worker died with the task");
         // the pool still works
         let count = AtomicU64::new(0);

@@ -28,6 +28,7 @@
 
 use std::any::Any;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::ssm::dtype::Dtype;
 use crate::ssm::engine::{EngineWorkspace, ScanPolicy, Tiling};
@@ -505,22 +506,69 @@ impl Session {
 /// A pool of reusable streaming sessions over one shared model — the
 /// native server checks one out per connection and returns it on close,
 /// so steady-state streaming allocates no per-connection state.
+///
+/// Robustness properties:
+///
+/// * **Never poisoned.** The free list's mutex recovers from a panicking
+///   holder ([`Mutex::into_inner`] on poison) — a client thread that dies
+///   mid-release must not take the whole pool down with it.
+/// * **No stale state.** [`SessionPool::release`] resets the state before
+///   pooling it, so a session whose stream panicked mid-step can be
+///   returned and the *next* `acquire` still starts from a zeroed state —
+///   pinned by `tests/server_robustness.rs` (f32 and bf16 rows).
+/// * **Idle-TTL eviction.** With [`SessionPool::with_ttl`], returned
+///   states that nobody reclaims within `ttl` are dropped (buffers
+///   freed) on the next pool operation or an explicit
+///   [`SessionPool::evict_idle`] — so a burst of connections does not pin
+///   peak-size state memory forever.
 pub struct SessionPool {
     model: Arc<dyn SequenceModel>,
     opts: ForwardOptions,
-    free: Mutex<Vec<SessionState>>,
+    /// idle states, oldest first, each stamped with its return time
+    free: Mutex<Vec<(SessionState, Instant)>>,
+    ttl: Option<Duration>,
 }
 
 impl SessionPool {
     pub fn new(model: Arc<dyn SequenceModel>, opts: ForwardOptions) -> SessionPool {
-        SessionPool { model, opts, free: Mutex::new(Vec::new()) }
+        SessionPool { model, opts, free: Mutex::new(Vec::new()), ttl: None }
+    }
+
+    /// A pool that drops idle states `ttl` after they were returned.
+    pub fn with_ttl(
+        model: Arc<dyn SequenceModel>,
+        opts: ForwardOptions,
+        ttl: Duration,
+    ) -> SessionPool {
+        SessionPool { model, opts, free: Mutex::new(Vec::new()), ttl: Some(ttl) }
+    }
+
+    /// Lock the free list, recovering from a poisoned mutex: the list is
+    /// a plain `Vec` of owned states, valid at every await-free point, so
+    /// a panicking holder cannot leave it mid-invariant.
+    fn lock_free(&self) -> std::sync::MutexGuard<'_, Vec<(SessionState, Instant)>> {
+        self.free.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Drop entries older than `ttl` from the locked list. Entries are in
+    /// return order, so expired ones form a prefix.
+    fn evict_locked(free: &mut Vec<(SessionState, Instant)>, ttl: Duration) -> usize {
+        let keep_from =
+            free.iter().position(|(_, returned)| returned.elapsed() < ttl).unwrap_or(free.len());
+        free.drain(..keep_from).count()
     }
 
     /// Check out a session (reusing a returned state when available).
     pub fn acquire(&self) -> Session {
-        let state = self.free.lock().unwrap().pop();
+        let state = {
+            let mut free = self.lock_free();
+            if let Some(ttl) = self.ttl {
+                Self::evict_locked(&mut free, ttl);
+            }
+            free.pop()
+        };
         match state {
-            Some(state) => {
+            Some((state, _returned)) => {
                 Session { model: self.model.clone(), opts: self.opts.clone(), state, steps: 0 }
             }
             None => Session::new(self.model.clone(), self.opts.clone()),
@@ -547,13 +595,28 @@ impl SessionPool {
         if session.opts.timescale != self.opts.timescale {
             return; // foreign-opts state: drop rather than poison the pool
         }
+        // Reset *before* pooling: even if the session's stream panicked
+        // mid-step, the next acquire starts from a zeroed state.
         session.reset();
-        self.free.lock().unwrap().push(session.into_state());
+        let mut free = self.lock_free();
+        if let Some(ttl) = self.ttl {
+            Self::evict_locked(&mut free, ttl);
+        }
+        free.push((session.into_state(), Instant::now()));
+    }
+
+    /// Drop idle states older than the pool's TTL (no-op for a pool built
+    /// without one). Returns how many states were evicted.
+    pub fn evict_idle(&self) -> usize {
+        match self.ttl {
+            Some(ttl) => Self::evict_locked(&mut self.lock_free(), ttl),
+            None => 0,
+        }
     }
 
     /// Number of idle pooled states.
     pub fn idle(&self) -> usize {
-        self.free.lock().unwrap().len()
+        self.lock_free().len()
     }
 }
 

@@ -11,6 +11,14 @@
 //! per-thread heap traffic; `tests/alloc_guard.rs` installs it and asserts
 //! the steady-state fused forward and `Session::step` paths allocate
 //! nothing after warmup.
+//!
+//! [`fault`] is the deterministic fault-injection harness behind the
+//! serving-robustness suite: a [`FaultPlan`](fault::FaultPlan) schedules
+//! panics/latency at exact batch or step indices (seeded, no wall-clock
+//! randomness) and [`FaultyModel`](fault::FaultyModel) wraps any
+//! `SequenceModel` to execute that schedule — `tests/server_robustness.rs`
+//! uses it to prove panic isolation, load-shedding, deadline and drain
+//! semantics.
 
 /// Counting-allocator harness for the zero-allocation invariants.
 ///
@@ -174,6 +182,191 @@ pub mod prop {
     }
 }
 
+/// Deterministic fault injection for serving-robustness tests.
+///
+/// The plan is explicit — "panic at prefill #k", "sleep this long before
+/// every prefill", "panic at step #n" — or derived from a seed through the
+/// repo's own [`Rng`](crate::rng::Rng), never from wall-clock randomness,
+/// so a failing schedule replays exactly.
+pub mod fault {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use crate::ssm::api::{Batch, ForwardOptions, ModelSpec, SequenceModel, SessionState};
+    use crate::ssm::engine::EngineWorkspace;
+
+    /// A deterministic fault schedule for a [`FaultyModel`].
+    ///
+    /// Counters are global across the wrapper (prefills count batches in
+    /// arrival order on the server's single worker, steps count
+    /// materializing `step`/`step_into` calls), so "batch #k" means the
+    /// k-th executed batch, 0-based.
+    #[derive(Clone, Debug, Default)]
+    pub struct FaultPlan {
+        /// 0-based prefill (batch) indices that panic. The panic fires
+        /// *before* the inner forward runs — the model blows up on entry,
+        /// leaving any shared workspace exactly as adversarial as a real
+        /// mid-batch unwind the server must contain.
+        pub panic_on_prefills: Vec<u64>,
+        /// 0-based step indices that panic. The panic fires *after* the
+        /// inner step updated the state — the adversarial case for
+        /// session reuse: the state is dirty beyond the caller's last
+        /// observed output.
+        pub panic_on_steps: Vec<u64>,
+        /// Injected latency before every prefill (models a slow shard;
+        /// lets tests fill the admission queue deterministically).
+        pub prefill_delay: Duration,
+    }
+
+    impl FaultPlan {
+        /// No faults: the wrapper is a transparent pass-through.
+        pub fn none() -> FaultPlan {
+            FaultPlan::default()
+        }
+
+        /// Panic at exactly prefill (batch) #k, 0-based.
+        pub fn panic_at_prefill(k: u64) -> FaultPlan {
+            FaultPlan { panic_on_prefills: vec![k], ..FaultPlan::default() }
+        }
+
+        /// Panic at exactly step #n, 0-based.
+        pub fn panic_at_step(n: u64) -> FaultPlan {
+            FaultPlan { panic_on_steps: vec![n], ..FaultPlan::default() }
+        }
+
+        /// Sleep `delay` before every prefill.
+        pub fn with_prefill_delay(mut self, delay: Duration) -> FaultPlan {
+            self.prefill_delay = delay;
+            self
+        }
+
+        /// A seeded schedule: panic at one prefill index in
+        /// `[0, horizon)`, derived from the repo RNG — deterministic per
+        /// seed, no wall-clock randomness.
+        pub fn seeded_panic(seed: u64, horizon: u64) -> FaultPlan {
+            assert!(horizon > 0, "empty horizon");
+            let mut rng = crate::rng::Rng::new(seed);
+            let k = ((rng.uniform() * horizon as f64) as u64).min(horizon - 1);
+            FaultPlan::panic_at_prefill(k)
+        }
+    }
+
+    /// A [`SequenceModel`] wrapper that executes a [`FaultPlan`] around an
+    /// inner model. Between scheduled faults it delegates verbatim, so
+    /// un-faulted outputs are bit-for-bit the inner model's.
+    pub struct FaultyModel {
+        inner: Arc<dyn SequenceModel>,
+        plan: FaultPlan,
+        prefills: AtomicU64,
+        steps: AtomicU64,
+    }
+
+    impl FaultyModel {
+        pub fn new(inner: Arc<dyn SequenceModel>, plan: FaultPlan) -> FaultyModel {
+            FaultyModel { inner, plan, prefills: AtomicU64::new(0), steps: AtomicU64::new(0) }
+        }
+
+        /// Prefill (batch) calls observed so far.
+        pub fn prefills(&self) -> u64 {
+            self.prefills.load(Ordering::SeqCst)
+        }
+
+        /// Materializing step calls observed so far.
+        pub fn steps(&self) -> u64 {
+            self.steps.load(Ordering::SeqCst)
+        }
+
+        fn count_step(&self) -> u64 {
+            self.steps.fetch_add(1, Ordering::SeqCst)
+        }
+    }
+
+    impl SequenceModel for FaultyModel {
+        fn spec(&self) -> ModelSpec {
+            self.inner.spec()
+        }
+
+        fn prefill_into(
+            &self,
+            batch: Batch<'_>,
+            opts: &ForwardOptions,
+            ws: &mut EngineWorkspace,
+            out: &mut [f32],
+        ) {
+            let k = self.prefills.fetch_add(1, Ordering::SeqCst);
+            if !self.plan.prefill_delay.is_zero() {
+                std::thread::sleep(self.plan.prefill_delay);
+            }
+            if self.plan.panic_on_prefills.contains(&k) {
+                panic!("injected fault: prefill #{k}");
+            }
+            self.inner.prefill_into(batch, opts, ws, out);
+        }
+
+        fn make_state(&self, opts: &ForwardOptions) -> SessionState {
+            self.inner.make_state(opts)
+        }
+
+        fn reset_state(&self, state: &mut SessionState) {
+            self.inner.reset_state(state);
+        }
+
+        fn step(
+            &self,
+            state: &mut SessionState,
+            u: &[f32],
+            dt: Option<f32>,
+            opts: &ForwardOptions,
+        ) -> Vec<f32> {
+            let n = self.count_step();
+            let out = self.inner.step(state, u, dt, opts);
+            if self.plan.panic_on_steps.contains(&n) {
+                panic!("injected fault: step #{n}");
+            }
+            out
+        }
+
+        fn step_into(
+            &self,
+            state: &mut SessionState,
+            u: &[f32],
+            dt: Option<f32>,
+            opts: &ForwardOptions,
+            out: &mut [f32],
+        ) {
+            let n = self.count_step();
+            self.inner.step_into(state, u, dt, opts, out);
+            if self.plan.panic_on_steps.contains(&n) {
+                panic!("injected fault: step #{n}");
+            }
+        }
+
+        // the swallowed-prefix fast paths delegate uncounted: only
+        // materializing steps advance the step schedule, keeping "step
+        // #n" independent of how a prefix was chunked
+        fn advance(
+            &self,
+            state: &mut SessionState,
+            u: &[f32],
+            dt: Option<f32>,
+            opts: &ForwardOptions,
+        ) {
+            self.inner.advance(state, u, dt, opts);
+        }
+
+        fn advance_batch(
+            &self,
+            state: &mut SessionState,
+            tokens: &[f32],
+            l: usize,
+            opts: &ForwardOptions,
+        ) {
+            self.inner.advance_batch(state, tokens, l, opts);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::prop;
@@ -196,5 +389,20 @@ mod tests {
     fn close_slice_reports_index() {
         let e = prop::close_slice_f32(&[1.0, 2.0], &[1.0, 3.0], 1e-3).unwrap_err();
         assert!(e.contains("idx 1"), "{e}");
+    }
+
+    #[test]
+    fn fault_plan_seeded_schedule_is_deterministic_and_in_range() {
+        use super::fault::FaultPlan;
+        let a = FaultPlan::seeded_panic(42, 10);
+        let b = FaultPlan::seeded_panic(42, 10);
+        assert_eq!(a.panic_on_prefills, b.panic_on_prefills, "same seed, same schedule");
+        assert!(a.panic_on_prefills[0] < 10);
+        // different seeds explore the horizon (not a constant schedule)
+        let hits: std::collections::BTreeSet<u64> = (0..64)
+            .map(|seed| FaultPlan::seeded_panic(seed, 1000).panic_on_prefills[0])
+            .collect();
+        assert!(hits.len() > 1, "seeds all mapped to one index");
+        assert!(hits.iter().all(|&k| k < 1000));
     }
 }

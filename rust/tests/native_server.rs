@@ -6,7 +6,7 @@
 
 #![allow(deprecated)] // `S5Model::forward` is the per-sequence oracle here
 
-use s5::coordinator::server::{NativeInferenceServer, ServerConfig};
+use s5::coordinator::server::{NativeInferenceServer, ServeError, ServerConfig};
 use s5::rng::Rng;
 use s5::ssm::s5::{S5Config, S5Model};
 use std::time::Duration;
@@ -25,6 +25,7 @@ fn start(l: usize, max_wait_ms: u64, max_batch: usize) -> (NativeInferenceServer
             max_wait: Duration::from_millis(max_wait_ms),
             max_batch,
             threads: 2,
+            ..ServerConfig::default()
         },
     );
     (server, m)
@@ -87,7 +88,8 @@ fn concurrent_requests_are_batched_and_correct() {
 fn wrong_width_rejected_immediately() {
     let (server, _) = start(16, 1, 8);
     let err = server.handle().infer(vec![0.0; 3]).unwrap_err();
-    assert!(format!("{err}").contains("width"), "{err}");
+    // typed, so callers can distinguish bad input from load-shedding
+    assert!(matches!(&err, ServeError::InvalidInput(m) if m.contains("width")), "{err}");
 }
 
 #[test]

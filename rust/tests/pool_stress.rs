@@ -52,7 +52,12 @@ fn mixed_concurrent_load_is_bit_exact_vs_serial_replay() {
     let server = NativeInferenceServer::start(
         m.clone(),
         l,
-        ServerConfig { max_wait: Duration::from_millis(5), max_batch: 8, threads: 4 },
+        ServerConfig {
+            max_wait: Duration::from_millis(5),
+            max_batch: 8,
+            threads: 4,
+            ..ServerConfig::default()
+        },
     );
     let handle = server.handle();
     // sessions are opened up front (the server handle is the only part
@@ -223,7 +228,12 @@ fn server_drains_cleanly_on_shutdown() {
     let server = NativeInferenceServer::start(
         m,
         l,
-        ServerConfig { max_wait: Duration::from_millis(1), max_batch: 4, threads: 2 },
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            max_batch: 4,
+            threads: 2,
+            ..ServerConfig::default()
+        },
     );
     let stats = server.stats.clone();
     let handle = server.handle();

@@ -400,6 +400,7 @@ fn server_is_generic_over_sequence_models() {
         max_wait: Duration::from_millis(5),
         max_batch: 8,
         threads: 2,
+        ..ServerConfig::default()
     };
     let models: Vec<Arc<dyn SequenceModel>> = vec![
         Arc::new(s5_model(77, 2)),
@@ -449,7 +450,12 @@ fn server_pools_streaming_sessions() {
     let server = NativeInferenceServer::start_model(
         model,
         l,
-        ServerConfig { max_wait: Duration::from_millis(1), max_batch: 4, threads: 1 },
+        ServerConfig {
+            max_wait: Duration::from_millis(1),
+            max_batch: 4,
+            threads: 1,
+            ..ServerConfig::default()
+        },
     );
     let mut rng = Rng::new(14);
     let x = rng.normal_vec_f32(2);
@@ -473,7 +479,12 @@ fn f64_timescales_do_not_alias() {
     let server = NativeInferenceServer::start(
         model,
         l,
-        ServerConfig { max_wait: Duration::from_millis(30), max_batch: 8, threads: 1 },
+        ServerConfig {
+            max_wait: Duration::from_millis(30),
+            max_batch: 8,
+            threads: 1,
+            ..ServerConfig::default()
+        },
     );
     let handle = server.handle();
     // 1 + 2^-30 is exactly representable in f64 but rounds to 1.0f32

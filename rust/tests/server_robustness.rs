@@ -1,0 +1,547 @@
+//! Fault-containment acceptance tests: the serving stack under injected
+//! faults, driven by the deterministic `s5::testing::fault` harness.
+//!
+//! The headline proof: with a [`FaultPlan`] that panics at exactly batch
+//! #k, under many concurrent clients, *exactly* the requests in that
+//! batch are answered [`ServeError::ModelPanic`]; every other response is
+//! **bit-for-bit** identical to a no-fault serial replay of the inner
+//! model; and the worker survives in place (same pool, no respawn,
+//! service continues). The server shape keeps L = 7 with threads = 4, so
+//! the scan is sequential in every sharding branch and numerics cannot
+//! depend on batch composition (see `tests/pool_stress.rs`).
+//!
+//! The rest of the file pins the other containment surfaces: bounded
+//! admission (load-shedding in bounded time), request deadlines (both
+//! dequeue-side drop-before-execute and the client-side clock), graceful
+//! drain on shutdown/drop, session-pool reuse after a mid-stream panic
+//! (f32 and bf16), idle-TTL eviction, and admission-time input
+//! validation.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use s5::coordinator::server::{NativeInferenceServer, ServeError, ServerConfig};
+use s5::rng::Rng;
+use s5::runtime::pool::global_pool;
+use s5::ssm::api::{Batch, ForwardOptions, SequenceModel, Session, SessionPool};
+use s5::ssm::dtype::Dtype;
+use s5::ssm::engine::EngineWorkspace;
+use s5::ssm::s5::{S5Config, S5Model};
+use s5::testing::fault::{FaultPlan, FaultyModel};
+
+/// L = 7 with threads = 4 keeps every scan sequential (7 < 4·(T/B) for
+/// all batch shardings), so responses are replayable as batch-of-1
+/// serial prefills, bit-for-bit.
+const L: usize = 7;
+const D_IN: usize = 2;
+
+fn model(seed: u64, depth: usize) -> S5Model {
+    let cfg = S5Config { h: 16, p: 16, j: 1, ..Default::default() };
+    S5Model::init(D_IN, 5, depth, &cfg, &mut Rng::new(seed))
+}
+
+fn assert_bits_equal(want: &[f32], got: &[f32], what: &str) {
+    assert_eq!(want.len(), got.len(), "{what}: length mismatch");
+    for (i, (x, y)) in want.iter().zip(got.iter()).enumerate() {
+        assert!(x.to_bits() == y.to_bits(), "{what}: bit mismatch at {i}: {x} vs {y}");
+    }
+}
+
+fn serve_cfg(max_batch: usize, max_wait: Duration) -> ServerConfig {
+    ServerConfig { max_wait, max_batch, threads: 4, ..ServerConfig::default() }
+}
+
+/// The acceptance proof: a model that panics at exactly batch #5, under 8
+/// concurrent clients × 4 requests. With `max_batch = 1` every request is
+/// its own batch, so exactly one request must be answered `ModelPanic`;
+/// all 31 others must match a no-fault serial replay bit-for-bit; the
+/// worker survives (no pool respawn) and keeps serving.
+#[test]
+fn injected_panic_poisons_exactly_its_own_batch() {
+    let inner: Arc<dyn SequenceModel> = Arc::new(model(42, 2));
+    let faulty = Arc::new(FaultyModel::new(inner, FaultPlan::panic_at_prefill(5)));
+    let server = NativeInferenceServer::start_model(
+        faulty.clone() as Arc<dyn SequenceModel>,
+        L,
+        serve_cfg(1, Duration::ZERO),
+    );
+    let handle = server.handle();
+    let pool_workers = global_pool().live_workers();
+
+    let mut records: Vec<(Vec<f32>, Result<Vec<f32>, ServeError>)> = Vec::new();
+    std::thread::scope(|s| {
+        let joins: Vec<_> = (0..8u64)
+            .map(|tid| {
+                let h = handle.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(4200 + tid);
+                    let mut out = Vec::new();
+                    for _ in 0..4 {
+                        let x = rng.normal_vec_f32(L * D_IN);
+                        let r = h.infer(x.clone()).map(|resp| resp.logits);
+                        out.push((x, r));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for j in joins {
+            records.extend(j.join().expect("client thread"));
+        }
+    });
+    assert_eq!(records.len(), 32);
+
+    // exactly the poisoned batch's requests fail, with the injected
+    // panic's message carried through to the caller
+    let errs: Vec<&ServeError> = records.iter().filter_map(|(_, r)| r.as_ref().err()).collect();
+    assert_eq!(errs.len(), 1, "exactly one request rides batch #5: {errs:?}");
+    match errs[0] {
+        ServeError::ModelPanic(msg) => {
+            assert!(msg.contains("injected fault: prefill #5"), "{msg}")
+        }
+        other => panic!("expected ModelPanic, got {other:?}"),
+    }
+    assert_eq!(server.stats.panicked.load(Ordering::Relaxed), 1);
+    assert_eq!(server.stats.requests.load(Ordering::Relaxed), 32);
+    assert_eq!(server.stats.batches.load(Ordering::Relaxed), 32);
+    assert_eq!(server.stats.shed.load(Ordering::Relaxed), 0);
+
+    // every surviving response is bit-for-bit the no-fault serial replay
+    // of the inner model — batches before AND after the poisoned one
+    let m = model(42, 2);
+    let opts = ForwardOptions::new().with_threads(4);
+    let mut ws = EngineWorkspace::new();
+    let mut survivors = 0;
+    for (i, (x, r)) in records.iter().enumerate() {
+        if let Ok(got) = r {
+            let want = m.prefill(Batch::single(x, L, D_IN), &opts, &mut ws);
+            assert_bits_equal(&want, got, &format!("record {i}"));
+            survivors += 1;
+        }
+    }
+    assert_eq!(survivors, 31);
+
+    // the worker survived in place: the process-wide pool lost nobody,
+    // and the same server keeps serving correct answers
+    assert_eq!(global_pool().live_workers(), pool_workers, "a pool worker died");
+    let x = Rng::new(7).normal_vec_f32(L * D_IN);
+    let resp = handle.infer(x.clone()).expect("server must serve after the panic");
+    let want = m.prefill(Batch::single(&x, L, D_IN), &opts, &mut ws);
+    assert_bits_equal(&want, &resp.logits, "post-panic request");
+    assert_eq!(faulty.prefills(), 33, "32 storm batches + 1 follow-up");
+}
+
+/// With coalescing enabled, a poisoned batch can hold several requests:
+/// every member gets `ModelPanic` (the `panicked` counter equals the
+/// error count observed by clients), and requests that missed the batch
+/// still replay bit-exact.
+#[test]
+fn a_poisoned_multi_request_batch_answers_every_member() {
+    let inner: Arc<dyn SequenceModel> = Arc::new(model(11, 2));
+    let faulty = Arc::new(FaultyModel::new(inner, FaultPlan::panic_at_prefill(0)));
+    let server = NativeInferenceServer::start_model(
+        faulty as Arc<dyn SequenceModel>,
+        L,
+        serve_cfg(8, Duration::from_millis(200)),
+    );
+    let handle = server.handle();
+
+    let mut records: Vec<(Vec<f32>, Result<Vec<f32>, ServeError>)> = Vec::new();
+    std::thread::scope(|s| {
+        let joins: Vec<_> = (0..6u64)
+            .map(|tid| {
+                let h = handle.clone();
+                s.spawn(move || {
+                    let x = Rng::new(1100 + tid).normal_vec_f32(L * D_IN);
+                    let r = h.infer(x.clone()).map(|resp| resp.logits);
+                    (x, r)
+                })
+            })
+            .collect();
+        for j in joins {
+            records.push(j.join().expect("client thread"));
+        }
+    });
+
+    let errs: Vec<&ServeError> = records.iter().filter_map(|(_, r)| r.as_ref().err()).collect();
+    assert!(!errs.is_empty(), "batch #0 held at least its first request");
+    assert!(
+        errs.iter().all(|e| matches!(e, ServeError::ModelPanic(m) if m.contains("prefill #0"))),
+        "{errs:?}"
+    );
+    // no member of the poisoned batch is silently dropped: the panicked
+    // counter is exactly the ModelPanic count clients observed
+    assert_eq!(server.stats.panicked.load(Ordering::Relaxed), errs.len() as u64);
+
+    let m = model(11, 2);
+    let opts = ForwardOptions::new().with_threads(4);
+    let mut ws = EngineWorkspace::new();
+    for (i, (x, r)) in records.iter().enumerate() {
+        if let Ok(got) = r {
+            let want = m.prefill(Batch::single(x, L, D_IN), &opts, &mut ws);
+            assert_bits_equal(&want, got, &format!("survivor {i}"));
+        }
+    }
+}
+
+/// A full admission queue sheds immediately with a typed `QueueFull` —
+/// the caller is told in bounded time (well under the in-flight batch's
+/// execution time), not made to wait.
+#[test]
+fn a_full_queue_sheds_immediately_with_a_typed_error() {
+    let inner: Arc<dyn SequenceModel> = Arc::new(model(5, 1));
+    let slow = Arc::new(FaultyModel::new(
+        inner,
+        FaultPlan::none().with_prefill_delay(Duration::from_millis(300)),
+    ));
+    let cfg = ServerConfig {
+        max_wait: Duration::ZERO,
+        max_batch: 1,
+        threads: 2,
+        queue_cap: 1,
+        ..ServerConfig::default()
+    };
+    let server = NativeInferenceServer::start_model(slow as Arc<dyn SequenceModel>, L, cfg);
+    let handle = server.handle();
+
+    std::thread::scope(|s| {
+        let ha = handle.clone();
+        let a = s.spawn(move || ha.infer(vec![0.5; L * D_IN]));
+        // let the worker dequeue A (it then sleeps 300ms inside prefill)
+        std::thread::sleep(Duration::from_millis(60));
+        let hb = handle.clone();
+        let b = s.spawn(move || hb.infer(vec![0.25; L * D_IN]));
+        // B now occupies the single queue slot
+        std::thread::sleep(Duration::from_millis(60));
+        let t0 = Instant::now();
+        let c = handle.infer(vec![0.75; L * D_IN]);
+        let waited = t0.elapsed();
+        assert!(matches!(c, Err(ServeError::QueueFull { cap: 1 })), "{c:?}");
+        assert!(waited < Duration::from_millis(200), "shed took {waited:?}");
+        assert!(a.join().expect("client A").is_ok());
+        assert!(b.join().expect("client B").is_ok());
+    });
+    assert_eq!(server.stats.shed.load(Ordering::Relaxed), 1);
+    assert_eq!(server.stats.requests.load(Ordering::Relaxed), 2, "shed request never executed");
+}
+
+/// A request whose server-default deadline passed while queued is dropped
+/// at dequeue — the model never sees it (drop-before-execute).
+#[test]
+fn queued_requests_past_the_default_deadline_expire_without_executing() {
+    let inner: Arc<dyn SequenceModel> = Arc::new(model(6, 1));
+    let slow = Arc::new(FaultyModel::new(
+        inner,
+        FaultPlan::none().with_prefill_delay(Duration::from_millis(250)),
+    ));
+    let cfg = ServerConfig {
+        max_wait: Duration::ZERO,
+        max_batch: 1,
+        threads: 2,
+        deadline: Some(Duration::from_millis(50)),
+        ..ServerConfig::default()
+    };
+    let server =
+        NativeInferenceServer::start_model(slow.clone() as Arc<dyn SequenceModel>, L, cfg);
+    let handle = server.handle();
+
+    std::thread::scope(|s| {
+        let ha = handle.clone();
+        let a = s.spawn(move || ha.infer(vec![0.1; L * D_IN]));
+        // A is dequeued fresh (within budget) and executes for 250ms
+        std::thread::sleep(Duration::from_millis(40));
+        let hb = handle.clone();
+        let b = s.spawn(move || hb.infer(vec![0.2; L * D_IN]));
+        let a = a.join().expect("client A");
+        let b = b.join().expect("client B");
+        assert!(a.is_ok(), "{a:?}");
+        assert!(
+            matches!(b, Err(ServeError::DeadlineExceeded { budget })
+                if budget == Duration::from_millis(50)),
+            "{b:?}"
+        );
+    });
+    assert_eq!(server.stats.expired.load(Ordering::Relaxed), 1);
+    assert_eq!(slow.prefills(), 1, "the expired request never reached the model");
+}
+
+/// An explicit per-request deadline bounds the *caller's* wait on its own
+/// clock, even while the worker is wedged inside a slow forward.
+#[test]
+fn an_explicit_deadline_bounds_the_client_wait_against_a_wedged_worker() {
+    let inner: Arc<dyn SequenceModel> = Arc::new(model(9, 1));
+    let slow = Arc::new(FaultyModel::new(
+        inner,
+        FaultPlan::none().with_prefill_delay(Duration::from_millis(400)),
+    ));
+    let server = NativeInferenceServer::start_model(
+        slow as Arc<dyn SequenceModel>,
+        L,
+        serve_cfg(1, Duration::ZERO),
+    );
+    let handle = server.handle();
+
+    let t0 = Instant::now();
+    let r = handle.infer_deadline(vec![0.3; L * D_IN], 1.0, Duration::from_millis(50));
+    let waited = t0.elapsed();
+    assert!(
+        matches!(r, Err(ServeError::DeadlineExceeded { budget })
+            if budget == Duration::from_millis(50)),
+        "{r:?}"
+    );
+    assert!(waited >= Duration::from_millis(50), "gave up before the budget: {waited:?}");
+    assert!(waited < Duration::from_millis(300), "client hung past its deadline: {waited:?}");
+    // dropping the server now joins a worker that is mid-forward: the
+    // drain must still complete (bounded by one batch execution)
+}
+
+/// `shutdown()` drains: the in-flight batch finishes normally, queued
+/// requests are answered `ShuttingDown` (never executed), and admission
+/// stays closed afterwards. A second call is a no-op.
+#[test]
+fn shutdown_finishes_in_flight_work_and_answers_the_queue() {
+    let inner: Arc<dyn SequenceModel> = Arc::new(model(13, 1));
+    let slow = Arc::new(FaultyModel::new(
+        inner,
+        FaultPlan::none().with_prefill_delay(Duration::from_millis(200)),
+    ));
+    let cfg = ServerConfig {
+        max_wait: Duration::ZERO,
+        max_batch: 1,
+        threads: 2,
+        queue_cap: 8,
+        ..ServerConfig::default()
+    };
+    let mut server =
+        NativeInferenceServer::start_model(slow.clone() as Arc<dyn SequenceModel>, L, cfg);
+    let handle = server.handle();
+
+    std::thread::scope(|s| {
+        let ha = handle.clone();
+        let a = s.spawn(move || ha.infer(vec![0.1; L * D_IN]));
+        std::thread::sleep(Duration::from_millis(50)); // A is executing
+        let hb = handle.clone();
+        let b = s.spawn(move || hb.infer(vec![0.2; L * D_IN]));
+        let hc = handle.clone();
+        let c = s.spawn(move || hc.infer(vec![0.3; L * D_IN]));
+        std::thread::sleep(Duration::from_millis(50)); // B and C are queued
+        server.shutdown();
+        assert!(a.join().expect("client A").is_ok(), "in-flight batch finishes");
+        assert!(matches!(b.join().expect("client B"), Err(ServeError::ShuttingDown)));
+        assert!(matches!(c.join().expect("client C"), Err(ServeError::ShuttingDown)));
+    });
+    assert!(matches!(handle.infer(vec![0.4; L * D_IN]), Err(ServeError::ShuttingDown)));
+    assert_eq!(server.stats.queue_depth(), 0, "drain left the depth gauge dirty");
+    assert_eq!(slow.prefills(), 1, "queued requests were never executed");
+    server.shutdown(); // idempotent
+}
+
+/// Dropping a server under sustained load from 8 client threads routes
+/// through the same drain: every client ends on a typed `ShuttingDown`
+/// (never a hang, never a channel panic), and the queue gauge is empty.
+#[test]
+fn dropping_a_loaded_server_drains_cleanly() {
+    let inner: Arc<dyn SequenceModel> = Arc::new(model(21, 1));
+    let slow = Arc::new(FaultyModel::new(
+        inner,
+        FaultPlan::none().with_prefill_delay(Duration::from_millis(5)),
+    ));
+    let cfg = ServerConfig {
+        max_wait: Duration::ZERO,
+        max_batch: 4,
+        threads: 2,
+        queue_cap: 4,
+        ..ServerConfig::default()
+    };
+    let server = NativeInferenceServer::start_model(slow as Arc<dyn SequenceModel>, L, cfg);
+    let handle = server.handle();
+    let stats = server.stats.clone();
+
+    std::thread::scope(|s| {
+        let joins: Vec<_> = (0..8u64)
+            .map(|tid| {
+                let h = handle.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(900 + tid);
+                    let mut served = 0u64;
+                    loop {
+                        match h.infer(rng.normal_vec_f32(L * D_IN)) {
+                            Ok(_) => served += 1,
+                            Err(ServeError::QueueFull { .. }) => {} // expected under load
+                            Err(ServeError::ShuttingDown) => return served,
+                            Err(e) => panic!("unexpected error under load: {e:?}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(80));
+        drop(server);
+        for j in joins {
+            let _served = j.join().expect("client thread ended on ShuttingDown");
+        }
+    });
+    assert_eq!(stats.queue_depth(), 0, "drain left requests in the gauge");
+    assert!(stats.requests.load(Ordering::Relaxed) > 0, "no work happened before the drop");
+}
+
+/// A pooled session whose stream panicked mid-step (with the state dirty
+/// *beyond* the last observed output) is recycled clean: the next
+/// `acquire` streams bit-for-bit like a fresh session over the bare
+/// inner model. Covered at both storage dtypes.
+fn session_reuse_after_step_panic(dtype: Option<Dtype>) {
+    let inner: Arc<dyn SequenceModel> = Arc::new(model(33, 2));
+    let faulty = Arc::new(FaultyModel::new(inner.clone(), FaultPlan::panic_at_step(3)));
+    let mut opts = ForwardOptions::new().with_threads(1);
+    if let Some(d) = dtype {
+        opts = opts.with_dtype(d);
+    }
+    let pool = SessionPool::new(faulty as Arc<dyn SequenceModel>, opts.clone());
+
+    let mut rng = Rng::new(5150);
+    let mut sess = pool.acquire();
+    for _ in 0..3 {
+        let u = rng.normal_vec_f32(D_IN);
+        let _ = sess.step(&u); // steps #0..#2 are clean
+    }
+    let u = rng.normal_vec_f32(D_IN);
+    // step #3 panics *after* the inner state update — the adversarial
+    // dirty-state case
+    let blown = catch_unwind(AssertUnwindSafe(|| sess.step(&u)));
+    assert!(blown.is_err(), "step #3 must panic");
+    pool.release(sess);
+    assert_eq!(pool.idle(), 1);
+
+    let mut recycled = pool.acquire();
+    assert_eq!(pool.idle(), 0, "acquire reuses the pooled state");
+    let mut fresh = Session::new(inner, opts);
+    for i in 0..5 {
+        let u = rng.normal_vec_f32(D_IN);
+        let want = fresh.step(&u);
+        let got = recycled.step(&u);
+        assert_bits_equal(&want, &got, &format!("recycled step {i} (dtype {dtype:?})"));
+    }
+    pool.release(recycled);
+}
+
+#[test]
+fn a_recycled_session_never_leaks_state_after_a_panic_f32() {
+    session_reuse_after_step_panic(None);
+}
+
+#[test]
+fn a_recycled_session_never_leaks_state_after_a_panic_bf16() {
+    session_reuse_after_step_panic(Some(Dtype::Bf16));
+}
+
+/// Idle-TTL eviction: states returned and not reclaimed within the TTL
+/// are dropped; a pool without a TTL never evicts; the server-owned pool
+/// (5-minute TTL) keeps fresh returns.
+#[test]
+fn idle_sessions_are_evicted_after_the_ttl() {
+    let inner: Arc<dyn SequenceModel> = Arc::new(model(3, 1));
+    let opts = ForwardOptions::new().with_threads(1);
+    let pool = SessionPool::with_ttl(inner.clone(), opts.clone(), Duration::from_millis(30));
+    let (a, b) = (pool.acquire(), pool.acquire());
+    pool.release(a);
+    pool.release(b);
+    assert_eq!(pool.idle(), 2);
+    std::thread::sleep(Duration::from_millis(60));
+    assert_eq!(pool.evict_idle(), 2);
+    assert_eq!(pool.idle(), 0);
+
+    let forever = SessionPool::new(inner, opts);
+    forever.release(forever.acquire());
+    std::thread::sleep(Duration::from_millis(60));
+    assert_eq!(forever.evict_idle(), 0, "a TTL-less pool never evicts");
+    assert_eq!(forever.idle(), 1);
+
+    let server =
+        NativeInferenceServer::start_model(Arc::new(model(3, 1)), L, ServerConfig::default());
+    let s = server.open_session();
+    server.close_session(s);
+    assert_eq!(server.evict_idle_sessions(), 0, "5-minute TTL keeps fresh returns");
+}
+
+/// Malformed payloads and timescales are rejected on the caller's thread
+/// with `InvalidInput`, before the queue — the worker never sees them.
+#[test]
+fn malformed_requests_are_rejected_before_the_queue() {
+    let server =
+        NativeInferenceServer::start_model(Arc::new(model(1, 1)), L, ServerConfig::default());
+    let handle = server.handle();
+    let ok_row = vec![0.5f32; L * D_IN];
+
+    let wrong_width = handle.infer(vec![0.5; L * D_IN + 1]);
+    assert!(
+        matches!(&wrong_width, Err(ServeError::InvalidInput(m)) if m.contains("width")),
+        "{wrong_width:?}"
+    );
+    let mut nan_row = ok_row.clone();
+    nan_row[3] = f32::NAN;
+    assert!(
+        matches!(handle.infer(nan_row), Err(ServeError::InvalidInput(m)) if m.contains("index 3"))
+    );
+    let mut inf_row = ok_row.clone();
+    inf_row[0] = f32::INFINITY;
+    assert!(matches!(handle.infer(inf_row), Err(ServeError::InvalidInput(_))));
+    for ts in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+        let r = handle.infer_with_timescale(ok_row.clone(), ts);
+        assert!(matches!(r, Err(ServeError::InvalidInput(_))), "timescale {ts}: {r:?}");
+    }
+
+    assert_eq!(server.stats.requests.load(Ordering::Relaxed), 0, "nothing reached the worker");
+    assert_eq!(server.stats.queue_depth(), 0);
+    assert!(handle.infer(ok_row).is_ok(), "a well-formed request still succeeds");
+}
+
+/// A mismatched-timescale arrival during an open batch window executes as
+/// its own singleton batch and is counted in `stats.stragglers`; both
+/// requests stay bit-exact at their own timescale.
+#[test]
+fn mismatched_timescales_run_alone_and_are_counted_as_stragglers() {
+    let m = model(55, 2);
+    let server = NativeInferenceServer::start(
+        m.clone(),
+        L,
+        ServerConfig {
+            max_wait: Duration::from_millis(250),
+            max_batch: 8,
+            threads: 4,
+            ..ServerConfig::default()
+        },
+    );
+    let handle = server.handle();
+    let mut rng = Rng::new(808);
+    let xa = rng.normal_vec_f32(L * D_IN);
+    let xb = rng.normal_vec_f32(L * D_IN);
+
+    let (ra, rb) = std::thread::scope(|s| {
+        let ha = handle.clone();
+        let xa2 = xa.clone();
+        let a = s.spawn(move || ha.infer_with_timescale(xa2, 1.0));
+        // land B inside A's 250ms batch window
+        std::thread::sleep(Duration::from_millis(60));
+        let hb = handle.clone();
+        let xb2 = xb.clone();
+        let b = s.spawn(move || hb.infer_with_timescale(xb2, 2.0));
+        (a.join().expect("client A"), b.join().expect("client B"))
+    });
+    let ra = ra.expect("ts=1.0 request");
+    let rb = rb.expect("ts=2.0 request");
+
+    assert_eq!(server.stats.stragglers.load(Ordering::Relaxed), 1);
+    assert_eq!(server.stats.requests.load(Ordering::Relaxed), 2);
+    assert_eq!(server.stats.batches.load(Ordering::Relaxed), 2);
+    assert_eq!(ra.batched_with, 1);
+    assert_eq!(rb.batched_with, 1);
+
+    let mut ws = EngineWorkspace::new();
+    for (x, ts, got) in [(&xa, 1.0, &ra.logits), (&xb, 2.0, &rb.logits)] {
+        let opts = ForwardOptions::new().with_threads(4).with_timescale(ts);
+        let want = m.prefill(Batch::single(x, L, D_IN), &opts, &mut ws);
+        assert_bits_equal(&want, got, &format!("ts {ts}"));
+    }
+}

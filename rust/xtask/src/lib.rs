@@ -6,7 +6,7 @@
 //! with a hand-rolled line lexer — no `syn`, no dependencies; the build
 //! container is hermetic — that strips comments, string literals and char
 //! literals from every line of `rust/src`, then pattern-matches the
-//! remaining code text. Five named lints:
+//! remaining code text. Six named lints:
 //!
 //! * **`pool-threading` (L1)** — `thread::spawn` / `thread::scope` /
 //!   `thread::Builder` appear only inside `runtime/pool.rs`. Everything
@@ -31,6 +31,13 @@
 //!   "simd"))]` counts match, and every `cfg!(feature = "simd")` is an
 //!   `if` dispatch whose block is followed by scalar fallthrough code
 //!   (or an `else`).
+//! * **`serve-unwrap` (L6)** — no `.unwrap()` / `.expect(` on the serving
+//!   path (`coordinator/` and `ssm/api.rs`) outside `#[cfg(test)]` code.
+//!   The server's fault-containment story is that every failure becomes a
+//!   typed `ServeError` answered to the caller; a stray unwrap would turn
+//!   a recoverable condition into a worker-killing panic. Poison-tolerant
+//!   lock recovery spells `.unwrap_or_else(|p| p.into_inner())`, which the
+//!   lint deliberately does not match.
 //!
 //! Any line can be exempted with `// s5:allow(<lint>) <reason>` on the
 //! offending line or the line directly above; the reason is mandatory.
@@ -49,6 +56,7 @@ pub const LINTS: &[(&str, &str)] = &[
     ("hot-alloc", "L3: no allocating calls inside // s5:hot-begin / // s5:hot-end fences"),
     ("unsafe-safety", "L4: every `unsafe` has a // SAFETY: comment; UNSAFE.md is in sync"),
     ("simd-symmetry", "L5: every simd feature gate has a scalar twin"),
+    ("serve-unwrap", "L6: no .unwrap()/.expect( on the serving path outside #[cfg(test)]"),
 ];
 
 /// One lint violation (or checker-internal error such as an unbalanced
@@ -647,6 +655,63 @@ fn lint_simd_symmetry(rel: &str, lines: &[Line], sup: &Suppressions, findings: &
     }
 }
 
+/// Panicking shortcut calls banned on the serving path. `.expect(` also
+/// catches `.expect_err(` — both panic, both are banned there. The
+/// poison-recovery idiom `.unwrap_or_else(|p| p.into_inner())` matches
+/// neither pattern, by design.
+const SERVE_UNWRAP_PATS: &[&str] = &[".unwrap()", ".expect("];
+
+/// Files subject to L6: the request path from admission to model call.
+fn serving_path(rel: &str) -> bool {
+    rel.contains("/coordinator/") || rel.ends_with("ssm/api.rs")
+}
+
+/// 0-based inclusive line ranges gated behind `#[cfg(test)]`: the
+/// attribute line through the closing brace of the first block that
+/// follows it (the `mod tests { … }` body in practice). An attribute with
+/// no following block (e.g. on a lone `use`) conservatively extends to
+/// end of file — serving sources keep all test code in a trailing module,
+/// so that approximation never hides production lines in this repo.
+fn cfg_test_ranges(lines: &[Line]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (n, line) in lines.iter().enumerate() {
+        let Some(idx) = line.code.find("#[cfg(test)]") else {
+            continue;
+        };
+        let end = match block_close(lines, n, idx) {
+            Some((close, _)) => close,
+            None => lines.len().saturating_sub(1),
+        };
+        out.push((n, end));
+    }
+    out
+}
+
+fn lint_serve_unwrap(rel: &str, lines: &[Line], sup: &Suppressions, findings: &mut Vec<Finding>) {
+    if !serving_path(rel) {
+        return;
+    }
+    let test_ranges = cfg_test_ranges(lines);
+    for (n, line) in lines.iter().enumerate() {
+        if test_ranges.iter().any(|&(b, e)| n >= b && n <= e) {
+            continue;
+        }
+        for pat in SERVE_UNWRAP_PATS {
+            if line.code.contains(pat) && !sup.allows(n, "serve-unwrap") {
+                findings.push(Finding {
+                    lint: "serve-unwrap",
+                    file: rel.to_string(),
+                    line: n + 1,
+                    msg: format!(
+                        "`{pat}` on the serving path — answer a typed ServeError (or recover \
+                         explicitly) instead of panicking in the worker"
+                    ),
+                });
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // S5_* knob registry cross-check
 // ---------------------------------------------------------------------------
@@ -733,6 +798,7 @@ pub fn run_check(src_dir: &Path, src_prefix: &str, usage_dirs: &[&Path]) -> Chec
         lint_hot_alloc(&rel, &lines, &fences, &sup, &mut res.findings);
         lint_unsafe(&rel, &lines, &sup, &mut res.findings, &mut res.unsafe_sites);
         lint_simd_symmetry(&rel, &lines, &sup, &mut res.findings);
+        lint_serve_unwrap(&rel, &lines, &sup, &mut res.findings);
 
         // Registry table + knob usage. The registry lines themselves are
         // excluded from the usage scan (they would trivially satisfy it).

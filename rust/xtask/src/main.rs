@@ -1,6 +1,6 @@
 //! CLI for the invariant checker.
 //!
-//! * `cargo run -p xtask -- check` — run lints L1–L5 over `rust/src`,
+//! * `cargo run -p xtask -- check` — run lints L1–L6 over `rust/src`,
 //!   verify `UNSAFE.md` is in sync; non-zero exit on any finding.
 //! * `cargo run -p xtask -- write-unsafe` — regenerate `UNSAFE.md`.
 

@@ -1,4 +1,4 @@
-//! Self-tests for the invariant checker: every lint L1–L5 must trip on a
+//! Self-tests for the invariant checker: every lint L1–L6 must trip on a
 //! seeded violation and stay quiet on its clean twin, suppressions must
 //! work (and demand a reason), and — the real teeth — the repo at HEAD
 //! must come back clean with `UNSAFE.md` in sync.
@@ -278,6 +278,99 @@ fn l5_dispatch_with_fallthrough_or_else_passes() {
         &[(
             "gate.rs",
             "pub fn kernel(x: &mut [f32]) {\n    if cfg!(feature = \"simd\") {\n        x[0] = 1.0;\n        return;\n    }\n    x[0] = 2.0;\n}\npub fn kernel2(x: &mut [f32]) {\n    if cfg!(feature = \"simd\") {\n        x[0] = 1.0;\n    } else {\n        x[0] = 2.0;\n    }\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+}
+
+// ---- L6: no unwrap/expect on the serving path ----
+
+#[test]
+fn l6_unwrap_in_coordinator_trips() {
+    let dir = fixture(
+        "l6-bad",
+        &[(
+            "coordinator/server.rs",
+            "pub fn go(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert_eq!(lints_hit(&res), ["serve-unwrap"], "{:#?}", res.findings);
+}
+
+#[test]
+fn l6_expect_in_ssm_api_trips() {
+    let dir = fixture(
+        "l6-expect",
+        &[(
+            "ssm/api.rs",
+            "pub fn go(v: Option<u32>) -> u32 {\n    v.expect(\"present\")\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert_eq!(lints_hit(&res), ["serve-unwrap"], "{:#?}", res.findings);
+}
+
+#[test]
+fn l6_unwrap_off_the_serving_path_is_fine() {
+    let dir = fixture(
+        "l6-elsewhere",
+        &[(
+            "ssm/scan.rs",
+            "pub fn go(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+}
+
+#[test]
+fn l6_cfg_test_code_is_exempt() {
+    let dir = fixture(
+        "l6-test-mod",
+        &[(
+            "coordinator/server.rs",
+            "pub fn go(v: Option<u32>) -> Option<u32> {\n    v\n}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        assert_eq!(super::go(Some(1)).unwrap(), 1);\n        Some(2u32).expect(\"two\");\n    }\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+}
+
+#[test]
+fn l6_poison_recovery_idiom_is_not_matched() {
+    let dir = fixture(
+        "l6-poison",
+        &[(
+            "ssm/api.rs",
+            "use std::sync::Mutex;\npub fn go(m: &Mutex<u32>) -> u32 {\n    *m.lock().unwrap_or_else(|p| p.into_inner())\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+}
+
+#[test]
+fn l6_suppression_with_reason_silences() {
+    let dir = fixture(
+        "l6-sup",
+        &[(
+            "coordinator/server.rs",
+            "pub fn go(v: Option<u32>) -> u32 {\n    // s5:allow(serve-unwrap) fixture: invariant established one line up\n    v.unwrap()\n}\n",
+        )],
+    );
+    let res = check(&dir);
+    assert!(res.findings.is_empty(), "{:#?}", res.findings);
+}
+
+#[test]
+fn l6_mentions_in_comments_and_strings_do_not_trip() {
+    let dir = fixture(
+        "l6-comment",
+        &[(
+            "coordinator/server.rs",
+            "//! Never call `.unwrap()` here.\npub const HELP: &str = \".expect( is banned\";\n",
         )],
     );
     let res = check(&dir);
